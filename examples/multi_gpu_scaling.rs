@@ -1,0 +1,64 @@
+//! Multi-GPU scaling walk-through (paper §IV-C): solve the same matrix on
+//! 1–8 simulated V100s and print the per-phase simulated-time breakdown,
+//! showing where the paper's "diminishing returns" come from (ring-swap
+//! bandwidth and sync latency growing while per-device SpMV shrinks).
+//!
+//! ```bash
+//! cargo run --release --example multi_gpu_scaling [-- --scale 300]
+//! ```
+
+use topk_eigen::cli;
+use topk_eigen::coordinator::{ReorthMode, SolverConfig, TopKSolver, TopologyKind};
+use topk_eigen::sparse::suite;
+
+fn main() -> anyhow::Result<()> {
+    let args = cli::from_env();
+    let scale: f64 = args.get_or("scale", 300.0);
+    let m = suite::find("WK").unwrap().generate_csr(scale, 5);
+    println!(
+        "Wikipedia stand-in at scale {scale}: {} rows, {} nnz\n",
+        m.rows,
+        m.nnz()
+    );
+
+    println!(
+        "{:>5} {:>10} {:>8} | {:>9} {:>9} {:>9} {:>9} | {:>9}",
+        "GPUs", "sim time", "speedup", "spmv", "vec", "swap", "sync", "p2p MB"
+    );
+    let mut t1 = 0.0;
+    for (kind, label) in [(TopologyKind::Dgx1, "DGX-1"), (TopologyKind::NvSwitch, "NVSwitch")] {
+        println!("--- {label} interconnect ---");
+        for g in [1usize, 2, 4, 8] {
+            let cfg = SolverConfig {
+                k: 8,
+                devices: g,
+                reorth: ReorthMode::None,
+                device_mem_bytes: 2 << 30,
+                topology: kind,
+                ..Default::default()
+            };
+            let sol = TopKSolver::new(cfg).solve(&m)?;
+            let s = &sol.stats;
+            if g == 1 {
+                t1 = s.sim_seconds;
+            }
+            println!(
+                "{:>5} {:>8.3}ms {:>7.2}x | {:>7.2}ms {:>7.2}ms {:>7.2}ms {:>7.2}ms | {:>9.1}",
+                g,
+                s.sim_seconds * 1e3,
+                t1 / s.sim_seconds,
+                s.phases.spmv * 1e3,
+                s.phases.vector_ops * 1e3,
+                s.phases.swap * 1e3,
+                s.phases.sync * 1e3,
+                s.p2p_bytes as f64 / 1e6,
+            );
+        }
+    }
+    println!(
+        "\nReading: per-device SpMV shrinks ~linearly, but every iteration must\n\
+         all-gather the fresh v_i replica (ring swap) and synchronize twice (α, β),\n\
+         which bounds the speedup — the paper reports ~1.5x at 2 GPUs and ~2x at 8."
+    );
+    Ok(())
+}

@@ -1,0 +1,79 @@
+//! Spectral ranking on a web-crawl stand-in (the paper's IR/ranking
+//! motivation): the dominant eigenvector of a symmetrized web graph gives
+//! an eigenvector-centrality ranking; we cross-validate the solver's
+//! dominant eigenpair against a plain power iteration and compare rank
+//! orderings.
+//!
+//! ```bash
+//! cargo run --release --example pagerank_spectral
+//! ```
+
+use topk_eigen::coordinator::{SolverConfig, TopKSolver};
+use topk_eigen::linalg::{dot_f64, normalize};
+use topk_eigen::precision::PrecisionConfig;
+use topk_eigen::sparse::suite;
+
+fn main() -> anyhow::Result<()> {
+    let m = suite::find("WB-BE").unwrap().generate_csr(2.0, 99);
+    println!(
+        "web-Berkstan stand-in: {} pages, {} links (symmetrized)",
+        m.rows,
+        m.nnz()
+    );
+
+    // --- Our solver: top-4 eigenpairs, FDF, 2 devices ---------------------
+    let cfg = SolverConfig {
+        k: 8,
+        precision: PrecisionConfig::FDF,
+        devices: 2,
+        ..Default::default()
+    };
+    let sol = TopKSolver::new(cfg).solve(&m)?;
+    let centrality = &sol.eigenvectors[0];
+
+    // --- Reference: power iteration on the same matrix --------------------
+    let mut x = vec![1.0f64; m.rows];
+    normalize(&mut x);
+    let mut lambda_pi = 0.0;
+    for _ in 0..500 {
+        let mut y = vec![0.0; m.rows];
+        m.spmv(&x, &mut y);
+        lambda_pi = dot_f64(&x, &y);
+        x = y;
+        normalize(&mut x);
+    }
+    // Align sign.
+    if dot_f64(&x, centrality) < 0.0 {
+        for v in x.iter_mut() {
+            *v = -*v;
+        }
+    }
+
+    println!(
+        "dominant eigenvalue: lanczos {:.8} vs power-iteration {:.8}",
+        sol.eigenvalues[0], lambda_pi
+    );
+    assert!((sol.eigenvalues[0] - lambda_pi).abs() < 1e-4 * lambda_pi.abs());
+
+    // --- Rank agreement ----------------------------------------------------
+    let top_by = |v: &[f64], n: usize| {
+        let mut idx: Vec<usize> = (0..v.len()).collect();
+        idx.sort_by(|&a, &b| v[b].abs().partial_cmp(&v[a].abs()).unwrap());
+        idx.truncate(n);
+        idx
+    };
+    let ours = top_by(centrality, 20);
+    let refr = top_by(&x, 20);
+    let overlap = ours.iter().filter(|i| refr.contains(i)).count();
+    println!("top-20 page overlap with power iteration: {overlap}/20");
+    println!("top-5 pages (ours): {:?}", &ours[..5]);
+    assert!(overlap >= 18, "rankings diverged: {overlap}/20");
+
+    // --- Spectral gap report (what K eigenvalues buy over PageRank) -------
+    println!("\ntop-8 spectrum (spectral-gap structure for ranking confidence):");
+    for (i, l) in sol.eigenvalues.iter().enumerate() {
+        println!("  λ[{i}] = {l:+.6}");
+    }
+    println!("\nOK: dominant eigenpair agrees with power iteration.");
+    Ok(())
+}

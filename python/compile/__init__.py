@@ -1,0 +1,5 @@
+"""Build-time compile path: JAX/Pallas model + AOT lowering to HLO text.
+
+Nothing in this package runs on the request path — `make artifacts` invokes
+`compile.aot` once, and the rust coordinator loads the emitted artifacts.
+"""

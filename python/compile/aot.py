@@ -1,0 +1,125 @@
+"""AOT lowering: JAX graphs → HLO text artifacts + manifest.
+
+This is the only place Python runs in the whole system, and it runs once
+(`make artifacts`). Every (kernel × precision × shape-bucket) combination is
+lowered to **HLO text** — not a serialized HloModuleProto: jax ≥ 0.5 emits
+64-bit instruction ids the image's xla_extension 0.5.1 rejects, while the
+text parser reassigns ids (see /opt/xla-example/README.md).
+
+The bucket ladders bound the artifact count; the rust runtime zero-pads
+each call to the smallest enclosing bucket (runtime/artifacts.rs).
+
+Usage: cd python && python -m compile.aot --out ../artifacts [--fast]
+"""
+
+import argparse
+import os
+import sys
+import time
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from .model import kernel_specs, PTAGS  # noqa: E402
+
+# Default bucket ladders (DESIGN.md §2 "Shape buckets").
+# N/L use a dense ×2 ladder: vector-kernel cost is dominated by padding
+# waste, so halving the bucket step halves the worst-case overhead
+# (EXPERIMENTS.md §Perf).
+N_LADDER = [4096, 8192, 16384, 32768, 65536, 131072, 262144, 524288, 1048576]
+R_LADDER = [4096, 16384, 65536]  # SpMV row-block (runtime tiles at 4096)
+W_LADDER = [8, 32]  # ELL width (runtime tiles at 8)
+L_LADDER = [4096, 8192, 16384, 32768, 65536, 131072, 262144, 524288, 1048576]
+K_BUCKET = 32  # projection columns (paper max K = 24)
+
+# --fast: minimal ladders for CI smoke runs.
+FAST_N = [4096, 16384]
+FAST_R = [4096]
+FAST_W = [8, 32]
+FAST_L = [4096, 16384]
+
+
+def to_hlo_text(fn, example_args):
+    """Lower a jitted function to HLO text via stablehlo (the interchange
+    format the rust loader's XLA 0.5.1 parses cleanly)."""
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def emit(out_dir, fast=False, max_n=None):
+    n_ladder = FAST_N if fast else N_LADDER
+    r_ladder = FAST_R if fast else R_LADDER
+    w_ladder = FAST_W if fast else W_LADDER
+    l_ladder = FAST_L if fast else L_LADDER
+    if max_n:
+        n_ladder = [n for n in n_ladder if n <= max_n] or [max_n]
+        l_ladder = [l for l in l_ladder if l <= max_n] or [max_n]
+
+    os.makedirs(out_dir, exist_ok=True)
+    rows = []
+    t0 = time.time()
+    count = 0
+
+    for ptag, (storage, compute) in PTAGS.items():
+        # SpMV: (r, w, n) combos with r ≤ n (a partition cannot exceed the
+        # replica).
+        for n in n_ladder:
+            for r in r_ladder:
+                if r > n:
+                    continue
+                for w in w_ladder:
+                    specs = kernel_specs(storage, compute, r, w, n, l_ladder[0], K_BUCKET)
+                    fn, args, params = specs["spmv"]
+                    name = f"spmv_{ptag}_r{r}_w{w}_n{n}"
+                    write_artifact(out_dir, name, fn, args)
+                    rows.append(manifest_row(name, "spmv", ptag, params))
+                    count += 1
+        # Vector kernels + projection: one artifact per length bucket.
+        for l in l_ladder:  # noqa: E741
+            specs = kernel_specs(storage, compute, r_ladder[0], w_ladder[0], n_ladder[0], l, K_BUCKET)
+            for kname in ["dot", "candidate", "normalize", "ortho_update", "project"]:
+                fn, args, params = specs[kname]
+                name = f"{kname}_{ptag}_l{l}"
+                write_artifact(out_dir, name, fn, args)
+                rows.append(manifest_row(name, kname, ptag, params))
+                count += 1
+
+    manifest = os.path.join(out_dir, "manifest.tsv")
+    with open(manifest, "w") as f:
+        f.write("# name\tfile\tkernel\tptag\tparams\n")
+        f.write("\n".join(rows) + "\n")
+    print(f"emitted {count} artifacts to {out_dir} in {time.time()-t0:.1f}s")
+    return count
+
+
+def write_artifact(out_dir, name, fn, args):
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    text = to_hlo_text(fn, args)
+    with open(path, "w") as f:
+        f.write(text)
+
+
+def manifest_row(name, kernel, ptag, params):
+    pstr = ";".join(f"{k}={v}" for k, v in sorted(params.items()))
+    return f"{name}\t{name}.hlo.txt\t{kernel}\t{ptag}\t{pstr}"
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--fast", action="store_true", help="minimal bucket ladders")
+    ap.add_argument("--max-n", type=int, default=None, help="cap the N/L ladders")
+    args = ap.parse_args()
+    emit(args.out, fast=args.fast, max_n=args.max_n)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

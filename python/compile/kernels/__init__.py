@@ -1,0 +1,23 @@
+"""Layer-1 Pallas kernels for the Top-K sparse eigensolver.
+
+Hardware adaptation note (DESIGN.md §3): the paper's CUDA kernels are
+warp-per-row CSR SpMV plus cuBLAS-style vector ops. A mechanical port would
+waste a TPU: instead the SpMV consumes regular ELL tiles sized for VMEM and
+vectorized on the VPU, reductions produce per-block partials that the L2
+graph (XLA) folds, and the one matmul-shaped op (eigenvector projection) is
+left to XLA so it lands on the MXU.
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, so interpret mode is the correctness path and the TPU
+performance is estimated from the BlockSpecs (EXPERIMENTS.md §Perf).
+"""
+
+import jax
+
+# The mixed-precision contract requires f64 accumulation (the paper's
+# D-compute configurations); JAX defaults to x32.
+jax.config.update("jax_enable_x64", True)
+
+from . import ref  # noqa: E402,F401
+from .spmv import spmv_pallas  # noqa: E402,F401
+from .vector import candidate_pallas, dot_pallas, ortho_update_pallas  # noqa: E402,F401

@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Each function mirrors one device kernel's *semantics* — including the
+mixed-precision contract: inputs arrive in the storage dtype, accumulation
+happens in the compute dtype, vector outputs return to the storage dtype and
+scalar outputs are always f64 (the rust coordinator reduces them across
+devices in f64).
+
+pytest checks every Pallas kernel against these, sweeping shapes and dtypes
+with hypothesis; the rust ``HostKernels`` backend implements the same
+contract, so the whole chain (Pallas == ref == HostKernels == PjrtKernels)
+is closed by the test suites on both sides.
+"""
+
+import jax.numpy as jnp
+
+
+def spmv_ref(vals, cols, x, compute_dtype):
+    """ELL SpMV: ``y[r] = sum_k vals[r,k] * x[cols[r,k]]``, accumulated in
+    ``compute_dtype``, output in the storage dtype of ``vals``."""
+    storage = vals.dtype
+    gathered = x[cols].astype(compute_dtype)  # [R, W]
+    prods = vals.astype(compute_dtype) * gathered
+    y = jnp.sum(prods, axis=1)
+    return y.astype(storage)
+
+
+def dot_ref(a, b, compute_dtype):
+    """``sum(a*b)`` accumulated in compute dtype; scalar always f64."""
+    acc = jnp.sum(a.astype(compute_dtype) * b.astype(compute_dtype))
+    return acc.astype(jnp.float64)
+
+
+def candidate_ref(v_tmp, v_i, v_prev, alpha, beta, compute_dtype):
+    """``v_nxt = v_tmp - alpha*v_i - beta*v_prev`` (compute dtype), plus the
+    partial sum of squares of ``v_nxt`` (f64 scalar)."""
+    storage = v_tmp.dtype
+    a = jnp.asarray(alpha, compute_dtype)
+    b = jnp.asarray(beta, compute_dtype)
+    v = (
+        v_tmp.astype(compute_dtype)
+        - a * v_i.astype(compute_dtype)
+        - b * v_prev.astype(compute_dtype)
+    )
+    ss = jnp.sum(v * v).astype(jnp.float64)
+    return v.astype(storage), ss
+
+
+def normalize_ref(v, beta, compute_dtype):
+    """``v / beta`` in compute dtype, stored back to the storage dtype."""
+    storage = v.dtype
+    out = v.astype(compute_dtype) / jnp.asarray(beta, compute_dtype)
+    return out.astype(storage)
+
+
+def ortho_update_ref(u, vj, o, compute_dtype):
+    """``u - o * vj`` in compute dtype, stored back to the storage dtype."""
+    storage = u.dtype
+    out = u.astype(compute_dtype) - jnp.asarray(o, compute_dtype) * vj.astype(
+        compute_dtype
+    )
+    return out.astype(storage)
+
+
+def project_ref(basis, coeff, compute_dtype):
+    """``Y = basis @ coeff`` accumulated in compute dtype, stored back."""
+    storage = basis.dtype
+    y = jnp.matmul(
+        basis.astype(compute_dtype),
+        coeff.astype(compute_dtype),
+        preferred_element_type=compute_dtype,
+    )
+    return y.astype(storage)

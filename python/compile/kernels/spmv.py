@@ -1,0 +1,61 @@
+"""ELL SpMV Pallas kernel — the paper's compute hot-spot on the device.
+
+Layout (DESIGN.md §3): values and column indices arrive as dense
+``[rows, width]`` ELL tiles; the kernel grid walks row blocks, each block
+pulling a ``[block_rows, width]`` tile of values/indices into VMEM,
+gathering from the (device-resident, replicated) ``x``, widening to the
+compute dtype for the multiply-accumulate, and writing the row sums back in
+the storage dtype. Rows whose degree exceeds the ELL width were spilled by
+the partitioner and are folded in host-side by the coordinator.
+
+Mixed precision: the FDF configuration stores f32 tiles but accumulates in
+f64 — exactly the paper's "intermediate operations in double precision,
+storage in single" (§III-A).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def spmv_pallas(vals, cols, x, compute_dtype, block_rows=None):
+    """``y[r] = Σ_k vals[r,k] · x[cols[r,k]]`` with compute-dtype accumulation.
+
+    Args:
+      vals: ``[R, W]`` ELL values in the storage dtype (f32/f64).
+      cols: ``[R, W]`` int32 column indices (padding points at column 0 with
+        a zero value — numerically inert).
+      x: ``[N]`` gather source in the storage dtype.
+      compute_dtype: accumulation dtype (jnp.float32 / jnp.float64).
+      block_rows: rows per grid step (defaults to min(R, 1024); must divide R).
+
+    Returns:
+      ``[R]`` row sums in the storage dtype.
+    """
+    r, w = vals.shape
+    storage = vals.dtype
+    if block_rows is None:
+        block_rows = min(r, 1024)
+    assert r % block_rows == 0, f"block_rows {block_rows} must divide rows {r}"
+    grid = (r // block_rows,)
+
+    def kernel(vals_ref, cols_ref, x_ref, y_ref):
+        v = vals_ref[...].astype(compute_dtype)  # [BR, W] widened in-register
+        c = cols_ref[...]
+        g = jnp.take(x_ref[...], c, axis=0).astype(compute_dtype)  # gather
+        y_ref[...] = jnp.sum(v * g, axis=1).astype(storage)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, w), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, w), lambda i: (i, 0)),
+            # The gather source stays whole per block: the replica is the
+            # paper's design point (replicated v_i on every device).
+            pl.BlockSpec(x.shape, lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((r,), storage),
+        interpret=True,
+    )(vals, cols, x)

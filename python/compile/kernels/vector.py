@@ -1,0 +1,124 @@
+"""Pallas vector kernels: dot partials, fused candidate update, ortho update.
+
+Reductions return *per-block partials*: each grid step reduces its VMEM
+block, and the L2 graph folds the partial vector with a single XLA reduce.
+On a TPU this is the natural shape (block accumulators in VMEM, tiny final
+reduction), and it mirrors the multi-device structure one level down — the
+rust coordinator performs the same partial-then-reduce pattern across GPUs
+at the α/β sync points.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: Rows handled per grid step for 1-D kernels.
+DEFAULT_BLOCK = 4096
+
+
+def _block(n):
+    return min(n, DEFAULT_BLOCK)
+
+
+def dot_pallas(a, b, compute_dtype, block=None):
+    """Per-block partials of ``Σ aᵢ·bᵢ`` accumulated in the compute dtype.
+
+    Returns a ``[n_blocks]`` f64 vector; the caller folds it (XLA reduce).
+    """
+    (n,) = a.shape
+    block = block or _block(n)
+    assert n % block == 0, f"block {block} must divide length {n}"
+    grid = (n // block,)
+
+    def kernel(a_ref, b_ref, out_ref):
+        x = a_ref[...].astype(compute_dtype)
+        y = b_ref[...].astype(compute_dtype)
+        out_ref[...] = jnp.sum(x * y).astype(jnp.float64)[None]
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n // block,), jnp.float64),
+        interpret=True,
+    )(a, b)
+
+
+def candidate_pallas(v_tmp, v_i, v_prev, alpha, beta, compute_dtype, block=None):
+    """Fused Lanczos candidate update (Algorithm 1 line 11 + the β partial):
+
+    ``v_nxt = v_tmp − α·v_i − β·v_prev`` (compute dtype, stored back), plus
+    per-block partials of ``Σ v_nxt²`` (f64) for the β synchronization.
+
+    ``alpha``/``beta`` are shape-(1,) f64 arrays (rank-0 scalars are awkward
+    as Pallas operands; the L2 wrapper reshapes).
+    """
+    (n,) = v_tmp.shape
+    storage = v_tmp.dtype
+    block = block or _block(n)
+    assert n % block == 0
+    grid = (n // block,)
+
+    def kernel(vt_ref, vi_ref, vp_ref, a_ref, b_ref, out_ref, ss_ref):
+        a = a_ref[0].astype(compute_dtype)
+        b = b_ref[0].astype(compute_dtype)
+        v = (
+            vt_ref[...].astype(compute_dtype)
+            - a * vi_ref[...].astype(compute_dtype)
+            - b * vp_ref[...].astype(compute_dtype)
+        )
+        out_ref[...] = v.astype(storage)
+        ss_ref[...] = jnp.sum(v * v).astype(jnp.float64)[None]
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), storage),
+            jax.ShapeDtypeStruct((n // block,), jnp.float64),
+        ],
+        interpret=True,
+    )(v_tmp, v_i, v_prev, alpha, beta)
+
+
+def ortho_update_pallas(u, vj, o, compute_dtype, block=None):
+    """Orthogonalization update ``u − o·v_j`` (Algorithm 1 lines 15/18)."""
+    (n,) = u.shape
+    storage = u.dtype
+    block = block or _block(n)
+    assert n % block == 0
+    grid = (n // block,)
+
+    def kernel(u_ref, vj_ref, o_ref, out_ref):
+        oo = o_ref[0].astype(compute_dtype)
+        out_ref[...] = (
+            u_ref[...].astype(compute_dtype) - oo * vj_ref[...].astype(compute_dtype)
+        ).astype(storage)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), storage),
+        interpret=True,
+    )(u, vj, o)

@@ -1,0 +1,155 @@
+"""Layer-2 JAX graphs: one jit-able function per device-kernel artifact.
+
+Each function composes the L1 Pallas kernels with the small amount of XLA
+glue the TPU wants anyway (folding per-block partials, the MXU matmul for
+the eigenvector projection) and fixes the mixed-precision contract:
+
+* vector inputs/outputs in the **storage** dtype (f32/f64),
+* accumulation in the **compute** dtype,
+* scalar outputs always f64 (the rust coordinator reduces across devices in
+  f64 at the α/β sync points).
+
+`aot.py` lowers every function over the (ptag × shape-bucket) grid and the
+rust runtime selects buckets at run time (`runtime/artifacts.rs`).
+
+All functions return tuples — the AOT bridge lowers with
+``return_tuple=True`` and the rust side unwraps with ``to_tuple*`` (see
+/opt/xla-example/README.md).
+"""
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+from .kernels import (  # noqa: E402
+    candidate_pallas,
+    dot_pallas,
+    ortho_update_pallas,
+    spmv_pallas,
+)
+
+#: Precision tags → (storage dtype, compute dtype). Matches
+#: `PrecisionConfig::kernel_tag()` on the rust side.
+PTAGS = {
+    "s32c32": (jnp.float32, jnp.float32),
+    "s32c64": (jnp.float32, jnp.float64),
+    "s64c64": (jnp.float64, jnp.float64),
+}
+
+
+def spmv_graph(compute_dtype):
+    """ELL SpMV: (vals[R,W], cols[R,W], x[N]) → (y[R],)."""
+
+    def fn(vals, cols, x):
+        return (spmv_pallas(vals, cols, x, compute_dtype),)
+
+    return fn
+
+
+def dot_graph(compute_dtype):
+    """Partial-dot with XLA fold: (a[L], b[L]) → (Σab as f64 scalar,)."""
+
+    def fn(a, b):
+        partials = dot_pallas(a, b, compute_dtype)
+        return (jnp.sum(partials),)
+
+    return fn
+
+
+def candidate_graph(compute_dtype):
+    """Fused candidate update:
+    (v_tmp[L], v_i[L], v_prev[L], α scalar, β scalar) → (v_nxt[L], Σv² f64).
+    """
+
+    def fn(v_tmp, v_i, v_prev, alpha, beta):
+        v, partials = candidate_pallas(
+            v_tmp, v_i, v_prev, alpha.reshape(1), beta.reshape(1), compute_dtype
+        )
+        return (v, jnp.sum(partials))
+
+    return fn
+
+
+def normalize_graph(compute_dtype):
+    """(v[L], β scalar) → (v/β in storage dtype,).
+
+    Plain jnp: a single fused divide; Pallas adds nothing here and XLA's
+    fusion is exactly what a TPU would run.
+    """
+
+    def fn(v, beta):
+        storage = v.dtype
+        out = v.astype(compute_dtype) / beta.astype(compute_dtype)
+        return (out.astype(storage),)
+
+    return fn
+
+
+def ortho_update_graph(compute_dtype):
+    """(u[L], v_j[L], o scalar) → (u − o·v_j,)."""
+
+    def fn(u, vj, o):
+        return (ortho_update_pallas(u, vj, o.reshape(1), compute_dtype),)
+
+    return fn
+
+
+def project_graph(compute_dtype):
+    """Eigenvector projection (basis[L,K], coeff[K,K]) → (basis@coeff,).
+
+    Left to XLA's dot so it lands on the MXU (DESIGN.md §3).
+    """
+
+    def fn(basis, coeff):
+        storage = basis.dtype
+        y = jnp.matmul(
+            basis.astype(compute_dtype),
+            coeff.astype(compute_dtype),
+            preferred_element_type=compute_dtype,
+        )
+        return (y.astype(storage),)
+
+    return fn
+
+
+def kernel_specs(storage, compute, r, w, n, l, k):  # noqa: E741
+    """Argument ShapeDtypeStructs per kernel for one bucket combination.
+
+    Returns dict: kernel name → (graph fn, example args, param dict).
+    """
+    f64 = jnp.float64
+    sd = jax.ShapeDtypeStruct
+    scalar = sd((), f64)
+    return {
+        "spmv": (
+            spmv_graph(compute),
+            (sd((r, w), storage), sd((r, w), jnp.int32), sd((n,), storage)),
+            {"r": r, "w": w, "n": n},
+        ),
+        "dot": (
+            dot_graph(compute),
+            (sd((l,), storage), sd((l,), storage)),
+            {"l": l},
+        ),
+        "candidate": (
+            candidate_graph(compute),
+            (sd((l,), storage), sd((l,), storage), sd((l,), storage), scalar, scalar),
+            {"l": l},
+        ),
+        "normalize": (
+            normalize_graph(compute),
+            (sd((l,), storage), scalar),
+            {"l": l},
+        ),
+        "ortho_update": (
+            ortho_update_graph(compute),
+            (sd((l,), storage), sd((l,), storage), scalar),
+            {"l": l},
+        ),
+        "project": (
+            project_graph(compute),
+            (sd((l, k), storage), sd((k, k), storage)),
+            {"l": l, "k": k},
+        ),
+    }

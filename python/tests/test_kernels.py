@@ -1,0 +1,192 @@
+"""Pallas kernels vs. the pure-jnp oracle (ref.py) — the CORE correctness
+signal of the compile path.
+
+Hypothesis sweeps shapes, dtypes and block sizes; explicit tests pin the
+mixed-precision contract (storage quantization, compute-dtype accumulation,
+f64 scalar outputs, padding inertness).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    candidate_pallas,
+    dot_pallas,
+    ortho_update_pallas,
+    ref,
+    spmv_pallas,
+)
+
+STORAGE = [jnp.float32, jnp.float64]
+COMPUTE = [jnp.float32, jnp.float64]
+
+
+def rng(seed):
+    return np.random.default_rng(seed)
+
+
+def tol_for(storage, compute):
+    # Pallas interpret-mode and the jnp ref share accumulation dtype, but
+    # reduction order may differ; scale tolerance by the weaker dtype.
+    return 1e-5 if jnp.float32 in (storage, compute) else 1e-12
+
+
+def atol_for(storage, compute):
+    # f32 reduction-order differences cause absolute errors ~eps·Σ|terms|
+    # even when the result cancels to ~0; give f32 paths an absolute floor.
+    return 1e-5 if jnp.float32 in (storage, compute) else 1e-12
+
+
+# ---------------------------------------------------------------- SpMV ----
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    r_blocks=st.integers(1, 4),
+    block_rows=st.sampled_from([2, 4, 8]),
+    w=st.integers(1, 9),
+    n=st.integers(4, 60),
+    storage=st.sampled_from(STORAGE),
+    compute=st.sampled_from(COMPUTE),
+    seed=st.integers(0, 2**31),
+)
+def test_spmv_matches_ref(r_blocks, block_rows, w, n, storage, compute, seed):
+    r = r_blocks * block_rows
+    g = rng(seed)
+    vals = jnp.asarray(g.normal(size=(r, w)), storage)
+    cols = jnp.asarray(g.integers(0, n, size=(r, w)), jnp.int32)
+    x = jnp.asarray(g.normal(size=(n,)), storage)
+    got = spmv_pallas(vals, cols, x, compute, block_rows=block_rows)
+    want = ref.spmv_ref(vals, cols, x, compute)
+    assert got.dtype == storage
+    np.testing.assert_allclose(
+        got, want, rtol=tol_for(storage, compute), atol=atol_for(storage, compute)
+    )
+
+
+def test_spmv_padding_is_inert():
+    """Padding rows/slots (col=0, val=0) contribute exactly zero."""
+    g = rng(7)
+    n = 32
+    vals = np.zeros((8, 4), np.float32)
+    cols = np.zeros((8, 4), np.int32)
+    vals[:4] = g.normal(size=(4, 4)).astype(np.float32)
+    cols[:4] = g.integers(0, n, size=(4, 4))
+    x = jnp.asarray(g.normal(size=(n,)), jnp.float32)
+    y = spmv_pallas(jnp.asarray(vals), jnp.asarray(cols), x, jnp.float64, block_rows=4)
+    assert np.all(np.asarray(y[4:]) == 0.0)
+    # Padding x (extending the gather source with zeros) must not change y.
+    x_pad = jnp.concatenate([x, jnp.zeros(16, jnp.float32)])
+    y_pad = spmv_pallas(jnp.asarray(vals), jnp.asarray(cols), x_pad, jnp.float64, block_rows=4)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(y_pad))
+
+
+def test_spmv_fdf_more_accurate_than_fff():
+    """f64 accumulation beats f32 accumulation on adversarial sums — the
+    micro-version of the paper's Fig. 4 claim."""
+    r, w, n = 4, 2048, 8
+    g = rng(3)
+    # Same-sign products with relative spread ~1e-7: f32 loses digits.
+    vals = jnp.asarray(1.0 + g.random(size=(r, w)) * 1e-6, jnp.float32)
+    cols = jnp.asarray(g.integers(0, n, size=(r, w)), jnp.int32)
+    x = jnp.asarray(np.ones(n), jnp.float32)
+    exact = ref.spmv_ref(
+        vals.astype(jnp.float64), cols, x.astype(jnp.float64), jnp.float64
+    )
+    y32 = spmv_pallas(vals, cols, x, jnp.float32).astype(jnp.float64)
+    y64 = spmv_pallas(vals, cols, x, jnp.float64).astype(jnp.float64)
+    err32 = float(jnp.max(jnp.abs(y32 - exact)))
+    err64 = float(jnp.max(jnp.abs(y64 - exact)))
+    assert err64 <= err32, (err64, err32)
+
+
+# ----------------------------------------------------------------- dot ----
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    blocks=st.integers(1, 5),
+    block=st.sampled_from([4, 16, 64]),
+    storage=st.sampled_from(STORAGE),
+    compute=st.sampled_from(COMPUTE),
+    seed=st.integers(0, 2**31),
+)
+def test_dot_matches_ref(blocks, block, storage, compute, seed):
+    n = blocks * block
+    g = rng(seed)
+    a = jnp.asarray(g.normal(size=(n,)), storage)
+    b = jnp.asarray(g.normal(size=(n,)), storage)
+    got = jnp.sum(dot_pallas(a, b, compute, block=block))
+    want = ref.dot_ref(a, b, compute)
+    assert got.dtype == jnp.float64
+    np.testing.assert_allclose(got, want, rtol=max(tol_for(storage, compute), 1e-6))
+
+
+def test_dot_partials_have_block_granularity():
+    a = jnp.ones(64, jnp.float32)
+    partials = dot_pallas(a, a, jnp.float64, block=16)
+    assert partials.shape == (4,)
+    np.testing.assert_allclose(np.asarray(partials), 16.0)
+
+
+# ----------------------------------------------------------- candidate ----
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    blocks=st.integers(1, 4),
+    block=st.sampled_from([4, 32]),
+    storage=st.sampled_from(STORAGE),
+    compute=st.sampled_from(COMPUTE),
+    alpha=st.floats(-3, 3),
+    beta=st.floats(-3, 3),
+    seed=st.integers(0, 2**31),
+)
+def test_candidate_matches_ref(blocks, block, storage, compute, alpha, beta, seed):
+    n = blocks * block
+    g = rng(seed)
+    vt, vi, vp = (jnp.asarray(g.normal(size=(n,)), storage) for _ in range(3))
+    v_got, ss_parts = candidate_pallas(
+        vt, vi, vp, jnp.asarray([alpha]), jnp.asarray([beta]), compute, block=block
+    )
+    ss_got = jnp.sum(ss_parts)
+    v_want, ss_want = ref.candidate_ref(vt, vi, vp, alpha, beta, compute)
+    assert v_got.dtype == storage
+    np.testing.assert_allclose(v_got, v_want, rtol=tol_for(storage, compute), atol=1e-6)
+    np.testing.assert_allclose(ss_got, ss_want, rtol=max(tol_for(storage, compute), 1e-5), atol=1e-10)
+
+
+# --------------------------------------------------------------- ortho ----
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    blocks=st.integers(1, 4),
+    block=st.sampled_from([8, 32]),
+    storage=st.sampled_from(STORAGE),
+    compute=st.sampled_from(COMPUTE),
+    o=st.floats(-2, 2),
+    seed=st.integers(0, 2**31),
+)
+def test_ortho_update_matches_ref(blocks, block, storage, compute, o, seed):
+    n = blocks * block
+    g = rng(seed)
+    u = jnp.asarray(g.normal(size=(n,)), storage)
+    vj = jnp.asarray(g.normal(size=(n,)), storage)
+    got = ortho_update_pallas(u, vj, jnp.asarray([o]), compute, block=block)
+    want = ref.ortho_update_ref(u, vj, o, compute)
+    assert got.dtype == storage
+    np.testing.assert_allclose(got, want, rtol=tol_for(storage, compute), atol=1e-6)
+
+
+def test_ortho_update_orthogonalizes():
+    """u − (u·v/v·v)·v is orthogonal to v — the algebra the Lanczos
+    reorthogonalization relies on."""
+    g = rng(5)
+    u = jnp.asarray(g.normal(size=(64,)), jnp.float64)
+    v = jnp.asarray(g.normal(size=(64,)), jnp.float64)
+    o = float(jnp.dot(u, v) / jnp.dot(v, v))
+    u2 = ortho_update_pallas(u, v, jnp.asarray([o]), jnp.float64, block=32)
+    assert abs(float(jnp.dot(u2, v))) < 1e-10

@@ -1,0 +1,121 @@
+"""L2 graphs + AOT pipeline tests: graph semantics, HLO text emission, and
+manifest consistency."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+from compile.model import (
+    PTAGS,
+    candidate_graph,
+    dot_graph,
+    kernel_specs,
+    normalize_graph,
+    ortho_update_graph,
+    project_graph,
+    spmv_graph,
+)
+from compile.kernels import ref
+
+
+def rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+class TestGraphs:
+    def test_dot_graph_folds_partials(self):
+        g = rng(1)
+        a = jnp.asarray(g.normal(size=(8192,)), jnp.float32)
+        b = jnp.asarray(g.normal(size=(8192,)), jnp.float32)
+        (got,) = jax.jit(dot_graph(jnp.float64))(a, b)
+        want = ref.dot_ref(a, b, jnp.float64)
+        np.testing.assert_allclose(got, want, rtol=1e-9)
+        assert got.dtype == jnp.float64
+
+    def test_candidate_graph_scalar_plumbing(self):
+        g = rng(2)
+        vt, vi, vp = (jnp.asarray(g.normal(size=(4096,)), jnp.float32) for _ in range(3))
+        alpha = jnp.asarray(0.9, jnp.float64)
+        beta = jnp.asarray(-0.4, jnp.float64)
+        v, ss = jax.jit(candidate_graph(jnp.float64))(vt, vi, vp, alpha, beta)
+        v_want, ss_want = ref.candidate_ref(vt, vi, vp, 0.9, -0.4, jnp.float64)
+        np.testing.assert_allclose(v, v_want, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(ss, ss_want, rtol=1e-6)
+
+    def test_normalize_graph(self):
+        v = jnp.asarray([2.0, -4.0, 8.0], jnp.float32)
+        (out,) = jax.jit(normalize_graph(jnp.float64))(v, jnp.asarray(2.0, jnp.float64))
+        np.testing.assert_array_equal(np.asarray(out), [1.0, -2.0, 4.0])
+
+    def test_project_graph_matches_matmul(self):
+        g = rng(3)
+        basis = jnp.asarray(g.normal(size=(256, 16)), jnp.float32)
+        coeff = jnp.asarray(g.normal(size=(16, 16)), jnp.float32)
+        (y,) = jax.jit(project_graph(jnp.float64))(basis, coeff)
+        want = ref.project_ref(basis, coeff, jnp.float64)
+        np.testing.assert_allclose(y, want, rtol=1e-5, atol=1e-5)
+
+    def test_spmv_graph_zero_width_padding(self):
+        # Bucket-padded call: logical 3 rows inside an 8-row/4-wide bucket.
+        vals = np.zeros((8, 4), np.float32)
+        cols = np.zeros((8, 4), np.int32)
+        vals[0, 0] = 2.0
+        cols[0, 0] = 1
+        x = np.zeros(16, np.float32)
+        x[1] = 3.0
+        (y,) = jax.jit(spmv_graph(jnp.float64))(
+            jnp.asarray(vals), jnp.asarray(cols), jnp.asarray(x)
+        )
+        assert float(y[0]) == 6.0
+        assert np.all(np.asarray(y[1:]) == 0.0)
+
+    @pytest.mark.parametrize("ptag", list(PTAGS))
+    def test_kernel_specs_cover_all_kernels(self, ptag):
+        storage, compute = PTAGS[ptag]
+        specs = kernel_specs(storage, compute, 8, 4, 16, 8, 8)
+        assert set(specs) == {"spmv", "dot", "candidate", "normalize", "ortho_update", "project"}
+        for name, (fn, args, params) in specs.items():
+            out = jax.eval_shape(fn, *args)
+            assert isinstance(out, tuple) and len(out) >= 1, name
+            assert params, name
+
+
+class TestAot:
+    def test_hlo_text_is_parseable_hlo(self):
+        storage, compute = PTAGS["s32c64"]
+        specs = kernel_specs(storage, compute, 8, 4, 16, 8, 8)
+        fn, args, _ = specs["dot"]
+        text = aot.to_hlo_text(fn, args)
+        assert "HloModule" in text
+        assert "f64" in text  # the scalar output dtype survived lowering
+
+    def test_emit_fast_writes_manifest_and_files(self, tmp_path):
+        out = str(tmp_path / "arts")
+        count = aot.emit(out, fast=True, max_n=4096)
+        manifest = os.path.join(out, "manifest.tsv")
+        assert os.path.exists(manifest)
+        lines = [
+            l for l in open(manifest).read().splitlines() if l and not l.startswith("#")
+        ]
+        assert len(lines) == count
+        for line in lines:
+            name, fname, kernel, ptag, params = line.split("\t")
+            assert os.path.exists(os.path.join(out, fname)), fname
+            assert ptag in PTAGS
+            assert "=" in params
+        # every precision has every kernel family
+        kernels = {"spmv", "dot", "candidate", "normalize", "ortho_update", "project"}
+        for ptag in PTAGS:
+            have = {l.split("\t")[2] for l in lines if l.split("\t")[3] == ptag}
+            assert have == kernels, (ptag, have)
+
+    def test_emit_respects_max_n(self, tmp_path):
+        out = str(tmp_path / "arts")
+        aot.emit(out, fast=True, max_n=4096)
+        lines = open(os.path.join(out, "manifest.tsv")).read()
+        assert "n16384" not in lines
+        assert "l16384" not in lines

@@ -1,0 +1,122 @@
+//! §Perf harness: wallclock micro/meso benchmarks of the actual hot paths
+//! on this host — the numbers EXPERIMENTS.md §Perf tracks before/after
+//! optimization.
+//!
+//! Measures (median of BENCH_REPS, default 3):
+//!   * hostsim SpMV (per-chunk ELL kernel, FDF) — the L3-side compute,
+//!   * PJRT SpMV (AOT artifact via the xla crate) — the production path,
+//!     including padding + literal marshalling overhead,
+//!   * PJRT dot/candidate — sync-point kernel round-trip latency,
+//!   * end-to-end solve wallclock, hostsim vs PJRT, and the coordinator
+//!     overhead fraction (everything that is not kernel execution).
+//!
+//! Env: BENCH_SCALE, BENCH_REPS. Requires `make artifacts` for PJRT rows.
+
+use std::path::PathBuf;
+use topk_eigen::bench_util::{fmt_secs, reps, scale, time, Table};
+use topk_eigen::coordinator::{ReorthMode, SolverConfig, TopKSolver};
+use topk_eigen::precision::PrecisionConfig;
+use topk_eigen::rng::Rng;
+use topk_eigen::runtime::{HostKernels, Kernels, PjrtKernels};
+use topk_eigen::sparse::{suite, Ell};
+
+fn artifact_dir() -> PathBuf {
+    std::env::var("TOPK_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+}
+
+fn main() {
+    let s = scale();
+    let r = reps();
+    // ×10 keeps the whole matrix inside one SpMV row-block bucket so the
+    // direct-kernel rows measure a single call.
+    let m = suite::find("WK").unwrap().generate_csr(s * 10.0, 5);
+    let cfg = PrecisionConfig::FDF;
+    let ell = Ell::from_csr(&m, 16, cfg.storage);
+    let mut rng = Rng::new(3);
+    let mut x = vec![0.0f64; m.cols];
+    rng.fill_uniform(&mut x);
+
+    println!("== §Perf hot-path benchmarks (wallclock on this host) ==");
+    println!("matrix: {} rows, {} nnz; reps={r}\n", m.rows, m.nnz());
+
+    let mut t = Table::new(&["path", "median", "min", "notes"]);
+
+    let mut host = HostKernels::new();
+    let th = time(r, || {
+        std::hint::black_box(host.spmv(&ell, &x, &cfg));
+    });
+    t.row(&[
+        "hostsim spmv".into(),
+        fmt_secs(th.median_s),
+        fmt_secs(th.min_s),
+        format!("{} nnz", m.nnz()),
+    ]);
+
+    match PjrtKernels::new(&artifact_dir()) {
+        Ok(mut pj) => {
+            // Bucket-sized sub-slab so the PJRT row measures kernel+marshal,
+            // not giant-padding pathology.
+            let tp = time(r, || {
+                std::hint::black_box(pj.spmv(&ell, &x, &cfg));
+            });
+            t.row(&[
+                "pjrt spmv".into(),
+                fmt_secs(tp.median_s),
+                fmt_secs(tp.min_s),
+                format!("{:.1}x hostsim", tp.median_s / th.median_s),
+            ]);
+            let a = &x[..4096.min(x.len())];
+            let b = a.to_vec();
+            let td = time(r.max(10), || {
+                std::hint::black_box(pj.dot(a, &b, &cfg));
+            });
+            t.row(&[
+                "pjrt dot (sync point)".into(),
+                fmt_secs(td.median_s),
+                fmt_secs(td.min_s),
+                "round-trip latency".into(),
+            ]);
+        }
+        Err(e) => {
+            t.row(&["pjrt".into(), "n/a".into(), "n/a".into(), format!("{e}")]);
+        }
+    }
+
+    // End-to-end solves.
+    let solver_cfg = SolverConfig {
+        k: 8,
+        precision: cfg,
+        devices: 2,
+        reorth: ReorthMode::Full,
+        device_mem_bytes: 1 << 30,
+        ..Default::default()
+    };
+    let te = time(r, || {
+        let sol = TopKSolver::new(solver_cfg.clone()).solve(&m).expect("solve");
+        std::hint::black_box(sol.eigenvalues.len());
+    });
+    t.row(&[
+        "solve e2e hostsim".into(),
+        fmt_secs(te.median_s),
+        fmt_secs(te.min_s),
+        "K=8, 2 devices, full reorth".into(),
+    ]);
+    if PjrtKernels::new(&artifact_dir()).is_ok() {
+        let tp = time(r, || {
+            let sol = TopKSolver::with_pjrt(solver_cfg.clone(), &artifact_dir())
+                .expect("pjrt")
+                .solve(&m)
+                .expect("solve");
+            std::hint::black_box(sol.eigenvalues.len());
+        });
+        t.row(&[
+            "solve e2e pjrt".into(),
+            fmt_secs(tp.median_s),
+            fmt_secs(tp.min_s),
+            format!("{:.1}x hostsim", tp.median_s / te.median_s),
+        ]);
+    }
+    t.print();
+}

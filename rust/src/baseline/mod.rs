@@ -1,0 +1,348 @@
+//! ARPACK-class CPU baseline (the paper's Fig. 2 comparator).
+//!
+//! The paper benchmarks against the multi-threaded ARPACK library — the
+//! Implicitly Restarted Arnoldi Method, which for symmetric matrices
+//! degenerates to restarted Lanczos. No Fortran is available offline, so we
+//! implement the same algorithmic class in rust:
+//!
+//! * Lanczos with **full reorthogonalization** (ARPACK keeps its basis
+//!   orthogonal to machine precision; this is what makes it slow and
+//!   accurate),
+//! * a Krylov dimension `m > K` with **restarting** until the top-K Ritz
+//!   pairs converge (residual test identical to ARPACK's
+//!   `‖r‖·|last basis component| ≤ tol·|θ|`),
+//! * **multi-threaded CSR SpMV** partitioned by nnz, mirroring a
+//!   `mkl_sparse_d_mv`-style parallel kernel on the host.
+//!
+//! Everything runs in f64 host arithmetic — the strongest-accuracy, slowest
+//! comparator, exactly the role ARPACK plays in the paper.
+
+pub mod power;
+pub mod spmv;
+
+use crate::jacobi::{jacobi_eigen_f64, DenseSym};
+use crate::linalg::{axpy, dot_f64, normalize};
+use crate::rng::Rng;
+use crate::sparse::Csr;
+use spmv::ThreadedSpmv;
+use std::time::Instant;
+
+/// Baseline solver configuration.
+#[derive(Clone, Debug)]
+pub struct BaselineConfig {
+    /// Worker threads for the SpMV (default: available parallelism).
+    pub threads: usize,
+    /// Krylov subspace dimension (`m ≥ 2K+1` recommended; ARPACK default
+    /// `ncv = 2K+1`). 0 = auto.
+    pub krylov_dim: usize,
+    /// Maximum restart cycles.
+    pub max_restarts: usize,
+    /// Ritz residual tolerance.
+    pub tol: f64,
+    /// RNG seed for the starting vector.
+    pub seed: u64,
+}
+
+impl Default for BaselineConfig {
+    fn default() -> Self {
+        BaselineConfig {
+            threads: std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4),
+            krylov_dim: 0,
+            max_restarts: 40,
+            tol: 1e-8,
+            seed: 0xA27A_C0DE,
+        }
+    }
+}
+
+/// Result of the baseline solve.
+#[derive(Clone, Debug)]
+pub struct BaselineResult {
+    /// Top-K eigenvalues by |λ|, descending.
+    pub eigenvalues: Vec<f64>,
+    /// Matching eigenvectors (each of length n, unit norm).
+    pub eigenvectors: Vec<Vec<f64>>,
+    /// Total SpMV invocations (the dominant cost, reported by benches).
+    pub spmv_count: usize,
+    /// Restart cycles used.
+    pub restarts: usize,
+    /// Wallclock seconds.
+    pub seconds: f64,
+    /// Max Ritz residual at exit.
+    pub max_residual: f64,
+}
+
+/// Solve for the top-K eigenpairs of symmetric `m` on the CPU.
+pub fn solve_topk_cpu(m: &Csr, k: usize, cfg: &BaselineConfig) -> BaselineResult {
+    assert_eq!(m.rows, m.cols, "Lanczos requires a square symmetric matrix");
+    assert!(k >= 1 && k < m.rows, "need 1 <= K < n");
+    let n = m.rows;
+    let dim = if cfg.krylov_dim == 0 {
+        (2 * k + 1).max(20).min(n - 1)
+    } else {
+        cfg.krylov_dim.min(n - 1)
+    };
+    assert!(dim > k, "Krylov dimension must exceed K");
+
+    let spmv = ThreadedSpmv::new(m, cfg.threads);
+    let start = Instant::now();
+
+    // Starting vector.
+    let mut rng = Rng::new(cfg.seed);
+    let mut v0 = vec![0.0f64; n];
+    rng.fill_uniform(&mut v0);
+    normalize(&mut v0);
+
+    let mut spmv_count = 0usize;
+    let mut restarts = 0usize;
+    let mut best: Option<(Vec<f64>, Vec<Vec<f64>>, f64)> = None;
+
+    for cycle in 0..=cfg.max_restarts {
+        // --- Lanczos with full reorthogonalization ---
+        let mut basis: Vec<Vec<f64>> = Vec::with_capacity(dim);
+        let mut alpha = Vec::with_capacity(dim);
+        let mut beta: Vec<f64> = Vec::with_capacity(dim.saturating_sub(1));
+        let mut v = v0.clone();
+        let mut v_prev = vec![0.0f64; n];
+        let mut b_prev = 0.0f64;
+        for j in 0..dim {
+            basis.push(v.clone());
+            let mut w = vec![0.0f64; n];
+            spmv.apply(&v, &mut w);
+            spmv_count += 1;
+            let a = dot_f64(&v, &w);
+            alpha.push(a);
+            axpy(-a, &v, &mut w);
+            if j > 0 {
+                axpy(-b_prev, &v_prev, &mut w);
+            }
+            // Full reorthogonalization, done twice ("twice is enough",
+            // Parlett) — this is the accuracy/work profile of ARPACK.
+            for _pass in 0..2 {
+                for q in &basis {
+                    let o = dot_f64(q, &w);
+                    axpy(-o, q, &mut w);
+                }
+            }
+            let b = crate::linalg::norm2_f64(&w);
+            if j + 1 < dim {
+                beta.push(b);
+            }
+            if b < 1e-14 {
+                // Invariant subspace found: basis is complete.
+                break;
+            }
+            v_prev = std::mem::replace(&mut v, w);
+            crate::linalg::scale_inv(&mut v, b);
+            b_prev = b;
+        }
+        let mdim = basis.len();
+        let t = DenseSym::from_tridiagonal(&alpha[..mdim], &beta[..mdim.saturating_sub(1)]);
+        let eig = jacobi_eigen_f64(&t, 1e-15, 100);
+
+        // Ritz pairs: λ_i, y_i = Σ_t basis_t · s_i[t]
+        let kk = k.min(mdim);
+        let mut values = Vec::with_capacity(kk);
+        let mut vectors = Vec::with_capacity(kk);
+        let mut max_resid = 0.0f64;
+        let last_beta = if mdim > 1 { beta[mdim - 2] } else { 0.0 };
+        for i in 0..kk {
+            let s = &eig.vectors[i];
+            let mut y = vec![0.0f64; n];
+            for (t_idx, q) in basis.iter().enumerate() {
+                axpy(s[t_idx], q, &mut y);
+            }
+            normalize(&mut y);
+            values.push(eig.values[i]);
+            // ARPACK-style residual estimate: β_m · |s_m[i]|
+            let resid = (last_beta * s[mdim - 1]).abs();
+            max_resid = max_resid.max(resid);
+            vectors.push(y);
+        }
+
+        let converged = max_resid <= cfg.tol * values[0].abs().max(1e-30);
+        let better = match &best {
+            None => true,
+            Some((_, _, r)) => max_resid < *r,
+        };
+        if better {
+            best = Some((values.clone(), vectors.clone(), max_resid));
+        }
+        if converged || cycle == cfg.max_restarts || mdim < dim {
+            break;
+        }
+        restarts += 1;
+        // Implicit-restart-lite: restart from the residual-weighted
+        // combination of the wanted Ritz vectors. This polishes the wanted
+        // subspace like ARPACK's implicit QR steps, at the cost of more
+        // cycles (we measure total SpMVs, which is the honest comparison).
+        let mut next = vec![0.0f64; n];
+        for (i, y) in vectors.iter().enumerate() {
+            axpy(1.0 / (i + 1) as f64, y, &mut next);
+        }
+        // Perturb to escape stagnation.
+        for x in next.iter_mut() {
+            *x += 1e-8 * (2.0 * rng.f64() - 1.0);
+        }
+        normalize(&mut next);
+        v0 = next;
+    }
+
+    let (eigenvalues, eigenvectors, max_residual) = best.unwrap();
+    BaselineResult {
+        eigenvalues,
+        eigenvectors,
+        spmv_count,
+        restarts,
+        seconds: start.elapsed().as_secs_f64(),
+        max_residual,
+    }
+}
+
+/// Calibrated model of the paper's CPU testbed (2× Xeon Platinum 8167M,
+/// 104 threads, 12-channel DDR4) — used to put the CPU baseline on the same
+/// modeled-time axis as the simulated V100 fleet (Fig. 2). The measured
+/// wallclock on *this* host is reported alongside.
+#[derive(Clone, Debug)]
+pub struct CpuModel {
+    /// Aggregate streaming bandwidth, GB/s (2-socket DDR4-2666: ~230 peak,
+    /// ~170 achieved).
+    pub stream_gbs: f64,
+    /// Effective SpMV bandwidth when the gather target fits in cache.
+    pub spmv_cached_gbs: f64,
+    /// Effective SpMV bandwidth for DRAM-random gathers (NUMA + TLB thrash
+    /// on billion-edge graphs).
+    pub spmv_random_gbs: f64,
+    /// Cache capacity available to the gather target (two sockets of LLC,
+    /// minus what the streaming matrix traffic keeps evicting).
+    pub llc_bytes: f64,
+}
+
+impl Default for CpuModel {
+    fn default() -> Self {
+        CpuModel {
+            stream_gbs: 170.0,
+            spmv_cached_gbs: 60.0,
+            spmv_random_gbs: 6.0,
+            llc_bytes: 64e6,
+        }
+    }
+}
+
+impl CpuModel {
+    /// Gather-limited SpMV bandwidth for a working set of `rows` vector
+    /// elements — blends the cached and DRAM-random regimes.
+    pub fn spmv_gbs(&self, rows: f64) -> f64 {
+        let ws = rows * 8.0;
+        let frac = (self.llc_bytes / ws).min(1.0);
+        self.spmv_random_gbs + (self.spmv_cached_gbs - self.spmv_random_gbs) * frac
+    }
+
+    /// Modeled seconds for a baseline run: SpMV traffic + the full
+    /// reorthogonalization traffic that dominates ARPACK-class solvers.
+    ///
+    /// `regime_rows` sets the gather regime: pass the *stand-in* rows to
+    /// model this host, or the *paper* matrix rows to model the authors'
+    /// Xeon testbed on the full-size matrix (DESIGN.md §5 — the stand-ins
+    /// are cache-resident on any modern CPU, the paper's graphs are not).
+    pub fn modeled_seconds(
+        &self,
+        res: &BaselineResult,
+        m: &Csr,
+        krylov_dim: usize,
+        regime_rows: f64,
+    ) -> f64 {
+        let n = m.rows as f64;
+        // CSR SpMV: values(8) + colidx(4) + sector-granular gather(~32).
+        let spmv_bytes = m.nnz() as f64 * (8.0 + 4.0 + 32.0);
+        let spmv_s = res.spmv_count as f64 * spmv_bytes / (self.spmv_gbs(regime_rows) * 1e9);
+        // Full reorth ×2 passes: per cycle Σ_j 2·j vector reads + writes.
+        let cycles = (res.restarts + 1) as f64;
+        let reorth_bytes = cycles * 2.0 * (krylov_dim * krylov_dim) as f64 * n * 8.0;
+        let reorth_s = reorth_bytes / (self.stream_gbs * 1e9);
+        spmv_s + reorth_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::sparse::{gen, Csr};
+
+    #[test]
+    fn cpu_model_scales_with_work() {
+        let mut rng = Rng::new(1);
+        let m = Csr::from_coo(&gen::erdos_renyi(500, 500, 0.05, true, &mut rng));
+        let cm = CpuModel::default();
+        let small = BaselineResult {
+            eigenvalues: vec![],
+            eigenvectors: vec![],
+            spmv_count: 10,
+            restarts: 0,
+            seconds: 0.0,
+            max_residual: 0.0,
+        };
+        let big = BaselineResult { spmv_count: 100, restarts: 4, ..small.clone() };
+        assert!(
+            cm.modeled_seconds(&big, &m, 20, 500.0)
+                > 5.0 * cm.modeled_seconds(&small, &m, 20, 500.0)
+        );
+        // Regime blend: paper-scale gathers are much slower than cached.
+        assert!(
+            cm.modeled_seconds(&small, &m, 20, 1e8)
+                > 3.0 * cm.modeled_seconds(&small, &m, 20, 1e4)
+        );
+    }
+
+    #[test]
+    fn recovers_toeplitz_spectrum() {
+        // n=60 keeps the top of the clustered Toeplitz spectrum resolvable
+        // by a 40-dim Krylov space; ARPACK needs the same headroom.
+        let n = 60;
+        let coo = gen::tridiag_toeplitz(n, 2.0, -1.0);
+        let m = Csr::from_coo(&coo);
+        let cfg = BaselineConfig { threads: 2, krylov_dim: 40, ..Default::default() };
+        let res = solve_topk_cpu(&m, 5, &cfg);
+        let analytic = gen::tridiag_toeplitz_eigs(n, 2.0, -1.0);
+        for (got, want) in res.eigenvalues.iter().zip(&analytic[..5]) {
+            assert!((got - want).abs() < 1e-4, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn eigenpairs_satisfy_definition() {
+        let mut rng = Rng::new(33);
+        let coo = gen::erdos_renyi(300, 300, 0.03, true, &mut rng);
+        let m = Csr::from_coo(&coo);
+        let res = solve_topk_cpu(&m, 4, &BaselineConfig { threads: 2, ..Default::default() });
+        for (lam, v) in res.eigenvalues.iter().zip(&res.eigenvectors) {
+            let r = crate::metrics::l2_residual(&m, *lam, v);
+            assert!(r < 1e-5, "residual {r} for λ={lam}");
+        }
+    }
+
+    #[test]
+    fn eigenvectors_orthogonal() {
+        let mut rng = Rng::new(44);
+        let coo = gen::power_law(400, 6.0, 2.3, &mut rng);
+        let m = Csr::from_coo(&coo);
+        let res = solve_topk_cpu(&m, 6, &BaselineConfig { threads: 2, ..Default::default() });
+        let coherence = crate::metrics::max_pairwise_coherence(&res.eigenvectors);
+        assert!(coherence < 1e-6, "coherence {coherence}");
+    }
+
+    #[test]
+    fn thread_count_does_not_change_results() {
+        let mut rng = Rng::new(55);
+        let coo = gen::erdos_renyi(150, 150, 0.05, true, &mut rng);
+        let m = Csr::from_coo(&coo);
+        let r1 = solve_topk_cpu(&m, 3, &BaselineConfig { threads: 1, ..Default::default() });
+        let r4 = solve_topk_cpu(&m, 3, &BaselineConfig { threads: 4, ..Default::default() });
+        for (a, b) in r1.eigenvalues.iter().zip(&r4.eigenvalues) {
+            // Threaded SpMV sums partitions in the same order per row, so
+            // eigenvalues should agree to near machine precision.
+            assert!((a - b).abs() < 1e-9, "{a} vs {b}");
+        }
+    }
+}

@@ -1,0 +1,249 @@
+//! Simple spectral baselines: power iteration and subspace (block power)
+//! iteration.
+//!
+//! These are the classical alternatives Lanczos is measured against in the
+//! eigensolver literature (and what practitioners reach for first —
+//! PageRank *is* power iteration). They serve three roles here:
+//!
+//! * independent cross-checks of the solver's extreme eigenpairs (used by
+//!   tests and the `pagerank_spectral` example),
+//! * an honest "why Lanczos" data point: subspace iteration needs far more
+//!   SpMVs for interior accuracy,
+//! * a convergence-cost reference for EXPERIMENTS.md.
+
+use crate::jacobi::{jacobi_eigen_f64, DenseSym};
+use crate::linalg::{axpy, dot_f64, norm2_f64, normalize, scale_inv};
+use crate::rng::Rng;
+use crate::sparse::Csr;
+
+/// Result of a power/subspace iteration run.
+#[derive(Clone, Debug)]
+pub struct PowerResult {
+    pub eigenvalues: Vec<f64>,
+    pub eigenvectors: Vec<Vec<f64>>,
+    /// SpMV applications consumed.
+    pub spmv_count: usize,
+    /// Iterations until convergence (or the cap).
+    pub iterations: usize,
+    /// Final residual estimate `‖Mv − λv‖` of the dominant pair.
+    pub residual: f64,
+}
+
+/// Dominant eigenpair by plain power iteration.
+pub fn power_iteration(m: &Csr, tol: f64, max_iters: usize, seed: u64) -> PowerResult {
+    assert_eq!(m.rows, m.cols);
+    let n = m.rows;
+    let mut rng = Rng::new(seed);
+    let mut v = vec![0.0f64; n];
+    rng.fill_uniform(&mut v);
+    normalize(&mut v);
+    let mut lambda = 0.0;
+    let mut spmv_count = 0;
+    let mut iterations = 0;
+    let mut residual = f64::INFINITY;
+    let mut w = vec![0.0f64; n];
+    for it in 0..max_iters {
+        m.spmv(&v, &mut w);
+        spmv_count += 1;
+        lambda = dot_f64(&v, &w);
+        // residual ‖w − λv‖
+        let mut r = w.clone();
+        axpy(-lambda, &v, &mut r);
+        residual = norm2_f64(&r);
+        iterations = it + 1;
+        let nw = norm2_f64(&w);
+        if nw == 0.0 {
+            break;
+        }
+        v.copy_from_slice(&w);
+        scale_inv(&mut v, nw);
+        if residual <= tol * lambda.abs().max(1e-300) {
+            break;
+        }
+    }
+    PowerResult {
+        eigenvalues: vec![lambda],
+        eigenvectors: vec![v],
+        spmv_count,
+        iterations,
+        residual,
+    }
+}
+
+/// Top-K eigenpairs by subspace (block power / orthogonal) iteration with
+/// Rayleigh–Ritz extraction each sweep.
+pub fn subspace_iteration(
+    m: &Csr,
+    k: usize,
+    tol: f64,
+    max_iters: usize,
+    seed: u64,
+) -> PowerResult {
+    assert_eq!(m.rows, m.cols);
+    assert!(k >= 1 && k < m.rows);
+    let n = m.rows;
+    let mut rng = Rng::new(seed);
+    // Random orthonormal block.
+    let mut block: Vec<Vec<f64>> = (0..k)
+        .map(|_| {
+            let mut v = vec![0.0f64; n];
+            rng.fill_uniform(&mut v);
+            v
+        })
+        .collect();
+    gram_schmidt(&mut block);
+
+    let mut spmv_count = 0;
+    let mut iterations = 0;
+    let mut ritz = vec![0.0f64; k];
+    let mut residual = f64::INFINITY;
+    for it in 0..max_iters {
+        // block ← M·block
+        for v in block.iter_mut() {
+            let mut w = vec![0.0f64; n];
+            m.spmv(v, &mut w);
+            spmv_count += 1;
+            *v = w;
+        }
+        gram_schmidt(&mut block);
+        // Rayleigh–Ritz on the k×k projection.
+        let mut t = DenseSym::zeros(k);
+        let mut mb: Vec<Vec<f64>> = Vec::with_capacity(k);
+        for v in &block {
+            let mut w = vec![0.0f64; n];
+            m.spmv(v, &mut w);
+            spmv_count += 1;
+            mb.push(w);
+        }
+        for i in 0..k {
+            for j in i..k {
+                let x = dot_f64(&block[i], &mb[j]);
+                t.set(i, j, x);
+                t.set(j, i, x);
+            }
+        }
+        let eig = jacobi_eigen_f64(&t, 1e-14, 100);
+        // Rotate the block into the Ritz basis.
+        let mut rotated: Vec<Vec<f64>> = vec![vec![0.0f64; n]; k];
+        for (t_idx, coef) in eig.vectors.iter().enumerate() {
+            for j in 0..k {
+                axpy(coef[j], &block[j], &mut rotated[t_idx]);
+            }
+        }
+        block = rotated;
+        ritz = eig.values.clone();
+        iterations = it + 1;
+        // Convergence: dominant-pair residual.
+        let mut w = vec![0.0f64; n];
+        m.spmv(&block[0], &mut w);
+        spmv_count += 1;
+        axpy(-ritz[0], &block[0], &mut w);
+        residual = norm2_f64(&w);
+        if residual <= tol * ritz[0].abs().max(1e-300) {
+            break;
+        }
+    }
+    for v in block.iter_mut() {
+        normalize(v);
+    }
+    PowerResult {
+        eigenvalues: ritz,
+        eigenvectors: block,
+        spmv_count,
+        iterations,
+        residual,
+    }
+}
+
+/// Modified Gram–Schmidt orthonormalization in place.
+fn gram_schmidt(vs: &mut [Vec<f64>]) {
+    for i in 0..vs.len() {
+        for j in 0..i {
+            let (head, tail) = vs.split_at_mut(i);
+            let o = dot_f64(&head[j], &tail[0]);
+            axpy(-o, &head[j], &mut tail[0]);
+        }
+        normalize(&mut vs[i]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::{gen, Csr};
+
+    fn spiked(n: usize) -> Csr {
+        let mut coo = crate::sparse::Coo::new(n, n);
+        for i in 0..n {
+            let d = if i < 8 { 8.0 - i as f64 } else { 0.1 };
+            coo.push(i as u32, i as u32, d);
+            if i + 1 < n {
+                coo.push(i as u32, (i + 1) as u32, 1e-3);
+                coo.push((i + 1) as u32, i as u32, 1e-3);
+            }
+        }
+        coo.canonicalize();
+        Csr::from_coo(&coo)
+    }
+
+    #[test]
+    fn power_iteration_finds_dominant_pair() {
+        let m = spiked(200);
+        let res = power_iteration(&m, 1e-10, 5000, 3);
+        assert!((res.eigenvalues[0] - 8.0).abs() < 1e-5, "{}", res.eigenvalues[0]);
+        assert!(res.residual < 1e-8);
+    }
+
+    #[test]
+    fn subspace_iteration_finds_top_k() {
+        let m = spiked(200);
+        let res = subspace_iteration(&m, 4, 1e-9, 500, 5);
+        for (got, want) in res.eigenvalues.iter().zip([8.0, 7.0, 6.0, 5.0]) {
+            assert!((got - want).abs() < 1e-4, "{got} vs {want}");
+        }
+        // Block stays orthonormal.
+        let coh = crate::metrics::max_pairwise_coherence(&res.eigenvectors);
+        assert!(coh < 1e-8, "coherence {coh}");
+    }
+
+    #[test]
+    fn lanczos_needs_fewer_spmvs_than_subspace_iteration() {
+        // The "why Lanczos" data point: same matrix, same target accuracy.
+        let m = spiked(400);
+        let sub = subspace_iteration(&m, 4, 1e-8, 500, 7);
+        let lan = crate::baseline::solve_topk_cpu(
+            &m,
+            4,
+            &crate::baseline::BaselineConfig {
+                krylov_dim: 24,
+                tol: 1e-8,
+                ..Default::default()
+            },
+        );
+        assert!(
+            lan.spmv_count * 2 < sub.spmv_count,
+            "lanczos {} vs subspace {}",
+            lan.spmv_count,
+            sub.spmv_count
+        );
+        for (a, b) in lan.eigenvalues.iter().zip(&sub.eigenvalues) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn power_iteration_matches_lanczos_on_graph() {
+        let mut rng = crate::rng::Rng::new(12);
+        let mut coo = gen::power_law(500, 6.0, 2.4, &mut rng);
+        coo.normalize_by_max_degree();
+        let m = Csr::from_coo(&coo);
+        let pw = power_iteration(&m, 1e-10, 10_000, 2);
+        let lan = crate::baseline::solve_topk_cpu(&m, 2, &Default::default());
+        assert!(
+            (pw.eigenvalues[0] - lan.eigenvalues[0]).abs() < 1e-6,
+            "power {} vs lanczos {}",
+            pw.eigenvalues[0],
+            lan.eigenvalues[0]
+        );
+    }
+}

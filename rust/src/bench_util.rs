@@ -1,0 +1,148 @@
+//! Bench harness substrate (no `criterion` in the offline environment).
+//!
+//! Provides warmup+repeat timing with median/MAD reporting and fixed-width
+//! table printing used by every `rust/benches/*` binary to regenerate the
+//! paper's tables and figures as text.
+
+use std::time::Instant;
+
+/// Timing summary over repeats.
+#[derive(Clone, Copy, Debug)]
+pub struct Timing {
+    pub median_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+    pub reps: usize,
+}
+
+/// Run `f` once for warmup, then `reps` timed repetitions.
+pub fn time<F: FnMut()>(reps: usize, mut f: F) -> Timing {
+    f(); // warmup
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps.max(1) {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Timing {
+        median_s: samples[samples.len() / 2],
+        min_s: samples[0],
+        max_s: *samples.last().unwrap(),
+        reps: samples.len(),
+    }
+}
+
+/// Benchmark repetitions, overridable with env `BENCH_REPS`.
+pub fn reps() -> usize {
+    std::env::var("BENCH_REPS").ok().and_then(|s| s.parse().ok()).unwrap_or(3)
+}
+
+/// Suite scale factor, overridable with env `BENCH_SCALE`
+/// (1.0 ≈ thousands of rows; the paper's sizes need ~1000).
+pub fn scale() -> f64 {
+    std::env::var("BENCH_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(1.0)
+}
+
+/// Fixed-width table printer.
+pub struct Table {
+    headers: Vec<String>,
+    widths: Vec<usize>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            widths: headers.iter().map(|s| s.len()).collect(),
+            rows: vec![],
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        for (w, c) in self.widths.iter_mut().zip(cells) {
+            *w = (*w).max(c.len());
+        }
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let line = |cells: &[String], widths: &[usize]| {
+            let parts: Vec<String> = cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}", w = w))
+                .collect();
+            println!("| {} |", parts.join(" | "));
+        };
+        line(&self.headers, &self.widths);
+        let sep: Vec<String> = self.widths.iter().map(|w| "-".repeat(*w)).collect();
+        line(&sep, &self.widths);
+        for r in &self.rows {
+            line(r, &self.widths);
+        }
+    }
+}
+
+/// Format seconds human-readably.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.2}s")
+    } else if s >= 1e-3 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.1}us", s * 1e6)
+    }
+}
+
+/// Format a ratio as "12.3x".
+pub fn fmt_ratio(r: f64) -> String {
+    format!("{r:.2}x")
+}
+
+/// Geometric mean (speedup aggregation, as the paper's "on average 67×").
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_runs_and_orders() {
+        let t = time(3, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(t.reps, 3);
+        assert!(t.min_s <= t.median_s && t.median_s <= t.max_s);
+    }
+
+    #[test]
+    fn geomean_basics() {
+        assert!((geomean(&[1.0, 100.0]) - 10.0).abs() < 1e-9);
+        assert_eq!(geomean(&[]), 0.0);
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_secs(2.5), "2.50s");
+        assert_eq!(fmt_secs(0.0025), "2.50ms");
+        assert_eq!(fmt_secs(2.5e-5), "25.0us");
+        assert_eq!(fmt_ratio(1.9), "1.90x");
+    }
+
+    #[test]
+    fn table_prints_aligned() {
+        let mut t = Table::new(&["id", "value"]);
+        t.row(&["A".into(), "1".into()]);
+        t.row(&["LONGER".into(), "2.345".into()]);
+        t.print(); // smoke: no panic
+        assert_eq!(t.rows.len(), 2);
+    }
+}

@@ -1,0 +1,122 @@
+//! Hand-rolled CLI argument parsing (no `clap` in the offline environment).
+//!
+//! Supports `--flag value`, `--flag=value` and boolean `--flag` forms, plus
+//! positional arguments, with typed accessors and an auto-generated usage
+//! string. Used by `main.rs` and the bench binaries.
+
+use std::collections::HashMap;
+
+/// Parsed arguments: flags + positionals.
+#[derive(Debug, Default)]
+pub struct Args {
+    flags: HashMap<String, String>,
+    positional: Vec<String>,
+}
+
+/// Parse `args` (excluding argv[0]).
+pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Args {
+    let mut out = Args::default();
+    let mut it = args.into_iter().peekable();
+    while let Some(a) = it.next() {
+        if let Some(rest) = a.strip_prefix("--") {
+            if let Some((k, v)) = rest.split_once('=') {
+                out.flags.insert(k.to_string(), v.to_string());
+            } else if it
+                .peek()
+                .map(|n| !n.starts_with("--"))
+                .unwrap_or(false)
+            {
+                let v = it.next().unwrap();
+                out.flags.insert(rest.to_string(), v);
+            } else {
+                out.flags.insert(rest.to_string(), "true".to_string());
+            }
+        } else {
+            out.positional.push(a);
+        }
+    }
+    out
+}
+
+/// Parse the process arguments.
+pub fn from_env() -> Args {
+    parse(std::env::args().skip(1))
+}
+
+impl Args {
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    /// Typed flag with default.
+    pub fn get_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.flags.get(key) {
+            None => default,
+            Some(raw) => raw.parse().unwrap_or_else(|e| {
+                eprintln!("error: bad value '{raw}' for --{key}: {e}");
+                std::process::exit(2);
+            }),
+        }
+    }
+
+    /// Required typed flag.
+    pub fn require<T: std::str::FromStr>(&self, key: &str) -> T
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.flags.get(key) {
+            Some(raw) => raw.parse().unwrap_or_else(|e| {
+                eprintln!("error: bad value '{raw}' for --{key}: {e}");
+                std::process::exit(2);
+            }),
+            None => {
+                eprintln!("error: missing required flag --{key}");
+                std::process::exit(2);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(s: &[&str]) -> Args {
+        parse(s.iter().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn parses_forms() {
+        let a = p(&["solve", "--k", "8", "--precision=FDF", "--verbose", "--devices", "4"]);
+        assert_eq!(a.positional(), &["solve".to_string()]);
+        assert_eq!(a.get_or("k", 0usize), 8);
+        assert_eq!(a.get("precision"), Some("FDF"));
+        assert!(a.has("verbose"));
+        assert_eq!(a.get_or("devices", 1usize), 4);
+        assert_eq!(a.get_or("missing", 7usize), 7);
+    }
+
+    #[test]
+    fn boolean_flag_before_flag() {
+        let a = p(&["--flag", "--k", "3"]);
+        assert!(a.has("flag"));
+        assert_eq!(a.get_or("k", 0usize), 3);
+    }
+
+    #[test]
+    fn negative_number_as_value() {
+        let a = p(&["--shift", "-1.5"]);
+        assert_eq!(a.get_or("shift", 0.0f64), -1.5);
+    }
+}

@@ -1,0 +1,700 @@
+//! The multi-GPU Top-K eigensolver coordinator — the paper's system
+//! contribution (Algorithm 1 + §III-A/B).
+//!
+//! The coordinator owns the fleet, partitions the matrix by nnz, drives the
+//! Lanczos iterations with the paper's two global synchronization points
+//! (α, β), swaps the `v_i` replica around the ring after every
+//! normalization, streams out-of-core partitions, runs the CPU Jacobi
+//! phase, and projects the eigenvectors back through the Lanczos basis.
+//!
+//! Device compute goes through [`crate::runtime::Kernels`] — either the
+//! AOT/PJRT artifacts or the host-simulation mirror — while a calibrated
+//! V100 cost model advances each device's *simulated clock*, from which the
+//! multi-GPU figures (Fig. 2/3a) are derived. Wallclock is measured
+//! independently.
+
+pub mod ooc;
+pub mod ring;
+
+use crate::gpu::{device::barrier, CostModel, Device, Topology};
+use crate::jacobi::{jacobi_eigen, DenseSym};
+use crate::linalg::normalize as l2_normalize;
+use crate::precision::PrecisionConfig;
+use crate::rng::Rng;
+use crate::runtime::{HostKernels, Kernels, PjrtKernels};
+use crate::sparse::{partition::partition_by_weight, Csr, RowPartition};
+use ooc::{plan_partition, PartitionPlan};
+use std::path::Path;
+use std::time::Instant;
+
+/// Reorthogonalization policy (paper Algorithm 1 lines 12–21, §IV-D).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReorthMode {
+    /// No reorthogonalization — fastest, loses orthogonality as K grows.
+    None,
+    /// Orthogonalize the candidate against every other basis vector
+    /// (`j ≡ i mod 2`) — half the cost; an ablation point between None
+    /// and Full approximating the paper's alternating v_t/v_n scheme.
+    Alternating,
+    /// Orthogonalize the candidate against all previous basis vectors,
+    /// O(nK²/2) extra work over the whole solve — the paper's
+    /// "with reorthogonalization" configuration.
+    Full,
+}
+
+impl std::str::FromStr for ReorthMode {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "none" | "off" => Ok(ReorthMode::None),
+            "alternating" | "alt" => Ok(ReorthMode::Alternating),
+            "full" | "on" => Ok(ReorthMode::Full),
+            other => Err(format!("unknown reorth mode '{other}'")),
+        }
+    }
+}
+
+/// Interconnect selection for the simulated fleet.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TopologyKind {
+    /// DGX-1(V)-style hybrid cube-mesh with PCIe fallback pairs.
+    Dgx1,
+    /// Fully-connected NVSwitch-like mesh (the paper's future-work case).
+    NvSwitch,
+}
+
+/// Solver configuration.
+#[derive(Clone, Debug)]
+pub struct SolverConfig {
+    /// Number of eigencomponents (the paper sweeps 8–24).
+    pub k: usize,
+    /// Precision configuration (FFF / FDF / DDD).
+    pub precision: PrecisionConfig,
+    /// Simulated GPU count (1–8).
+    pub devices: usize,
+    /// Reorthogonalization policy.
+    pub reorth: ReorthMode,
+    /// Seed for the random start vector.
+    pub seed: u64,
+    /// Row-degree quantile used to pick each partition's ELL width.
+    pub ell_quantile: f64,
+    /// Hard cap on the ELL width (the AOT bucket ladder's max).
+    pub max_ell_width: usize,
+    /// Per-device memory budget in bytes (V100: 16 GB; scaled down by the
+    /// harness so the GAP-class stand-ins exercise the out-of-core path).
+    pub device_mem_bytes: usize,
+    /// Max rows per SpMV kernel call (the largest row-block bucket).
+    pub max_chunk_rows: usize,
+    /// Interconnect model.
+    pub topology: TopologyKind,
+    /// Replica-swap strategy (the paper's ring vs. naive broadcast).
+    pub swap: ring::SwapStrategy,
+    /// Device cost model for the simulated clock.
+    pub cost: CostModel,
+}
+
+impl Default for SolverConfig {
+    fn default() -> Self {
+        SolverConfig {
+            k: 8,
+            precision: PrecisionConfig::FDF,
+            devices: 1,
+            reorth: ReorthMode::Full,
+            seed: 0x70D0_EE11,
+            ell_quantile: 0.99,
+            // Matches aot.py's W ladder maximum; heavier rows spill.
+            max_ell_width: 32,
+            device_mem_bytes: 32 << 20,
+            max_chunk_rows: 1 << 16,
+            topology: TopologyKind::Dgx1,
+            swap: ring::SwapStrategy::Ring,
+            cost: CostModel::default(),
+        }
+    }
+}
+
+/// Per-phase breakdown of the simulated time (seconds, fleet-critical-path).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PhaseBreakdown {
+    pub spmv: f64,
+    pub vector_ops: f64,
+    pub reorth: f64,
+    pub swap: f64,
+    pub h2d: f64,
+    pub sync: f64,
+    pub jacobi_cpu: f64,
+    pub project: f64,
+}
+
+impl PhaseBreakdown {
+    pub fn total(&self) -> f64 {
+        self.spmv + self.vector_ops + self.reorth + self.swap + self.h2d + self.sync
+            + self.jacobi_cpu
+            + self.project
+    }
+}
+
+/// Statistics of one solve.
+#[derive(Clone, Debug, Default)]
+pub struct SolveStats {
+    /// Host wallclock seconds.
+    pub wall_seconds: f64,
+    /// Simulated fleet time (max device clock at completion).
+    pub sim_seconds: f64,
+    /// Simulated clock per device.
+    pub sim_per_device: Vec<f64>,
+    /// Phase breakdown of simulated time.
+    pub phases: PhaseBreakdown,
+    /// Kernel launches across the fleet.
+    pub kernels_launched: usize,
+    /// Out-of-core bytes streamed host→device.
+    pub h2d_bytes: usize,
+    /// Ring-swap bytes moved device→device.
+    pub p2p_bytes: usize,
+    /// Lanczos iterations (== K unless breakdown recovery shortened).
+    pub iterations: usize,
+    /// Lanczos breakdowns recovered (β ≈ 0 restarts).
+    pub breakdowns: usize,
+    /// True if any partition ran out-of-core.
+    pub out_of_core: bool,
+    /// Peak device memory across the fleet.
+    pub peak_device_bytes: usize,
+    /// Backend identifier ("hostsim" / "pjrt").
+    pub backend: &'static str,
+}
+
+/// The solver's output.
+#[derive(Clone, Debug)]
+pub struct EigenSolution {
+    /// Top-K eigenvalues by |λ|, descending.
+    pub eigenvalues: Vec<f64>,
+    /// Matching full-length eigenvectors (unit L2 norm).
+    pub eigenvectors: Vec<Vec<f64>>,
+    /// Lanczos tridiagonal coefficients (diagnostics / tests).
+    pub alpha: Vec<f64>,
+    pub beta: Vec<f64>,
+    pub stats: SolveStats,
+}
+
+/// The multi-GPU Top-K sparse eigensolver.
+pub struct TopKSolver {
+    pub cfg: SolverConfig,
+    kernels: Box<dyn Kernels>,
+}
+
+impl TopKSolver {
+    /// Solver over the pure-rust host-simulation backend.
+    pub fn new(cfg: SolverConfig) -> Self {
+        TopKSolver { cfg, kernels: Box::new(HostKernels::new()) }
+    }
+
+    /// Solver over the AOT/PJRT artifact backend (`make artifacts` first).
+    pub fn with_pjrt(cfg: SolverConfig, artifact_dir: &Path) -> anyhow::Result<Self> {
+        let pjrt = PjrtKernels::new(artifact_dir)?;
+        pjrt.validate_for(&cfg.precision)?;
+        Ok(TopKSolver { cfg, kernels: Box::new(pjrt) })
+    }
+
+    /// Solver over a caller-supplied backend (tests, custom runtimes).
+    pub fn with_kernels(cfg: SolverConfig, kernels: Box<dyn Kernels>) -> Self {
+        TopKSolver { cfg, kernels }
+    }
+
+    /// Compute the Top-K eigenpairs of symmetric `m`.
+    pub fn solve(&mut self, m: &Csr) -> anyhow::Result<EigenSolution> {
+        let cfg = self.cfg.clone();
+        anyhow::ensure!(m.rows == m.cols, "matrix must be square (got {}×{})", m.rows, m.cols);
+        anyhow::ensure!(cfg.k >= 1, "K must be ≥ 1");
+        anyhow::ensure!(cfg.k < m.rows, "K={} must be < n={}", cfg.k, m.rows);
+        anyhow::ensure!(
+            (1..=8).contains(&cfg.devices),
+            "devices must be in 1..=8 (modeled DGX-1 fleet)"
+        );
+        anyhow::ensure!(cfg.devices <= m.rows, "more devices than rows");
+
+        let wall_start = Instant::now();
+        let n = m.rows;
+        let k = cfg.k;
+        let g = cfg.devices;
+        let storage = cfg.precision.storage;
+        let sb = storage.bytes();
+        let topology = match cfg.topology {
+            TopologyKind::Dgx1 => Topology::dgx1(g),
+            TopologyKind::NvSwitch => Topology::nvswitch(g),
+        };
+
+        // ---- Partition & plan ------------------------------------------------
+        // Balance *device work*, not raw nnz: each row costs ~min(deg, W)
+        // ELL slots on the device (heavier rows spill to the host tail).
+        let wcap = cfg.max_ell_width;
+        let parts: Vec<RowPartition> =
+            partition_by_weight(m, g, |deg| deg.min(wcap).max(1));
+        let mut devices: Vec<Device> =
+            (0..g).map(|i| Device::new(i, cfg.device_mem_bytes)).collect();
+        let mut plans: Vec<PartitionPlan> = Vec::with_capacity(g);
+        let mut out_of_core = false;
+        for (p, dev) in parts.iter().zip(devices.iter_mut()) {
+            let part = m.slice_rows(p.row_start, p.row_end);
+            // Vector working set: replica (n) + basis (K·n_g) + 3 work vectors.
+            let vec_bytes = n * sb + (k + 3) * p.rows() * sb;
+            dev.mem.alloc(vec_bytes).map_err(|e| {
+                anyhow::anyhow!(
+                    "device {} cannot hold the Lanczos vectors ({e}); \
+                     increase --device-mem or --devices",
+                    dev.id
+                )
+            })?;
+            let plan = plan_partition(
+                &part,
+                storage,
+                cfg.ell_quantile,
+                cfg.max_ell_width,
+                &mut dev.mem,
+                cfg.max_chunk_rows,
+            );
+            out_of_core |= !plan.resident;
+            plans.push(plan);
+        }
+
+        // Per-device slice byte counts of v_i (for the ring swap model).
+        let slice_bytes: Vec<usize> = parts.iter().map(|p| p.rows() * sb).collect();
+        // Allreduce latency model: tree reduction over the fleet.
+        let sync_latency = topology.latency_s * (g as f64).log2().ceil().max(1.0);
+
+        // ---- Lanczos state ---------------------------------------------------
+        let mut rng = Rng::new(cfg.seed);
+        let mut v1 = vec![0.0f64; n];
+        rng.fill_uniform(&mut v1);
+        l2_normalize(&mut v1);
+        // Storage quantization of the start vector (device residency).
+        let mut replica = crate::runtime::quantize_vec(&v1, storage);
+
+        // Per-device state, indexed [g]: slices of the evolving vectors.
+        let slice_of = |v: &[f64], p: &RowPartition| v[p.row_start..p.row_end].to_vec();
+        let mut v_prev: Vec<Vec<f64>> = parts.iter().map(|p| vec![0.0; p.rows()]).collect();
+        let mut v_nxt: Vec<Vec<f64>> = parts.iter().map(|p| vec![0.0; p.rows()]).collect();
+        // Lanczos basis per device: basis[g][iter] = slice.
+        let mut basis: Vec<Vec<Vec<f64>>> = vec![Vec::with_capacity(k); g];
+
+        let mut alpha = Vec::with_capacity(k);
+        let mut beta: Vec<f64> = Vec::with_capacity(k);
+        let mut phases = PhaseBreakdown::default();
+        let mut breakdowns = 0usize;
+        let mut sumsq_parts = vec![0.0f64; g];
+
+        let kernels = &mut self.kernels;
+        let phase_mark = |devices: &mut [Device], acc: &mut f64| {
+            // Helper pattern: callers measure deltas of the fleet max clock.
+            let t = devices.iter().map(|d| d.clock_s).fold(0.0, f64::max);
+            let delta = t - *acc;
+            *acc = t;
+            delta
+        };
+        let mut clock_cursor = 0.0f64;
+
+        // ---- Main loop (Algorithm 1) ----------------------------------------
+        for i in 0..k {
+            // β sync + normalization (lines 5–7), skipped on the first pass.
+            if i > 0 {
+                let ss: f64 = sumsq_parts.iter().sum();
+                let mut b = ss.sqrt();
+                // β recorded in T; stays 0 on breakdown (block boundary).
+                let mut b_t = b;
+                if b < 1e-12 * (n as f64).sqrt() {
+                    // Lanczos breakdown: the Krylov space is invariant.
+                    // Restart with a fresh random direction orthogonal to
+                    // the basis; T gets β = 0 at the block boundary so the
+                    // spectrum of the completed blocks is preserved.
+                    breakdowns += 1;
+                    b_t = 0.0;
+                    let mut fresh = vec![0.0f64; n];
+                    rng.fill_uniform(&mut fresh);
+                    for (gi, p) in parts.iter().enumerate() {
+                        let mut slice = slice_of(&fresh, p);
+                        for q in &basis[gi] {
+                            let o = kernels.dot(q, &slice, &cfg.precision);
+                            slice = kernels.ortho_update(&slice, q, o, &cfg.precision);
+                        }
+                        v_nxt[gi] = slice;
+                    }
+                    let ss2: f64 = parts
+                        .iter()
+                        .enumerate()
+                        .map(|(gi, _)| kernels.dot(&v_nxt[gi], &v_nxt[gi], &cfg.precision))
+                        .sum();
+                    b = ss2.sqrt();
+                }
+                beta.push(b_t);
+                for (gi, p) in parts.iter().enumerate() {
+                    let out = kernels.normalize(&v_nxt[gi], b, &cfg.precision);
+                    let cost = cfg.cost.vector_cost(p.rows(), 1, 1, &cfg.precision);
+                    devices[gi].run_kernel(
+                        cfg.cost.stream_seconds(cost, cfg.precision.compute),
+                    );
+                    replica[p.row_start..p.row_end].copy_from_slice(&out);
+                }
+                phases.vector_ops += phase_mark(&mut devices, &mut clock_cursor);
+                // Sync: the β reduction.
+                for d in devices.iter_mut() {
+                    d.clock_s += sync_latency;
+                }
+                barrier(&mut devices);
+                // Ring swap: refresh every device's replica of v_i.
+                ring::charge_swap_with(&mut devices, &topology, &slice_bytes, cfg.swap);
+                let delta = phase_mark(&mut devices, &mut clock_cursor);
+                phases.swap += delta;
+            }
+
+            // Record the basis slice v_i (already quantized by the kernels).
+            for (gi, p) in parts.iter().enumerate() {
+                basis[gi].push(slice_of(&replica, p));
+            }
+
+            // SpMV (line 9): per device, per chunk; stream if out-of-core.
+            // The replica is final for this iteration: let the backend
+            // cache its upload across chunks/devices.
+            kernels.begin_cycle();
+            let mut v_tmp: Vec<Vec<f64>> = Vec::with_capacity(g);
+            for (gi, p) in parts.iter().enumerate() {
+                let plan = &plans[gi];
+                let mut y = vec![0.0f64; p.rows()];
+                for c in &plan.chunks {
+                    if !c.resident {
+                        let bytes = c.ell.bytes();
+                        devices[gi].stream_in(bytes, cfg.cost.h2d_seconds(bytes));
+                    }
+                    let yc = kernels.spmv(&c.ell, &replica, &cfg.precision);
+                    let cost =
+                        cfg.cost.spmv_cost(c.ell.rows, c.ell.width, n, &cfg.precision);
+                    devices[gi]
+                        .run_kernel(cfg.cost.spmv_seconds(cost, cfg.precision.compute));
+                    if !c.ell.spill.is_empty() {
+                        // The spill tail is still device work (a COO kernel
+                        // on the real system) — charge it.
+                        let sc = cfg.cost.spill_cost(c.ell.spill.len(), &cfg.precision);
+                        devices[gi]
+                            .run_kernel(cfg.cost.spmv_seconds(sc, cfg.precision.compute));
+                    }
+                    y[c.row_offset..c.row_offset + c.ell.rows].copy_from_slice(&yc);
+                }
+                v_tmp.push(y);
+            }
+            {
+                // Split the SpMV phase delta into h2d vs. compute using byte
+                // accounting (approximation for the breakdown table).
+                let delta = phase_mark(&mut devices, &mut clock_cursor);
+                if out_of_core {
+                    let h2d_frac = 0.5; // refined below from device counters
+                    phases.spmv += delta * (1.0 - h2d_frac);
+                    phases.h2d += delta * h2d_frac;
+                } else {
+                    phases.spmv += delta;
+                }
+            }
+
+            // α sync (line 10).
+            let mut a_i = 0.0f64;
+            for (gi, p) in parts.iter().enumerate() {
+                let vi_slice = &basis[gi][i];
+                a_i += kernels.dot(vi_slice, &v_tmp[gi], &cfg.precision);
+                let cost = cfg.cost.vector_cost(p.rows(), 2, 0, &cfg.precision);
+                devices[gi].run_kernel(cfg.cost.stream_seconds(cost, cfg.precision.compute));
+            }
+            for d in devices.iter_mut() {
+                d.clock_s += sync_latency;
+            }
+            barrier(&mut devices);
+            phases.sync += sync_latency;
+            alpha.push(a_i);
+            phases.vector_ops += phase_mark(&mut devices, &mut clock_cursor);
+
+            // Candidate update (line 11) + partial Σ v_nxt².
+            let b_i = if i > 0 { beta[i - 1] } else { 0.0 };
+            for (gi, p) in parts.iter().enumerate() {
+                let (vn, ss) = kernels.candidate(
+                    &v_tmp[gi],
+                    &basis[gi][i],
+                    &v_prev[gi],
+                    a_i,
+                    b_i,
+                    &cfg.precision,
+                );
+                v_nxt[gi] = vn;
+                sumsq_parts[gi] = ss;
+                let cost = cfg.cost.candidate_cost(p.rows(), &cfg.precision);
+                devices[gi].run_kernel(cfg.cost.stream_seconds(cost, cfg.precision.compute));
+            }
+            phases.vector_ops += phase_mark(&mut devices, &mut clock_cursor);
+
+            // Reorthogonalization (lines 12–21).
+            let reorth_targets: Vec<usize> = match cfg.reorth {
+                ReorthMode::None => vec![],
+                ReorthMode::Alternating => (0..=i).filter(|j| (i - j) % 2 == 0).collect(),
+                ReorthMode::Full => (0..=i).collect(),
+            };
+            if !reorth_targets.is_empty() {
+                for &j in &reorth_targets {
+                    let mut o = 0.0f64;
+                    for (gi, p) in parts.iter().enumerate() {
+                        o += kernels.dot(&basis[gi][j], &v_nxt[gi], &cfg.precision);
+                        let cost = cfg.cost.vector_cost(p.rows(), 2, 0, &cfg.precision);
+                        devices[gi]
+                            .run_kernel(cfg.cost.stream_seconds(cost, cfg.precision.compute));
+                    }
+                    for d in devices.iter_mut() {
+                        d.clock_s += sync_latency;
+                    }
+                    barrier(&mut devices);
+                    for (gi, p) in parts.iter().enumerate() {
+                        v_nxt[gi] =
+                            kernels.ortho_update(&v_nxt[gi], &basis[gi][j], o, &cfg.precision);
+                        let cost = cfg.cost.vector_cost(p.rows(), 2, 1, &cfg.precision);
+                        devices[gi]
+                            .run_kernel(cfg.cost.stream_seconds(cost, cfg.precision.compute));
+                    }
+                }
+                // Recompute the candidate norm after the corrections.
+                for (gi, _) in parts.iter().enumerate() {
+                    sumsq_parts[gi] = kernels.dot(&v_nxt[gi], &v_nxt[gi], &cfg.precision);
+                }
+                phases.reorth += phase_mark(&mut devices, &mut clock_cursor);
+            }
+
+            // Shift: v_prev ← v_i.
+            for gi in 0..g {
+                v_prev[gi] = basis[gi][i].clone();
+            }
+        }
+
+        // ---- Phase 2: CPU Jacobi on T (paper Fig. 1 Ⓓ) ----------------------
+        let jacobi_start = Instant::now();
+        let t = DenseSym::from_tridiagonal(&alpha, &beta);
+        // Convergence threshold at the working precision: asking an f32
+        // Jacobi for 1e-12 off-diagonals would spin the sweep limit.
+        let jacobi_tol = match cfg.precision.jacobi {
+            crate::precision::Storage::F32 => 1e-6,
+            crate::precision::Storage::F64 => 1e-12,
+        };
+        let eig = jacobi_eigen(&t, cfg.precision.jacobi, jacobi_tol, 100);
+        phases.jacobi_cpu = jacobi_start.elapsed().as_secs_f64();
+        for d in devices.iter_mut() {
+            d.clock_s += phases.jacobi_cpu; // fleet idles while the CPU works
+        }
+
+        // ---- Eigenvector projection Y = 𝒱 · V --------------------------------
+        let coeff: Vec<Vec<f64>> = eig.vectors.clone();
+        let mut eigenvectors = vec![vec![0.0f64; n]; k];
+        for (gi, p) in parts.iter().enumerate() {
+            let outs = kernels.project(&basis[gi], &coeff, &cfg.precision);
+            let cost = cfg.cost.vector_cost(p.rows() * k, 1, 1, &cfg.precision);
+            devices[gi].run_kernel(cfg.cost.stream_seconds(cost, cfg.precision.compute));
+            for (t_idx, out) in outs.into_iter().enumerate() {
+                eigenvectors[t_idx][p.row_start..p.row_end].copy_from_slice(&out);
+            }
+        }
+        phases.project += phase_mark(&mut devices, &mut clock_cursor);
+        for v in eigenvectors.iter_mut() {
+            l2_normalize(v);
+        }
+
+        let sim_seconds = devices.iter().map(|d| d.clock_s).fold(0.0, f64::max);
+        let stats = SolveStats {
+            wall_seconds: wall_start.elapsed().as_secs_f64(),
+            sim_seconds,
+            sim_per_device: devices.iter().map(|d| d.clock_s).collect(),
+            phases,
+            kernels_launched: devices.iter().map(|d| d.kernels_launched).sum(),
+            h2d_bytes: devices.iter().map(|d| d.h2d_bytes).sum(),
+            p2p_bytes: devices.iter().map(|d| d.p2p_bytes).sum(),
+            iterations: k,
+            breakdowns,
+            out_of_core,
+            peak_device_bytes: devices.iter().map(|d| d.mem.peak()).max().unwrap_or(0),
+            backend: kernels.backend_name(),
+        };
+
+        Ok(EigenSolution { eigenvalues: eig.values, eigenvectors, alpha, beta, stats })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::{gen, Csr};
+
+    fn toeplitz(n: usize) -> Csr {
+        Csr::from_coo(&gen::tridiag_toeplitz(n, 2.0, -1.0))
+    }
+
+    fn solve(cfg: SolverConfig, m: &Csr) -> EigenSolution {
+        TopKSolver::new(cfg).solve(m).unwrap()
+    }
+
+    /// Diagonal matrix with well-separated decaying spectrum plus weak
+    /// coupling — the regime Lanczos-with-dim-K (the paper's design) is
+    /// accurate in, unlike clustered Toeplitz spectra.
+    fn spiked(n: usize) -> Csr {
+        let mut coo = crate::sparse::Coo::new(n, n);
+        for i in 0..n {
+            let d = if i < 12 { 10.0 - i as f64 } else { 0.5 / (1.0 + i as f64) };
+            coo.push(i as u32, i as u32, d);
+            if i + 1 < n {
+                coo.push(i as u32, (i + 1) as u32, 1e-3);
+                coo.push((i + 1) as u32, i as u32, 1e-3);
+            }
+        }
+        coo.canonicalize();
+        Csr::from_coo(&coo)
+    }
+
+    #[test]
+    fn recovers_known_spectrum_single_device() {
+        let n = 400;
+        let m = spiked(n);
+        // Krylov dim == K (the paper's design): the top Ritz pair converges
+        // first; interior pairs need K headroom. Check the top pair tightly
+        // at K=8 and the top three at K=16.
+        let sol8 = solve(
+            SolverConfig { k: 8, precision: PrecisionConfig::DDD, ..Default::default() },
+            &m,
+        );
+        assert!((sol8.eigenvalues[0] - 10.0).abs() < 1e-2, "{}", sol8.eigenvalues[0]);
+        let sol16 = solve(
+            SolverConfig { k: 16, precision: PrecisionConfig::DDD, ..Default::default() },
+            &m,
+        );
+        for (got, want) in sol16.eigenvalues.iter().take(3).zip([10.0, 9.0, 8.0]) {
+            assert!((got - want).abs() < 1e-2, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn multi_device_matches_single_device_in_ddd() {
+        let mut rng = crate::rng::Rng::new(3);
+        let m = Csr::from_coo(&gen::erdos_renyi(500, 500, 0.02, true, &mut rng));
+        let base = SolverConfig { k: 8, precision: PrecisionConfig::DDD, ..Default::default() };
+        let s1 = solve(SolverConfig { devices: 1, ..base.clone() }, &m);
+        for g in [2, 4, 8] {
+            let sg = solve(SolverConfig { devices: g, ..base.clone() }, &m);
+            for (a, b) in s1.eigenvalues.iter().zip(&sg.eigenvalues) {
+                assert!((a - b).abs() < 1e-9, "g={g}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn eigenpairs_satisfy_definition() {
+        let mut rng = crate::rng::Rng::new(9);
+        let m = Csr::from_coo(&gen::power_law(600, 8.0, 2.3, &mut rng));
+        let cfg = SolverConfig {
+            k: 16,
+            devices: 2,
+            precision: PrecisionConfig::DDD,
+            ..Default::default()
+        };
+        let sol = solve(cfg, &m);
+        // Residuals: Lanczos-dim == K gives looser interior pairs; the top
+        // pair must be much tighter than the mean (which is bounded by the
+        // spectral radius — a sanity check, not a convergence claim).
+        let r0 = crate::metrics::l2_residual(&m, sol.eigenvalues[0], &sol.eigenvectors[0]);
+        assert!(r0 < 1e-4, "top residual {r0}");
+        let mean = crate::metrics::mean_l2_residual(&m, &sol.eigenvalues, &sol.eigenvectors);
+        assert!(mean < 1.0, "mean residual {mean}");
+        assert!(mean > r0, "interior pairs should be looser than the top pair");
+    }
+
+    #[test]
+    fn reorth_improves_orthogonality() {
+        let mut rng = crate::rng::Rng::new(11);
+        let m = Csr::from_coo(&gen::erdos_renyi(800, 800, 0.015, true, &mut rng));
+        let mk = |reorth| SolverConfig {
+            k: 16,
+            reorth,
+            precision: PrecisionConfig::FFF,
+            ..Default::default()
+        };
+        let with = solve(mk(ReorthMode::Full), &m);
+        let without = solve(mk(ReorthMode::None), &m);
+        let ang_with = crate::metrics::avg_pairwise_angle_deg(&with.eigenvectors);
+        let ang_without = crate::metrics::avg_pairwise_angle_deg(&without.eigenvectors);
+        assert!(
+            (90.0 - ang_with).abs() <= (90.0 - ang_without).abs() + 1e-9,
+            "with {ang_with} vs without {ang_without}"
+        );
+    }
+
+    #[test]
+    fn out_of_core_matches_in_core() {
+        let mut rng = crate::rng::Rng::new(13);
+        let m = Csr::from_coo(&gen::erdos_renyi(600, 600, 0.03, true, &mut rng));
+        let base = SolverConfig { k: 5, precision: PrecisionConfig::DDD, ..Default::default() };
+        let incore = solve(base.clone(), &m);
+        assert!(!incore.stats.out_of_core);
+        // Starve device memory to force streaming.
+        let tight = SolverConfig {
+            device_mem_bytes: {
+                // vectors + a small fraction of the slab
+                let sb = 8;
+                600 * sb + (5 + 3) * 600 * sb + (16 << 10)
+            },
+            ..base
+        };
+        let ooc = solve(tight, &m);
+        assert!(ooc.stats.out_of_core, "expected out-of-core plan");
+        assert!(ooc.stats.h2d_bytes > 0);
+        for (a, b) in incore.eigenvalues.iter().zip(&ooc.eigenvalues) {
+            assert!((a - b).abs() < 1e-9, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn more_devices_reduce_sim_time_on_large_matrices() {
+        // Needs a matrix large enough that per-device compute dominates the
+        // sync/swap overhead — exactly the paper's Fig. 3a regime split.
+        let e = crate::sparse::suite::find("WK").unwrap();
+        let m = e.generate_csr(100.0, 7);
+        let base = SolverConfig {
+            k: 8,
+            reorth: ReorthMode::None,
+            device_mem_bytes: 256 << 20,
+            ..Default::default()
+        };
+        let t1 = solve(SolverConfig { devices: 1, ..base.clone() }, &m).stats.sim_seconds;
+        let t8 = solve(SolverConfig { devices: 8, ..base.clone() }, &m).stats.sim_seconds;
+        assert!(t8 < t1, "sim t8 {t8} vs t1 {t1}");
+    }
+
+    #[test]
+    fn breakdown_recovery_handles_tiny_spectra() {
+        // Identity-like: Krylov space saturates immediately; the solver must
+        // recover instead of dividing by ~0.
+        let mut coo = crate::sparse::Coo::new(40, 40);
+        for i in 0..40 {
+            coo.push(i, i, 1.0);
+        }
+        coo.canonicalize();
+        let m = Csr::from_coo(&coo);
+        let cfg = SolverConfig { k: 5, precision: PrecisionConfig::DDD, ..Default::default() };
+        let sol = solve(cfg, &m);
+        assert!(sol.stats.breakdowns > 0);
+        for lam in &sol.eigenvalues {
+            assert!((lam - 1.0).abs() < 1e-6, "λ {lam}");
+        }
+    }
+
+    #[test]
+    fn stats_are_populated() {
+        let m = toeplitz(200);
+        let sol = solve(SolverConfig { k: 4, devices: 2, ..Default::default() }, &m);
+        let s = &sol.stats;
+        assert!(s.sim_seconds > 0.0);
+        assert!(s.wall_seconds > 0.0);
+        assert_eq!(s.sim_per_device.len(), 2);
+        assert!(s.kernels_launched > 0);
+        assert!(s.p2p_bytes > 0, "ring swap must move bytes with 2 devices");
+        assert_eq!(s.iterations, 4);
+        assert_eq!(s.backend, "hostsim");
+        assert!(s.phases.total() > 0.0);
+        assert!(s.peak_device_bytes > 0);
+    }
+}

@@ -1,0 +1,233 @@
+//! Round-robin replica swap (paper §III-A, Fig. 1 Ⓒ).
+//!
+//! After normalization, every device holds the fresh partition-slice of the
+//! new Lanczos vector `v_i`; the SpMV gathers from a **full replica** of
+//! `v_i` on each device, so the slices must be exchanged. The naive
+//! approach is a broadcast from each device (a full-vector synchronization
+//! per iteration). The paper instead rotates partitions around a ring:
+//! each GPU forwards one partition per step to its neighbour, completing
+//! the replica in `G−1` steps — a classic ring all-gather, which keeps
+//! every link busy and bounds per-step traffic by the largest partition.
+//!
+//! This module computes the schedule and its modeled cost; the data-plane
+//! (the coordinator) keeps one canonical replica since simulated devices
+//! share host memory, while the simulated clocks pay the true per-device
+//! transfer times.
+
+use crate::gpu::{Device, Topology};
+
+/// One transfer in the ring schedule.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SwapStep {
+    /// Ring step index (0-based; G−1 steps in total).
+    pub step: usize,
+    /// Sending device.
+    pub from: usize,
+    /// Receiving device.
+    pub to: usize,
+    /// Partition (by owner device id) being forwarded.
+    pub partition: usize,
+}
+
+/// The full ring all-gather schedule for `g` devices.
+///
+/// At step `s`, device `d` sends partition `(d − s) mod g` to `(d+1) mod g`.
+/// After `g−1` steps every device has received all `g−1` remote partitions.
+pub fn ring_schedule(g: usize) -> Vec<SwapStep> {
+    let mut steps = Vec::new();
+    if g <= 1 {
+        return steps;
+    }
+    for s in 0..g - 1 {
+        for d in 0..g {
+            steps.push(SwapStep {
+                step: s,
+                from: d,
+                to: (d + 1) % g,
+                partition: (d + g - (s % g)) % g,
+            });
+        }
+    }
+    steps
+}
+
+/// Verify the schedule delivers every partition to every device. Returns
+/// the per-device set of received partitions (tests + property checks).
+pub fn coverage(g: usize) -> Vec<Vec<bool>> {
+    let mut have = vec![vec![false; g]; g];
+    for (d, row) in have.iter_mut().enumerate() {
+        row[d] = true; // own partition
+    }
+    for st in ring_schedule(g) {
+        // The sender must already hold the partition it forwards.
+        debug_assert!(have[st.from][st.partition], "ring forwards unheld partition");
+        have[st.to][st.partition] = true;
+    }
+    have
+}
+
+/// Replica-swap strategy (ablation: `benches/ablation_swap.rs`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SwapStrategy {
+    /// The paper's round-robin rotation, scheduled along the topology's
+    /// NVLink-maximal ring order (NCCL-style).
+    Ring,
+    /// Naive alternative: every device broadcasts its slice directly to all
+    /// replicas, crossing arbitrary (possibly PCIe) pairs — the full-vector
+    /// synchronization the paper's scheme avoids.
+    Broadcast,
+}
+
+/// Charge the modeled cost of one full replica swap to the device clocks.
+///
+/// `slice_bytes[p]` is the byte size of partition `p`'s slice of `v_i`.
+/// Steps of the same ring round happen in parallel (all links active), so
+/// each device pays its receive leg per step; devices then barrier because
+/// the next SpMV needs the complete replica.
+pub fn charge_swap(
+    devices: &mut [Device],
+    topology: &Topology,
+    slice_bytes: &[usize],
+) -> f64 {
+    charge_swap_with(devices, topology, slice_bytes, SwapStrategy::Ring)
+}
+
+/// [`charge_swap`] with an explicit strategy.
+pub fn charge_swap_with(
+    devices: &mut [Device],
+    topology: &Topology,
+    slice_bytes: &[usize],
+    strategy: SwapStrategy,
+) -> f64 {
+    let g = devices.len();
+    if g <= 1 {
+        return 0.0;
+    }
+    assert_eq!(slice_bytes.len(), g);
+    match strategy {
+        SwapStrategy::Ring => {
+            // Map ring *positions* onto the topology's NVLink-maximal
+            // device order: neighbours in the schedule are neighbours on
+            // the physical ring.
+            let order = topology.ring_order();
+            debug_assert_eq!(order.len(), g);
+            for st in ring_schedule(g) {
+                let (from, to) = (order[st.from], order[st.to]);
+                let bytes = slice_bytes[order[st.partition]];
+                let secs = topology.transfer_seconds(from, to, bytes);
+                // Receiver pays the transfer; the sender's copy engine
+                // overlaps with its own receive leg in a ring.
+                devices[to].p2p(bytes, secs);
+            }
+        }
+        SwapStrategy::Broadcast => {
+            // Each device receives every remote slice directly from its
+            // owner; transfers to one receiver serialize on its ingress.
+            for recv in 0..g {
+                for from in 0..g {
+                    if from != recv {
+                        let bytes = slice_bytes[from];
+                        let secs = topology.transfer_seconds(from, recv, bytes);
+                        devices[recv].p2p(bytes, secs);
+                    }
+                }
+            }
+        }
+    }
+    crate::gpu::device::barrier(devices)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::Topology;
+
+    #[test]
+    fn schedule_has_g_minus_1_rounds() {
+        for g in [2, 3, 4, 8] {
+            let steps = ring_schedule(g);
+            assert_eq!(steps.len(), g * (g - 1));
+            let max_step = steps.iter().map(|s| s.step).max().unwrap();
+            assert_eq!(max_step, g - 2);
+        }
+    }
+
+    #[test]
+    fn single_device_needs_no_swap() {
+        assert!(ring_schedule(1).is_empty());
+        assert!(ring_schedule(0).is_empty());
+    }
+
+    #[test]
+    fn every_device_receives_every_partition() {
+        for g in [2, 3, 5, 8] {
+            let have = coverage(g);
+            for (d, row) in have.iter().enumerate() {
+                for (p, &h) in row.iter().enumerate() {
+                    assert!(h, "g={g}: device {d} missing partition {p}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn swap_cost_grows_with_fleet_over_pcie() {
+        // On the DGX-1 mesh, 8-GPU rings cross PCIe pairs; the same total
+        // bytes swap slower than on a 4-GPU NVLink clique.
+        let slice = vec![1 << 22; 4];
+        let mut d4: Vec<Device> = (0..4).map(|i| Device::new(i, 1 << 30)).collect();
+        let t4 = charge_swap(&mut d4, &Topology::dgx1(4), &slice);
+
+        let slice8 = vec![1 << 22; 8];
+        let mut d8: Vec<Device> = (0..8).map(|i| Device::new(i, 1 << 30)).collect();
+        let t8 = charge_swap(&mut d8, &Topology::dgx1(8), &slice8);
+        // 8-GPU swap has more rounds AND slower links ⇒ clearly slower.
+        assert!(t8 > t4 * 1.5, "t8 {t8} vs t4 {t4}");
+    }
+
+    #[test]
+    fn nvswitch_swaps_faster_than_dgx1_at_8() {
+        let slice = vec![1 << 22; 8];
+        let mut a: Vec<Device> = (0..8).map(|i| Device::new(i, 1 << 30)).collect();
+        let ta = charge_swap(&mut a, &Topology::dgx1(8), &slice);
+        let mut b: Vec<Device> = (0..8).map(|i| Device::new(i, 1 << 30)).collect();
+        let tb = charge_swap(&mut b, &Topology::nvswitch(8), &slice);
+        assert!(tb < ta, "nvswitch {tb} vs dgx1 {ta}");
+    }
+
+    #[test]
+    fn eight_gpu_ring_order_is_all_nvlink() {
+        let t = Topology::dgx1(8);
+        let order = t.ring_order();
+        assert_eq!(order.len(), 8);
+        for i in 0..8 {
+            let (a, b) = (order[i], order[(i + 1) % 8]);
+            assert_ne!(
+                t.link(a, b),
+                crate::gpu::LinkKind::Pcie,
+                "ring edge ({a},{b}) must avoid PCIe"
+            );
+        }
+    }
+
+    #[test]
+    fn broadcast_is_slower_than_ring_at_8() {
+        // The ablation behind the paper's partition-swap design: naive
+        // direct broadcast crosses PCIe pairs and moves G× the bytes.
+        let slice = vec![1 << 22; 8];
+        let mut a: Vec<Device> = (0..8).map(|i| Device::new(i, 1 << 30)).collect();
+        let ring = charge_swap_with(&mut a, &Topology::dgx1(8), &slice, SwapStrategy::Ring);
+        let mut b: Vec<Device> = (0..8).map(|i| Device::new(i, 1 << 30)).collect();
+        let bcast =
+            charge_swap_with(&mut b, &Topology::dgx1(8), &slice, SwapStrategy::Broadcast);
+        assert!(bcast > ring * 2.0, "broadcast {bcast} vs ring {ring}");
+    }
+
+    #[test]
+    fn bytes_accounted_on_receivers() {
+        let slice = vec![100; 2];
+        let mut devs: Vec<Device> = (0..2).map(|i| Device::new(i, 1 << 20)).collect();
+        charge_swap(&mut devs, &Topology::dgx1(2), &slice);
+        assert_eq!(devs[0].p2p_bytes + devs[1].p2p_bytes, 200);
+    }
+}

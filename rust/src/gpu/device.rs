@@ -1,0 +1,167 @@
+//! Simulated device state: memory budget + simulated clock + counters.
+
+/// Device-memory accounting with a hard capacity (the V100's 16 GB,
+/// scaled down by the harness to exercise out-of-core paths at CI sizes).
+#[derive(Clone, Debug)]
+pub struct DeviceMemory {
+    capacity: usize,
+    used: usize,
+    peak: usize,
+}
+
+/// Error returned when an allocation exceeds the device capacity.
+#[derive(Debug, thiserror::Error)]
+#[error("device OOM: requested {requested} bytes, free {free} of {capacity}")]
+pub struct DeviceOom {
+    pub requested: usize,
+    pub free: usize,
+    pub capacity: usize,
+}
+
+impl DeviceMemory {
+    pub fn new(capacity: usize) -> Self {
+        DeviceMemory { capacity, used: 0, peak: 0 }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn used(&self) -> usize {
+        self.used
+    }
+
+    pub fn peak(&self) -> usize {
+        self.peak
+    }
+
+    pub fn free(&self) -> usize {
+        self.capacity - self.used
+    }
+
+    /// Reserve `bytes`; fails when over capacity (the caller then chooses
+    /// the out-of-core path).
+    pub fn alloc(&mut self, bytes: usize) -> Result<(), DeviceOom> {
+        if bytes > self.free() {
+            return Err(DeviceOom { requested: bytes, free: self.free(), capacity: self.capacity });
+        }
+        self.used += bytes;
+        self.peak = self.peak.max(self.used);
+        Ok(())
+    }
+
+    /// Release `bytes` (saturating: double-free accounting bugs surface as
+    /// test failures on `used`, not as panics in release runs).
+    pub fn release(&mut self, bytes: usize) {
+        self.used = self.used.saturating_sub(bytes);
+    }
+}
+
+/// One simulated GPU: identity, memory, a simulated clock and counters.
+#[derive(Clone, Debug)]
+pub struct Device {
+    pub id: usize,
+    pub mem: DeviceMemory,
+    /// Simulated seconds of device-side work since reset.
+    pub clock_s: f64,
+    /// Kernel invocations charged to this device.
+    pub kernels_launched: usize,
+    /// Bytes streamed host→device (out-of-core page-ins).
+    pub h2d_bytes: usize,
+    /// Bytes moved over the interconnect (ring swap and reductions).
+    pub p2p_bytes: usize,
+}
+
+impl Device {
+    pub fn new(id: usize, mem_capacity: usize) -> Self {
+        Device {
+            id,
+            mem: DeviceMemory::new(mem_capacity),
+            clock_s: 0.0,
+            kernels_launched: 0,
+            h2d_bytes: 0,
+            p2p_bytes: 0,
+        }
+    }
+
+    /// Charge one kernel of `seconds` to the simulated clock.
+    pub fn run_kernel(&mut self, seconds: f64) {
+        self.clock_s += seconds;
+        self.kernels_launched += 1;
+    }
+
+    /// Charge a host→device transfer.
+    pub fn stream_in(&mut self, bytes: usize, seconds: f64) {
+        self.h2d_bytes += bytes;
+        self.clock_s += seconds;
+    }
+
+    /// Charge a peer transfer.
+    pub fn p2p(&mut self, bytes: usize, seconds: f64) {
+        self.p2p_bytes += bytes;
+        self.clock_s += seconds;
+    }
+
+    /// Barrier: jump this device's clock to the fleet-wide sync time.
+    pub fn sync_to(&mut self, t: f64) {
+        if t > self.clock_s {
+            self.clock_s = t;
+        }
+    }
+}
+
+/// Fleet-wide barrier time (max of all clocks).
+pub fn barrier(devices: &mut [Device]) -> f64 {
+    let t = devices.iter().map(|d| d.clock_s).fold(0.0, f64::max);
+    for d in devices {
+        d.sync_to(t);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn memory_alloc_release() {
+        let mut m = DeviceMemory::new(100);
+        m.alloc(60).unwrap();
+        assert_eq!(m.free(), 40);
+        assert!(m.alloc(50).is_err());
+        m.release(30);
+        m.alloc(50).unwrap();
+        assert_eq!(m.used(), 80);
+        assert_eq!(m.peak(), 80);
+    }
+
+    #[test]
+    fn oom_reports_sizes() {
+        let mut m = DeviceMemory::new(10);
+        let err = m.alloc(11).unwrap_err();
+        assert_eq!(err.requested, 11);
+        assert_eq!(err.capacity, 10);
+    }
+
+    #[test]
+    fn barrier_aligns_clocks() {
+        let mut devs = vec![Device::new(0, 1 << 20), Device::new(1, 1 << 20)];
+        devs[0].run_kernel(1.0);
+        devs[1].run_kernel(3.0);
+        let t = barrier(&mut devs);
+        assert_eq!(t, 3.0);
+        assert_eq!(devs[0].clock_s, 3.0);
+        assert_eq!(devs[0].kernels_launched, 1);
+    }
+
+    #[test]
+    fn counters_accumulate() {
+        let mut d = Device::new(0, 1 << 20);
+        d.stream_in(1000, 0.1);
+        d.p2p(500, 0.05);
+        d.run_kernel(0.2);
+        assert_eq!(d.h2d_bytes, 1000);
+        assert_eq!(d.p2p_bytes, 500);
+        assert!((d.clock_s - 0.35).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,19 @@
+//! Simulated multi-GPU substrate.
+//!
+//! The paper runs on an 8× Tesla V100 node with a heterogeneous NVLink
+//! mesh. Offline we have CPU-PJRT only, so the fleet is simulated
+//! (DESIGN.md §5): each device is a worker with its own memory budget and a
+//! **simulated clock** advanced by a calibrated V100 cost model
+//! ([`model`]), while inter-device traffic is charged against a DGX-1-style
+//! hybrid topology ([`topology`]). The coordinator's *decisions* (partition
+//! sizes, sync structure, ring-swap schedule, out-of-core chunking) are
+//! driven by bytes and barriers, which the simulation accounts exactly;
+//! wallclock on the host is measured independently.
+
+pub mod device;
+pub mod model;
+pub mod topology;
+
+pub use device::{Device, DeviceMemory};
+pub use model::{CostModel, KernelCost};
+pub use topology::{LinkKind, Topology};

@@ -1,0 +1,214 @@
+//! Inter-GPU interconnect topology (paper §IV-C).
+//!
+//! V100 DGX-1-style systems have a *heterogeneous* NVLink mesh: some GPU
+//! pairs are connected by one or two NVLink bricks, others not at all — in
+//! which case traffic routes through PCIe/QPI at ≈10× lower bandwidth. The
+//! paper attributes the multi-GPU slowdown on small matrices exactly to
+//! those PCIe pairs, so reproducing Fig. 3a's outliers requires modeling
+//! the asymmetry, not just a flat per-link cost.
+
+/// Kind of the best link between a device pair.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LinkKind {
+    /// Same device (no transfer).
+    Local,
+    /// Double NVLink brick (2× bandwidth).
+    NvLink2,
+    /// Single NVLink brick.
+    NvLink1,
+    /// No direct link: host PCIe hop.
+    Pcie,
+}
+
+/// Interconnect description for a fleet of `n` devices.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    n: usize,
+    /// Row-major `n×n` link matrix.
+    links: Vec<LinkKind>,
+    /// Bandwidths in GB/s per link kind.
+    pub nvlink2_gbs: f64,
+    pub nvlink1_gbs: f64,
+    pub pcie_gbs: f64,
+    /// Per-transfer latency in seconds (launch + handshake).
+    pub latency_s: f64,
+}
+
+impl Topology {
+    /// DGX-1(V)-like hybrid cube-mesh for up to 8 GPUs.
+    ///
+    /// NVLink pairs follow the published DGX-1 V100 topology [Li et al.,
+    /// TPDS'19]: each GPU has 6 bricks; the 4-GPU cliques {0-3} and {4-7}
+    /// are fully connected, plus cross links (0,4) (1,5) (2,6) (3,7) —
+    /// pairs like (0,5) or (1,7) have **no** direct link and fall back to
+    /// PCIe. Smaller fleets take the leading sub-square.
+    pub fn dgx1(n: usize) -> Topology {
+        assert!(n >= 1 && n <= 8, "DGX-1 topology models 1..=8 GPUs");
+        let full: [[u8; 8]; 8] = {
+            // 0 = none, 1 = single brick, 2 = double brick.
+            // Double bricks on the "backbone" pairs (0,3)(1,2)(4,7)(5,6)
+            // and the cube edges (0,4)(1,5)(2,6)(3,7) get singles.
+            let mut m = [[0u8; 8]; 8];
+            let set = |m: &mut [[u8; 8]; 8], a: usize, b: usize, v: u8| {
+                m[a][b] = v;
+                m[b][a] = v;
+            };
+            // clique {0..3}
+            set(&mut m, 0, 1, 1);
+            set(&mut m, 0, 2, 1);
+            set(&mut m, 0, 3, 2);
+            set(&mut m, 1, 2, 2);
+            set(&mut m, 1, 3, 1);
+            set(&mut m, 2, 3, 1);
+            // clique {4..7}
+            set(&mut m, 4, 5, 1);
+            set(&mut m, 4, 6, 1);
+            set(&mut m, 4, 7, 2);
+            set(&mut m, 5, 6, 2);
+            set(&mut m, 5, 7, 1);
+            set(&mut m, 6, 7, 1);
+            // cube edges
+            set(&mut m, 0, 4, 1);
+            set(&mut m, 1, 5, 1);
+            set(&mut m, 2, 6, 1);
+            set(&mut m, 3, 7, 1);
+            m
+        };
+        let mut links = vec![LinkKind::Pcie; n * n];
+        for a in 0..n {
+            for b in 0..n {
+                links[a * n + b] = if a == b {
+                    LinkKind::Local
+                } else {
+                    match full[a][b] {
+                        2 => LinkKind::NvLink2,
+                        1 => LinkKind::NvLink1,
+                        _ => LinkKind::Pcie,
+                    }
+                };
+            }
+        }
+        Topology {
+            n,
+            links,
+            nvlink2_gbs: 50.0, // 2 bricks × 25 GB/s unidirectional
+            nvlink1_gbs: 25.0,
+            pcie_gbs: 2.5, // effective PCIe3 x16 through host with contention (≈10× slower, paper §IV-C)
+            latency_s: 10e-6,
+        }
+    }
+
+    /// Fully-NVLink (NVSwitch-like) topology — the paper's future-work
+    /// hypothesis; used by the ablation bench.
+    pub fn nvswitch(n: usize) -> Topology {
+        let mut t = Topology::dgx1(n.min(8));
+        for a in 0..t.n {
+            for b in 0..t.n {
+                if a != b {
+                    t.links[a * t.n + b] = LinkKind::NvLink2;
+                }
+            }
+        }
+        t
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    pub fn link(&self, a: usize, b: usize) -> LinkKind {
+        self.links[a * self.n + b]
+    }
+
+    /// Bandwidth of the pair's best path, GB/s.
+    pub fn bandwidth_gbs(&self, a: usize, b: usize) -> f64 {
+        match self.link(a, b) {
+            LinkKind::Local => f64::INFINITY,
+            LinkKind::NvLink2 => self.nvlink2_gbs,
+            LinkKind::NvLink1 => self.nvlink1_gbs,
+            LinkKind::Pcie => self.pcie_gbs,
+        }
+    }
+
+    /// Modeled seconds to move `bytes` from device `a` to device `b`.
+    pub fn transfer_seconds(&self, a: usize, b: usize, bytes: usize) -> f64 {
+        if a == b || bytes == 0 {
+            return 0.0;
+        }
+        self.latency_s + bytes as f64 / (self.bandwidth_gbs(a, b) * 1e9)
+    }
+
+    /// Does any pair in the fleet route over PCIe? (Fig. 3a's outlier
+    /// condition — true for DGX-1 fleets of ≥ 5 GPUs, and for 4-GPU fleets
+    /// only if the subset spans both cliques.)
+    pub fn has_pcie_pair(&self) -> bool {
+        (0..self.n).any(|a| (0..self.n).any(|b| self.link(a, b) == LinkKind::Pcie))
+    }
+
+    /// A ring order maximizing NVLink usage, the way NCCL builds its rings.
+    ///
+    /// The DGX-1 V100 mesh contains a Hamiltonian NVLink cycle
+    /// `0-1-2-3-7-6-5-4-0`; fleets of ≤ 4 use the clique directly. For 5–7
+    /// devices no all-NVLink cycle exists (the heterogeneity the paper
+    /// blames for its Fig. 3a outliers) and the order simply skips missing
+    /// members, accepting PCIe hops.
+    pub fn ring_order(&self) -> Vec<usize> {
+        const HAM: [usize; 8] = [0, 1, 2, 3, 7, 6, 5, 4];
+        HAM.iter().copied().filter(|&d| d < self.n).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dgx1_is_symmetric() {
+        let t = Topology::dgx1(8);
+        for a in 0..8 {
+            for b in 0..8 {
+                assert_eq!(t.link(a, b), t.link(b, a));
+            }
+            assert_eq!(t.link(a, a), LinkKind::Local);
+        }
+    }
+
+    #[test]
+    fn four_gpu_clique_has_no_pcie() {
+        assert!(!Topology::dgx1(4).has_pcie_pair());
+    }
+
+    #[test]
+    fn eight_gpu_mesh_has_pcie_pairs() {
+        let t = Topology::dgx1(8);
+        assert!(t.has_pcie_pair());
+        // (0,5) is a known PCIe pair in the hybrid cube-mesh.
+        assert_eq!(t.link(0, 5), LinkKind::Pcie);
+        assert_eq!(t.link(0, 4), LinkKind::NvLink1);
+    }
+
+    #[test]
+    fn pcie_is_about_10x_slower_than_nvlink() {
+        let t = Topology::dgx1(8);
+        let ratio = t.nvlink1_gbs / t.pcie_gbs;
+        assert!(ratio >= 8.0 && ratio <= 12.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn transfer_time_scales_with_bytes() {
+        let t = Topology::dgx1(2);
+        let t1 = t.transfer_seconds(0, 1, 1 << 20);
+        let t2 = t.transfer_seconds(0, 1, 1 << 24);
+        assert!(t2 > t1 * 10.0);
+        assert_eq!(t.transfer_seconds(0, 0, 1 << 30), 0.0);
+    }
+
+    #[test]
+    fn nvswitch_removes_pcie() {
+        assert!(!Topology::nvswitch(8).has_pcie_pair());
+    }
+}

@@ -1,0 +1,374 @@
+//! Phase 2: cyclic Jacobi eigensolver for the K×K tridiagonal matrix.
+//!
+//! The Lanczos phase reduces the n×n problem to a symmetric tridiagonal
+//! `T = tridiag(β, α, β)` of size K×K (K ≈ 8–24). The paper runs this phase
+//! on the **CPU** (§III-B): a 24×24 problem cannot saturate a GPU, and the
+//! kernel-launch latency dominates. We do the same — this module is plain
+//! rust, executed by the coordinator after the Lanczos loop.
+//!
+//! The classic cyclic Jacobi method sweeps all off-diagonal (p,q) pairs,
+//! annihilating each with a Givens rotation, and converges quadratically
+//! for symmetric matrices. Eigenvectors accumulate in `V` (started at I).
+//! Both f64 and f32 variants exist because the paper's precision configs
+//! (FFF/FDF vs DDD) differ in the Jacobi dtype too.
+
+use crate::precision::Storage;
+
+/// Eigen decomposition of a small symmetric matrix.
+#[derive(Clone, Debug)]
+pub struct SmallEig {
+    /// Eigenvalues, sorted by decreasing |λ| (the Top-K convention).
+    pub values: Vec<f64>,
+    /// `values.len()` eigenvectors, each of length K, matching `values`.
+    pub vectors: Vec<Vec<f64>>,
+    /// Number of full sweeps performed.
+    pub sweeps: usize,
+}
+
+/// Dense symmetric matrix in row-major `k×k` storage (small K only).
+#[derive(Clone, Debug)]
+pub struct DenseSym {
+    pub k: usize,
+    pub a: Vec<f64>,
+}
+
+impl DenseSym {
+    pub fn zeros(k: usize) -> Self {
+        DenseSym { k, a: vec![0.0; k * k] }
+    }
+
+    /// Build the Lanczos tridiagonal `T` from the α (diagonal, len K) and
+    /// β (off-diagonal, len K-1) coefficient vectors.
+    pub fn from_tridiagonal(alpha: &[f64], beta: &[f64]) -> Self {
+        let k = alpha.len();
+        assert_eq!(beta.len() + 1, k, "beta must have K-1 entries");
+        let mut m = DenseSym::zeros(k);
+        for i in 0..k {
+            m.set(i, i, alpha[i]);
+            if i + 1 < k {
+                m.set(i, i + 1, beta[i]);
+                m.set(i + 1, i, beta[i]);
+            }
+        }
+        m
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f64 {
+        self.a[r * self.k + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f64) {
+        self.a[r * self.k + c] = v;
+    }
+
+    /// Sum of squared off-diagonal entries (the Jacobi convergence measure).
+    pub fn off_diag_norm2(&self) -> f64 {
+        let mut s = 0.0;
+        for r in 0..self.k {
+            for c in 0..self.k {
+                if r != c {
+                    s += self.get(r, c) * self.get(r, c);
+                }
+            }
+        }
+        s
+    }
+}
+
+/// Solve the symmetric eigenproblem with cyclic Jacobi at the requested
+/// precision. `Storage::F32` performs every rotation in f32 arithmetic,
+/// faithfully emulating the paper's F-Jacobi configurations.
+pub fn jacobi_eigen(m: &DenseSym, precision: Storage, tol: f64, max_sweeps: usize) -> SmallEig {
+    match precision {
+        Storage::F64 => jacobi_eigen_f64(m, tol, max_sweeps),
+        Storage::F32 => jacobi_eigen_f32(m, tol as f32, max_sweeps),
+    }
+}
+
+/// f64 cyclic Jacobi.
+pub fn jacobi_eigen_f64(m: &DenseSym, tol: f64, max_sweeps: usize) -> SmallEig {
+    let k = m.k;
+    let mut a = m.a.clone();
+    let mut v = identity(k);
+    let mut sweeps = 0;
+    while sweeps < max_sweeps {
+        let off: f64 = off2(&a, k);
+        if off <= tol * tol {
+            break;
+        }
+        for p in 0..k {
+            for q in (p + 1)..k {
+                rotate(&mut a, &mut v, k, p, q);
+            }
+        }
+        sweeps += 1;
+    }
+    collect(a, v, k, sweeps)
+}
+
+/// f32 cyclic Jacobi (reduced-precision phase-2 of FFF/FDF).
+pub fn jacobi_eigen_f32(m: &DenseSym, tol: f32, max_sweeps: usize) -> SmallEig {
+    let k = m.k;
+    let mut a: Vec<f32> = m.a.iter().map(|&x| x as f32).collect();
+    let mut v: Vec<f32> = identity(k).iter().map(|&x| x as f32).collect();
+    let mut sweeps = 0;
+    while sweeps < max_sweeps {
+        let off: f32 = {
+            let mut s = 0.0f32;
+            for r in 0..k {
+                for c in 0..k {
+                    if r != c {
+                        s += a[r * k + c] * a[r * k + c];
+                    }
+                }
+            }
+            s
+        };
+        if off <= tol * tol {
+            break;
+        }
+        for p in 0..k {
+            for q in (p + 1)..k {
+                rotate_f32(&mut a, &mut v, k, p, q);
+            }
+        }
+        sweeps += 1;
+    }
+    let a64: Vec<f64> = a.iter().map(|&x| x as f64).collect();
+    let v64: Vec<f64> = v.iter().map(|&x| x as f64).collect();
+    collect(a64, v64, k, sweeps)
+}
+
+fn identity(k: usize) -> Vec<f64> {
+    let mut v = vec![0.0; k * k];
+    for i in 0..k {
+        v[i * k + i] = 1.0;
+    }
+    v
+}
+
+fn off2(a: &[f64], k: usize) -> f64 {
+    let mut s = 0.0;
+    for r in 0..k {
+        for c in 0..k {
+            if r != c {
+                s += a[r * k + c] * a[r * k + c];
+            }
+        }
+    }
+    s
+}
+
+/// One Givens rotation annihilating a[p,q] (f64).
+fn rotate(a: &mut [f64], v: &mut [f64], k: usize, p: usize, q: usize) {
+    let apq = a[p * k + q];
+    if apq == 0.0 {
+        return;
+    }
+    let app = a[p * k + p];
+    let aqq = a[q * k + q];
+    let theta = (aqq - app) / (2.0 * apq);
+    // stable tangent (Rutishauser)
+    let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+    let c = 1.0 / (t * t + 1.0).sqrt();
+    let s = t * c;
+    for i in 0..k {
+        let aip = a[i * k + p];
+        let aiq = a[i * k + q];
+        a[i * k + p] = c * aip - s * aiq;
+        a[i * k + q] = s * aip + c * aiq;
+    }
+    for j in 0..k {
+        let apj = a[p * k + j];
+        let aqj = a[q * k + j];
+        a[p * k + j] = c * apj - s * aqj;
+        a[q * k + j] = s * apj + c * aqj;
+    }
+    for i in 0..k {
+        let vip = v[i * k + p];
+        let viq = v[i * k + q];
+        v[i * k + p] = c * vip - s * viq;
+        v[i * k + q] = s * vip + c * viq;
+    }
+}
+
+/// One Givens rotation in f32 arithmetic.
+fn rotate_f32(a: &mut [f32], v: &mut [f32], k: usize, p: usize, q: usize) {
+    let apq = a[p * k + q];
+    if apq == 0.0 {
+        return;
+    }
+    let app = a[p * k + p];
+    let aqq = a[q * k + q];
+    let theta = (aqq - app) / (2.0 * apq);
+    let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+    let c = 1.0 / (t * t + 1.0).sqrt();
+    let s = t * c;
+    for i in 0..k {
+        let aip = a[i * k + p];
+        let aiq = a[i * k + q];
+        a[i * k + p] = c * aip - s * aiq;
+        a[i * k + q] = s * aip + c * aiq;
+    }
+    for j in 0..k {
+        let apj = a[p * k + j];
+        let aqj = a[q * k + j];
+        a[p * k + j] = c * apj - s * aqj;
+        a[q * k + j] = s * apj + c * aqj;
+    }
+    for i in 0..k {
+        let vip = v[i * k + p];
+        let viq = v[i * k + q];
+        v[i * k + p] = c * vip - s * viq;
+        v[i * k + q] = s * vip + c * viq;
+    }
+}
+
+/// Extract (λ, V) sorted by decreasing |λ|.
+fn collect(a: Vec<f64>, v: Vec<f64>, k: usize, sweeps: usize) -> SmallEig {
+    let mut order: Vec<usize> = (0..k).collect();
+    order.sort_by(|&i, &j| {
+        a[j * k + j]
+            .abs()
+            .partial_cmp(&a[i * k + i].abs())
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    let values: Vec<f64> = order.iter().map(|&i| a[i * k + i]).collect();
+    let vectors: Vec<Vec<f64>> = order
+        .iter()
+        .map(|&j| (0..k).map(|i| v[i * k + j]).collect())
+        .collect();
+    SmallEig { values, vectors, sweeps }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reconstruct(eig: &SmallEig, k: usize) -> Vec<f64> {
+        // A' = V Λ Vᵀ
+        let mut a = vec![0.0; k * k];
+        for (lam, vec) in eig.values.iter().zip(&eig.vectors) {
+            for r in 0..k {
+                for c in 0..k {
+                    a[r * k + c] += lam * vec[r] * vec[c];
+                }
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn diagonal_matrix_is_fixed_point() {
+        let mut m = DenseSym::zeros(3);
+        m.set(0, 0, 3.0);
+        m.set(1, 1, -5.0);
+        m.set(2, 2, 1.0);
+        let e = jacobi_eigen_f64(&m, 1e-14, 50);
+        assert_eq!(e.values, vec![-5.0, 3.0, 1.0]); // |λ| descending
+    }
+
+    #[test]
+    fn two_by_two_analytic() {
+        // [[2,1],[1,2]] → λ = 3, 1 with vectors (1,1)/√2, (1,-1)/√2.
+        let mut m = DenseSym::zeros(2);
+        m.set(0, 0, 2.0);
+        m.set(0, 1, 1.0);
+        m.set(1, 0, 1.0);
+        m.set(1, 1, 2.0);
+        let e = jacobi_eigen_f64(&m, 1e-15, 50);
+        assert!((e.values[0] - 3.0).abs() < 1e-12);
+        assert!((e.values[1] - 1.0).abs() < 1e-12);
+        let v0 = &e.vectors[0];
+        assert!((v0[0].abs() - std::f64::consts::FRAC_1_SQRT_2).abs() < 1e-10);
+        assert!((v0[0] - v0[1]).abs() < 1e-10);
+    }
+
+    #[test]
+    fn tridiagonal_toeplitz_matches_closed_form() {
+        let k = 16;
+        let alpha = vec![2.0; k];
+        let beta = vec![-1.0; k - 1];
+        let t = DenseSym::from_tridiagonal(&alpha, &beta);
+        let e = jacobi_eigen_f64(&t, 1e-14, 100);
+        let analytic = crate::sparse::gen::tridiag_toeplitz_eigs(k, 2.0, -1.0);
+        for (got, want) in e.values.iter().zip(&analytic) {
+            assert!((got - want).abs() < 1e-10, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn reconstruction_error_small() {
+        // Random symmetric 24×24 (the paper's typical T size).
+        let k = 24;
+        let mut rng = crate::rng::Rng::new(12);
+        let mut m = DenseSym::zeros(k);
+        for r in 0..k {
+            for c in r..k {
+                let x = 2.0 * rng.f64() - 1.0;
+                m.set(r, c, x);
+                m.set(c, r, x);
+            }
+        }
+        let e = jacobi_eigen_f64(&m, 1e-14, 100);
+        let a2 = reconstruct(&e, k);
+        let err: f64 = m
+            .a
+            .iter()
+            .zip(&a2)
+            .map(|(x, y)| (x - y) * (x - y))
+            .sum::<f64>()
+            .sqrt();
+        assert!(err < 1e-10, "reconstruction err {err}");
+    }
+
+    #[test]
+    fn eigenvectors_are_orthonormal() {
+        let k = 12;
+        let alpha: Vec<f64> = (0..k).map(|i| (i as f64 * 0.77).sin() + 2.0).collect();
+        let beta: Vec<f64> = (0..k - 1).map(|i| 0.3 + 0.1 * (i as f64).cos()).collect();
+        let t = DenseSym::from_tridiagonal(&alpha, &beta);
+        let e = jacobi_eigen_f64(&t, 1e-14, 100);
+        for i in 0..k {
+            for j in 0..k {
+                let dot: f64 = e.vectors[i]
+                    .iter()
+                    .zip(&e.vectors[j])
+                    .map(|(a, b)| a * b)
+                    .sum();
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((dot - want).abs() < 1e-10, "({i},{j}) dot {dot}");
+            }
+        }
+    }
+
+    #[test]
+    fn f32_variant_close_to_f64_but_less_accurate() {
+        let k = 16;
+        let alpha: Vec<f64> = (0..k).map(|i| 1.0 + 0.1 * i as f64).collect();
+        let beta = vec![0.25; k - 1];
+        let t = DenseSym::from_tridiagonal(&alpha, &beta);
+        let e64 = jacobi_eigen(&t, Storage::F64, 1e-14, 100);
+        let e32 = jacobi_eigen(&t, Storage::F32, 1e-7, 100);
+        for (a, b) in e64.values.iter().zip(&e32.values) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+        // f32 should not be bitwise identical on a nontrivial problem.
+        let any_diff = e64
+            .values
+            .iter()
+            .zip(&e32.values)
+            .any(|(a, b)| (a - b).abs() > 1e-12);
+        assert!(any_diff);
+    }
+
+    #[test]
+    fn handles_k_equals_one() {
+        let t = DenseSym::from_tridiagonal(&[7.5], &[]);
+        let e = jacobi_eigen_f64(&t, 1e-14, 10);
+        assert_eq!(e.values, vec![7.5]);
+        assert_eq!(e.vectors[0], vec![1.0]);
+    }
+}

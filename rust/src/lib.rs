@@ -1,0 +1,41 @@
+//! # topk-eigen
+//!
+//! A mixed-precision, multi-GPU Top-K sparse eigensolver — a full-system
+//! reproduction of *"A Mixed Precision, Multi-GPU Design for Large-scale
+//! Top-K Sparse Eigenproblems"* (Sgherzi, Parravicini, Santambrogio, 2022).
+//!
+//! The system is a two-phase solver:
+//!
+//! 1. **Lanczos** ([`coordinator`]) builds a K-dimensional Krylov subspace of
+//!    a sparse symmetric matrix, partitioned across a fleet of (simulated)
+//!    GPUs with nnz-balanced partitions, ring-swapped `v_i` replicas and two
+//!    global synchronization points per iteration (α, β).
+//! 2. **Jacobi** ([`jacobi`]) diagonalizes the resulting K×K tridiagonal
+//!    matrix on the CPU and projects the eigenvectors back through the
+//!    Lanczos basis.
+//!
+//! The compute hot path (ELL SpMV, reductions, vector updates) executes as
+//! AOT-compiled XLA artifacts, lowered once from JAX/Pallas at build time
+//! (`make artifacts`) and loaded by [`runtime`] through the PJRT C API.
+//! Python never runs on the request path.
+//!
+//! See `DESIGN.md` for the complete system inventory and the experiment
+//! index mapping every table/figure of the paper to a bench target.
+
+pub mod bench_util;
+pub mod baseline;
+pub mod cli;
+pub mod coordinator;
+pub mod gpu;
+pub mod jacobi;
+pub mod linalg;
+pub mod metrics;
+pub mod precision;
+pub mod prop;
+pub mod rng;
+pub mod runtime;
+pub mod sparse;
+
+pub use coordinator::{EigenSolution, SolverConfig, TopKSolver};
+pub use precision::PrecisionConfig;
+pub use sparse::{Coo, Csr, Ell};

@@ -1,0 +1,247 @@
+//! Mixed-precision dense vector kernels (host side).
+//!
+//! These are the host-side reference implementations of the device kernels:
+//! the coordinator uses them for global reductions across device partials
+//! and for validation; the CPU baseline uses them directly. Each op exists
+//! in an `f64`-accumulation and an `f32`-accumulation variant mirroring the
+//! device precision configs (see [`crate::precision`]).
+
+/// Storage-precision vector: f32 or f64 payload.
+///
+/// Lanczos vectors live in the configured storage precision. `DVec` keeps
+/// the coordinator generic without trait gymnastics: the hot loops run on
+/// the device anyway, so the host-side enum dispatch is not on any critical
+/// path.
+#[derive(Clone, Debug)]
+pub enum DVec {
+    F32(Vec<f32>),
+    F64(Vec<f64>),
+}
+
+impl DVec {
+    pub fn zeros(n: usize, f64_storage: bool) -> Self {
+        if f64_storage {
+            DVec::F64(vec![0.0; n])
+        } else {
+            DVec::F32(vec![0.0; n])
+        }
+    }
+
+    pub fn from_f64(data: &[f64], f64_storage: bool) -> Self {
+        if f64_storage {
+            DVec::F64(data.to_vec())
+        } else {
+            DVec::F32(data.iter().map(|&v| v as f32).collect())
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            DVec::F32(v) => v.len(),
+            DVec::F64(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn is_f64(&self) -> bool {
+        matches!(self, DVec::F64(_))
+    }
+
+    /// Widen to f64 (copies).
+    pub fn to_f64(&self) -> Vec<f64> {
+        match self {
+            DVec::F32(v) => v.iter().map(|&x| x as f64).collect(),
+            DVec::F64(v) => v.clone(),
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> f64 {
+        match self {
+            DVec::F32(v) => v[i] as f64,
+            DVec::F64(v) => v[i],
+        }
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, x: f64) {
+        match self {
+            DVec::F32(v) => v[i] = x as f32,
+            DVec::F64(v) => v[i] = x,
+        }
+    }
+
+    /// Bytes of payload (device-memory accounting).
+    pub fn bytes(&self) -> usize {
+        match self {
+            DVec::F32(v) => v.len() * 4,
+            DVec::F64(v) => v.len() * 8,
+        }
+    }
+}
+
+/// `Σ xᵢ·yᵢ` with f64 accumulation regardless of storage precision.
+pub fn dot_f64(x: &[f64], y: &[f64]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    let mut acc = 0.0f64;
+    for (a, b) in x.iter().zip(y) {
+        acc += a * b;
+    }
+    acc
+}
+
+/// `Σ xᵢ·yᵢ` accumulated in f32 (emulates the FFF device reduction).
+pub fn dot_f32(x: &[f64], y: &[f64]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    let mut acc = 0.0f32;
+    for (a, b) in x.iter().zip(y) {
+        acc += (*a as f32) * (*b as f32);
+    }
+    acc as f64
+}
+
+/// Kahan-compensated dot product — oracle for precision tests.
+pub fn dot_kahan(x: &[f64], y: &[f64]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    let mut sum = 0.0f64;
+    let mut comp = 0.0f64;
+    for (a, b) in x.iter().zip(y) {
+        let term = a * b - comp;
+        let t = sum + term;
+        comp = (t - sum) - term;
+        sum = t;
+    }
+    sum
+}
+
+/// `‖x‖₂` with f64 accumulation.
+pub fn norm2_f64(x: &[f64]) -> f64 {
+    dot_f64(x, x).sqrt()
+}
+
+/// `‖x‖₂` with f32 accumulation.
+pub fn norm2_f32(x: &[f64]) -> f64 {
+    dot_f32(x, x).sqrt()
+}
+
+/// `y ← y + a·x`.
+pub fn axpy(a: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += a * xi;
+    }
+}
+
+/// `x ← x / s`.
+pub fn scale_inv(x: &mut [f64], s: f64) {
+    debug_assert!(s != 0.0);
+    let inv = 1.0 / s;
+    for xi in x.iter_mut() {
+        *xi *= inv;
+    }
+}
+
+/// L2-normalize in place; returns the original norm.
+pub fn normalize(x: &mut [f64]) -> f64 {
+    let n = norm2_f64(x);
+    if n > 0.0 {
+        scale_inv(x, n);
+    }
+    n
+}
+
+/// Dense GEMV `y = Aᵀ·x` where `A` is column-major `n×k` (k small):
+/// used for the eigenvector projection `Y = 𝒱 · V` row blocks.
+pub fn small_gemm(v_basis: &[Vec<f64>], coeff: &[f64], k: usize, out: &mut [f64]) {
+    // out[r] = Σ_j basis_j[r] * coeff[j], coeff is one column of V (len k).
+    debug_assert_eq!(coeff.len(), k);
+    debug_assert!(v_basis.len() >= k);
+    for o in out.iter_mut() {
+        *o = 0.0;
+    }
+    for j in 0..k {
+        axpy(coeff[j], &v_basis[j][..out.len()], out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn rand_vec(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        let mut v = vec![0.0; n];
+        rng.fill_uniform(&mut v);
+        v
+    }
+
+    #[test]
+    fn dot_matches_kahan_in_f64() {
+        let x = rand_vec(10_000, 1);
+        let y = rand_vec(10_000, 2);
+        let plain = dot_f64(&x, &y);
+        let kahan = dot_kahan(&x, &y);
+        assert!((plain - kahan).abs() < 1e-9 * kahan.abs().max(1.0));
+    }
+
+    #[test]
+    fn f32_accumulation_is_measurably_worse() {
+        // On a long sum of same-sign values, f32 accumulation loses digits;
+        // this gap is exactly what Fig. 4 measures at system level.
+        let x: Vec<f64> = (0..200_000).map(|i| 1.0 + (i % 3) as f64 * 1e-7).collect();
+        let y = vec![1.0; 200_000];
+        let exact = dot_kahan(&x, &y);
+        let err64 = (dot_f64(&x, &y) - exact).abs();
+        let err32 = (dot_f32(&x, &y) - exact).abs();
+        assert!(err32 > err64 * 100.0, "err32 {err32} vs err64 {err64}");
+    }
+
+    #[test]
+    fn axpy_and_scale() {
+        let x = vec![1.0, 2.0, 3.0];
+        let mut y = vec![10.0, 20.0, 30.0];
+        axpy(-2.0, &x, &mut y);
+        assert_eq!(y, vec![8.0, 16.0, 24.0]);
+        scale_inv(&mut y, 8.0);
+        assert_eq!(y, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn normalize_unit_norm() {
+        let mut x = rand_vec(1000, 3);
+        let n0 = normalize(&mut x);
+        assert!(n0 > 0.0);
+        assert!((norm2_f64(&x) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dvec_storage_roundtrip() {
+        let data = vec![1.5, -2.25, 3.125];
+        let v32 = DVec::from_f64(&data, false);
+        let v64 = DVec::from_f64(&data, true);
+        assert_eq!(v32.to_f64(), data); // exactly representable values
+        assert_eq!(v64.to_f64(), data);
+        assert_eq!(v32.bytes(), 12);
+        assert_eq!(v64.bytes(), 24);
+    }
+
+    #[test]
+    fn dvec_f32_quantizes() {
+        let data = vec![1.0 + 1e-9];
+        let v32 = DVec::from_f64(&data, false);
+        assert_eq!(v32.get(0), 1.0); // 1+1e-9 rounds to 1.0f32
+    }
+
+    #[test]
+    fn small_gemm_matches_naive() {
+        let basis = vec![vec![1.0, 0.0, 2.0], vec![0.0, 1.0, -1.0]];
+        let coeff = vec![3.0, 4.0];
+        let mut out = vec![0.0; 3];
+        small_gemm(&basis, &coeff, 2, &mut out);
+        assert_eq!(out, vec![3.0, 4.0, 2.0]);
+    }
+}

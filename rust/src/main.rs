@@ -1,0 +1,259 @@
+//! `topk-eigen` — CLI launcher for the mixed-precision multi-GPU Top-K
+//! sparse eigensolver.
+//!
+//! ```text
+//! topk-eigen solve  --matrix path.mtx | --suite WK [--scale 1.0] --k 8
+//!                   [--precision FDF] [--devices 1] [--reorth full]
+//!                   [--backend pjrt|hostsim] [--artifacts artifacts]
+//!                   [--device-mem-mb 32] [--seed N] [--baseline]
+//! topk-eigen generate --suite KRON --scale 1.0 --out kron.mtx
+//! topk-eigen suite                       # list Table I stand-ins
+//! topk-eigen info   [--artifacts artifacts]
+//! ```
+
+use std::path::{Path, PathBuf};
+use topk_eigen::baseline::{solve_topk_cpu, BaselineConfig};
+use topk_eigen::cli;
+use topk_eigen::coordinator::{ReorthMode, SolverConfig, TopKSolver, TopologyKind};
+use topk_eigen::metrics;
+use topk_eigen::precision::PrecisionConfig;
+use topk_eigen::runtime::Manifest;
+use topk_eigen::sparse::{mmio, suite, Csr};
+
+fn main() {
+    let args = cli::from_env();
+    let cmd = args.positional().first().map(|s| s.as_str()).unwrap_or("help");
+    let code = match cmd {
+        "solve" => cmd_solve(&args),
+        "generate" => cmd_generate(&args),
+        "suite" => cmd_suite(),
+        "info" => cmd_info(&args),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            0
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n");
+            print_usage();
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_usage() {
+    println!(
+        "topk-eigen — mixed-precision multi-GPU Top-K sparse eigensolver\n\
+         \n\
+         USAGE:\n\
+         \x20 topk-eigen solve    --suite <ID> | --matrix <file.mtx> [options]\n\
+         \x20 topk-eigen generate --suite <ID> --out <file.mtx> [--scale S]\n\
+         \x20 topk-eigen suite\n\
+         \x20 topk-eigen info     [--artifacts <dir>]\n\
+         \n\
+         SOLVE OPTIONS:\n\
+         \x20 --k <n>             eigencomponents (default 8)\n\
+         \x20 --precision <cfg>   FFF | FDF | DDD (default FDF)\n\
+         \x20 --devices <g>       simulated GPUs, 1..=8 (default 1)\n\
+         \x20 --reorth <mode>     none | alternating | full (default full)\n\
+         \x20 --backend <b>       hostsim | pjrt (default hostsim)\n\
+         \x20 --artifacts <dir>   AOT artifact dir for pjrt (default artifacts)\n\
+         \x20 --scale <s>         suite scale factor (default 1.0)\n\
+         \x20 --device-mem-mb <m> per-device memory budget (default 32)\n\
+         \x20 --topology <t>      dgx1 | nvswitch (default dgx1)\n\
+         \x20 --seed <n>          RNG seed (default fixed)\n\
+         \x20 --baseline          also run the ARPACK-class CPU baseline\n"
+    );
+}
+
+fn load_matrix(args: &cli::Args) -> Result<(String, Csr), String> {
+    let scale: f64 = args.get_or("scale", 1.0);
+    let seed: u64 = args.get_or("seed", 42u64);
+    if let Some(path) = args.get("matrix") {
+        let coo = mmio::read_matrix_market(Path::new(path)).map_err(|e| e.to_string())?;
+        let mut coo = coo;
+        coo.symmetrize();
+        coo.normalize_by_max_degree();
+        Ok((path.to_string(), Csr::from_coo(&coo)))
+    } else if let Some(id) = args.get("suite") {
+        let e = suite::find(id).ok_or_else(|| format!("unknown suite id '{id}'"))?;
+        Ok((e.id.to_string(), e.generate_csr(scale, seed)))
+    } else {
+        Err("need --matrix <file.mtx> or --suite <ID>".into())
+    }
+}
+
+fn cmd_solve(args: &cli::Args) -> i32 {
+    let (name, m) = match load_matrix(args) {
+        Ok(x) => x,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    let precision: PrecisionConfig = args.get_or("precision", PrecisionConfig::FDF);
+    let reorth: ReorthMode = args.get_or("reorth", ReorthMode::Full);
+    let topology = match args.get("topology").unwrap_or("dgx1") {
+        "nvswitch" => TopologyKind::NvSwitch,
+        _ => TopologyKind::Dgx1,
+    };
+    let cfg = SolverConfig {
+        k: args.get_or("k", 8usize),
+        precision,
+        devices: args.get_or("devices", 1usize),
+        reorth,
+        seed: args.get_or("seed", 0x70D0_EE11u64),
+        device_mem_bytes: args.get_or("device-mem-mb", 32usize) << 20,
+        topology,
+        ..Default::default()
+    };
+
+    println!(
+        "matrix {name}: {} rows, {} nnz | K={} precision={} devices={} reorth={:?}",
+        m.rows,
+        m.nnz(),
+        cfg.k,
+        cfg.precision,
+        cfg.devices,
+        cfg.reorth
+    );
+
+    let backend = args.get("backend").unwrap_or("hostsim");
+    let mut solver = match backend {
+        "pjrt" => {
+            let dir = PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
+            match TopKSolver::with_pjrt(cfg, &dir) {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("error: {e}");
+                    return 2;
+                }
+            }
+        }
+        _ => TopKSolver::new(cfg),
+    };
+
+    let sol = match solver.solve(&m) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("solve failed: {e}");
+            return 1;
+        }
+    };
+
+    println!("\nTop-{} eigenvalues:", sol.eigenvalues.len());
+    for (i, l) in sol.eigenvalues.iter().enumerate() {
+        let r = metrics::l2_residual(&m, *l, &sol.eigenvectors[i]);
+        println!("  λ[{i}] = {l:+.9e}   ‖Mv−λv‖ = {r:.3e}");
+    }
+    let ang = metrics::avg_pairwise_angle_deg(&sol.eigenvectors);
+    let s = &sol.stats;
+    println!(
+        "\nbackend={} wall={:.3}s sim={:.6}s kernels={} h2d={}B p2p={}B ooc={} \
+         breakdowns={}",
+        s.backend,
+        s.wall_seconds,
+        s.sim_seconds,
+        s.kernels_launched,
+        s.h2d_bytes,
+        s.p2p_bytes,
+        s.out_of_core,
+        s.breakdowns
+    );
+    println!(
+        "phases(sim): spmv={:.2e} vec={:.2e} reorth={:.2e} swap={:.2e} sync={:.2e} \
+         jacobi={:.2e} project={:.2e}",
+        s.phases.spmv,
+        s.phases.vector_ops,
+        s.phases.reorth,
+        s.phases.swap,
+        s.phases.sync,
+        s.phases.jacobi_cpu,
+        s.phases.project
+    );
+    println!("orthogonality: avg pairwise angle = {ang:.4}°");
+
+    if args.has("baseline") {
+        println!("\nrunning ARPACK-class CPU baseline...");
+        let bres = solve_topk_cpu(&m, solver.cfg.k, &BaselineConfig::default());
+        println!(
+            "baseline: {:.3}s, {} SpMVs, max residual {:.3e}",
+            bres.seconds, bres.spmv_count, bres.max_residual
+        );
+        for (i, (a, b)) in sol.eigenvalues.iter().zip(&bres.eigenvalues).enumerate() {
+            println!("  λ[{i}] gpu={a:+.6e} cpu={b:+.6e} Δ={:.2e}", (a - b).abs());
+        }
+    }
+    0
+}
+
+fn cmd_generate(args: &cli::Args) -> i32 {
+    let id = match args.get("suite") {
+        Some(s) => s,
+        None => {
+            eprintln!("error: --suite <ID> required");
+            return 2;
+        }
+    };
+    let out = match args.get("out") {
+        Some(s) => s,
+        None => {
+            eprintln!("error: --out <file.mtx> required");
+            return 2;
+        }
+    };
+    let e = match suite::find(id) {
+        Some(e) => e,
+        None => {
+            eprintln!("error: unknown suite id '{id}' (see `topk-eigen suite`)");
+            return 2;
+        }
+    };
+    let coo = e.generate(args.get_or("scale", 1.0), args.get_or("seed", 42u64));
+    println!("generated {}: {} rows, {} nnz", e.id, coo.rows, coo.nnz());
+    if let Err(err) = mmio::write_matrix_market(Path::new(out), &coo) {
+        eprintln!("error writing {out}: {err}");
+        return 1;
+    }
+    println!("wrote {out}");
+    0
+}
+
+fn cmd_suite() -> i32 {
+    println!("Table I stand-in suite (paper sizes; generated at --scale):");
+    println!(
+        "{:<6} {:<16} {:>10} {:>12} {:>8} {:>6}",
+        "ID", "Name", "Rows(M)", "NNZ(M)", "Class", "OOC"
+    );
+    for e in &suite::SUITE {
+        println!(
+            "{:<6} {:<16} {:>10.2} {:>12.2} {:>8} {:>6}",
+            e.id,
+            e.name,
+            e.paper_rows_m,
+            e.paper_nnz_m,
+            format!("{:?}", e.class),
+            if e.out_of_core { "yes" } else { "no" }
+        );
+    }
+    0
+}
+
+fn cmd_info(args: &cli::Args) -> i32 {
+    let dir = PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
+    match Manifest::load(&dir) {
+        Ok(m) => {
+            println!("artifact dir: {}", dir.display());
+            println!("entries: {}", m.entries.len());
+            for k in m.kernels() {
+                let count = m.entries.iter().filter(|e| e.kernel == k).count();
+                println!("  {k}: {count} buckets");
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}

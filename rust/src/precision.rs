@@ -1,0 +1,175 @@
+//! Mixed-precision configuration (paper §III-A, §IV-D).
+//!
+//! The paper decouples three dtype choices:
+//!
+//! * **storage** — how matrix values and Lanczos vectors live in device
+//!   memory (drives footprint and memory bandwidth),
+//! * **compute** — the accumulation dtype of SpMV and the α/β/o reductions
+//!   (drives the numerical quality of the notoriously unstable Lanczos
+//!   recurrence),
+//! * **jacobi** — the dtype of the CPU Jacobi phase on the tiny K×K matrix.
+//!
+//! The named configurations evaluated in Fig. 4 are `FFF`, `FDF` and `DDD`.
+//! FP16/BF16 are reported numerically unstable in the paper and are
+//! intentionally not offered.
+
+use std::fmt;
+use std::str::FromStr;
+
+/// Storage dtype for matrix slabs and Lanczos vectors.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Storage {
+    F32,
+    F64,
+}
+
+impl Storage {
+    pub fn bytes(self) -> usize {
+        match self {
+            Storage::F32 => 4,
+            Storage::F64 => 8,
+        }
+    }
+
+    pub fn tag(self) -> &'static str {
+        match self {
+            Storage::F32 => "f32",
+            Storage::F64 => "f64",
+        }
+    }
+}
+
+/// Accumulation dtype for SpMV products and global reductions.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Compute {
+    F32,
+    F64,
+}
+
+impl Compute {
+    pub fn tag(self) -> &'static str {
+        match self {
+            Compute::F32 => "f32",
+            Compute::F64 => "f64",
+        }
+    }
+}
+
+/// Full precision configuration: storage / compute / Jacobi.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct PrecisionConfig {
+    pub storage: Storage,
+    pub compute: Compute,
+    pub jacobi: Storage,
+}
+
+impl PrecisionConfig {
+    /// `FFF`: everything single precision — fastest, least accurate.
+    pub const FFF: PrecisionConfig = PrecisionConfig {
+        storage: Storage::F32,
+        compute: Compute::F32,
+        jacobi: Storage::F32,
+    };
+
+    /// `FDF`: f32 storage, f64 accumulation, f32 Jacobi — the paper's
+    /// recommended trade-off (50 % faster than DDD, 12× more accurate
+    /// than FFF).
+    pub const FDF: PrecisionConfig = PrecisionConfig {
+        storage: Storage::F32,
+        compute: Compute::F64,
+        jacobi: Storage::F32,
+    };
+
+    /// `DDD`: everything double precision — slowest, most accurate.
+    pub const DDD: PrecisionConfig = PrecisionConfig {
+        storage: Storage::F64,
+        compute: Compute::F64,
+        jacobi: Storage::F64,
+    };
+
+    /// All configurations evaluated in Fig. 4, fastest first.
+    pub const ALL: [PrecisionConfig; 3] = [Self::FFF, Self::FDF, Self::DDD];
+
+    /// Three-letter name as used throughout the paper ("FDF" etc.).
+    pub fn name(&self) -> String {
+        let letter = |f32_like: bool| if f32_like { 'F' } else { 'D' };
+        format!(
+            "{}{}{}",
+            letter(self.storage == Storage::F32),
+            letter(self.compute == Compute::F32),
+            letter(self.jacobi == Storage::F32),
+        )
+    }
+
+    /// Artifact-name tag, e.g. `s32c64` — identifies the kernel variant the
+    /// runtime must load for the SpMV/reduction hot path (the Jacobi dtype
+    /// is CPU-side only and does not select artifacts).
+    pub fn kernel_tag(&self) -> String {
+        format!(
+            "s{}c{}",
+            self.storage.bytes() * 8,
+            match self.compute {
+                Compute::F32 => 32,
+                Compute::F64 => 64,
+            }
+        )
+    }
+}
+
+impl fmt::Display for PrecisionConfig {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+impl FromStr for PrecisionConfig {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_uppercase().as_str() {
+            "FFF" => Ok(Self::FFF),
+            "FDF" => Ok(Self::FDF),
+            "DDD" => Ok(Self::DDD),
+            other => Err(format!(
+                "unknown precision config '{other}' (expected FFF, FDF or DDD)"
+            )),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_round_trip() {
+        for cfg in PrecisionConfig::ALL {
+            let parsed: PrecisionConfig = cfg.name().parse().unwrap();
+            assert_eq!(parsed, cfg);
+        }
+    }
+
+    #[test]
+    fn parse_is_case_insensitive() {
+        assert_eq!("fdf".parse::<PrecisionConfig>().unwrap(), PrecisionConfig::FDF);
+    }
+
+    #[test]
+    fn parse_rejects_unknown() {
+        assert!("FHF".parse::<PrecisionConfig>().is_err());
+        assert!("".parse::<PrecisionConfig>().is_err());
+    }
+
+    #[test]
+    fn kernel_tags() {
+        assert_eq!(PrecisionConfig::FFF.kernel_tag(), "s32c32");
+        assert_eq!(PrecisionConfig::FDF.kernel_tag(), "s32c64");
+        assert_eq!(PrecisionConfig::DDD.kernel_tag(), "s64c64");
+    }
+
+    #[test]
+    fn storage_bytes() {
+        assert_eq!(Storage::F32.bytes(), 4);
+        assert_eq!(Storage::F64.bytes(), 8);
+    }
+}

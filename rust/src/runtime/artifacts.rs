@@ -1,0 +1,202 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! rust runtime.
+//!
+//! `make artifacts` writes `artifacts/manifest.tsv` with one row per lowered
+//! HLO module:
+//!
+//! ```text
+//! # name	file	kernel	ptag	params
+//! spmv_s32c64_r4096_w8_n16384	spmv_s32c64_r4096_w8_n16384.hlo.txt	spmv	s32c64	r=4096;w=8;n=16384
+//! ```
+//!
+//! The runtime selects, for a requested logical shape, the smallest bucket
+//! that encloses it (padding is numerically inert — see `sparse::ell`).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// One manifest row.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: PathBuf,
+    pub kernel: String,
+    pub ptag: String,
+    pub params: HashMap<String, usize>,
+}
+
+impl ArtifactEntry {
+    pub fn param(&self, key: &str) -> Option<usize> {
+        self.params.get(key).copied()
+    }
+}
+
+/// Parsed manifest with bucket-selection queries.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: Vec<ArtifactEntry>,
+}
+
+/// Manifest parse/load errors.
+#[derive(Debug, thiserror::Error)]
+pub enum ManifestError {
+    #[error("io error reading {0}: {1}")]
+    Io(PathBuf, std::io::Error),
+    #[error("malformed manifest line {0}: {1}")]
+    Malformed(usize, String),
+    #[error(
+        "no artifact for kernel '{kernel}' ptag '{ptag}' covering {need:?}; \
+         run `make artifacts` or enlarge the bucket ladder in aot.py"
+    )]
+    NoBucket {
+        kernel: String,
+        ptag: String,
+        need: Vec<(String, usize)>,
+    },
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.tsv`.
+    pub fn load(dir: &Path) -> Result<Manifest, ManifestError> {
+        let path = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| ManifestError::Io(path.clone(), e))?;
+        Self::parse(dir, &text)
+    }
+
+    /// Parse manifest text (exposed for tests).
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest, ManifestError> {
+        let mut entries = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let t = line.trim();
+            if t.is_empty() || t.starts_with('#') {
+                continue;
+            }
+            let cols: Vec<&str> = t.split('\t').collect();
+            if cols.len() != 5 {
+                return Err(ManifestError::Malformed(
+                    lineno + 1,
+                    format!("expected 5 tab-separated columns, got {}", cols.len()),
+                ));
+            }
+            let mut params = HashMap::new();
+            for kv in cols[4].split(';').filter(|s| !s.is_empty()) {
+                let (k, v) = kv.split_once('=').ok_or_else(|| {
+                    ManifestError::Malformed(lineno + 1, format!("bad param '{kv}'"))
+                })?;
+                let v: usize = v.parse().map_err(|_| {
+                    ManifestError::Malformed(lineno + 1, format!("bad param value '{kv}'"))
+                })?;
+                params.insert(k.to_string(), v);
+            }
+            entries.push(ArtifactEntry {
+                name: cols[0].to_string(),
+                file: dir.join(cols[1]),
+                kernel: cols[2].to_string(),
+                ptag: cols[3].to_string(),
+                params,
+            });
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), entries })
+    }
+
+    /// Find the smallest-volume artifact of `kernel`/`ptag` whose every
+    /// `need` dimension is ≥ the requested value.
+    pub fn select(
+        &self,
+        kernel: &str,
+        ptag: &str,
+        need: &[(&str, usize)],
+    ) -> Result<&ArtifactEntry, ManifestError> {
+        let mut best: Option<(&ArtifactEntry, u128)> = None;
+        'outer: for e in &self.entries {
+            if e.kernel != kernel || e.ptag != ptag {
+                continue;
+            }
+            let mut volume: u128 = 1;
+            for (k, v) in need {
+                match e.param(k) {
+                    Some(have) if have >= *v => volume *= have as u128,
+                    _ => continue 'outer,
+                }
+            }
+            match best {
+                Some((_, bv)) if bv <= volume => {}
+                _ => best = Some((e, volume)),
+            }
+        }
+        best.map(|(e, _)| e).ok_or_else(|| ManifestError::NoBucket {
+            kernel: kernel.to_string(),
+            ptag: ptag.to_string(),
+            need: need.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
+        })
+    }
+
+    /// All kernels present (for `topk-eigen info`).
+    pub fn kernels(&self) -> Vec<&str> {
+        let mut ks: Vec<&str> = self.entries.iter().map(|e| e.kernel.as_str()).collect();
+        ks.sort();
+        ks.dedup();
+        ks
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# name\tfile\tkernel\tptag\tparams
+spmv_a\tspmv_a.hlo.txt\tspmv\ts32c64\tr=4096;w=8;n=16384
+spmv_b\tspmv_b.hlo.txt\tspmv\ts32c64\tr=16384;w=8;n=16384
+spmv_c\tspmv_c.hlo.txt\tspmv\ts32c64\tr=4096;w=32;n=65536
+dot_a\tdot_a.hlo.txt\tdot\ts32c64\tl=4096
+dot_b\tdot_b.hlo.txt\tdot\ts64c64\tl=4096
+";
+
+    #[test]
+    fn parses_entries() {
+        let m = Manifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        assert_eq!(m.entries.len(), 5);
+        assert_eq!(m.entries[0].param("r"), Some(4096));
+        assert_eq!(m.entries[0].file, Path::new("/tmp/a/spmv_a.hlo.txt"));
+        assert_eq!(m.kernels(), vec!["dot", "spmv"]);
+    }
+
+    #[test]
+    fn selects_smallest_enclosing_bucket() {
+        let m = Manifest::parse(Path::new("/x"), SAMPLE).unwrap();
+        let e = m
+            .select("spmv", "s32c64", &[("r", 3000), ("w", 5), ("n", 10000)])
+            .unwrap();
+        assert_eq!(e.name, "spmv_a");
+        let e = m
+            .select("spmv", "s32c64", &[("r", 5000), ("w", 5), ("n", 10000)])
+            .unwrap();
+        assert_eq!(e.name, "spmv_b");
+        let e = m
+            .select("spmv", "s32c64", &[("r", 3000), ("w", 20), ("n", 20000)])
+            .unwrap();
+        assert_eq!(e.name, "spmv_c");
+    }
+
+    #[test]
+    fn respects_ptag() {
+        let m = Manifest::parse(Path::new("/x"), SAMPLE).unwrap();
+        assert_eq!(m.select("dot", "s64c64", &[("l", 100)]).unwrap().name, "dot_b");
+    }
+
+    #[test]
+    fn errors_when_nothing_fits() {
+        let m = Manifest::parse(Path::new("/x"), SAMPLE).unwrap();
+        let err = m.select("spmv", "s32c64", &[("r", 1 << 30)]);
+        assert!(matches!(err, Err(ManifestError::NoBucket { .. })));
+    }
+
+    #[test]
+    fn rejects_malformed_rows() {
+        assert!(Manifest::parse(Path::new("/x"), "a\tb\tc\n").is_err());
+        assert!(Manifest::parse(Path::new("/x"), "a\tb\tc\td\tbadparam\n").is_err());
+    }
+}

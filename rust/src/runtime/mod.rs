@@ -1,0 +1,391 @@
+//! Execution runtime: the kernel interface and its two backends.
+//!
+//! The coordinator drives all device compute through the [`Kernels`] trait:
+//!
+//! * [`PjrtKernels`] (`pjrt.rs`) — the production path: loads the HLO-text
+//!   artifacts produced by `make artifacts` (JAX/Pallas, lowered once at
+//!   build time) and executes them on the PJRT CPU client via the `xla`
+//!   crate. Python never runs here.
+//! * [`HostKernels`] (below) — a pure-rust mirror with bit-faithful
+//!   precision emulation (storage quantization + compute-dtype
+//!   accumulation). Used by unit tests, by property tests, and as the
+//!   oracle that integration tests compare the PJRT path against.
+//!
+//! All trait methods take/return `f64` host buffers; each backend is
+//! responsible for quantizing through the configured storage dtype so that
+//! repeated calls behave exactly like vectors *kept* in storage precision.
+
+pub mod artifacts;
+pub mod fixedpoint;
+pub mod pjrt;
+
+pub use artifacts::{ArtifactEntry, Manifest};
+pub use fixedpoint::FixedPointKernels;
+pub use pjrt::PjrtKernels;
+
+use crate::precision::{Compute, PrecisionConfig, Storage};
+use crate::sparse::Ell;
+
+/// Device-kernel interface consumed by the coordinator.
+pub trait Kernels: Send {
+    /// Hint: a new Lanczos iteration begins. Backends may invalidate
+    /// caches keyed on per-iteration data (e.g. the `v_i` replica upload).
+    fn begin_cycle(&mut self) {}
+
+    /// ELL SpMV `y = M_chunk · x` (plus host-side spill): gathers from the
+    /// full replica `x`, accumulates in the compute dtype, stores `y` in
+    /// the storage dtype (widened back to f64 for the caller).
+    fn spmv(&mut self, ell: &Ell, x: &[f64], cfg: &PrecisionConfig) -> Vec<f64>;
+
+    /// Partial dot `Σ aᵢ·bᵢ` accumulated in the compute dtype.
+    fn dot(&mut self, a: &[f64], b: &[f64], cfg: &PrecisionConfig) -> f64;
+
+    /// Fused candidate update: `v_nxt = v_tmp − α·v_i − β·v_prev`, plus the
+    /// partial `Σ v_nxt²` for the β sync. Element math in compute dtype,
+    /// result stored in storage dtype.
+    fn candidate(
+        &mut self,
+        v_tmp: &[f64],
+        v_i: &[f64],
+        v_prev: &[f64],
+        alpha: f64,
+        beta: f64,
+        cfg: &PrecisionConfig,
+    ) -> (Vec<f64>, f64);
+
+    /// `v / beta`, stored in storage dtype.
+    fn normalize(&mut self, v: &[f64], beta: f64, cfg: &PrecisionConfig) -> Vec<f64>;
+
+    /// `u − o·v_j`, stored in storage dtype.
+    fn ortho_update(&mut self, u: &[f64], vj: &[f64], o: f64, cfg: &PrecisionConfig) -> Vec<f64>;
+
+    /// Eigenvector projection `Y = 𝒱 · V` for one partition:
+    /// `basis` is K vectors of the partition length, `coeff[t]` (length K)
+    /// the Jacobi eigenvector selecting output vector t.
+    /// Returns `coeff.len()` output vectors of the partition length.
+    fn project(
+        &mut self,
+        basis: &[Vec<f64>],
+        coeff: &[Vec<f64>],
+        cfg: &PrecisionConfig,
+    ) -> Vec<Vec<f64>>;
+
+    /// Human-readable backend name (logs/benches).
+    fn backend_name(&self) -> &'static str;
+}
+
+/// Quantize a value through the storage dtype.
+#[inline]
+pub fn quantize(x: f64, s: Storage) -> f64 {
+    match s {
+        Storage::F32 => x as f32 as f64,
+        Storage::F64 => x,
+    }
+}
+
+/// Quantize a slice through the storage dtype.
+pub fn quantize_vec(xs: &[f64], s: Storage) -> Vec<f64> {
+    match s {
+        Storage::F32 => xs.iter().map(|&x| x as f32 as f64).collect(),
+        Storage::F64 => xs.to_vec(),
+    }
+}
+
+/// Pure-rust backend with faithful mixed-precision emulation.
+#[derive(Default, Debug, Clone)]
+pub struct HostKernels {
+    /// Kernel invocation counter (parity with the PJRT backend's metrics).
+    pub calls: usize,
+    /// Quantized replica cached for the current Lanczos cycle — SpMV is
+    /// called once per chunk and quantizing the full replica per chunk is
+    /// O(n·chunks) (the dominant host cost on finely-chunked out-of-core
+    /// plans). Keyed informally by (len, storage); cleared by
+    /// [`Kernels::begin_cycle`].
+    xq_cache: Option<(usize, Storage, Vec<f64>)>,
+}
+
+impl HostKernels {
+    pub fn new() -> Self {
+        HostKernels::default()
+    }
+}
+
+impl Kernels for HostKernels {
+    fn begin_cycle(&mut self) {
+        self.xq_cache = None;
+    }
+
+    fn spmv(&mut self, ell: &Ell, x: &[f64], cfg: &PrecisionConfig) -> Vec<f64> {
+        self.calls += 1;
+        let storage = cfg.storage;
+        let compute = cfg.compute;
+        // Borrow-split: compute the cache inline to keep `self` free.
+        let stale = match &self.xq_cache {
+            Some((len, cs, _)) => *len != x.len() || *cs != storage,
+            None => true,
+        };
+        if stale {
+            self.xq_cache = Some((x.len(), storage, quantize_vec(x, storage)));
+        }
+        let xq = &self.xq_cache.as_ref().unwrap().2;
+        let mut y = vec![0.0; ell.rows];
+        match compute {
+            Compute::F64 => ell.spmv_ref(xq, &mut y),
+            Compute::F32 => ell.spmv_ref_f32acc(xq, &mut y),
+        }
+        for v in &mut y {
+            *v = quantize(*v, storage);
+        }
+        y
+    }
+
+    fn dot(&mut self, a: &[f64], b: &[f64], cfg: &PrecisionConfig) -> f64 {
+        self.calls += 1;
+        debug_assert_eq!(a.len(), b.len());
+        match cfg.compute {
+            Compute::F64 => {
+                let mut acc = 0.0f64;
+                for (x, y) in a.iter().zip(b) {
+                    acc += quantize(*x, cfg.storage) * quantize(*y, cfg.storage);
+                }
+                acc
+            }
+            Compute::F32 => {
+                let mut acc = 0.0f32;
+                for (x, y) in a.iter().zip(b) {
+                    acc += (quantize(*x, cfg.storage) as f32) * (quantize(*y, cfg.storage) as f32);
+                }
+                acc as f64
+            }
+        }
+    }
+
+    fn candidate(
+        &mut self,
+        v_tmp: &[f64],
+        v_i: &[f64],
+        v_prev: &[f64],
+        alpha: f64,
+        beta: f64,
+        cfg: &PrecisionConfig,
+    ) -> (Vec<f64>, f64) {
+        self.calls += 1;
+        let n = v_tmp.len();
+        debug_assert_eq!(v_i.len(), n);
+        debug_assert_eq!(v_prev.len(), n);
+        let mut out = Vec::with_capacity(n);
+        match cfg.compute {
+            Compute::F64 => {
+                let mut ss = 0.0f64;
+                for i in 0..n {
+                    let v = quantize(v_tmp[i], cfg.storage)
+                        - alpha * quantize(v_i[i], cfg.storage)
+                        - beta * quantize(v_prev[i], cfg.storage);
+                    let vq = quantize(v, cfg.storage);
+                    ss += v * v;
+                    out.push(vq);
+                }
+                (out, ss)
+            }
+            Compute::F32 => {
+                let (a32, b32) = (alpha as f32, beta as f32);
+                let mut ss = 0.0f32;
+                for i in 0..n {
+                    let v = quantize(v_tmp[i], cfg.storage) as f32
+                        - a32 * quantize(v_i[i], cfg.storage) as f32
+                        - b32 * quantize(v_prev[i], cfg.storage) as f32;
+                    ss += v * v;
+                    out.push(quantize(v as f64, cfg.storage));
+                }
+                (out, ss as f64)
+            }
+        }
+    }
+
+    fn normalize(&mut self, v: &[f64], beta: f64, cfg: &PrecisionConfig) -> Vec<f64> {
+        self.calls += 1;
+        match cfg.compute {
+            Compute::F64 => v
+                .iter()
+                .map(|&x| quantize(quantize(x, cfg.storage) / beta, cfg.storage))
+                .collect(),
+            Compute::F32 => {
+                let b32 = beta as f32;
+                v.iter()
+                    .map(|&x| {
+                        quantize(((quantize(x, cfg.storage) as f32) / b32) as f64, cfg.storage)
+                    })
+                    .collect()
+            }
+        }
+    }
+
+    fn ortho_update(&mut self, u: &[f64], vj: &[f64], o: f64, cfg: &PrecisionConfig) -> Vec<f64> {
+        self.calls += 1;
+        debug_assert_eq!(u.len(), vj.len());
+        match cfg.compute {
+            Compute::F64 => u
+                .iter()
+                .zip(vj)
+                .map(|(&x, &y)| {
+                    quantize(quantize(x, cfg.storage) - o * quantize(y, cfg.storage), cfg.storage)
+                })
+                .collect(),
+            Compute::F32 => {
+                let o32 = o as f32;
+                u.iter()
+                    .zip(vj)
+                    .map(|(&x, &y)| {
+                        let r = quantize(x, cfg.storage) as f32
+                            - o32 * quantize(y, cfg.storage) as f32;
+                        quantize(r as f64, cfg.storage)
+                    })
+                    .collect()
+            }
+        }
+    }
+
+    fn project(
+        &mut self,
+        basis: &[Vec<f64>],
+        coeff: &[Vec<f64>],
+        cfg: &PrecisionConfig,
+    ) -> Vec<Vec<f64>> {
+        self.calls += 1;
+        let k = basis.len();
+        if k == 0 {
+            return vec![];
+        }
+        let len = basis[0].len();
+        let kout = coeff.len();
+        let mut out = vec![vec![0.0f64; len]; kout];
+        for (t, coef_t) in coeff.iter().enumerate() {
+            debug_assert_eq!(coef_t.len(), k);
+            match cfg.compute {
+                Compute::F64 => {
+                    for r in 0..len {
+                        let mut acc = 0.0f64;
+                        for j in 0..k {
+                            acc += quantize(basis[j][r], cfg.storage) * coef_t[j];
+                        }
+                        out[t][r] = quantize(acc, cfg.storage);
+                    }
+                }
+                Compute::F32 => {
+                    for r in 0..len {
+                        let mut acc = 0.0f32;
+                        for j in 0..k {
+                            acc += quantize(basis[j][r], cfg.storage) as f32 * coef_t[j] as f32;
+                        }
+                        out[t][r] = quantize(acc as f64, cfg.storage);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "hostsim"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::sparse::{gen, Csr, Ell};
+
+    fn rand_vec(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        let mut v = vec![0.0; n];
+        rng.fill_uniform(&mut v);
+        v
+    }
+
+    #[test]
+    fn host_spmv_matches_csr_in_ddd() {
+        let mut rng = Rng::new(5);
+        let coo = gen::erdos_renyi(80, 80, 0.08, true, &mut rng);
+        let csr = Csr::from_coo(&coo);
+        let ell = Ell::from_csr(&csr, csr.max_row_nnz().max(1), Storage::F64);
+        let x = rand_vec(80, 6);
+        let mut want = vec![0.0; 80];
+        csr.spmv(&x, &mut want);
+        let mut k = HostKernels::new();
+        let got = k.spmv(&ell, &x, &PrecisionConfig::DDD);
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn fff_spmv_is_quantized() {
+        let mut rng = Rng::new(7);
+        let coo = gen::erdos_renyi(64, 64, 0.2, true, &mut rng);
+        let csr = Csr::from_coo(&coo);
+        let ell32 = Ell::from_csr(&csr, csr.max_row_nnz().max(1), Storage::F32);
+        let x = rand_vec(64, 8);
+        let mut k = HostKernels::new();
+        let y = k.spmv(&ell32, &x, &PrecisionConfig::FFF);
+        // Every output must be exactly representable in f32.
+        for v in &y {
+            assert_eq!(*v, *v as f32 as f64);
+        }
+    }
+
+    #[test]
+    fn candidate_fuses_axpy_and_sumsq() {
+        let n = 100;
+        let vt = rand_vec(n, 1);
+        let vi = rand_vec(n, 2);
+        let vp = rand_vec(n, 3);
+        let (alpha, beta) = (0.7, 0.3);
+        let mut k = HostKernels::new();
+        let (v, ss) = k.candidate(&vt, &vi, &vp, alpha, beta, &PrecisionConfig::DDD);
+        let mut want = vt.clone();
+        crate::linalg::axpy(-alpha, &vi, &mut want);
+        crate::linalg::axpy(-beta, &vp, &mut want);
+        for (a, b) in v.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-12);
+        }
+        let ss_want: f64 = want.iter().map(|x| x * x).sum();
+        assert!((ss - ss_want).abs() < 1e-10);
+    }
+
+    #[test]
+    fn fdf_more_accurate_than_fff_on_dot() {
+        let n = 100_000;
+        let a: Vec<f64> = (0..n).map(|i| 1.0 + (i % 5) as f64 * 1e-7).collect();
+        let b = vec![1.0f64; n];
+        let exact = crate::linalg::dot_kahan(&a, &b);
+        let mut k = HostKernels::new();
+        let efdf = (k.dot(&a, &b, &PrecisionConfig::FDF) - exact).abs();
+        let efff = (k.dot(&a, &b, &PrecisionConfig::FFF) - exact).abs();
+        assert!(efff > efdf * 10.0, "fff err {efff}, fdf err {efdf}");
+    }
+
+    #[test]
+    fn project_matches_small_gemm() {
+        let basis = vec![rand_vec(30, 10), rand_vec(30, 11), rand_vec(30, 12)];
+        let coeff = vec![vec![0.5, -0.2, 0.1], vec![0.0, 1.0, -1.0]];
+        let mut k = HostKernels::new();
+        let out = k.project(&basis, &coeff, &PrecisionConfig::DDD);
+        assert_eq!(out.len(), 2);
+        for (t, coef) in coeff.iter().enumerate() {
+            let mut want = vec![0.0; 30];
+            crate::linalg::small_gemm(&basis, coef, 3, &mut want);
+            for (a, b) in out[t].iter().zip(&want) {
+                assert!((a - b).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn normalize_divides() {
+        let v = vec![2.0, 4.0, -6.0];
+        let mut k = HostKernels::new();
+        let out = k.normalize(&v, 2.0, &PrecisionConfig::DDD);
+        assert_eq!(out, vec![1.0, 2.0, -3.0]);
+    }
+}

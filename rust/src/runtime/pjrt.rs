@@ -1,0 +1,486 @@
+//! PJRT backend: loads AOT-compiled HLO-text artifacts and executes them
+//! on the `xla` crate's CPU client.
+//!
+//! This is the production request path: artifacts were lowered once from
+//! JAX/Pallas by `make artifacts`; here we only parse HLO text, compile to
+//! a PJRT executable (cached per artifact) and execute.
+//!
+//! ## Shape bucketing
+//!
+//! HLO modules are static-shaped. For every call the backend selects the
+//! smallest manifest bucket enclosing the logical shape and zero-pads the
+//! inputs; padding is numerically inert (zero values, column index 0) and
+//! outputs are sliced back to the logical size.
+//!
+//! ## Panics
+//!
+//! Construction validates that every kernel×ptag family the solver needs is
+//! present; after that, an `xla` error during execution indicates a
+//! programming bug (shape mismatch) or a corrupted artifact, both
+//! unrecoverable — methods panic with context rather than threading
+//! `Result` through the hot loop.
+
+use super::artifacts::Manifest;
+use super::{quantize_vec, Kernels};
+use crate::precision::{PrecisionConfig, Storage};
+use crate::sparse::Ell;
+use std::collections::HashMap;
+use std::path::Path;
+
+/// Row-tile size for SpMV sub-calls. XLA-CPU's gather slows superlinearly
+/// with the gathered element count (cache-thrash on the scalar gather
+/// loop); (4096 × 8)-slot tiles run at ~10 ns/slot where a (65536 × 32)
+/// call runs at ~200 ns/slot (EXPERIMENTS.md §Perf).
+const SPMV_TILE_ROWS: usize = 4096;
+/// Width-tile size for SpMV sub-calls (partial row sums added host-side).
+const SPMV_TILE_W: usize = 8;
+/// Tile size for 1-D vector kernels — same XLA-CPU pathology as SpMV:
+/// small fixed-shape calls beat one large call by ~10× (§Perf).
+const VEC_TILE: usize = 4096;
+
+/// PJRT-backed kernel executor.
+pub struct PjrtKernels {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Constant SpMV slab tiles (vals/cols literals), keyed by
+    /// (chunk address, row tile, width tile, storage tag). The ELL chunks
+    /// live in the solver's immutable partition plan, so the address is
+    /// stable for the lifetime of a solve; entries are only ever re-created
+    /// identical if an address is reused by a later solve.
+    slab_cache: HashMap<(usize, usize, usize, &'static str), (xla::Literal, xla::Literal)>,
+    /// Replica literal for the current Lanczos cycle, keyed by (len, tag);
+    /// invalidated by [`Kernels::begin_cycle`].
+    x_cache: HashMap<(usize, &'static str), xla::Literal>,
+    /// Executions performed (parity with `HostKernels::calls`).
+    pub calls: usize,
+    /// Compilations performed (cache misses).
+    pub compiles: usize,
+}
+
+// SAFETY: `PjRtLoadedExecutable` and `PjRtClient` wrap PJRT C-API handles,
+// which the PJRT specification requires to be thread-safe; the wrapper
+// types are !Send only because they contain raw pointers. We move the
+// backend between coordinator threads but never share it concurrently
+// (each device worker owns its own or access is externally synchronized).
+unsafe impl Send for PjrtKernels {}
+
+impl PjrtKernels {
+    /// Create a backend from an artifact directory (must contain
+    /// `manifest.tsv`; see `python/compile/aot.py`).
+    pub fn new(artifact_dir: &Path) -> anyhow::Result<Self> {
+        let manifest = Manifest::load(artifact_dir)?;
+        anyhow::ensure!(
+            !manifest.entries.is_empty(),
+            "manifest at {:?} is empty — run `make artifacts`",
+            artifact_dir
+        );
+        let client = xla::PjRtClient::cpu()?;
+        Ok(PjrtKernels {
+            client,
+            manifest,
+            cache: HashMap::new(),
+            slab_cache: HashMap::new(),
+            x_cache: HashMap::new(),
+            calls: 0,
+            compiles: 0,
+        })
+    }
+
+    /// Verify all kernel families needed by `cfg` exist in the manifest.
+    pub fn validate_for(&self, cfg: &PrecisionConfig) -> anyhow::Result<()> {
+        let tag = cfg.kernel_tag();
+        for kernel in ["spmv", "dot", "candidate", "normalize", "ortho_update", "project"] {
+            anyhow::ensure!(
+                self.manifest.entries.iter().any(|e| e.kernel == kernel && e.ptag == tag),
+                "artifacts missing kernel '{kernel}' for precision {tag}; re-run `make artifacts`"
+            );
+        }
+        Ok(())
+    }
+
+    fn executable(&mut self, name: &str) -> &xla::PjRtLoadedExecutable {
+        if !self.cache.contains_key(name) {
+            let entry = self
+                .manifest
+                .entries
+                .iter()
+                .find(|e| e.name == name)
+                .unwrap_or_else(|| panic!("artifact '{name}' not in manifest"));
+            let path = entry.file.to_str().expect("artifact path not UTF-8");
+            let proto = xla::HloModuleProto::from_text_file(path)
+                .unwrap_or_else(|e| panic!("parsing HLO text {path}: {e}"));
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .unwrap_or_else(|e| panic!("compiling artifact {name}: {e}"));
+            self.compiles += 1;
+            self.cache.insert(name.to_string(), exe);
+        }
+        &self.cache[name]
+    }
+
+    /// Build a vector literal in the storage dtype, zero-padded to `len`.
+    fn vec_literal(data: &[f64], len: usize, s: Storage) -> xla::Literal {
+        debug_assert!(data.len() <= len);
+        match s {
+            Storage::F32 => {
+                let mut buf = vec![0.0f32; len];
+                for (o, &v) in buf.iter_mut().zip(data) {
+                    *o = v as f32;
+                }
+                xla::Literal::vec1(&buf)
+            }
+            Storage::F64 => {
+                let mut buf = vec![0.0f64; len];
+                buf[..data.len()].copy_from_slice(data);
+                xla::Literal::vec1(&buf)
+            }
+        }
+    }
+
+    /// Build a 2-D literal `[rows, cols]` in the storage dtype from row-major
+    /// f64 data, zero-padded.
+    fn mat_literal(data: &[f64], rows_logical: usize, cols_logical: usize, rows: usize, cols: usize, s: Storage) -> xla::Literal {
+        debug_assert!(rows_logical <= rows && cols_logical <= cols);
+        match s {
+            Storage::F32 => {
+                let mut buf = vec![0.0f32; rows * cols];
+                for r in 0..rows_logical {
+                    for c in 0..cols_logical {
+                        buf[r * cols + c] = data[r * cols_logical + c] as f32;
+                    }
+                }
+                xla::Literal::vec1(&buf).reshape(&[rows as i64, cols as i64]).expect("reshape")
+            }
+            Storage::F64 => {
+                let mut buf = vec![0.0f64; rows * cols];
+                for r in 0..rows_logical {
+                    buf[r * cols..r * cols + cols_logical]
+                        .copy_from_slice(&data[r * cols_logical..(r + 1) * cols_logical]);
+                }
+                xla::Literal::vec1(&buf).reshape(&[rows as i64, cols as i64]).expect("reshape")
+            }
+        }
+    }
+
+    /// Widen an output literal (storage dtype) to f64 and truncate.
+    fn literal_to_f64(lit: &xla::Literal, s: Storage, take: usize) -> Vec<f64> {
+        match s {
+            Storage::F32 => {
+                let v: Vec<f32> = lit.to_vec().expect("output literal to_vec f32");
+                v[..take].iter().map(|&x| x as f64).collect()
+            }
+            Storage::F64 => {
+                let v: Vec<f64> = lit.to_vec().expect("output literal to_vec f64");
+                v[..take].to_vec()
+            }
+        }
+    }
+
+    fn run(&mut self, name: &str, args: &[xla::Literal]) -> xla::Literal {
+        self.calls += 1;
+        let exe = self.executable(name);
+        let out = exe
+            .execute::<xla::Literal>(args)
+            .unwrap_or_else(|e| panic!("executing {name}: {e}"));
+        out[0][0]
+            .to_literal_sync()
+            .unwrap_or_else(|e| panic!("fetching result of {name}: {e}"))
+    }
+}
+
+impl Kernels for PjrtKernels {
+    fn begin_cycle(&mut self) {
+        self.x_cache.clear();
+    }
+
+    fn spmv(&mut self, ell: &Ell, x: &[f64], cfg: &PrecisionConfig) -> Vec<f64> {
+        let tag = cfg.kernel_tag();
+        let stag: &'static str = match cfg.storage {
+            Storage::F32 => "f32",
+            Storage::F64 => "f64",
+        };
+        // Tile the call: XLA-CPU gather throughput collapses on large
+        // calls, so split into (SPMV_TILE_ROWS × SPMV_TILE_W) tiles with
+        // host-side partial-sum accumulation across width tiles.
+        let entry = self
+            .manifest
+            .select(
+                "spmv",
+                &tag,
+                &[
+                    ("r", ell.rows.min(SPMV_TILE_ROWS)),
+                    ("w", ell.width.min(SPMV_TILE_W)),
+                    ("n", x.len()),
+                ],
+            )
+            .unwrap_or_else(|e| panic!("{e}"));
+        let (rb, wb, nb) = (
+            entry.param("r").unwrap(),
+            entry.param("w").unwrap(),
+            entry.param("n").unwrap(),
+        );
+        let name = entry.name.clone();
+
+        // Replica literal: constant within a Lanczos cycle across chunks,
+        // devices and tiles — cached until `begin_cycle`.
+        let x_key = (x.len(), stag);
+        if !self.x_cache.contains_key(&x_key) {
+            let lit = Self::vec_literal(x, nb, cfg.storage);
+            self.x_cache.insert(x_key, lit);
+        }
+
+        let mut y = vec![0.0f64; ell.rows];
+        let ell_key = ell as *const Ell as usize;
+        let mut r0 = 0usize;
+        while r0 < ell.rows {
+            let r1 = (r0 + rb).min(ell.rows);
+            let mut w0 = 0usize;
+            while w0 < ell.width {
+                let w1 = (w0 + wb).min(ell.width);
+                // Slab tile literals are constant across iterations: cache.
+                let key = (ell_key, r0, w0, stag);
+                if !self.slab_cache.contains_key(&key) {
+                    let mut vals64 = vec![0.0f64; rb * wb];
+                    let mut colsb = vec![0i32; rb * wb];
+                    for (ri, r) in (r0..r1).enumerate() {
+                        for (wi, w) in (w0..w1).enumerate() {
+                            vals64[ri * wb + wi] = ell.values.get_f64(r * ell.width + w);
+                            colsb[ri * wb + wi] = ell.col_idx[r * ell.width + w];
+                        }
+                    }
+                    let vals_lit = match cfg.storage {
+                        Storage::F32 => {
+                            let b32: Vec<f32> = vals64.iter().map(|&v| v as f32).collect();
+                            xla::Literal::vec1(&b32)
+                                .reshape(&[rb as i64, wb as i64])
+                                .unwrap()
+                        }
+                        Storage::F64 => xla::Literal::vec1(&vals64)
+                            .reshape(&[rb as i64, wb as i64])
+                            .unwrap(),
+                    };
+                    let cols_lit = xla::Literal::vec1(&colsb)
+                        .reshape(&[rb as i64, wb as i64])
+                        .unwrap();
+                    self.slab_cache.insert(key, (vals_lit, cols_lit));
+                }
+                self.calls += 1;
+                let exe_out = {
+                    let exe = self.executable(&name) as *const xla::PjRtLoadedExecutable;
+                    let (vals_lit, cols_lit) = &self.slab_cache[&key];
+                    let x_lit = &self.x_cache[&x_key];
+                    // SAFETY: `executable` only appends to the cache map;
+                    // the exe is owned by the map and outlives this call.
+                    let exe = unsafe { &*exe };
+                    exe.execute::<&xla::Literal>(&[vals_lit, cols_lit, x_lit])
+                        .unwrap_or_else(|e| panic!("executing {name}: {e}"))
+                };
+                let out = exe_out[0][0]
+                    .to_literal_sync()
+                    .unwrap_or_else(|e| panic!("fetching result of {name}: {e}"));
+                let y_lit = out.to_tuple1().expect("spmv output tuple");
+                let yt = Self::literal_to_f64(&y_lit, cfg.storage, r1 - r0);
+                // Accumulate width-tile partial sums (storage-quantized, as
+                // a multi-pass device accumulation would be).
+                for (ri, v) in yt.into_iter().enumerate() {
+                    y[r0 + ri] = super::quantize(y[r0 + ri] + v, cfg.storage);
+                }
+                w0 = w1;
+            }
+            r0 = r1;
+        }
+
+        // Host-side spill tail (rows whose degree exceeded the ELL width).
+        if !ell.spill.is_empty() {
+            let xq = quantize_vec(x, cfg.storage);
+            for s in &ell.spill {
+                let prod = match cfg.compute {
+                    crate::precision::Compute::F64 => s.val * xq[s.col as usize],
+                    crate::precision::Compute::F32 => {
+                        ((s.val as f32) * (xq[s.col as usize] as f32)) as f64
+                    }
+                };
+                y[s.row as usize] = super::quantize(y[s.row as usize] + prod, cfg.storage);
+            }
+        }
+        y
+    }
+
+    fn dot(&mut self, a: &[f64], b: &[f64], cfg: &PrecisionConfig) -> f64 {
+        debug_assert_eq!(a.len(), b.len());
+        let tag = cfg.kernel_tag();
+        let entry = self
+            .manifest
+            .select("dot", &tag, &[("l", a.len().min(VEC_TILE))])
+            .unwrap_or_else(|e| panic!("{e}"));
+        let lb = entry.param("l").unwrap();
+        let name = entry.name.clone();
+        // Tile: per-tile partials summed in f64 host-side — identical to
+        // the kernel's own per-block partial fold, one level up.
+        let mut acc = 0.0f64;
+        let mut i = 0usize;
+        while i < a.len() {
+            let j = (i + lb).min(a.len());
+            let a_lit = Self::vec_literal(&a[i..j], lb, cfg.storage);
+            let b_lit = Self::vec_literal(&b[i..j], lb, cfg.storage);
+            let out = self.run(&name, &[a_lit, b_lit]);
+            let s_lit = out.to_tuple1().expect("dot output tuple");
+            acc += s_lit.get_first_element::<f64>().expect("dot scalar f64");
+            i = j;
+        }
+        acc
+    }
+
+    fn candidate(
+        &mut self,
+        v_tmp: &[f64],
+        v_i: &[f64],
+        v_prev: &[f64],
+        alpha: f64,
+        beta: f64,
+        cfg: &PrecisionConfig,
+    ) -> (Vec<f64>, f64) {
+        let n = v_tmp.len();
+        let tag = cfg.kernel_tag();
+        let entry = self
+            .manifest
+            .select("candidate", &tag, &[("l", n.min(VEC_TILE))])
+            .unwrap_or_else(|e| panic!("{e}"));
+        let lb = entry.param("l").unwrap();
+        let name = entry.name.clone();
+        let alpha_lit = xla::Literal::scalar(alpha);
+        let beta_lit = xla::Literal::scalar(beta);
+        let mut v = Vec::with_capacity(n);
+        let mut ss = 0.0f64;
+        let mut i = 0usize;
+        while i < n {
+            let j = (i + lb).min(n);
+            let args = [
+                Self::vec_literal(&v_tmp[i..j], lb, cfg.storage),
+                Self::vec_literal(&v_i[i..j], lb, cfg.storage),
+                Self::vec_literal(&v_prev[i..j], lb, cfg.storage),
+                alpha_lit.clone(),
+                beta_lit.clone(),
+            ];
+            let out = self.run(&name, &args);
+            let (v_lit, ss_lit) = out.to_tuple2().expect("candidate output tuple2");
+            v.extend(Self::literal_to_f64(&v_lit, cfg.storage, j - i));
+            ss += ss_lit.get_first_element::<f64>().expect("candidate sumsq f64");
+            i = j;
+        }
+        (v, ss)
+    }
+
+    fn normalize(&mut self, v: &[f64], beta: f64, cfg: &PrecisionConfig) -> Vec<f64> {
+        let n = v.len();
+        let tag = cfg.kernel_tag();
+        let entry = self
+            .manifest
+            .select("normalize", &tag, &[("l", n.min(VEC_TILE))])
+            .unwrap_or_else(|e| panic!("{e}"));
+        let lb = entry.param("l").unwrap();
+        let name = entry.name.clone();
+        let beta_lit = xla::Literal::scalar(beta);
+        let mut out_v = Vec::with_capacity(n);
+        let mut i = 0usize;
+        while i < n {
+            let j = (i + lb).min(n);
+            let args = [Self::vec_literal(&v[i..j], lb, cfg.storage), beta_lit.clone()];
+            let out = self.run(&name, &args);
+            let v_lit = out.to_tuple1().expect("normalize output tuple");
+            out_v.extend(Self::literal_to_f64(&v_lit, cfg.storage, j - i));
+            i = j;
+        }
+        out_v
+    }
+
+    fn ortho_update(&mut self, u: &[f64], vj: &[f64], o: f64, cfg: &PrecisionConfig) -> Vec<f64> {
+        let n = u.len();
+        let tag = cfg.kernel_tag();
+        let entry = self
+            .manifest
+            .select("ortho_update", &tag, &[("l", n.min(VEC_TILE))])
+            .unwrap_or_else(|e| panic!("{e}"));
+        let lb = entry.param("l").unwrap();
+        let name = entry.name.clone();
+        let o_lit = xla::Literal::scalar(o);
+        let mut out_v = Vec::with_capacity(n);
+        let mut i = 0usize;
+        while i < n {
+            let j = (i + lb).min(n);
+            let args = [
+                Self::vec_literal(&u[i..j], lb, cfg.storage),
+                Self::vec_literal(&vj[i..j], lb, cfg.storage),
+                o_lit.clone(),
+            ];
+            let out = self.run(&name, &args);
+            let v_lit = out.to_tuple1().expect("ortho_update output tuple");
+            out_v.extend(Self::literal_to_f64(&v_lit, cfg.storage, j - i));
+            i = j;
+        }
+        out_v
+    }
+
+    fn project(
+        &mut self,
+        basis: &[Vec<f64>],
+        coeff: &[Vec<f64>],
+        cfg: &PrecisionConfig,
+    ) -> Vec<Vec<f64>> {
+        let k = basis.len();
+        if k == 0 {
+            return vec![];
+        }
+        let len = basis[0].len();
+        let kout = coeff.len();
+        let tag = cfg.kernel_tag();
+        let entry = self
+            .manifest
+            .select("project", &tag, &[("l", len), ("k", k.max(kout))])
+            .unwrap_or_else(|e| panic!("{e}"));
+        let (lb, kb) = (entry.param("l").unwrap(), entry.param("k").unwrap());
+        let name = entry.name.clone();
+
+        // basis matrix [lb, kb]: column j = basis vector j.
+        let mut bdata = vec![0.0f64; len * k];
+        for r in 0..len {
+            for j in 0..k {
+                bdata[r * k + j] = basis[j][r];
+            }
+        }
+        let basis_lit = Self::mat_literal(&bdata, len, k, lb, kb, cfg.storage);
+        // coeff matrix [kb, kb]: column t = coefficients of output t.
+        let mut cdata = vec![0.0f64; k * kout];
+        for j in 0..k {
+            for t in 0..kout {
+                cdata[j * kout + t] = coeff[t][j];
+            }
+        }
+        let coeff_lit = Self::mat_literal(&cdata, k, kout, kb, kb, cfg.storage);
+
+        let out = self.run(&name, &[basis_lit, coeff_lit]);
+        let y_lit = out.to_tuple1().expect("project output tuple");
+        // Output [lb, kb] in storage dtype, row-major.
+        let flat: Vec<f64> = match cfg.storage {
+            Storage::F32 => {
+                let v: Vec<f32> = y_lit.to_vec().expect("project output f32");
+                v.iter().map(|&x| x as f64).collect()
+            }
+            Storage::F64 => y_lit.to_vec().expect("project output f64"),
+        };
+        let mut out_vecs = vec![vec![0.0f64; len]; kout];
+        for r in 0..len {
+            for t in 0..kout {
+                out_vecs[t][r] = flat[r * kb + t];
+            }
+        }
+        out_vecs
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "pjrt"
+    }
+}

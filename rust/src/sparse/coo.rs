@@ -1,0 +1,216 @@
+//! Coordinate-format sparse matrix (host master copy, `f64` values).
+
+use super::SparseStats;
+
+/// A sparse matrix in coordinate (triplet) format.
+///
+/// Entries are not required to be sorted or unique until [`Coo::canonicalize`]
+/// is called; generators and the MatrixMarket reader produce raw triplets and
+/// canonicalize once.
+#[derive(Clone, Debug, Default)]
+pub struct Coo {
+    pub rows: usize,
+    pub cols: usize,
+    pub row_idx: Vec<u32>,
+    pub col_idx: Vec<u32>,
+    pub values: Vec<f64>,
+}
+
+impl Coo {
+    /// Empty matrix of the given shape.
+    pub fn new(rows: usize, cols: usize) -> Self {
+        assert!(rows <= u32::MAX as usize && cols <= u32::MAX as usize);
+        Coo { rows, cols, row_idx: vec![], col_idx: vec![], values: vec![] }
+    }
+
+    /// Append one entry (no dedup — see [`Coo::canonicalize`]).
+    #[inline]
+    pub fn push(&mut self, r: u32, c: u32, v: f64) {
+        debug_assert!((r as usize) < self.rows && (c as usize) < self.cols);
+        self.row_idx.push(r);
+        self.col_idx.push(c);
+        self.values.push(v);
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn stats(&self) -> SparseStats {
+        SparseStats { rows: self.rows, cols: self.cols, nnz: self.nnz() }
+    }
+
+    /// Sort by (row, col) and sum duplicate entries; drop explicit zeros.
+    pub fn canonicalize(&mut self) {
+        let n = self.nnz();
+        let mut order: Vec<u32> = (0..n as u32).collect();
+        order.sort_unstable_by_key(|&i| {
+            (self.row_idx[i as usize], self.col_idx[i as usize])
+        });
+        let (mut ri, mut ci, mut vi) = (
+            Vec::with_capacity(n),
+            Vec::with_capacity(n),
+            Vec::with_capacity(n),
+        );
+        for &i in &order {
+            let (r, c, v) = (
+                self.row_idx[i as usize],
+                self.col_idx[i as usize],
+                self.values[i as usize],
+            );
+            if let (Some(&lr), Some(&lc)) = (ri.last(), ci.last()) {
+                if lr == r && lc == c {
+                    *vi.last_mut().unwrap() += v;
+                    continue;
+                }
+            }
+            ri.push(r);
+            ci.push(c);
+            vi.push(v);
+        }
+        // Drop entries that summed to exactly zero.
+        let mut w = 0;
+        for i in 0..vi.len() {
+            if vi[i] != 0.0 {
+                ri[w] = ri[i];
+                ci[w] = ci[i];
+                vi[w] = vi[i];
+                w += 1;
+            }
+        }
+        ri.truncate(w);
+        ci.truncate(w);
+        vi.truncate(w);
+        self.row_idx = ri;
+        self.col_idx = ci;
+        self.values = vi;
+    }
+
+    /// Make the matrix symmetric: M ← (M + Mᵀ) / 2. Requires square shape.
+    ///
+    /// Graph adjacency matrices from directed graphs (web crawls, wikis) are
+    /// symmetrized before the Lanczos phase, as spectral pipelines do.
+    pub fn symmetrize(&mut self) {
+        assert_eq!(self.rows, self.cols, "symmetrize requires a square matrix");
+        let n = self.nnz();
+        self.row_idx.reserve(n);
+        self.col_idx.reserve(n);
+        self.values.reserve(n);
+        for i in 0..n {
+            self.values[i] *= 0.5;
+            let (r, c, v) = (self.row_idx[i], self.col_idx[i], self.values[i]);
+            self.push(c, r, v);
+        }
+        self.canonicalize();
+    }
+
+    /// Scale so the spectral radius is ≲ 1 by normalizing with the max
+    /// row-degree (cheap Gershgorin-style bound). Keeps Lanczos numerics in a
+    /// comparable range across the suite.
+    pub fn normalize_by_max_degree(&mut self) {
+        let mut rowsum = vec![0.0f64; self.rows];
+        for i in 0..self.nnz() {
+            rowsum[self.row_idx[i] as usize] += self.values[i].abs();
+        }
+        let m = rowsum.iter().cloned().fold(0.0, f64::max);
+        if m > 0.0 {
+            for v in &mut self.values {
+                *v /= m;
+            }
+        }
+    }
+
+    /// Dense reference SpMV (`y = M x`), used only by tests.
+    pub fn spmv_ref(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols);
+        let mut y = vec![0.0; self.rows];
+        for i in 0..self.nnz() {
+            y[self.row_idx[i] as usize] +=
+                self.values[i] * x[self.col_idx[i] as usize];
+        }
+        y
+    }
+
+    /// Dense representation (tests only; panics on large shapes).
+    pub fn to_dense(&self) -> Vec<Vec<f64>> {
+        assert!(self.rows * self.cols <= 1 << 24, "to_dense is for small tests");
+        let mut d = vec![vec![0.0; self.cols]; self.rows];
+        for i in 0..self.nnz() {
+            d[self.row_idx[i] as usize][self.col_idx[i] as usize] += self.values[i];
+        }
+        d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Coo {
+        let mut m = Coo::new(3, 3);
+        m.push(0, 1, 2.0);
+        m.push(2, 0, 1.0);
+        m.push(0, 1, 3.0); // duplicate with (0,1)
+        m.push(1, 1, -1.0);
+        m
+    }
+
+    #[test]
+    fn canonicalize_sums_duplicates_and_sorts() {
+        let mut m = sample();
+        m.canonicalize();
+        assert_eq!(m.nnz(), 3);
+        assert_eq!(m.row_idx, vec![0, 1, 2]);
+        assert_eq!(m.col_idx, vec![1, 1, 0]);
+        assert_eq!(m.values, vec![5.0, -1.0, 1.0]);
+    }
+
+    #[test]
+    fn canonicalize_drops_zero_sums() {
+        let mut m = Coo::new(2, 2);
+        m.push(0, 0, 1.0);
+        m.push(0, 0, -1.0);
+        m.push(1, 1, 2.0);
+        m.canonicalize();
+        assert_eq!(m.nnz(), 1);
+        assert_eq!(m.values, vec![2.0]);
+    }
+
+    #[test]
+    fn symmetrize_produces_symmetric_dense() {
+        let mut m = sample();
+        m.canonicalize();
+        m.symmetrize();
+        let d = m.to_dense();
+        for r in 0..3 {
+            for c in 0..3 {
+                assert!((d[r][c] - d[c][r]).abs() < 1e-15);
+            }
+        }
+        // (0,1) had value 5 → symmetric halves 2.5 on both sides.
+        assert!((d[0][1] - 2.5).abs() < 1e-15);
+    }
+
+    #[test]
+    fn spmv_ref_matches_dense() {
+        let mut m = sample();
+        m.canonicalize();
+        let x = vec![1.0, 2.0, 3.0];
+        let y = m.spmv_ref(&x);
+        let d = m.to_dense();
+        for r in 0..3 {
+            let want: f64 = (0..3).map(|c| d[r][c] * x[c]).sum();
+            assert!((y[r] - want).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn stats_accounting() {
+        let mut m = sample();
+        m.canonicalize();
+        let s = m.stats();
+        assert_eq!(s.nnz, 3);
+        assert!((s.sparsity_percent() - 100.0 * 3.0 / 9.0).abs() < 1e-12);
+        assert!(s.coo_size_gb() > 0.0);
+    }
+}

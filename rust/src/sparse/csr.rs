@@ -1,0 +1,235 @@
+//! Compressed Sparse Row format (host master copy, `f64` values).
+//!
+//! CSR is the host-side workhorse: the CPU baseline's threaded SpMV runs on
+//! it, the partitioner slices it, and ELL device slabs are built from it.
+
+use super::{Coo, SparseStats};
+
+/// CSR sparse matrix. Column indices within a row are sorted ascending.
+#[derive(Clone, Debug, Default)]
+pub struct Csr {
+    pub rows: usize,
+    pub cols: usize,
+    /// Length `rows + 1`; row `r` occupies `indptr[r]..indptr[r+1]`.
+    pub indptr: Vec<usize>,
+    pub col_idx: Vec<u32>,
+    pub values: Vec<f64>,
+}
+
+impl Csr {
+    /// Build from a canonicalized COO (sorted, deduplicated).
+    pub fn from_coo(coo: &Coo) -> Self {
+        let mut indptr = vec![0usize; coo.rows + 1];
+        for &r in &coo.row_idx {
+            indptr[r as usize + 1] += 1;
+        }
+        for r in 0..coo.rows {
+            indptr[r + 1] += indptr[r];
+        }
+        Csr {
+            rows: coo.rows,
+            cols: coo.cols,
+            indptr,
+            col_idx: coo.col_idx.clone(),
+            values: coo.values.clone(),
+        }
+    }
+
+    /// Convert back to (canonical) COO.
+    pub fn to_coo(&self) -> Coo {
+        let mut coo = Coo::new(self.rows, self.cols);
+        for r in 0..self.rows {
+            for i in self.indptr[r]..self.indptr[r + 1] {
+                coo.push(r as u32, self.col_idx[i], self.values[i]);
+            }
+        }
+        coo
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn stats(&self) -> SparseStats {
+        SparseStats { rows: self.rows, cols: self.cols, nnz: self.nnz() }
+    }
+
+    /// Number of non-zeros in row `r`.
+    #[inline]
+    pub fn row_nnz(&self, r: usize) -> usize {
+        self.indptr[r + 1] - self.indptr[r]
+    }
+
+    /// Maximum row degree.
+    pub fn max_row_nnz(&self) -> usize {
+        (0..self.rows).map(|r| self.row_nnz(r)).max().unwrap_or(0)
+    }
+
+    /// The `q`-quantile of the row-degree distribution (q in [0,1]).
+    ///
+    /// Used by the coordinator to pick an ELL width that bounds padding
+    /// waste, spilling heavier rows to the COO tail (DESIGN.md §3).
+    pub fn row_nnz_quantile(&self, q: f64) -> usize {
+        if self.rows == 0 {
+            return 0;
+        }
+        let mut degs: Vec<usize> = (0..self.rows).map(|r| self.row_nnz(r)).collect();
+        degs.sort_unstable();
+        let idx = ((self.rows - 1) as f64 * q.clamp(0.0, 1.0)).round() as usize;
+        degs[idx]
+    }
+
+    /// Sequential SpMV `y = M x` (f64 reference path).
+    pub fn spmv(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        for r in 0..self.rows {
+            let mut acc = 0.0;
+            for i in self.indptr[r]..self.indptr[r + 1] {
+                acc += self.values[i] * x[self.col_idx[i] as usize];
+            }
+            y[r] = acc;
+        }
+    }
+
+    /// SpMV over a row slice `[r0, r1)` writing `y[0..r1-r0]`.
+    /// This is the per-partition compute used by the baseline worker threads.
+    pub fn spmv_rows(&self, r0: usize, r1: usize, x: &[f64], y: &mut [f64]) {
+        assert!(r0 <= r1 && r1 <= self.rows);
+        assert_eq!(y.len(), r1 - r0);
+        for (out, r) in y.iter_mut().zip(r0..r1) {
+            let mut acc = 0.0;
+            for i in self.indptr[r]..self.indptr[r + 1] {
+                acc += self.values[i] * x[self.col_idx[i] as usize];
+            }
+            *out = acc;
+        }
+    }
+
+    /// Extract rows `[r0, r1)` as a standalone CSR (columns untouched:
+    /// partitions keep global column space, matching the paper's replicated
+    /// `v_i` gather).
+    pub fn slice_rows(&self, r0: usize, r1: usize) -> Csr {
+        assert!(r0 <= r1 && r1 <= self.rows);
+        let base = self.indptr[r0];
+        let end = self.indptr[r1];
+        let indptr: Vec<usize> =
+            self.indptr[r0..=r1].iter().map(|&p| p - base).collect();
+        Csr {
+            rows: r1 - r0,
+            cols: self.cols,
+            indptr,
+            col_idx: self.col_idx[base..end].to_vec(),
+            values: self.values[base..end].to_vec(),
+        }
+    }
+
+    /// Check structural invariants (tests / debug).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.indptr.len() != self.rows + 1 {
+            return Err(format!(
+                "indptr len {} != rows+1 {}",
+                self.indptr.len(),
+                self.rows + 1
+            ));
+        }
+        if self.indptr[0] != 0 || *self.indptr.last().unwrap() != self.nnz() {
+            return Err("indptr endpoints wrong".into());
+        }
+        for r in 0..self.rows {
+            if self.indptr[r] > self.indptr[r + 1] {
+                return Err(format!("indptr not monotone at row {r}"));
+            }
+            let mut last: i64 = -1;
+            for i in self.indptr[r]..self.indptr[r + 1] {
+                let c = self.col_idx[i] as i64;
+                if c <= last {
+                    return Err(format!("row {r} columns not strictly ascending"));
+                }
+                if c as usize >= self.cols {
+                    return Err(format!("row {r} column {c} out of bounds"));
+                }
+                last = c;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::sparse::gen;
+
+    fn sample_csr() -> Csr {
+        let mut coo = Coo::new(4, 4);
+        coo.push(0, 0, 1.0);
+        coo.push(0, 3, 2.0);
+        coo.push(2, 1, 3.0);
+        coo.push(3, 0, 4.0);
+        coo.push(3, 3, 5.0);
+        coo.canonicalize();
+        Csr::from_coo(&coo)
+    }
+
+    #[test]
+    fn from_coo_roundtrip() {
+        let csr = sample_csr();
+        csr.validate().unwrap();
+        let mut coo2 = csr.to_coo();
+        coo2.canonicalize();
+        let csr2 = Csr::from_coo(&coo2);
+        assert_eq!(csr.indptr, csr2.indptr);
+        assert_eq!(csr.col_idx, csr2.col_idx);
+        assert_eq!(csr.values, csr2.values);
+    }
+
+    #[test]
+    fn spmv_matches_coo_ref() {
+        let mut rng = Rng::new(17);
+        let coo = gen::erdos_renyi(50, 50, 0.1, true, &mut rng);
+        let csr = Csr::from_coo(&coo);
+        csr.validate().unwrap();
+        let x: Vec<f64> = (0..50).map(|i| (i as f64 * 0.3).sin()).collect();
+        let want = coo.spmv_ref(&x);
+        let mut got = vec![0.0; 50];
+        csr.spmv(&x, &mut got);
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn spmv_rows_covers_full_spmv() {
+        let csr = sample_csr();
+        let x = vec![1.0, -1.0, 2.0, 0.5];
+        let mut full = vec![0.0; 4];
+        csr.spmv(&x, &mut full);
+        let mut part = vec![0.0; 2];
+        csr.spmv_rows(2, 4, &x, &mut part);
+        assert_eq!(&full[2..4], &part[..]);
+    }
+
+    #[test]
+    fn slice_rows_keeps_columns_global() {
+        let csr = sample_csr();
+        let sl = csr.slice_rows(2, 4);
+        sl.validate().unwrap();
+        assert_eq!(sl.rows, 2);
+        assert_eq!(sl.cols, 4);
+        assert_eq!(sl.nnz(), 3);
+        let x = vec![1.0, 1.0, 1.0, 1.0];
+        let mut y = vec![0.0; 2];
+        sl.spmv(&x, &mut y);
+        assert_eq!(y, vec![3.0, 9.0]);
+    }
+
+    #[test]
+    fn degree_quantiles() {
+        let csr = sample_csr();
+        assert_eq!(csr.max_row_nnz(), 2);
+        assert_eq!(csr.row_nnz_quantile(1.0), 2);
+        assert_eq!(csr.row_nnz_quantile(0.0), 0);
+    }
+}

@@ -1,0 +1,269 @@
+//! ELLPACK device format with a COO spill tail.
+//!
+//! The Pallas SpMV kernel consumes regular `[rows, width]` tiles of values
+//! and column indices (DESIGN.md §3 — the TPU rethink of the paper's CUDA
+//! warp-per-row CSR). Rows whose degree exceeds the chosen width spill the
+//! excess entries to a host-processed COO tail, so the ELL width can be set
+//! from a degree *quantile* instead of the max degree, bounding padding on
+//! power-law graphs.
+//!
+//! Values are materialized in the configured **storage precision** (the
+//! paper stores f32 and accumulates f64 in its FDF configuration).
+
+use super::Csr;
+use crate::precision::Storage;
+
+/// Values in storage precision.
+#[derive(Clone, Debug)]
+pub enum EllValues {
+    F32(Vec<f32>),
+    F64(Vec<f64>),
+}
+
+impl EllValues {
+    pub fn len(&self) -> usize {
+        match self {
+            EllValues::F32(v) => v.len(),
+            EllValues::F64(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Read element `i` widened to f64 (test/reference path).
+    #[inline]
+    pub fn get_f64(&self, i: usize) -> f64 {
+        match self {
+            EllValues::F32(v) => v[i] as f64,
+            EllValues::F64(v) => v[i],
+        }
+    }
+
+    pub fn storage(&self) -> Storage {
+        match self {
+            EllValues::F32(_) => Storage::F32,
+            EllValues::F64(_) => Storage::F64,
+        }
+    }
+
+    /// Bytes occupied (device-memory accounting).
+    pub fn bytes(&self) -> usize {
+        match self {
+            EllValues::F32(v) => v.len() * 4,
+            EllValues::F64(v) => v.len() * 8,
+        }
+    }
+}
+
+/// One spilled entry (row-local row index, global column, f64 value).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SpillEntry {
+    pub row: u32,
+    pub col: u32,
+    pub val: f64,
+}
+
+/// ELLPACK slab: `rows × width` values + column indices, row-major.
+///
+/// Padding slots carry `col = 0, val = 0` — numerically inert under
+/// gather-multiply-accumulate (property-tested in `prop.rs` and pytest).
+#[derive(Clone, Debug)]
+pub struct Ell {
+    /// Row count of this slab (partition rows, *before* bucket padding).
+    pub rows: usize,
+    /// Global column-space size (gather source length).
+    pub cols: usize,
+    /// Entries per row in the regular part.
+    pub width: usize,
+    /// `rows * width` column indices (i32 for the XLA gather).
+    pub col_idx: Vec<i32>,
+    /// `rows * width` values in storage precision.
+    pub values: EllValues,
+    /// Overflow entries for rows with degree > width (host-processed).
+    pub spill: Vec<SpillEntry>,
+}
+
+impl Ell {
+    /// Build from CSR with the given width and storage precision.
+    pub fn from_csr(csr: &Csr, width: usize, storage: Storage) -> Self {
+        assert!(width > 0, "ELL width must be positive");
+        let rows = csr.rows;
+        let mut col_idx = vec![0i32; rows * width];
+        let mut spill = Vec::new();
+        let mut vals64 = vec![0.0f64; rows * width];
+        for r in 0..rows {
+            let (start, end) = (csr.indptr[r], csr.indptr[r + 1]);
+            for (k, i) in (start..end).enumerate() {
+                if k < width {
+                    col_idx[r * width + k] = csr.col_idx[i] as i32;
+                    vals64[r * width + k] = csr.values[i];
+                } else {
+                    spill.push(SpillEntry {
+                        row: r as u32,
+                        col: csr.col_idx[i],
+                        val: csr.values[i],
+                    });
+                }
+            }
+        }
+        let values = match storage {
+            Storage::F32 => {
+                EllValues::F32(vals64.iter().map(|&v| v as f32).collect())
+            }
+            Storage::F64 => EllValues::F64(vals64),
+        };
+        Ell { rows, cols: csr.cols, width, col_idx, values, spill }
+    }
+
+    /// Non-zeros represented (regular non-padding entries + spill).
+    pub fn nnz(&self) -> usize {
+        let regular = (0..self.values.len())
+            .filter(|&i| self.values.get_f64(i) != 0.0 || self.col_idx[i] != 0)
+            .count();
+        // Padding slots are (col=0, val=0); a genuine entry (0, 0.0) cannot
+        // exist because canonicalized COO drops explicit zeros.
+        regular + self.spill.len()
+    }
+
+    /// Fraction of regular slots that are padding.
+    pub fn padding_ratio(&self) -> f64 {
+        if self.col_idx.is_empty() {
+            return 0.0;
+        }
+        let pad = self
+            .col_idx
+            .iter()
+            .enumerate()
+            .filter(|&(i, &c)| c == 0 && self.values.get_f64(i) == 0.0)
+            .count();
+        pad as f64 / self.col_idx.len() as f64
+    }
+
+    /// Device-memory bytes for this slab (values + indices + spill).
+    pub fn bytes(&self) -> usize {
+        self.values.bytes() + self.col_idx.len() * 4 + self.spill.len() * 16
+    }
+
+    /// Reference SpMV with f64 accumulation (`y[r] = Σ v·x[col]`), covering
+    /// both the regular part and the spill tail. Oracle for the device path.
+    pub fn spmv_ref(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        for r in 0..self.rows {
+            let mut acc = 0.0f64;
+            for k in 0..self.width {
+                let i = r * self.width + k;
+                acc += self.values.get_f64(i) * x[self.col_idx[i] as usize];
+            }
+            y[r] = acc;
+        }
+        for s in &self.spill {
+            y[s.row as usize] += s.val * x[s.col as usize];
+        }
+    }
+
+    /// Reference SpMV with f32 accumulation — emulates the FFF configuration
+    /// for accuracy studies.
+    pub fn spmv_ref_f32acc(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        for r in 0..self.rows {
+            let mut acc = 0.0f32;
+            for k in 0..self.width {
+                let i = r * self.width + k;
+                acc += (self.values.get_f64(i) as f32) * (x[self.col_idx[i] as usize] as f32);
+            }
+            y[r] = acc as f64;
+        }
+        for s in &self.spill {
+            y[s.row as usize] +=
+                ((s.val as f32) * (x[s.col as usize] as f32)) as f64;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::sparse::{gen, Coo};
+
+    fn random_csr(n: usize, p: f64, seed: u64) -> Csr {
+        let mut rng = Rng::new(seed);
+        let coo = gen::erdos_renyi(n, n, p, true, &mut rng);
+        Csr::from_coo(&coo)
+    }
+
+    #[test]
+    fn ell_spmv_matches_csr_when_wide_enough() {
+        let csr = random_csr(64, 0.1, 3);
+        let w = csr.max_row_nnz();
+        let ell = Ell::from_csr(&csr, w.max(1), Storage::F64);
+        assert!(ell.spill.is_empty());
+        let x: Vec<f64> = (0..64).map(|i| (i as f64 * 0.7).cos()).collect();
+        let mut want = vec![0.0; 64];
+        csr.spmv(&x, &mut want);
+        let mut got = vec![0.0; 64];
+        ell.spmv_ref(&x, &mut got);
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn spill_preserves_exact_result() {
+        let csr = random_csr(64, 0.2, 5);
+        // Deliberately narrow width forces spilling.
+        let ell = Ell::from_csr(&csr, 2, Storage::F64);
+        assert!(!ell.spill.is_empty());
+        let x: Vec<f64> = (0..64).map(|i| 1.0 + (i % 7) as f64).collect();
+        let mut want = vec![0.0; 64];
+        csr.spmv(&x, &mut want);
+        let mut got = vec![0.0; 64];
+        ell.spmv_ref(&x, &mut got);
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn nnz_is_preserved_across_widths() {
+        let csr = random_csr(40, 0.15, 9);
+        for w in [1, 2, 4, 16] {
+            let ell = Ell::from_csr(&csr, w, Storage::F64);
+            assert_eq!(ell.nnz(), csr.nnz(), "width {w}");
+        }
+    }
+
+    #[test]
+    fn f32_storage_quantizes_values() {
+        let mut coo = Coo::new(1, 2);
+        coo.push(0, 0, 1.000000119); // not representable in f32 exactly
+        coo.push(0, 1, 2.0);
+        coo.canonicalize();
+        let csr = Csr::from_coo(&coo);
+        let ell32 = Ell::from_csr(&csr, 2, Storage::F32);
+        let ell64 = Ell::from_csr(&csr, 2, Storage::F64);
+        assert_eq!(ell32.values.get_f64(0), 1.000000119f32 as f64);
+        assert_eq!(ell64.values.get_f64(0), 1.000000119);
+    }
+
+    #[test]
+    fn padding_ratio_reflects_width() {
+        let csr = random_csr(50, 0.05, 13);
+        let tight = Ell::from_csr(&csr, csr.max_row_nnz().max(1), Storage::F32);
+        let wide = Ell::from_csr(&csr, csr.max_row_nnz().max(1) * 4, Storage::F32);
+        assert!(wide.padding_ratio() > tight.padding_ratio());
+    }
+
+    #[test]
+    fn bytes_accounting() {
+        let csr = random_csr(32, 0.1, 21);
+        let e32 = Ell::from_csr(&csr, 4, Storage::F32);
+        let e64 = Ell::from_csr(&csr, 4, Storage::F64);
+        assert_eq!(e32.col_idx.len(), 32 * 4);
+        assert!(e64.bytes() > e32.bytes());
+    }
+}

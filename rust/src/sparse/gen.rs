@@ -1,0 +1,351 @@
+//! Synthetic sparse matrix generators.
+//!
+//! The paper evaluates on 15 SuiteSparse matrices (Table I). This offline
+//! environment cannot download them, so each matrix is stood in for by a
+//! generator of the same *class* (DESIGN.md §5): what the solver's behaviour
+//! depends on — degree distribution, bandwidth/locality, nnz balance — is a
+//! property of the class, not the specific instance. A MatrixMarket loader
+//! ([`super::mmio`]) accepts the real files when available.
+//!
+//! All generators produce canonicalized [`Coo`] matrices. Weights are
+//! uniform in (0, 1]; spectral pipelines on graphs typically use the
+//! (weighted) adjacency or its normalization, which [`Coo::symmetrize`] and
+//! [`Coo::normalize_by_max_degree`] provide.
+
+use super::Coo;
+use crate::rng::Rng;
+
+/// Erdős–Rényi G(n, p)-style uniform random graph — the `URAND` class
+/// (GAP-urand is a uniform random graph). Expected nnz ≈ `n² p`.
+pub fn erdos_renyi(rows: usize, cols: usize, p: f64, symmetric: bool, rng: &mut Rng) -> Coo {
+    // Geometric skipping: sample the gaps between successive edges so the
+    // cost is O(nnz), not O(n²).
+    let mut coo = Coo::new(rows, cols);
+    if p <= 0.0 {
+        return coo;
+    }
+    let total = (rows as u128) * (cols as u128);
+    let log1mp = (1.0 - p.min(1.0 - 1e-12)).ln();
+    let mut idx: u128 = 0;
+    loop {
+        let u = rng.f64().max(1e-300);
+        let skip = (u.ln() / log1mp).floor() as u128 + 1;
+        idx += skip;
+        if idx > total {
+            break;
+        }
+        let flat = idx - 1;
+        let r = (flat / cols as u128) as u32;
+        let c = (flat % cols as u128) as u32;
+        coo.push(r, c, 0.5 + 0.5 * rng.f64());
+    }
+    coo.canonicalize();
+    if symmetric {
+        coo.symmetrize();
+    }
+    coo
+}
+
+/// R-MAT / Kronecker-style power-law graph — the `KRON` and web-crawl class
+/// (GAP-kron is an R-MAT graph; wiki/web graphs share the skewed degree
+/// distribution). Parameters follow the Graph500 defaults.
+pub fn rmat(scale: u32, edge_factor: usize, symmetric: bool, rng: &mut Rng) -> Coo {
+    let n = 1usize << scale;
+    let nnz_target = n * edge_factor;
+    let (a, b, c) = (0.57, 0.19, 0.19); // Graph500: d = 0.05
+    let mut coo = Coo::new(n, n);
+    for _ in 0..nnz_target {
+        let (mut r, mut c_) = (0usize, 0usize);
+        for level in (0..scale).rev() {
+            let u = rng.f64();
+            let (dr, dc) = if u < a {
+                (0, 0)
+            } else if u < a + b {
+                (0, 1)
+            } else if u < a + b + c {
+                (1, 0)
+            } else {
+                (1, 1)
+            };
+            r |= dr << level;
+            c_ |= dc << level;
+        }
+        coo.push(r as u32, c_ as u32, 0.5 + 0.5 * rng.f64());
+    }
+    coo.canonicalize();
+    if symmetric {
+        coo.symmetrize();
+    }
+    coo
+}
+
+/// Road-network-like mesh — the `*_osm` / `road_central` class: huge
+/// diameter, tiny bounded degree, strong locality. A jittered 2-D grid with
+/// a small fraction of shortcut edges.
+pub fn road_mesh(side: usize, shortcut_fraction: f64, rng: &mut Rng) -> Coo {
+    let n = side * side;
+    let mut coo = Coo::new(n, n);
+    let id = |x: usize, y: usize| (x * side + y) as u32;
+    for x in 0..side {
+        for y in 0..side {
+            // 4-neighbourhood with ~8% of local edges dropped (jitter),
+            // mimicking irregular road meshes.
+            if x + 1 < side && !rng.chance(0.08) {
+                coo.push(id(x, y), id(x + 1, y), 0.5 + 0.5 * rng.f64());
+            }
+            if y + 1 < side && !rng.chance(0.08) {
+                coo.push(id(x, y), id(x, y + 1), 0.5 + 0.5 * rng.f64());
+            }
+        }
+    }
+    let shortcuts = ((n as f64) * shortcut_fraction) as usize;
+    for _ in 0..shortcuts {
+        let u = rng.below(n as u64) as u32;
+        let v = rng.below(n as u64) as u32;
+        if u != v {
+            coo.push(u, v, 0.5 + 0.5 * rng.f64());
+        }
+    }
+    coo.canonicalize();
+    coo.symmetrize();
+    coo
+}
+
+/// Chung–Lu power-law graph — the social/web class (Flickr, wiki-Talk,
+/// web-Google): degree sequence `deg(i) ∝ (i+1)^(-1/(γ-1))` with exponent
+/// `γ` (typically 2.1–2.5 for web graphs).
+pub fn power_law(n: usize, avg_degree: f64, gamma: f64, rng: &mut Rng) -> Coo {
+    assert!(gamma > 1.0);
+    // Target weights w_i; edges sampled by picking endpoints ∝ w.
+    let alpha = 1.0 / (gamma - 1.0);
+    let mut w: Vec<f64> = (0..n).map(|i| ((i + 1) as f64).powf(-alpha)).collect();
+    let wsum: f64 = w.iter().sum();
+    let scale = avg_degree * n as f64 / wsum;
+    for wi in &mut w {
+        *wi *= scale;
+    }
+    // Cumulative table for O(log n) endpoint sampling.
+    let mut cdf = vec![0.0f64; n + 1];
+    for i in 0..n {
+        cdf[i + 1] = cdf[i] + w[i];
+    }
+    let total = cdf[n];
+    let nnz_target = (avg_degree * n as f64 / 2.0) as usize;
+    let mut coo = Coo::new(n, n);
+    let sample = |rng: &mut Rng, cdf: &[f64]| -> u32 {
+        let t = rng.f64() * total;
+        // binary search for the first cdf[i+1] > t
+        let mut lo = 0usize;
+        let mut hi = n;
+        while lo < hi {
+            let mid = (lo + hi) / 2;
+            if cdf[mid + 1] > t {
+                hi = mid;
+            } else {
+                lo = mid + 1;
+            }
+        }
+        lo as u32
+    };
+    for _ in 0..nnz_target {
+        let u = sample(rng, &cdf);
+        let v = sample(rng, &cdf);
+        if u != v {
+            coo.push(u, v, 0.5 + 0.5 * rng.f64());
+        }
+    }
+    coo.canonicalize();
+    coo.symmetrize();
+    coo
+}
+
+/// Stochastic block model with explicit community sizes — the workload of
+/// the spectral-clustering example (the paper's §I motivating application).
+/// Uneven sizes split the community eigenvalues, which matters for Lanczos:
+/// a single-vector Krylov space recovers only one eigenvector per
+/// *degenerate* eigenvalue.
+pub fn sbm_sized(sizes: &[usize], p_in: f64, p_out: f64, rng: &mut Rng) -> (Coo, Vec<usize>) {
+    let n: usize = sizes.iter().sum();
+    let mut labels = Vec::with_capacity(n);
+    for (c, &s) in sizes.iter().enumerate() {
+        labels.extend(std::iter::repeat(c).take(s));
+    }
+    sbm_from_labels(n, labels, p_in, p_out, rng)
+}
+
+/// Stochastic block model with `k` equal communities.
+/// `p_in`/`p_out` are within/between-community edge probabilities.
+pub fn sbm(n: usize, k: usize, p_in: f64, p_out: f64, rng: &mut Rng) -> (Coo, Vec<usize>) {
+    assert!(k >= 1 && n >= k);
+    let labels: Vec<usize> = (0..n).map(|i| i * k / n).collect();
+    sbm_from_labels(n, labels, p_in, p_out, rng)
+}
+
+fn sbm_from_labels(
+    n: usize,
+    labels: Vec<usize>,
+    p_in: f64,
+    p_out: f64,
+    rng: &mut Rng,
+) -> (Coo, Vec<usize>) {
+    let mut coo = Coo::new(n, n);
+    // O(n²) Bernoulli is fine at example scale; use geometric skipping per
+    // block row for larger n.
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let p = if labels[i] == labels[j] { p_in } else { p_out };
+            if rng.chance(p) {
+                coo.push(i as u32, j as u32, 1.0);
+            }
+        }
+    }
+    coo.canonicalize();
+    coo.symmetrize();
+    (coo, labels)
+}
+
+/// Diagonally-dominant symmetric matrix with known spectral structure:
+/// `A = Q Λ Qᵀ` would be dense, so instead we use a banded symmetric matrix
+/// whose eigenvalues are analytically known — a tridiagonal Toeplitz matrix
+/// with diagonal `d` and off-diagonal `e` has eigenvalues
+/// `d + 2e·cos(kπ/(n+1))`. Used by integration tests to validate the full
+/// solver against closed-form eigenpairs.
+pub fn tridiag_toeplitz(n: usize, d: f64, e: f64) -> Coo {
+    let mut coo = Coo::new(n, n);
+    for i in 0..n {
+        coo.push(i as u32, i as u32, d);
+        if i + 1 < n {
+            coo.push(i as u32, (i + 1) as u32, e);
+            coo.push((i + 1) as u32, i as u32, e);
+        }
+    }
+    coo.canonicalize();
+    coo
+}
+
+/// Analytic eigenvalues of [`tridiag_toeplitz`], descending by magnitude.
+pub fn tridiag_toeplitz_eigs(n: usize, d: f64, e: f64) -> Vec<f64> {
+    let mut eigs: Vec<f64> = (1..=n)
+        .map(|k| d + 2.0 * e * (k as f64 * std::f64::consts::PI / (n as f64 + 1.0)).cos())
+        .collect();
+    eigs.sort_by(|a, b| b.abs().partial_cmp(&a.abs()).unwrap());
+    eigs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn erdos_renyi_nnz_near_expectation() {
+        let mut rng = Rng::new(1);
+        let coo = erdos_renyi(500, 500, 0.01, false, &mut rng);
+        let expect = 500.0 * 500.0 * 0.01;
+        assert!((coo.nnz() as f64 - expect).abs() < expect * 0.2);
+    }
+
+    #[test]
+    fn symmetric_generators_are_symmetric() {
+        let mut rng = Rng::new(2);
+        for coo in [
+            erdos_renyi(100, 100, 0.05, true, &mut rng),
+            rmat(7, 8, true, &mut rng),
+            road_mesh(12, 0.01, &mut rng),
+            power_law(150, 6.0, 2.3, &mut rng),
+        ] {
+            let d = coo.to_dense();
+            for r in 0..coo.rows {
+                for c in 0..coo.cols {
+                    assert!(
+                        (d[r][c] - d[c][r]).abs() < 1e-14,
+                        "asymmetry at ({r},{c})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rmat_degree_distribution_is_skewed() {
+        let mut rng = Rng::new(3);
+        let coo = rmat(10, 16, true, &mut rng);
+        let csr = super::super::Csr::from_coo(&coo);
+        let max = csr.max_row_nnz();
+        let p50 = csr.row_nnz_quantile(0.5);
+        // Power-law-ish: the hub is much denser than the median row.
+        assert!(max > p50 * 4, "max {max} p50 {p50}");
+    }
+
+    #[test]
+    fn road_mesh_degree_is_bounded() {
+        let mut rng = Rng::new(4);
+        let coo = road_mesh(20, 0.005, &mut rng);
+        let csr = super::super::Csr::from_coo(&coo);
+        assert!(csr.max_row_nnz() <= 10);
+    }
+
+    #[test]
+    fn power_law_tail() {
+        let mut rng = Rng::new(5);
+        let coo = power_law(1000, 8.0, 2.2, &mut rng);
+        let csr = super::super::Csr::from_coo(&coo);
+        assert!(csr.max_row_nnz() > 3 * csr.row_nnz_quantile(0.5).max(1));
+    }
+
+    #[test]
+    fn sbm_community_structure() {
+        let mut rng = Rng::new(6);
+        let (coo, labels) = sbm(120, 3, 0.3, 0.01, &mut rng);
+        let mut within = 0usize;
+        let mut between = 0usize;
+        for i in 0..coo.nnz() {
+            if labels[coo.row_idx[i] as usize] == labels[coo.col_idx[i] as usize] {
+                within += 1;
+            } else {
+                between += 1;
+            }
+        }
+        assert!(within > between * 3, "within {within} between {between}");
+    }
+
+    #[test]
+    fn sbm_sized_respects_sizes_and_labels() {
+        let mut rng = Rng::new(8);
+        let sizes = [50usize, 30, 20];
+        let (coo, labels) = sbm_sized(&sizes, 0.4, 0.02, &mut rng);
+        assert_eq!(coo.rows, 100);
+        assert_eq!(labels.len(), 100);
+        for (c, &s) in sizes.iter().enumerate() {
+            assert_eq!(labels.iter().filter(|&&l| l == c).count(), s);
+        }
+        // labels are contiguous blocks
+        assert!(labels.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn toeplitz_eigs_match_dense_power_iteration() {
+        // Largest analytic eigenvalue vs. a simple power iteration. Small n
+        // keeps the spectral gap wide enough for power iteration to
+        // converge tightly.
+        let n = 10;
+        let coo = tridiag_toeplitz(n, 2.0, -1.0);
+        let eigs = tridiag_toeplitz_eigs(n, 2.0, -1.0);
+        let mut x: Vec<f64> = (0..n).map(|i| 1.0 + 0.1 * i as f64).collect();
+        for _ in 0..5000 {
+            let y = coo.spmv_ref(&x);
+            let norm = y.iter().map(|v| v * v).sum::<f64>().sqrt();
+            x = y.iter().map(|v| v / norm).collect();
+        }
+        let y = coo.spmv_ref(&x);
+        let lambda: f64 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+        assert!((lambda - eigs[0]).abs() < 1e-6, "{lambda} vs {}", eigs[0]);
+    }
+
+    #[test]
+    fn generators_are_deterministic() {
+        let a = rmat(6, 4, true, &mut Rng::new(42));
+        let b = rmat(6, 4, true, &mut Rng::new(42));
+        assert_eq!(a.row_idx, b.row_idx);
+        assert_eq!(a.values, b.values);
+    }
+}

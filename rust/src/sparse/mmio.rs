@@ -1,0 +1,254 @@
+//! MatrixMarket (.mtx) reader/writer.
+//!
+//! Supports the coordinate format with `real`, `integer` and `pattern`
+//! fields and the `general` / `symmetric` symmetry modes — enough to load
+//! every Table I matrix from the SuiteSparse collection when the files are
+//! available locally (`topk-eigen solve --matrix path.mtx`).
+
+use super::Coo;
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+/// Errors produced by the MatrixMarket parser.
+#[derive(Debug, thiserror::Error)]
+pub enum MmioError {
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("not a MatrixMarket file (missing %%MatrixMarket header)")]
+    BadHeader,
+    #[error("unsupported MatrixMarket variant: {0}")]
+    Unsupported(String),
+    #[error("parse error at line {line}: {msg}")]
+    Parse { line: usize, msg: String },
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum Field {
+    Real,
+    Integer,
+    Pattern,
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum Symmetry {
+    General,
+    Symmetric,
+}
+
+/// Read a MatrixMarket coordinate file into a canonical [`Coo`].
+///
+/// `symmetric` files are expanded (both triangles materialized). Pattern
+/// files get unit weights.
+pub fn read_matrix_market(path: &Path) -> Result<Coo, MmioError> {
+    let f = File::open(path)?;
+    let mut reader = BufReader::new(f);
+    let mut line = String::new();
+    let mut lineno = 0usize;
+
+    // Banner: %%MatrixMarket matrix coordinate <field> <symmetry>
+    reader.read_line(&mut line)?;
+    lineno += 1;
+    let banner = line.trim().to_ascii_lowercase();
+    if !banner.starts_with("%%matrixmarket") {
+        return Err(MmioError::BadHeader);
+    }
+    let toks: Vec<&str> = banner.split_whitespace().collect();
+    if toks.len() < 5 || toks[1] != "matrix" || toks[2] != "coordinate" {
+        return Err(MmioError::Unsupported(banner.clone()));
+    }
+    let field = match toks[3] {
+        "real" => Field::Real,
+        "integer" => Field::Integer,
+        "pattern" => Field::Pattern,
+        other => return Err(MmioError::Unsupported(format!("field {other}"))),
+    };
+    let symmetry = match toks[4] {
+        "general" => Symmetry::General,
+        "symmetric" => Symmetry::Symmetric,
+        other => return Err(MmioError::Unsupported(format!("symmetry {other}"))),
+    };
+
+    // Skip comments, read size line.
+    let (rows, cols, nnz) = loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Err(MmioError::Parse { line: lineno, msg: "missing size line".into() });
+        }
+        lineno += 1;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        let parts: Vec<&str> = t.split_whitespace().collect();
+        if parts.len() != 3 {
+            return Err(MmioError::Parse { line: lineno, msg: "bad size line".into() });
+        }
+        let parse = |s: &str| -> Result<usize, MmioError> {
+            s.parse().map_err(|_| MmioError::Parse {
+                line: lineno,
+                msg: format!("bad integer '{s}'"),
+            })
+        };
+        break (parse(parts[0])?, parse(parts[1])?, parse(parts[2])?);
+    };
+
+    let mut coo = Coo::new(rows, cols);
+    coo.row_idx.reserve(nnz);
+    coo.col_idx.reserve(nnz);
+    coo.values.reserve(nnz);
+    let mut read_entries = 0usize;
+    while read_entries < nnz {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Err(MmioError::Parse {
+                line: lineno,
+                msg: format!("expected {nnz} entries, found {read_entries}"),
+            });
+        }
+        lineno += 1;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let r: usize = it
+            .next()
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| MmioError::Parse { line: lineno, msg: "bad row".into() })?;
+        let c: usize = it
+            .next()
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| MmioError::Parse { line: lineno, msg: "bad col".into() })?;
+        let v: f64 = match field {
+            Field::Pattern => 1.0,
+            _ => it
+                .next()
+                .and_then(|s| s.parse().ok())
+                .ok_or_else(|| MmioError::Parse { line: lineno, msg: "bad value".into() })?,
+        };
+        if r == 0 || c == 0 || r > rows || c > cols {
+            return Err(MmioError::Parse {
+                line: lineno,
+                msg: format!("index ({r},{c}) out of bounds (1-based)"),
+            });
+        }
+        let (r0, c0) = ((r - 1) as u32, (c - 1) as u32);
+        coo.push(r0, c0, v);
+        if symmetry == Symmetry::Symmetric && r != c {
+            coo.push(c0, r0, v);
+        }
+        read_entries += 1;
+    }
+    coo.canonicalize();
+    Ok(coo)
+}
+
+/// Write a [`Coo`] as a `general real` MatrixMarket coordinate file.
+pub fn write_matrix_market(path: &Path, coo: &Coo) -> Result<(), MmioError> {
+    let f = File::create(path)?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "%%MatrixMarket matrix coordinate real general")?;
+    writeln!(w, "% written by topk-eigen")?;
+    writeln!(w, "{} {} {}", coo.rows, coo.cols, coo.nnz())?;
+    for i in 0..coo.nnz() {
+        writeln!(
+            w,
+            "{} {} {:.17e}",
+            coo.row_idx[i] + 1,
+            coo.col_idx[i] + 1,
+            coo.values[i]
+        )?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::sparse::gen;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("topk_eigen_test_{name}_{}.mtx", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn roundtrip_random_matrix() {
+        let mut rng = Rng::new(7);
+        let coo = gen::erdos_renyi(30, 30, 0.1, true, &mut rng);
+        let path = tmpfile("roundtrip");
+        write_matrix_market(&path, &coo).unwrap();
+        let back = read_matrix_market(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(coo.rows, back.rows);
+        assert_eq!(coo.nnz(), back.nnz());
+        assert_eq!(coo.row_idx, back.row_idx);
+        assert_eq!(coo.col_idx, back.col_idx);
+        for (a, b) in coo.values.iter().zip(&back.values) {
+            assert!((a - b).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn reads_symmetric_pattern() {
+        let path = tmpfile("sympat");
+        std::fs::write(
+            &path,
+            "%%MatrixMarket matrix coordinate pattern symmetric\n\
+             % comment line\n\
+             3 3 3\n\
+             1 1\n\
+             2 1\n\
+             3 2\n",
+        )
+        .unwrap();
+        let coo = read_matrix_market(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        // (2,1) and (3,2) expand to both triangles; (1,1) diagonal stays single.
+        assert_eq!(coo.nnz(), 5);
+        let d = coo.to_dense();
+        assert_eq!(d[0][0], 1.0);
+        assert_eq!(d[0][1], 1.0);
+        assert_eq!(d[1][0], 1.0);
+        assert_eq!(d[2][1], 1.0);
+        assert_eq!(d[1][2], 1.0);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let path = tmpfile("garbage");
+        std::fs::write(&path, "not a matrix\n1 2 3\n").unwrap();
+        let err = read_matrix_market(&path);
+        std::fs::remove_file(&path).ok();
+        assert!(matches!(err, Err(MmioError::BadHeader)));
+    }
+
+    #[test]
+    fn rejects_out_of_bounds_index() {
+        let path = tmpfile("oob");
+        std::fs::write(
+            &path,
+            "%%MatrixMarket matrix coordinate real general\n2 2 1\n3 1 1.0\n",
+        )
+        .unwrap();
+        let err = read_matrix_market(&path);
+        std::fs::remove_file(&path).ok();
+        assert!(matches!(err, Err(MmioError::Parse { .. })));
+    }
+
+    #[test]
+    fn rejects_truncated_file() {
+        let path = tmpfile("trunc");
+        std::fs::write(
+            &path,
+            "%%MatrixMarket matrix coordinate real general\n2 2 2\n1 1 1.0\n",
+        )
+        .unwrap();
+        let err = read_matrix_market(&path);
+        std::fs::remove_file(&path).ok();
+        assert!(matches!(err, Err(MmioError::Parse { .. })));
+    }
+}

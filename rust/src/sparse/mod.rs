@@ -1,0 +1,47 @@
+//! Sparse matrix substrate: storage formats, I/O, generators, partitioning.
+//!
+//! The host-side "master" copies of matrices are kept in `f64` ([`Coo`],
+//! [`Csr`]); device slabs are produced in the configured *storage* precision
+//! when building [`Ell`] blocks (the paper stores in f32, accumulates in f64
+//! for the FDF configuration — see [`crate::precision`]).
+//!
+//! All indices are `u32`: the paper's largest matrices have 134 M rows, and
+//! 32-bit indices halve index bandwidth, exactly as a GPU implementation
+//! would choose.
+
+pub mod coo;
+pub mod csr;
+pub mod ell;
+pub mod gen;
+pub mod mmio;
+pub mod partition;
+pub mod suite;
+
+pub use coo::Coo;
+pub use csr::Csr;
+pub use ell::Ell;
+pub use partition::{partition_by_nnz, RowPartition};
+
+/// Matrix shape + nnz summary used across tables and logs.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SparseStats {
+    pub rows: usize,
+    pub cols: usize,
+    pub nnz: usize,
+}
+
+impl SparseStats {
+    /// Fraction of non-zero entries, as the paper's Table I "Sparsity (%)".
+    pub fn sparsity_percent(&self) -> f64 {
+        if self.rows == 0 || self.cols == 0 {
+            return 0.0;
+        }
+        100.0 * self.nnz as f64 / (self.rows as f64 * self.cols as f64)
+    }
+
+    /// Memory footprint in GB when stored as COO (row u32 + col u32 + f32),
+    /// matching Table I's "Size (GB)" accounting.
+    pub fn coo_size_gb(&self) -> f64 {
+        (self.nnz as f64 * (4.0 + 4.0 + 4.0)) / 1e9
+    }
+}

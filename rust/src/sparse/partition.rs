@@ -1,0 +1,182 @@
+//! nnz-balanced row partitioning (paper §III-A).
+//!
+//! The input matrix is split into `G` contiguous row ranges such that each
+//! range holds ≈ `nnz/G` non-zeros. Row ranges (not 2-D tiles) keep the
+//! gather source — the replicated `v_i` — identical on every device, which
+//! is the invariant the paper's round-robin replica swap relies on.
+
+use super::Csr;
+
+/// A contiguous row range assigned to one device.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RowPartition {
+    /// Device index this partition is assigned to.
+    pub device: usize,
+    /// First row (inclusive).
+    pub row_start: usize,
+    /// Last row (exclusive).
+    pub row_end: usize,
+    /// Non-zeros inside the range.
+    pub nnz: usize,
+}
+
+impl RowPartition {
+    pub fn rows(&self) -> usize {
+        self.row_end - self.row_start
+    }
+}
+
+/// Split `csr` into `g` contiguous partitions balancing nnz.
+pub fn partition_by_nnz(csr: &Csr, g: usize) -> Vec<RowPartition> {
+    partition_by_weight(csr, g, |deg| deg)
+}
+
+/// Split `csr` into `g` contiguous partitions balancing Σ weight(row_nnz).
+///
+/// The paper balances raw nnz (its CUDA CSR SpMV cost is ∝ nnz). Our ELL
+/// device format pays `min(deg, width)` regular slots per row plus a cheap
+/// host-side spill, so the coordinator balances the *capped* degree — on
+/// power-law graphs raw-nnz balance leaves the tail device with several
+/// times the ELL slots of the hub device (see DESIGN.md §Perf).
+///
+/// Greedy sweep: cut as soon as the running weight reaches the ideal share
+/// of the *remaining* weight over the remaining partitions — this adapts
+/// later cuts when an early hub row overshoots, and guarantees every
+/// partition is non-empty (as long as `g ≤ rows`).
+pub fn partition_by_weight<F>(csr: &Csr, g: usize, weight: F) -> Vec<RowPartition>
+where
+    F: Fn(usize) -> usize,
+{
+    assert!(g >= 1, "need at least one device");
+    assert!(g <= csr.rows.max(1), "more devices than rows");
+    let total_w: usize = (0..csr.rows).map(|r| weight(csr.row_nnz(r))).sum();
+    let mut parts = Vec::with_capacity(g);
+    let mut row = 0usize;
+    let mut consumed_w = 0usize;
+    for dev in 0..g {
+        let remaining_parts = g - dev;
+        let remaining_rows_needed = remaining_parts - 1; // rows to leave behind
+        let target = (total_w - consumed_w) / remaining_parts;
+        let start = row;
+        let mut w_here = 0usize;
+        let mut nnz_here = 0usize;
+        // Always take at least one row; stop when target reached or when we
+        // must leave one row per remaining partition.
+        while row < csr.rows - remaining_rows_needed {
+            if row > start && w_here >= target && dev + 1 < g {
+                break;
+            }
+            w_here += weight(csr.row_nnz(row));
+            nnz_here += csr.row_nnz(row);
+            row += 1;
+            if dev + 1 == g {
+                continue; // last partition swallows the rest
+            }
+        }
+        if dev + 1 == g {
+            // last partition takes everything left
+            while row < csr.rows {
+                w_here += weight(csr.row_nnz(row));
+                nnz_here += csr.row_nnz(row);
+                row += 1;
+            }
+        }
+        consumed_w += w_here;
+        parts.push(RowPartition {
+            device: dev,
+            row_start: start,
+            row_end: row,
+            nnz: nnz_here,
+        });
+    }
+    debug_assert_eq!(parts.last().unwrap().row_end, csr.rows);
+    debug_assert_eq!(parts.iter().map(|p| p.nnz).sum::<usize>(), csr.nnz());
+    parts
+}
+
+/// Max/mean nnz imbalance across partitions (1.0 = perfectly balanced).
+pub fn imbalance(parts: &[RowPartition]) -> f64 {
+    if parts.is_empty() {
+        return 1.0;
+    }
+    let total: usize = parts.iter().map(|p| p.nnz).sum();
+    let mean = total as f64 / parts.len() as f64;
+    if mean == 0.0 {
+        return 1.0;
+    }
+    parts.iter().map(|p| p.nnz as f64).fold(0.0, f64::max) / mean
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::sparse::{gen, Coo, Csr};
+
+    fn to_csr(coo: &Coo) -> Csr {
+        Csr::from_coo(coo)
+    }
+
+    #[test]
+    fn covers_all_rows_disjointly() {
+        let mut rng = Rng::new(1);
+        let csr = to_csr(&gen::erdos_renyi(200, 200, 0.03, true, &mut rng));
+        for g in [1, 2, 3, 4, 8] {
+            let parts = partition_by_nnz(&csr, g);
+            assert_eq!(parts.len(), g);
+            assert_eq!(parts[0].row_start, 0);
+            assert_eq!(parts.last().unwrap().row_end, csr.rows);
+            for w in parts.windows(2) {
+                assert_eq!(w[0].row_end, w[1].row_start);
+            }
+            let nnz_sum: usize = parts.iter().map(|p| p.nnz).sum();
+            assert_eq!(nnz_sum, csr.nnz());
+        }
+    }
+
+    #[test]
+    fn balance_is_reasonable_on_uniform_graph() {
+        let mut rng = Rng::new(2);
+        let csr = to_csr(&gen::erdos_renyi(2000, 2000, 0.01, true, &mut rng));
+        let parts = partition_by_nnz(&csr, 8);
+        assert!(imbalance(&parts) < 1.15, "imbalance {}", imbalance(&parts));
+    }
+
+    #[test]
+    fn balance_on_skewed_graph() {
+        let mut rng = Rng::new(3);
+        let csr = to_csr(&gen::rmat(11, 8, true, &mut rng));
+        let parts = partition_by_nnz(&csr, 4);
+        // Power-law hubs make perfect balance impossible, but the adaptive
+        // sweep should stay within 2x of the mean.
+        assert!(imbalance(&parts) < 2.0, "imbalance {}", imbalance(&parts));
+    }
+
+    #[test]
+    fn single_partition_is_whole_matrix() {
+        let mut rng = Rng::new(4);
+        let csr = to_csr(&gen::erdos_renyi(50, 50, 0.1, true, &mut rng));
+        let parts = partition_by_nnz(&csr, 1);
+        assert_eq!(parts[0].row_start, 0);
+        assert_eq!(parts[0].row_end, 50);
+        assert_eq!(parts[0].nnz, csr.nnz());
+    }
+
+    #[test]
+    fn every_partition_nonempty_even_with_many_devices() {
+        let mut rng = Rng::new(5);
+        let csr = to_csr(&gen::erdos_renyi(16, 16, 0.3, true, &mut rng));
+        let parts = partition_by_nnz(&csr, 16);
+        for p in &parts {
+            assert!(p.rows() >= 1);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_more_devices_than_rows() {
+        let mut rng = Rng::new(6);
+        let csr = to_csr(&gen::erdos_renyi(4, 4, 0.5, true, &mut rng));
+        partition_by_nnz(&csr, 5);
+    }
+}

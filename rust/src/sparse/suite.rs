@@ -1,0 +1,189 @@
+//! The evaluation matrix suite (paper Table I), reproduced by class.
+//!
+//! Each of the paper's 15 SuiteSparse matrices is stood in for by a
+//! generator of the same structural class at a configurable `scale`
+//! (DESIGN.md §5). `scale = 1.0` targets the CI-friendly default (~10³–10⁵
+//! rows); larger scales approach the paper's sizes when time/memory allow.
+//! If a local `.mtx` file is supplied, it replaces the generator.
+
+use super::{gen, Coo, Csr};
+use crate::rng::Rng;
+
+/// Structural class of a suite matrix, selecting the generator.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MatrixClass {
+    /// Social/communication power-law (wiki-Talk, Flickr, Wikipedia).
+    PowerLaw,
+    /// Web crawl: power-law with more locality (web-Google, web-Berkstan, wb-edu).
+    Web,
+    /// Road / mesh network: bounded degree, huge diameter (*_osm, road_central, hugetrace, venturi).
+    Road,
+    /// Citation graph: moderate skew (patents).
+    Citation,
+    /// R-MAT Kronecker (GAP-kron).
+    Kron,
+    /// Uniform random (GAP-urand).
+    Urand,
+}
+
+/// One row of Table I: the paper's matrix and our stand-in recipe.
+#[derive(Clone, Copy, Debug)]
+pub struct SuiteEntry {
+    /// Table I ID (e.g. "WB-TA").
+    pub id: &'static str,
+    /// SuiteSparse name (e.g. "wiki-Talk").
+    pub name: &'static str,
+    /// Rows in the paper, millions.
+    pub paper_rows_m: f64,
+    /// Non-zeros in the paper, millions.
+    pub paper_nnz_m: f64,
+    /// Structural class driving the generator.
+    pub class: MatrixClass,
+    /// Whether the matrix is out-of-core in the paper (KRON/URAND).
+    pub out_of_core: bool,
+}
+
+/// The 15 matrices of Table I in paper order (increasing nnz).
+pub const SUITE: [SuiteEntry; 15] = [
+    SuiteEntry { id: "WB-TA", name: "wiki-Talk",       paper_rows_m: 2.39,   paper_nnz_m: 5.02,    class: MatrixClass::PowerLaw, out_of_core: false },
+    SuiteEntry { id: "WB-GO", name: "web-Google",      paper_rows_m: 0.91,   paper_nnz_m: 5.11,    class: MatrixClass::Web,      out_of_core: false },
+    SuiteEntry { id: "WB-BE", name: "web-Berkstan",    paper_rows_m: 0.69,   paper_nnz_m: 7.60,    class: MatrixClass::Web,      out_of_core: false },
+    SuiteEntry { id: "FL",    name: "Flickr",          paper_rows_m: 0.82,   paper_nnz_m: 9.84,    class: MatrixClass::PowerLaw, out_of_core: false },
+    SuiteEntry { id: "IT",    name: "italy_osm",       paper_rows_m: 6.69,   paper_nnz_m: 14.02,   class: MatrixClass::Road,     out_of_core: false },
+    SuiteEntry { id: "PA",    name: "patents",         paper_rows_m: 3.77,   paper_nnz_m: 14.97,   class: MatrixClass::Citation, out_of_core: false },
+    SuiteEntry { id: "VL3",   name: "venturiLevel3",   paper_rows_m: 4.02,   paper_nnz_m: 16.10,   class: MatrixClass::Road,     out_of_core: false },
+    SuiteEntry { id: "DE",    name: "germany_osm",     paper_rows_m: 11.54,  paper_nnz_m: 24.73,   class: MatrixClass::Road,     out_of_core: false },
+    SuiteEntry { id: "ASIA",  name: "asia_osm",        paper_rows_m: 11.95,  paper_nnz_m: 25.42,   class: MatrixClass::Road,     out_of_core: false },
+    SuiteEntry { id: "RC",    name: "road_central",    paper_rows_m: 14.08,  paper_nnz_m: 33.87,   class: MatrixClass::Road,     out_of_core: false },
+    SuiteEntry { id: "WK",    name: "Wikipedia",       paper_rows_m: 3.56,   paper_nnz_m: 45.00,   class: MatrixClass::PowerLaw, out_of_core: false },
+    SuiteEntry { id: "HT",    name: "hugetrace-00020", paper_rows_m: 16.00,  paper_nnz_m: 47.80,   class: MatrixClass::Road,     out_of_core: false },
+    SuiteEntry { id: "WB",    name: "wb-edu",          paper_rows_m: 9.84,   paper_nnz_m: 57.15,   class: MatrixClass::Web,      out_of_core: false },
+    SuiteEntry { id: "KRON",  name: "GAP-kron",        paper_rows_m: 134.21, paper_nnz_m: 4223.26, class: MatrixClass::Kron,     out_of_core: true },
+    SuiteEntry { id: "URAND", name: "GAP-urand",       paper_rows_m: 134.21, paper_nnz_m: 4294.96, class: MatrixClass::Urand,    out_of_core: true },
+];
+
+/// Look up a suite entry by Table I ID (case-insensitive).
+pub fn find(id: &str) -> Option<&'static SuiteEntry> {
+    SUITE.iter().find(|e| e.id.eq_ignore_ascii_case(id))
+}
+
+impl SuiteEntry {
+    /// Target row count at a given scale. `scale = 1.0` maps the paper's
+    /// millions of rows to thousands (1e-3 linear factor) so the full suite
+    /// runs in CI; `--scale 10` etc. grows linearly from there.
+    pub fn target_rows(&self, scale: f64) -> usize {
+        ((self.paper_rows_m * 1e3 * scale).round() as usize).max(64)
+    }
+
+    /// Target average degree, preserved from the paper (nnz/rows is
+    /// scale-invariant, and it is what drives SpMV behaviour).
+    pub fn target_avg_degree(&self) -> f64 {
+        self.paper_nnz_m / self.paper_rows_m
+    }
+
+    /// Generate the stand-in matrix at `scale` with the suite's seed policy
+    /// (deterministic per entry: seed ⊕ id hash).
+    pub fn generate(&self, scale: f64, seed: u64) -> Coo {
+        let mut h = 0u64;
+        for b in self.id.bytes() {
+            h = h.wrapping_mul(131).wrapping_add(b as u64);
+        }
+        let mut rng = Rng::new(seed ^ h);
+        let n = self.target_rows(scale);
+        let deg = self.target_avg_degree();
+        let mut coo = match self.class {
+            MatrixClass::Urand => {
+                let p = deg / n as f64;
+                gen::erdos_renyi(n, n, p, true, &mut rng)
+            }
+            MatrixClass::Kron => {
+                let scale_log2 = (n as f64).log2().ceil() as u32;
+                gen::rmat(scale_log2, (deg / 2.0).ceil() as usize, true, &mut rng)
+            }
+            MatrixClass::PowerLaw => gen::power_law(n, deg, 2.2, &mut rng),
+            MatrixClass::Web => gen::power_law(n, deg, 2.5, &mut rng),
+            MatrixClass::Citation => gen::power_law(n, deg, 3.0, &mut rng),
+            MatrixClass::Road => {
+                let side = (n as f64).sqrt().round() as usize;
+                gen::road_mesh(side.max(8), 0.002, &mut rng)
+            }
+        };
+        coo.normalize_by_max_degree();
+        coo
+    }
+
+    /// Generate and convert to CSR in one step.
+    pub fn generate_csr(&self, scale: f64, seed: u64) -> Csr {
+        Csr::from_coo(&self.generate(scale, seed))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_is_sorted_by_paper_nnz() {
+        for w in SUITE.windows(2) {
+            assert!(w[0].paper_nnz_m <= w[1].paper_nnz_m);
+        }
+    }
+
+    #[test]
+    fn find_is_case_insensitive() {
+        assert_eq!(find("kron").unwrap().id, "KRON");
+        assert_eq!(find("wb-ta").unwrap().id, "WB-TA");
+        assert!(find("nope").is_none());
+    }
+
+    #[test]
+    fn generated_matrices_are_square_and_symmetric() {
+        for e in &SUITE[..4] {
+            let coo = e.generate(0.2, 42);
+            assert_eq!(coo.rows, coo.cols);
+            // spot-check symmetry on a sample of entries
+            let d = if coo.rows <= 4096 { Some(coo.to_dense()) } else { None };
+            if let Some(d) = d {
+                for r in (0..coo.rows).step_by(7) {
+                    for c in (0..coo.cols).step_by(11) {
+                        assert!((d[r][c] - d[c][r]).abs() < 1e-14);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn avg_degree_tracks_paper() {
+        // Degree ratios (not absolute sizes) are the scale-invariant target.
+        let e = find("WK").unwrap();
+        let csr = e.generate_csr(1.0, 7);
+        let got = csr.nnz() as f64 / csr.rows as f64;
+        let want = e.target_avg_degree();
+        assert!(
+            got > want * 0.4 && got < want * 2.5,
+            "avg degree {got} vs paper {want}"
+        );
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let e = find("FL").unwrap();
+        let a = e.generate(0.2, 9);
+        let b = e.generate(0.2, 9);
+        assert_eq!(a.row_idx, b.row_idx);
+        assert_eq!(a.values, b.values);
+    }
+
+    #[test]
+    fn normalization_bounds_row_sums() {
+        let e = find("WB-GO").unwrap();
+        let coo = e.generate(0.3, 3);
+        let mut rowsum = vec![0.0f64; coo.rows];
+        for i in 0..coo.nnz() {
+            rowsum[coo.row_idx[i] as usize] += coo.values[i].abs();
+        }
+        let m = rowsum.iter().cloned().fold(0.0, f64::max);
+        assert!(m <= 1.0 + 1e-12);
+    }
+}

@@ -1,0 +1,150 @@
+//! Failure-injection tests: every user-facing error path must fail
+//! loudly, early, and with an actionable message — not corrupt results.
+
+use topk_eigen::coordinator::{SolverConfig, TopKSolver};
+use topk_eigen::rng::Rng;
+use topk_eigen::runtime::{Manifest, PjrtKernels};
+use topk_eigen::sparse::{gen, mmio, Coo, Csr};
+use std::path::Path;
+
+fn small_graph() -> Csr {
+    let mut rng = Rng::new(1);
+    Csr::from_coo(&gen::erdos_renyi(50, 50, 0.2, true, &mut rng))
+}
+
+#[test]
+fn rejects_non_square_matrix() {
+    let mut rng = Rng::new(2);
+    let coo = gen::erdos_renyi(30, 40, 0.2, false, &mut rng);
+    let m = Csr::from_coo(&coo);
+    let err = TopKSolver::new(SolverConfig::default()).solve(&m).unwrap_err();
+    assert!(err.to_string().contains("square"), "{err}");
+}
+
+#[test]
+fn rejects_bad_k() {
+    let m = small_graph();
+    for k in [0usize, 50, 100] {
+        let cfg = SolverConfig { k, ..Default::default() };
+        let err = TopKSolver::new(cfg).solve(&m).unwrap_err();
+        assert!(err.to_string().contains('K') || err.to_string().contains('k'), "{err}");
+    }
+}
+
+#[test]
+fn rejects_bad_device_counts() {
+    let m = small_graph();
+    for devices in [0usize, 9, 100] {
+        let cfg = SolverConfig { devices, ..Default::default() };
+        assert!(TopKSolver::new(cfg).solve(&m).is_err(), "devices={devices}");
+    }
+}
+
+#[test]
+fn oom_on_vectors_is_a_clean_error() {
+    let m = small_graph();
+    let cfg = SolverConfig { k: 8, device_mem_bytes: 64, ..Default::default() };
+    let err = TopKSolver::new(cfg).solve(&m).unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("cannot hold"), "{msg}");
+    assert!(msg.contains("device-mem") || msg.contains("devices"), "{msg}");
+}
+
+#[test]
+fn pjrt_backend_requires_artifacts() {
+    let err = match PjrtKernels::new(Path::new("/definitely/not/a/dir")) {
+        Err(e) => e,
+        Ok(_) => panic!("expected missing-artifacts error"),
+    };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("manifest"), "{msg}");
+}
+
+#[test]
+fn manifest_validation_names_the_missing_kernel() {
+    let dir = std::env::temp_dir().join(format!("topk_manifest_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(
+        dir.join("manifest.tsv"),
+        "# name\tfile\tkernel\tptag\tparams\nspmv_x\tspmv_x.hlo.txt\tspmv\ts32c64\tr=4;w=4;n=4\n",
+    )
+    .unwrap();
+    let p = PjrtKernels::new(&dir).unwrap();
+    let err = p.validate_for(&topk_eigen::precision::PrecisionConfig::FDF).unwrap_err();
+    assert!(err.to_string().contains("dot"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn manifest_rejects_garbage_rows() {
+    assert!(Manifest::parse(Path::new("/x"), "only\tthree\tcolumns\n").is_err());
+    assert!(Manifest::parse(Path::new("/x"), "a\tb\tc\td\tnot_kv\n").is_err());
+    assert!(Manifest::parse(Path::new("/x"), "a\tb\tc\td\tl=NaN\n").is_err());
+}
+
+#[test]
+fn mmio_failures_are_reported_not_panicked() {
+    assert!(mmio::read_matrix_market(Path::new("/no/such/file.mtx")).is_err());
+}
+
+#[test]
+fn solver_handles_pathological_inputs_finite() {
+    // Zero matrix: every SpMV is zero — β breaks down immediately at every
+    // step; the solver must recover and return all-zero eigenvalues.
+    let mut coo = Coo::new(30, 30);
+    coo.push(0, 0, 0.0); // structurally empty after canonicalize
+    coo.canonicalize();
+    let m = Csr::from_coo(&coo);
+    let cfg = SolverConfig { k: 3, ..Default::default() };
+    let sol = TopKSolver::new(cfg).solve(&m).unwrap();
+    assert!(sol.stats.breakdowns > 0);
+    for l in &sol.eigenvalues {
+        assert!(l.is_finite());
+        assert!(l.abs() < 1e-9, "zero matrix must have zero spectrum, got {l}");
+    }
+}
+
+#[test]
+fn solver_survives_huge_value_range() {
+    // Values spanning 12 orders of magnitude: no NaN/Inf anywhere.
+    let mut coo = Coo::new(40, 40);
+    for i in 0..40u32 {
+        coo.push(i, i, if i % 2 == 0 { 1e-6 } else { 1e6 });
+        if i + 1 < 40 {
+            coo.push(i, i + 1, 1e-3);
+            coo.push(i + 1, i, 1e-3);
+        }
+    }
+    coo.canonicalize();
+    let m = Csr::from_coo(&coo);
+    let sol = TopKSolver::new(SolverConfig { k: 4, ..Default::default() })
+        .solve(&m)
+        .unwrap();
+    for (l, v) in sol.eigenvalues.iter().zip(&sol.eigenvectors) {
+        assert!(l.is_finite());
+        assert!(v.iter().all(|x| x.is_finite()));
+    }
+    // Dominant eigenvalue ≈ 1e6 (the large diagonal entries dominate).
+    assert!((sol.eigenvalues[0] - 1e6).abs() < 1.0);
+}
+
+#[test]
+fn disconnected_graph_solves_cleanly() {
+    // Two components: Lanczos sees an invariant subspace quickly.
+    let mut rng = Rng::new(5);
+    let a = gen::erdos_renyi(25, 25, 0.3, true, &mut rng);
+    let b = gen::erdos_renyi(25, 25, 0.3, true, &mut rng);
+    let mut coo = Coo::new(50, 50);
+    for i in 0..a.nnz() {
+        coo.push(a.row_idx[i], a.col_idx[i], a.values[i]);
+    }
+    for i in 0..b.nnz() {
+        coo.push(b.row_idx[i] + 25, b.col_idx[i] + 25, b.values[i]);
+    }
+    coo.canonicalize();
+    let m = Csr::from_coo(&coo);
+    let sol = TopKSolver::new(SolverConfig { k: 6, ..Default::default() })
+        .solve(&m)
+        .unwrap();
+    assert!(sol.eigenvalues.iter().all(|l| l.is_finite()));
+}

@@ -1,0 +1,208 @@
+//! Integration tests for the PJRT artifact path.
+//!
+//! These tests require `make artifacts` to have produced `artifacts/` in the
+//! repository root (the Makefile's `test` target guarantees this). They
+//! close the correctness chain: Pallas kernels == ref.py (pytest) and
+//! PjrtKernels == HostKernels (here), so the full production path is pinned
+//! to the pure-rust oracle that the unit suite validates.
+
+use std::path::PathBuf;
+use topk_eigen::coordinator::{SolverConfig, TopKSolver};
+use topk_eigen::precision::PrecisionConfig;
+use topk_eigen::rng::Rng;
+use topk_eigen::runtime::{HostKernels, Kernels, PjrtKernels};
+use topk_eigen::sparse::{gen, Csr, Ell};
+
+fn artifact_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("TOPK_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn pjrt() -> PjrtKernels {
+    PjrtKernels::new(&artifact_dir()).expect(
+        "artifacts missing — run `make artifacts` (the Makefile test target does this)",
+    )
+}
+
+fn rand_vec(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    let mut v = vec![0.0; n];
+    rng.fill_uniform(&mut v);
+    v
+}
+
+#[test]
+fn validates_all_precision_configs() {
+    let p = pjrt();
+    for cfg in PrecisionConfig::ALL {
+        p.validate_for(&cfg).unwrap();
+    }
+}
+
+#[test]
+fn spmv_matches_hostsim_all_precisions() {
+    let mut rng = Rng::new(11);
+    let coo = gen::erdos_renyi(300, 300, 0.05, true, &mut rng);
+    let csr = Csr::from_coo(&coo);
+    let x = rand_vec(300, 12);
+    let mut p = pjrt();
+    let mut h = HostKernels::new();
+    for cfg in PrecisionConfig::ALL {
+        let ell = Ell::from_csr(&csr, 8, cfg.storage); // narrow → exercises spill
+        let got = p.spmv(&ell, &x, &cfg);
+        let want = h.spmv(&ell, &x, &cfg);
+        assert_eq!(got.len(), want.len());
+        for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+            assert!(
+                (a - b).abs() <= 1e-6 * b.abs().max(1.0),
+                "{}: row {i}: pjrt {a} vs host {b}",
+                cfg.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn dot_matches_hostsim() {
+    let a = rand_vec(5000, 1);
+    let b = rand_vec(5000, 2);
+    let mut p = pjrt();
+    let mut h = HostKernels::new();
+    for cfg in PrecisionConfig::ALL {
+        let got = p.dot(&a, &b, &cfg);
+        let want = h.dot(&a, &b, &cfg);
+        // Reduction order differs (block partials vs linear), so allow the
+        // corresponding rounding slack per compute dtype.
+        let tol = match cfg.compute {
+            topk_eigen::precision::Compute::F64 => 1e-10,
+            topk_eigen::precision::Compute::F32 => 1e-3,
+        };
+        assert!(
+            (got - want).abs() <= tol * want.abs().max(1.0),
+            "{}: {got} vs {want}",
+            cfg.name()
+        );
+    }
+}
+
+#[test]
+fn candidate_matches_hostsim() {
+    let vt = rand_vec(3000, 3);
+    let vi = rand_vec(3000, 4);
+    let vp = rand_vec(3000, 5);
+    let mut p = pjrt();
+    let mut h = HostKernels::new();
+    for cfg in PrecisionConfig::ALL {
+        let (v1, ss1) = p.candidate(&vt, &vi, &vp, 0.37, 1.21, &cfg);
+        let (v2, ss2) = h.candidate(&vt, &vi, &vp, 0.37, 1.21, &cfg);
+        for (a, b) in v1.iter().zip(&v2) {
+            assert!((a - b).abs() <= 1e-6, "{}: {a} vs {b}", cfg.name());
+        }
+        assert!(
+            (ss1 - ss2).abs() <= 1e-3 * ss2.max(1.0),
+            "{}: sumsq {ss1} vs {ss2}",
+            cfg.name()
+        );
+    }
+}
+
+#[test]
+fn normalize_and_ortho_match_hostsim() {
+    let u = rand_vec(2000, 6);
+    let vj = rand_vec(2000, 7);
+    let mut p = pjrt();
+    let mut h = HostKernels::new();
+    for cfg in PrecisionConfig::ALL {
+        // f32 storage: XLA may contract mul+sub differently than the host
+        // mirror — allow a couple of ULP at f32 scale.
+        let tol = match cfg.storage {
+            topk_eigen::precision::Storage::F32 => 1e-6,
+            topk_eigen::precision::Storage::F64 => 1e-12,
+        };
+        let n1 = p.normalize(&u, 2.5, &cfg);
+        let n2 = h.normalize(&u, 2.5, &cfg);
+        for (a, b) in n1.iter().zip(&n2) {
+            assert!((a - b).abs() <= tol, "{}: normalize {a} vs {b}", cfg.name());
+        }
+        let o1 = p.ortho_update(&u, &vj, 0.77, &cfg);
+        let o2 = h.ortho_update(&u, &vj, 0.77, &cfg);
+        for (a, b) in o1.iter().zip(&o2) {
+            assert!((a - b).abs() <= tol, "{}: ortho {a} vs {b}", cfg.name());
+        }
+    }
+}
+
+#[test]
+fn project_matches_hostsim() {
+    let k = 8;
+    let len = 500;
+    let basis: Vec<Vec<f64>> = (0..k).map(|j| rand_vec(len, 100 + j as u64)).collect();
+    let coeff: Vec<Vec<f64>> = (0..k).map(|t| rand_vec(k, 200 + t as u64)).collect();
+    let mut p = pjrt();
+    let mut h = HostKernels::new();
+    for cfg in PrecisionConfig::ALL {
+        let y1 = p.project(&basis, &coeff, &cfg);
+        let y2 = h.project(&basis, &coeff, &cfg);
+        assert_eq!(y1.len(), y2.len());
+        for (va, vb) in y1.iter().zip(&y2) {
+            for (a, b) in va.iter().zip(vb) {
+                assert!(
+                    (a - b).abs() <= 1e-5 * b.abs().max(1.0),
+                    "{}: {a} vs {b}",
+                    cfg.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn end_to_end_solve_pjrt_matches_hostsim_ddd() {
+    let mut rng = Rng::new(21);
+    let coo = gen::erdos_renyi(400, 400, 0.03, true, &mut rng);
+    let m = Csr::from_coo(&coo);
+    let cfg = SolverConfig {
+        k: 6,
+        devices: 2,
+        precision: PrecisionConfig::DDD,
+        ..Default::default()
+    };
+    let host = TopKSolver::new(cfg.clone()).solve(&m).unwrap();
+    let pjrt_sol = TopKSolver::with_pjrt(cfg, &artifact_dir()).unwrap().solve(&m).unwrap();
+    assert_eq!(pjrt_sol.stats.backend, "pjrt");
+    for (a, b) in host.eigenvalues.iter().zip(&pjrt_sol.eigenvalues) {
+        assert!((a - b).abs() < 1e-8, "host {a} vs pjrt {b}");
+    }
+    // Tridiagonal coefficients must agree too (same algorithm, same order).
+    for (a, b) in host.alpha.iter().zip(&pjrt_sol.alpha) {
+        assert!((a - b).abs() < 1e-8, "alpha host {a} vs pjrt {b}");
+    }
+}
+
+#[test]
+fn end_to_end_solve_pjrt_fdf_close_to_ddd() {
+    let mut rng = Rng::new(22);
+    let coo = gen::power_law(500, 6.0, 2.4, &mut rng);
+    let m = Csr::from_coo(&coo);
+    let base = SolverConfig { k: 8, ..Default::default() };
+    let ddd = TopKSolver::with_pjrt(
+        SolverConfig { precision: PrecisionConfig::DDD, ..base.clone() },
+        &artifact_dir(),
+    )
+    .unwrap()
+    .solve(&m)
+    .unwrap();
+    let fdf = TopKSolver::with_pjrt(
+        SolverConfig { precision: PrecisionConfig::FDF, ..base },
+        &artifact_dir(),
+    )
+    .unwrap()
+    .solve(&m)
+    .unwrap();
+    // FDF stores f32: eigenvalues should track DDD at f32 resolution.
+    for (a, b) in ddd.eigenvalues.iter().take(4).zip(&fdf.eigenvalues) {
+        assert!((a - b).abs() < 1e-3 * a.abs().max(1e-3), "ddd {a} vs fdf {b}");
+    }
+}

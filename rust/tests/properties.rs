@@ -1,0 +1,274 @@
+//! Property-based invariants across the whole substrate (DESIGN.md §7),
+//! using the in-repo `prop` mini-framework (no proptest offline).
+//!
+//! Replay a failure with `PROP_SEED=<case> PROP_CASES=1 cargo test ...`.
+
+use topk_eigen::jacobi::{jacobi_eigen_f64, DenseSym};
+use topk_eigen::precision::{PrecisionConfig, Storage};
+use topk_eigen::prop::{assert_close, forall};
+use topk_eigen::rng::Rng;
+use topk_eigen::runtime::{HostKernels, Kernels};
+use topk_eigen::sparse::{gen, partition_by_nnz, Coo, Csr, Ell};
+
+fn random_graph(rng: &mut Rng) -> Csr {
+    let n = rng.range(20, 300);
+    let kind = rng.below(3);
+    let coo = match kind {
+        0 => gen::erdos_renyi(n, n, 4.0 / n as f64, true, rng),
+        1 => gen::power_law(n, 5.0, 2.0 + rng.f64(), rng),
+        _ => {
+            let side = ((n as f64).sqrt() as usize).max(4);
+            gen::road_mesh(side, 0.01, rng)
+        }
+    };
+    Csr::from_coo(&coo)
+}
+
+#[test]
+fn prop_partitioned_spmv_equals_whole() {
+    // Σ_g M_g x (per-partition SpMV stitched) == M x — the invariant the
+    // multi-device decomposition rests on.
+    forall("partitioned spmv equals whole", |rng| {
+        let m = random_graph(rng);
+        let g = 1 + rng.below(8) as usize;
+        if g > m.rows {
+            return Ok(());
+        }
+        let parts = partition_by_nnz(&m, g);
+        let x: Vec<f64> = (0..m.cols).map(|_| 2.0 * rng.f64() - 1.0).collect();
+        let mut whole = vec![0.0; m.rows];
+        m.spmv(&x, &mut whole);
+        let mut stitched = vec![0.0; m.rows];
+        for p in &parts {
+            let slice = m.slice_rows(p.row_start, p.row_end);
+            let mut y = vec![0.0; p.rows()];
+            slice.spmv(&x, &mut y);
+            stitched[p.row_start..p.row_end].copy_from_slice(&y);
+        }
+        assert_close(&stitched, &whole, 1e-12)
+    });
+}
+
+#[test]
+fn prop_partition_balance_bound() {
+    // No partition exceeds mean + the heaviest single row (the greedy
+    // sweep's worst case).
+    forall("partition balance", |rng| {
+        let m = random_graph(rng);
+        let g = 1 + rng.below(8) as usize;
+        if g > m.rows {
+            return Ok(());
+        }
+        let parts = partition_by_nnz(&m, g);
+        let mean = m.nnz() as f64 / g as f64;
+        let heaviest = m.max_row_nnz() as f64;
+        for p in &parts {
+            if p.nnz as f64 > mean + heaviest + 1.0 {
+                return Err(format!(
+                    "partition {} nnz {} exceeds mean {mean} + max row {heaviest}",
+                    p.device, p.nnz
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_format_roundtrips() {
+    // COO → CSR → COO preserves the matrix exactly.
+    forall("coo/csr roundtrip", |rng| {
+        let m = random_graph(rng);
+        let coo = m.to_coo();
+        let m2 = Csr::from_coo(&coo);
+        if m.indptr != m2.indptr || m.col_idx != m2.col_idx {
+            return Err("structure changed".into());
+        }
+        assert_close(&m.values, &m2.values, 0.0)
+    });
+}
+
+#[test]
+fn prop_ell_preserves_spmv_any_width() {
+    // ELL + spill == CSR SpMV for every width, both storage dtypes (f64
+    // exactly, f32 to storage precision).
+    forall("ell spmv any width", |rng| {
+        let m = random_graph(rng);
+        let w = 1 + rng.below(12) as usize;
+        let x: Vec<f64> = (0..m.cols).map(|_| 2.0 * rng.f64() - 1.0).collect();
+        let mut want = vec![0.0; m.rows];
+        m.spmv(&x, &mut want);
+        let ell = Ell::from_csr(&m, w, Storage::F64);
+        let mut got = vec![0.0; m.rows];
+        ell.spmv_ref(&x, &mut got);
+        assert_close(&got, &want, 1e-12)?;
+        let ell32 = Ell::from_csr(&m, w, Storage::F32);
+        let mut got32 = vec![0.0; m.rows];
+        ell32.spmv_ref(&x, &mut got32);
+        assert_close(&got32, &want, 1e-5)
+    });
+}
+
+#[test]
+fn prop_jacobi_reconstructs() {
+    // ‖A − VΛVᵀ‖_F small and V orthonormal, for random symmetric A.
+    forall("jacobi reconstruction", |rng| {
+        let k = 2 + rng.below(24) as usize;
+        let mut m = DenseSym::zeros(k);
+        for r in 0..k {
+            for c in r..k {
+                let v = 2.0 * rng.f64() - 1.0;
+                m.set(r, c, v);
+                m.set(c, r, v);
+            }
+        }
+        let e = jacobi_eigen_f64(&m, 1e-13, 100);
+        // reconstruct
+        let mut err = 0.0f64;
+        for r in 0..k {
+            for c in 0..k {
+                let mut a = 0.0;
+                for (lam, vec) in e.values.iter().zip(&e.vectors) {
+                    a += lam * vec[r] * vec[c];
+                }
+                err += (a - m.get(r, c)).powi(2);
+            }
+        }
+        if err.sqrt() > 1e-9 {
+            return Err(format!("‖A − VΛVᵀ‖ = {}", err.sqrt()));
+        }
+        // orthonormality
+        for i in 0..k {
+            for j in 0..k {
+                let d: f64 = e.vectors[i].iter().zip(&e.vectors[j]).map(|(a, b)| a * b).sum();
+                let want = if i == j { 1.0 } else { 0.0 };
+                if (d - want).abs() > 1e-9 {
+                    return Err(format!("V not orthonormal at ({i},{j}): {d}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mixed_precision_dot_error_bound() {
+    // |dot_fdf − dot_exact| ≤ n·eps32·Σ|a||b| (storage quantization bound);
+    // FFF obeys the (much looser) f32 accumulation bound.
+    forall("mixed dot error bound", |rng| {
+        let n = 1 + rng.range(1, 5000);
+        let a: Vec<f64> = (0..n).map(|_| 2.0 * rng.f64() - 1.0).collect();
+        let b: Vec<f64> = (0..n).map(|_| 2.0 * rng.f64() - 1.0).collect();
+        let exact = topk_eigen::linalg::dot_kahan(&a, &b);
+        let abs_sum: f64 = a.iter().zip(&b).map(|(x, y)| (x * y).abs()).sum();
+        let mut k = HostKernels::new();
+        let fdf = k.dot(&a, &b, &PrecisionConfig::FDF);
+        let eps32 = f32::EPSILON as f64;
+        // quantizing both inputs: ~2·eps32 relative per product, plus slack
+        let bound = 8.0 * eps32 * abs_sum + 1e-12;
+        if (fdf - exact).abs() > bound {
+            return Err(format!("FDF err {} > bound {bound}", (fdf - exact).abs()));
+        }
+        let fff = k.dot(&a, &b, &PrecisionConfig::FFF);
+        let bound_fff = 4.0 * eps32 * abs_sum * (n as f64).sqrt() + 8.0 * eps32 * abs_sum + 1e-12;
+        if (fff - exact).abs() > bound_fff {
+            return Err(format!("FFF err {} > bound {bound_fff}", (fff - exact).abs()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_ring_swap_covers_all_replicas() {
+    forall("ring swap coverage", |rng| {
+        let g = 1 + rng.below(8) as usize;
+        let have = topk_eigen::coordinator::ring::coverage(g);
+        for (d, row) in have.iter().enumerate() {
+            for (p, &h) in row.iter().enumerate() {
+                if !h {
+                    return Err(format!("g={g}: device {d} missing partition {p}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_symmetrize_idempotent_on_symmetric() {
+    forall("symmetrize idempotent", |rng| {
+        let m = random_graph(rng); // generators emit symmetric matrices
+        let mut coo = m.to_coo();
+        coo.canonicalize();
+        let before = coo.values.clone();
+        let (ri, ci) = (coo.row_idx.clone(), coo.col_idx.clone());
+        coo.symmetrize();
+        if coo.row_idx != ri || coo.col_idx != ci {
+            return Err("structure changed".into());
+        }
+        assert_close(&coo.values, &before, 1e-12)
+    });
+}
+
+#[test]
+fn prop_mmio_roundtrip() {
+    forall("matrixmarket roundtrip", |rng| {
+        let n = rng.range(2, 60);
+        let coo = gen::erdos_renyi(n, n, 0.2, false, rng);
+        let path = std::env::temp_dir().join(format!(
+            "topk_prop_{}_{}.mtx",
+            std::process::id(),
+            rng.next_u64()
+        ));
+        topk_eigen::sparse::mmio::write_matrix_market(&path, &coo)
+            .map_err(|e| e.to_string())?;
+        let back = topk_eigen::sparse::mmio::read_matrix_market(&path)
+            .map_err(|e| e.to_string())?;
+        std::fs::remove_file(&path).ok();
+        if back.nnz() != coo.nnz() || back.rows != coo.rows {
+            return Err("shape/nnz changed".into());
+        }
+        assert_close(&back.values, &coo.values, 1e-15)
+    });
+}
+
+#[test]
+fn prop_lanczos_t_matrix_is_well_formed() {
+    // α finite, β > 0 (or flagged breakdown), for random graphs and configs.
+    forall("lanczos T well formed", |rng| {
+        let m = random_graph(rng);
+        let k = 2 + rng.below(6) as usize;
+        if k >= m.rows {
+            return Ok(());
+        }
+        let cfg = topk_eigen::coordinator::SolverConfig {
+            k,
+            devices: 1 + rng.below(4) as usize,
+            precision: PrecisionConfig::ALL[rng.below(3) as usize],
+            seed: rng.next_u64(),
+            ..Default::default()
+        };
+        if cfg.devices > m.rows {
+            return Ok(());
+        }
+        let sol = topk_eigen::coordinator::TopKSolver::new(cfg)
+            .solve(&m)
+            .map_err(|e| e.to_string())?;
+        for a in &sol.alpha {
+            if !a.is_finite() {
+                return Err(format!("non-finite alpha {a}"));
+            }
+        }
+        for b in &sol.beta {
+            if !b.is_finite() || *b < 0.0 {
+                return Err(format!("invalid beta {b}"));
+            }
+        }
+        for l in &sol.eigenvalues {
+            if !l.is_finite() {
+                return Err(format!("non-finite eigenvalue {l}"));
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,217 @@
+//! Cross-module integration tests: the GPU solver vs. the ARPACK-class CPU
+//! baseline vs. dense references, across the suite generators.
+
+use topk_eigen::baseline::{solve_topk_cpu, BaselineConfig};
+use topk_eigen::coordinator::{ReorthMode, SolverConfig, TopKSolver};
+use topk_eigen::metrics;
+use topk_eigen::precision::PrecisionConfig;
+use topk_eigen::rng::Rng;
+use topk_eigen::sparse::{gen, suite, Csr};
+
+/// Dense Jacobi eigensolver as ground truth for small n.
+fn dense_topk(m: &Csr, k: usize) -> Vec<f64> {
+    use topk_eigen::jacobi::{jacobi_eigen_f64, DenseSym};
+    let n = m.rows;
+    assert!(n <= 512, "dense reference is for small matrices");
+    let mut d = DenseSym::zeros(n);
+    for r in 0..n {
+        for i in m.indptr[r]..m.indptr[r + 1] {
+            d.set(r, m.col_idx[i] as usize, m.values[i]);
+        }
+    }
+    let e = jacobi_eigen_f64(&d, 1e-13, 200);
+    e.values[..k].to_vec()
+}
+
+#[test]
+fn gpu_solver_tracks_dense_ground_truth() {
+    let mut rng = Rng::new(101);
+    let m = Csr::from_coo(&gen::erdos_renyi(250, 250, 0.05, true, &mut rng));
+    let truth = dense_topk(&m, 3);
+    // ER spectra are semicircle-clustered — the hard case for Lanczos — so
+    // give the Krylov space headroom (K ≫ wanted pairs) and full reorth.
+    let cfg = SolverConfig { k: 40, precision: PrecisionConfig::DDD, ..Default::default() };
+    let sol = TopKSolver::new(cfg).solve(&m).unwrap();
+    for (got, want) in sol.eigenvalues.iter().take(3).zip(&truth) {
+        assert!((got - want).abs() < 1e-6 * want.abs().max(1.0), "{got} vs {want}");
+    }
+}
+
+#[test]
+fn gpu_and_cpu_baseline_agree_on_top_eigenvalues() {
+    let mut rng = Rng::new(102);
+    let m = Csr::from_coo(&gen::power_law(800, 7.0, 2.4, &mut rng));
+    let k = 4;
+    let gpu = TopKSolver::new(SolverConfig {
+        k: 24, // Krylov headroom so the top-4 converge
+        precision: PrecisionConfig::DDD,
+        devices: 2,
+        ..Default::default()
+    })
+    .solve(&m)
+    .unwrap();
+    let cpu = solve_topk_cpu(&m, k, &BaselineConfig::default());
+    for (a, b) in gpu.eigenvalues.iter().take(k).zip(&cpu.eigenvalues) {
+        assert!(
+            (a - b).abs() < 1e-3 * b.abs().max(1e-6),
+            "gpu {a} vs cpu {b}"
+        );
+    }
+}
+
+#[test]
+fn suite_generators_solve_cleanly_all_precisions() {
+    // Smoke the full pipeline over a sample of Table I classes × configs.
+    for id in ["WB-TA", "IT", "PA", "URAND"] {
+        let e = suite::find(id).unwrap();
+        let m = e.generate_csr(0.3, 5);
+        for cfg in PrecisionConfig::ALL {
+            let sol = TopKSolver::new(SolverConfig {
+                k: 6,
+                precision: cfg,
+                devices: 2,
+                ..Default::default()
+            })
+            .solve(&m)
+            .unwrap();
+            assert_eq!(sol.eigenvalues.len(), 6, "{id}/{}", cfg.name());
+            assert!(
+                sol.eigenvalues.iter().all(|l| l.is_finite()),
+                "{id}/{}: non-finite eigenvalue",
+                cfg.name()
+            );
+            // Suite matrices are degree-normalized: spectrum within [-1, 1]
+            // up to rounding.
+            assert!(
+                sol.eigenvalues[0].abs() <= 1.0 + 1e-6,
+                "{id}/{}: |λ1| = {}",
+                cfg.name(),
+                sol.eigenvalues[0]
+            );
+        }
+    }
+}
+
+#[test]
+fn precision_ladder_orders_error() {
+    // DDD ≤ FDF ≤ FFF in reconstruction error — the Fig. 4 ordering.
+    // Needs a matrix whose top-K Ritz pairs *converge*, so the residual
+    // floor is set by arithmetic, not by Krylov truncation: a separated
+    // decaying spectrum (diag spikes + weak coupling).
+    let n = 600;
+    let mut coo = topk_eigen::sparse::Coo::new(n, n);
+    for i in 0..n {
+        let d = if i < 16 { 1.0 / (1.0 + i as f64 * 0.35) } else { 0.01 };
+        coo.push(i as u32, i as u32, d);
+        if i + 1 < n {
+            coo.push(i as u32, (i + 1) as u32, 1e-4);
+            coo.push((i + 1) as u32, i as u32, 1e-4);
+        }
+    }
+    coo.canonicalize();
+    let m = Csr::from_coo(&coo);
+    let mut errs = std::collections::HashMap::new();
+    for cfg in PrecisionConfig::ALL {
+        let mut total = 0.0;
+        for seed in 0..3u64 {
+            let sol = TopKSolver::new(SolverConfig {
+                k: 16, // Krylov headroom: the top-4 pairs converge, so the
+                // residual floor is arithmetic, not truncation
+                precision: cfg,
+                seed: 1000 + seed,
+                ..Default::default()
+            })
+            .solve(&m)
+            .unwrap();
+            total += metrics::l2_residual(&m, sol.eigenvalues[0], &sol.eigenvectors[0]);
+        }
+        errs.insert(cfg.name(), total / 3.0);
+    }
+    let (fff, fdf, ddd) = (errs["FFF"], errs["FDF"], errs["DDD"]);
+    assert!(fff > fdf, "FFF {fff} must be worse than FDF {fdf}");
+    assert!(fff > ddd * 10.0, "FFF {fff} must be ≫ DDD {ddd}");
+    assert!(fdf <= fff, "FDF {fdf} must not exceed FFF {fff}");
+}
+
+#[test]
+fn reorth_modes_cost_and_quality_ladder() {
+    let mut rng = Rng::new(104);
+    let m = Csr::from_coo(&gen::erdos_renyi(600, 600, 0.02, true, &mut rng));
+    let mk = |reorth| SolverConfig {
+        k: 20,
+        reorth,
+        precision: PrecisionConfig::FFF,
+        ..Default::default()
+    };
+    let none = TopKSolver::new(mk(ReorthMode::None)).solve(&m).unwrap();
+    let alt = TopKSolver::new(mk(ReorthMode::Alternating)).solve(&m).unwrap();
+    let full = TopKSolver::new(mk(ReorthMode::Full)).solve(&m).unwrap();
+    // Cost ladder: more reorth ⇒ more kernels and more simulated time.
+    assert!(none.stats.kernels_launched < alt.stats.kernels_launched);
+    assert!(alt.stats.kernels_launched < full.stats.kernels_launched);
+    assert!(none.stats.phases.reorth == 0.0);
+    assert!(full.stats.phases.reorth > alt.stats.phases.reorth);
+    // Quality: full reorth at least as orthogonal as none (angle closer to 90°).
+    let dev = |s: &topk_eigen::coordinator::EigenSolution| {
+        (90.0 - metrics::avg_pairwise_angle_deg(&s.eigenvectors)).abs()
+    };
+    assert!(dev(&full) <= dev(&none) + 1e-6, "full {} none {}", dev(&full), dev(&none));
+}
+
+#[test]
+fn multi_gpu_shape_small_vs_large_matrices() {
+    // The Fig. 3a dichotomy: large matrices gain from 8 GPUs, small ones
+    // lose (PCIe pairs + launch overhead dominate).
+    let small = suite::find("WB-GO").unwrap().generate_csr(0.2, 3);
+    let large = suite::find("WK").unwrap().generate_csr(100.0, 3);
+    let run = |m: &Csr, g: usize| {
+        TopKSolver::new(SolverConfig {
+            k: 8,
+            devices: g,
+            reorth: ReorthMode::None,
+            device_mem_bytes: 256 << 20, // decouple from out-of-core effects
+            ..Default::default()
+        })
+        .solve(m)
+        .unwrap()
+        .stats
+        .sim_seconds
+    };
+    let large_1 = run(&large, 1);
+    let large_8 = run(&large, 8);
+    assert!(large_8 < large_1, "large: 8 GPUs {large_8} should beat 1 GPU {large_1}");
+    let small_1 = run(&small, 1);
+    let small_8 = run(&small, 8);
+    assert!(
+        small_8 > small_1 * 0.8,
+        "small: 8 GPUs {small_8} should not meaningfully beat 1 GPU {small_1}"
+    );
+}
+
+#[test]
+fn out_of_core_large_standin_runs() {
+    // KRON stand-in at a scale whose ELL slab exceeds the device budget.
+    let e = suite::find("KRON").unwrap();
+    let m = e.generate_csr(1.0, 11);
+    let cfg = SolverConfig {
+        k: 4,
+        devices: 1,
+        device_mem_bytes: 8 << 20,
+        ..Default::default()
+    };
+    let sol = TopKSolver::new(cfg).solve(&m).unwrap();
+    assert!(sol.stats.out_of_core, "KRON stand-in must stream");
+    assert!(sol.stats.h2d_bytes > 0);
+    assert!(sol.eigenvalues.iter().all(|l| l.is_finite()));
+}
+
+#[test]
+fn deterministic_given_seed() {
+    let m = suite::find("FL").unwrap().generate_csr(0.3, 7);
+    let cfg = SolverConfig { k: 6, devices: 3, ..Default::default() };
+    let a = TopKSolver::new(cfg.clone()).solve(&m).unwrap();
+    let b = TopKSolver::new(cfg).solve(&m).unwrap();
+    assert_eq!(a.eigenvalues, b.eigenvalues);
+    assert_eq!(a.alpha, b.alpha);
+    assert_eq!(a.beta, b.beta);
+}
