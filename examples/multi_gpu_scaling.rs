@@ -8,10 +8,11 @@
 //! ```
 
 use topk_eigen::cli;
-use topk_eigen::coordinator::{ReorthMode, SolverConfig, TopKSolver, TopologyKind};
+use topk_eigen::coordinator::{ReorthMode, TopologyKind};
 use topk_eigen::sparse::suite;
+use topk_eigen::{Eigensolve, Solver, SolverError};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), SolverError> {
     let args = cli::from_env();
     let scale: f64 = args.get_or("scale", 300.0);
     let m = suite::find("WK").unwrap().generate_csr(scale, 5);
@@ -29,15 +30,14 @@ fn main() -> anyhow::Result<()> {
     for (kind, label) in [(TopologyKind::Dgx1, "DGX-1"), (TopologyKind::NvSwitch, "NVSwitch")] {
         println!("--- {label} interconnect ---");
         for g in [1usize, 2, 4, 8] {
-            let cfg = SolverConfig {
-                k: 8,
-                devices: g,
-                reorth: ReorthMode::None,
-                device_mem_bytes: 2 << 30,
-                topology: kind,
-                ..Default::default()
-            };
-            let sol = TopKSolver::new(cfg).solve(&m)?;
+            let mut solver = Solver::builder()
+                .k(8)
+                .devices(g)
+                .reorth(ReorthMode::None)
+                .device_mem_bytes(2 << 30)
+                .topology(kind)
+                .build()?;
+            let sol = solver.solve(&m)?;
             let s = &sol.stats;
             if g == 1 {
                 t1 = s.sim_seconds;

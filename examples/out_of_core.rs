@@ -7,10 +7,10 @@
 //! cargo run --release --example out_of_core
 //! ```
 
-use topk_eigen::coordinator::{SolverConfig, TopKSolver};
 use topk_eigen::sparse::suite;
+use topk_eigen::{Eigensolve, Solver, SolverError};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), SolverError> {
     // The GAP-kron stand-in: the paper's flagship out-of-core matrix.
     let e = suite::find("KRON").unwrap();
     let m = e.generate_csr(1.0, 1234);
@@ -23,16 +23,22 @@ fn main() -> anyhow::Result<()> {
         e.paper_nnz_m * 12.0 / 1e3,
     );
 
-    let base = SolverConfig { k: 8, devices: 1, ..Default::default() };
-
     // In-core reference: plenty of device memory.
-    let incore_cfg = SolverConfig { device_mem_bytes: 1 << 30, ..base.clone() };
-    let incore = TopKSolver::new(incore_cfg).solve(&m)?;
+    let incore = Solver::builder()
+        .k(8)
+        .devices(1)
+        .device_mem_bytes(1 << 30)
+        .build()?
+        .solve(&m)?;
     assert!(!incore.stats.out_of_core);
 
     // Out-of-core: a device budget far below the slab size.
-    let ooc_cfg = SolverConfig { device_mem_bytes: 24 << 20, ..base };
-    let ooc = TopKSolver::new(ooc_cfg).solve(&m)?;
+    let ooc = Solver::builder()
+        .k(8)
+        .devices(1)
+        .device_mem_bytes(24 << 20)
+        .build()?
+        .solve(&m)?;
     assert!(ooc.stats.out_of_core, "expected the streamed path");
 
     println!("\n               in-core      out-of-core");
@@ -61,7 +67,9 @@ fn main() -> anyhow::Result<()> {
     // The streamer re-reads the slab once per Lanczos iteration.
     let per_iter = ooc.stats.h2d_bytes as f64 / ooc.stats.iterations as f64 / 1e6;
     println!("\nstreamed {per_iter:.1} MB per iteration (slab cycled through device memory)");
-    println!("OK: identical eigenvalues, {:.1}x sim-time cost for streaming.",
-        ooc.stats.sim_seconds / incore.stats.sim_seconds);
+    println!(
+        "OK: identical eigenvalues, {:.1}x sim-time cost for streaming.",
+        ooc.stats.sim_seconds / incore.stats.sim_seconds
+    );
     Ok(())
 }

@@ -8,12 +8,11 @@
 //! cargo run --release --example pagerank_spectral
 //! ```
 
-use topk_eigen::coordinator::{SolverConfig, TopKSolver};
 use topk_eigen::linalg::{dot_f64, normalize};
-use topk_eigen::precision::PrecisionConfig;
 use topk_eigen::sparse::suite;
+use topk_eigen::{Eigensolve, PrecisionConfig, Solver, SolverError};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), SolverError> {
     let m = suite::find("WB-BE").unwrap().generate_csr(2.0, 99);
     println!(
         "web-Berkstan stand-in: {} pages, {} links (symmetrized)",
@@ -21,14 +20,13 @@ fn main() -> anyhow::Result<()> {
         m.nnz()
     );
 
-    // --- Our solver: top-4 eigenpairs, FDF, 2 devices ---------------------
-    let cfg = SolverConfig {
-        k: 8,
-        precision: PrecisionConfig::FDF,
-        devices: 2,
-        ..Default::default()
-    };
-    let sol = TopKSolver::new(cfg).solve(&m)?;
+    // --- Our solver: top-8 eigenpairs, FDF, 2 devices ---------------------
+    let mut solver = Solver::builder()
+        .k(8)
+        .precision(PrecisionConfig::FDF)
+        .devices(2)
+        .build()?;
+    let sol = solver.solve(&m)?;
     let centrality = &sol.eigenvectors[0];
 
     // --- Reference: power iteration on the same matrix --------------------

@@ -8,25 +8,22 @@
 //! the mixed-precision FDF configuration on 2 simulated GPUs, and verifies
 //! the results against the eigenvalue definition.
 
-use topk_eigen::coordinator::{SolverConfig, TopKSolver};
 use topk_eigen::metrics;
-use topk_eigen::precision::PrecisionConfig;
 use topk_eigen::sparse::suite;
+use topk_eigen::{Eigensolve, PrecisionConfig, Solver, SolverError};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), SolverError> {
     // 1. A matrix: the web-Google stand-in from the paper's Table I suite.
     let matrix = suite::find("WB-GO").unwrap().generate_csr(1.0, 42);
     println!("matrix: {} rows, {} non-zeros", matrix.rows, matrix.nnz());
 
     // 2. A solver: K=8, float storage with double accumulation (FDF),
-    //    2 simulated GPUs, full reorthogonalization.
-    let cfg = SolverConfig {
-        k: 8,
-        precision: PrecisionConfig::FDF,
-        devices: 2,
-        ..Default::default()
-    };
-    let mut solver = TopKSolver::new(cfg);
+    //    2 simulated GPUs, full reorthogonalization (the default).
+    let mut solver = Solver::builder()
+        .k(8)
+        .precision(PrecisionConfig::FDF)
+        .devices(2)
+        .build()?;
 
     // 3. Solve.
     let solution = solver.solve(&matrix)?;

@@ -14,12 +14,12 @@
 //! cargo run --release --example spectral_clustering [-- --backend pjrt]
 //! ```
 
+use std::time::Instant;
 use topk_eigen::cli;
-use topk_eigen::coordinator::{SolverConfig, TopKSolver};
 use topk_eigen::precision::PrecisionConfig;
 use topk_eigen::rng::Rng;
 use topk_eigen::sparse::{gen, Csr};
-use std::time::Instant;
+use topk_eigen::{Backend, Eigensolve, Solver};
 
 /// Tiny k-means on row vectors (Lloyd's algorithm, k-means++ seeding).
 fn kmeans(points: &[Vec<f64>], k: usize, seed: u64, iters: usize) -> Vec<usize> {
@@ -120,7 +120,7 @@ fn permutations(k: usize) -> Vec<Vec<usize>> {
     out
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let args = cli::from_env();
     let n: usize = args.get_or("n", 1200usize);
     let communities = 3usize;
@@ -138,17 +138,15 @@ fn main() -> anyhow::Result<()> {
     let m = Csr::from_coo(&coo);
     println!("graph: {} vertices, {} edges (directed nnz)", m.rows, m.nnz());
 
+    // Backend selected uniformly through the facade (hostsim | pjrt | cpu).
+    let backend: Backend = args.try_get_or("backend", Backend::HostSim)?;
     for precision in [PrecisionConfig::FDF, PrecisionConfig::FFF] {
-        let cfg = SolverConfig {
-            k: 8, // K > #communities: extra Ritz headroom sharpens the top-3
-            precision,
-            devices: 4,
-            ..Default::default()
-        };
-        let mut solver = match args.get("backend") {
-            Some("pjrt") => TopKSolver::with_pjrt(cfg, std::path::Path::new("artifacts"))?,
-            _ => TopKSolver::new(cfg),
-        };
+        let mut solver = Solver::builder()
+            .k(8) // K > #communities: extra Ritz headroom sharpens the top-3
+            .precision(precision)
+            .devices(4)
+            .backend(backend.clone())
+            .build()?;
         let t0 = Instant::now();
         let sol = solver.solve(&m)?;
         let solve_s = t0.elapsed().as_secs_f64();

@@ -12,11 +12,11 @@
 //! Env: BENCH_SCALE (default 1.0).
 
 use topk_eigen::bench_util::{scale, Table};
-use topk_eigen::coordinator::{SolverConfig, TopKSolver};
 use topk_eigen::metrics;
 use topk_eigen::precision::PrecisionConfig;
 use topk_eigen::runtime::FixedPointKernels;
 use topk_eigen::sparse::suite::SUITE;
+use topk_eigen::{Eigensolve, Solver};
 
 fn main() {
     let s = scale();
@@ -24,15 +24,21 @@ fn main() {
     let mut t = Table::new(&["ID", "FFF err", "FIXED err", "FDF err", "DDD err", "fixed sat."]);
     for e in SUITE.iter().take(8) {
         let m = e.generate_csr(s * 20.0, 42);
-        let base = SolverConfig { k: 16, device_mem_bytes: 1 << 30, ..Default::default() };
+        let base = || Solver::builder().k(16).device_mem_bytes(1 << 30);
         let err_of = |sol: &topk_eigen::coordinator::EigenSolution| {
             metrics::mean_l2_residual(&m, &sol.eigenvalues[..4], &sol.eigenvectors[..4])
         };
         let mut row = vec![e.id.to_string()];
-        let fff = TopKSolver::new(SolverConfig { precision: PrecisionConfig::FFF, ..base.clone() })
+        let fff = base()
+            .precision(PrecisionConfig::FFF)
+            .build()
+            .expect("config")
             .solve(&m)
             .expect("solve");
-        let fixed = TopKSolver::with_kernels(base.clone(), Box::new(FixedPointKernels::new()))
+        let fixed = base()
+            .custom_kernels(Box::new(FixedPointKernels::new()))
+            .build()
+            .expect("config")
             .solve(&m)
             .expect("solve");
         // Saturation check: a dedicated backend probe over one SpMV pass
@@ -53,10 +59,16 @@ fn main() {
             );
             probe.saturations
         };
-        let fdf = TopKSolver::new(SolverConfig { precision: PrecisionConfig::FDF, ..base.clone() })
+        let fdf = base()
+            .precision(PrecisionConfig::FDF)
+            .build()
+            .expect("config")
             .solve(&m)
             .expect("solve");
-        let ddd = TopKSolver::new(SolverConfig { precision: PrecisionConfig::DDD, ..base })
+        let ddd = base()
+            .precision(PrecisionConfig::DDD)
+            .build()
+            .expect("config")
             .solve(&m)
             .expect("solve");
         row.push(format!("{:.2e}", err_of(&fff)));

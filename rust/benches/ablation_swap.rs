@@ -10,8 +10,9 @@
 
 use topk_eigen::bench_util::{scale, Table};
 use topk_eigen::coordinator::ring::SwapStrategy;
-use topk_eigen::coordinator::{ReorthMode, SolverConfig, TopKSolver, TopologyKind};
+use topk_eigen::coordinator::{ReorthMode, TopologyKind};
 use topk_eigen::sparse::suite;
+use topk_eigen::{Eigensolve, Solver};
 
 fn main() {
     let s = scale();
@@ -29,16 +30,17 @@ fn main() {
             (SwapStrategy::Broadcast, TopologyKind::Dgx1, "broadcast", "dgx1"),
             (SwapStrategy::Ring, TopologyKind::NvSwitch, "ring", "nvswitch"),
         ] {
-            let cfg = SolverConfig {
-                k: 8,
-                devices: g,
-                reorth: ReorthMode::None,
-                device_mem_bytes: 1 << 30,
-                swap: strategy,
-                topology,
-                ..Default::default()
-            };
-            let sol = TopKSolver::new(cfg).solve(&m).expect("solve");
+            let sol = Solver::builder()
+                .k(8)
+                .devices(g)
+                .reorth(ReorthMode::None)
+                .device_mem_bytes(1 << 30)
+                .swap(strategy)
+                .topology(topology)
+                .build()
+                .expect("config")
+                .solve(&m)
+                .expect("solve");
             let st = &sol.stats;
             if strategy == SwapStrategy::Ring && topology == TopologyKind::Dgx1 {
                 base_time = st.sim_seconds;

@@ -16,11 +16,12 @@
 //!
 //! Env: BENCH_SCALE (default 1.0), BENCH_KS (default "8,16,24").
 
-use topk_eigen::baseline::{solve_topk_cpu, BaselineConfig, CpuModel};
+use topk_eigen::baseline::CpuModel;
 use topk_eigen::bench_util::{fmt_ratio, geomean, scale, Table};
-use topk_eigen::coordinator::{ReorthMode, SolverConfig, TopKSolver};
+use topk_eigen::coordinator::ReorthMode;
 use topk_eigen::precision::PrecisionConfig;
 use topk_eigen::sparse::suite::SUITE;
+use topk_eigen::{Backend, Eigensolve, Solver};
 
 /// FPGA-vs-CPU speedup replay per matrix class, derived from the paper's
 /// aggregate claims (GPU = 67× CPU and 1.9× FPGA ⇒ FPGA ≈ 35× CPU on
@@ -77,32 +78,40 @@ fn main() {
             // paper too — only the *matrix* goes out-of-core).
             let vector_floor = (k + 5) * m.rows * 4 + (4 << 20);
             let device_mem = ((16e9 * mem_ratio) as usize).max(vector_floor);
-            let cfg = SolverConfig {
-                k,
-                precision: PrecisionConfig::FDF,
-                devices: 1,
-                reorth: ReorthMode::None, // the paper's default quality mode
-                device_mem_bytes: device_mem,
-                ..Default::default()
-            };
-            let sol = TopKSolver::new(cfg).solve(&m).expect("solve");
+            let sol = Solver::builder()
+                .k(k)
+                .precision(PrecisionConfig::FDF)
+                .devices(1)
+                .reorth(ReorthMode::None) // the paper's default quality mode
+                .device_mem_bytes(device_mem)
+                .build()
+                .expect("config")
+                .solve(&m)
+                .expect("solve");
             gpu_sim += sol.stats.sim_seconds;
 
-            let bcfg = BaselineConfig {
-                krylov_dim: (2 * k + 1).max(20),
-                max_restarts: 4,
-                tol: 1e-6,
-                ..Default::default()
-            };
-            let b = solve_topk_cpu(&m, k, &bcfg);
-            cpu_wall += b.seconds;
+            // CPU baseline through the same facade: the stats map its
+            // counters (kernels_launched = SpMVs, breakdowns = restarts).
+            let krylov_dim = (2 * k + 1).max(20);
+            let b = Solver::builder()
+                .k(k)
+                .backend(Backend::CpuBaseline)
+                .baseline_krylov_dim(krylov_dim)
+                .baseline_max_restarts(4)
+                .tolerance(1e-6)
+                .build()
+                .expect("config")
+                .solve(&m)
+                .expect("solve");
+            cpu_wall += b.stats.wall_seconds;
             // Model the paper's Xeon on the *paper-size* matrix: the gather
             // regime follows the real row count, not the stand-in's
             // (cache-resident) one.
-            cpu_model_s += CpuModel::default().modeled_seconds(
-                &b,
+            cpu_model_s += CpuModel::default().modeled_seconds_parts(
+                b.stats.kernels_launched,
+                b.stats.breakdowns,
                 &m,
-                bcfg.krylov_dim,
+                krylov_dim,
                 e.paper_rows_m * 1e6,
             );
         }

@@ -11,9 +11,10 @@
 //! matrices, so entries are additionally scaled by paper size ratio).
 
 use topk_eigen::bench_util::{scale, Table};
-use topk_eigen::coordinator::{ReorthMode, SolverConfig, TopKSolver};
+use topk_eigen::coordinator::ReorthMode;
 use topk_eigen::precision::PrecisionConfig;
 use topk_eigen::sparse::suite::SUITE;
+use topk_eigen::{Eigensolve, Solver};
 
 fn main() {
     let s = scale();
@@ -32,15 +33,18 @@ fn main() {
         let m = e.generate_csr(eff_scale, 42);
         let mut row = [0.0f64; 4];
         for (i, g) in [1usize, 2, 4, 8].into_iter().enumerate() {
-            let cfg = SolverConfig {
-                k: 8,
-                precision: PrecisionConfig::FDF,
-                devices: g,
-                reorth: ReorthMode::None,
-                device_mem_bytes: 1 << 30,
-                ..Default::default()
-            };
-            row[i] = TopKSolver::new(cfg).solve(&m).expect("solve").stats.sim_seconds;
+            row[i] = Solver::builder()
+                .k(8)
+                .precision(PrecisionConfig::FDF)
+                .devices(g)
+                .reorth(ReorthMode::None)
+                .device_mem_bytes(1 << 30)
+                .build()
+                .expect("config")
+                .solve(&m)
+                .expect("solve")
+                .stats
+                .sim_seconds;
         }
         let rel = [1.0, row[1] / row[0], row[2] / row[0], row[3] / row[0]];
         agg.push(rel);

@@ -9,10 +9,11 @@
 //! the two GAP monsters like the paper's accuracy plot effectively does).
 
 use topk_eigen::bench_util::{scale, Table};
-use topk_eigen::coordinator::{ReorthMode, SolverConfig, TopKSolver};
+use topk_eigen::coordinator::ReorthMode;
 use topk_eigen::metrics;
 use topk_eigen::precision::PrecisionConfig;
 use topk_eigen::sparse::suite::SUITE;
+use topk_eigen::{Eigensolve, Solver};
 
 fn main() {
     let s = scale();
@@ -46,14 +47,15 @@ fn main() {
                 continue;
             }
             for (i, reorth) in [ReorthMode::Full, ReorthMode::None].into_iter().enumerate() {
-                let cfg = SolverConfig {
-                    k,
-                    precision: PrecisionConfig::FFF,
-                    reorth,
-                    device_mem_bytes: 1 << 30,
-                    ..Default::default()
-                };
-                let sol = TopKSolver::new(cfg).solve(&m).expect("solve");
+                let sol = Solver::builder()
+                    .k(k)
+                    .precision(PrecisionConfig::FFF)
+                    .reorth(reorth)
+                    .device_mem_bytes(1 << 30)
+                    .build()
+                    .expect("config")
+                    .solve(&m)
+                    .expect("solve");
                 ang[i] += metrics::avg_pairwise_angle_deg(&sol.eigenvectors);
                 err[i] += metrics::mean_l2_residual(&m, &sol.eigenvalues, &sol.eigenvectors);
             }

@@ -14,10 +14,10 @@
 //! Env: BENCH_SCALE (default 1.0), BENCH_SUITE_MAX (default 13).
 
 use topk_eigen::bench_util::{fmt_ratio, geomean, scale, Table};
-use topk_eigen::coordinator::{SolverConfig, TopKSolver};
 use topk_eigen::metrics;
 use topk_eigen::precision::PrecisionConfig;
 use topk_eigen::sparse::suite::SUITE;
+use topk_eigen::{Eigensolve, Solver};
 
 fn main() {
     let s = scale();
@@ -49,15 +49,15 @@ fn main() {
             let mut time = 0.0;
             let reps = 3;
             for seed in 0..reps {
-                let sol = TopKSolver::new(SolverConfig {
-                    k: 16,
-                    precision: cfg,
-                    seed: 7000 + seed,
-                    device_mem_bytes: 1 << 30,
-                    ..Default::default()
-                })
-                .solve(&m)
-                .expect("solve");
+                let sol = Solver::builder()
+                    .k(16)
+                    .precision(cfg)
+                    .seed(7000 + seed)
+                    .device_mem_bytes(1 << 30)
+                    .build()
+                    .expect("config")
+                    .solve(&m)
+                    .expect("solve");
                 let top = 4; // K/4 converged pairs
                 err += metrics::mean_l2_residual(
                     &m,

@@ -14,11 +14,12 @@
 
 use std::path::PathBuf;
 use topk_eigen::bench_util::{fmt_secs, reps, scale, time, Table};
-use topk_eigen::coordinator::{ReorthMode, SolverConfig, TopKSolver};
+use topk_eigen::coordinator::ReorthMode;
 use topk_eigen::precision::PrecisionConfig;
 use topk_eigen::rng::Rng;
 use topk_eigen::runtime::{HostKernels, Kernels, PjrtKernels};
 use topk_eigen::sparse::{suite, Ell};
+use topk_eigen::{Backend, Eigensolve, Solver};
 
 fn artifact_dir() -> PathBuf {
     std::env::var("TOPK_ARTIFACTS")
@@ -84,17 +85,22 @@ fn main() {
         }
     }
 
-    // End-to-end solves.
-    let solver_cfg = SolverConfig {
-        k: 8,
-        precision: cfg,
-        devices: 2,
-        reorth: ReorthMode::Full,
-        device_mem_bytes: 1 << 30,
-        ..Default::default()
+    // End-to-end solves through the facade.
+    let builder = |backend: Backend| {
+        Solver::builder()
+            .k(8)
+            .precision(cfg)
+            .devices(2)
+            .reorth(ReorthMode::Full)
+            .device_mem_bytes(1 << 30)
+            .backend(backend)
     };
     let te = time(r, || {
-        let sol = TopKSolver::new(solver_cfg.clone()).solve(&m).expect("solve");
+        let sol = builder(Backend::HostSim)
+            .build()
+            .expect("config")
+            .solve(&m)
+            .expect("solve");
         std::hint::black_box(sol.eigenvalues.len());
     });
     t.row(&[
@@ -105,7 +111,8 @@ fn main() {
     ]);
     if PjrtKernels::new(&artifact_dir()).is_ok() {
         let tp = time(r, || {
-            let sol = TopKSolver::with_pjrt(solver_cfg.clone(), &artifact_dir())
+            let sol = builder(Backend::Pjrt { artifacts: artifact_dir() })
+                .build()
                 .expect("pjrt")
                 .solve(&m)
                 .expect("solve");
@@ -118,5 +125,20 @@ fn main() {
             format!("{:.1}x hostsim", tp.median_s / te.median_s),
         ]);
     }
+    // Facade overhead sanity: the CPU baseline through the same entry point.
+    let tc = time(r, || {
+        let sol = builder(Backend::CpuBaseline)
+            .build()
+            .expect("config")
+            .solve(&m)
+            .expect("solve");
+        std::hint::black_box(sol.eigenvalues.len());
+    });
+    t.row(&[
+        "solve e2e cpu baseline".into(),
+        fmt_secs(tc.median_s),
+        fmt_secs(tc.min_s),
+        "ARPACK-class comparator".into(),
+    ]);
     t.print();
 }

@@ -1,0 +1,355 @@
+//! Fluent, validated construction of a [`Solver`].
+//!
+//! Replaces raw `SolverConfig` struct literals and the
+//! `TopKSolver::{new, with_pjrt, with_kernels}` constructor trio with one
+//! builder whose `build()` validates every field and returns typed
+//! [`SolverError`]s instead of panicking mid-solve.
+
+use super::{Backend, CpuBaselineBackend, EigenBackend, GpuBackend, Solver, SolverError};
+use crate::baseline::BaselineConfig;
+use crate::coordinator::{ring::SwapStrategy, ReorthMode, SolverConfig, TopKSolver, TopologyKind};
+use crate::gpu::CostModel;
+use crate::precision::PrecisionConfig;
+use crate::runtime::Kernels;
+
+/// Builder for [`Solver`]; obtain via [`Solver::builder`].
+///
+/// All setters are fluent; validation happens in [`SolverBuilder::build`].
+pub struct SolverBuilder {
+    cfg: SolverConfig,
+    backend: Backend,
+    custom_kernels: Option<Box<dyn Kernels>>,
+    tolerance: Option<f64>,
+    require_convergence: bool,
+    baseline_threads: Option<usize>,
+    baseline_krylov_dim: Option<usize>,
+    baseline_max_restarts: Option<usize>,
+}
+
+impl Default for SolverBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SolverBuilder {
+    pub fn new() -> Self {
+        SolverBuilder {
+            cfg: SolverConfig::default(),
+            backend: Backend::HostSim,
+            custom_kernels: None,
+            tolerance: None,
+            require_convergence: false,
+            baseline_threads: None,
+            baseline_krylov_dim: None,
+            baseline_max_restarts: None,
+        }
+    }
+
+    /// Number of eigencomponents / Krylov dimension (the paper sweeps
+    /// 8–24). With [`SolverBuilder::tolerance`] this is the *maximum*:
+    /// the solve may stop earlier.
+    pub fn k(mut self, k: usize) -> Self {
+        self.cfg.k = k;
+        self
+    }
+
+    /// Precision configuration (FFF / FDF / DDD).
+    pub fn precision(mut self, p: PrecisionConfig) -> Self {
+        self.cfg.precision = p;
+        self
+    }
+
+    /// Simulated GPU count (1–8). Ignored by the CPU baseline.
+    pub fn devices(mut self, g: usize) -> Self {
+        self.cfg.devices = g;
+        self
+    }
+
+    /// Reorthogonalization policy.
+    pub fn reorth(mut self, r: ReorthMode) -> Self {
+        self.cfg.reorth = r;
+        self
+    }
+
+    /// Seed for the random start vector.
+    pub fn seed(mut self, s: u64) -> Self {
+        self.cfg.seed = s;
+        self
+    }
+
+    /// Per-device memory budget in bytes.
+    pub fn device_mem_bytes(mut self, bytes: usize) -> Self {
+        self.cfg.device_mem_bytes = bytes;
+        self
+    }
+
+    /// Per-device memory budget in MiB (CLI convenience).
+    pub fn device_mem_mb(self, mb: usize) -> Self {
+        self.device_mem_bytes(mb << 20)
+    }
+
+    /// Row-degree quantile used to pick each partition's ELL width.
+    pub fn ell_quantile(mut self, q: f64) -> Self {
+        self.cfg.ell_quantile = q;
+        self
+    }
+
+    /// Hard cap on the ELL width.
+    pub fn max_ell_width(mut self, w: usize) -> Self {
+        self.cfg.max_ell_width = w;
+        self
+    }
+
+    /// Max rows per SpMV kernel call.
+    pub fn max_chunk_rows(mut self, rows: usize) -> Self {
+        self.cfg.max_chunk_rows = rows;
+        self
+    }
+
+    /// Interconnect model (DGX-1 hybrid mesh vs. NVSwitch).
+    pub fn topology(mut self, t: TopologyKind) -> Self {
+        self.cfg.topology = t;
+        self
+    }
+
+    /// Replica-swap strategy (ring vs. naive broadcast).
+    pub fn swap(mut self, s: SwapStrategy) -> Self {
+        self.cfg.swap = s;
+        self
+    }
+
+    /// Device cost model for the simulated clock.
+    pub fn cost(mut self, c: CostModel) -> Self {
+        self.cfg.cost = c;
+        self
+    }
+
+    /// Execution substrate (hostsim / pjrt / cpu baseline).
+    pub fn backend(mut self, b: Backend) -> Self {
+        self.backend = b;
+        self
+    }
+
+    /// Convergence tolerance on the top Ritz pair's residual estimate.
+    /// Installs a built-in early-stop observer: the Lanczos loop
+    /// truncates as soon as the estimate drops below `tol`, so `k`
+    /// becomes a maximum rather than an exact iteration count.
+    ///
+    /// The GPU backends treat `tol` as an *absolute* residual bound; the
+    /// CPU baseline feeds it to its native ARPACK-style test, which is
+    /// *relative* to |λ₀| (and covers all K wanted pairs, not just the
+    /// top one).
+    pub fn tolerance(mut self, tol: f64) -> Self {
+        self.tolerance = Some(tol);
+        self
+    }
+
+    /// With a tolerance set: fail with [`SolverError::NonConvergence`]
+    /// when the solve exhausts `k` iterations above the tolerance,
+    /// instead of returning the best-effort result.
+    pub fn require_convergence(mut self, yes: bool) -> Self {
+        self.require_convergence = yes;
+        self
+    }
+
+    /// Worker threads for the CPU baseline's SpMV (defaults to available
+    /// parallelism). Ignored by the GPU backends.
+    pub fn threads(mut self, t: usize) -> Self {
+        self.baseline_threads = Some(t);
+        self
+    }
+
+    /// Krylov dimension for the CPU baseline (`0` = auto `max(2K+1, 20)`).
+    /// The GPU path always uses `k` (the paper's design).
+    pub fn baseline_krylov_dim(mut self, dim: usize) -> Self {
+        self.baseline_krylov_dim = Some(dim);
+        self
+    }
+
+    /// Restart-cycle cap for the CPU baseline.
+    pub fn baseline_max_restarts(mut self, n: usize) -> Self {
+        self.baseline_max_restarts = Some(n);
+        self
+    }
+
+    /// Escape hatch: run the coordinator over a caller-supplied kernel
+    /// backend (ablation studies, tests). Overrides
+    /// [`SolverBuilder::backend`].
+    pub fn custom_kernels(mut self, kernels: Box<dyn Kernels>) -> Self {
+        self.custom_kernels = Some(kernels);
+        self
+    }
+
+    fn validate(&self) -> Result<(), SolverError> {
+        let invalid = |field: &'static str, message: String| {
+            Err(SolverError::InvalidConfig { field, message })
+        };
+        if self.cfg.k == 0 {
+            return invalid("k", "K must be ≥ 1 (the paper sweeps K in 8–24)".into());
+        }
+        if self.cfg.devices == 0 || self.cfg.devices > 8 {
+            return invalid(
+                "devices",
+                format!(
+                    "devices must be in 1..=8 — the modeled DGX-1 fleet (got {})",
+                    self.cfg.devices
+                ),
+            );
+        }
+        if self.cfg.device_mem_bytes == 0 {
+            return invalid(
+                "device_mem_bytes",
+                "per-device memory budget must be > 0 bytes; the default is 32 MiB \
+                 and real V100s have 16 GiB"
+                    .into(),
+            );
+        }
+        if let Some(t) = self.tolerance {
+            if !t.is_finite() || t <= 0.0 {
+                return invalid(
+                    "tolerance",
+                    format!("tolerance must be a finite positive number (got {t})"),
+                );
+            }
+        }
+        if !(self.cfg.ell_quantile > 0.0 && self.cfg.ell_quantile <= 1.0) {
+            return invalid(
+                "ell_quantile",
+                format!("ell_quantile must be in (0, 1] (got {})", self.cfg.ell_quantile),
+            );
+        }
+        if self.cfg.max_ell_width == 0 {
+            return invalid("max_ell_width", "ELL width cap must be ≥ 1".into());
+        }
+        if self.cfg.max_chunk_rows == 0 {
+            return invalid("max_chunk_rows", "SpMV chunk size must be ≥ 1 row".into());
+        }
+        if self.require_convergence && self.tolerance.is_none() {
+            return invalid(
+                "require_convergence",
+                "require_convergence needs a tolerance — set .tolerance(…) too".into(),
+            );
+        }
+        if let Some(dim) = self.baseline_krylov_dim {
+            if dim != 0 && dim <= self.cfg.k {
+                return invalid(
+                    "baseline_krylov_dim",
+                    format!(
+                        "the baseline's Krylov dimension must exceed K (got dim={dim}, \
+                         K={}); use 0 for the auto choice max(2K+1, 20)",
+                        self.cfg.k
+                    ),
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Validate the configuration and construct the [`Solver`].
+    pub fn build(self) -> Result<Solver, SolverError> {
+        self.validate()?;
+        let SolverBuilder {
+            cfg,
+            backend,
+            custom_kernels,
+            tolerance,
+            require_convergence,
+            baseline_threads,
+            baseline_krylov_dim,
+            baseline_max_restarts,
+        } = self;
+        let native_tolerance =
+            custom_kernels.is_none() && matches!(backend, Backend::CpuBaseline);
+        let backend: Box<dyn EigenBackend> = if let Some(kernels) = custom_kernels {
+            Box::new(GpuBackend { solver: TopKSolver::with_kernels(cfg, kernels) })
+        } else {
+            match backend {
+                Backend::HostSim => Box::new(GpuBackend { solver: TopKSolver::new(cfg) }),
+                Backend::Pjrt { artifacts } => {
+                    Box::new(GpuBackend { solver: TopKSolver::with_pjrt(cfg, &artifacts)? })
+                }
+                Backend::CpuBaseline => {
+                    let defaults = BaselineConfig::default();
+                    Box::new(CpuBaselineBackend {
+                        k: cfg.k,
+                        cfg: BaselineConfig {
+                            threads: baseline_threads.unwrap_or(defaults.threads),
+                            krylov_dim: baseline_krylov_dim.unwrap_or(0),
+                            max_restarts: baseline_max_restarts
+                                .unwrap_or(defaults.max_restarts),
+                            tol: tolerance.unwrap_or(defaults.tol),
+                            seed: cfg.seed,
+                        },
+                    })
+                }
+            }
+        };
+        Ok(Solver { backend, tolerance, require_convergence, native_tolerance })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::Solver;
+
+    #[test]
+    fn rejects_zero_k() {
+        let err = Solver::builder().k(0).build().unwrap_err();
+        assert!(matches!(err, SolverError::InvalidConfig { field: "k", .. }), "{err:?}");
+        assert!(err.to_string().contains('K'), "{err}");
+    }
+
+    #[test]
+    fn rejects_bad_devices() {
+        for g in [0usize, 9, 100] {
+            let err = Solver::builder().devices(g).build().unwrap_err();
+            assert!(
+                matches!(err, SolverError::InvalidConfig { field: "devices", .. }),
+                "devices={g}: {err:?}"
+            );
+            assert!(err.to_string().contains("1..=8"), "{err}");
+        }
+    }
+
+    #[test]
+    fn rejects_zero_memory_budget() {
+        let err = Solver::builder().device_mem_bytes(0).build().unwrap_err();
+        assert!(
+            matches!(err, SolverError::InvalidConfig { field: "device_mem_bytes", .. }),
+            "{err:?}"
+        );
+    }
+
+    #[test]
+    fn rejects_bad_tolerance() {
+        for t in [0.0, -1e-9, f64::NAN, f64::INFINITY] {
+            let err = Solver::builder().tolerance(t).build().unwrap_err();
+            assert!(
+                matches!(err, SolverError::InvalidConfig { field: "tolerance", .. }),
+                "tol={t}: {err:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn rejects_convergence_requirement_without_tolerance() {
+        let err = Solver::builder().require_convergence(true).build().unwrap_err();
+        assert!(err.to_string().contains("tolerance"), "{err}");
+    }
+
+    #[test]
+    fn default_build_succeeds() {
+        use crate::api::Eigensolve;
+        let s = Solver::builder().build().unwrap();
+        assert_eq!(s.backend_name(), "hostsim");
+    }
+
+    #[test]
+    fn cpu_backend_builds() {
+        use crate::api::{Backend, Eigensolve};
+        let s = Solver::builder().backend(Backend::CpuBaseline).build().unwrap();
+        assert_eq!(s.backend_name(), "cpu");
+    }
+}

@@ -1,0 +1,146 @@
+//! Crate-wide typed errors for the public solve surface.
+//!
+//! Every fallible operation on the [`crate::api::Solver`] facade (and on the
+//! lower-level `TopKSolver` / baseline entry points it wraps) returns
+//! [`SolverError`] — a hand-rolled `thiserror`-style enum (no proc-macro
+//! crates in the offline environment). Each variant carries enough structure
+//! for programmatic handling and a `Display` message that tells the user
+//! what to *do*, not just what went wrong.
+
+use crate::runtime::artifacts::ManifestError;
+use std::fmt;
+
+/// Typed error for every public solve path.
+#[derive(Debug)]
+#[non_exhaustive]
+pub enum SolverError {
+    /// A builder/config field failed validation (k=0, devices=0, zero
+    /// memory budget, bad tolerance, …).
+    InvalidConfig {
+        /// The offending field, e.g. `"k"` or `"devices"`.
+        field: &'static str,
+        /// What was wrong and what range is accepted.
+        message: String,
+    },
+    /// The input matrix is not usable as a symmetric eigenproblem
+    /// (non-square; the Lanczos recurrence assumes `M = Mᵀ`).
+    AsymmetricInput {
+        rows: usize,
+        cols: usize,
+        /// Human-readable detail, e.g. "matrix must be square (got 30×40)".
+        detail: String,
+    },
+    /// A device cannot hold its working set under the configured
+    /// per-device memory budget.
+    MemoryBudget {
+        /// Device index that failed the allocation.
+        device: usize,
+        /// Bytes the allocation needed.
+        requested: usize,
+        /// The device's total budget in bytes.
+        capacity: usize,
+    },
+    /// The AOT artifact directory is missing, malformed, or does not cover
+    /// the kernel×precision families the solve needs.
+    ArtifactMismatch { message: String },
+    /// The requested backend cannot run in this build/environment.
+    BackendUnavailable {
+        backend: &'static str,
+        reason: String,
+    },
+    /// A convergence tolerance was requested (with
+    /// `SolverBuilder::require_convergence`) and the solve exhausted its
+    /// iterations without reaching it.
+    NonConvergence {
+        /// Final top-Ritz-pair residual estimate.
+        achieved: f64,
+        /// The requested tolerance.
+        tolerance: f64,
+        /// Lanczos iterations performed.
+        iterations: usize,
+    },
+    /// An I/O failure on a user-supplied path (report output, matrix file).
+    Io {
+        context: String,
+        source: std::io::Error,
+    },
+}
+
+impl fmt::Display for SolverError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SolverError::InvalidConfig { field, message } => {
+                write!(f, "invalid configuration for `{field}`: {message}")
+            }
+            SolverError::AsymmetricInput { detail, .. } => {
+                write!(f, "{detail}")
+            }
+            SolverError::MemoryBudget { device, requested, capacity } => write!(
+                f,
+                "device {device} cannot hold the Lanczos working set: requested \
+                 {requested} bytes of a {capacity}-byte budget; increase \
+                 --device-mem-mb or spread the matrix over more --devices"
+            ),
+            SolverError::ArtifactMismatch { message } => write!(f, "{message}"),
+            SolverError::BackendUnavailable { backend, reason } => {
+                write!(f, "backend '{backend}' is unavailable: {reason}")
+            }
+            SolverError::NonConvergence { achieved, tolerance, iterations } => write!(
+                f,
+                "did not converge: top Ritz residual estimate {achieved:.3e} is above \
+                 the requested tolerance {tolerance:.3e} after {iterations} Lanczos \
+                 iterations; raise k (more Krylov headroom), loosen --tolerance, or \
+                 drop --require-convergence to accept the best-effort result"
+            ),
+            SolverError::Io { context, source } => write!(f, "{context}: {source}"),
+        }
+    }
+}
+
+impl std::error::Error for SolverError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            SolverError::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
+}
+
+impl From<ManifestError> for SolverError {
+    fn from(e: ManifestError) -> Self {
+        SolverError::ArtifactMismatch { message: e.to_string() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn messages_are_actionable() {
+        let e = SolverError::InvalidConfig { field: "k", message: "K must be ≥ 1".into() };
+        assert!(e.to_string().contains('k') || e.to_string().contains('K'));
+
+        let e = SolverError::MemoryBudget { device: 3, requested: 100, capacity: 10 };
+        let msg = e.to_string();
+        assert!(msg.contains("device 3"), "{msg}");
+        assert!(msg.contains("device-mem"), "{msg}");
+        assert!(msg.contains("devices"), "{msg}");
+
+        let e = SolverError::NonConvergence { achieved: 1e-3, tolerance: 1e-9, iterations: 8 };
+        let msg = e.to_string();
+        assert!(msg.contains("tolerance"), "{msg}");
+        assert!(msg.contains("1.000e-9"), "{msg}");
+
+        let e = SolverError::BackendUnavailable { backend: "pjrt", reason: "no xla".into() };
+        assert!(e.to_string().contains("pjrt"));
+    }
+
+    #[test]
+    fn manifest_errors_convert() {
+        let m = ManifestError::Malformed(3, "bad".into());
+        let e: SolverError = m.into();
+        assert!(matches!(e, SolverError::ArtifactMismatch { .. }));
+        assert!(e.to_string().contains("manifest"));
+    }
+}

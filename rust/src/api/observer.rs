@@ -1,0 +1,190 @@
+//! Iteration-observer hooks: per-Lanczos-iteration callbacks.
+//!
+//! Both execution substrates (the multi-GPU coordinator and the CPU
+//! baseline) invoke an [`IterationObserver`] once per Lanczos iteration
+//! with the iteration's α, the candidate norm β, an ARPACK-style residual
+//! estimate for the top Ritz pair, and the simulated-time breakdown so
+//! far. The observer's return value steers the solve: `Stop` truncates the
+//! Krylov space at the current dimension and proceeds straight to the
+//! Jacobi phase — this is how tolerance-driven early stopping works, a
+//! scenario the fixed-K `SolverConfig` API cannot express.
+//!
+//! Computing the residual estimate costs one Jacobi solve of the current
+//! i×i tridiagonal per iteration (K ≤ ~64, so microseconds); the solver
+//! skips it entirely when no observer is attached, keeping the un-observed
+//! hot path unchanged.
+
+use crate::coordinator::PhaseBreakdown;
+
+/// Snapshot handed to [`IterationObserver::on_iteration`] after each
+/// Lanczos iteration completes (candidate built and reorthogonalized).
+#[derive(Clone, Copy, Debug)]
+pub struct IterationEvent {
+    /// 0-based index of the iteration that just completed.
+    pub iter: usize,
+    /// The iteration's diagonal Lanczos coefficient α_i.
+    pub alpha: f64,
+    /// Norm of the freshly built candidate — the β that would link this
+    /// iteration to the next one (near 0 ⇒ invariant subspace found).
+    pub beta: f64,
+    /// ARPACK-style residual estimate for the *top* Ritz pair of the
+    /// current tridiagonal: β · |last component of its leading
+    /// eigenvector|. An upper-bound proxy for ‖M·y − θ·y‖.
+    pub residual_estimate: f64,
+    /// Simulated fleet seconds elapsed so far (0 for the CPU baseline,
+    /// which reports wallclock here instead).
+    pub sim_seconds: f64,
+    /// Per-phase simulated-time breakdown so far.
+    pub phases: PhaseBreakdown,
+}
+
+/// Observer verdict: keep iterating or truncate the Krylov space here.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ObserverControl {
+    /// Continue to the next Lanczos iteration.
+    Continue,
+    /// Stop now: diagonalize the tridiagonal built so far and return
+    /// `iter + 1` eigenpairs.
+    Stop,
+}
+
+/// Per-iteration callback invoked by every backend.
+pub trait IterationObserver {
+    /// Called once per completed Lanczos iteration.
+    fn on_iteration(&mut self, event: &IterationEvent) -> ObserverControl;
+}
+
+/// Adapter turning a closure into an [`IterationObserver`].
+///
+/// ```no_run
+/// use topk_eigen::api::{FnObserver, ObserverControl};
+/// let mut obs = FnObserver(|ev: &topk_eigen::api::IterationEvent| {
+///     println!("iter {} residual {:.3e}", ev.iter, ev.residual_estimate);
+///     ObserverControl::Continue
+/// });
+/// ```
+pub struct FnObserver<F>(pub F);
+
+impl<F: FnMut(&IterationEvent) -> ObserverControl> IterationObserver for FnObserver<F> {
+    fn on_iteration(&mut self, event: &IterationEvent) -> ObserverControl {
+        (self.0)(event)
+    }
+}
+
+/// Built-in tolerance-driven early stop: requests `Stop` as soon as the
+/// top Ritz pair's residual estimate drops below `tolerance`.
+///
+/// Installed automatically by `SolverBuilder::tolerance`; also usable
+/// directly with `Eigensolve::solve_observed`.
+#[derive(Clone, Debug)]
+pub struct ToleranceStop {
+    /// The residual-estimate threshold.
+    pub tolerance: f64,
+    /// Never stop before this many iterations (the estimate is meaningless
+    /// on a 1×1 tridiagonal). Default 2.
+    pub min_iterations: usize,
+    /// Residual estimate of the most recent event (∞ before the first).
+    pub last_estimate: f64,
+    /// Iteration at which the stop triggered, if it did.
+    pub triggered_at: Option<usize>,
+}
+
+impl ToleranceStop {
+    pub fn new(tolerance: f64) -> Self {
+        ToleranceStop {
+            tolerance,
+            min_iterations: 2,
+            last_estimate: f64::INFINITY,
+            triggered_at: None,
+        }
+    }
+
+    /// True once the estimate has met the tolerance.
+    pub fn converged(&self) -> bool {
+        self.triggered_at.is_some() || self.last_estimate <= self.tolerance
+    }
+}
+
+impl IterationObserver for ToleranceStop {
+    fn on_iteration(&mut self, event: &IterationEvent) -> ObserverControl {
+        self.last_estimate = event.residual_estimate;
+        if event.iter + 1 >= self.min_iterations && event.residual_estimate <= self.tolerance {
+            self.triggered_at = Some(event.iter);
+            ObserverControl::Stop
+        } else {
+            ObserverControl::Continue
+        }
+    }
+}
+
+/// Observer that records every event (diagnostics, tests, progress bars).
+#[derive(Clone, Debug, Default)]
+pub struct CollectObserver {
+    pub events: Vec<IterationEvent>,
+}
+
+impl IterationObserver for CollectObserver {
+    fn on_iteration(&mut self, event: &IterationEvent) -> ObserverControl {
+        self.events.push(*event);
+        ObserverControl::Continue
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(iter: usize, residual: f64) -> IterationEvent {
+        IterationEvent {
+            iter,
+            alpha: 0.0,
+            beta: 1.0,
+            residual_estimate: residual,
+            sim_seconds: 0.0,
+            phases: PhaseBreakdown::default(),
+        }
+    }
+
+    #[test]
+    fn tolerance_stop_waits_for_min_iterations() {
+        let mut t = ToleranceStop::new(1e-6);
+        assert_eq!(t.on_iteration(&ev(0, 0.0)), ObserverControl::Continue);
+        assert_eq!(t.on_iteration(&ev(1, 1e-9)), ObserverControl::Stop);
+        assert_eq!(t.triggered_at, Some(1));
+        assert!(t.converged());
+    }
+
+    #[test]
+    fn tolerance_stop_continues_above_threshold() {
+        let mut t = ToleranceStop::new(1e-9);
+        for i in 0..10 {
+            assert_eq!(t.on_iteration(&ev(i, 1e-3)), ObserverControl::Continue);
+        }
+        assert!(!t.converged());
+        assert_eq!(t.last_estimate, 1e-3);
+    }
+
+    #[test]
+    fn collector_records_all() {
+        let mut c = CollectObserver::default();
+        for i in 0..5 {
+            c.on_iteration(&ev(i, 1.0));
+        }
+        assert_eq!(c.events.len(), 5);
+        assert_eq!(c.events[3].iter, 3);
+    }
+
+    #[test]
+    fn fn_observer_adapts_closures() {
+        let mut count = 0usize;
+        {
+            let mut obs = FnObserver(|_: &IterationEvent| {
+                count += 1;
+                ObserverControl::Continue
+            });
+            obs.on_iteration(&ev(0, 1.0));
+            obs.on_iteration(&ev(1, 1.0));
+        }
+        assert_eq!(count, 2);
+    }
+}

@@ -1,0 +1,243 @@
+//! Machine-readable solve reports.
+//!
+//! [`SolveReport`] flattens an [`EigenSolution`] (plus the request echo)
+//! into a JSON document for the CLI's `--report out.json` flag and for
+//! harnesses that diff runs across configurations. The JSON writer is
+//! hand-rolled (no `serde` in the offline environment): string fields are
+//! escaped per RFC 8259, and non-finite floats serialize as `null`.
+
+use crate::api::error::SolverError;
+use crate::coordinator::{EigenSolution, PhaseBreakdown};
+use crate::sparse::Csr;
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// Flat, serializable summary of one solve.
+#[derive(Clone, Debug)]
+pub struct SolveReport {
+    /// Matrix identifier (file path or suite id).
+    pub matrix: String,
+    /// Backend that executed ("hostsim" / "pjrt" / "cpu").
+    pub backend: String,
+    /// Requested eigencomponent count (≥ the returned count iff the solve
+    /// stopped early).
+    pub k_requested: usize,
+    /// Precision configuration name ("FDF" …), if known to the caller.
+    pub precision: Option<String>,
+    /// Simulated device count, if known to the caller.
+    pub devices: Option<usize>,
+    /// Convergence tolerance, if one was set.
+    pub tolerance: Option<f64>,
+    /// Returned eigenvalues, |λ|-descending.
+    pub eigenvalues: Vec<f64>,
+    /// ‖Mv − λv‖ per returned pair (filled by [`SolveReport::with_residuals`]).
+    pub residuals: Vec<f64>,
+    /// Lanczos iterations performed.
+    pub iterations: usize,
+    /// True if an observer truncated the Krylov space before `k_requested`.
+    pub early_stopped: bool,
+    /// Host wallclock seconds.
+    pub wall_seconds: f64,
+    /// Simulated fleet seconds.
+    pub sim_seconds: f64,
+    /// Per-phase simulated-time breakdown.
+    pub phases: PhaseBreakdown,
+    /// Kernel launches across the fleet.
+    pub kernels_launched: usize,
+    /// Host→device bytes streamed (out-of-core).
+    pub h2d_bytes: usize,
+    /// Device→device bytes (ring swap).
+    pub p2p_bytes: usize,
+    /// True if any partition ran out-of-core.
+    pub out_of_core: bool,
+    /// Lanczos breakdowns recovered.
+    pub breakdowns: usize,
+    /// Peak device memory across the fleet.
+    pub peak_device_bytes: usize,
+}
+
+impl SolveReport {
+    /// Build a report from a solution. `k_requested` is the K the caller
+    /// asked for (the solution may hold fewer pairs after an early stop).
+    pub fn new(matrix: &str, k_requested: usize, sol: &EigenSolution) -> Self {
+        let s = &sol.stats;
+        SolveReport {
+            matrix: matrix.to_string(),
+            backend: s.backend.to_string(),
+            k_requested,
+            precision: None,
+            devices: Some(s.sim_per_device.len()).filter(|&d| d > 0),
+            tolerance: None,
+            eigenvalues: sol.eigenvalues.clone(),
+            residuals: Vec::new(),
+            iterations: s.iterations,
+            early_stopped: s.early_stopped,
+            wall_seconds: s.wall_seconds,
+            sim_seconds: s.sim_seconds,
+            phases: s.phases,
+            kernels_launched: s.kernels_launched,
+            h2d_bytes: s.h2d_bytes,
+            p2p_bytes: s.p2p_bytes,
+            out_of_core: s.out_of_core,
+            breakdowns: s.breakdowns,
+            peak_device_bytes: s.peak_device_bytes,
+        }
+    }
+
+    /// Compute per-pair residuals ‖Mv − λv‖ against `m`.
+    pub fn with_residuals(mut self, m: &Csr, sol: &EigenSolution) -> Self {
+        self.residuals = sol
+            .eigenvalues
+            .iter()
+            .zip(&sol.eigenvectors)
+            .map(|(l, v)| crate::metrics::l2_residual(m, *l, v))
+            .collect();
+        self
+    }
+
+    /// Serialize to a JSON object (stable key order, 2-space indent).
+    pub fn to_json(&self) -> String {
+        let mut o = String::with_capacity(1024);
+        o.push_str("{\n");
+        field(&mut o, "matrix", &json_str(&self.matrix));
+        field(&mut o, "backend", &json_str(&self.backend));
+        field(&mut o, "k_requested", &self.k_requested.to_string());
+        field(&mut o, "precision", &opt_str(self.precision.as_deref()));
+        field(&mut o, "devices", &opt_usize(self.devices));
+        field(&mut o, "tolerance", &opt_f64(self.tolerance));
+        field(&mut o, "eigenvalues", &json_f64_array(&self.eigenvalues));
+        field(&mut o, "residuals", &json_f64_array(&self.residuals));
+        field(&mut o, "iterations", &self.iterations.to_string());
+        field(&mut o, "early_stopped", &self.early_stopped.to_string());
+        field(&mut o, "wall_seconds", &json_f64(self.wall_seconds));
+        field(&mut o, "sim_seconds", &json_f64(self.sim_seconds));
+        let p = &self.phases;
+        let phases = format!(
+            "{{\"spmv\": {}, \"vector_ops\": {}, \"reorth\": {}, \"swap\": {}, \
+             \"h2d\": {}, \"sync\": {}, \"jacobi_cpu\": {}, \"project\": {}}}",
+            json_f64(p.spmv),
+            json_f64(p.vector_ops),
+            json_f64(p.reorth),
+            json_f64(p.swap),
+            json_f64(p.h2d),
+            json_f64(p.sync),
+            json_f64(p.jacobi_cpu),
+            json_f64(p.project),
+        );
+        field(&mut o, "phases_sim_seconds", &phases);
+        field(&mut o, "kernels_launched", &self.kernels_launched.to_string());
+        field(&mut o, "h2d_bytes", &self.h2d_bytes.to_string());
+        field(&mut o, "p2p_bytes", &self.p2p_bytes.to_string());
+        field(&mut o, "out_of_core", &self.out_of_core.to_string());
+        field(&mut o, "breakdowns", &self.breakdowns.to_string());
+        // Last field: no trailing comma.
+        let _ = write!(o, "  \"peak_device_bytes\": {}\n}}", self.peak_device_bytes);
+        o
+    }
+
+    /// Write the JSON report to `path`.
+    pub fn write_json(&self, path: &Path) -> Result<(), SolverError> {
+        std::fs::write(path, self.to_json()).map_err(|e| SolverError::Io {
+            context: format!("writing report {}", path.display()),
+            source: e,
+        })
+    }
+}
+
+fn field(out: &mut String, key: &str, value: &str) {
+    let _ = writeln!(out, "  \"{key}\": {value},");
+}
+
+/// JSON number for an f64: round-trip `{:?}` formatting; non-finite → null.
+fn json_f64(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:?}")
+    } else {
+        "null".to_string()
+    }
+}
+
+fn json_f64_array(xs: &[f64]) -> String {
+    let inner: Vec<String> = xs.iter().map(|&x| json_f64(x)).collect();
+    format!("[{}]", inner.join(", "))
+}
+
+fn opt_f64(x: Option<f64>) -> String {
+    x.map(json_f64).unwrap_or_else(|| "null".to_string())
+}
+
+fn opt_usize(x: Option<usize>) -> String {
+    x.map(|v| v.to_string()).unwrap_or_else(|| "null".to_string())
+}
+
+fn opt_str(x: Option<&str>) -> String {
+    x.map(json_str).unwrap_or_else(|| "null".to_string())
+}
+
+/// RFC 8259 string escaping.
+fn json_str(s: &str) -> String {
+    let mut o = String::with_capacity(s.len() + 2);
+    o.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => o.push_str("\\\""),
+            '\\' => o.push_str("\\\\"),
+            '\n' => o.push_str("\\n"),
+            '\r' => o.push_str("\\r"),
+            '\t' => o.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(o, "\\u{:04x}", c as u32);
+            }
+            c => o.push(c),
+        }
+    }
+    o.push('"');
+    o
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn escapes_strings() {
+        assert_eq!(json_str("a\"b\\c\nd"), "\"a\\\"b\\\\c\\nd\"");
+        assert_eq!(json_str("ctrl\u{1}"), "\"ctrl\\u0001\"");
+    }
+
+    #[test]
+    fn numbers_round_trip_and_nonfinite_is_null() {
+        assert_eq!(json_f64(1.5), "1.5");
+        assert_eq!(json_f64(f64::NAN), "null");
+        assert_eq!(json_f64(f64::INFINITY), "null");
+        assert_eq!(json_f64_array(&[1.0, -2.5]), "[1.0, -2.5]");
+    }
+
+    #[test]
+    fn report_serializes_expected_keys() {
+        let sol = EigenSolution {
+            eigenvalues: vec![2.0, 1.0],
+            eigenvectors: vec![vec![1.0], vec![1.0]],
+            alpha: vec![],
+            beta: vec![],
+            stats: Default::default(),
+        };
+        let r = SolveReport::new("TEST", 4, &sol);
+        let j = r.to_json();
+        for key in [
+            "\"matrix\"",
+            "\"backend\"",
+            "\"k_requested\": 4",
+            "\"eigenvalues\": [2.0, 1.0]",
+            "\"early_stopped\": false",
+            "\"phases_sim_seconds\"",
+            "\"peak_device_bytes\"",
+        ] {
+            assert!(j.contains(key), "missing {key} in:\n{j}");
+        }
+        // Crude structural check: braces balance, no trailing comma before
+        // the closing brace.
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        assert!(!j.contains(",\n}"), "trailing comma:\n{j}");
+    }
+}

@@ -20,6 +20,8 @@
 pub mod power;
 pub mod spmv;
 
+use crate::api::observer::{IterationEvent, IterationObserver, ObserverControl};
+use crate::coordinator::ritz_residual_estimate;
 use crate::jacobi::{jacobi_eigen_f64, DenseSym};
 use crate::linalg::{axpy, dot_f64, normalize};
 use crate::rng::Rng;
@@ -70,18 +72,46 @@ pub struct BaselineResult {
     pub seconds: f64,
     /// Max Ritz residual at exit.
     pub max_residual: f64,
+    /// Total Lanczos iterations across all restart cycles.
+    pub iterations: usize,
+    /// True if an [`IterationObserver`] truncated the solve.
+    pub early_stopped: bool,
 }
 
 /// Solve for the top-K eigenpairs of symmetric `m` on the CPU.
 pub fn solve_topk_cpu(m: &Csr, k: usize, cfg: &BaselineConfig) -> BaselineResult {
-    assert_eq!(m.rows, m.cols, "Lanczos requires a square symmetric matrix");
-    assert!(k >= 1 && k < m.rows, "need 1 <= K < n");
-    let n = m.rows;
-    let dim = if cfg.krylov_dim == 0 {
+    solve_topk_cpu_observed(m, k, cfg, None)
+}
+
+/// The Krylov dimension a baseline solve will actually use for `k` wanted
+/// pairs on an `n`-row matrix (`cfg.krylov_dim == 0` ⇒ ARPACK's
+/// `max(2K+1, 20)` default, always clamped to `n − 1`). Exposed so callers
+/// (the `api` facade) can reject `dim ≤ K` with a typed error before the
+/// solve's assert fires.
+pub fn effective_krylov_dim(cfg: &BaselineConfig, k: usize, n: usize) -> usize {
+    if cfg.krylov_dim == 0 {
         (2 * k + 1).max(20).min(n - 1)
     } else {
         cfg.krylov_dim.min(n - 1)
-    };
+    }
+}
+
+/// Like [`solve_topk_cpu`], invoking `observer` once per Lanczos iteration
+/// (across restart cycles, with a running iteration index) — the same hook
+/// the multi-GPU coordinator exposes, so tolerance-driven early stopping
+/// works uniformly on every backend. `Stop` truncates the current Krylov
+/// cycle; the Ritz pairs extracted from the basis built so far are
+/// returned.
+pub fn solve_topk_cpu_observed(
+    m: &Csr,
+    k: usize,
+    cfg: &BaselineConfig,
+    mut observer: Option<&mut dyn IterationObserver>,
+) -> BaselineResult {
+    assert_eq!(m.rows, m.cols, "Lanczos requires a square symmetric matrix");
+    assert!(k >= 1 && k < m.rows, "need 1 <= K < n");
+    let n = m.rows;
+    let dim = effective_krylov_dim(cfg, k, n);
     assert!(dim > k, "Krylov dimension must exceed K");
 
     let spmv = ThreadedSpmv::new(m, cfg.threads);
@@ -96,6 +126,8 @@ pub fn solve_topk_cpu(m: &Csr, k: usize, cfg: &BaselineConfig) -> BaselineResult
     let mut spmv_count = 0usize;
     let mut restarts = 0usize;
     let mut best: Option<(Vec<f64>, Vec<Vec<f64>>, f64)> = None;
+    let mut total_iters = 0usize;
+    let mut stopped = false;
 
     for cycle in 0..=cfg.max_restarts {
         // --- Lanczos with full reorthogonalization ---
@@ -105,6 +137,9 @@ pub fn solve_topk_cpu(m: &Csr, k: usize, cfg: &BaselineConfig) -> BaselineResult
         let mut v = v0.clone();
         let mut v_prev = vec![0.0f64; n];
         let mut b_prev = 0.0f64;
+        // Norm of the final (discarded) candidate — the ARPACK β_m that
+        // scales every Ritz residual below.
+        let mut final_b = 0.0f64;
         for j in 0..dim {
             basis.push(v.clone());
             let mut w = vec![0.0f64; n];
@@ -125,6 +160,25 @@ pub fn solve_topk_cpu(m: &Csr, k: usize, cfg: &BaselineConfig) -> BaselineResult
                 }
             }
             let b = crate::linalg::norm2_f64(&w);
+            final_b = b;
+            total_iters += 1;
+            // Observer hook: same event shape as the coordinator's, with a
+            // running iteration index across restart cycles and wallclock in
+            // place of simulated time.
+            if let Some(obs) = observer.as_mut() {
+                let event = IterationEvent {
+                    iter: total_iters - 1,
+                    alpha: a,
+                    beta: b,
+                    residual_estimate: ritz_residual_estimate(&alpha, &beta, b),
+                    sim_seconds: start.elapsed().as_secs_f64(),
+                    phases: Default::default(),
+                };
+                if obs.on_iteration(&event) == ObserverControl::Stop {
+                    stopped = true;
+                    break;
+                }
+            }
             if j + 1 < dim {
                 beta.push(b);
             }
@@ -145,7 +199,12 @@ pub fn solve_topk_cpu(m: &Csr, k: usize, cfg: &BaselineConfig) -> BaselineResult
         let mut values = Vec::with_capacity(kk);
         let mut vectors = Vec::with_capacity(kk);
         let mut max_resid = 0.0f64;
-        let last_beta = if mdim > 1 { beta[mdim - 2] } else { 0.0 };
+        // β_m is the norm of the candidate *after* the last completed
+        // iteration (`final_b`) — not the last intra-T link `beta[mdim−2]`,
+        // which understates the residual whenever the final step's
+        // candidate is large. This keeps the convergence test consistent
+        // with the per-iteration observer estimate above.
+        let last_beta = final_b;
         for i in 0..kk {
             let s = &eig.vectors[i];
             let mut y = vec![0.0f64; n];
@@ -168,7 +227,7 @@ pub fn solve_topk_cpu(m: &Csr, k: usize, cfg: &BaselineConfig) -> BaselineResult
         if better {
             best = Some((values.clone(), vectors.clone(), max_resid));
         }
-        if converged || cycle == cfg.max_restarts || mdim < dim {
+        if stopped || converged || cycle == cfg.max_restarts || mdim < dim {
             break;
         }
         restarts += 1;
@@ -196,6 +255,8 @@ pub fn solve_topk_cpu(m: &Csr, k: usize, cfg: &BaselineConfig) -> BaselineResult
         restarts,
         seconds: start.elapsed().as_secs_f64(),
         max_residual,
+        iterations: total_iters,
+        early_stopped: stopped,
     }
 }
 
@@ -252,12 +313,26 @@ impl CpuModel {
         krylov_dim: usize,
         regime_rows: f64,
     ) -> f64 {
+        self.modeled_seconds_parts(res.spmv_count, res.restarts, m, krylov_dim, regime_rows)
+    }
+
+    /// [`CpuModel::modeled_seconds`] from raw counters — lets facade users
+    /// model a run from `SolveStats` (where the CPU backend reports
+    /// `kernels_launched` = SpMV count and `breakdowns` = restart cycles).
+    pub fn modeled_seconds_parts(
+        &self,
+        spmv_count: usize,
+        restarts: usize,
+        m: &Csr,
+        krylov_dim: usize,
+        regime_rows: f64,
+    ) -> f64 {
         let n = m.rows as f64;
         // CSR SpMV: values(8) + colidx(4) + sector-granular gather(~32).
         let spmv_bytes = m.nnz() as f64 * (8.0 + 4.0 + 32.0);
-        let spmv_s = res.spmv_count as f64 * spmv_bytes / (self.spmv_gbs(regime_rows) * 1e9);
+        let spmv_s = spmv_count as f64 * spmv_bytes / (self.spmv_gbs(regime_rows) * 1e9);
         // Full reorth ×2 passes: per cycle Σ_j 2·j vector reads + writes.
-        let cycles = (res.restarts + 1) as f64;
+        let cycles = (restarts + 1) as f64;
         let reorth_bytes = cycles * 2.0 * (krylov_dim * krylov_dim) as f64 * n * 8.0;
         let reorth_s = reorth_bytes / (self.stream_gbs * 1e9);
         spmv_s + reorth_s
@@ -282,6 +357,8 @@ mod tests {
             restarts: 0,
             seconds: 0.0,
             max_residual: 0.0,
+            iterations: 10,
+            early_stopped: false,
         };
         let big = BaselineResult { spmv_count: 100, restarts: 4, ..small.clone() };
         assert!(

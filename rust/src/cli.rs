@@ -3,8 +3,31 @@
 //! Supports `--flag value`, `--flag=value` and boolean `--flag` forms, plus
 //! positional arguments, with typed accessors and an auto-generated usage
 //! string. Used by `main.rs` and the bench binaries.
+//!
+//! Two access styles:
+//! * `try_*` accessors return [`UsageError`] on malformed values — the
+//!   binary maps these to a usage message and exit code 2;
+//! * the legacy `get_or` / `require` accessors print the error and exit 2
+//!   directly (still used by examples/benches where that is the right
+//!   behavior).
+//!
+//! [`Args::reject_unknown`] catches misspelled flags — silently ignoring
+//! `--tolerence` would otherwise run a solve the user didn't ask for.
 
 use std::collections::HashMap;
+
+/// A malformed or unknown command-line argument. The binary turns these
+/// into a usage error with exit code 2.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct UsageError(pub String);
+
+impl std::fmt::Display for UsageError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for UsageError {}
 
 /// Parsed arguments: flags + positionals.
 #[derive(Debug, Default)]
@@ -86,6 +109,56 @@ impl Args {
             }
         }
     }
+
+    /// Typed flag: `Ok(None)` when absent, [`UsageError`] when malformed.
+    pub fn try_get<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>, UsageError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.flags.get(key) {
+            None => Ok(None),
+            Some(raw) => raw
+                .parse()
+                .map(Some)
+                .map_err(|e| UsageError(format!("bad value '{raw}' for --{key}: {e}"))),
+        }
+    }
+
+    /// Typed flag with default; [`UsageError`] when present but malformed.
+    pub fn try_get_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, UsageError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        Ok(self.try_get(key)?.unwrap_or(default))
+    }
+
+    /// Required typed flag as a `Result` (no process exit).
+    pub fn try_require<T: std::str::FromStr>(&self, key: &str) -> Result<T, UsageError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        self.try_get(key)?
+            .ok_or_else(|| UsageError(format!("missing required flag --{key}")))
+    }
+
+    /// Error on any flag not in `allowed` — catches typos like
+    /// `--tolerence` that would otherwise be silently ignored.
+    pub fn reject_unknown(&self, allowed: &[&str]) -> Result<(), UsageError> {
+        let mut unknown: Vec<&str> =
+            self.flags.keys().map(|k| k.as_str()).filter(|k| !allowed.contains(k)).collect();
+        unknown.sort_unstable();
+        if unknown.is_empty() {
+            return Ok(());
+        }
+        let mut choices: Vec<&str> = allowed.to_vec();
+        choices.sort_unstable();
+        Err(UsageError(format!(
+            "unknown flag{} --{} (allowed: --{})",
+            if unknown.len() > 1 { "s" } else { "" },
+            unknown.join(", --"),
+            choices.join(", --"),
+        )))
+    }
 }
 
 #[cfg(test)]
@@ -118,5 +191,32 @@ mod tests {
     fn negative_number_as_value() {
         let a = p(&["--shift", "-1.5"]);
         assert_eq!(a.get_or("shift", 0.0f64), -1.5);
+    }
+
+    #[test]
+    fn try_get_reports_malformed_values() {
+        let a = p(&["--k", "banana"]);
+        let err = a.try_get::<usize>("k").unwrap_err();
+        assert!(err.0.contains("banana"), "{err}");
+        assert!(err.0.contains("--k"), "{err}");
+        assert_eq!(a.try_get::<usize>("missing").unwrap(), None);
+        assert_eq!(a.try_get_or("missing", 7usize).unwrap(), 7);
+    }
+
+    #[test]
+    fn try_require_reports_missing() {
+        let a = p(&[]);
+        let err = a.try_require::<usize>("k").unwrap_err();
+        assert!(err.0.contains("missing"), "{err}");
+        assert!(err.0.contains("--k"), "{err}");
+    }
+
+    #[test]
+    fn reject_unknown_catches_typos() {
+        let a = p(&["--k", "8", "--tolerence", "1e-9"]);
+        let err = a.reject_unknown(&["k", "tolerance"]).unwrap_err();
+        assert!(err.0.contains("--tolerence"), "{err}");
+        assert!(err.0.contains("--tolerance"), "{err}");
+        assert!(a.reject_unknown(&["k", "tolerence"]).is_ok());
     }
 }

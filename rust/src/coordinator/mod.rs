@@ -16,8 +16,10 @@
 pub mod ooc;
 pub mod ring;
 
+use crate::api::error::SolverError;
+use crate::api::observer::{IterationEvent, IterationObserver, ObserverControl};
 use crate::gpu::{device::barrier, CostModel, Device, Topology};
-use crate::jacobi::{jacobi_eigen, DenseSym};
+use crate::jacobi::{jacobi_eigen, jacobi_eigen_f64, DenseSym};
 use crate::linalg::normalize as l2_normalize;
 use crate::precision::PrecisionConfig;
 use crate::rng::Rng;
@@ -159,11 +161,17 @@ pub struct SolveStats {
     pub out_of_core: bool,
     /// Peak device memory across the fleet.
     pub peak_device_bytes: usize,
-    /// Backend identifier ("hostsim" / "pjrt").
+    /// Backend identifier ("hostsim" / "pjrt" / "cpu").
     pub backend: &'static str,
+    /// True if an [`IterationObserver`] truncated the Krylov space before
+    /// the configured K (e.g. tolerance-driven early stopping).
+    pub early_stopped: bool,
 }
 
 /// The solver's output.
+///
+/// Holds `stats.iterations` eigenpairs — equal to the configured K unless
+/// an observer stopped the solve early (`stats.early_stopped`).
 #[derive(Clone, Debug)]
 pub struct EigenSolution {
     /// Top-K eigenvalues by |λ|, descending.
@@ -182,14 +190,29 @@ pub struct TopKSolver {
     kernels: Box<dyn Kernels>,
 }
 
+/// ARPACK-style residual estimate for the *top* Ritz pair of the
+/// tridiagonal `T = tridiag(β, α, β)`: `β_next · |s_K|`, where `s` is the
+/// leading eigenvector of `T` and `β_next` the norm of the next candidate.
+/// Shared by the coordinator and the CPU baseline so observer events mean
+/// the same thing on every backend.
+pub fn ritz_residual_estimate(alpha: &[f64], beta: &[f64], beta_next: f64) -> f64 {
+    if alpha.is_empty() {
+        return f64::INFINITY;
+    }
+    let t = DenseSym::from_tridiagonal(alpha, beta);
+    let eig = jacobi_eigen_f64(&t, 1e-12, 60);
+    beta_next * eig.vectors[0][alpha.len() - 1].abs()
+}
+
 impl TopKSolver {
     /// Solver over the pure-rust host-simulation backend.
     pub fn new(cfg: SolverConfig) -> Self {
         TopKSolver { cfg, kernels: Box::new(HostKernels::new()) }
     }
 
-    /// Solver over the AOT/PJRT artifact backend (`make artifacts` first).
-    pub fn with_pjrt(cfg: SolverConfig, artifact_dir: &Path) -> anyhow::Result<Self> {
+    /// Solver over the AOT/PJRT artifact backend (`make artifacts` first;
+    /// requires a build with the `xla` cargo feature).
+    pub fn with_pjrt(cfg: SolverConfig, artifact_dir: &Path) -> Result<Self, SolverError> {
         let pjrt = PjrtKernels::new(artifact_dir)?;
         pjrt.validate_for(&cfg.precision)?;
         Ok(TopKSolver { cfg, kernels: Box::new(pjrt) })
@@ -200,17 +223,63 @@ impl TopKSolver {
         TopKSolver { cfg, kernels }
     }
 
+    /// Name of the kernel backend in use ("hostsim" / "pjrt" / custom).
+    pub fn backend_name(&self) -> &'static str {
+        self.kernels.backend_name()
+    }
+
     /// Compute the Top-K eigenpairs of symmetric `m`.
-    pub fn solve(&mut self, m: &Csr) -> anyhow::Result<EigenSolution> {
+    pub fn solve(&mut self, m: &Csr) -> Result<EigenSolution, SolverError> {
+        self.solve_observed(m, None)
+    }
+
+    /// Like [`TopKSolver::solve`], invoking `observer` after every Lanczos
+    /// iteration. The observer may return [`ObserverControl::Stop`] to
+    /// truncate the Krylov space at the current dimension (tolerance-driven
+    /// early stopping); the solution then holds that many eigenpairs and
+    /// `stats.early_stopped` is set. The per-iteration residual estimate is
+    /// only computed when an observer is attached — the un-observed hot
+    /// path is unchanged.
+    pub fn solve_observed(
+        &mut self,
+        m: &Csr,
+        mut observer: Option<&mut dyn IterationObserver>,
+    ) -> Result<EigenSolution, SolverError> {
         let cfg = self.cfg.clone();
-        anyhow::ensure!(m.rows == m.cols, "matrix must be square (got {}×{})", m.rows, m.cols);
-        anyhow::ensure!(cfg.k >= 1, "K must be ≥ 1");
-        anyhow::ensure!(cfg.k < m.rows, "K={} must be < n={}", cfg.k, m.rows);
-        anyhow::ensure!(
-            (1..=8).contains(&cfg.devices),
-            "devices must be in 1..=8 (modeled DGX-1 fleet)"
-        );
-        anyhow::ensure!(cfg.devices <= m.rows, "more devices than rows");
+        if m.rows != m.cols {
+            return Err(SolverError::AsymmetricInput {
+                rows: m.rows,
+                cols: m.cols,
+                detail: format!("matrix must be square (got {}×{})", m.rows, m.cols),
+            });
+        }
+        if cfg.k < 1 {
+            return Err(SolverError::InvalidConfig {
+                field: "k",
+                message: "K must be ≥ 1".into(),
+            });
+        }
+        if cfg.k >= m.rows {
+            return Err(SolverError::InvalidConfig {
+                field: "k",
+                message: format!("K={} must be < n={}", cfg.k, m.rows),
+            });
+        }
+        if !(1..=8).contains(&cfg.devices) {
+            return Err(SolverError::InvalidConfig {
+                field: "devices",
+                message: format!(
+                    "devices must be in 1..=8 (modeled DGX-1 fleet), got {}",
+                    cfg.devices
+                ),
+            });
+        }
+        if cfg.devices > m.rows {
+            return Err(SolverError::InvalidConfig {
+                field: "devices",
+                message: format!("more devices ({}) than rows ({})", cfg.devices, m.rows),
+            });
+        }
 
         let wall_start = Instant::now();
         let n = m.rows;
@@ -237,12 +306,10 @@ impl TopKSolver {
             let part = m.slice_rows(p.row_start, p.row_end);
             // Vector working set: replica (n) + basis (K·n_g) + 3 work vectors.
             let vec_bytes = n * sb + (k + 3) * p.rows() * sb;
-            dev.mem.alloc(vec_bytes).map_err(|e| {
-                anyhow::anyhow!(
-                    "device {} cannot hold the Lanczos vectors ({e}); \
-                     increase --device-mem or --devices",
-                    dev.id
-                )
+            dev.mem.alloc(vec_bytes).map_err(|_| SolverError::MemoryBudget {
+                device: dev.id,
+                requested: vec_bytes,
+                capacity: dev.mem.capacity(),
             })?;
             let plan = plan_partition(
                 &part,
@@ -293,6 +360,9 @@ impl TopKSolver {
         let mut clock_cursor = 0.0f64;
 
         // ---- Main loop (Algorithm 1) ----------------------------------------
+        // `k_eff` tracks the realized Krylov dimension: an observer may
+        // truncate the loop before K iterations (early stopping).
+        let mut k_eff = k;
         for i in 0..k {
             // β sync + normalization (lines 5–7), skipped on the first pass.
             if i > 0 {
@@ -460,6 +530,26 @@ impl TopKSolver {
                 phases.reorth += phase_mark(&mut devices, &mut clock_cursor);
             }
 
+            // Observer hook: one event per completed iteration. The residual
+            // estimate costs a Jacobi solve of the (i+1)×(i+1) tridiagonal —
+            // microseconds at K ≤ 64 — and is skipped entirely when no
+            // observer is attached.
+            if let Some(obs) = observer.as_mut() {
+                let beta_next = sumsq_parts.iter().sum::<f64>().sqrt();
+                let event = IterationEvent {
+                    iter: i,
+                    alpha: a_i,
+                    beta: beta_next,
+                    residual_estimate: ritz_residual_estimate(&alpha, &beta, beta_next),
+                    sim_seconds: devices.iter().map(|d| d.clock_s).fold(0.0, f64::max),
+                    phases,
+                };
+                if obs.on_iteration(&event) == ObserverControl::Stop {
+                    k_eff = i + 1;
+                    break;
+                }
+            }
+
             // Shift: v_prev ← v_i.
             for gi in 0..g {
                 v_prev[gi] = basis[gi][i].clone();
@@ -483,10 +573,10 @@ impl TopKSolver {
 
         // ---- Eigenvector projection Y = 𝒱 · V --------------------------------
         let coeff: Vec<Vec<f64>> = eig.vectors.clone();
-        let mut eigenvectors = vec![vec![0.0f64; n]; k];
+        let mut eigenvectors = vec![vec![0.0f64; n]; k_eff];
         for (gi, p) in parts.iter().enumerate() {
             let outs = kernels.project(&basis[gi], &coeff, &cfg.precision);
-            let cost = cfg.cost.vector_cost(p.rows() * k, 1, 1, &cfg.precision);
+            let cost = cfg.cost.vector_cost(p.rows() * k_eff, 1, 1, &cfg.precision);
             devices[gi].run_kernel(cfg.cost.stream_seconds(cost, cfg.precision.compute));
             for (t_idx, out) in outs.into_iter().enumerate() {
                 eigenvectors[t_idx][p.row_start..p.row_end].copy_from_slice(&out);
@@ -506,11 +596,12 @@ impl TopKSolver {
             kernels_launched: devices.iter().map(|d| d.kernels_launched).sum(),
             h2d_bytes: devices.iter().map(|d| d.h2d_bytes).sum(),
             p2p_bytes: devices.iter().map(|d| d.p2p_bytes).sum(),
-            iterations: k,
+            iterations: k_eff,
             breakdowns,
             out_of_core,
             peak_device_bytes: devices.iter().map(|d| d.mem.peak()).max().unwrap_or(0),
             backend: kernels.backend_name(),
+            early_stopped: k_eff < k,
         };
 
         Ok(EigenSolution { eigenvalues: eig.values, eigenvectors, alpha, beta, stats })

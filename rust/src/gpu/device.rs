@@ -10,13 +10,24 @@ pub struct DeviceMemory {
 }
 
 /// Error returned when an allocation exceeds the device capacity.
-#[derive(Debug, thiserror::Error)]
-#[error("device OOM: requested {requested} bytes, free {free} of {capacity}")]
+#[derive(Debug)]
 pub struct DeviceOom {
     pub requested: usize,
     pub free: usize,
     pub capacity: usize,
 }
+
+impl std::fmt::Display for DeviceOom {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "device OOM: requested {} bytes, free {} of {}",
+            self.requested, self.free, self.capacity
+        )
+    }
+}
+
+impl std::error::Error for DeviceOom {}
 
 impl DeviceMemory {
     pub fn new(capacity: usize) -> Self {

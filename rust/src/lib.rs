@@ -4,26 +4,104 @@
 //! reproduction of *"A Mixed Precision, Multi-GPU Design for Large-scale
 //! Top-K Sparse Eigenproblems"* (Sgherzi, Parravicini, Santambrogio, 2022).
 //!
-//! The system is a two-phase solver:
+//! ## Quickstart
 //!
-//! 1. **Lanczos** ([`coordinator`]) builds a K-dimensional Krylov subspace of
-//!    a sparse symmetric matrix, partitioned across a fleet of (simulated)
-//!    GPUs with nnz-balanced partitions, ring-swapped `v_i` replicas and two
-//!    global synchronization points per iteration (α, β).
+//! Everything solves through one facade: [`Solver::builder()`].
+//!
+//! ```no_run
+//! use topk_eigen::{Backend, Eigensolve, PrecisionConfig, Solver};
+//!
+//! fn main() -> Result<(), topk_eigen::SolverError> {
+//!     let matrix = topk_eigen::sparse::suite::find("WB-GO")
+//!         .unwrap()
+//!         .generate_csr(1.0, 42);
+//!     let mut solver = Solver::builder()
+//!         .k(8)                              // Top-8 eigenpairs
+//!         .precision(PrecisionConfig::FDF)   // f32 storage, f64 accumulation
+//!         .devices(4)                        // 4 simulated V100s
+//!         .backend(Backend::HostSim)         // or Pjrt{..} / CpuBaseline
+//!         .build()?;
+//!     let solution = solver.solve(&matrix)?;
+//!     println!("λ₀ = {:+.6e}", solution.eigenvalues[0]);
+//!     Ok(())
+//! }
+//! ```
+//!
+//! The same builder drives every substrate — swap
+//! [`Backend::CpuBaseline`] in to run the ARPACK-class CPU comparator, or
+//! [`Backend::Pjrt`] to execute the AOT-lowered XLA artifacts (requires
+//! `make artifacts` and the `xla` cargo feature). Tolerance-driven early
+//! stopping hangs off the per-iteration observer hook:
+//!
+//! ```no_run
+//! use topk_eigen::{Eigensolve, PrecisionConfig, Solver};
+//! # fn main() -> Result<(), topk_eigen::SolverError> {
+//! # let matrix = topk_eigen::sparse::suite::find("WB-GO").unwrap().generate_csr(1.0, 42);
+//! let mut solver = Solver::builder()
+//!     .k(32)                 // upper bound on the Krylov dimension
+//!     .precision(PrecisionConfig::DDD)
+//!     .tolerance(1e-9)       // stop once the top Ritz pair is this tight
+//!     .build()?;
+//! let solution = solver.solve(&matrix)?;
+//! assert!(solution.stats.iterations <= 32);
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! ## System shape
+//!
+//! The solver is two-phase:
+//!
+//! 1. **Lanczos** ([`coordinator`]) builds a K-dimensional Krylov subspace
+//!    of a sparse symmetric matrix, partitioned across a fleet of
+//!    (simulated) GPUs with nnz-balanced partitions, ring-swapped `v_i`
+//!    replicas and two global synchronization points per iteration (α, β).
 //! 2. **Jacobi** ([`jacobi`]) diagonalizes the resulting K×K tridiagonal
 //!    matrix on the CPU and projects the eigenvectors back through the
 //!    Lanczos basis.
 //!
 //! The compute hot path (ELL SpMV, reductions, vector updates) executes as
 //! AOT-compiled XLA artifacts, lowered once from JAX/Pallas at build time
-//! (`make artifacts`) and loaded by [`runtime`] through the PJRT C API.
-//! Python never runs on the request path.
+//! (`make artifacts`) and loaded by [`runtime`] through the PJRT C API;
+//! without the `xla` feature the precision-faithful host simulation runs
+//! instead. Python never runs on the request path.
+//!
+//! ## Architecture of the public surface
+//!
+//! * [`api::Solver`] — the facade; holds a boxed [`api::EigenBackend`].
+//! * [`api::Eigensolve`] — the solve trait (`solve`, `solve_observed`).
+//! * [`api::Backend`] — substrate selection: `HostSim`, `Pjrt`,
+//!   `CpuBaseline`.
+//! * [`api::SolverError`] — typed errors on every public path (no
+//!   `anyhow` on the surface).
+//! * [`api::IterationObserver`] — per-Lanczos-iteration hooks; powers
+//!   early stopping and live diagnostics.
+//! * [`api::SolveReport`] — JSON-serializable solution + stats
+//!   (`topk-eigen solve --report out.json`).
+//!
+//! ## MIGRATION (pre-0.2 API)
+//!
+//! The raw constructors still compile but are deprecated re-exports; new
+//! code should use the facade:
+//!
+//! | pre-0.2                                      | 0.2+                                                  |
+//! |----------------------------------------------|-------------------------------------------------------|
+//! | `TopKSolver::new(SolverConfig { k: 8, .. })` | `Solver::builder().k(8).build()?`                     |
+//! | `TopKSolver::with_pjrt(cfg, dir)?`           | `.backend(Backend::Pjrt { artifacts: dir }).build()?` |
+//! | `TopKSolver::with_kernels(cfg, k)`           | `.custom_kernels(k).build()?`                         |
+//! | `solve_topk_cpu(&m, k, &BaselineConfig…)`    | `.backend(Backend::CpuBaseline).build()?`             |
+//! | `anyhow::Result<EigenSolution>`              | `Result<EigenSolution, SolverError>`                  |
+//!
+//! The low-level types (`SolverConfig`, `TopKSolver`, `BaselineConfig`)
+//! remain public under [`coordinator`] / [`baseline`] for harnesses that
+//! need them; only the *root* re-exports are deprecated.
 //!
 //! See `DESIGN.md` for the complete system inventory and the experiment
 //! index mapping every table/figure of the paper to a bench target.
 
-pub mod bench_util;
+pub mod api;
 pub mod baseline;
+pub mod bench_util;
 pub mod cli;
 pub mod coordinator;
 pub mod gpu;
@@ -36,6 +114,25 @@ pub mod rng;
 pub mod runtime;
 pub mod sparse;
 
-pub use coordinator::{EigenSolution, SolverConfig, TopKSolver};
+// ---- The 0.2 public surface -------------------------------------------------
+pub use api::{
+    Backend, CollectObserver, Eigensolve, FnObserver, IterationEvent, IterationObserver,
+    ObserverControl, SolveReport, Solver, SolverBuilder, SolverError, ToleranceStop,
+};
+pub use coordinator::{EigenSolution, PhaseBreakdown, ReorthMode, SolveStats, TopologyKind};
 pub use precision::PrecisionConfig;
 pub use sparse::{Coo, Csr, Ell};
+
+// ---- Deprecated pre-0.2 re-exports (see the MIGRATION table above) ----------
+#[deprecated(
+    since = "0.2.0",
+    note = "construct solvers with `Solver::builder()`; the type stays available \
+            as `coordinator::TopKSolver` for low-level harnesses"
+)]
+pub use coordinator::TopKSolver;
+#[deprecated(
+    since = "0.2.0",
+    note = "use the validated `Solver::builder()` setters instead of raw config \
+            literals; the type stays available as `coordinator::SolverConfig`"
+)]
+pub use coordinator::SolverConfig;

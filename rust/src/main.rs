@@ -4,38 +4,79 @@
 //! ```text
 //! topk-eigen solve  --matrix path.mtx | --suite WK [--scale 1.0] --k 8
 //!                   [--precision FDF] [--devices 1] [--reorth full]
-//!                   [--backend pjrt|hostsim] [--artifacts artifacts]
+//!                   [--backend hostsim|pjrt|cpu] [--artifacts artifacts]
+//!                   [--tolerance 1e-9 [--require-convergence]]
 //!                   [--device-mem-mb 32] [--seed N] [--baseline]
+//!                   [--report out.json]
 //! topk-eigen generate --suite KRON --scale 1.0 --out kron.mtx
 //! topk-eigen suite                       # list Table I stand-ins
 //! topk-eigen info   [--artifacts artifacts]
 //! ```
+//!
+//! Every solve path — including the ARPACK-class CPU baseline — goes
+//! through the `Solver::builder()` facade; `--backend` switches the
+//! substrate uniformly. Unknown flags and malformed values produce a usage
+//! error with exit code 2.
 
 use std::path::{Path, PathBuf};
-use topk_eigen::baseline::{solve_topk_cpu, BaselineConfig};
-use topk_eigen::cli;
-use topk_eigen::coordinator::{ReorthMode, SolverConfig, TopKSolver, TopologyKind};
+use topk_eigen::cli::{self, UsageError};
+use topk_eigen::coordinator::{ReorthMode, TopologyKind};
 use topk_eigen::metrics;
-use topk_eigen::precision::PrecisionConfig;
 use topk_eigen::runtime::Manifest;
 use topk_eigen::sparse::{mmio, suite, Csr};
+use topk_eigen::{Backend, Eigensolve, PrecisionConfig, SolveReport, Solver, SolverError};
+
+/// Failure modes of a CLI command, mapped to exit codes in `main`.
+enum CliError {
+    /// Bad invocation (unknown flag, malformed value, invalid config):
+    /// exit 2 with a pointer at the usage text.
+    Usage(String),
+    /// The command itself failed (solve error, I/O): exit 1.
+    Run(String),
+}
+
+impl From<UsageError> for CliError {
+    fn from(e: UsageError) -> Self {
+        CliError::Usage(e.0)
+    }
+}
+
+impl From<SolverError> for CliError {
+    fn from(e: SolverError) -> Self {
+        match e {
+            // Config-shaped failures are the user's invocation, not the run.
+            SolverError::InvalidConfig { .. }
+            | SolverError::BackendUnavailable { .. }
+            | SolverError::ArtifactMismatch { .. } => CliError::Usage(e.to_string()),
+            other => CliError::Run(other.to_string()),
+        }
+    }
+}
 
 fn main() {
     let args = cli::from_env();
     let cmd = args.positional().first().map(|s| s.as_str()).unwrap_or("help");
-    let code = match cmd {
+    let result = match cmd {
         "solve" => cmd_solve(&args),
         "generate" => cmd_generate(&args),
-        "suite" => cmd_suite(),
+        "suite" => cmd_suite(&args),
         "info" => cmd_info(&args),
         "help" | "--help" | "-h" => {
             print_usage();
-            0
+            Ok(0)
         }
-        other => {
-            eprintln!("unknown command '{other}'\n");
-            print_usage();
+        other => Err(CliError::Usage(format!("unknown command '{other}'"))),
+    };
+    let code = match result {
+        Ok(code) => code,
+        Err(CliError::Usage(msg)) => {
+            eprintln!("error: {msg}");
+            eprintln!("run `topk-eigen help` for usage");
             2
+        }
+        Err(CliError::Run(msg)) => {
+            eprintln!("error: {msg}");
+            1
         }
     };
     std::process::exit(code);
@@ -52,94 +93,115 @@ fn print_usage() {
          \x20 topk-eigen info     [--artifacts <dir>]\n\
          \n\
          SOLVE OPTIONS:\n\
-         \x20 --k <n>             eigencomponents (default 8)\n\
+         \x20 --k <n>             eigencomponents (default 8; a maximum when\n\
+         \x20                     --tolerance is set)\n\
          \x20 --precision <cfg>   FFF | FDF | DDD (default FDF)\n\
          \x20 --devices <g>       simulated GPUs, 1..=8 (default 1)\n\
          \x20 --reorth <mode>     none | alternating | full (default full)\n\
-         \x20 --backend <b>       hostsim | pjrt (default hostsim)\n\
+         \x20 --backend <b>       hostsim | pjrt | cpu (default hostsim)\n\
          \x20 --artifacts <dir>   AOT artifact dir for pjrt (default artifacts)\n\
+         \x20 --tolerance <t>     stop early once the top Ritz residual\n\
+         \x20                     estimate drops below t\n\
+         \x20 --require-convergence  fail (exit 1) if --tolerance is not met\n\
          \x20 --scale <s>         suite scale factor (default 1.0)\n\
          \x20 --device-mem-mb <m> per-device memory budget (default 32)\n\
          \x20 --topology <t>      dgx1 | nvswitch (default dgx1)\n\
          \x20 --seed <n>          RNG seed (default fixed)\n\
-         \x20 --baseline          also run the ARPACK-class CPU baseline\n"
+         \x20 --baseline          also run the ARPACK-class CPU baseline\n\
+         \x20 --report <f.json>   write a machine-readable solve report\n"
     );
 }
 
-fn load_matrix(args: &cli::Args) -> Result<(String, Csr), String> {
-    let scale: f64 = args.get_or("scale", 1.0);
-    let seed: u64 = args.get_or("seed", 42u64);
+fn load_matrix(args: &cli::Args) -> Result<(String, Csr), CliError> {
+    let scale: f64 = args.try_get_or("scale", 1.0)?;
+    let seed: u64 = args.try_get_or("seed", 42u64)?;
     if let Some(path) = args.get("matrix") {
-        let coo = mmio::read_matrix_market(Path::new(path)).map_err(|e| e.to_string())?;
-        let mut coo = coo;
+        let mut coo = mmio::read_matrix_market(Path::new(path))
+            .map_err(|e| CliError::Run(format!("reading {path}: {e}")))?;
         coo.symmetrize();
         coo.normalize_by_max_degree();
         Ok((path.to_string(), Csr::from_coo(&coo)))
     } else if let Some(id) = args.get("suite") {
-        let e = suite::find(id).ok_or_else(|| format!("unknown suite id '{id}'"))?;
+        let e = suite::find(id).ok_or_else(|| {
+            CliError::Usage(format!("unknown suite id '{id}' (see `topk-eigen suite`)"))
+        })?;
         Ok((e.id.to_string(), e.generate_csr(scale, seed)))
     } else {
-        Err("need --matrix <file.mtx> or --suite <ID>".into())
+        Err(CliError::Usage("need --matrix <file.mtx> or --suite <ID>".into()))
     }
 }
 
-fn cmd_solve(args: &cli::Args) -> i32 {
-    let (name, m) = match load_matrix(args) {
-        Ok(x) => x,
-        Err(e) => {
-            eprintln!("error: {e}");
-            return 2;
-        }
-    };
-    let precision: PrecisionConfig = args.get_or("precision", PrecisionConfig::FDF);
-    let reorth: ReorthMode = args.get_or("reorth", ReorthMode::Full);
+const SOLVE_FLAGS: &[&str] = &[
+    "matrix",
+    "suite",
+    "scale",
+    "seed",
+    "k",
+    "precision",
+    "devices",
+    "reorth",
+    "backend",
+    "artifacts",
+    "tolerance",
+    "require-convergence",
+    "device-mem-mb",
+    "topology",
+    "baseline",
+    "report",
+];
+
+fn cmd_solve(args: &cli::Args) -> Result<i32, CliError> {
+    args.reject_unknown(SOLVE_FLAGS)?;
+    let (name, m) = load_matrix(args)?;
+
+    let k: usize = args.try_get_or("k", 8usize)?;
+    let precision: PrecisionConfig = args.try_get_or("precision", PrecisionConfig::FDF)?;
+    let devices: usize = args.try_get_or("devices", 1usize)?;
+    let reorth: ReorthMode = args.try_get_or("reorth", ReorthMode::Full)?;
     let topology = match args.get("topology").unwrap_or("dgx1") {
         "nvswitch" => TopologyKind::NvSwitch,
-        _ => TopologyKind::Dgx1,
+        "dgx1" => TopologyKind::Dgx1,
+        other => {
+            return Err(CliError::Usage(format!(
+                "bad value '{other}' for --topology (expected dgx1 or nvswitch)"
+            )))
+        }
     };
-    let cfg = SolverConfig {
-        k: args.get_or("k", 8usize),
-        precision,
-        devices: args.get_or("devices", 1usize),
-        reorth,
-        seed: args.get_or("seed", 0x70D0_EE11u64),
-        device_mem_bytes: args.get_or("device-mem-mb", 32usize) << 20,
-        topology,
-        ..Default::default()
+    let seed: u64 = args.try_get_or("seed", 0x70D0_EE11u64)?;
+    let mem_mb: usize = args.try_get_or("device-mem-mb", 32usize)?;
+    let tolerance: Option<f64> = args.try_get("tolerance")?;
+
+    // Backend selection — one flag for all substrates.
+    let backend = match args.try_get_or("backend", Backend::HostSim)? {
+        Backend::Pjrt { .. } => Backend::Pjrt {
+            artifacts: PathBuf::from(args.get("artifacts").unwrap_or("artifacts")),
+        },
+        b => b,
     };
 
     println!(
-        "matrix {name}: {} rows, {} nnz | K={} precision={} devices={} reorth={:?}",
+        "matrix {name}: {} rows, {} nnz | K={k} precision={precision} devices={devices} \
+         reorth={reorth:?} backend={}",
         m.rows,
         m.nnz(),
-        cfg.k,
-        cfg.precision,
-        cfg.devices,
-        cfg.reorth
+        backend.name(),
     );
 
-    let backend = args.get("backend").unwrap_or("hostsim");
-    let mut solver = match backend {
-        "pjrt" => {
-            let dir = PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
-            match TopKSolver::with_pjrt(cfg, &dir) {
-                Ok(s) => s,
-                Err(e) => {
-                    eprintln!("error: {e}");
-                    return 2;
-                }
-            }
-        }
-        _ => TopKSolver::new(cfg),
-    };
-
-    let sol = match solver.solve(&m) {
-        Ok(s) => s,
-        Err(e) => {
-            eprintln!("solve failed: {e}");
-            return 1;
-        }
-    };
+    let mut builder = Solver::builder()
+        .k(k)
+        .precision(precision)
+        .devices(devices)
+        .reorth(reorth)
+        .seed(seed)
+        .device_mem_mb(mem_mb)
+        .topology(topology)
+        .backend(backend.clone())
+        .require_convergence(args.has("require-convergence"));
+    if let Some(tol) = tolerance {
+        builder = builder.tolerance(tol);
+    }
+    let mut solver = builder.build()?;
+    let sol = solver.solve(&m)?;
 
     println!("\nTop-{} eigenvalues:", sol.eigenvalues.len());
     for (i, l) in sol.eigenvalues.iter().enumerate() {
@@ -148,6 +210,12 @@ fn cmd_solve(args: &cli::Args) -> i32 {
     }
     let ang = metrics::avg_pairwise_angle_deg(&sol.eigenvectors);
     let s = &sol.stats;
+    if s.early_stopped {
+        println!(
+            "\nearly stop: tolerance met after {} of {k} iterations",
+            s.iterations
+        );
+    }
     println!(
         "\nbackend={} wall={:.3}s sim={:.6}s kernels={} h2d={}B p2p={}B ooc={} \
          breakdowns={}",
@@ -173,53 +241,47 @@ fn cmd_solve(args: &cli::Args) -> i32 {
     );
     println!("orthogonality: avg pairwise angle = {ang:.4}°");
 
-    if args.has("baseline") {
-        println!("\nrunning ARPACK-class CPU baseline...");
-        let bres = solve_topk_cpu(&m, solver.cfg.k, &BaselineConfig::default());
+    if args.has("baseline") && !matches!(backend, Backend::CpuBaseline) {
+        println!("\nrunning ARPACK-class CPU baseline through the same facade...");
+        let mut cpu = Solver::builder().k(k).seed(seed).backend(Backend::CpuBaseline).build()?;
+        let bres = cpu.solve(&m)?;
         println!(
-            "baseline: {:.3}s, {} SpMVs, max residual {:.3e}",
-            bres.seconds, bres.spmv_count, bres.max_residual
+            "baseline: {:.3}s, {} SpMVs, {} restarts",
+            bres.stats.wall_seconds, bres.stats.kernels_launched, bres.stats.breakdowns
         );
         for (i, (a, b)) in sol.eigenvalues.iter().zip(&bres.eigenvalues).enumerate() {
             println!("  λ[{i}] gpu={a:+.6e} cpu={b:+.6e} Δ={:.2e}", (a - b).abs());
         }
     }
-    0
-}
 
-fn cmd_generate(args: &cli::Args) -> i32 {
-    let id = match args.get("suite") {
-        Some(s) => s,
-        None => {
-            eprintln!("error: --suite <ID> required");
-            return 2;
-        }
-    };
-    let out = match args.get("out") {
-        Some(s) => s,
-        None => {
-            eprintln!("error: --out <file.mtx> required");
-            return 2;
-        }
-    };
-    let e = match suite::find(id) {
-        Some(e) => e,
-        None => {
-            eprintln!("error: unknown suite id '{id}' (see `topk-eigen suite`)");
-            return 2;
-        }
-    };
-    let coo = e.generate(args.get_or("scale", 1.0), args.get_or("seed", 42u64));
-    println!("generated {}: {} rows, {} nnz", e.id, coo.rows, coo.nnz());
-    if let Err(err) = mmio::write_matrix_market(Path::new(out), &coo) {
-        eprintln!("error writing {out}: {err}");
-        return 1;
+    if let Some(path) = args.get("report") {
+        let mut report = SolveReport::new(&name, k, &sol).with_residuals(&m, &sol);
+        report.precision = Some(precision.name());
+        report.devices = Some(devices);
+        report.tolerance = tolerance;
+        report.write_json(Path::new(path))?;
+        println!("report written to {path}");
     }
-    println!("wrote {out}");
-    0
+    Ok(0)
 }
 
-fn cmd_suite() -> i32 {
+fn cmd_generate(args: &cli::Args) -> Result<i32, CliError> {
+    args.reject_unknown(&["suite", "out", "scale", "seed"])?;
+    let id: String = args.try_require("suite")?;
+    let out: String = args.try_require("out")?;
+    let e = suite::find(&id).ok_or_else(|| {
+        CliError::Usage(format!("unknown suite id '{id}' (see `topk-eigen suite`)"))
+    })?;
+    let coo = e.generate(args.try_get_or("scale", 1.0)?, args.try_get_or("seed", 42u64)?);
+    println!("generated {}: {} rows, {} nnz", e.id, coo.rows, coo.nnz());
+    mmio::write_matrix_market(Path::new(&out), &coo)
+        .map_err(|err| CliError::Run(format!("writing {out}: {err}")))?;
+    println!("wrote {out}");
+    Ok(0)
+}
+
+fn cmd_suite(args: &cli::Args) -> Result<i32, CliError> {
+    args.reject_unknown(&[])?;
     println!("Table I stand-in suite (paper sizes; generated at --scale):");
     println!(
         "{:<6} {:<16} {:>10} {:>12} {:>8} {:>6}",
@@ -236,24 +298,18 @@ fn cmd_suite() -> i32 {
             if e.out_of_core { "yes" } else { "no" }
         );
     }
-    0
+    Ok(0)
 }
 
-fn cmd_info(args: &cli::Args) -> i32 {
+fn cmd_info(args: &cli::Args) -> Result<i32, CliError> {
+    args.reject_unknown(&["artifacts"])?;
     let dir = PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
-    match Manifest::load(&dir) {
-        Ok(m) => {
-            println!("artifact dir: {}", dir.display());
-            println!("entries: {}", m.entries.len());
-            for k in m.kernels() {
-                let count = m.entries.iter().filter(|e| e.kernel == k).count();
-                println!("  {k}: {count} buckets");
-            }
-            0
-        }
-        Err(e) => {
-            eprintln!("error: {e}");
-            1
-        }
+    let m = Manifest::load(&dir).map_err(|e| CliError::Run(e.to_string()))?;
+    println!("artifact dir: {}", dir.display());
+    println!("entries: {}", m.entries.len());
+    for k in m.kernels() {
+        let count = m.entries.iter().filter(|e| e.kernel == k).count();
+        println!("  {k}: {count} buckets");
     }
+    Ok(0)
 }

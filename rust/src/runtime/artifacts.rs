@@ -39,21 +39,42 @@ pub struct Manifest {
 }
 
 /// Manifest parse/load errors.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ManifestError {
-    #[error("io error reading {0}: {1}")]
     Io(PathBuf, std::io::Error),
-    #[error("malformed manifest line {0}: {1}")]
     Malformed(usize, String),
-    #[error(
-        "no artifact for kernel '{kernel}' ptag '{ptag}' covering {need:?}; \
-         run `make artifacts` or enlarge the bucket ladder in aot.py"
-    )]
     NoBucket {
         kernel: String,
         ptag: String,
         need: Vec<(String, usize)>,
     },
+}
+
+impl std::fmt::Display for ManifestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ManifestError::Io(path, e) => {
+                write!(f, "io error reading manifest {}: {e}", path.display())
+            }
+            ManifestError::Malformed(line, msg) => {
+                write!(f, "malformed manifest line {line}: {msg}")
+            }
+            ManifestError::NoBucket { kernel, ptag, need } => write!(
+                f,
+                "no artifact for kernel '{kernel}' ptag '{ptag}' covering {need:?}; \
+                 run `make artifacts` or enlarge the bucket ladder in aot.py"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ManifestError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ManifestError::Io(_, e) => Some(e),
+            _ => None,
+        }
+    }
 }
 
 impl Manifest {

@@ -17,14 +17,38 @@
 
 pub mod artifacts;
 pub mod fixedpoint;
+#[cfg(feature = "xla")]
+pub mod pjrt;
+#[cfg(not(feature = "xla"))]
+#[path = "pjrt_stub.rs"]
 pub mod pjrt;
 
 pub use artifacts::{ArtifactEntry, Manifest};
 pub use fixedpoint::FixedPointKernels;
 pub use pjrt::PjrtKernels;
 
+use crate::api::error::SolverError;
 use crate::precision::{Compute, PrecisionConfig, Storage};
 use crate::sparse::Ell;
+
+/// Verify that `manifest` covers every kernel×precision family a solve at
+/// `cfg` needs. Shared by the real PJRT backend and the stub (and usable
+/// directly by tooling that wants to validate an artifact directory
+/// without constructing a client).
+pub fn validate_manifest(manifest: &Manifest, cfg: &PrecisionConfig) -> Result<(), SolverError> {
+    let tag = cfg.kernel_tag();
+    for kernel in ["spmv", "dot", "candidate", "normalize", "ortho_update", "project"] {
+        if !manifest.entries.iter().any(|e| e.kernel == kernel && e.ptag == tag) {
+            return Err(SolverError::ArtifactMismatch {
+                message: format!(
+                    "artifacts missing kernel '{kernel}' for precision {tag}; \
+                     re-run `make artifacts`"
+                ),
+            });
+        }
+    }
+    Ok(())
+}
 
 /// Device-kernel interface consumed by the coordinator.
 pub trait Kernels: Send {

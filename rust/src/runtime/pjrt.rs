@@ -21,7 +21,8 @@
 //! `Result` through the hot loop.
 
 use super::artifacts::Manifest;
-use super::{quantize_vec, Kernels};
+use super::{quantize_vec, validate_manifest, Kernels};
+use crate::api::error::SolverError;
 use crate::precision::{PrecisionConfig, Storage};
 use crate::sparse::Ell;
 use std::collections::HashMap;
@@ -68,14 +69,20 @@ unsafe impl Send for PjrtKernels {}
 impl PjrtKernels {
     /// Create a backend from an artifact directory (must contain
     /// `manifest.tsv`; see `python/compile/aot.py`).
-    pub fn new(artifact_dir: &Path) -> anyhow::Result<Self> {
+    pub fn new(artifact_dir: &Path) -> Result<Self, SolverError> {
         let manifest = Manifest::load(artifact_dir)?;
-        anyhow::ensure!(
-            !manifest.entries.is_empty(),
-            "manifest at {:?} is empty — run `make artifacts`",
-            artifact_dir
-        );
-        let client = xla::PjRtClient::cpu()?;
+        if manifest.entries.is_empty() {
+            return Err(SolverError::ArtifactMismatch {
+                message: format!(
+                    "manifest at {} is empty — run `make artifacts`",
+                    artifact_dir.display()
+                ),
+            });
+        }
+        let client = xla::PjRtClient::cpu().map_err(|e| SolverError::BackendUnavailable {
+            backend: "pjrt",
+            reason: format!("PJRT CPU client initialization failed: {e}"),
+        })?;
         Ok(PjrtKernels {
             client,
             manifest,
@@ -88,15 +95,8 @@ impl PjrtKernels {
     }
 
     /// Verify all kernel families needed by `cfg` exist in the manifest.
-    pub fn validate_for(&self, cfg: &PrecisionConfig) -> anyhow::Result<()> {
-        let tag = cfg.kernel_tag();
-        for kernel in ["spmv", "dot", "candidate", "normalize", "ortho_update", "project"] {
-            anyhow::ensure!(
-                self.manifest.entries.iter().any(|e| e.kernel == kernel && e.ptag == tag),
-                "artifacts missing kernel '{kernel}' for precision {tag}; re-run `make artifacts`"
-            );
-        }
-        Ok(())
+    pub fn validate_for(&self, cfg: &PrecisionConfig) -> Result<(), SolverError> {
+        validate_manifest(&self.manifest, cfg)
     }
 
     fn executable(&mut self, name: &str) -> &xla::PjRtLoadedExecutable {

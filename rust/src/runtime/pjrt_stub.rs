@@ -1,0 +1,133 @@
+//! Stub PJRT backend for builds without the `xla` cargo feature.
+//!
+//! The production PJRT path executes AOT-lowered HLO artifacts through the
+//! `xla` crate's PJRT C-API bindings; that crate (and its C++ runtime) is
+//! not vendored in this offline tree, so the default build compiles this
+//! stub instead. It keeps the *surface* identical — manifest loading and
+//! validation still run, so artifact-related misconfiguration reports the
+//! same typed errors — but construction always ends in
+//! [`SolverError::BackendUnavailable`], which the `Solver::builder()`
+//! facade surfaces before any solve starts.
+
+use super::artifacts::Manifest;
+use super::Kernels;
+use crate::api::error::SolverError;
+use crate::precision::PrecisionConfig;
+use crate::sparse::Ell;
+use std::convert::Infallible;
+use std::path::Path;
+
+/// Uninhabited placeholder for the PJRT executor: constructing one is
+/// impossible without the `xla` feature, which the type system encodes via
+/// the [`Infallible`] field.
+pub struct PjrtKernels {
+    never: Infallible,
+}
+
+impl PjrtKernels {
+    /// Validates the artifact directory exactly like the real backend
+    /// (missing/empty manifests report [`SolverError::ArtifactMismatch`]),
+    /// then fails with [`SolverError::BackendUnavailable`]: this build has
+    /// no XLA runtime.
+    pub fn new(artifact_dir: &Path) -> Result<Self, SolverError> {
+        let manifest = Manifest::load(artifact_dir)?;
+        if manifest.entries.is_empty() {
+            return Err(SolverError::ArtifactMismatch {
+                message: format!(
+                    "manifest at {} is empty — run `make artifacts`",
+                    artifact_dir.display()
+                ),
+            });
+        }
+        Err(SolverError::BackendUnavailable {
+            backend: "pjrt",
+            reason: "this build has no XLA runtime (compiled without the `xla` cargo \
+                     feature); use --backend hostsim or cpu, or rebuild with \
+                     `--features xla` after vendoring the `xla` crate"
+                .into(),
+        })
+    }
+
+    /// Mirror of the real backend's precision validation (unreachable: the
+    /// stub cannot be constructed).
+    pub fn validate_for(&self, _cfg: &PrecisionConfig) -> Result<(), SolverError> {
+        match self.never {}
+    }
+}
+
+impl Kernels for PjrtKernels {
+    fn spmv(&mut self, _ell: &Ell, _x: &[f64], _cfg: &PrecisionConfig) -> Vec<f64> {
+        match self.never {}
+    }
+
+    fn dot(&mut self, _a: &[f64], _b: &[f64], _cfg: &PrecisionConfig) -> f64 {
+        match self.never {}
+    }
+
+    fn candidate(
+        &mut self,
+        _v_tmp: &[f64],
+        _v_i: &[f64],
+        _v_prev: &[f64],
+        _alpha: f64,
+        _beta: f64,
+        _cfg: &PrecisionConfig,
+    ) -> (Vec<f64>, f64) {
+        match self.never {}
+    }
+
+    fn normalize(&mut self, _v: &[f64], _beta: f64, _cfg: &PrecisionConfig) -> Vec<f64> {
+        match self.never {}
+    }
+
+    fn ortho_update(
+        &mut self,
+        _u: &[f64],
+        _vj: &[f64],
+        _o: f64,
+        _cfg: &PrecisionConfig,
+    ) -> Vec<f64> {
+        match self.never {}
+    }
+
+    fn project(
+        &mut self,
+        _basis: &[Vec<f64>],
+        _coeff: &[Vec<f64>],
+        _cfg: &PrecisionConfig,
+    ) -> Vec<Vec<f64>> {
+        match self.never {}
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn missing_artifacts_report_manifest_error() {
+        let err = PjrtKernels::new(Path::new("/definitely/not/a/dir")).unwrap_err();
+        assert!(matches!(err, SolverError::ArtifactMismatch { .. }), "{err:?}");
+        assert!(err.to_string().contains("manifest"), "{err}");
+    }
+
+    #[test]
+    fn valid_artifacts_report_backend_unavailable() {
+        let dir = std::env::temp_dir().join(format!("topk_stub_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.tsv"),
+            "# name\tfile\tkernel\tptag\tparams\n\
+             spmv_x\tspmv_x.hlo.txt\tspmv\ts32c64\tr=4;w=4;n=4\n",
+        )
+        .unwrap();
+        let err = PjrtKernels::new(&dir).unwrap_err();
+        assert!(matches!(err, SolverError::BackendUnavailable { backend: "pjrt", .. }), "{err:?}");
+        assert!(err.to_string().contains("xla"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

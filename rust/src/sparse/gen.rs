@@ -223,6 +223,31 @@ pub fn tridiag_toeplitz(n: usize, d: f64, e: f64) -> Coo {
     coo
 }
 
+/// Diagonal spikes + weak tridiagonal coupling: a dominant, well-separated
+/// top eigenvalue (≈10, next ≈5.6; gap ratio γ ≈ 0.8) over a decaying
+/// tail. The regime where the top Ritz pair converges long before K
+/// Lanczos iterations — used by the early-stopping tests and the
+/// `early_stop` example so both exercise the same spectrum.
+pub fn spiked_gap(n: usize) -> Coo {
+    let mut coo = Coo::new(n, n);
+    for i in 0..n {
+        let d = if i == 0 {
+            10.0
+        } else if i < 12 {
+            6.0 - 0.4 * i as f64
+        } else {
+            0.5 / (1.0 + i as f64)
+        };
+        coo.push(i as u32, i as u32, d);
+        if i + 1 < n {
+            coo.push(i as u32, (i + 1) as u32, 1e-3);
+            coo.push((i + 1) as u32, i as u32, 1e-3);
+        }
+    }
+    coo.canonicalize();
+    coo
+}
+
 /// Analytic eigenvalues of [`tridiag_toeplitz`], descending by magnitude.
 pub fn tridiag_toeplitz_eigs(n: usize, d: f64, e: f64) -> Vec<f64> {
     let mut eigs: Vec<f64> = (1..=n)

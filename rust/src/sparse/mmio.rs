@@ -11,16 +11,40 @@ use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::path::Path;
 
 /// Errors produced by the MatrixMarket parser.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum MmioError {
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("not a MatrixMarket file (missing %%MatrixMarket header)")]
+    Io(std::io::Error),
     BadHeader,
-    #[error("unsupported MatrixMarket variant: {0}")]
     Unsupported(String),
-    #[error("parse error at line {line}: {msg}")]
     Parse { line: usize, msg: String },
+}
+
+impl std::fmt::Display for MmioError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MmioError::Io(e) => write!(f, "io error: {e}"),
+            MmioError::BadHeader => {
+                write!(f, "not a MatrixMarket file (missing %%MatrixMarket header)")
+            }
+            MmioError::Unsupported(v) => write!(f, "unsupported MatrixMarket variant: {v}"),
+            MmioError::Parse { line, msg } => write!(f, "parse error at line {line}: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for MmioError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            MmioError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for MmioError {
+    fn from(e: std::io::Error) -> Self {
+        MmioError::Io(e)
+    }
 }
 
 #[derive(Clone, Copy, PartialEq)]

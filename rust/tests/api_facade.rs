@@ -1,0 +1,374 @@
+//! Integration tests for the unified `Solver::builder()` facade: builder
+//! validation, backend uniformity, iteration-observer hooks,
+//! tolerance-driven early stopping, and the JSON solve report.
+
+use topk_eigen::coordinator::{SolverConfig, TopKSolver};
+use topk_eigen::rng::Rng;
+use topk_eigen::sparse::{gen, Csr};
+use topk_eigen::{
+    Backend, CollectObserver, Eigensolve, FnObserver, ObserverControl, PrecisionConfig,
+    SolveReport, Solver, SolverError, ToleranceStop,
+};
+
+/// Well-separated top eigenvalue (see [`gen::spiked_gap`]) — the regime
+/// where tolerance-driven early stopping has room to trigger.
+fn spiked(n: usize) -> Csr {
+    Csr::from_coo(&gen::spiked_gap(n))
+}
+
+fn er_graph(n: usize, seed: u64) -> Csr {
+    let mut rng = Rng::new(seed);
+    Csr::from_coo(&gen::erdos_renyi(n, n, 0.03, true, &mut rng))
+}
+
+// ---- Builder validation -----------------------------------------------------
+
+#[test]
+fn builder_rejects_bad_configs_with_typed_errors() {
+    let err = Solver::builder().k(0).build().unwrap_err();
+    assert!(matches!(err, SolverError::InvalidConfig { field: "k", .. }), "{err:?}");
+
+    let err = Solver::builder().devices(0).build().unwrap_err();
+    assert!(matches!(err, SolverError::InvalidConfig { field: "devices", .. }), "{err:?}");
+
+    let err = Solver::builder().devices(9).build().unwrap_err();
+    assert!(err.to_string().contains("1..=8"), "{err}");
+
+    let err = Solver::builder().device_mem_bytes(0).build().unwrap_err();
+    assert!(
+        matches!(err, SolverError::InvalidConfig { field: "device_mem_bytes", .. }),
+        "{err:?}"
+    );
+
+    let err = Solver::builder().tolerance(-1.0).build().unwrap_err();
+    assert!(matches!(err, SolverError::InvalidConfig { field: "tolerance", .. }), "{err:?}");
+}
+
+#[test]
+fn solver_error_messages_are_actionable() {
+    // Memory-budget overflow: the message must name the knobs to turn.
+    let m = er_graph(200, 1);
+    let mut s = Solver::builder().k(8).device_mem_bytes(64).build().unwrap();
+    let err = s.solve(&m).unwrap_err();
+    assert!(matches!(err, SolverError::MemoryBudget { .. }), "{err:?}");
+    let msg = err.to_string();
+    assert!(msg.contains("cannot hold"), "{msg}");
+    assert!(msg.contains("device-mem"), "{msg}");
+
+    // Asymmetric input names the shape.
+    let mut rng = Rng::new(2);
+    let rect = Csr::from_coo(&gen::erdos_renyi(30, 40, 0.2, false, &mut rng));
+    let err = Solver::builder().build().unwrap().solve(&rect).unwrap_err();
+    assert!(matches!(err, SolverError::AsymmetricInput { rows: 30, cols: 40, .. }), "{err:?}");
+    assert!(err.to_string().contains("square"), "{err}");
+}
+
+#[test]
+fn pjrt_backend_without_artifacts_is_a_typed_error() {
+    let err = Solver::builder()
+        .backend(Backend::Pjrt { artifacts: "/definitely/not/a/dir".into() })
+        .build()
+        .unwrap_err();
+    assert!(matches!(err, SolverError::ArtifactMismatch { .. }), "{err:?}");
+    assert!(err.to_string().contains("manifest"), "{err}");
+}
+
+// ---- Backend uniformity -----------------------------------------------------
+
+#[test]
+fn facade_matches_legacy_api_exactly() {
+    // Same config + seed ⇒ the facade must be a zero-cost rename of the
+    // old TopKSolver path.
+    let m = er_graph(300, 3);
+    let legacy = TopKSolver::new(SolverConfig {
+        k: 6,
+        precision: PrecisionConfig::DDD,
+        devices: 2,
+        ..Default::default()
+    })
+    .solve(&m)
+    .unwrap();
+    let facade = Solver::builder()
+        .k(6)
+        .precision(PrecisionConfig::DDD)
+        .devices(2)
+        .build()
+        .unwrap()
+        .solve(&m)
+        .unwrap();
+    assert_eq!(legacy.eigenvalues, facade.eigenvalues);
+    assert_eq!(legacy.alpha, facade.alpha);
+}
+
+#[test]
+fn cpu_baseline_agrees_with_hostsim_through_one_entry_point() {
+    let m = spiked(400);
+    let run = |backend: Backend| {
+        Solver::builder()
+            .k(12)
+            .precision(PrecisionConfig::DDD)
+            .backend(backend)
+            .build()
+            .unwrap()
+            .solve(&m)
+            .unwrap()
+    };
+    let gpu = run(Backend::HostSim);
+    let cpu = run(Backend::CpuBaseline);
+    assert_eq!(gpu.stats.backend, "hostsim");
+    assert_eq!(cpu.stats.backend, "cpu");
+    assert!(cpu.stats.kernels_launched > 0, "cpu SpMV count must be reported");
+    // The dominant pair agrees tightly across substrates; interior pairs
+    // within the Krylov-dim-K truncation (same tolerance regime as the
+    // coordinator's own spectrum tests).
+    assert!(
+        (gpu.eigenvalues[0] - cpu.eigenvalues[0]).abs() < 1e-6,
+        "gpu {} vs cpu {}",
+        gpu.eigenvalues[0],
+        cpu.eigenvalues[0]
+    );
+    for (a, b) in gpu.eigenvalues.iter().take(3).zip(&cpu.eigenvalues) {
+        assert!((a - b).abs() < 1e-2, "gpu {a} vs cpu {b}");
+    }
+}
+
+// ---- Observer hooks ---------------------------------------------------------
+
+#[test]
+fn observer_fires_once_per_iteration_with_monotonic_sim_time() {
+    let m = er_graph(250, 5);
+    let mut s = Solver::builder().k(10).precision(PrecisionConfig::DDD).build().unwrap();
+    let mut log = CollectObserver::default();
+    let sol = s.solve_observed(&m, &mut log).unwrap();
+    assert_eq!(log.events.len(), 10);
+    assert!(!sol.stats.early_stopped);
+    for (i, ev) in log.events.iter().enumerate() {
+        assert_eq!(ev.iter, i);
+        assert!(ev.beta >= 0.0);
+        assert!(ev.residual_estimate.is_finite());
+        if i > 0 {
+            assert!(
+                ev.sim_seconds >= log.events[i - 1].sim_seconds,
+                "sim time must be monotone"
+            );
+        }
+    }
+    // Un-observed solve is unaffected by observer plumbing.
+    let plain = Solver::builder()
+        .k(10)
+        .precision(PrecisionConfig::DDD)
+        .build()
+        .unwrap()
+        .solve(&m)
+        .unwrap();
+    assert_eq!(plain.eigenvalues, sol.eigenvalues);
+}
+
+#[test]
+fn closure_observer_can_stop_the_solve() {
+    let m = er_graph(250, 6);
+    let mut s = Solver::builder().k(12).precision(PrecisionConfig::DDD).build().unwrap();
+    let mut obs = FnObserver(|ev: &topk_eigen::IterationEvent| {
+        if ev.iter >= 4 {
+            ObserverControl::Stop
+        } else {
+            ObserverControl::Continue
+        }
+    });
+    let sol = s.solve_observed(&m, &mut obs).unwrap();
+    assert!(sol.stats.early_stopped);
+    assert_eq!(sol.stats.iterations, 5);
+    assert_eq!(sol.eigenvalues.len(), 5);
+    assert_eq!(sol.eigenvectors.len(), 5);
+    assert_eq!(sol.alpha.len(), 5);
+    assert_eq!(sol.beta.len(), 4);
+    assert!(sol.eigenvalues.iter().all(|l| l.is_finite()));
+}
+
+// ---- Tolerance-driven early stopping ----------------------------------------
+
+#[test]
+fn early_stop_converges_to_fixed_k_lambda_within_tolerance() {
+    let m = spiked(800);
+    let k_max = 24;
+    let fixed = Solver::builder()
+        .k(k_max)
+        .precision(PrecisionConfig::DDD)
+        .build()
+        .unwrap()
+        .solve(&m)
+        .unwrap();
+    let tol = 1e-8;
+    let early = Solver::builder()
+        .k(k_max)
+        .precision(PrecisionConfig::DDD)
+        .tolerance(tol)
+        .build()
+        .unwrap()
+        .solve(&m)
+        .unwrap();
+    assert!(early.stats.early_stopped, "well-separated spectrum must trigger the stop");
+    assert!(
+        early.stats.iterations < k_max,
+        "stopped at {} of {k_max}",
+        early.stats.iterations
+    );
+    // The top eigenvalue matches the fixed-K run within the tolerance.
+    let delta = (early.eigenvalues[0] - fixed.eigenvalues[0]).abs();
+    assert!(delta <= tol * 10.0, "λ₀ drift {delta:e} vs tol {tol:e}");
+    // And satisfies the eigenvalue definition at the requested quality.
+    let resid =
+        topk_eigen::metrics::l2_residual(&m, early.eigenvalues[0], &early.eigenvectors[0]);
+    assert!(resid <= tol * 100.0, "residual {resid:e}");
+    // Early stop saves simulated time.
+    assert!(early.stats.sim_seconds < fixed.stats.sim_seconds);
+}
+
+#[test]
+fn tolerance_stop_composes_with_user_observer() {
+    let m = spiked(500);
+    let mut s = Solver::builder()
+        .k(24)
+        .precision(PrecisionConfig::DDD)
+        .tolerance(1e-8)
+        .build()
+        .unwrap();
+    let mut log = CollectObserver::default();
+    let sol = s.solve_observed(&m, &mut log).unwrap();
+    // The user observer saw exactly the iterations that ran.
+    assert_eq!(log.events.len(), sol.stats.iterations);
+    assert!(sol.stats.early_stopped);
+    // The recorded estimates end below the tolerance.
+    assert!(log.events.last().unwrap().residual_estimate <= 1e-8);
+}
+
+#[test]
+fn require_convergence_yields_typed_nonconvergence() {
+    // Clustered Toeplitz spectrum at tiny K: the estimate cannot reach
+    // 1e-12 in 4 iterations.
+    let m = Csr::from_coo(&gen::tridiag_toeplitz(300, 2.0, -1.0));
+    let err = Solver::builder()
+        .k(4)
+        .precision(PrecisionConfig::DDD)
+        .tolerance(1e-12)
+        .require_convergence(true)
+        .build()
+        .unwrap()
+        .solve(&m)
+        .unwrap_err();
+    match err {
+        SolverError::NonConvergence { achieved, tolerance, iterations } => {
+            assert!(achieved > tolerance);
+            assert_eq!(iterations, 4);
+        }
+        other => panic!("expected NonConvergence, got {other:?}"),
+    }
+    // Without the flag the same solve returns best-effort.
+    let sol = Solver::builder()
+        .k(4)
+        .precision(PrecisionConfig::DDD)
+        .tolerance(1e-12)
+        .build()
+        .unwrap()
+        .solve(&m)
+        .unwrap();
+    assert_eq!(sol.eigenvalues.len(), 4);
+}
+
+#[test]
+fn cpu_baseline_rejects_tight_krylov_dim_without_panicking() {
+    // n=10, k=9: the facade's k < n check passes but the baseline's auto
+    // Krylov dim (min(max(2k+1,20), n-1) = 9) cannot exceed K — must be a
+    // typed error, not the baseline's assert panic.
+    let m = spiked(10);
+    let err = Solver::builder()
+        .k(9)
+        .backend(Backend::CpuBaseline)
+        .build()
+        .unwrap()
+        .solve(&m)
+        .unwrap_err();
+    assert!(matches!(err, SolverError::InvalidConfig { field: "k", .. }), "{err:?}");
+    assert!(err.to_string().contains("Krylov"), "{err}");
+
+    // And an explicitly-too-tight dimension is rejected at build time.
+    let err = Solver::builder()
+        .k(10)
+        .backend(Backend::CpuBaseline)
+        .baseline_krylov_dim(5)
+        .build()
+        .unwrap_err();
+    assert!(
+        matches!(err, SolverError::InvalidConfig { field: "baseline_krylov_dim", .. }),
+        "{err:?}"
+    );
+}
+
+#[test]
+fn require_convergence_honors_the_baselines_native_criterion() {
+    // The baseline converges by its relative ARPACK-style test; the facade
+    // must not then fail it against the absolute reading of the same tol.
+    let m = spiked(400);
+    let sol = Solver::builder()
+        .k(8)
+        .backend(Backend::CpuBaseline)
+        .tolerance(1e-8)
+        .require_convergence(true)
+        .build()
+        .unwrap()
+        .solve(&m)
+        .unwrap();
+    assert_eq!(sol.stats.backend, "cpu");
+    assert!(sol.eigenvalues[0] > 9.0);
+}
+
+#[test]
+fn tolerance_stop_standalone_behaves() {
+    let mut stop = ToleranceStop::new(1e-6);
+    assert!(!stop.converged());
+    stop.last_estimate = 1e-9;
+    assert!(stop.converged());
+}
+
+// ---- Report -----------------------------------------------------------------
+
+#[test]
+fn report_serializes_solution_and_residuals() {
+    let m = spiked(300);
+    let mut s = Solver::builder().k(6).precision(PrecisionConfig::DDD).build().unwrap();
+    let sol = s.solve(&m).unwrap();
+    let mut report = SolveReport::new("SPIKED", 6, &sol).with_residuals(&m, &sol);
+    report.precision = Some("DDD".into());
+    report.tolerance = Some(1e-9);
+    let json = report.to_json();
+    assert!(json.contains("\"matrix\": \"SPIKED\""), "{json}");
+    assert!(json.contains("\"backend\": \"hostsim\""), "{json}");
+    assert!(json.contains("\"k_requested\": 6"), "{json}");
+    assert!(json.contains("\"precision\": \"DDD\""), "{json}");
+    assert!(json.contains("\"tolerance\": 1e-9"), "{json}");
+    assert!(json.contains("\"iterations\": 6"), "{json}");
+    assert_eq!(report.residuals.len(), 6);
+    assert_eq!(json.matches('{').count(), json.matches('}').count());
+
+    // Round-trips to disk through the typed error surface.
+    let path = std::env::temp_dir().join(format!("topk_report_{}.json", std::process::id()));
+    report.write_json(&path).unwrap();
+    let read_back = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(read_back, json);
+    std::fs::remove_file(&path).ok();
+
+    // Unwritable paths surface as SolverError::Io.
+    let err = report.write_json(std::path::Path::new("/no/such/dir/report.json")).unwrap_err();
+    assert!(matches!(err, SolverError::Io { .. }), "{err:?}");
+}
+
+// ---- Deprecated surface -----------------------------------------------------
+
+#[test]
+#[allow(deprecated)]
+fn deprecated_root_reexports_still_compile() {
+    use topk_eigen::{SolverConfig as RootConfig, TopKSolver as RootSolver};
+    let m = er_graph(120, 9);
+    let sol = RootSolver::new(RootConfig { k: 3, ..Default::default() }).solve(&m).unwrap();
+    assert_eq!(sol.eigenvalues.len(), 3);
+}
