@@ -10,7 +10,7 @@
 use topk_eigen::cli;
 use topk_eigen::coordinator::{ReorthMode, TopologyKind};
 use topk_eigen::sparse::suite;
-use topk_eigen::{Eigensolve, Solver, SolverError};
+use topk_eigen::{Eigensolve, ExecPolicy, Solver, SolverError};
 
 fn main() -> Result<(), SolverError> {
     let args = cli::from_env();
@@ -36,6 +36,10 @@ fn main() -> Result<(), SolverError> {
                 .reorth(ReorthMode::None)
                 .device_mem_bytes(2 << 30)
                 .topology(kind)
+                // One host thread per simulated device: the wallclock of
+                // this walk-through scales with the fleet like the real
+                // system would (simulated time is unaffected).
+                .exec(ExecPolicy::Parallel)
                 .build()?;
             let sol = solver.solve(&m)?;
             let s = &sol.stats;

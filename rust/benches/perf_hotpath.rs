@@ -1,20 +1,38 @@
 //! §Perf harness: wallclock micro/meso benchmarks of the actual hot paths
 //! on this host — the numbers EXPERIMENTS.md §Perf tracks before/after
-//! optimization.
+//! optimization — plus a machine-readable `BENCH_perf.json` so the perf
+//! trajectory is tracked across PRs and CI runs.
 //!
 //! Measures (median of BENCH_REPS, default 3):
-//!   * hostsim SpMV (per-chunk ELL kernel, FDF) — the L3-side compute,
+//!   * hostsim SpMV / dot / candidate (buffer-writing `*_into` kernels,
+//!     FDF) — the per-call hot-path cost,
 //!   * PJRT SpMV (AOT artifact via the xla crate) — the production path,
 //!     including padding + literal marshalling overhead,
-//!   * PJRT dot/candidate — sync-point kernel round-trip latency,
-//!   * end-to-end solve wallclock, hostsim vs PJRT, and the coordinator
-//!     overhead fraction (everything that is not kernel execution).
+//!   * PJRT dot — sync-point kernel round-trip latency,
+//!   * end-to-end solve wallclock: hostsim (default Auto threading and
+//!     forced-sequential), PJRT, and the CPU baseline,
+//!   * the coordinator overhead fraction — the share of the hostsim solve
+//!     wallclock spent *outside* kernel execution, measured by a timing
+//!     wrapper around the kernel interface.
 //!
-//! Env: BENCH_SCALE, BENCH_REPS. Requires `make artifacts` for PJRT rows.
+//! Env:
+//!   BENCH_SCALE, BENCH_REPS — problem size / repetitions;
+//!   BENCH_JSON  — output path for BENCH_perf.json (default
+//!                 ./BENCH_perf.json);
+//!   BENCH_FLOOR — optional path to a floor file (see
+//!                 rust/benches/perf_floor.json): the run exits 1 when
+//!                 the "solve e2e hostsim" median exceeds
+//!                 `solve_e2e_hostsim_median_s_max` — the CI perf-smoke
+//!                 regression tripwire.
+//!
+//! Requires `make artifacts` + the `xla` feature for the PJRT rows.
 
 use std::path::PathBuf;
-use topk_eigen::bench_util::{fmt_secs, reps, scale, time, Table};
-use topk_eigen::coordinator::ReorthMode;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+use topk_eigen::bench_util::{fmt_secs, reps, scale, time, JsonObj, Timing};
+use topk_eigen::coordinator::{ExecPolicy, ReorthMode};
 use topk_eigen::precision::PrecisionConfig;
 use topk_eigen::rng::Rng;
 use topk_eigen::runtime::{HostKernels, Kernels, PjrtKernels};
@@ -25,6 +43,100 @@ fn artifact_dir() -> PathBuf {
     std::env::var("TOPK_ARTIFACTS")
         .map(PathBuf::from)
         .unwrap_or_else(|_| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+}
+
+/// Delegating kernel wrapper that accumulates wallclock nanoseconds spent
+/// inside kernel calls — shared across forks, so the coordinator overhead
+/// fraction is measurable on both the sequential and the threaded path.
+struct TimingKernels {
+    inner: Box<dyn Kernels>,
+    nanos: Arc<AtomicU64>,
+}
+
+impl TimingKernels {
+    fn charge(&self, t: Instant) {
+        self.nanos.fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    }
+}
+
+impl Kernels for TimingKernels {
+    fn begin_cycle(&mut self) {
+        self.inner.begin_cycle();
+    }
+
+    fn fork(&mut self) -> Option<Box<dyn Kernels>> {
+        let inner = self.inner.fork()?;
+        Some(Box::new(TimingKernels { inner, nanos: Arc::clone(&self.nanos) }))
+    }
+
+    fn spmv_into(
+        &mut self,
+        ell: &Ell,
+        x: &[f64],
+        cfg: &PrecisionConfig,
+        y: &mut [f64],
+    ) {
+        let t = Instant::now();
+        self.inner.spmv_into(ell, x, cfg, y);
+        self.charge(t);
+    }
+
+    fn dot(&mut self, a: &[f64], b: &[f64], cfg: &PrecisionConfig) -> f64 {
+        let t = Instant::now();
+        let r = self.inner.dot(a, b, cfg);
+        self.charge(t);
+        r
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn candidate_into(
+        &mut self,
+        v_tmp: &[f64],
+        v_i: &[f64],
+        v_prev: &[f64],
+        alpha: f64,
+        beta: f64,
+        cfg: &PrecisionConfig,
+        out: &mut [f64],
+    ) -> f64 {
+        let t = Instant::now();
+        let r = self.inner.candidate_into(v_tmp, v_i, v_prev, alpha, beta, cfg, out);
+        self.charge(t);
+        r
+    }
+
+    fn normalize_into(&mut self, v: &[f64], beta: f64, cfg: &PrecisionConfig, out: &mut [f64]) {
+        let t = Instant::now();
+        self.inner.normalize_into(v, beta, cfg, out);
+        self.charge(t);
+    }
+
+    fn ortho_update_into(&mut self, u: &mut [f64], vj: &[f64], o: f64, cfg: &PrecisionConfig) {
+        let t = Instant::now();
+        self.inner.ortho_update_into(u, vj, o, cfg);
+        self.charge(t);
+    }
+
+    fn project_into(
+        &mut self,
+        basis: &[f64],
+        rows: usize,
+        coeff: &[Vec<f64>],
+        cfg: &PrecisionConfig,
+        out: &mut [f64],
+    ) {
+        let t = Instant::now();
+        self.inner.project_into(basis, rows, coeff, cfg, out);
+        self.charge(t);
+    }
+
+    fn backend_name(&self) -> &'static str {
+        self.inner.backend_name()
+    }
+}
+
+fn timing_json(t: &Timing) -> String {
+    JsonObj::new().num("median_s", t.median_s).num("min_s", t.min_s).finish()
 }
 
 fn main() {
@@ -42,11 +154,14 @@ fn main() {
     println!("== §Perf hot-path benchmarks (wallclock on this host) ==");
     println!("matrix: {} rows, {} nnz; reps={r}\n", m.rows, m.nnz());
 
-    let mut t = Table::new(&["path", "median", "min", "notes"]);
+    let mut t = topk_eigen::bench_util::Table::new(&["path", "median", "min", "notes"]);
+    let mut paths = JsonObj::new();
 
     let mut host = HostKernels::new();
+    let mut y = vec![0.0f64; ell.rows];
     let th = time(r, || {
-        std::hint::black_box(host.spmv(&ell, &x, &cfg));
+        host.spmv_into(&ell, &x, &cfg, &mut y);
+        std::hint::black_box(y[0]);
     });
     t.row(&[
         "hostsim spmv".into(),
@@ -54,6 +169,31 @@ fn main() {
         fmt_secs(th.min_s),
         format!("{} nnz", m.nnz()),
     ]);
+    paths = paths.raw("hostsim_spmv", timing_json(&th));
+
+    let b: Vec<f64> = x.iter().map(|v| v * 0.5 + 0.1).collect();
+    let td = time(r, || {
+        std::hint::black_box(host.dot(&x, &b, &cfg));
+    });
+    t.row(&[
+        "hostsim dot".into(),
+        fmt_secs(td.median_s),
+        fmt_secs(td.min_s),
+        format!("{} elems", x.len()),
+    ]);
+    paths = paths.raw("hostsim_dot", timing_json(&td));
+
+    let mut cand = vec![0.0f64; x.len()];
+    let tc = time(r, || {
+        std::hint::black_box(host.candidate_into(&x, &b, &b, 0.7, 0.3, &cfg, &mut cand));
+    });
+    t.row(&[
+        "hostsim candidate".into(),
+        fmt_secs(tc.median_s),
+        fmt_secs(tc.min_s),
+        "fused axpy2 + sumsq".into(),
+    ]);
+    paths = paths.raw("hostsim_candidate", timing_json(&tc));
 
     match PjrtKernels::new(&artifact_dir()) {
         Ok(mut pj) => {
@@ -68,17 +208,19 @@ fn main() {
                 fmt_secs(tp.min_s),
                 format!("{:.1}x hostsim", tp.median_s / th.median_s),
             ]);
+            paths = paths.raw("pjrt_spmv", timing_json(&tp));
             let a = &x[..4096.min(x.len())];
-            let b = a.to_vec();
-            let td = time(r.max(10), || {
-                std::hint::black_box(pj.dot(a, &b, &cfg));
+            let bb = a.to_vec();
+            let tpd = time(r.max(10), || {
+                std::hint::black_box(pj.dot(a, &bb, &cfg));
             });
             t.row(&[
                 "pjrt dot (sync point)".into(),
-                fmt_secs(td.median_s),
-                fmt_secs(td.min_s),
+                fmt_secs(tpd.median_s),
+                fmt_secs(tpd.min_s),
                 "round-trip latency".into(),
             ]);
+            paths = paths.raw("pjrt_dot", timing_json(&tpd));
         }
         Err(e) => {
             t.row(&["pjrt".into(), "n/a".into(), "n/a".into(), format!("{e}")]);
@@ -107,8 +249,56 @@ fn main() {
         "solve e2e hostsim".into(),
         fmt_secs(te.median_s),
         fmt_secs(te.min_s),
-        "K=8, 2 devices, full reorth".into(),
+        "K=8, 2 devices, full reorth (auto threading)".into(),
     ]);
+    paths = paths.raw("solve_e2e_hostsim", timing_json(&te));
+
+    let ts = time(r, || {
+        let sol = builder(Backend::HostSim)
+            .exec(ExecPolicy::Sequential)
+            .build()
+            .expect("config")
+            .solve(&m)
+            .expect("solve");
+        std::hint::black_box(sol.eigenvalues.len());
+    });
+    t.row(&[
+        "solve e2e hostsim seq".into(),
+        fmt_secs(ts.median_s),
+        fmt_secs(ts.min_s),
+        format!("{:.2}x of auto", ts.median_s / te.median_s),
+    ]);
+    paths = paths.raw("solve_e2e_hostsim_seq", timing_json(&ts));
+
+    // Coordinator overhead: one instrumented solve; the fraction of the
+    // wall spent outside kernel execution. Forced sequential — with
+    // threads, per-device kernel times overlap and their sum can exceed
+    // the wall, which would understate the fraction.
+    let kernel_nanos = Arc::new(AtomicU64::new(0));
+    let overhead_frac = {
+        let timing = TimingKernels {
+            inner: Box::new(HostKernels::new()),
+            nanos: Arc::clone(&kernel_nanos),
+        };
+        let mut solver = builder(Backend::HostSim)
+            .exec(ExecPolicy::Sequential)
+            .custom_kernels(Box::new(timing))
+            .build()
+            .expect("config");
+        let wall = Instant::now();
+        let sol = solver.solve(&m).expect("solve");
+        std::hint::black_box(sol.eigenvalues.len());
+        let wall_s = wall.elapsed().as_secs_f64();
+        let kern_s = kernel_nanos.load(Ordering::Relaxed) as f64 * 1e-9;
+        (1.0 - kern_s / wall_s.max(1e-12)).clamp(0.0, 1.0)
+    };
+    t.row(&[
+        "coordinator overhead".into(),
+        format!("{:.1}%", overhead_frac * 100.0),
+        "".into(),
+        "solve wall outside kernel calls".into(),
+    ]);
+
     if PjrtKernels::new(&artifact_dir()).is_ok() {
         let tp = time(r, || {
             let sol = builder(Backend::Pjrt { artifacts: artifact_dir() })
@@ -124,9 +314,10 @@ fn main() {
             fmt_secs(tp.min_s),
             format!("{:.1}x hostsim", tp.median_s / te.median_s),
         ]);
+        paths = paths.raw("solve_e2e_pjrt", timing_json(&tp));
     }
     // Facade overhead sanity: the CPU baseline through the same entry point.
-    let tc = time(r, || {
+    let tb = time(r, || {
         let sol = builder(Backend::CpuBaseline)
             .build()
             .expect("config")
@@ -136,9 +327,62 @@ fn main() {
     });
     t.row(&[
         "solve e2e cpu baseline".into(),
-        fmt_secs(tc.median_s),
-        fmt_secs(tc.min_s),
+        fmt_secs(tb.median_s),
+        fmt_secs(tb.min_s),
         "ARPACK-class comparator".into(),
     ]);
+    paths = paths.raw("solve_e2e_cpu", timing_json(&tb));
     t.print();
+
+    // ---- BENCH_perf.json -------------------------------------------------
+    let json = JsonObj::new()
+        .int("schema", 1)
+        .str("bench", "perf_hotpath")
+        .num("scale", s)
+        .int("reps", r)
+        .raw(
+            "matrix",
+            JsonObj::new().int("rows", m.rows).int("nnz", m.nnz()).finish(),
+        )
+        .raw("paths", paths.finish())
+        .num("coordinator_overhead_frac", overhead_frac)
+        .finish();
+    let json_path =
+        std::env::var("BENCH_JSON").unwrap_or_else(|_| "BENCH_perf.json".to_string());
+    match std::fs::write(&json_path, format!("{json}\n")) {
+        Ok(()) => println!("\nwrote {json_path}"),
+        Err(e) => eprintln!("\nwarning: could not write {json_path}: {e}"),
+    }
+
+    // ---- Regression floor (CI perf-smoke tripwire) -----------------------
+    if let Ok(floor_path) = std::env::var("BENCH_FLOOR") {
+        match std::fs::read_to_string(&floor_path) {
+            Ok(floor) => {
+                let max = topk_eigen::bench_util::json_get_num(
+                    &floor,
+                    "solve_e2e_hostsim_median_s_max",
+                );
+                match max {
+                    Some(max) if te.median_s > max => {
+                        eprintln!(
+                            "PERF REGRESSION: solve e2e hostsim median {} exceeds floor {} \
+                             (from {floor_path})",
+                            te.median_s, max
+                        );
+                        std::process::exit(1);
+                    }
+                    Some(max) => {
+                        println!(
+                            "perf floor ok: solve e2e hostsim median {:.4}s <= {max}s",
+                            te.median_s
+                        );
+                    }
+                    None => eprintln!(
+                        "warning: no solve_e2e_hostsim_median_s_max in {floor_path}"
+                    ),
+                }
+            }
+            Err(e) => eprintln!("warning: could not read BENCH_FLOOR {floor_path}: {e}"),
+        }
+    }
 }

@@ -7,7 +7,9 @@
 
 use super::{Backend, CpuBaselineBackend, EigenBackend, GpuBackend, Solver, SolverError};
 use crate::baseline::BaselineConfig;
-use crate::coordinator::{ring::SwapStrategy, ReorthMode, SolverConfig, TopKSolver, TopologyKind};
+use crate::coordinator::{
+    ring::SwapStrategy, ExecPolicy, ReorthMode, SolverConfig, TopKSolver, TopologyKind,
+};
 use crate::gpu::CostModel;
 use crate::precision::PrecisionConfig;
 use crate::runtime::Kernels;
@@ -122,6 +124,15 @@ impl SolverBuilder {
     /// Device cost model for the simulated clock.
     pub fn cost(mut self, c: CostModel) -> Self {
         self.cfg.cost = c;
+        self
+    }
+
+    /// Host threading policy for the per-device compute loops
+    /// (`Auto` / `Sequential` / `Parallel`). Results are bit-identical
+    /// across policies: all cross-device reductions fold in fixed device
+    /// order on the coordinator thread. Ignored by the CPU baseline.
+    pub fn exec(mut self, e: ExecPolicy) -> Self {
+        self.cfg.exec = e;
         self
     }
 

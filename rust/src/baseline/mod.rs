@@ -136,13 +136,15 @@ pub fn solve_topk_cpu_observed(
         let mut beta: Vec<f64> = Vec::with_capacity(dim.saturating_sub(1));
         let mut v = v0.clone();
         let mut v_prev = vec![0.0f64; n];
+        // Candidate buffer, hoisted out of the iteration loop: the three
+        // vectors rotate by swap below, so the loop allocates nothing.
+        let mut w = vec![0.0f64; n];
         let mut b_prev = 0.0f64;
         // Norm of the final (discarded) candidate — the ARPACK β_m that
         // scales every Ritz residual below.
         let mut final_b = 0.0f64;
         for j in 0..dim {
             basis.push(v.clone());
-            let mut w = vec![0.0f64; n];
             spmv.apply(&v, &mut w);
             spmv_count += 1;
             let a = dot_f64(&v, &w);
@@ -186,7 +188,11 @@ pub fn solve_topk_cpu_observed(
                 // Invariant subspace found: basis is complete.
                 break;
             }
-            v_prev = std::mem::replace(&mut v, w);
+            // Rotate buffers without reallocating: v_prev ← v, v ← w, and
+            // the old v_prev becomes next iteration's scratch (fully
+            // overwritten by `spmv.apply`).
+            std::mem::swap(&mut v_prev, &mut v);
+            std::mem::swap(&mut v, &mut w);
             crate::linalg::scale_inv(&mut v, b);
             b_prev = b;
         }

@@ -5,7 +5,7 @@
 //! disjoint, so no synchronization beyond the join is needed — the same
 //! structure a `parallel_for` SpMV has in MKL/OpenMP-based ARPACK setups.
 
-use crate::sparse::{partition_by_nnz, Csr, RowPartition};
+use crate::sparse::{partition::split_rows_mut, partition_by_nnz, Csr, RowPartition};
 
 /// Precomputed partition plan for repeated SpMV application.
 pub struct ThreadedSpmv<'m> {
@@ -34,15 +34,7 @@ impl<'m> ThreadedSpmv<'m> {
             return;
         }
         // Split `y` into disjoint per-partition slices for the workers.
-        let mut slices: Vec<&mut [f64]> = Vec::with_capacity(self.parts.len());
-        let mut rest = y;
-        let mut cursor = 0usize;
-        for p in &self.parts {
-            let (head, tail) = rest.split_at_mut(p.row_end - cursor);
-            slices.push(head);
-            rest = tail;
-            cursor = p.row_end;
-        }
+        let slices = split_rows_mut(y, &self.parts);
         std::thread::scope(|scope| {
             for (p, out) in self.parts.iter().zip(slices) {
                 let m = self.matrix;

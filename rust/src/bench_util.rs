@@ -86,6 +86,93 @@ impl Table {
     }
 }
 
+/// Minimal JSON object builder (no `serde` offline). Fields appear in
+/// insertion order; non-finite numbers serialize as `null`.
+#[derive(Default)]
+pub struct JsonObj {
+    fields: Vec<(String, String)>,
+}
+
+/// Escape a string for a JSON value/key position.
+pub fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Serialize an f64 as a JSON number (`null` if non-finite).
+pub fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".into()
+    }
+}
+
+impl JsonObj {
+    pub fn new() -> Self {
+        JsonObj::default()
+    }
+
+    /// Numeric field.
+    pub fn num(mut self, key: &str, v: f64) -> Self {
+        self.fields.push((key.to_string(), json_num(v)));
+        self
+    }
+
+    /// Integer field.
+    pub fn int(mut self, key: &str, v: usize) -> Self {
+        self.fields.push((key.to_string(), format!("{v}")));
+        self
+    }
+
+    /// String field (escaped).
+    pub fn str(mut self, key: &str, v: &str) -> Self {
+        self.fields.push((key.to_string(), format!("\"{}\"", json_escape(v))));
+        self
+    }
+
+    /// Pre-serialized JSON value (nested object/array).
+    pub fn raw(mut self, key: &str, v: String) -> Self {
+        self.fields.push((key.to_string(), v));
+        self
+    }
+
+    /// Serialize to a JSON object string.
+    pub fn finish(self) -> String {
+        let inner: Vec<String> = self
+            .fields
+            .into_iter()
+            .map(|(k, v)| format!("\"{}\": {v}", json_escape(&k)))
+            .collect();
+        format!("{{{}}}", inner.join(", "))
+    }
+}
+
+/// Extract a top-level numeric field from a flat JSON object — just enough
+/// parsing for the checked-in perf floor file (no serde offline). Returns
+/// `None` when the key is absent or non-numeric.
+pub fn json_get_num(json: &str, key: &str) -> Option<f64> {
+    let needle = format!("\"{}\"", json_escape(key));
+    let at = json.find(&needle)?;
+    let rest = json[at + needle.len()..].trim_start();
+    let rest = rest.strip_prefix(':')?.trim_start();
+    let end = rest
+        .find(|c: char| !(c.is_ascii_digit() || matches!(c, '.' | '-' | '+' | 'e' | 'E')))
+        .unwrap_or(rest.len());
+    rest[..end].parse().ok()
+}
+
 /// Format seconds human-readably.
 pub fn fmt_secs(s: f64) -> String {
     if s >= 1.0 {
@@ -135,6 +222,26 @@ mod tests {
         assert_eq!(fmt_secs(0.0025), "2.50ms");
         assert_eq!(fmt_secs(2.5e-5), "25.0us");
         assert_eq!(fmt_ratio(1.9), "1.90x");
+    }
+
+    #[test]
+    fn json_obj_builds_and_reads_back() {
+        let inner = JsonObj::new().num("median_s", 0.25).num("min_s", 0.2).finish();
+        let json = JsonObj::new()
+            .int("schema", 1)
+            .str("bench", "perf_hotpath")
+            .num("scale", 1.5)
+            .raw("paths", inner)
+            .finish();
+        assert!(json.starts_with('{') && json.ends_with('}'));
+        assert_eq!(json_get_num(&json, "scale"), Some(1.5));
+        assert_eq!(json_get_num(&json, "schema"), Some(1.0));
+        assert_eq!(json_get_num(&json, "median_s"), Some(0.25));
+        assert_eq!(json_get_num(&json, "missing"), None);
+        // Non-finite numbers must not produce invalid JSON.
+        let bad = JsonObj::new().num("x", f64::NAN).finish();
+        assert_eq!(bad, "{\"x\": null}");
+        assert_eq!(json_escape("a\"b\\c"), "a\\\"b\\\\c");
     }
 
     #[test]

@@ -119,7 +119,9 @@ pub use api::{
     Backend, CollectObserver, Eigensolve, FnObserver, IterationEvent, IterationObserver,
     ObserverControl, SolveReport, Solver, SolverBuilder, SolverError, ToleranceStop,
 };
-pub use coordinator::{EigenSolution, PhaseBreakdown, ReorthMode, SolveStats, TopologyKind};
+pub use coordinator::{
+    EigenSolution, ExecPolicy, PhaseBreakdown, ReorthMode, SolveStats, TopologyKind,
+};
 pub use precision::PrecisionConfig;
 pub use sparse::{Coo, Csr, Ell};
 

@@ -20,7 +20,7 @@
 
 use std::path::{Path, PathBuf};
 use topk_eigen::cli::{self, UsageError};
-use topk_eigen::coordinator::{ReorthMode, TopologyKind};
+use topk_eigen::coordinator::{ExecPolicy, ReorthMode, TopologyKind};
 use topk_eigen::metrics;
 use topk_eigen::runtime::Manifest;
 use topk_eigen::sparse::{mmio, suite, Csr};
@@ -106,6 +106,9 @@ fn print_usage() {
          \x20 --scale <s>         suite scale factor (default 1.0)\n\
          \x20 --device-mem-mb <m> per-device memory budget (default 32)\n\
          \x20 --topology <t>      dgx1 | nvswitch (default dgx1)\n\
+         \x20 --exec <policy>     auto | seq | par — host threading of the\n\
+         \x20                     per-device loops (default auto; results\n\
+         \x20                     are bit-identical across policies)\n\
          \x20 --seed <n>          RNG seed (default fixed)\n\
          \x20 --baseline          also run the ARPACK-class CPU baseline\n\
          \x20 --report <f.json>   write a machine-readable solve report\n"
@@ -146,6 +149,7 @@ const SOLVE_FLAGS: &[&str] = &[
     "require-convergence",
     "device-mem-mb",
     "topology",
+    "exec",
     "baseline",
     "report",
 ];
@@ -169,6 +173,7 @@ fn cmd_solve(args: &cli::Args) -> Result<i32, CliError> {
     };
     let seed: u64 = args.try_get_or("seed", 0x70D0_EE11u64)?;
     let mem_mb: usize = args.try_get_or("device-mem-mb", 32usize)?;
+    let exec: ExecPolicy = args.try_get_or("exec", ExecPolicy::Auto)?;
     let tolerance: Option<f64> = args.try_get("tolerance")?;
 
     // Backend selection — one flag for all substrates.
@@ -195,6 +200,7 @@ fn cmd_solve(args: &cli::Args) -> Result<i32, CliError> {
         .seed(seed)
         .device_mem_mb(mem_mb)
         .topology(topology)
+        .exec(exec)
         .backend(backend.clone())
         .require_convergence(args.has("require-convergence"));
     if let Some(tol) = tolerance {
@@ -218,7 +224,7 @@ fn cmd_solve(args: &cli::Args) -> Result<i32, CliError> {
     }
     println!(
         "\nbackend={} wall={:.3}s sim={:.6}s kernels={} h2d={}B p2p={}B ooc={} \
-         breakdowns={}",
+         breakdowns={} host_threads={}",
         s.backend,
         s.wall_seconds,
         s.sim_seconds,
@@ -226,7 +232,8 @@ fn cmd_solve(args: &cli::Args) -> Result<i32, CliError> {
         s.h2d_bytes,
         s.p2p_bytes,
         s.out_of_core,
-        s.breakdowns
+        s.breakdowns,
+        if s.host_parallel { "per-device" } else { "coordinator" }
     );
     println!(
         "phases(sim): spmv={:.2e} vec={:.2e} reorth={:.2e} swap={:.2e} sync={:.2e} \

@@ -97,10 +97,17 @@ impl FixedPointKernels {
 }
 
 impl Kernels for FixedPointKernels {
-    fn spmv(&mut self, ell: &Ell, x: &[f64], _cfg: &PrecisionConfig) -> Vec<f64> {
+    fn fork(&mut self) -> Option<Box<dyn Kernels>> {
+        // Independent datapaths per device; `saturations` is counted per
+        // fork (the coordinator never reads it — direct users keep a
+        // single instance).
+        Some(Box::new(FixedPointKernels::new()))
+    }
+
+    fn spmv_into(&mut self, ell: &Ell, x: &[f64], _cfg: &PrecisionConfig, y: &mut [f64]) {
         self.calls += 1;
+        debug_assert_eq!(y.len(), ell.rows);
         let xq = self.vec_fixed(x);
-        let mut y = vec![0.0f64; ell.rows];
         for r in 0..ell.rows {
             let mut acc: i64 = 0; // Q1.30 in i64: headroom for ~2^33 terms
             for k in 0..ell.width {
@@ -116,7 +123,6 @@ impl Kernels for FixedPointKernels {
             let cur = to_fixed(y[s.row as usize], &mut self.saturations);
             y[s.row as usize] = from_fixed(qsat(cur + prod, &mut self.saturations));
         }
-        y
     }
 
     fn dot(&mut self, a: &[f64], b: &[f64], _cfg: &PrecisionConfig) -> f64 {
@@ -131,7 +137,8 @@ impl Kernels for FixedPointKernels {
         from_fixed(acc) // scalars exchanged in f64, like the FPGA's host side
     }
 
-    fn candidate(
+    #[allow(clippy::too_many_arguments)]
+    fn candidate_into(
         &mut self,
         v_tmp: &[f64],
         v_i: &[f64],
@@ -139,12 +146,13 @@ impl Kernels for FixedPointKernels {
         alpha: f64,
         beta: f64,
         _cfg: &PrecisionConfig,
-    ) -> (Vec<f64>, f64) {
+        out: &mut [f64],
+    ) -> f64 {
         self.calls += 1;
         let n = v_tmp.len();
+        debug_assert_eq!(out.len(), n);
         let a = to_fixed(alpha, &mut self.saturations);
         let b = to_fixed(beta, &mut self.saturations);
-        let mut out = Vec::with_capacity(n);
         let mut ss: i64 = 0;
         for i in 0..n {
             let vt = to_fixed(v_tmp[i], &mut self.saturations);
@@ -152,65 +160,64 @@ impl Kernels for FixedPointKernels {
             let vp = to_fixed(v_prev[i], &mut self.saturations);
             let v = qsat(vt - qmul(a, vi) - qmul(b, vp), &mut self.saturations);
             ss += qmul(v, v);
-            out.push(from_fixed(v));
+            out[i] = from_fixed(v);
         }
-        (out, from_fixed(ss))
+        from_fixed(ss)
     }
 
-    fn normalize(&mut self, v: &[f64], beta: f64, _cfg: &PrecisionConfig) -> Vec<f64> {
+    fn normalize_into(&mut self, v: &[f64], beta: f64, _cfg: &PrecisionConfig, out: &mut [f64]) {
         self.calls += 1;
+        debug_assert_eq!(out.len(), v.len());
         // The scalar 1/β does not fit S1.1.30 when β < 0.5, so the divide
         // happens host-side in f64 (the FPGA's scalar path is outside the
         // fixed-point datapath too) and only the *result* — a unit-norm
         // vector element, guaranteed in range — is quantized.
         let sat = &mut self.saturations;
-        v.iter()
-            .map(|&x| {
-                let q = from_fixed(to_fixed(x, sat)); // element as stored
-                from_fixed(to_fixed(q / beta, sat))
-            })
-            .collect()
+        for (o, &x) in out.iter_mut().zip(v) {
+            let q = from_fixed(to_fixed(x, sat)); // element as stored
+            *o = from_fixed(to_fixed(q / beta, sat));
+        }
     }
 
-    fn ortho_update(&mut self, u: &[f64], vj: &[f64], o: f64, _cfg: &PrecisionConfig) -> Vec<f64> {
+    fn ortho_update_into(&mut self, u: &mut [f64], vj: &[f64], o: f64, _cfg: &PrecisionConfig) {
         self.calls += 1;
         let oq = to_fixed(o, &mut self.saturations);
-        let mut out = Vec::with_capacity(u.len());
-        for (x, y) in u.iter().zip(vj) {
+        for (x, y) in u.iter_mut().zip(vj) {
             let xq = to_fixed(*x, &mut self.saturations);
             let yq = to_fixed(*y, &mut self.saturations);
-            out.push(from_fixed(qsat(xq - qmul(oq, yq), &mut self.saturations)));
+            *x = from_fixed(qsat(xq - qmul(oq, yq), &mut self.saturations));
         }
-        out
     }
 
-    fn project(
+    fn project_into(
         &mut self,
-        basis: &[Vec<f64>],
+        basis: &[f64],
+        rows: usize,
         coeff: &[Vec<f64>],
         _cfg: &PrecisionConfig,
-    ) -> Vec<Vec<f64>> {
+        out: &mut [f64],
+    ) {
         self.calls += 1;
         // Phase 2 runs in half precision on the FPGA; the projection is a
         // dense matmul done here in Q1.30 with i64 accumulators.
-        let k = basis.len();
-        if k == 0 {
-            return vec![];
+        if rows == 0 {
+            return;
         }
-        let len = basis[0].len();
-        let mut out = vec![vec![0.0f64; len]; coeff.len()];
-        let basis_q: Vec<Vec<i64>> = basis.iter().map(|b| self.vec_fixed(b)).collect();
+        let k = basis.len() / rows;
+        debug_assert_eq!(basis.len(), k * rows);
+        debug_assert_eq!(out.len(), coeff.len() * rows);
+        let basis_q: Vec<i64> = self.vec_fixed(basis);
         for (t, coef) in coeff.iter().enumerate() {
             let coef_q = self.vec_fixed(coef);
-            for r in 0..len {
+            let dst = &mut out[t * rows..(t + 1) * rows];
+            for (r, d) in dst.iter_mut().enumerate() {
                 let mut acc: i64 = 0;
-                for j in 0..k {
-                    acc += qmul(basis_q[j][r], coef_q[j]);
+                for (j, cq) in coef_q.iter().enumerate() {
+                    acc += qmul(basis_q[j * rows + r], *cq);
                 }
-                out[t][r] = from_fixed(qsat(acc, &mut self.saturations));
+                *d = from_fixed(qsat(acc, &mut self.saturations));
             }
         }
-        out
     }
 
     fn backend_name(&self) -> &'static str {

@@ -1,4 +1,4 @@
-//! Execution runtime: the kernel interface and its two backends.
+//! Execution runtime: the kernel interface and its backends.
 //!
 //! The coordinator drives all device compute through the [`Kernels`] trait:
 //!
@@ -11,9 +11,22 @@
 //!   accumulation). Used by unit tests, by property tests, and as the
 //!   oracle that integration tests compare the PJRT path against.
 //!
-//! All trait methods take/return `f64` host buffers; each backend is
-//! responsible for quantizing through the configured storage dtype so that
-//! repeated calls behave exactly like vectors *kept* in storage precision.
+//! ## Zero-allocation hot path
+//!
+//! The required trait methods are the buffer-writing `*_into` variants:
+//! the caller owns every output buffer, so the Lanczos hot loop performs
+//! no heap allocation per kernel call. The allocating methods (`spmv`,
+//! `candidate`, …) survive as provided conveniences for tests, benches and
+//! external callers — they allocate once and delegate to the `*_into`
+//! twin, so the two paths are bit-identical by construction.
+//!
+//! All methods take/return `f64` host buffers; each backend is responsible
+//! for quantizing through the configured storage dtype so that repeated
+//! calls behave exactly like vectors *kept* in storage precision.
+//! [`HostKernels`] monomorphizes its inner loops on `(Storage, Compute)`:
+//! the `F64/F64` case runs raw `f64` arithmetic with no per-element
+//! `quantize` calls (quantization through f64 is the identity, so the fast
+//! path is bit-identical to the generic one).
 
 pub mod artifacts;
 pub mod fixedpoint;
@@ -51,22 +64,80 @@ pub fn validate_manifest(manifest: &Manifest, cfg: &PrecisionConfig) -> Result<(
 }
 
 /// Device-kernel interface consumed by the coordinator.
+///
+/// Implementors provide the buffer-writing `*_into` methods; the
+/// allocating variants are provided wrappers. `fork` opts a backend into
+/// the coordinator's scoped-thread per-device parallelism.
 pub trait Kernels: Send {
     /// Hint: a new Lanczos iteration begins. Backends may invalidate
     /// caches keyed on per-iteration data (e.g. the `v_i` replica upload).
+    /// Callers must treat the SpMV gather source as immutable between
+    /// `begin_cycle` calls.
     fn begin_cycle(&mut self) {}
 
+    /// Produce an independent kernel instance for one device of a parallel
+    /// fleet, or `None` if this backend must run single-threaded (the
+    /// coordinator then falls back to the sequential loop). Forked
+    /// instances start with fresh diagnostic counters; per-fork counters
+    /// are not merged back.
+    fn fork(&mut self) -> Option<Box<dyn Kernels>> {
+        None
+    }
+
     /// ELL SpMV `y = M_chunk · x` (plus host-side spill): gathers from the
-    /// full replica `x`, accumulates in the compute dtype, stores `y` in
-    /// the storage dtype (widened back to f64 for the caller).
-    fn spmv(&mut self, ell: &Ell, x: &[f64], cfg: &PrecisionConfig) -> Vec<f64>;
+    /// full replica `x`, accumulates in the compute dtype, stores into `y`
+    /// in the storage dtype (widened back to f64). `y` is fully
+    /// overwritten; `y.len()` must equal `ell.rows`.
+    fn spmv_into(&mut self, ell: &Ell, x: &[f64], cfg: &PrecisionConfig, y: &mut [f64]);
 
     /// Partial dot `Σ aᵢ·bᵢ` accumulated in the compute dtype.
     fn dot(&mut self, a: &[f64], b: &[f64], cfg: &PrecisionConfig) -> f64;
 
-    /// Fused candidate update: `v_nxt = v_tmp − α·v_i − β·v_prev`, plus the
-    /// partial `Σ v_nxt²` for the β sync. Element math in compute dtype,
-    /// result stored in storage dtype.
+    /// Fused candidate update `out = v_tmp − α·v_i − β·v_prev`, stored in
+    /// the storage dtype; returns the partial `Σ v²` (pre-quantization,
+    /// compute dtype) for the β sync.
+    #[allow(clippy::too_many_arguments)]
+    fn candidate_into(
+        &mut self,
+        v_tmp: &[f64],
+        v_i: &[f64],
+        v_prev: &[f64],
+        alpha: f64,
+        beta: f64,
+        cfg: &PrecisionConfig,
+        out: &mut [f64],
+    ) -> f64;
+
+    /// `out = v / beta`, stored in storage dtype.
+    fn normalize_into(&mut self, v: &[f64], beta: f64, cfg: &PrecisionConfig, out: &mut [f64]);
+
+    /// In-place `u ← u − o·v_j`, stored in storage dtype.
+    fn ortho_update_into(&mut self, u: &mut [f64], vj: &[f64], o: f64, cfg: &PrecisionConfig);
+
+    /// Eigenvector projection `Y = 𝒱 · V` for one partition, over a
+    /// contiguous basis slab: `basis` holds `basis.len() / rows` vectors of
+    /// length `rows`, row-major (vector `j` at `j*rows..(j+1)*rows`);
+    /// `coeff[t]` (length = vector count) selects output vector `t`.
+    /// Writes `coeff.len()` output vectors into `out`, row-major.
+    fn project_into(
+        &mut self,
+        basis: &[f64],
+        rows: usize,
+        coeff: &[Vec<f64>],
+        cfg: &PrecisionConfig,
+        out: &mut [f64],
+    );
+
+    // ---- Allocating conveniences (tests/benches/external callers) -------
+
+    /// Allocating twin of [`Kernels::spmv_into`].
+    fn spmv(&mut self, ell: &Ell, x: &[f64], cfg: &PrecisionConfig) -> Vec<f64> {
+        let mut y = vec![0.0f64; ell.rows];
+        self.spmv_into(ell, x, cfg, &mut y);
+        y
+    }
+
+    /// Allocating twin of [`Kernels::candidate_into`].
     fn candidate(
         &mut self,
         v_tmp: &[f64],
@@ -75,24 +146,47 @@ pub trait Kernels: Send {
         alpha: f64,
         beta: f64,
         cfg: &PrecisionConfig,
-    ) -> (Vec<f64>, f64);
+    ) -> (Vec<f64>, f64) {
+        let mut out = vec![0.0f64; v_tmp.len()];
+        let ss = self.candidate_into(v_tmp, v_i, v_prev, alpha, beta, cfg, &mut out);
+        (out, ss)
+    }
 
-    /// `v / beta`, stored in storage dtype.
-    fn normalize(&mut self, v: &[f64], beta: f64, cfg: &PrecisionConfig) -> Vec<f64>;
+    /// Allocating twin of [`Kernels::normalize_into`].
+    fn normalize(&mut self, v: &[f64], beta: f64, cfg: &PrecisionConfig) -> Vec<f64> {
+        let mut out = vec![0.0f64; v.len()];
+        self.normalize_into(v, beta, cfg, &mut out);
+        out
+    }
 
-    /// `u − o·v_j`, stored in storage dtype.
-    fn ortho_update(&mut self, u: &[f64], vj: &[f64], o: f64, cfg: &PrecisionConfig) -> Vec<f64>;
+    /// Allocating twin of [`Kernels::ortho_update_into`].
+    fn ortho_update(&mut self, u: &[f64], vj: &[f64], o: f64, cfg: &PrecisionConfig) -> Vec<f64> {
+        let mut out = u.to_vec();
+        self.ortho_update_into(&mut out, vj, o, cfg);
+        out
+    }
 
-    /// Eigenvector projection `Y = 𝒱 · V` for one partition:
-    /// `basis` is K vectors of the partition length, `coeff[t]` (length K)
-    /// the Jacobi eigenvector selecting output vector t.
-    /// Returns `coeff.len()` output vectors of the partition length.
+    /// Allocating twin of [`Kernels::project_into`] over a vector-of-vectors
+    /// basis (flattens into a slab first).
     fn project(
         &mut self,
         basis: &[Vec<f64>],
         coeff: &[Vec<f64>],
         cfg: &PrecisionConfig,
-    ) -> Vec<Vec<f64>>;
+    ) -> Vec<Vec<f64>> {
+        if basis.is_empty() {
+            return vec![];
+        }
+        let rows = basis[0].len();
+        let mut slab = Vec::with_capacity(basis.len() * rows);
+        for b in basis {
+            debug_assert_eq!(b.len(), rows);
+            slab.extend_from_slice(b);
+        }
+        let mut out = vec![0.0f64; coeff.len() * rows];
+        self.project_into(&slab, rows, coeff, cfg, &mut out);
+        out.chunks(rows).map(|c| c.to_vec()).collect()
+    }
 
     /// Human-readable backend name (logs/benches).
     fn backend_name(&self) -> &'static str;
@@ -115,6 +209,13 @@ pub fn quantize_vec(xs: &[f64], s: Storage) -> Vec<f64> {
     }
 }
 
+/// Identity of an SpMV gather source within one Lanczos cycle:
+/// (address, length, storage dtype). The address disambiguates distinct
+/// live vectors of the same length; [`Kernels::begin_cycle`] bounds the
+/// lifetime so a recycled allocation from an earlier cycle can never be
+/// mistaken for the current replica.
+type ReplicaKey = (usize, usize, Storage);
+
 /// Pure-rust backend with faithful mixed-precision emulation.
 #[derive(Default, Debug, Clone)]
 pub struct HostKernels {
@@ -123,14 +224,28 @@ pub struct HostKernels {
     /// Quantized replica cached for the current Lanczos cycle — SpMV is
     /// called once per chunk and quantizing the full replica per chunk is
     /// O(n·chunks) (the dominant host cost on finely-chunked out-of-core
-    /// plans). Keyed informally by (len, storage); cleared by
-    /// [`Kernels::begin_cycle`].
-    xq_cache: Option<(usize, Storage, Vec<f64>)>,
+    /// plans). Keyed by [`ReplicaKey`]; cleared by
+    /// [`Kernels::begin_cycle`]. Only populated for f32 storage — f64
+    /// storage gathers straight from the caller's buffer.
+    xq_cache: Option<(ReplicaKey, Vec<f64>)>,
 }
 
 impl HostKernels {
     pub fn new() -> Self {
         HostKernels::default()
+    }
+
+    /// The f32-storage replica for `x`, quantizing on key mismatch.
+    fn quantized_replica(&mut self, x: &[f64]) -> &[f64] {
+        let key: ReplicaKey = (x.as_ptr() as usize, x.len(), Storage::F32);
+        let stale = match &self.xq_cache {
+            Some((k, _)) => *k != key,
+            None => true,
+        };
+        if stale {
+            self.xq_cache = Some((key, quantize_vec(x, Storage::F32)));
+        }
+        &self.xq_cache.as_ref().unwrap().1
     }
 }
 
@@ -139,52 +254,61 @@ impl Kernels for HostKernels {
         self.xq_cache = None;
     }
 
-    fn spmv(&mut self, ell: &Ell, x: &[f64], cfg: &PrecisionConfig) -> Vec<f64> {
+    fn fork(&mut self) -> Option<Box<dyn Kernels>> {
+        Some(Box::new(HostKernels::new()))
+    }
+
+    fn spmv_into(&mut self, ell: &Ell, x: &[f64], cfg: &PrecisionConfig, y: &mut [f64]) {
         self.calls += 1;
-        let storage = cfg.storage;
-        let compute = cfg.compute;
-        // Borrow-split: compute the cache inline to keep `self` free.
-        let stale = match &self.xq_cache {
-            Some((len, cs, _)) => *len != x.len() || *cs != storage,
-            None => true,
-        };
-        if stale {
-            self.xq_cache = Some((x.len(), storage, quantize_vec(x, storage)));
+        debug_assert_eq!(y.len(), ell.rows);
+        match (cfg.storage, cfg.compute) {
+            // Fast paths: f64 storage quantization is the identity, so the
+            // replica copy and the output quantization pass both vanish.
+            (Storage::F64, Compute::F64) => ell.spmv_ref(x, y),
+            (Storage::F64, Compute::F32) => ell.spmv_ref_f32acc(x, y),
+            (Storage::F32, compute) => {
+                let xq = self.quantized_replica(x);
+                match compute {
+                    Compute::F64 => ell.spmv_ref(xq, y),
+                    Compute::F32 => ell.spmv_ref_f32acc(xq, y),
+                }
+                for v in y.iter_mut() {
+                    *v = *v as f32 as f64;
+                }
+            }
         }
-        let xq = &self.xq_cache.as_ref().unwrap().2;
-        let mut y = vec![0.0; ell.rows];
-        match compute {
-            Compute::F64 => ell.spmv_ref(xq, &mut y),
-            Compute::F32 => ell.spmv_ref_f32acc(xq, &mut y),
-        }
-        for v in &mut y {
-            *v = quantize(*v, storage);
-        }
-        y
     }
 
     fn dot(&mut self, a: &[f64], b: &[f64], cfg: &PrecisionConfig) -> f64 {
         self.calls += 1;
         debug_assert_eq!(a.len(), b.len());
-        match cfg.compute {
-            Compute::F64 => {
+        match (cfg.storage, cfg.compute) {
+            (Storage::F64, Compute::F64) => {
                 let mut acc = 0.0f64;
                 for (x, y) in a.iter().zip(b) {
-                    acc += quantize(*x, cfg.storage) * quantize(*y, cfg.storage);
+                    acc += x * y;
                 }
                 acc
             }
-            Compute::F32 => {
+            (Storage::F32, Compute::F64) => {
+                let mut acc = 0.0f64;
+                for (x, y) in a.iter().zip(b) {
+                    acc += (*x as f32 as f64) * (*y as f32 as f64);
+                }
+                acc
+            }
+            (s, Compute::F32) => {
                 let mut acc = 0.0f32;
                 for (x, y) in a.iter().zip(b) {
-                    acc += (quantize(*x, cfg.storage) as f32) * (quantize(*y, cfg.storage) as f32);
+                    acc += (quantize(*x, s) as f32) * (quantize(*y, s) as f32);
                 }
                 acc as f64
             }
         }
     }
 
-    fn candidate(
+    #[allow(clippy::too_many_arguments)]
+    fn candidate_into(
         &mut self,
         v_tmp: &[f64],
         v_i: &[f64],
@@ -192,121 +316,144 @@ impl Kernels for HostKernels {
         alpha: f64,
         beta: f64,
         cfg: &PrecisionConfig,
-    ) -> (Vec<f64>, f64) {
+        out: &mut [f64],
+    ) -> f64 {
         self.calls += 1;
         let n = v_tmp.len();
         debug_assert_eq!(v_i.len(), n);
         debug_assert_eq!(v_prev.len(), n);
-        let mut out = Vec::with_capacity(n);
-        match cfg.compute {
-            Compute::F64 => {
+        debug_assert_eq!(out.len(), n);
+        match (cfg.storage, cfg.compute) {
+            (Storage::F64, Compute::F64) => {
                 let mut ss = 0.0f64;
                 for i in 0..n {
-                    let v = quantize(v_tmp[i], cfg.storage)
-                        - alpha * quantize(v_i[i], cfg.storage)
-                        - beta * quantize(v_prev[i], cfg.storage);
-                    let vq = quantize(v, cfg.storage);
+                    let v = v_tmp[i] - alpha * v_i[i] - beta * v_prev[i];
                     ss += v * v;
-                    out.push(vq);
+                    out[i] = v;
                 }
-                (out, ss)
+                ss
             }
-            Compute::F32 => {
+            (Storage::F32, Compute::F64) => {
+                let mut ss = 0.0f64;
+                for i in 0..n {
+                    let v = (v_tmp[i] as f32 as f64)
+                        - alpha * (v_i[i] as f32 as f64)
+                        - beta * (v_prev[i] as f32 as f64);
+                    ss += v * v;
+                    out[i] = v as f32 as f64;
+                }
+                ss
+            }
+            (s, Compute::F32) => {
                 let (a32, b32) = (alpha as f32, beta as f32);
                 let mut ss = 0.0f32;
                 for i in 0..n {
-                    let v = quantize(v_tmp[i], cfg.storage) as f32
-                        - a32 * quantize(v_i[i], cfg.storage) as f32
-                        - b32 * quantize(v_prev[i], cfg.storage) as f32;
+                    let v = quantize(v_tmp[i], s) as f32
+                        - a32 * quantize(v_i[i], s) as f32
+                        - b32 * quantize(v_prev[i], s) as f32;
                     ss += v * v;
-                    out.push(quantize(v as f64, cfg.storage));
+                    out[i] = quantize(v as f64, s);
                 }
-                (out, ss as f64)
+                ss as f64
             }
         }
     }
 
-    fn normalize(&mut self, v: &[f64], beta: f64, cfg: &PrecisionConfig) -> Vec<f64> {
+    fn normalize_into(&mut self, v: &[f64], beta: f64, cfg: &PrecisionConfig, out: &mut [f64]) {
         self.calls += 1;
-        match cfg.compute {
-            Compute::F64 => v
-                .iter()
-                .map(|&x| quantize(quantize(x, cfg.storage) / beta, cfg.storage))
-                .collect(),
-            Compute::F32 => {
+        debug_assert_eq!(out.len(), v.len());
+        match (cfg.storage, cfg.compute) {
+            (Storage::F64, Compute::F64) => {
+                for (o, &x) in out.iter_mut().zip(v) {
+                    *o = x / beta;
+                }
+            }
+            (Storage::F32, Compute::F64) => {
+                for (o, &x) in out.iter_mut().zip(v) {
+                    *o = ((x as f32 as f64) / beta) as f32 as f64;
+                }
+            }
+            (s, Compute::F32) => {
                 let b32 = beta as f32;
-                v.iter()
-                    .map(|&x| {
-                        quantize(((quantize(x, cfg.storage) as f32) / b32) as f64, cfg.storage)
-                    })
-                    .collect()
+                for (o, &x) in out.iter_mut().zip(v) {
+                    *o = quantize(((quantize(x, s) as f32) / b32) as f64, s);
+                }
             }
         }
     }
 
-    fn ortho_update(&mut self, u: &[f64], vj: &[f64], o: f64, cfg: &PrecisionConfig) -> Vec<f64> {
+    fn ortho_update_into(&mut self, u: &mut [f64], vj: &[f64], o: f64, cfg: &PrecisionConfig) {
         self.calls += 1;
         debug_assert_eq!(u.len(), vj.len());
-        match cfg.compute {
-            Compute::F64 => u
-                .iter()
-                .zip(vj)
-                .map(|(&x, &y)| {
-                    quantize(quantize(x, cfg.storage) - o * quantize(y, cfg.storage), cfg.storage)
-                })
-                .collect(),
-            Compute::F32 => {
+        match (cfg.storage, cfg.compute) {
+            (Storage::F64, Compute::F64) => {
+                for (x, &y) in u.iter_mut().zip(vj) {
+                    *x -= o * y;
+                }
+            }
+            (Storage::F32, Compute::F64) => {
+                for (x, &y) in u.iter_mut().zip(vj) {
+                    *x = ((*x as f32 as f64) - o * (y as f32 as f64)) as f32 as f64;
+                }
+            }
+            (s, Compute::F32) => {
                 let o32 = o as f32;
-                u.iter()
-                    .zip(vj)
-                    .map(|(&x, &y)| {
-                        let r = quantize(x, cfg.storage) as f32
-                            - o32 * quantize(y, cfg.storage) as f32;
-                        quantize(r as f64, cfg.storage)
-                    })
-                    .collect()
+                for (x, &y) in u.iter_mut().zip(vj) {
+                    let r = quantize(*x, s) as f32 - o32 * quantize(y, s) as f32;
+                    *x = quantize(r as f64, s);
+                }
             }
         }
     }
 
-    fn project(
+    fn project_into(
         &mut self,
-        basis: &[Vec<f64>],
+        basis: &[f64],
+        rows: usize,
         coeff: &[Vec<f64>],
         cfg: &PrecisionConfig,
-    ) -> Vec<Vec<f64>> {
+        out: &mut [f64],
+    ) {
         self.calls += 1;
-        let k = basis.len();
-        if k == 0 {
-            return vec![];
+        if rows == 0 {
+            return;
         }
-        let len = basis[0].len();
-        let kout = coeff.len();
-        let mut out = vec![vec![0.0f64; len]; kout];
-        for (t, coef_t) in coeff.iter().enumerate() {
-            debug_assert_eq!(coef_t.len(), k);
-            match cfg.compute {
-                Compute::F64 => {
-                    for r in 0..len {
+        let k = basis.len() / rows;
+        debug_assert_eq!(basis.len(), k * rows);
+        debug_assert_eq!(out.len(), coeff.len() * rows);
+        for (t, coef) in coeff.iter().enumerate() {
+            debug_assert_eq!(coef.len(), k);
+            let dst = &mut out[t * rows..(t + 1) * rows];
+            match (cfg.storage, cfg.compute) {
+                (Storage::F64, Compute::F64) => {
+                    for (r, d) in dst.iter_mut().enumerate() {
                         let mut acc = 0.0f64;
-                        for j in 0..k {
-                            acc += quantize(basis[j][r], cfg.storage) * coef_t[j];
+                        for (j, c) in coef.iter().enumerate() {
+                            acc += basis[j * rows + r] * c;
                         }
-                        out[t][r] = quantize(acc, cfg.storage);
+                        *d = acc;
                     }
                 }
-                Compute::F32 => {
-                    for r in 0..len {
-                        let mut acc = 0.0f32;
-                        for j in 0..k {
-                            acc += quantize(basis[j][r], cfg.storage) as f32 * coef_t[j] as f32;
+                (Storage::F32, Compute::F64) => {
+                    for (r, d) in dst.iter_mut().enumerate() {
+                        let mut acc = 0.0f64;
+                        for (j, c) in coef.iter().enumerate() {
+                            acc += (basis[j * rows + r] as f32 as f64) * c;
                         }
-                        out[t][r] = quantize(acc as f64, cfg.storage);
+                        *d = acc as f32 as f64;
+                    }
+                }
+                (s, Compute::F32) => {
+                    for (r, d) in dst.iter_mut().enumerate() {
+                        let mut acc = 0.0f32;
+                        for (j, c) in coef.iter().enumerate() {
+                            acc += quantize(basis[j * rows + r], s) as f32 * (*c as f32);
+                        }
+                        *d = quantize(acc as f64, s);
                     }
                 }
             }
         }
-        out
     }
 
     fn backend_name(&self) -> &'static str {
@@ -356,6 +503,49 @@ mod tests {
         for v in &y {
             assert_eq!(*v, *v as f32 as f64);
         }
+    }
+
+    #[test]
+    fn spmv_cache_distinguishes_same_length_vectors_within_a_cycle() {
+        // Regression: the old cache was keyed (len, storage) — a second,
+        // distinct vector of the same length inside one cycle silently
+        // reused the first vector's quantized replica.
+        let mut rng = Rng::new(17);
+        let coo = gen::erdos_renyi(96, 96, 0.1, true, &mut rng);
+        let csr = Csr::from_coo(&coo);
+        let ell = Ell::from_csr(&csr, csr.max_row_nnz().max(1), Storage::F32);
+        let x1 = rand_vec(96, 21);
+        let x2 = rand_vec(96, 22);
+        let mut k = HostKernels::new();
+        let y1 = k.spmv(&ell, &x1, &PrecisionConfig::FDF);
+        let y2 = k.spmv(&ell, &x2, &PrecisionConfig::FDF); // no begin_cycle
+        let mut fresh = HostKernels::new();
+        let w1 = fresh.spmv(&ell, &x1, &PrecisionConfig::FDF);
+        fresh.begin_cycle();
+        let w2 = fresh.spmv(&ell, &x2, &PrecisionConfig::FDF);
+        assert_eq!(y1, w1);
+        assert_eq!(y2, w2, "stale quantized replica reused for a distinct vector");
+        assert_ne!(y1, y2, "test vectors must actually differ");
+    }
+
+    #[test]
+    fn into_kernels_write_through_preexisting_garbage() {
+        // The workspace buffers are reused across iterations: every
+        // `*_into` kernel must fully overwrite its output.
+        let mut rng = Rng::new(31);
+        let coo = gen::erdos_renyi(70, 70, 0.1, true, &mut rng);
+        let csr = Csr::from_coo(&coo);
+        let ell = Ell::from_csr(&csr, 4, Storage::F64);
+        let x = rand_vec(70, 32);
+        let mut k = HostKernels::new();
+        let want = k.spmv(&ell, &x, &PrecisionConfig::DDD);
+        let mut y = vec![f64::NAN; 70];
+        k.spmv_into(&ell, &x, &PrecisionConfig::DDD, &mut y);
+        assert_eq!(want, y);
+        let v = rand_vec(70, 33);
+        let mut out = vec![f64::NAN; 70];
+        k.normalize_into(&v, 1.7, &PrecisionConfig::DDD, &mut out);
+        assert_eq!(k.normalize(&v, 1.7, &PrecisionConfig::DDD), out);
     }
 
     #[test]
@@ -411,5 +601,19 @@ mod tests {
         let mut k = HostKernels::new();
         let out = k.normalize(&v, 2.0, &PrecisionConfig::DDD);
         assert_eq!(out, vec![1.0, 2.0, -3.0]);
+    }
+
+    #[test]
+    fn fork_yields_independent_instances() {
+        let mut k = HostKernels::new();
+        let mut f = k.fork().expect("hostsim forks");
+        let a = rand_vec(64, 40);
+        let b = rand_vec(64, 41);
+        for cfg in PrecisionConfig::ALL {
+            let x = k.dot(&a, &b, &cfg);
+            let y = f.dot(&a, &b, &cfg);
+            assert_eq!(x.to_bits(), y.to_bits(), "{}", cfg.name());
+        }
+        assert_eq!(f.backend_name(), "hostsim");
     }
 }

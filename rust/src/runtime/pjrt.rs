@@ -196,7 +196,11 @@ impl Kernels for PjrtKernels {
         self.x_cache.clear();
     }
 
-    fn spmv(&mut self, ell: &Ell, x: &[f64], cfg: &PrecisionConfig) -> Vec<f64> {
+    fn spmv_into(&mut self, ell: &Ell, x: &[f64], cfg: &PrecisionConfig, y: &mut [f64]) {
+        debug_assert_eq!(y.len(), ell.rows);
+        // Width tiles accumulate into `y`: start from a clean slate (the
+        // caller's buffer is reused across iterations).
+        y.fill(0.0);
         let tag = cfg.kernel_tag();
         let stag: &'static str = match cfg.storage {
             Storage::F32 => "f32",
@@ -232,7 +236,6 @@ impl Kernels for PjrtKernels {
             self.x_cache.insert(x_key, lit);
         }
 
-        let mut y = vec![0.0f64; ell.rows];
         let ell_key = ell as *const Ell as usize;
         let mut r0 = 0usize;
         while r0 < ell.rows {
@@ -306,7 +309,6 @@ impl Kernels for PjrtKernels {
                 y[s.row as usize] = super::quantize(y[s.row as usize] + prod, cfg.storage);
             }
         }
-        y
     }
 
     fn dot(&mut self, a: &[f64], b: &[f64], cfg: &PrecisionConfig) -> f64 {
@@ -334,7 +336,8 @@ impl Kernels for PjrtKernels {
         acc
     }
 
-    fn candidate(
+    #[allow(clippy::too_many_arguments)]
+    fn candidate_into(
         &mut self,
         v_tmp: &[f64],
         v_i: &[f64],
@@ -342,8 +345,10 @@ impl Kernels for PjrtKernels {
         alpha: f64,
         beta: f64,
         cfg: &PrecisionConfig,
-    ) -> (Vec<f64>, f64) {
+        out: &mut [f64],
+    ) -> f64 {
         let n = v_tmp.len();
+        debug_assert_eq!(out.len(), n);
         let tag = cfg.kernel_tag();
         let entry = self
             .manifest
@@ -353,7 +358,6 @@ impl Kernels for PjrtKernels {
         let name = entry.name.clone();
         let alpha_lit = xla::Literal::scalar(alpha);
         let beta_lit = xla::Literal::scalar(beta);
-        let mut v = Vec::with_capacity(n);
         let mut ss = 0.0f64;
         let mut i = 0usize;
         while i < n {
@@ -365,17 +369,18 @@ impl Kernels for PjrtKernels {
                 alpha_lit.clone(),
                 beta_lit.clone(),
             ];
-            let out = self.run(&name, &args);
-            let (v_lit, ss_lit) = out.to_tuple2().expect("candidate output tuple2");
-            v.extend(Self::literal_to_f64(&v_lit, cfg.storage, j - i));
+            let tile = self.run(&name, &args);
+            let (v_lit, ss_lit) = tile.to_tuple2().expect("candidate output tuple2");
+            out[i..j].copy_from_slice(&Self::literal_to_f64(&v_lit, cfg.storage, j - i));
             ss += ss_lit.get_first_element::<f64>().expect("candidate sumsq f64");
             i = j;
         }
-        (v, ss)
+        ss
     }
 
-    fn normalize(&mut self, v: &[f64], beta: f64, cfg: &PrecisionConfig) -> Vec<f64> {
+    fn normalize_into(&mut self, v: &[f64], beta: f64, cfg: &PrecisionConfig, out: &mut [f64]) {
         let n = v.len();
+        debug_assert_eq!(out.len(), n);
         let tag = cfg.kernel_tag();
         let entry = self
             .manifest
@@ -384,20 +389,18 @@ impl Kernels for PjrtKernels {
         let lb = entry.param("l").unwrap();
         let name = entry.name.clone();
         let beta_lit = xla::Literal::scalar(beta);
-        let mut out_v = Vec::with_capacity(n);
         let mut i = 0usize;
         while i < n {
             let j = (i + lb).min(n);
             let args = [Self::vec_literal(&v[i..j], lb, cfg.storage), beta_lit.clone()];
-            let out = self.run(&name, &args);
-            let v_lit = out.to_tuple1().expect("normalize output tuple");
-            out_v.extend(Self::literal_to_f64(&v_lit, cfg.storage, j - i));
+            let tile = self.run(&name, &args);
+            let v_lit = tile.to_tuple1().expect("normalize output tuple");
+            out[i..j].copy_from_slice(&Self::literal_to_f64(&v_lit, cfg.storage, j - i));
             i = j;
         }
-        out_v
     }
 
-    fn ortho_update(&mut self, u: &[f64], vj: &[f64], o: f64, cfg: &PrecisionConfig) -> Vec<f64> {
+    fn ortho_update_into(&mut self, u: &mut [f64], vj: &[f64], o: f64, cfg: &PrecisionConfig) {
         let n = u.len();
         let tag = cfg.kernel_tag();
         let entry = self
@@ -407,7 +410,6 @@ impl Kernels for PjrtKernels {
         let lb = entry.param("l").unwrap();
         let name = entry.name.clone();
         let o_lit = xla::Literal::scalar(o);
-        let mut out_v = Vec::with_capacity(n);
         let mut i = 0usize;
         while i < n {
             let j = (i + lb).min(n);
@@ -416,26 +418,29 @@ impl Kernels for PjrtKernels {
                 Self::vec_literal(&vj[i..j], lb, cfg.storage),
                 o_lit.clone(),
             ];
-            let out = self.run(&name, &args);
-            let v_lit = out.to_tuple1().expect("ortho_update output tuple");
-            out_v.extend(Self::literal_to_f64(&v_lit, cfg.storage, j - i));
+            let tile = self.run(&name, &args);
+            let v_lit = tile.to_tuple1().expect("ortho_update output tuple");
+            u[i..j].copy_from_slice(&Self::literal_to_f64(&v_lit, cfg.storage, j - i));
             i = j;
         }
-        out_v
     }
 
-    fn project(
+    fn project_into(
         &mut self,
-        basis: &[Vec<f64>],
+        basis: &[f64],
+        rows: usize,
         coeff: &[Vec<f64>],
         cfg: &PrecisionConfig,
-    ) -> Vec<Vec<f64>> {
-        let k = basis.len();
-        if k == 0 {
-            return vec![];
+        out: &mut [f64],
+    ) {
+        if rows == 0 {
+            return;
         }
-        let len = basis[0].len();
+        let k = basis.len() / rows;
+        debug_assert_eq!(basis.len(), k * rows);
+        let len = rows;
         let kout = coeff.len();
+        debug_assert_eq!(out.len(), kout * len);
         let tag = cfg.kernel_tag();
         let entry = self
             .manifest
@@ -448,21 +453,21 @@ impl Kernels for PjrtKernels {
         let mut bdata = vec![0.0f64; len * k];
         for r in 0..len {
             for j in 0..k {
-                bdata[r * k + j] = basis[j][r];
+                bdata[r * k + j] = basis[j * rows + r];
             }
         }
         let basis_lit = Self::mat_literal(&bdata, len, k, lb, kb, cfg.storage);
         // coeff matrix [kb, kb]: column t = coefficients of output t.
         let mut cdata = vec![0.0f64; k * kout];
-        for j in 0..k {
-            for t in 0..kout {
-                cdata[j * kout + t] = coeff[t][j];
+        for (j, row) in cdata.chunks_mut(kout).enumerate() {
+            for (t, c) in row.iter_mut().enumerate() {
+                *c = coeff[t][j];
             }
         }
         let coeff_lit = Self::mat_literal(&cdata, k, kout, kb, kb, cfg.storage);
 
-        let out = self.run(&name, &[basis_lit, coeff_lit]);
-        let y_lit = out.to_tuple1().expect("project output tuple");
+        let res = self.run(&name, &[basis_lit, coeff_lit]);
+        let y_lit = res.to_tuple1().expect("project output tuple");
         // Output [lb, kb] in storage dtype, row-major.
         let flat: Vec<f64> = match cfg.storage {
             Storage::F32 => {
@@ -471,13 +476,11 @@ impl Kernels for PjrtKernels {
             }
             Storage::F64 => y_lit.to_vec().expect("project output f64"),
         };
-        let mut out_vecs = vec![vec![0.0f64; len]; kout];
         for r in 0..len {
             for t in 0..kout {
-                out_vecs[t][r] = flat[r * kb + t];
+                out[t * len + r] = flat[r * kb + t];
             }
         }
-        out_vecs
     }
 
     fn backend_name(&self) -> &'static str {

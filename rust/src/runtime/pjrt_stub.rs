@@ -56,7 +56,7 @@ impl PjrtKernels {
 }
 
 impl Kernels for PjrtKernels {
-    fn spmv(&mut self, _ell: &Ell, _x: &[f64], _cfg: &PrecisionConfig) -> Vec<f64> {
+    fn spmv_into(&mut self, _ell: &Ell, _x: &[f64], _cfg: &PrecisionConfig, _y: &mut [f64]) {
         match self.never {}
     }
 
@@ -64,7 +64,8 @@ impl Kernels for PjrtKernels {
         match self.never {}
     }
 
-    fn candidate(
+    #[allow(clippy::too_many_arguments)]
+    fn candidate_into(
         &mut self,
         _v_tmp: &[f64],
         _v_i: &[f64],
@@ -72,30 +73,33 @@ impl Kernels for PjrtKernels {
         _alpha: f64,
         _beta: f64,
         _cfg: &PrecisionConfig,
-    ) -> (Vec<f64>, f64) {
+        _out: &mut [f64],
+    ) -> f64 {
         match self.never {}
     }
 
-    fn normalize(&mut self, _v: &[f64], _beta: f64, _cfg: &PrecisionConfig) -> Vec<f64> {
-        match self.never {}
-    }
-
-    fn ortho_update(
+    fn normalize_into(
         &mut self,
-        _u: &[f64],
-        _vj: &[f64],
-        _o: f64,
+        _v: &[f64],
+        _beta: f64,
         _cfg: &PrecisionConfig,
-    ) -> Vec<f64> {
+        _out: &mut [f64],
+    ) {
         match self.never {}
     }
 
-    fn project(
+    fn ortho_update_into(&mut self, _u: &mut [f64], _vj: &[f64], _o: f64, _cfg: &PrecisionConfig) {
+        match self.never {}
+    }
+
+    fn project_into(
         &mut self,
-        _basis: &[Vec<f64>],
+        _basis: &[f64],
+        _rows: usize,
         _coeff: &[Vec<f64>],
         _cfg: &PrecisionConfig,
-    ) -> Vec<Vec<f64>> {
+        _out: &mut [f64],
+    ) {
         match self.never {}
     }
 

@@ -94,6 +94,28 @@ where
     parts
 }
 
+/// Split a full-length vector into per-partition disjoint mutable slices.
+///
+/// Relies on the partitioner's invariant that partitions are contiguous
+/// and cover `0..rows` — shared by the coordinator (replica writes) and
+/// the baseline's threaded SpMV (output rows).
+pub fn split_rows_mut<'a>(
+    mut buf: &'a mut [f64],
+    parts: &[RowPartition],
+) -> Vec<&'a mut [f64]> {
+    let mut out = Vec::with_capacity(parts.len());
+    let mut cursor = 0usize;
+    for p in parts {
+        debug_assert_eq!(p.row_start, cursor, "partitions must be contiguous");
+        let (head, tail) = buf.split_at_mut(p.rows());
+        out.push(head);
+        buf = tail;
+        cursor = p.row_end;
+    }
+    debug_assert!(buf.is_empty(), "partitions must cover the buffer");
+    out
+}
+
 /// Max/mean nnz imbalance across partitions (1.0 = perfectly balanced).
 pub fn imbalance(parts: &[RowPartition]) -> f64 {
     if parts.is_empty() {

@@ -1,0 +1,403 @@
+//! Execution-path regression tests for the zero-allocation kernel pipeline
+//! and the scoped-thread device parallelism:
+//!
+//! * the buffer-writing `*_into` kernels must be **bit-identical** to the
+//!   former allocating implementations (replicated here as oracles with
+//!   the original quantize-everywhere loops) across all three precision
+//!   presets — this pins the `(Storage, Compute)` fast-path
+//!   monomorphization to the exact same arithmetic;
+//! * multi-device solves under `ExecPolicy::Parallel` must match
+//!   `ExecPolicy::Sequential` **exactly** (eigenvalues, eigenvectors,
+//!   α/β, kernel counts) — the coordinator's fixed-device-order reduction
+//!   contract.
+
+use topk_eigen::coordinator::{ExecPolicy, SolverConfig, TopKSolver};
+use topk_eigen::precision::{Compute, PrecisionConfig, Storage};
+use topk_eigen::prop::forall;
+use topk_eigen::rng::Rng;
+use topk_eigen::runtime::{FixedPointKernels, HostKernels, Kernels};
+use topk_eigen::sparse::{gen, suite, Csr, Ell};
+use topk_eigen::{Backend, Eigensolve, Solver};
+
+// ---- Oracles: the seed's allocating kernel implementations ------------------
+
+fn q(x: f64, s: Storage) -> f64 {
+    match s {
+        Storage::F32 => x as f32 as f64,
+        Storage::F64 => x,
+    }
+}
+
+fn old_spmv(ell: &Ell, x: &[f64], cfg: &PrecisionConfig) -> Vec<f64> {
+    let xq: Vec<f64> = x.iter().map(|&v| q(v, cfg.storage)).collect();
+    let mut y = vec![0.0f64; ell.rows];
+    match cfg.compute {
+        Compute::F64 => ell.spmv_ref(&xq, &mut y),
+        Compute::F32 => ell.spmv_ref_f32acc(&xq, &mut y),
+    }
+    for v in &mut y {
+        *v = q(*v, cfg.storage);
+    }
+    y
+}
+
+fn old_dot(a: &[f64], b: &[f64], cfg: &PrecisionConfig) -> f64 {
+    match cfg.compute {
+        Compute::F64 => {
+            let mut acc = 0.0f64;
+            for (x, y) in a.iter().zip(b) {
+                acc += q(*x, cfg.storage) * q(*y, cfg.storage);
+            }
+            acc
+        }
+        Compute::F32 => {
+            let mut acc = 0.0f32;
+            for (x, y) in a.iter().zip(b) {
+                acc += (q(*x, cfg.storage) as f32) * (q(*y, cfg.storage) as f32);
+            }
+            acc as f64
+        }
+    }
+}
+
+fn old_candidate(
+    v_tmp: &[f64],
+    v_i: &[f64],
+    v_prev: &[f64],
+    alpha: f64,
+    beta: f64,
+    cfg: &PrecisionConfig,
+) -> (Vec<f64>, f64) {
+    let n = v_tmp.len();
+    let mut out = Vec::with_capacity(n);
+    match cfg.compute {
+        Compute::F64 => {
+            let mut ss = 0.0f64;
+            for i in 0..n {
+                let v = q(v_tmp[i], cfg.storage)
+                    - alpha * q(v_i[i], cfg.storage)
+                    - beta * q(v_prev[i], cfg.storage);
+                let vq = q(v, cfg.storage);
+                ss += v * v;
+                out.push(vq);
+            }
+            (out, ss)
+        }
+        Compute::F32 => {
+            let (a32, b32) = (alpha as f32, beta as f32);
+            let mut ss = 0.0f32;
+            for i in 0..n {
+                let v = q(v_tmp[i], cfg.storage) as f32
+                    - a32 * q(v_i[i], cfg.storage) as f32
+                    - b32 * q(v_prev[i], cfg.storage) as f32;
+                ss += v * v;
+                out.push(q(v as f64, cfg.storage));
+            }
+            (out, ss as f64)
+        }
+    }
+}
+
+fn old_normalize(v: &[f64], beta: f64, cfg: &PrecisionConfig) -> Vec<f64> {
+    match cfg.compute {
+        Compute::F64 => {
+            v.iter().map(|&x| q(q(x, cfg.storage) / beta, cfg.storage)).collect()
+        }
+        Compute::F32 => {
+            let b32 = beta as f32;
+            v.iter()
+                .map(|&x| q(((q(x, cfg.storage) as f32) / b32) as f64, cfg.storage))
+                .collect()
+        }
+    }
+}
+
+fn old_ortho_update(u: &[f64], vj: &[f64], o: f64, cfg: &PrecisionConfig) -> Vec<f64> {
+    match cfg.compute {
+        Compute::F64 => u
+            .iter()
+            .zip(vj)
+            .map(|(&x, &y)| q(q(x, cfg.storage) - o * q(y, cfg.storage), cfg.storage))
+            .collect(),
+        Compute::F32 => {
+            let o32 = o as f32;
+            u.iter()
+                .zip(vj)
+                .map(|(&x, &y)| {
+                    let r = q(x, cfg.storage) as f32 - o32 * q(y, cfg.storage) as f32;
+                    q(r as f64, cfg.storage)
+                })
+                .collect()
+        }
+    }
+}
+
+fn old_project(basis: &[Vec<f64>], coeff: &[Vec<f64>], cfg: &PrecisionConfig) -> Vec<Vec<f64>> {
+    let k = basis.len();
+    if k == 0 {
+        return vec![];
+    }
+    let len = basis[0].len();
+    let mut out = vec![vec![0.0f64; len]; coeff.len()];
+    for (t, coef_t) in coeff.iter().enumerate() {
+        match cfg.compute {
+            Compute::F64 => {
+                for r in 0..len {
+                    let mut acc = 0.0f64;
+                    for j in 0..k {
+                        acc += q(basis[j][r], cfg.storage) * coef_t[j];
+                    }
+                    out[t][r] = q(acc, cfg.storage);
+                }
+            }
+            Compute::F32 => {
+                for r in 0..len {
+                    let mut acc = 0.0f32;
+                    for j in 0..k {
+                        acc += q(basis[j][r], cfg.storage) as f32 * coef_t[j] as f32;
+                    }
+                    out[t][r] = q(acc as f64, cfg.storage);
+                }
+            }
+        }
+    }
+    out
+}
+
+fn bits_equal(a: &[f64], b: &[f64]) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        if x.to_bits() != y.to_bits() {
+            return Err(format!("element {i}: {x:?} vs {y:?} (bit mismatch)"));
+        }
+    }
+    Ok(())
+}
+
+fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f64> {
+    (0..n).map(|_| 2.0 * rng.f64() - 1.0).collect()
+}
+
+// ---- Bit-identity of the *_into kernels vs the former allocating path -------
+
+#[test]
+fn prop_into_kernels_bit_identical_to_former_allocating_path() {
+    forall("into kernels == old allocating kernels", |rng| {
+        let n = rng.range(20, 400);
+        let m = Csr::from_coo(&gen::erdos_renyi(n, n, 6.0 / n as f64, true, rng));
+        let vt = rand_vec(rng, n);
+        let vi = rand_vec(rng, n);
+        let vp = rand_vec(rng, n);
+        let (alpha, beta) = (2.0 * rng.f64() - 1.0, rng.f64());
+        for cfg in PrecisionConfig::ALL {
+            let ell = Ell::from_csr(&m, 1 + rng.below(8) as usize, cfg.storage);
+            let mut k = HostKernels::new();
+
+            k.begin_cycle();
+            bits_equal(&k.spmv(&ell, &vt, &cfg), &old_spmv(&ell, &vt, &cfg))
+                .map_err(|e| format!("spmv/{}: {e}", cfg.name()))?;
+
+            let d = k.dot(&vt, &vi, &cfg);
+            let dw = old_dot(&vt, &vi, &cfg);
+            if d.to_bits() != dw.to_bits() {
+                return Err(format!("dot/{}: {d:?} vs {dw:?}", cfg.name()));
+            }
+
+            let (c, ss) = k.candidate(&vt, &vi, &vp, alpha, beta, &cfg);
+            let (cw, ssw) = old_candidate(&vt, &vi, &vp, alpha, beta, &cfg);
+            bits_equal(&c, &cw).map_err(|e| format!("candidate/{}: {e}", cfg.name()))?;
+            if ss.to_bits() != ssw.to_bits() {
+                return Err(format!("candidate ss/{}: {ss:?} vs {ssw:?}", cfg.name()));
+            }
+
+            let b = 0.5 + rng.f64();
+            bits_equal(&k.normalize(&vt, b, &cfg), &old_normalize(&vt, b, &cfg))
+                .map_err(|e| format!("normalize/{}: {e}", cfg.name()))?;
+
+            bits_equal(
+                &k.ortho_update(&vt, &vi, alpha, &cfg),
+                &old_ortho_update(&vt, &vi, alpha, &cfg),
+            )
+            .map_err(|e| format!("ortho_update/{}: {e}", cfg.name()))?;
+
+            let kk = 2 + rng.below(5) as usize;
+            let basis: Vec<Vec<f64>> = (0..kk).map(|_| rand_vec(rng, 40)).collect();
+            let coeff: Vec<Vec<f64>> = (0..kk).map(|_| rand_vec(rng, kk)).collect();
+            let got = k.project(&basis, &coeff, &cfg);
+            let want = old_project(&basis, &coeff, &cfg);
+            for (gt, wt) in got.iter().zip(&want) {
+                bits_equal(gt, wt).map_err(|e| format!("project/{}: {e}", cfg.name()))?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_into_buffers_match_allocating_wrappers() {
+    // The in-place variants must agree with their allocating twins even
+    // when the output buffer starts full of garbage (workspace reuse).
+    forall("into == allocating wrappers", |rng| {
+        let n = rng.range(10, 300);
+        let u = rand_vec(rng, n);
+        let v = rand_vec(rng, n);
+        let o = 2.0 * rng.f64() - 1.0;
+        for cfg in PrecisionConfig::ALL {
+            let mut k = HostKernels::new();
+            let want = k.ortho_update(&u, &v, o, &cfg);
+            let mut got = u.clone();
+            k.ortho_update_into(&mut got, &v, o, &cfg);
+            bits_equal(&got, &want)?;
+
+            let want_n = k.normalize(&u, 1.25, &cfg);
+            let mut got_n = vec![f64::NAN; n];
+            k.normalize_into(&u, 1.25, &cfg, &mut got_n);
+            bits_equal(&got_n, &want_n)?;
+        }
+        Ok(())
+    });
+}
+
+// ---- Parallel == sequential coordinator --------------------------------------
+
+fn assert_solutions_identical(
+    seq: &topk_eigen::EigenSolution,
+    par: &topk_eigen::EigenSolution,
+    label: &str,
+) {
+    assert_eq!(seq.eigenvalues, par.eigenvalues, "{label}: eigenvalues");
+    assert_eq!(seq.alpha, par.alpha, "{label}: alpha");
+    assert_eq!(seq.beta, par.beta, "{label}: beta");
+    assert_eq!(seq.eigenvectors, par.eigenvectors, "{label}: eigenvectors");
+    assert_eq!(
+        seq.stats.kernels_launched, par.stats.kernels_launched,
+        "{label}: kernels_launched"
+    );
+    assert_eq!(seq.stats.iterations, par.stats.iterations, "{label}: iterations");
+}
+
+#[test]
+fn parallel_solves_bit_identical_to_sequential() {
+    let mut rng = Rng::new(77);
+    let m = Csr::from_coo(&gen::erdos_renyi(900, 900, 0.01, true, &mut rng));
+    for precision in PrecisionConfig::ALL {
+        for g in [2usize, 4, 8] {
+            let base = SolverConfig { k: 10, devices: g, precision, ..Default::default() };
+            let seq = TopKSolver::new(SolverConfig {
+                exec: ExecPolicy::Sequential,
+                ..base.clone()
+            })
+            .solve(&m)
+            .unwrap();
+            let par = TopKSolver::new(SolverConfig { exec: ExecPolicy::Parallel, ..base })
+                .solve(&m)
+                .unwrap();
+            assert!(!seq.stats.host_parallel);
+            assert!(par.stats.host_parallel, "g={g}: parallel must engage");
+            assert_solutions_identical(&seq, &par, &format!("{}/g={g}", precision.name()));
+        }
+    }
+}
+
+#[test]
+fn parallel_matches_sequential_out_of_core() {
+    // Streaming plans exercise the chunked spmv_into path; the threaded
+    // fleet must agree exactly there too.
+    let mut rng = Rng::new(78);
+    let m = Csr::from_coo(&gen::erdos_renyi(700, 700, 0.03, true, &mut rng));
+    let sb = 8usize;
+    let base = SolverConfig {
+        k: 6,
+        devices: 2,
+        precision: PrecisionConfig::DDD,
+        device_mem_bytes: 700 * sb + (6 + 3) * 700 * sb + (16 << 10),
+        ..Default::default()
+    };
+    let seq = TopKSolver::new(SolverConfig { exec: ExecPolicy::Sequential, ..base.clone() })
+        .solve(&m)
+        .unwrap();
+    let par = TopKSolver::new(SolverConfig { exec: ExecPolicy::Parallel, ..base })
+        .solve(&m)
+        .unwrap();
+    assert!(seq.stats.out_of_core && par.stats.out_of_core);
+    assert_eq!(seq.stats.h2d_bytes, par.stats.h2d_bytes);
+    assert_solutions_identical(&seq, &par, "ooc");
+}
+
+#[test]
+fn parallel_matches_sequential_through_breakdown_recovery() {
+    // Identity-like spectrum forces β ≈ 0 restarts: the recovery path runs
+    // on the coordinator thread in both modes and must stay identical.
+    let mut coo = topk_eigen::Coo::new(64, 64);
+    for i in 0..64 {
+        coo.push(i, i, 1.0);
+    }
+    coo.canonicalize();
+    let m = Csr::from_coo(&coo);
+    let base = SolverConfig {
+        k: 5,
+        devices: 4,
+        precision: PrecisionConfig::DDD,
+        ..Default::default()
+    };
+    let seq = TopKSolver::new(SolverConfig { exec: ExecPolicy::Sequential, ..base.clone() })
+        .solve(&m)
+        .unwrap();
+    let par = TopKSolver::new(SolverConfig { exec: ExecPolicy::Parallel, ..base })
+        .solve(&m)
+        .unwrap();
+    assert!(seq.stats.breakdowns > 0);
+    assert_eq!(seq.stats.breakdowns, par.stats.breakdowns);
+    assert_solutions_identical(&seq, &par, "breakdown");
+}
+
+#[test]
+fn fixedpoint_backend_parallel_matches_sequential() {
+    // Custom kernel backends opt into threading via `fork`: the Q1.30
+    // datapath is deterministic, so threaded solves must match exactly.
+    let e = suite::find("WB-GO").unwrap();
+    let m = e.generate_csr(0.4, 17);
+    let run = |exec: ExecPolicy| {
+        let mut solver = Solver::builder()
+            .k(6)
+            .devices(4)
+            .exec(exec)
+            .backend(Backend::HostSim)
+            .custom_kernels(Box::new(FixedPointKernels::new()))
+            .build()
+            .unwrap();
+        solver.solve(&m).unwrap()
+    };
+    let seq = run(ExecPolicy::Sequential);
+    let par = run(ExecPolicy::Parallel);
+    assert!(par.stats.host_parallel);
+    assert_solutions_identical(&seq, &par, "fixedpoint");
+}
+
+#[test]
+fn auto_policy_threads_large_fleets_only() {
+    // Auto must pick sequential for small partitions (thread dispatch would
+    // dominate) and parallel once per-device rows cross the threshold.
+    let mut rng = Rng::new(79);
+    let small = Csr::from_coo(&gen::erdos_renyi(600, 600, 0.01, true, &mut rng));
+    let sol = TopKSolver::new(SolverConfig { k: 4, devices: 2, ..Default::default() })
+        .solve(&small)
+        .unwrap();
+    assert!(!sol.stats.host_parallel, "600 rows / 2 devices must stay sequential");
+
+    let e = suite::find("WK").unwrap();
+    let large = e.generate_csr(20.0, 7);
+    if large.rows / 2 >= 4096 {
+        let sol = TopKSolver::new(SolverConfig {
+            k: 4,
+            devices: 2,
+            device_mem_bytes: 256 << 20,
+            ..Default::default()
+        })
+        .solve(&large)
+        .unwrap();
+        assert!(sol.stats.host_parallel, "{} rows / 2 devices must thread", large.rows);
+    }
+}
