@@ -1,0 +1,83 @@
+//! Serving: prepare a matrix once, answer many Top-K queries against it.
+//!
+//! ```bash
+//! cargo run --release --example serve_session
+//! ```
+//!
+//! A service answering eigenproblem queries for one large graph (the
+//! ROADMAP's "heavy traffic" scenario) should not re-partition and re-lay
+//! out the matrix per request. This example prepares the web-Google
+//! stand-in once, then runs a burst of queries with varying per-query
+//! knobs through a `SolveSession`, and shows the amortization win — plus
+//! the bit-identity guarantee against the one-shot path.
+
+use std::time::Instant;
+use topk_eigen::sparse::suite;
+use topk_eigen::{Eigensolve, PrecisionConfig, QueryParams, Solver, SolverError};
+
+fn main() -> Result<(), SolverError> {
+    let matrix = suite::find("WB-GO").unwrap().generate_csr(2.0, 42);
+    println!("matrix: {} rows, {} non-zeros", matrix.rows, matrix.nnz());
+
+    let mut solver = Solver::builder()
+        .k(16) // the per-query maximum: queries may ask for any k ≤ 16
+        .precision(PrecisionConfig::FDF)
+        .devices(4)
+        .build()?;
+
+    // ---- Phase 1: prepare once --------------------------------------------
+    // Validation, nnz-balanced partitioning, per-device ELL/COO layout in
+    // storage precision, workspace allocation, kernel forks.
+    let t = Instant::now();
+    let mut prepared = solver.prepare(&matrix)?;
+    let prepare_s = t.elapsed().as_secs_f64();
+    println!(
+        "prepared once in {:.1} ms ({} device-resident bytes, out-of-core: {})",
+        prepare_s * 1e3,
+        prepared.device_bytes(),
+        prepared.out_of_core()
+    );
+
+    // ---- Phase 2: many queries --------------------------------------------
+    let mut session = solver.session(&mut prepared);
+    let mut solve_s = 0.0;
+    for user in 0..6u64 {
+        // Each "user" gets their own start vector; one also wants a
+        // smaller k — all without touching the prepared layout.
+        let q = if user == 3 {
+            QueryParams::new().seed(user).k(8)
+        } else {
+            QueryParams::new().seed(user)
+        };
+        let t = Instant::now();
+        let sol = session.solve(&q)?;
+        let dt = t.elapsed().as_secs_f64();
+        solve_s += dt;
+        println!(
+            "query {user}: λ₀ = {:+.6e} ({} pairs, {:.1} ms)",
+            sol.eigenvalues[0],
+            sol.eigenvalues.len(),
+            dt * 1e3
+        );
+    }
+    let n_queries = session.solves() as f64;
+    println!(
+        "\namortization: prepare {:.1} ms once + {:.1} ms avg solve\n\
+         → {:.1} ms/query on the session vs {:.1} ms/query one-shot",
+        prepare_s * 1e3,
+        solve_s / n_queries * 1e3,
+        (prepare_s / n_queries + solve_s / n_queries) * 1e3,
+        (prepare_s + solve_s / n_queries) * 1e3,
+    );
+
+    // ---- Bit-identity against the one-shot path ----------------------------
+    let again = solver.solve(&matrix)?; // one-shot = prepare + solve fused
+    let mut prepared2 = solver.prepare(&matrix)?;
+    let via_session = solver.session(&mut prepared2).solve(&QueryParams::new())?;
+    assert_eq!(
+        again.eigenvalues, via_session.eigenvalues,
+        "session solves are bit-identical to one-shot solves"
+    );
+    println!("\nbit-identity check passed: session ≡ one-shot");
+    Ok(())
+}

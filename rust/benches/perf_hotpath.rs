@@ -37,7 +37,7 @@ use topk_eigen::precision::PrecisionConfig;
 use topk_eigen::rng::Rng;
 use topk_eigen::runtime::{HostKernels, Kernels, PjrtKernels};
 use topk_eigen::sparse::{suite, Ell};
-use topk_eigen::{Backend, Eigensolve, Solver};
+use topk_eigen::{Backend, Eigensolve, QueryParams, Solver};
 
 fn artifact_dir() -> PathBuf {
     std::env::var("TOPK_ARTIFACTS")
@@ -270,6 +270,64 @@ fn main() {
     ]);
     paths = paths.raw("solve_e2e_hostsim_seq", timing_json(&ts));
 
+    // ---- Prepare/solve split + session reuse -----------------------------
+    // The amortization the prepared-matrix API buys: `prepare` is the
+    // one-time validation/partition/ELL-layout cost; the session solve is
+    // the per-query cost on a warm session. The "session 2nd solve" row is
+    // the serving steady state — it must sit strictly below the one-shot
+    // e2e median (which pays prepare every query).
+    let tprep = time(r, || {
+        let mut solver = builder(Backend::HostSim).build().expect("config");
+        let prep = solver.prepare(&m).expect("prepare");
+        std::hint::black_box(prep.device_bytes());
+    });
+    t.row(&[
+        "prepare hostsim".into(),
+        fmt_secs(tprep.median_s),
+        fmt_secs(tprep.min_s),
+        format!("{:.0}% of e2e", tprep.median_s / te.median_s * 100.0),
+    ]);
+    paths = paths.raw("prepare_hostsim", timing_json(&tprep));
+
+    let mut session_solver = builder(Backend::HostSim).build().expect("config");
+    let mut prepared = session_solver.prepare(&m).expect("prepare");
+    let mut session = session_solver.session(&mut prepared);
+    // Warm the session: the timed loop below measures 2nd-and-later solves.
+    let first = {
+        let t0 = Instant::now();
+        let sol = session.solve(&QueryParams::new()).expect("solve");
+        std::hint::black_box(sol.eigenvalues.len());
+        t0.elapsed().as_secs_f64()
+    };
+    let tsess = time(r, || {
+        let sol = session.solve(&QueryParams::new()).expect("solve");
+        std::hint::black_box(sol.eigenvalues.len());
+    });
+    drop(session);
+    t.row(&[
+        "session 2nd solve".into(),
+        fmt_secs(tsess.median_s),
+        fmt_secs(tsess.min_s),
+        format!(
+            "{:.2}x of one-shot e2e (prepare amortized)",
+            tsess.median_s / te.median_s
+        ),
+    ]);
+    paths = paths.raw("solve_session_reuse", timing_json(&tsess));
+    let session_json = JsonObj::new()
+        .num("prepare_seconds", tprep.median_s)
+        .num("first_solve_seconds", first)
+        .num("second_solve_seconds", tsess.median_s)
+        .num("one_shot_e2e_seconds", te.median_s)
+        .finish();
+    if tsess.median_s >= te.median_s {
+        eprintln!(
+            "warning: session 2nd solve ({}) not below one-shot e2e ({}) — \
+             prepare amortization regressed",
+            tsess.median_s, te.median_s
+        );
+    }
+
     // Coordinator overhead: one instrumented solve; the fraction of the
     // wall spent outside kernel execution. Forced sequential — with
     // threads, per-device kernel times overlap and their sum can exceed
@@ -336,7 +394,7 @@ fn main() {
 
     // ---- BENCH_perf.json -------------------------------------------------
     let json = JsonObj::new()
-        .int("schema", 1)
+        .int("schema", 2)
         .str("bench", "perf_hotpath")
         .num("scale", s)
         .int("reps", r)
@@ -345,6 +403,7 @@ fn main() {
             JsonObj::new().int("rows", m.rows).int("nnz", m.nnz()).finish(),
         )
         .raw("paths", paths.finish())
+        .raw("session", session_json)
         .num("coordinator_overhead_frac", overhead_frac)
         .finish();
     let json_path =

@@ -7,7 +7,7 @@
 //! baseline. This module makes that transparency real at the API level:
 //!
 //! ```no_run
-//! use topk_eigen::{Backend, Eigensolve, PrecisionConfig, Solver};
+//! use topk_eigen::{Backend, Eigensolve, PrecisionConfig, QueryParams, Solver};
 //!
 //! # fn main() -> Result<(), topk_eigen::SolverError> {
 //! let matrix = topk_eigen::sparse::suite::find("WB-GO").unwrap().generate_csr(1.0, 42);
@@ -17,8 +17,20 @@
 //!     .devices(4)
 //!     .backend(Backend::HostSim)
 //!     .build()?;
+//!
+//! // One-shot: prepare + solve fused (fine for a single query).
 //! let solution = solver.solve(&matrix)?;
 //! println!("λ₀ = {}", solution.eigenvalues[0]);
+//!
+//! // Serving: prepare once, answer many queries against the prepared
+//! // matrix — each session solve skips validation, partitioning and
+//! // ELL/replica layout, and reuses the solve workspaces.
+//! let mut prepared = solver.prepare(&matrix)?;
+//! let mut session = solver.session(&mut prepared);
+//! for user in 0..3u64 {
+//!     let sol = session.solve(&QueryParams::new().seed(user))?;
+//!     println!("query {user}: λ₀ = {}", sol.eigenvalues[0]);
+//! }
 //! # Ok(())
 //! # }
 //! ```
@@ -28,9 +40,15 @@
 //! * [`Backend`] selects the substrate uniformly: `HostSim` (pure-rust
 //!   precision-faithful simulation), `Pjrt` (AOT/XLA artifacts), or
 //!   `CpuBaseline` (the ARPACK-class comparator).
+//! * [`Solver::prepare`] → [`PreparedMatrix`] performs the per-matrix
+//!   work once; [`Solver::session`] → [`SolveSession`] answers any number
+//!   of queries against it, each with per-query [`QueryParams`]
+//!   (`k`, seed, tolerance, exec policy). Session solves are
+//!   bit-identical to one-shot solves — the one-shot path *is*
+//!   prepare-then-solve.
 //! * [`Eigensolve`] is the solve trait every facade instance implements;
-//!   [`EigenBackend`] is the lower-level executor trait the coordinator
-//!   and the baseline plug into.
+//!   [`EigenBackend`] is the lower-level executor trait (now a
+//!   prepare/solve pair) the coordinator and the baseline plug into.
 //! * [`IterationObserver`] hooks fire once per Lanczos iteration and can
 //!   truncate the solve — tolerance-driven early stopping
 //!   ([`SolverBuilder::tolerance`]) rides on it.
@@ -40,7 +58,9 @@
 pub mod builder;
 pub mod error;
 pub mod observer;
+pub mod prepare;
 pub mod report;
+pub mod session;
 
 pub use builder::SolverBuilder;
 pub use error::SolverError;
@@ -48,11 +68,14 @@ pub use observer::{
     CollectObserver, FnObserver, IterationEvent, IterationObserver, ObserverControl,
     ToleranceStop,
 };
+pub use prepare::PreparedMatrix;
 pub use report::SolveReport;
+pub use session::{QueryParams, SolveSession};
 
 use crate::baseline::{self, BaselineConfig};
-use crate::coordinator::{EigenSolution, SolveStats, TopKSolver};
+use crate::coordinator::{EigenSolution, SolveQuery, SolveStats, TopKSolver};
 use crate::sparse::Csr;
+use prepare::PreparedKind;
 use std::path::PathBuf;
 use std::str::FromStr;
 
@@ -126,13 +149,43 @@ pub trait Eigensolve {
 /// Executor trait the substrates implement: the multi-GPU coordinator
 /// (hostsim and PJRT kernel variants) and the CPU baseline. [`Solver`]
 /// holds one behind a `Box<dyn EigenBackend>`.
+///
+/// The trait is the prepare/solve pair of the lifecycle: `prepare` does
+/// the per-matrix work once, `solve_prepared` answers one query against
+/// it. One-shot execution is the provided [`EigenBackend::run`] — exactly
+/// a preparation followed by one default-parameter solve, which is what
+/// makes session solves bit-identical to one-shot solves.
 pub trait EigenBackend: Send {
-    /// Run one solve, optionally observed.
+    /// Per-matrix setup: validation, partitioning, layout, replica
+    /// construction — everything a query does not have to repeat.
+    fn prepare<'m>(&mut self, m: &'m Csr) -> Result<PreparedMatrix<'m>, SolverError>;
+
+    /// Answer one query against a prepared matrix, optionally observed.
+    /// Unset [`QueryParams`] fields fall back to the prepared
+    /// configuration. Fails with a typed error if `prep` was produced by
+    /// a different backend.
+    fn solve_prepared(
+        &mut self,
+        prep: &mut PreparedMatrix<'_>,
+        query: &QueryParams,
+        observer: Option<&mut dyn IterationObserver>,
+    ) -> Result<EigenSolution, SolverError>;
+
+    /// Run one one-shot solve: prepare, then solve at the prepared
+    /// defaults. The preparation cost is folded into the returned
+    /// `stats.wall_seconds` and reported in `stats.prepare_seconds`.
     fn run(
         &mut self,
         m: &Csr,
         observer: Option<&mut dyn IterationObserver>,
-    ) -> Result<EigenSolution, SolverError>;
+    ) -> Result<EigenSolution, SolverError> {
+        let mut prep = self.prepare(m)?;
+        let prep_s = prep.prepare_seconds();
+        let mut sol = self.solve_prepared(&mut prep, &QueryParams::default(), observer)?;
+        sol.stats.prepare_seconds = prep_s;
+        sol.stats.wall_seconds += prep_s;
+        Ok(sol)
+    }
 
     /// Substrate name for stats and logs.
     fn name(&self) -> &'static str;
@@ -158,50 +211,119 @@ impl Solver {
         SolverBuilder::new()
     }
 
+    /// Prepare `m` for repeated solving: validation, partitioning,
+    /// ELL/COO layout, per-device storage-precision replica construction
+    /// and workspace allocation, once. Any number of queries can then be
+    /// answered through [`Solver::session`], each paying only the
+    /// iteration cost.
+    pub fn prepare<'m>(&mut self, m: &'m Csr) -> Result<PreparedMatrix<'m>, SolverError> {
+        self.backend.prepare(m)
+    }
+
+    /// Open a solving session over a prepared matrix. The session borrows
+    /// both the solver (for its kernels) and the prepared state (for its
+    /// workspaces); drop it to prepare a different matrix.
+    pub fn session<'s, 'p, 'm>(
+        &'s mut self,
+        prepared: &'p mut PreparedMatrix<'m>,
+    ) -> SolveSession<'s, 'p, 'm> {
+        SolveSession { solver: self, prepared, solves: 0 }
+    }
+
     fn run(
         &mut self,
         m: &Csr,
         user: Option<&mut dyn IterationObserver>,
     ) -> Result<EigenSolution, SolverError> {
-        let Some(tol) = self.tolerance else {
-            return self.backend.run(m, user);
-        };
-        if self.native_tolerance && !self.require_convergence {
-            // The backend enforces its own convergence criterion; chaining
-            // the facade's stop observer would only burn a per-iteration
-            // Jacobi solve to record an estimate nobody reads.
-            return self.backend.run(m, user);
-        }
-        let mut stop = ToleranceStop::new(tol);
-        if self.native_tolerance {
-            // Observe-only: the backend stops itself; never trigger.
-            stop.min_iterations = usize::MAX;
-        }
-        let mut chain = ChainObserver { user, stop: &mut stop, user_stopped: false };
-        let sol = self.backend.run(m, Some(&mut chain))?;
-        let user_stopped = chain.user_stopped;
-        // A deliberate user truncation is not a convergence failure: the
-        // NonConvergence contract covers solves that *exhausted* their k
-        // iterations above the tolerance, not ones the caller cut short.
-        if self.require_convergence && !user_stopped {
-            // The CPU baseline applies the tolerance relative to |λ₀|
-            // (ARPACK's convention); judge it by its own criterion so a
-            // backend that just declared convergence is not failed here.
-            let threshold = if self.native_tolerance {
-                tol * sol.eigenvalues.first().map(|l| l.abs()).unwrap_or(1.0).max(1e-30)
-            } else {
-                tol
-            };
-            if stop.last_estimate > threshold {
-                return Err(SolverError::NonConvergence {
-                    achieved: stop.last_estimate,
-                    tolerance: threshold,
-                    iterations: sol.stats.iterations,
-                });
-            }
-        }
-        Ok(sol)
+        let backend = self.backend.as_mut();
+        run_with_tolerance(
+            self.tolerance,
+            self.native_tolerance,
+            self.require_convergence,
+            user,
+            |obs| backend.run(m, obs),
+        )
     }
+
+    /// Session path: one query against a prepared matrix, with the same
+    /// tolerance/early-stop semantics as the one-shot [`Solver::run`].
+    /// The per-query tolerance (if any) overrides the builder's.
+    pub(crate) fn run_prepared(
+        &mut self,
+        prep: &mut PreparedMatrix<'_>,
+        query: &QueryParams,
+        user: Option<&mut dyn IterationObserver>,
+    ) -> Result<EigenSolution, SolverError> {
+        query.validate()?;
+        let tolerance = query.tolerance.or(self.tolerance);
+        // Native-tolerance backends (the CPU baseline) enforce the
+        // tolerance themselves — hand them the resolved value.
+        let mut q = *query;
+        if self.native_tolerance {
+            q.tolerance = tolerance;
+        }
+        let backend = self.backend.as_mut();
+        run_with_tolerance(
+            tolerance,
+            self.native_tolerance,
+            self.require_convergence,
+            user,
+            |obs| backend.solve_prepared(prep, &q, obs),
+        )
+    }
+}
+
+/// Shared solve driver: wraps `exec` with the facade's tolerance
+/// machinery — the built-in early-stop observer chain and the
+/// `require_convergence` check — identically for the one-shot and the
+/// session path.
+fn run_with_tolerance(
+    tolerance: Option<f64>,
+    native_tolerance: bool,
+    require_convergence: bool,
+    user: Option<&mut dyn IterationObserver>,
+    exec: impl FnOnce(
+        Option<&mut dyn IterationObserver>,
+    ) -> Result<EigenSolution, SolverError>,
+) -> Result<EigenSolution, SolverError> {
+    let Some(tol) = tolerance else {
+        return exec(user);
+    };
+    if native_tolerance && !require_convergence {
+        // The backend enforces its own convergence criterion; chaining
+        // the facade's stop observer would only burn a per-iteration
+        // Jacobi solve to record an estimate nobody reads.
+        return exec(user);
+    }
+    let mut stop = ToleranceStop::new(tol);
+    if native_tolerance {
+        // Observe-only: the backend stops itself; never trigger.
+        stop.min_iterations = usize::MAX;
+    }
+    let mut chain = ChainObserver { user, stop: &mut stop, user_stopped: false };
+    let sol = exec(Some(&mut chain))?;
+    let user_stopped = chain.user_stopped;
+    // A deliberate user truncation is not a convergence failure: the
+    // NonConvergence contract covers solves that *exhausted* their k
+    // iterations above the tolerance, not ones the caller cut short.
+    if require_convergence && !user_stopped {
+        // The CPU baseline applies the tolerance relative to |λ₀|
+        // (ARPACK's convention); judge it by its own criterion so a
+        // backend that just declared convergence is not failed here.
+        let threshold = if native_tolerance {
+            tol * sol.eigenvalues.first().map(|l| l.abs()).unwrap_or(1.0).max(1e-30)
+        } else {
+            tol
+        };
+        if stop.last_estimate > threshold {
+            return Err(SolverError::NonConvergence {
+                achieved: stop.last_estimate,
+                tolerance: threshold,
+                iterations: sol.stats.iterations,
+            });
+        }
+    }
+    Ok(sol)
 }
 
 impl Eigensolve for Solver {
@@ -255,12 +377,38 @@ pub(crate) struct GpuBackend {
 }
 
 impl EigenBackend for GpuBackend {
-    fn run(
+    fn prepare<'m>(&mut self, m: &'m Csr) -> Result<PreparedMatrix<'m>, SolverError> {
+        let state = self.solver.prepare(m)?;
+        Ok(PreparedMatrix {
+            kind: PreparedKind::Gpu(state),
+            backend: self.solver.backend_name(),
+        })
+    }
+
+    fn solve_prepared(
         &mut self,
-        m: &Csr,
+        prep: &mut PreparedMatrix<'_>,
+        query: &QueryParams,
         observer: Option<&mut dyn IterationObserver>,
     ) -> Result<EigenSolution, SolverError> {
-        self.solver.solve_observed(m, observer)
+        let PreparedKind::Gpu(state) = &mut prep.kind else {
+            return Err(SolverError::InvalidConfig {
+                field: "session",
+                message: format!(
+                    "prepared matrix was built by the '{}' backend, not '{}'; \
+                     prepare it with this solver",
+                    prep.backend,
+                    self.solver.backend_name()
+                ),
+            });
+        };
+        let cfg = state.config();
+        let resolved = SolveQuery {
+            k: query.k.unwrap_or(cfg.k),
+            seed: query.seed.unwrap_or(cfg.seed),
+            exec: query.exec.unwrap_or(cfg.exec),
+        };
+        self.solver.solve_prepared(state, &resolved, observer)
     }
 
     fn name(&self) -> &'static str {
@@ -278,12 +426,10 @@ pub(crate) struct CpuBaselineBackend {
     pub(crate) cfg: BaselineConfig,
 }
 
-impl EigenBackend for CpuBaselineBackend {
-    fn run(
-        &mut self,
-        m: &Csr,
-        observer: Option<&mut dyn IterationObserver>,
-    ) -> Result<EigenSolution, SolverError> {
+impl CpuBaselineBackend {
+    /// The baseline's admission rules for a solve at `k`, shared by
+    /// prepare-time and query-time validation.
+    fn validate(&self, m: &Csr, k: usize) -> Result<(), SolverError> {
         if m.rows != m.cols {
             return Err(SolverError::AsymmetricInput {
                 rows: m.rows,
@@ -291,28 +437,83 @@ impl EigenBackend for CpuBaselineBackend {
                 detail: format!("matrix must be square (got {}×{})", m.rows, m.cols),
             });
         }
-        if self.k >= m.rows {
+        if k >= m.rows {
             return Err(SolverError::InvalidConfig {
                 field: "k",
-                message: format!("K={} must be < n={}", self.k, m.rows),
+                message: format!("K={k} must be < n={}", m.rows),
             });
         }
         // Fail typed (instead of hitting the baseline's `dim > K` assert)
         // when the matrix is too small or the configured dimension too
         // tight, using the baseline's own dimension rule.
-        let dim = baseline::effective_krylov_dim(&self.cfg, self.k, m.rows);
-        if dim <= self.k {
+        let dim = baseline::effective_krylov_dim(&self.cfg, k, m.rows);
+        if dim <= k {
             return Err(SolverError::InvalidConfig {
                 field: "k",
                 message: format!(
-                    "the CPU baseline needs Krylov dimension > K, but K={} only leaves \
+                    "the CPU baseline needs Krylov dimension > K, but K={k} only leaves \
                      dim={dim} on an n={} matrix; shrink k, enlarge the matrix, or \
                      raise baseline_krylov_dim",
-                    self.k, m.rows
+                    m.rows
                 ),
             });
         }
-        let res = baseline::solve_topk_cpu_observed(m, self.k, &self.cfg, observer);
+        Ok(())
+    }
+}
+
+impl EigenBackend for CpuBaselineBackend {
+    fn prepare<'m>(&mut self, m: &'m Csr) -> Result<PreparedMatrix<'m>, SolverError> {
+        // The baseline has no device layout phase: preparation is the
+        // admission checks, and the solve re-reads the borrowed matrix.
+        let t0 = std::time::Instant::now();
+        self.validate(m, self.k)?;
+        Ok(PreparedMatrix {
+            kind: PreparedKind::Cpu {
+                m,
+                k: self.k,
+                prepare_seconds: t0.elapsed().as_secs_f64(),
+            },
+            backend: "cpu",
+        })
+    }
+
+    fn solve_prepared(
+        &mut self,
+        prep: &mut PreparedMatrix<'_>,
+        query: &QueryParams,
+        observer: Option<&mut dyn IterationObserver>,
+    ) -> Result<EigenSolution, SolverError> {
+        let PreparedKind::Cpu { m, k: k_max, .. } = &prep.kind else {
+            return Err(SolverError::InvalidConfig {
+                field: "session",
+                message: format!(
+                    "prepared matrix was built by the '{}' backend, not 'cpu'; \
+                     prepare it with this solver",
+                    prep.backend
+                ),
+            });
+        };
+        let m = *m;
+        let k_max = *k_max;
+        let k = query.k.unwrap_or(k_max);
+        if k > k_max {
+            // Same contract as the GPU path: queries may not exceed the
+            // prepared capacity.
+            return Err(SolverError::InvalidConfig {
+                field: "k",
+                message: format!(
+                    "query K={k} must be in 1..={k_max} (the prepared capacity; \
+                     re-prepare with a larger k to raise it)"
+                ),
+            });
+        }
+        if k != self.k {
+            // Re-run the admission rules at the query's k.
+            self.validate(m, k)?;
+        }
+        let cfg = self.cfg.for_query(query.seed, query.tolerance);
+        let res = baseline::solve_topk_cpu_observed(m, k, &cfg, observer);
         let iterations = res.iterations;
         Ok(EigenSolution {
             eigenvalues: res.eigenvalues,
@@ -326,6 +527,7 @@ impl EigenBackend for CpuBaselineBackend {
                 iterations,
                 early_stopped: res.early_stopped,
                 backend: "cpu",
+                exec_policy: "n/a",
                 ..Default::default()
             },
         })

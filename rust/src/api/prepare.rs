@@ -1,0 +1,91 @@
+//! Prepared matrices: the per-matrix half of the prepare/solve lifecycle.
+//!
+//! The paper's pipeline is two-phase by construction — partition the
+//! matrix across devices, build the ELL/COO slices and precision-lowered
+//! replicas, *then* run Lanczos. [`PreparedMatrix`] reifies the first
+//! phase as a value: [`crate::Solver::prepare`] performs validation,
+//! partitioning, layout, per-device quantized replica construction and
+//! workspace allocation once, and every subsequent solve on the matrix
+//! (through a [`crate::SolveSession`]) pays only the iteration cost.
+
+use crate::coordinator::PreparedState;
+use crate::sparse::Csr;
+
+/// A matrix prepared for repeated solving: validated, partitioned, laid
+/// out in device storage precision, with workspaces and per-device kernel
+/// instances ready. Obtain via [`crate::Solver::prepare`]; solve through
+/// [`crate::Solver::session`].
+///
+/// The lifetime `'m` ties the preparation to the source matrix only for
+/// backends that must re-read it at solve time (the CPU baseline); the
+/// GPU-coordinator preparation is self-contained — the plans own the
+/// quantized device layout and the source [`Csr`] is never touched again.
+pub struct PreparedMatrix<'m> {
+    pub(crate) kind: PreparedKind<'m>,
+    pub(crate) backend: &'static str,
+}
+
+/// Backend-specific prepared state.
+pub(crate) enum PreparedKind<'m> {
+    /// Multi-GPU coordinator state (hostsim / PJRT / custom kernels).
+    Gpu(PreparedState),
+    /// The CPU baseline has no layout phase: preparation is validation,
+    /// and the solve re-reads the borrowed matrix.
+    Cpu {
+        m: &'m Csr,
+        /// Prepared `k` (the per-query maximum, mirroring the GPU path).
+        k: usize,
+        prepare_seconds: f64,
+    },
+}
+
+impl PreparedMatrix<'_> {
+    /// Name of the backend that prepared this matrix.
+    pub fn backend_name(&self) -> &'static str {
+        self.backend
+    }
+
+    /// Wallclock seconds the preparation took — the one-time cost a
+    /// session amortizes across its solves.
+    pub fn prepare_seconds(&self) -> f64 {
+        match &self.kind {
+            PreparedKind::Gpu(p) => p.prepare_seconds,
+            PreparedKind::Cpu { prepare_seconds, .. } => *prepare_seconds,
+        }
+    }
+
+    /// Matrix dimension.
+    pub fn rows(&self) -> usize {
+        match &self.kind {
+            PreparedKind::Gpu(p) => p.rows(),
+            PreparedKind::Cpu { m, .. } => m.rows,
+        }
+    }
+
+    /// Maximum `k` a query on this prepared matrix may request (the
+    /// workspace capacity reserved at prepare time).
+    pub fn k_max(&self) -> usize {
+        match &self.kind {
+            PreparedKind::Gpu(p) => p.k_max(),
+            PreparedKind::Cpu { k, .. } => *k,
+        }
+    }
+
+    /// True if any device partition streams chunks host→device per
+    /// iteration (always `false` for the CPU baseline).
+    pub fn out_of_core(&self) -> bool {
+        match &self.kind {
+            PreparedKind::Gpu(p) => p.out_of_core(),
+            PreparedKind::Cpu { .. } => false,
+        }
+    }
+
+    /// Total device-resident bytes reserved across the fleet at prepare
+    /// time (`0` for the CPU baseline).
+    pub fn device_bytes(&self) -> usize {
+        match &self.kind {
+            PreparedKind::Gpu(p) => p.device_bytes(),
+            PreparedKind::Cpu { .. } => 0,
+        }
+    }
+}

@@ -52,6 +52,16 @@ pub struct SolveReport {
     pub out_of_core: bool,
     /// Lanczos breakdowns recovered.
     pub breakdowns: usize,
+    /// True if the per-device loops ran on scoped host threads.
+    pub host_parallel: bool,
+    /// Resolved host execution policy ("parallel" / "sequential"; "n/a"
+    /// off the coordinator path, e.g. the CPU baseline).
+    pub exec_policy: String,
+    /// Seconds spent preparing the matrix (validation, partitioning,
+    /// ELL/COO layout, replica quantization). For a one-shot solve this
+    /// is the setup share of `wall_seconds`; `0.0` for a session solve on
+    /// an already-prepared matrix.
+    pub prepare_seconds: f64,
     /// Peak device memory across the fleet.
     pub peak_device_bytes: usize,
 }
@@ -80,6 +90,9 @@ impl SolveReport {
             p2p_bytes: s.p2p_bytes,
             out_of_core: s.out_of_core,
             breakdowns: s.breakdowns,
+            host_parallel: s.host_parallel,
+            exec_policy: s.exec_policy.to_string(),
+            prepare_seconds: s.prepare_seconds,
             peak_device_bytes: s.peak_device_bytes,
         }
     }
@@ -130,6 +143,9 @@ impl SolveReport {
         field(&mut o, "p2p_bytes", &self.p2p_bytes.to_string());
         field(&mut o, "out_of_core", &self.out_of_core.to_string());
         field(&mut o, "breakdowns", &self.breakdowns.to_string());
+        field(&mut o, "host_parallel", &self.host_parallel.to_string());
+        field(&mut o, "exec_policy", &json_str(&self.exec_policy));
+        field(&mut o, "prepare_seconds", &json_f64(self.prepare_seconds));
         // Last field: no trailing comma.
         let _ = write!(o, "  \"peak_device_bytes\": {}\n}}", self.peak_device_bytes);
         o
@@ -231,6 +247,9 @@ mod tests {
             "\"eigenvalues\": [2.0, 1.0]",
             "\"early_stopped\": false",
             "\"phases_sim_seconds\"",
+            "\"host_parallel\"",
+            "\"exec_policy\"",
+            "\"prepare_seconds\"",
             "\"peak_device_bytes\"",
         ] {
             assert!(j.contains(key), "missing {key} in:\n{j}");
@@ -239,5 +258,30 @@ mod tests {
         // the closing brace.
         assert_eq!(j.matches('{').count(), j.matches('}').count());
         assert!(!j.contains(",\n}"), "trailing comma:\n{j}");
+    }
+
+    #[test]
+    fn report_carries_exec_and_prepare_fields_from_stats() {
+        use crate::coordinator::SolveStats;
+        let sol = EigenSolution {
+            eigenvalues: vec![1.0],
+            eigenvectors: vec![vec![1.0]],
+            alpha: vec![],
+            beta: vec![],
+            stats: SolveStats {
+                host_parallel: true,
+                exec_policy: "parallel",
+                prepare_seconds: 0.25,
+                ..Default::default()
+            },
+        };
+        let r = SolveReport::new("T", 1, &sol);
+        assert!(r.host_parallel);
+        assert_eq!(r.exec_policy, "parallel");
+        assert_eq!(r.prepare_seconds, 0.25);
+        let j = r.to_json();
+        assert!(j.contains("\"host_parallel\": true"), "{j}");
+        assert!(j.contains("\"exec_policy\": \"parallel\""), "{j}");
+        assert!(j.contains("\"prepare_seconds\": 0.25"), "{j}");
     }
 }

@@ -1,0 +1,130 @@
+//! Solve sessions: the per-query half of the prepare/solve lifecycle.
+//!
+//! A [`SolveSession`] borrows a [`PreparedMatrix`] and its [`Solver`] and
+//! answers any number of Top-K queries against the prepared matrix, each
+//! with its own per-query knobs ([`QueryParams`]): `k` (up to the
+//! prepared capacity), start-vector seed, convergence tolerance and host
+//! execution policy. Session solves reuse the prepared workspaces and
+//! per-device kernel instances — no per-solve partitioning, layout or
+//! slab allocation — and are **bit-identical** to a one-shot
+//! [`crate::Eigensolve::solve`] at the same effective configuration (the
+//! one-shot path *is* prepare-then-solve, by construction).
+
+use super::error::SolverError;
+use super::observer::IterationObserver;
+use super::prepare::PreparedMatrix;
+use super::Solver;
+use crate::coordinator::{EigenSolution, ExecPolicy};
+
+/// Per-query knobs for a session solve. Every field is optional; an unset
+/// field falls back to the value the solver (and its prepared matrix) was
+/// configured with, so `QueryParams::default()` reproduces the one-shot
+/// solve exactly.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct QueryParams {
+    pub(crate) k: Option<usize>,
+    pub(crate) seed: Option<u64>,
+    pub(crate) tolerance: Option<f64>,
+    pub(crate) exec: Option<ExecPolicy>,
+}
+
+impl QueryParams {
+    /// All defaults: identical to the prepared configuration.
+    pub fn new() -> Self {
+        QueryParams::default()
+    }
+
+    /// Eigencomponents for this query. Must be `1 ..= k_max` of the
+    /// prepared matrix (the workspace capacity reserved at prepare time).
+    pub fn k(mut self, k: usize) -> Self {
+        self.k = Some(k);
+        self
+    }
+
+    /// Seed for this query's random start vector.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = Some(seed);
+        self
+    }
+
+    /// Convergence tolerance for this query (overrides the builder's
+    /// [`crate::SolverBuilder::tolerance`], with the same semantics).
+    pub fn tolerance(mut self, tol: f64) -> Self {
+        self.tolerance = Some(tol);
+        self
+    }
+
+    /// Host threading policy for this query.
+    pub fn exec(mut self, exec: ExecPolicy) -> Self {
+        self.exec = Some(exec);
+        self
+    }
+
+    /// Typed validation of the per-query values (range checks that don't
+    /// need the prepared matrix; `k ≤ k_max` is enforced downstream).
+    pub(crate) fn validate(&self) -> Result<(), SolverError> {
+        if self.k == Some(0) {
+            return Err(SolverError::InvalidConfig {
+                field: "k",
+                message: "query K must be ≥ 1".into(),
+            });
+        }
+        if let Some(t) = self.tolerance {
+            if !t.is_finite() || t <= 0.0 {
+                return Err(SolverError::InvalidConfig {
+                    field: "tolerance",
+                    message: format!(
+                        "query tolerance must be a finite positive number (got {t})"
+                    ),
+                });
+            }
+        }
+        Ok(())
+    }
+}
+
+/// A solving session over one prepared matrix: issue any number of
+/// queries, each paying only the iteration cost. Obtain via
+/// [`Solver::session`].
+pub struct SolveSession<'s, 'p, 'm> {
+    pub(crate) solver: &'s mut Solver,
+    pub(crate) prepared: &'p mut PreparedMatrix<'m>,
+    pub(crate) solves: usize,
+}
+
+impl<'m> SolveSession<'_, '_, 'm> {
+    /// Solve one query. `QueryParams::default()` reproduces the one-shot
+    /// configuration bit-for-bit.
+    pub fn solve(&mut self, query: &QueryParams) -> Result<EigenSolution, SolverError> {
+        let sol = self.solver.run_prepared(self.prepared, query, None)?;
+        self.solves += 1;
+        Ok(sol)
+    }
+
+    /// Like [`SolveSession::solve`], invoking `observer` once per Lanczos
+    /// iteration; the observer may truncate the solve early.
+    pub fn solve_observed(
+        &mut self,
+        query: &QueryParams,
+        observer: &mut dyn IterationObserver,
+    ) -> Result<EigenSolution, SolverError> {
+        let sol = self.solver.run_prepared(self.prepared, query, Some(observer))?;
+        self.solves += 1;
+        Ok(sol)
+    }
+
+    /// Queries answered so far on this session.
+    pub fn solves(&self) -> usize {
+        self.solves
+    }
+
+    /// The one-time preparation cost this session amortizes.
+    pub fn prepare_seconds(&self) -> f64 {
+        self.prepared.prepare_seconds()
+    }
+
+    /// The prepared matrix backing this session.
+    pub fn prepared(&self) -> &PreparedMatrix<'m> {
+        self.prepared
+    }
+}

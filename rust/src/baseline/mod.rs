@@ -57,6 +57,20 @@ impl Default for BaselineConfig {
     }
 }
 
+impl BaselineConfig {
+    /// Per-query copy for the prepare/solve session lifecycle: a session
+    /// query may override the start-vector seed and the tolerance, while
+    /// the rest (threads, Krylov dimension, restart cap) stays
+    /// matrix-level configuration.
+    pub fn for_query(&self, seed: Option<u64>, tol: Option<f64>) -> BaselineConfig {
+        BaselineConfig {
+            seed: seed.unwrap_or(self.seed),
+            tol: tol.unwrap_or(self.tol),
+            ..self.clone()
+        }
+    }
+}
+
 /// Result of the baseline solve.
 #[derive(Clone, Debug)]
 pub struct BaselineResult {

@@ -35,7 +35,7 @@ pub mod ring;
 
 use crate::api::error::SolverError;
 use crate::api::observer::{IterationEvent, IterationObserver, ObserverControl};
-use crate::gpu::{device::barrier, CostModel, Device, Topology};
+use crate::gpu::{device::barrier, CostModel, Device, DeviceMemory, Topology};
 use crate::jacobi::{jacobi_eigen, jacobi_eigen_f64, DenseSym};
 use crate::linalg::normalize as l2_normalize;
 use crate::precision::PrecisionConfig;
@@ -232,6 +232,16 @@ pub struct SolveStats {
     pub backend: &'static str,
     /// True if the device loops ran on scoped threads (one per device).
     pub host_parallel: bool,
+    /// The *resolved* host execution policy — what `ExecPolicy::Auto`
+    /// actually chose: "parallel" or "sequential" ("n/a" off the
+    /// coordinator path, e.g. the CPU baseline).
+    pub exec_policy: &'static str,
+    /// Seconds spent preparing the matrix (validation, partitioning,
+    /// ELL/COO layout, replica quantization). For a one-shot solve this is
+    /// the setup share of `wall_seconds`; for a session solve over an
+    /// already-prepared matrix it is `0.0` — the amortized cost lives on
+    /// the `PreparedMatrix`.
+    pub prepare_seconds: f64,
     /// True if an [`IterationObserver`] truncated the Krylov space before
     /// the configured K (e.g. tolerance-driven early stopping).
     pub early_stopped: bool,
@@ -273,14 +283,16 @@ pub fn ritz_residual_estimate(alpha: &[f64], beta: &[f64], beta_next: f64) -> f6
     beta_next * eig.vectors[0][alpha.len() - 1].abs()
 }
 
-/// Reusable per-device solve state: allocated once at solve start and
-/// reused across all K Lanczos iterations, so the hot loop performs no
-/// per-iteration heap allocation. `v_prev` is not stored at all — it is
-/// always basis row `i − 1` (or the `zeros` stand-in at `i == 0`).
+/// Reusable per-device solve state: allocated once at *prepare* time and
+/// reused across all K Lanczos iterations of every solve on the prepared
+/// matrix, so the hot loop performs no per-iteration heap allocation and a
+/// session solve performs no per-solve slab allocation either. `v_prev` is
+/// not stored at all — it is always basis row `i − 1` (or the `zeros`
+/// stand-in at `i == 0`).
 struct SolveWorkspace {
     /// Partition length (rows owned by this device).
     rows: usize,
-    /// Lanczos basis slab, `k × rows` row-major; `basis_len` rows valid.
+    /// Lanczos basis slab, `k_cap × rows` row-major; `basis_len` rows valid.
     basis: Vec<f64>,
     /// Basis vectors recorded so far (== completed iterations).
     basis_len: usize,
@@ -302,6 +314,15 @@ impl SolveWorkspace {
             v_tmp: vec![0.0; rows],
             zeros: vec![0.0; rows],
         }
+    }
+
+    /// Rewind for a fresh solve on the same prepared matrix. The slabs are
+    /// kept — only the valid-row counter resets, so a session solve reuses
+    /// every allocation. Stale basis rows are never read: all reads go
+    /// through `basis_len`, which `push_basis` advances only after the row
+    /// is overwritten.
+    fn reset(&mut self) {
+        self.basis_len = 0;
     }
 
     fn basis_row(&self, j: usize) -> &[f64] {
@@ -343,11 +364,13 @@ enum Phase {
 
 /// Host execution context for the per-device loops: either the solver's
 /// single shared kernel driven sequentially, or one forked kernel instance
-/// per device driven by scoped threads.
+/// per device driven by scoped threads. The per-device instances are
+/// *borrowed* from the [`PreparedState`] — forked once at prepare time and
+/// reused across every solve on that prepared matrix.
 enum ExecCtx<'k> {
     Shared(&'k mut dyn Kernels),
     Par {
-        kernels: Vec<Box<dyn Kernels>>,
+        kernels: &'k mut [Box<dyn Kernels>],
         /// Whether `Phase::Light` fan-outs also thread (large partitions).
         vec_par: bool,
     },
@@ -362,7 +385,7 @@ impl ExecCtx<'_> {
         match self {
             ExecCtx::Shared(k) => k.begin_cycle(),
             ExecCtx::Par { kernels, .. } => {
-                for k in kernels {
+                for k in kernels.iter_mut() {
                     k.begin_cycle();
                 }
             }
@@ -413,6 +436,86 @@ impl ExecCtx<'_> {
     }
 }
 
+/// Everything about one matrix that can be computed before the first
+/// query and reused across solves: validated config, nnz-balanced row
+/// partitions, per-device ELL/COO chunk plans (the device-resident,
+/// storage-quantized matrix replicas), device-memory accounting, the
+/// per-device workspaces, and the forked per-device kernel instances.
+///
+/// Produced by [`TopKSolver::prepare`]; consumed (mutably, for workspace
+/// reuse) by [`TopKSolver::solve_prepared`]. Self-contained: the source
+/// [`Csr`] is not needed after preparation — the plans own the quantized
+/// device layout.
+pub struct PreparedState {
+    /// Matrix-level configuration snapshot. `cfg.k` is the *capacity* the
+    /// workspaces and memory accounting were prepared for; queries may use
+    /// any `k ≤ cfg.k`.
+    cfg: SolverConfig,
+    /// Matrix dimension (rows == cols, validated square).
+    n: usize,
+    parts: Vec<RowPartition>,
+    plans: Vec<PartitionPlan>,
+    /// Per-device slice byte counts of `v_i` (ring-swap model).
+    slice_bytes: Vec<usize>,
+    out_of_core: bool,
+    /// Per-device bytes reserved at prepare time (vectors + resident slab).
+    mem_used: Vec<usize>,
+    /// Per-device reusable workspaces (basis slab + work vectors).
+    wss: Vec<SolveWorkspace>,
+    /// Per-device kernel instances, forked once here; empty when the fleet
+    /// is a single device or the backend cannot fork (PJRT).
+    forks: Vec<Box<dyn Kernels>>,
+    /// Wallclock seconds the preparation took.
+    pub prepare_seconds: f64,
+}
+
+impl PreparedState {
+    /// The configuration this matrix was prepared under.
+    pub fn config(&self) -> &SolverConfig {
+        &self.cfg
+    }
+
+    /// Matrix dimension.
+    pub fn rows(&self) -> usize {
+        self.n
+    }
+
+    /// Maximum per-query `k` (the prepared workspace capacity).
+    pub fn k_max(&self) -> usize {
+        self.cfg.k
+    }
+
+    /// True if any partition's plan streams chunks host→device.
+    pub fn out_of_core(&self) -> bool {
+        self.out_of_core
+    }
+
+    /// Total device-resident bytes reserved across the fleet.
+    pub fn device_bytes(&self) -> usize {
+        self.mem_used.iter().sum()
+    }
+}
+
+/// Fully-resolved per-query knobs for [`TopKSolver::solve_prepared`]. The
+/// facade's `QueryParams` lowers to this after filling defaults from the
+/// prepared configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct SolveQuery {
+    /// Krylov dimension for this query (`1 ..= prepared k`).
+    pub k: usize,
+    /// Seed for the random start vector.
+    pub seed: u64,
+    /// Host threading policy for this query.
+    pub exec: ExecPolicy,
+}
+
+impl SolveQuery {
+    /// The defaults a one-shot solve uses: everything from the config.
+    pub fn from_config(cfg: &SolverConfig) -> Self {
+        SolveQuery { k: cfg.k, seed: cfg.seed, exec: cfg.exec }
+    }
+}
+
 impl TopKSolver {
     /// Solver over the pure-rust host-simulation backend.
     pub fn new(cfg: SolverConfig) -> Self {
@@ -449,11 +552,34 @@ impl TopKSolver {
     /// `stats.early_stopped` is set. The per-iteration residual estimate is
     /// only computed when an observer is attached — the un-observed hot
     /// path is unchanged.
+    ///
+    /// One-shot composition of the prepare/solve lifecycle: exactly
+    /// [`TopKSolver::prepare`] followed by one [`TopKSolver::solve_prepared`]
+    /// at the configured defaults, so session solves are bit-identical to
+    /// one-shot solves by construction.
     pub fn solve_observed(
         &mut self,
         m: &Csr,
-        mut observer: Option<&mut dyn IterationObserver>,
+        observer: Option<&mut dyn IterationObserver>,
     ) -> Result<EigenSolution, SolverError> {
+        let mut prep = self.prepare(m)?;
+        let query = SolveQuery::from_config(&prep.cfg);
+        let mut sol = self.solve_prepared(&mut prep, &query, observer)?;
+        // One-shot: the preparation is part of this solve's cost.
+        sol.stats.prepare_seconds = prep.prepare_seconds;
+        sol.stats.wall_seconds += prep.prepare_seconds;
+        Ok(sol)
+    }
+
+    /// Phase 0 of the lifecycle: validate the matrix against the
+    /// configuration, partition it across the fleet by device work, build
+    /// each partition's ELL/COO chunk plan in the storage dtype (the
+    /// device-resident quantized replica of the matrix), account device
+    /// memory, allocate the per-device workspaces, and fork one kernel
+    /// instance per device for the threaded path. Everything here is
+    /// per-*matrix* state: any number of [`TopKSolver::solve_prepared`]
+    /// calls may follow, each with different per-query knobs.
+    pub fn prepare(&mut self, m: &Csr) -> Result<PreparedState, SolverError> {
         let cfg = self.cfg.clone();
         if m.rows != m.cols {
             return Err(SolverError::AsymmetricInput {
@@ -490,17 +616,12 @@ impl TopKSolver {
             });
         }
 
-        let wall_start = Instant::now();
+        let prep_start = Instant::now();
         let n = m.rows;
         let k = cfg.k;
         let g = cfg.devices;
         let storage = cfg.precision.storage;
-        let compute = cfg.precision.compute;
         let sb = storage.bytes();
-        let topology = match cfg.topology {
-            TopologyKind::Dgx1 => Topology::dgx1(g),
-            TopologyKind::NvSwitch => Topology::nvswitch(g),
-        };
 
         // ---- Partition & plan ------------------------------------------------
         // Balance *device work*, not raw nnz: each row costs ~min(deg, W)
@@ -508,25 +629,26 @@ impl TopKSolver {
         let wcap = cfg.max_ell_width;
         let parts: Vec<RowPartition> =
             partition_by_weight(m, g, |deg| deg.min(wcap).max(1));
-        let mut devices: Vec<Device> =
-            (0..g).map(|i| Device::new(i, cfg.device_mem_bytes)).collect();
+        let mut mems: Vec<DeviceMemory> =
+            (0..g).map(|_| DeviceMemory::new(cfg.device_mem_bytes)).collect();
         let mut plans: Vec<PartitionPlan> = Vec::with_capacity(g);
         let mut out_of_core = false;
-        for (p, dev) in parts.iter().zip(devices.iter_mut()) {
+        for (gi, (p, mem)) in parts.iter().zip(mems.iter_mut()).enumerate() {
             let part = m.slice_rows(p.row_start, p.row_end);
-            // Vector working set: replica (n) + basis (K·n_g) + 3 work vectors.
+            // Vector working set: replica (n) + basis (K·n_g) + 3 work
+            // vectors, reserved at the prepared K (the per-query maximum).
             let vec_bytes = n * sb + (k + 3) * p.rows() * sb;
-            dev.mem.alloc(vec_bytes).map_err(|_| SolverError::MemoryBudget {
-                device: dev.id,
+            mem.alloc(vec_bytes).map_err(|_| SolverError::MemoryBudget {
+                device: gi,
                 requested: vec_bytes,
-                capacity: dev.mem.capacity(),
+                capacity: mem.capacity(),
             })?;
             let plan = plan_partition(
                 &part,
                 storage,
                 cfg.ell_quantile,
                 cfg.max_ell_width,
-                &mut dev.mem,
+                mem,
                 cfg.max_chunk_rows,
             );
             out_of_core |= !plan.resident;
@@ -535,21 +657,101 @@ impl TopKSolver {
 
         // Per-device slice byte counts of v_i (for the ring swap model).
         let slice_bytes: Vec<usize> = parts.iter().map(|p| p.rows() * sb).collect();
+        // Per-device workspaces: the only buffers of the hot loop, sized
+        // for the prepared K and reused across session solves.
+        let wss: Vec<SolveWorkspace> =
+            parts.iter().map(|p| SolveWorkspace::new(p.rows(), k)).collect();
+        // Fork one kernel instance per device now, so threaded session
+        // solves reuse the instances (and whatever owned state they carry)
+        // instead of re-forking per query. Empty when the backend cannot
+        // fork (PJRT) — those fleets run sequentially.
+        let forks: Vec<Box<dyn Kernels>> = if g > 1 {
+            (0..g)
+                .map(|_| self.kernels.fork())
+                .collect::<Option<Vec<_>>>()
+                .unwrap_or_default()
+        } else {
+            Vec::new()
+        };
+
+        Ok(PreparedState {
+            cfg,
+            n,
+            parts,
+            plans,
+            slice_bytes,
+            out_of_core,
+            mem_used: mems.iter().map(|m| m.used()).collect(),
+            wss,
+            forks,
+            prepare_seconds: prep_start.elapsed().as_secs_f64(),
+        })
+    }
+
+    /// Run one query against a prepared matrix: the Lanczos iterations,
+    /// the CPU Jacobi phase and the eigenvector projection — no
+    /// validation, partitioning or layout work. Reuses the prepared
+    /// workspaces (reset, not reallocated) and the prepared per-device
+    /// kernel forks, so repeated solves on one [`PreparedState`] perform
+    /// no per-solve slab allocation. Bit-identical to a one-shot
+    /// [`TopKSolver::solve`] at the same effective configuration.
+    pub fn solve_prepared(
+        &mut self,
+        prep: &mut PreparedState,
+        query: &SolveQuery,
+        mut observer: Option<&mut dyn IterationObserver>,
+    ) -> Result<EigenSolution, SolverError> {
+        let cfg = prep.cfg.clone();
+        if query.k < 1 || query.k > cfg.k {
+            return Err(SolverError::InvalidConfig {
+                field: "k",
+                message: format!(
+                    "query K={} must be in 1..={} (the prepared workspace \
+                     capacity; re-prepare with a larger k to raise it)",
+                    query.k, cfg.k
+                ),
+            });
+        }
+        let wall_start = Instant::now();
+        let n = prep.n;
+        let k = query.k;
+        let g = cfg.devices;
+        let storage = cfg.precision.storage;
+        let compute = cfg.precision.compute;
+        let topology = match cfg.topology {
+            TopologyKind::Dgx1 => Topology::dgx1(g),
+            TopologyKind::NvSwitch => Topology::nvswitch(g),
+        };
+        let out_of_core = prep.out_of_core;
+        // Fresh simulated devices per query (clocks and counters start at
+        // zero), carrying the memory reservation made at prepare time.
+        let mut devices: Vec<Device> = prep
+            .mem_used
+            .iter()
+            .enumerate()
+            .map(|(i, &used)| {
+                let mut d = Device::new(i, cfg.device_mem_bytes);
+                d.mem.alloc(used).expect("prepared reservation fits by construction");
+                d
+            })
+            .collect();
+        // Split the prepared state into disjoint borrows for the hot loop.
+        let PreparedState { parts, plans, slice_bytes, wss, forks, .. } = prep;
         // Allreduce latency model: tree reduction over the fleet.
         let sync_latency = topology.latency_s * (g as f64).log2().ceil().max(1.0);
 
         // ---- Lanczos state ---------------------------------------------------
-        let mut rng = Rng::new(cfg.seed);
+        let mut rng = Rng::new(query.seed);
         let mut v1 = vec![0.0f64; n];
         rng.fill_uniform(&mut v1);
         l2_normalize(&mut v1);
         // Storage quantization of the start vector (device residency).
         let mut replica = crate::runtime::quantize_vec(&v1, storage);
 
-        // Per-device workspaces: the only buffers of the hot loop,
-        // allocated once here.
-        let mut wss: Vec<SolveWorkspace> =
-            parts.iter().map(|p| SolveWorkspace::new(p.rows(), k)).collect();
+        // Rewind the prepared workspaces (slabs retained, no allocation).
+        for ws in wss.iter_mut() {
+            ws.reset();
+        }
 
         let mut alpha = Vec::with_capacity(k);
         let mut beta: Vec<f64> = Vec::with_capacity(k);
@@ -563,20 +765,21 @@ impl TopKSolver {
 
         // ---- Execution context ----------------------------------------------
         let backend = self.kernels.backend_name();
-        let want_par = match cfg.exec {
+        self.kernels.begin_solve();
+        for f in forks.iter_mut() {
+            f.begin_solve();
+        }
+        let want_par = match query.exec {
             ExecPolicy::Sequential => false,
             ExecPolicy::Parallel => g > 1,
             ExecPolicy::Auto => g > 1 && n / g >= PAR_MIN_ROWS_PER_DEVICE,
         };
-        let mut ctx = if want_par {
-            // One kernel instance per device, or sequential fallback when
-            // the backend cannot fork (PJRT, custom test kernels).
-            match (0..g).map(|_| self.kernels.fork()).collect::<Option<Vec<_>>>() {
-                Some(ks) => ExecCtx::Par {
-                    kernels: ks,
-                    vec_par: n / g >= PAR_MIN_VEC_ROWS_PER_DEVICE,
-                },
-                None => ExecCtx::Shared(self.kernels.as_mut()),
+        let mut ctx = if want_par && !forks.is_empty() {
+            // One prepared kernel instance per device; sequential fallback
+            // when the backend could not fork (PJRT, custom test kernels).
+            ExecCtx::Par {
+                kernels: forks.as_mut_slice(),
+                vec_par: n / g >= PAR_MIN_VEC_ROWS_PER_DEVICE,
             }
         } else {
             ExecCtx::Shared(self.kernels.as_mut())
@@ -637,7 +840,7 @@ impl TopKSolver {
                 // Normalization: each device writes its own disjoint slice
                 // of the canonical replica.
                 {
-                    let rslices = split_rows_mut(&mut replica, &parts);
+                    let rslices = split_rows_mut(&mut replica, parts.as_slice());
                     let items = wss.iter().zip(devices.iter_mut()).zip(rslices);
                     ctx.fan_out(Phase::Light, items, |((ws, dev), rs), kern| {
                         kern.normalize_into(ws.v_nxt.as_slice(), b, &cfg.precision, rs);
@@ -654,7 +857,12 @@ impl TopKSolver {
                 barrier(&mut devices);
                 phases.sync += phase_mark(&mut devices, &mut clock_cursor);
                 // Ring swap: refresh every device's replica of v_i.
-                ring::charge_swap_with(&mut devices, &topology, &slice_bytes, cfg.swap);
+                ring::charge_swap_with(
+                    &mut devices,
+                    &topology,
+                    slice_bytes.as_slice(),
+                    cfg.swap,
+                );
                 phases.swap += phase_mark(&mut devices, &mut clock_cursor);
             }
 
@@ -918,6 +1126,11 @@ impl TopKSolver {
             peak_device_bytes: devices.iter().map(|d| d.mem.peak()).max().unwrap_or(0),
             backend,
             host_parallel,
+            exec_policy: if host_parallel { "parallel" } else { "sequential" },
+            // A prepared-matrix solve carries no setup cost of its own; the
+            // one-shot wrapper (`solve_observed`) overwrites this with the
+            // preparation it performed.
+            prepare_seconds: 0.0,
             early_stopped: k_eff < k,
         };
 

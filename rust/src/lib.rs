@@ -48,6 +48,45 @@
 //! # }
 //! ```
 //!
+//! ## Serving: prepare once, solve many
+//!
+//! `Solver::solve` fuses two phases: per-*matrix* preparation
+//! (validation, nnz-balanced partitioning, ELL/COO layout, storage-dtype
+//! replica construction, workspace allocation) and the per-*query*
+//! Lanczos solve. A service answering many Top-K queries against one
+//! graph should pay the first phase once:
+//!
+//! ```no_run
+//! use topk_eigen::{PrecisionConfig, QueryParams, Solver};
+//! # fn main() -> Result<(), topk_eigen::SolverError> {
+//! # let matrix = topk_eigen::sparse::suite::find("WB-GO").unwrap().generate_csr(1.0, 42);
+//! let mut solver = Solver::builder()
+//!     .k(16)                             // per-query maximum
+//!     .precision(PrecisionConfig::FDF)
+//!     .devices(4)
+//!     .build()?;
+//! let mut prepared = solver.prepare(&matrix)?;   // partition + layout, once
+//! let mut session = solver.session(&mut prepared);
+//! let a = session.solve(&QueryParams::new().seed(1))?;
+//! let b = session.solve(&QueryParams::new().seed(2).k(8))?;
+//! println!(
+//!     "prepared in {:.3}s, then {} solves",
+//!     session.prepare_seconds(),
+//!     session.solves()
+//! );
+//! # let _ = (a, b);
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! Per-query knobs ([`QueryParams`]): `k` (up to the prepared capacity),
+//! start-vector `seed`, `tolerance`, and host `exec` policy. Session
+//! solves are **bit-identical** to one-shot solves at the same effective
+//! configuration — the one-shot path is literally prepare-then-solve —
+//! and reuse every prepared allocation (basis slabs, work vectors,
+//! per-device kernel forks). The CLI exposes the same lifecycle as
+//! `topk-eigen solve --queries N`.
+//!
 //! ## System shape
 //!
 //! The solver is two-phase:
@@ -70,6 +109,8 @@
 //!
 //! * [`api::Solver`] — the facade; holds a boxed [`api::EigenBackend`].
 //! * [`api::Eigensolve`] — the solve trait (`solve`, `solve_observed`).
+//! * [`api::PreparedMatrix`] / [`api::SolveSession`] / [`api::QueryParams`]
+//!   — the prepare/solve lifecycle for amortized multi-query serving.
 //! * [`api::Backend`] — substrate selection: `HostSim`, `Pjrt`,
 //!   `CpuBaseline`.
 //! * [`api::SolverError`] — typed errors on every public path (no
@@ -91,6 +132,16 @@
 //! | `TopKSolver::with_kernels(cfg, k)`           | `.custom_kernels(k).build()?`                         |
 //! | `solve_topk_cpu(&m, k, &BaselineConfig…)`    | `.backend(Backend::CpuBaseline).build()?`             |
 //! | `anyhow::Result<EigenSolution>`              | `Result<EigenSolution, SolverError>`                  |
+//!
+//! 0.3 adds the prepare/solve lifecycle; one-shot `solve` stays supported
+//! as the fused wrapper, but repeated solves on one matrix should migrate:
+//!
+//! | one-shot (0.2)                                | session (0.3+)                                          |
+//! |-----------------------------------------------|---------------------------------------------------------|
+//! | `solver.solve(&m)?` per query                 | `solver.prepare(&m)?` once + `session.solve(&q)?` per query |
+//! | `solver.solve_observed(&m, &mut obs)?`        | `session.solve_observed(&q, &mut obs)?`                 |
+//! | rebuild `Solver` to change `k`/seed/tolerance | `QueryParams::new().k(8).seed(7).tolerance(1e-9)`       |
+//! | `stats.wall_seconds` (setup + solve fused)    | `prepared.prepare_seconds()` + per-solve `wall_seconds` |
 //!
 //! The low-level types (`SolverConfig`, `TopKSolver`, `BaselineConfig`)
 //! remain public under [`coordinator`] / [`baseline`] for harnesses that
@@ -117,7 +168,8 @@ pub mod sparse;
 // ---- The 0.2 public surface -------------------------------------------------
 pub use api::{
     Backend, CollectObserver, Eigensolve, FnObserver, IterationEvent, IterationObserver,
-    ObserverControl, SolveReport, Solver, SolverBuilder, SolverError, ToleranceStop,
+    ObserverControl, PreparedMatrix, QueryParams, SolveReport, SolveSession, Solver,
+    SolverBuilder, SolverError, ToleranceStop,
 };
 pub use coordinator::{
     EigenSolution, ExecPolicy, PhaseBreakdown, ReorthMode, SolveStats, TopologyKind,

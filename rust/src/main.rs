@@ -7,16 +7,19 @@
 //!                   [--backend hostsim|pjrt|cpu] [--artifacts artifacts]
 //!                   [--tolerance 1e-9 [--require-convergence]]
 //!                   [--device-mem-mb 32] [--seed N] [--baseline]
-//!                   [--report out.json]
+//!                   [--queries N] [--report out.json]
 //! topk-eigen generate --suite KRON --scale 1.0 --out kron.mtx
-//! topk-eigen suite                       # list Table I stand-ins
+//! topk-eigen matrices                    # list built-in matrix ids
+//! topk-eigen suite                       # Table I stand-ins (paper sizes)
 //! topk-eigen info   [--artifacts artifacts]
 //! ```
 //!
 //! Every solve path — including the ARPACK-class CPU baseline — goes
 //! through the `Solver::builder()` facade; `--backend` switches the
-//! substrate uniformly. Unknown flags and malformed values produce a usage
-//! error with exit code 2.
+//! substrate uniformly. `--queries N` exercises the prepare/solve session
+//! lifecycle: the matrix is prepared once and N queries run against it,
+//! reporting the amortized per-query cost. Unknown flags and malformed
+//! values produce a usage error with exit code 2.
 
 use std::path::{Path, PathBuf};
 use topk_eigen::cli::{self, UsageError};
@@ -24,7 +27,9 @@ use topk_eigen::coordinator::{ExecPolicy, ReorthMode, TopologyKind};
 use topk_eigen::metrics;
 use topk_eigen::runtime::Manifest;
 use topk_eigen::sparse::{mmio, suite, Csr};
-use topk_eigen::{Backend, Eigensolve, PrecisionConfig, SolveReport, Solver, SolverError};
+use topk_eigen::{
+    Backend, Eigensolve, PrecisionConfig, QueryParams, SolveReport, Solver, SolverError,
+};
 
 /// Failure modes of a CLI command, mapped to exit codes in `main`.
 enum CliError {
@@ -60,6 +65,7 @@ fn main() {
         "solve" => cmd_solve(&args),
         "generate" => cmd_generate(&args),
         "suite" => cmd_suite(&args),
+        "matrices" => cmd_matrices(&args),
         "info" => cmd_info(&args),
         "help" | "--help" | "-h" => {
             print_usage();
@@ -89,7 +95,8 @@ fn print_usage() {
          USAGE:\n\
          \x20 topk-eigen solve    --suite <ID> | --matrix <file.mtx> [options]\n\
          \x20 topk-eigen generate --suite <ID> --out <file.mtx> [--scale S]\n\
-         \x20 topk-eigen suite\n\
+         \x20 topk-eigen matrices                    list built-in matrix ids\n\
+         \x20 topk-eigen suite                       Table I stand-ins (paper sizes)\n\
          \x20 topk-eigen info     [--artifacts <dir>]\n\
          \n\
          SOLVE OPTIONS:\n\
@@ -111,8 +118,23 @@ fn print_usage() {
          \x20                     are bit-identical across policies)\n\
          \x20 --seed <n>          RNG seed (default fixed)\n\
          \x20 --baseline          also run the ARPACK-class CPU baseline\n\
+         \x20 --queries <n>       prepare once, then answer n queries on the\n\
+         \x20                     prepared matrix (seeds vary per query);\n\
+         \x20                     reports prepare vs per-solve time\n\
          \x20 --report <f.json>   write a machine-readable solve report\n"
     );
+}
+
+/// Unknown-matrix usage error with a closest-id suggestion when one is
+/// plausible.
+fn unknown_suite_error(id: &str) -> CliError {
+    let hint = match suite::suggest(id) {
+        Some(e) => format!(" — did you mean '{}' ({})?", e.id, e.name),
+        None => String::new(),
+    };
+    CliError::Usage(format!(
+        "unknown matrix id '{id}'{hint} (run `topk-eigen matrices` for the list)"
+    ))
 }
 
 fn load_matrix(args: &cli::Args) -> Result<(String, Csr), CliError> {
@@ -125,9 +147,7 @@ fn load_matrix(args: &cli::Args) -> Result<(String, Csr), CliError> {
         coo.normalize_by_max_degree();
         Ok((path.to_string(), Csr::from_coo(&coo)))
     } else if let Some(id) = args.get("suite") {
-        let e = suite::find(id).ok_or_else(|| {
-            CliError::Usage(format!("unknown suite id '{id}' (see `topk-eigen suite`)"))
-        })?;
+        let e = suite::find(id).ok_or_else(|| unknown_suite_error(id))?;
         Ok((e.id.to_string(), e.generate_csr(scale, seed)))
     } else {
         Err(CliError::Usage("need --matrix <file.mtx> or --suite <ID>".into()))
@@ -151,6 +171,7 @@ const SOLVE_FLAGS: &[&str] = &[
     "topology",
     "exec",
     "baseline",
+    "queries",
     "report",
 ];
 
@@ -207,6 +228,24 @@ fn cmd_solve(args: &cli::Args) -> Result<i32, CliError> {
         builder = builder.tolerance(tol);
     }
     let mut solver = builder.build()?;
+
+    let queries: usize = args.try_get_or("queries", 1usize)?;
+    if queries == 0 {
+        return Err(CliError::Usage("--queries must be ≥ 1".into()));
+    }
+    if queries > 1 {
+        if args.has("baseline") {
+            return Err(CliError::Usage(
+                "--baseline is not supported with --queries; run a separate \
+                 `solve --backend cpu` for the comparison"
+                    .into(),
+            ));
+        }
+        return cmd_solve_batch(
+            args, &name, &m, &mut solver, queries, k, seed, tolerance, precision, devices,
+        );
+    }
+
     let sol = solver.solve(&m)?;
 
     println!("\nTop-{} eigenvalues:", sol.eigenvalues.len());
@@ -272,13 +311,75 @@ fn cmd_solve(args: &cli::Args) -> Result<i32, CliError> {
     Ok(0)
 }
 
+/// `solve --queries N`: the serving lifecycle — prepare the matrix once,
+/// then answer N queries on the prepared state (seeds vary per query so
+/// the batch models distinct requests), reporting prepare vs per-solve
+/// time and the amortization win over N one-shot solves.
+#[allow(clippy::too_many_arguments)]
+fn cmd_solve_batch(
+    args: &cli::Args,
+    name: &str,
+    m: &Csr,
+    solver: &mut Solver,
+    queries: usize,
+    k: usize,
+    seed: u64,
+    tolerance: Option<f64>,
+    precision: PrecisionConfig,
+    devices: usize,
+) -> Result<i32, CliError> {
+    let prep_wall = std::time::Instant::now();
+    let mut prepared = solver.prepare(m)?;
+    let prepare_s = prep_wall.elapsed().as_secs_f64();
+    println!(
+        "prepared {name} in {prepare_s:.4}s ({} device bytes, ooc={})",
+        prepared.device_bytes(),
+        prepared.out_of_core()
+    );
+
+    let mut session = solver.session(&mut prepared);
+    let mut solve_s_total = 0.0f64;
+    let mut last = None;
+    for qi in 0..queries {
+        let q = QueryParams::new().seed(seed.wrapping_add(qi as u64));
+        let t = std::time::Instant::now();
+        let sol = session.solve(&q)?;
+        let dt = t.elapsed().as_secs_f64();
+        solve_s_total += dt;
+        println!(
+            "query {qi}: λ₀ = {:+.9e}  iters={}  solve={dt:.4}s",
+            sol.eigenvalues[0], sol.stats.iterations
+        );
+        last = Some(sol);
+    }
+    let per_solve = solve_s_total / queries as f64;
+    println!(
+        "\nbatch: {queries} queries | prepare {prepare_s:.4}s (once) | \
+         avg solve {per_solve:.4}s | amortized {:.4}s/query vs {:.4}s/query one-shot",
+        prepare_s / queries as f64 + per_solve,
+        prepare_s + per_solve,
+    );
+
+    if let Some(path) = args.get("report") {
+        let sol = last.expect("queries >= 1");
+        let mut report = SolveReport::new(name, k, &sol).with_residuals(m, &sol);
+        // Echo the resolved request exactly like the one-shot path does.
+        report.precision = Some(precision.name());
+        report.devices = Some(devices);
+        report.tolerance = tolerance;
+        // The batch's amortizable setup cost (per-solve reports carry 0).
+        report.prepare_seconds = prepare_s;
+        report.write_json(Path::new(path))?;
+        println!("report written to {path}");
+    }
+    Ok(0)
+}
+
 fn cmd_generate(args: &cli::Args) -> Result<i32, CliError> {
     args.reject_unknown(&["suite", "out", "scale", "seed"])?;
     let id: String = args.try_require("suite")?;
     let out: String = args.try_require("out")?;
-    let e = suite::find(&id).ok_or_else(|| {
-        CliError::Usage(format!("unknown suite id '{id}' (see `topk-eigen suite`)"))
-    })?;
+    let e = suite::find(&id).ok_or_else(|| unknown_suite_error(&id))?;
     let coo = e.generate(args.try_get_or("scale", 1.0)?, args.try_get_or("seed", 42u64)?);
     println!("generated {}: {} rows, {} nnz", e.id, coo.rows, coo.nnz());
     mmio::write_matrix_market(Path::new(&out), &coo)
@@ -305,6 +406,16 @@ fn cmd_suite(args: &cli::Args) -> Result<i32, CliError> {
             if e.out_of_core { "yes" } else { "no" }
         );
     }
+    Ok(0)
+}
+
+fn cmd_matrices(args: &cli::Args) -> Result<i32, CliError> {
+    args.reject_unknown(&[])?;
+    println!("built-in matrix suite (use with --suite <ID>):\n");
+    for e in &suite::SUITE {
+        println!("{:<6} {}", e.id, e.description());
+    }
+    println!("\nscale with --scale S (1.0 ≈ CI-friendly thousands of rows).");
     Ok(0)
 }
 

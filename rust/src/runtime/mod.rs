@@ -75,6 +75,18 @@ pub trait Kernels: Send {
     /// `begin_cycle` calls.
     fn begin_cycle(&mut self) {}
 
+    /// Hint: a new solve begins on a prepared matrix. The coordinator
+    /// calls this once per `solve_prepared` before the first iteration —
+    /// kernel instances live as long as the prepared matrix (forked once
+    /// at prepare time), so any state keyed on *per-solve* data (e.g. a
+    /// replica buffer whose address may be recycled by the allocator
+    /// across solves) must be invalidated here. Owned scratch buffers
+    /// should be *kept*: reusing their allocations across session solves
+    /// is the point of the prepared lifecycle.
+    fn begin_solve(&mut self) {
+        self.begin_cycle();
+    }
+
     /// Produce an independent kernel instance for one device of a parallel
     /// fleet, or `None` if this backend must run single-threaded (the
     /// coordinator then falls back to the sequential loop). Forked
@@ -221,13 +233,18 @@ type ReplicaKey = (usize, usize, Storage);
 pub struct HostKernels {
     /// Kernel invocation counter (parity with the PJRT backend's metrics).
     pub calls: usize,
-    /// Quantized replica cached for the current Lanczos cycle — SpMV is
-    /// called once per chunk and quantizing the full replica per chunk is
+    /// Identity of the replica currently held in `xq_buf` — SpMV is called
+    /// once per chunk and quantizing the full replica per chunk is
     /// O(n·chunks) (the dominant host cost on finely-chunked out-of-core
-    /// plans). Keyed by [`ReplicaKey`]; cleared by
-    /// [`Kernels::begin_cycle`]. Only populated for f32 storage — f64
+    /// plans). Invalidated by [`Kernels::begin_cycle`] /
+    /// [`Kernels::begin_solve`]. Only tracked for f32 storage — f64
     /// storage gathers straight from the caller's buffer.
-    xq_cache: Option<(ReplicaKey, Vec<f64>)>,
+    xq_key: Option<ReplicaKey>,
+    /// Owned quantized-replica buffer. Prepared state, not a per-call
+    /// cache: the allocation survives cycle and solve boundaries (only the
+    /// key is invalidated), so session solves on a prepared matrix
+    /// re-quantize in place instead of reallocating every iteration.
+    xq_buf: Vec<f64>,
 }
 
 impl HostKernels {
@@ -235,23 +252,22 @@ impl HostKernels {
         HostKernels::default()
     }
 
-    /// The f32-storage replica for `x`, quantizing on key mismatch.
+    /// The f32-storage replica for `x`, re-quantizing into the owned
+    /// buffer on key mismatch.
     fn quantized_replica(&mut self, x: &[f64]) -> &[f64] {
         let key: ReplicaKey = (x.as_ptr() as usize, x.len(), Storage::F32);
-        let stale = match &self.xq_cache {
-            Some((k, _)) => *k != key,
-            None => true,
-        };
-        if stale {
-            self.xq_cache = Some((key, quantize_vec(x, Storage::F32)));
+        if self.xq_key != Some(key) {
+            self.xq_buf.clear();
+            self.xq_buf.extend(x.iter().map(|&v| v as f32 as f64));
+            self.xq_key = Some(key);
         }
-        &self.xq_cache.as_ref().unwrap().1
+        &self.xq_buf
     }
 }
 
 impl Kernels for HostKernels {
     fn begin_cycle(&mut self) {
-        self.xq_cache = None;
+        self.xq_key = None;
     }
 
     fn fork(&mut self) -> Option<Box<dyn Kernels>> {

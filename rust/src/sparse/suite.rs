@@ -67,6 +67,46 @@ pub fn find(id: &str) -> Option<&'static SuiteEntry> {
     SUITE.iter().find(|e| e.id.eq_ignore_ascii_case(id))
 }
 
+/// The suite entry whose ID (or SuiteSparse name) is closest to `query`
+/// in case-insensitive edit distance — used to turn "unknown matrix"
+/// errors into "did you mean …?" suggestions. Returns `None` when nothing
+/// is remotely close (distance > half the query length, minimum 2), so
+/// garbage input doesn't get a misleading suggestion.
+pub fn suggest(query: &str) -> Option<&'static SuiteEntry> {
+    let q = query.to_ascii_lowercase();
+    let budget = (q.len() / 2).max(2);
+    SUITE
+        .iter()
+        .map(|e| {
+            let d_id = levenshtein(&q, &e.id.to_ascii_lowercase());
+            let d_name = levenshtein(&q, &e.name.to_ascii_lowercase());
+            (d_id.min(d_name), e)
+        })
+        .filter(|(d, _)| *d <= budget)
+        .min_by_key(|(d, _)| *d)
+        .map(|(_, e)| e)
+}
+
+/// Classic dynamic-programming Levenshtein distance (two-row variant).
+fn levenshtein(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    if a.is_empty() {
+        return b.len();
+    }
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
 impl SuiteEntry {
     /// Target row count at a given scale. `scale = 1.0` maps the paper's
     /// millions of rows to thousands (1e-3 linear factor) so the full suite
@@ -116,6 +156,25 @@ impl SuiteEntry {
     pub fn generate_csr(&self, scale: f64, seed: u64) -> Csr {
         Csr::from_coo(&self.generate(scale, seed))
     }
+
+    /// One-line human description for `topk-eigen matrices`.
+    pub fn description(&self) -> String {
+        let class = match self.class {
+            MatrixClass::PowerLaw => "social/communication power-law graph",
+            MatrixClass::Web => "web crawl (power-law with locality)",
+            MatrixClass::Road => "road/mesh network (bounded degree, huge diameter)",
+            MatrixClass::Citation => "citation graph (moderate degree skew)",
+            MatrixClass::Kron => "R-MAT Kronecker graph (GAP benchmark)",
+            MatrixClass::Urand => "uniform random graph (GAP benchmark)",
+        };
+        format!(
+            "{} stand-in: {class}; paper size {:.2}M rows / {:.2}M nnz{}",
+            self.name,
+            self.paper_rows_m,
+            self.paper_nnz_m,
+            if self.out_of_core { " (out-of-core in the paper)" } else { "" }
+        )
+    }
 }
 
 #[cfg(test)]
@@ -134,6 +193,33 @@ mod tests {
         assert_eq!(find("kron").unwrap().id, "KRON");
         assert_eq!(find("wb-ta").unwrap().id, "WB-TA");
         assert!(find("nope").is_none());
+    }
+
+    #[test]
+    fn suggest_finds_near_misses() {
+        // Typos within the edit budget resolve to the intended entry.
+        assert_eq!(suggest("KRN").unwrap().id, "KRON");
+        assert_eq!(suggest("wb-g").unwrap().id, "WB-GO");
+        assert_eq!(suggest("wikipedia").unwrap().id, "WK");
+        assert_eq!(suggest("URAND").unwrap().id, "URAND");
+        // Garbage gets no misleading suggestion.
+        assert!(suggest("zzzzzzzzzzzzzzzz").is_none());
+    }
+
+    #[test]
+    fn levenshtein_basics() {
+        assert_eq!(levenshtein("", "abc"), 3);
+        assert_eq!(levenshtein("abc", "abc"), 0);
+        assert_eq!(levenshtein("kitten", "sitting"), 3);
+        assert_eq!(levenshtein("kron", "krn"), 1);
+    }
+
+    #[test]
+    fn descriptions_are_nonempty_and_name_the_source() {
+        for e in &SUITE {
+            let d = e.description();
+            assert!(d.contains(e.name), "{d}");
+        }
     }
 
     #[test]

@@ -1,0 +1,260 @@
+//! Session-lifecycle regression tests: solves through a prepared
+//! matrix + `SolveSession` must be **bit-identical** to one-shot
+//! `Solver::solve` at the same effective configuration — across all three
+//! precision presets, single- and multi-device fleets, and the
+//! out-of-core path — and repeated solves on one session must not be
+//! contaminated by workspace reuse.
+
+use topk_eigen::coordinator::{SolveQuery, TopKSolver};
+use topk_eigen::sparse::{gen, Csr};
+use topk_eigen::{
+    Backend, EigenSolution, Eigensolve, ExecPolicy, PrecisionConfig, QueryParams, Solver,
+    SolverError,
+};
+
+fn test_matrix(n: usize, seed: u64) -> Csr {
+    let mut rng = topk_eigen::rng::Rng::new(seed);
+    Csr::from_coo(&gen::erdos_renyi(n, n, 0.02, true, &mut rng))
+}
+
+fn builder(p: PrecisionConfig, g: usize) -> topk_eigen::SolverBuilder {
+    Solver::builder().k(8).precision(p).devices(g)
+}
+
+/// Exact comparison: eigenvalues, eigenvectors, α, β — to the bit.
+fn assert_bit_identical(a: &EigenSolution, b: &EigenSolution, ctx: &str) {
+    assert_eq!(a.eigenvalues.len(), b.eigenvalues.len(), "{ctx}: pair count");
+    for (i, (x, y)) in a.eigenvalues.iter().zip(&b.eigenvalues).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: λ[{i}] {x} vs {y}");
+    }
+    for (i, (va, vb)) in a.eigenvectors.iter().zip(&b.eigenvectors).enumerate() {
+        for (j, (x, y)) in va.iter().zip(vb).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: v[{i}][{j}]");
+        }
+    }
+    for (x, y) in a.alpha.iter().zip(&b.alpha) {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: alpha");
+    }
+    for (x, y) in a.beta.iter().zip(&b.beta) {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: beta");
+    }
+}
+
+#[test]
+fn session_matches_one_shot_across_precisions_and_fleets() -> Result<(), SolverError> {
+    let m = test_matrix(500, 11);
+    for p in [PrecisionConfig::FFF, PrecisionConfig::FDF, PrecisionConfig::DDD] {
+        for g in [1usize, 4] {
+            let ctx = format!("{} g={g}", p.name());
+            let one_shot = builder(p, g).build()?.solve(&m)?;
+            let mut solver = builder(p, g).build()?;
+            let mut prepared = solver.prepare(&m)?;
+            let via_session =
+                solver.session(&mut prepared).solve(&QueryParams::new())?;
+            assert_bit_identical(&one_shot, &via_session, &ctx);
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn session_matches_one_shot_out_of_core() -> Result<(), SolverError> {
+    let m = test_matrix(600, 13);
+    // Starve device memory so the plan streams (mirrors the coordinator's
+    // own out-of-core test sizing).
+    let sb = 8;
+    let mem = 600 * sb + (8 + 3) * 600 * sb + (16 << 10);
+    let mk = || {
+        Solver::builder()
+            .k(8)
+            .precision(PrecisionConfig::DDD)
+            .device_mem_bytes(mem)
+            .build()
+    };
+    let one_shot = mk()?.solve(&m)?;
+    assert!(one_shot.stats.out_of_core, "config must exercise the OOC path");
+    let mut solver = mk()?;
+    let mut prepared = solver.prepare(&m)?;
+    assert!(prepared.out_of_core());
+    let via_session = solver.session(&mut prepared).solve(&QueryParams::new())?;
+    assert!(via_session.stats.out_of_core);
+    assert_eq!(one_shot.stats.h2d_bytes, via_session.stats.h2d_bytes);
+    assert_bit_identical(&one_shot, &via_session, "ooc");
+    Ok(())
+}
+
+#[test]
+fn two_session_solves_match_two_fresh_solves() -> Result<(), SolverError> {
+    // Workspace reuse must not leak state between solves: the second
+    // session solve (same query) must equal a fresh one-shot, and a
+    // different-seed solve in between must not perturb it.
+    let m = test_matrix(400, 17);
+    let mut solver = builder(PrecisionConfig::FDF, 2).build()?;
+    let mut prepared = solver.prepare(&m)?;
+    let mut session = solver.session(&mut prepared);
+    let s1 = session.solve(&QueryParams::new())?;
+    let s_other = session.solve(&QueryParams::new().seed(999))?;
+    let s2 = session.solve(&QueryParams::new())?;
+    assert_eq!(session.solves(), 3);
+    drop(session);
+    assert_bit_identical(&s1, &s2, "session solve 1 vs 3 (same query)");
+    let fresh1 = builder(PrecisionConfig::FDF, 2).build()?.solve(&m)?;
+    let fresh2 = builder(PrecisionConfig::FDF, 2).build()?.solve(&m)?;
+    assert_bit_identical(&fresh1, &fresh2, "fresh vs fresh");
+    assert_bit_identical(&s1, &fresh1, "session vs fresh");
+    // The interleaved query genuinely differed: α₀ = v₁ᵀMv₁ depends
+    // directly on the random start vector.
+    assert_ne!(
+        s_other.alpha[0].to_bits(),
+        s1.alpha[0].to_bits(),
+        "different seeds must produce different solves"
+    );
+    Ok(())
+}
+
+#[test]
+fn query_seed_matches_one_shot_with_that_seed() -> Result<(), SolverError> {
+    let m = test_matrix(300, 19);
+    let one_shot = builder(PrecisionConfig::DDD, 2).seed(4242).build()?.solve(&m)?;
+    let mut solver = builder(PrecisionConfig::DDD, 2).build()?;
+    let mut prepared = solver.prepare(&m)?;
+    let via_session =
+        solver.session(&mut prepared).solve(&QueryParams::new().seed(4242))?;
+    assert_bit_identical(&one_shot, &via_session, "seed override");
+    Ok(())
+}
+
+#[test]
+fn query_k_within_capacity_matches_one_shot_and_beyond_fails() -> Result<(), SolverError> {
+    let m = test_matrix(300, 23);
+    // Prepared at k=8; a k=5 query must equal a one-shot k=5 solve.
+    let one_shot5 = Solver::builder().k(5).precision(PrecisionConfig::DDD).build()?.solve(&m)?;
+    let mut solver = builder(PrecisionConfig::DDD, 1).build()?;
+    let mut prepared = solver.prepare(&m)?;
+    assert_eq!(prepared.k_max(), 8);
+    let mut session = solver.session(&mut prepared);
+    let via_session = session.solve(&QueryParams::new().k(5))?;
+    assert_bit_identical(&one_shot5, &via_session, "k=5 on k_max=8 session");
+    // Beyond the prepared capacity: typed error, session stays usable.
+    let err = session.solve(&QueryParams::new().k(9)).unwrap_err();
+    assert!(
+        matches!(err, SolverError::InvalidConfig { field: "k", .. }),
+        "{err:?}"
+    );
+    let again = session.solve(&QueryParams::new())?;
+    assert_eq!(again.eigenvalues.len(), 8);
+    Ok(())
+}
+
+#[test]
+fn exec_policy_override_is_bit_identical_and_reported() -> Result<(), SolverError> {
+    let m = test_matrix(500, 29);
+    let mut solver = builder(PrecisionConfig::FDF, 4).build()?;
+    let mut prepared = solver.prepare(&m)?;
+    let mut session = solver.session(&mut prepared);
+    let seq = session.solve(&QueryParams::new().exec(ExecPolicy::Sequential))?;
+    let par = session.solve(&QueryParams::new().exec(ExecPolicy::Parallel))?;
+    assert!(!seq.stats.host_parallel);
+    assert_eq!(seq.stats.exec_policy, "sequential");
+    assert!(par.stats.host_parallel, "hostsim forks: parallel must engage");
+    assert_eq!(par.stats.exec_policy, "parallel");
+    assert_bit_identical(&seq, &par, "seq vs par on one session");
+    // Session solves carry no per-solve prepare cost; the prepared matrix
+    // owns the amortized one.
+    assert_eq!(seq.stats.prepare_seconds, 0.0);
+    assert!(prepared_cost_is_positive(&session));
+    Ok(())
+}
+
+fn prepared_cost_is_positive(session: &topk_eigen::SolveSession<'_, '_, '_>) -> bool {
+    session.prepare_seconds() >= 0.0
+}
+
+#[test]
+fn session_tolerance_matches_builder_tolerance() -> Result<(), SolverError> {
+    let m = test_matrix(400, 31);
+    let one_shot = Solver::builder()
+        .k(24)
+        .precision(PrecisionConfig::DDD)
+        .tolerance(1e-8)
+        .build()?
+        .solve(&m)?;
+    let mut solver = Solver::builder().k(24).precision(PrecisionConfig::DDD).build()?;
+    let mut prepared = solver.prepare(&m)?;
+    let via_session = solver
+        .session(&mut prepared)
+        .solve(&QueryParams::new().tolerance(1e-8))?;
+    assert_eq!(one_shot.stats.early_stopped, via_session.stats.early_stopped);
+    assert_eq!(one_shot.stats.iterations, via_session.stats.iterations);
+    assert_bit_identical(&one_shot, &via_session, "per-query tolerance");
+    Ok(())
+}
+
+#[test]
+fn cpu_baseline_session_matches_one_shot() -> Result<(), SolverError> {
+    let m = test_matrix(300, 37);
+    let mk = || Solver::builder().k(4).backend(Backend::CpuBaseline).build();
+    let one_shot = mk()?.solve(&m)?;
+    let mut solver = mk()?;
+    let mut prepared = solver.prepare(&m)?;
+    assert_eq!(prepared.backend_name(), "cpu");
+    assert!(!prepared.out_of_core());
+    let mut session = solver.session(&mut prepared);
+    let via_session = session.solve(&QueryParams::new())?;
+    assert_bit_identical(&one_shot, &via_session, "cpu baseline");
+    assert_eq!(via_session.stats.exec_policy, "n/a");
+    // Same capacity contract as the GPU path: k beyond the prepared k_max
+    // is a typed error, not a silent bigger solve.
+    let err = session.solve(&QueryParams::new().k(9)).unwrap_err();
+    assert!(
+        matches!(err, SolverError::InvalidConfig { field: "k", .. }),
+        "{err:?}"
+    );
+    Ok(())
+}
+
+#[test]
+fn mismatched_prepared_backend_fails_typed() -> Result<(), SolverError> {
+    let m = test_matrix(200, 41);
+    let mut gpu = builder(PrecisionConfig::DDD, 1).build()?;
+    let mut prepared = gpu.prepare(&m)?;
+    let mut cpu = Solver::builder().k(4).backend(Backend::CpuBaseline).build()?;
+    let err = cpu.session(&mut prepared).solve(&QueryParams::new()).unwrap_err();
+    assert!(
+        matches!(err, SolverError::InvalidConfig { field: "session", .. }),
+        "{err:?}"
+    );
+    Ok(())
+}
+
+#[test]
+fn low_level_prepare_solve_lifecycle_is_reusable() -> Result<(), SolverError> {
+    // The coordinator-level API (what the facade lowers to) supports the
+    // same lifecycle for harnesses that bypass the facade.
+    let m = test_matrix(300, 43);
+    let cfg = topk_eigen::coordinator::SolverConfig {
+        k: 6,
+        devices: 2,
+        ..Default::default()
+    };
+    let mut solver = TopKSolver::new(cfg);
+    let mut prep = solver.prepare(&m)?;
+    assert_eq!(prep.k_max(), 6);
+    assert_eq!(prep.rows(), 300);
+    let q = SolveQuery::from_config(prep.config());
+    let a = solver.solve_prepared(&mut prep, &q, None)?;
+    let b = solver.solve_prepared(&mut prep, &q, None)?;
+    assert_bit_identical(&a, &b, "low-level repeated solves");
+    let one_shot = TopKSolver::new(topk_eigen::coordinator::SolverConfig {
+        k: 6,
+        devices: 2,
+        ..Default::default()
+    })
+    .solve(&m)?;
+    assert_bit_identical(&a, &one_shot, "low-level vs one-shot");
+    // One-shot carries its prepare cost; prepared solves don't.
+    assert!(one_shot.stats.prepare_seconds > 0.0);
+    assert_eq!(a.stats.prepare_seconds, 0.0);
+    assert_eq!(one_shot.stats.peak_device_bytes, a.stats.peak_device_bytes);
+    Ok(())
+}
