@@ -46,6 +46,10 @@
 //!   (`k`, seed, tolerance, exec policy). Session solves are
 //!   bit-identical to one-shot solves — the one-shot path *is*
 //!   prepare-then-solve.
+//! * [`SolveSession::solve_batch`] answers B queries **concurrently**:
+//!   one blocked Lanczos loop streams the device-resident matrix (and any
+//!   out-of-core h2d transfer) once per iteration for the whole batch,
+//!   with every lane bit-identical to its solo solve.
 //! * [`Eigensolve`] is the solve trait every facade instance implements;
 //!   [`EigenBackend`] is the lower-level executor trait (now a
 //!   prepare/solve pair) the coordinator and the baseline plug into.
@@ -70,7 +74,7 @@ pub use observer::{
 };
 pub use prepare::PreparedMatrix;
 pub use report::SolveReport;
-pub use session::{QueryParams, SolveSession};
+pub use session::{QueryParams, SolveOutcome, SolveSession};
 
 use crate::baseline::{self, BaselineConfig};
 use crate::coordinator::{EigenSolution, SolveQuery, SolveStats, TopKSolver};
@@ -171,6 +175,23 @@ pub trait EigenBackend: Send {
         observer: Option<&mut dyn IterationObserver>,
     ) -> Result<EigenSolution, SolverError>;
 
+    /// Answer a batch of queries *concurrently* against one prepared
+    /// matrix, streaming the device-resident matrix (and any out-of-core
+    /// h2d transfer) once per iteration for the whole block. `observers`
+    /// carries one optional per-query iteration observer (early stopping).
+    ///
+    /// Returns `Ok(None)` when the backend has no native batched path —
+    /// the facade then falls back to solving the queries sequentially,
+    /// which produces the same results without the streaming amortization.
+    fn solve_batch_prepared(
+        &mut self,
+        _prep: &mut PreparedMatrix<'_>,
+        _queries: &[QueryParams],
+        _observers: &mut [Option<&mut dyn IterationObserver>],
+    ) -> Result<Option<Vec<EigenSolution>>, SolverError> {
+        Ok(None)
+    }
+
     /// Run one one-shot solve: prepare, then solve at the prepared
     /// defaults. The preparation cost is folded into the returned
     /// `stats.wall_seconds` and reported in `stats.prepare_seconds`.
@@ -270,6 +291,67 @@ impl Solver {
             user,
             |obs| backend.solve_prepared(prep, &q, obs),
         )
+    }
+
+    /// Batched session path: answer `queries` concurrently against a
+    /// prepared matrix. Tolerance semantics per lane match the solo
+    /// [`Solver::run_prepared`]: each lane with a (query- or
+    /// builder-level) tolerance gets its own early-stop observer; with
+    /// `require_convergence`, the first unconverged lane fails the batch.
+    /// Backends without a native batched path fall back to sequential
+    /// per-query solves — same results, no streaming amortization.
+    pub(crate) fn run_prepared_batch(
+        &mut self,
+        prep: &mut PreparedMatrix<'_>,
+        queries: &[QueryParams],
+    ) -> Result<Vec<EigenSolution>, SolverError> {
+        if queries.is_empty() {
+            return Err(SolverError::InvalidConfig {
+                field: "batch",
+                message: "solve_batch needs at least one query".into(),
+            });
+        }
+        for q in queries {
+            q.validate()?;
+        }
+        let tols: Vec<Option<f64>> =
+            queries.iter().map(|q| q.tolerance.or(self.tolerance)).collect();
+        // One early-stop observer per tolerated lane — exactly what the
+        // solo path chains (a ChainObserver with no user half is the stop
+        // observer alone), so batched early stopping is bit-identical.
+        // Native-tolerance backends (the CPU baseline) have no batched
+        // path and enforce their tolerance inside the sequential fallback.
+        let mut stops: Vec<Option<ToleranceStop>> = if self.native_tolerance {
+            tols.iter().map(|_| None).collect()
+        } else {
+            tols.iter().map(|t| t.map(ToleranceStop::new)).collect()
+        };
+        let native = {
+            let mut obs: Vec<Option<&mut dyn IterationObserver>> = stops
+                .iter_mut()
+                .map(|s| s.as_mut().map(|s| s as &mut dyn IterationObserver))
+                .collect();
+            self.backend.solve_batch_prepared(prep, queries, &mut obs)?
+        };
+        match native {
+            Some(sols) => {
+                if self.require_convergence {
+                    for ((sol, stop), tol) in sols.iter().zip(&stops).zip(&tols) {
+                        if let (Some(stop), Some(tol)) = (stop, tol) {
+                            if stop.last_estimate > *tol {
+                                return Err(SolverError::NonConvergence {
+                                    achieved: stop.last_estimate,
+                                    tolerance: *tol,
+                                    iterations: sol.stats.iterations,
+                                });
+                            }
+                        }
+                    }
+                }
+                Ok(sols)
+            }
+            None => queries.iter().map(|q| self.run_prepared(prep, q, None)).collect(),
+        }
     }
 }
 
@@ -409,6 +491,37 @@ impl EigenBackend for GpuBackend {
             exec: query.exec.unwrap_or(cfg.exec),
         };
         self.solver.solve_prepared(state, &resolved, observer)
+    }
+
+    fn solve_batch_prepared(
+        &mut self,
+        prep: &mut PreparedMatrix<'_>,
+        queries: &[QueryParams],
+        observers: &mut [Option<&mut dyn IterationObserver>],
+    ) -> Result<Option<Vec<EigenSolution>>, SolverError> {
+        let PreparedKind::Gpu(state) = &mut prep.kind else {
+            return Err(SolverError::InvalidConfig {
+                field: "session",
+                message: format!(
+                    "prepared matrix was built by the '{}' backend, not '{}'; \
+                     prepare it with this solver",
+                    prep.backend,
+                    self.solver.backend_name()
+                ),
+            });
+        };
+        let cfg = state.config();
+        let resolved: Vec<SolveQuery> = queries
+            .iter()
+            .map(|q| SolveQuery {
+                k: q.k.unwrap_or(cfg.k),
+                seed: q.seed.unwrap_or(cfg.seed),
+                exec: q.exec.unwrap_or(cfg.exec),
+            })
+            .collect();
+        let obs: Vec<Option<&mut dyn IterationObserver>> =
+            observers.iter_mut().map(|o| o.as_deref_mut()).collect();
+        Ok(Some(self.solver.solve_batch_prepared(state, &resolved, obs)?))
     }
 
     fn name(&self) -> &'static str {

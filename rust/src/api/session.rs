@@ -9,12 +9,24 @@
 //! slab allocation — and are **bit-identical** to a one-shot
 //! [`crate::Eigensolve::solve`] at the same effective configuration (the
 //! one-shot path *is* prepare-then-solve, by construction).
+//!
+//! [`SolveSession::solve_batch`] goes one step further: B queries run
+//! **concurrently** through one blocked Lanczos loop that streams the
+//! matrix once per iteration for the whole batch — the serving story
+//! becomes *prepare once, stream once per iteration, solve B at a time*.
 
 use super::error::SolverError;
 use super::observer::IterationObserver;
 use super::prepare::PreparedMatrix;
 use super::Solver;
 use crate::coordinator::{EigenSolution, ExecPolicy};
+
+/// Result of one lane of a batched solve ([`SolveSession::solve_batch`]):
+/// the lane's complete solution, **bit-identical** to a solo
+/// [`SolveSession::solve`] of the same query. Lane `stats` are snapshots
+/// of the shared fleet at that lane's completion (kernel/transfer counters
+/// are batch-cumulative; `phases` partitions `sim_seconds` exactly).
+pub type SolveOutcome = EigenSolution;
 
 /// Per-query knobs for a session solve. Every field is optional; an unset
 /// field falls back to the value the solver (and its prepared matrix) was
@@ -99,6 +111,35 @@ impl<'m> SolveSession<'_, '_, 'm> {
         let sol = self.solver.run_prepared(self.prepared, query, None)?;
         self.solves += 1;
         Ok(sol)
+    }
+
+    /// Answer a **batch** of queries concurrently against the prepared
+    /// matrix: one blocked Lanczos loop in which every device streams its
+    /// matrix chunks — and, out-of-core, re-pays the host→device transfer
+    /// — **once per iteration for the whole batch** instead of once per
+    /// query. The win is largest where the solve is memory-bound (large
+    /// matrices, and especially out-of-core plans, where h2d cost divides
+    /// by the batch size); at tiny `n` per-lane bookkeeping dominates and
+    /// sequential solves are just as fast.
+    ///
+    /// Outcomes come back in query order. Each lane is **bit-identical**
+    /// to the same query run solo through [`SolveSession::solve`]: lanes
+    /// share matrix traversal but never arithmetic. Queries may mix `k`
+    /// (≤ the prepared `k_max`), `seed` and `tolerance` freely — a lane
+    /// that converges early retires from the block without perturbing the
+    /// others. The host `exec` policy is batch-level (first query wins).
+    ///
+    /// Errors: an empty batch or a lane `k` above the prepared capacity is
+    /// an [`SolverError::InvalidConfig`]. Backends without a native
+    /// batched path (the CPU baseline, custom kernels behind PJRT) fall
+    /// back to sequential per-query solves with identical results.
+    pub fn solve_batch(
+        &mut self,
+        queries: &[QueryParams],
+    ) -> Result<Vec<SolveOutcome>, SolverError> {
+        let sols = self.solver.run_prepared_batch(self.prepared, queries)?;
+        self.solves += sols.len();
+        Ok(sols)
     }
 
     /// Like [`SolveSession::solve`], invoking `observer` once per Lanczos

@@ -125,6 +125,48 @@ impl CostModel {
         }
     }
 
+    /// Byte/flop accounting of one *blocked* ELL SpMM over `rows×width`
+    /// against `lanes` stacked replicas of length `n` — the batched-query
+    /// kernel. The slab (values + column indices) streams **once** for the
+    /// whole block; only the gather traffic, the output writes and the
+    /// flops scale with the lane count. `lanes == 1` reduces exactly to
+    /// [`CostModel::spmv_cost`].
+    pub fn spmm_cost(
+        &self,
+        rows: usize,
+        width: usize,
+        n: usize,
+        lanes: usize,
+        cfg: &PrecisionConfig,
+    ) -> KernelCost {
+        let sb = cfg.storage.bytes();
+        let slots = rows * width;
+        let gather = slots * self.gather_sector_bytes.max(sb);
+        let gather = gather.min(slots * sb + n * self.gather_sector_bytes);
+        KernelCost {
+            bytes_read: slots * sb + slots * 4 + lanes * gather,
+            bytes_written: lanes * rows * sb,
+            flops: 2 * slots * lanes,
+        }
+    }
+
+    /// Blocked twin of [`CostModel::spill_cost`]: coordinates and values
+    /// stream once, gathers/writes/flops scale with the lane count.
+    /// `lanes == 1` reduces exactly to `spill_cost`.
+    pub fn spill_cost_block(
+        &self,
+        entries: usize,
+        lanes: usize,
+        cfg: &PrecisionConfig,
+    ) -> KernelCost {
+        let sb = cfg.storage.bytes();
+        KernelCost {
+            bytes_read: entries * (sb + 8) + lanes * entries * self.gather_sector_bytes,
+            bytes_written: lanes * entries * sb,
+            flops: 2 * entries * lanes,
+        }
+    }
+
     /// Accounting of a fused candidate update
     /// (`v_nxt = v_tmp − αv − βv_prev` + partial sumsq) on `len` elements.
     pub fn candidate_cost(&self, len: usize, cfg: &PrecisionConfig) -> KernelCost {
@@ -198,6 +240,26 @@ mod tests {
             Compute::F64,
         );
         assert!(ddd > fdf * 1.2, "ddd {ddd} fdf {fdf}");
+    }
+
+    #[test]
+    fn spmm_amortizes_slab_traffic_across_lanes() {
+        let m = CostModel::default();
+        let (rows, w, n) = (1 << 14, 16, 1 << 14);
+        let cfg = PrecisionConfig::FDF;
+        // lanes == 1 reduces exactly to the single-vector kernels.
+        assert_eq!(m.spmm_cost(rows, w, n, 1, &cfg), m.spmv_cost(rows, w, n, &cfg));
+        assert_eq!(m.spill_cost_block(1000, 1, &cfg), m.spill_cost(1000, &cfg));
+        // A B-lane block costs strictly less than B single-vector passes:
+        // the slab bytes are paid once.
+        let b = 8usize;
+        let block = m.spmm_cost(rows, w, n, b, &cfg);
+        let solo = m.spmv_cost(rows, w, n, &cfg);
+        assert!(block.total_bytes() < b * solo.total_bytes());
+        assert_eq!(block.flops, b * solo.flops);
+        // Per-lane bytes shrink monotonically with the batch size.
+        let b4 = m.spmm_cost(rows, w, n, 4, &cfg);
+        assert!(block.total_bytes() as f64 / 8.0 < b4.total_bytes() as f64 / 4.0);
     }
 
     #[test]

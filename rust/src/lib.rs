@@ -87,6 +87,31 @@
 //! per-device kernel forks). The CLI exposes the same lifecycle as
 //! `topk-eigen solve --queries N`.
 //!
+//! Concurrent request bursts go one step further with
+//! [`SolveSession::solve_batch`]: B queries run through one blocked
+//! Lanczos loop that streams the device-resident matrix — and, on
+//! out-of-core plans, the host→device transfer — **once per iteration
+//! for the whole batch** ([`runtime::Kernels::spmm_into`]), while each
+//! lane stays bit-identical to its solo solve (per-lane seeds, k,
+//! tolerances and early stopping included):
+//!
+//! ```no_run
+//! use topk_eigen::{QueryParams, Solver};
+//! # fn main() -> Result<(), topk_eigen::SolverError> {
+//! # let matrix = topk_eigen::sparse::suite::find("WB-GO").unwrap().generate_csr(1.0, 42);
+//! let mut solver = Solver::builder().k(16).devices(4).build()?;
+//! let mut prepared = solver.prepare(&matrix)?;
+//! let mut session = solver.session(&mut prepared);
+//! let burst: Vec<QueryParams> = (0..8u64).map(|u| QueryParams::new().seed(u)).collect();
+//! for (u, sol) in session.solve_batch(&burst)?.iter().enumerate() {
+//!     println!("user {u}: λ₀ = {}", sol.eigenvalues[0]);
+//! }
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! The CLI equivalent is `topk-eigen solve --queries N --batch B`.
+//!
 //! ## System shape
 //!
 //! The solver is two-phase:
@@ -143,6 +168,15 @@
 //! | rebuild `Solver` to change `k`/seed/tolerance | `QueryParams::new().k(8).seed(7).tolerance(1e-9)`       |
 //! | `stats.wall_seconds` (setup + solve fused)    | `prepared.prepare_seconds()` + per-solve `wall_seconds` |
 //!
+//! 0.4 adds batched block-query execution; sequential session solves stay
+//! supported, but concurrent bursts should migrate:
+//!
+//! | sequential session (0.3)                      | batched (0.4+)                                          |
+//! |-----------------------------------------------|---------------------------------------------------------|
+//! | `for q in qs { session.solve(&q)?; }`         | `session.solve_batch(&qs)?` (one matrix stream/iter)    |
+//! | custom backends: `spmv_into` only             | also `spmm_into`; blocked vector kernels have defaults  |
+//! | `solve --queries N`                           | `solve --queries N --batch B`                           |
+//!
 //! The low-level types (`SolverConfig`, `TopKSolver`, `BaselineConfig`)
 //! remain public under [`coordinator`] / [`baseline`] for harnesses that
 //! need them; only the *root* re-exports are deprecated.
@@ -168,8 +202,8 @@ pub mod sparse;
 // ---- The 0.2 public surface -------------------------------------------------
 pub use api::{
     Backend, CollectObserver, Eigensolve, FnObserver, IterationEvent, IterationObserver,
-    ObserverControl, PreparedMatrix, QueryParams, SolveReport, SolveSession, Solver,
-    SolverBuilder, SolverError, ToleranceStop,
+    ObserverControl, PreparedMatrix, QueryParams, SolveOutcome, SolveReport, SolveSession,
+    Solver, SolverBuilder, SolverError, ToleranceStop,
 };
 pub use coordinator::{
     EigenSolution, ExecPolicy, PhaseBreakdown, ReorthMode, SolveStats, TopologyKind,

@@ -7,9 +7,9 @@
 //!                   [--backend hostsim|pjrt|cpu] [--artifacts artifacts]
 //!                   [--tolerance 1e-9 [--require-convergence]]
 //!                   [--device-mem-mb 32] [--seed N] [--baseline]
-//!                   [--queries N] [--report out.json]
+//!                   [--queries N [--batch B]] [--report out.json]
 //! topk-eigen generate --suite KRON --scale 1.0 --out kron.mtx
-//! topk-eigen matrices                    # list built-in matrix ids
+//! topk-eigen matrices [--json]           # list built-in matrix ids
 //! topk-eigen suite                       # Table I stand-ins (paper sizes)
 //! topk-eigen info   [--artifacts artifacts]
 //! ```
@@ -22,6 +22,7 @@
 //! values produce a usage error with exit code 2.
 
 use std::path::{Path, PathBuf};
+use topk_eigen::bench_util::JsonObj;
 use topk_eigen::cli::{self, UsageError};
 use topk_eigen::coordinator::{ExecPolicy, ReorthMode, TopologyKind};
 use topk_eigen::metrics;
@@ -95,7 +96,7 @@ fn print_usage() {
          USAGE:\n\
          \x20 topk-eigen solve    --suite <ID> | --matrix <file.mtx> [options]\n\
          \x20 topk-eigen generate --suite <ID> --out <file.mtx> [--scale S]\n\
-         \x20 topk-eigen matrices                    list built-in matrix ids\n\
+         \x20 topk-eigen matrices [--json]           list built-in matrix ids\n\
          \x20 topk-eigen suite                       Table I stand-ins (paper sizes)\n\
          \x20 topk-eigen info     [--artifacts <dir>]\n\
          \n\
@@ -121,6 +122,11 @@ fn print_usage() {
          \x20 --queries <n>       prepare once, then answer n queries on the\n\
          \x20                     prepared matrix (seeds vary per query);\n\
          \x20                     reports prepare vs per-solve time\n\
+         \x20 --batch <b>         with --queries: answer the queries in\n\
+         \x20                     concurrent blocks of b — each block\n\
+         \x20                     streams the matrix once per iteration\n\
+         \x20                     for all b queries (results are\n\
+         \x20                     bit-identical to solo solves)\n\
          \x20 --report <f.json>   write a machine-readable solve report\n"
     );
 }
@@ -172,6 +178,7 @@ const SOLVE_FLAGS: &[&str] = &[
     "exec",
     "baseline",
     "queries",
+    "batch",
     "report",
 ];
 
@@ -233,7 +240,26 @@ fn cmd_solve(args: &cli::Args) -> Result<i32, CliError> {
     if queries == 0 {
         return Err(CliError::Usage("--queries must be ≥ 1".into()));
     }
-    if queries > 1 {
+    let batch: Option<usize> = args.try_get("batch")?;
+    if let Some(b) = batch {
+        if !args.has("queries") {
+            return Err(CliError::Usage(
+                "--batch needs --queries N — batching executes inside a multi-query \
+                 session (e.g. `solve --queries 16 --batch 4`)"
+                    .into(),
+            ));
+        }
+        if b == 0 {
+            return Err(CliError::Usage("--batch must be ≥ 1".into()));
+        }
+        if b > queries {
+            return Err(CliError::Usage(format!(
+                "--batch {b} exceeds --queries {queries}; a batch cannot be larger \
+                 than the query count"
+            )));
+        }
+    }
+    if queries > 1 || batch.is_some() {
         if args.has("baseline") {
             return Err(CliError::Usage(
                 "--baseline is not supported with --queries; run a separate \
@@ -242,7 +268,8 @@ fn cmd_solve(args: &cli::Args) -> Result<i32, CliError> {
             ));
         }
         return cmd_solve_batch(
-            args, &name, &m, &mut solver, queries, k, seed, tolerance, precision, devices,
+            args, &name, &m, &mut solver, queries, batch, k, seed, tolerance, precision,
+            devices,
         );
     }
 
@@ -311,10 +338,13 @@ fn cmd_solve(args: &cli::Args) -> Result<i32, CliError> {
     Ok(0)
 }
 
-/// `solve --queries N`: the serving lifecycle — prepare the matrix once,
-/// then answer N queries on the prepared state (seeds vary per query so
-/// the batch models distinct requests), reporting prepare vs per-solve
-/// time and the amortization win over N one-shot solves.
+/// `solve --queries N [--batch B]`: the serving lifecycle — prepare the
+/// matrix once, then answer N queries on the prepared state (seeds vary
+/// per query so the run models distinct requests). With `--batch B` the
+/// queries execute in concurrent blocks of B through
+/// `SolveSession::solve_batch` (the matrix streams once per iteration per
+/// block), and the report shows prepare vs per-query-in-batch vs
+/// solo-session timing side by side.
 #[allow(clippy::too_many_arguments)]
 fn cmd_solve_batch(
     args: &cli::Args,
@@ -322,6 +352,7 @@ fn cmd_solve_batch(
     m: &Csr,
     solver: &mut Solver,
     queries: usize,
+    batch: Option<usize>,
     k: usize,
     seed: u64,
     tolerance: Option<f64>,
@@ -340,25 +371,62 @@ fn cmd_solve_batch(
     let mut session = solver.session(&mut prepared);
     let mut solve_s_total = 0.0f64;
     let mut last = None;
-    for qi in 0..queries {
-        let q = QueryParams::new().seed(seed.wrapping_add(qi as u64));
-        let t = std::time::Instant::now();
-        let sol = session.solve(&q)?;
-        let dt = t.elapsed().as_secs_f64();
-        solve_s_total += dt;
+    if let Some(b) = batch {
+        // Reference point: one solo session solve — the serving path a
+        // batched block competes against.
+        let t0 = std::time::Instant::now();
+        let solo = session.solve(&QueryParams::new().seed(seed))?;
+        let solo_s = t0.elapsed().as_secs_f64();
+        std::hint::black_box(solo.eigenvalues.len());
+        let mut done = 0usize;
+        while done < queries {
+            let take = b.min(queries - done);
+            let qs: Vec<QueryParams> = (0..take)
+                .map(|i| QueryParams::new().seed(seed.wrapping_add((done + i) as u64)))
+                .collect();
+            let t = std::time::Instant::now();
+            let outs = session.solve_batch(&qs)?;
+            let dt = t.elapsed().as_secs_f64();
+            solve_s_total += dt;
+            println!(
+                "batch queries {}..{}: λ₀ = {:+.9e}  {dt:.4}s ({:.4}s/query)",
+                done,
+                done + take,
+                outs[0].eigenvalues[0],
+                dt / take as f64
+            );
+            done += take;
+            last = outs.into_iter().next_back();
+        }
+        let per_batched = solve_s_total / queries as f64;
         println!(
-            "query {qi}: λ₀ = {:+.9e}  iters={}  solve={dt:.4}s",
-            sol.eigenvalues[0], sol.stats.iterations
+            "\nserving comparison ({queries} queries, batch {b}):\n\
+             \x20 prepare (once)          {prepare_s:.4}s\n\
+             \x20 per query, batched      {per_batched:.4}s\n\
+             \x20 per query, solo session {solo_s:.4}s ({:.2}x of batched)",
+            solo_s / per_batched.max(1e-12)
         );
-        last = Some(sol);
+    } else {
+        for qi in 0..queries {
+            let q = QueryParams::new().seed(seed.wrapping_add(qi as u64));
+            let t = std::time::Instant::now();
+            let sol = session.solve(&q)?;
+            let dt = t.elapsed().as_secs_f64();
+            solve_s_total += dt;
+            println!(
+                "query {qi}: λ₀ = {:+.9e}  iters={}  solve={dt:.4}s",
+                sol.eigenvalues[0], sol.stats.iterations
+            );
+            last = Some(sol);
+        }
+        let per_solve = solve_s_total / queries as f64;
+        println!(
+            "\nbatch: {queries} queries | prepare {prepare_s:.4}s (once) | \
+             avg solve {per_solve:.4}s | amortized {:.4}s/query vs {:.4}s/query one-shot",
+            prepare_s / queries as f64 + per_solve,
+            prepare_s + per_solve,
+        );
     }
-    let per_solve = solve_s_total / queries as f64;
-    println!(
-        "\nbatch: {queries} queries | prepare {prepare_s:.4}s (once) | \
-         avg solve {per_solve:.4}s | amortized {:.4}s/query vs {:.4}s/query one-shot",
-        prepare_s / queries as f64 + per_solve,
-        prepare_s + per_solve,
-    );
 
     if let Some(path) = args.get("report") {
         let sol = last.expect("queries >= 1");
@@ -410,7 +478,27 @@ fn cmd_suite(args: &cli::Args) -> Result<i32, CliError> {
 }
 
 fn cmd_matrices(args: &cli::Args) -> Result<i32, CliError> {
-    args.reject_unknown(&[])?;
+    args.reject_unknown(&["json"])?;
+    if args.has("json") {
+        // Machine-readable listing for benchmark/CI scripts — a stable
+        // JSON array instead of the human table.
+        let entries: Vec<String> = suite::SUITE
+            .iter()
+            .map(|e| {
+                JsonObj::new()
+                    .str("id", e.id)
+                    .str("name", e.name)
+                    .str("class", &format!("{:?}", e.class))
+                    .num("paper_rows_m", e.paper_rows_m)
+                    .num("paper_nnz_m", e.paper_nnz_m)
+                    .raw("out_of_core", e.out_of_core.to_string())
+                    .str("description", &e.description())
+                    .finish()
+            })
+            .collect();
+        println!("[{}]", entries.join(", "));
+        return Ok(0);
+    }
     println!("built-in matrix suite (use with --suite <ID>):\n");
     for e in &suite::SUITE {
         println!("{:<6} {}", e.id, e.description());

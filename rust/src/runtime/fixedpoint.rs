@@ -125,6 +125,52 @@ impl Kernels for FixedPointKernels {
         }
     }
 
+    #[allow(clippy::too_many_arguments)]
+    fn spmm_into(
+        &mut self,
+        ell: &Ell,
+        x: &[f64],
+        lanes: usize,
+        _cfg: &PrecisionConfig,
+        y: &mut [f64],
+        y_stride: usize,
+        y_offset: usize,
+    ) {
+        self.calls += 1;
+        let n = ell.cols;
+        debug_assert_eq!(x.len(), lanes * n);
+        // Stream the slab once: each slot is quantized to Q1.30 once and
+        // multiplied into every lane. Per lane the accumulation order is
+        // identical to `spmv_into`, so lane results are bit-identical to
+        // the single-vector kernel (the saturation *counter* may differ —
+        // shared slots are clipped once, not once per lane).
+        let xq = self.vec_fixed(x);
+        let mut acc = vec![0i64; lanes];
+        for r in 0..ell.rows {
+            acc.fill(0);
+            for k in 0..ell.width {
+                let i = r * ell.width + k;
+                let v = to_fixed(ell.values.get_f64(i), &mut self.saturations);
+                let c = ell.col_idx[i] as usize;
+                for (l, a) in acc.iter_mut().enumerate() {
+                    *a += qmul(v, xq[l * n + c]);
+                }
+            }
+            for (l, a) in acc.iter().enumerate() {
+                y[l * y_stride + y_offset + r] = from_fixed(qsat(*a, &mut self.saturations));
+            }
+        }
+        for s in &ell.spill {
+            let v = to_fixed(s.val, &mut self.saturations);
+            for l in 0..lanes {
+                let yi = l * y_stride + y_offset + s.row as usize;
+                let prod = qmul(v, xq[l * n + s.col as usize]);
+                let cur = to_fixed(y[yi], &mut self.saturations);
+                y[yi] = from_fixed(qsat(cur + prod, &mut self.saturations));
+            }
+        }
+    }
+
     fn dot(&mut self, a: &[f64], b: &[f64], _cfg: &PrecisionConfig) -> f64 {
         self.calls += 1;
         let aq = self.vec_fixed(a);
@@ -295,6 +341,33 @@ mod tests {
         // closely on a well-normalized problem.
         for (a, b) in fixed.eigenvalues.iter().take(3).zip(&ddd.eigenvalues) {
             assert!((a - b).abs() < 1e-4, "fixed {a} vs ddd {b}");
+        }
+    }
+
+    #[test]
+    fn spmm_lanes_match_solo_spmv_bitwise() {
+        let mut rng = Rng::new(23);
+        let mut coo = gen::erdos_renyi(80, 80, 0.1, true, &mut rng);
+        coo.normalize_by_max_degree();
+        let csr = Csr::from_coo(&coo);
+        let ell = crate::sparse::Ell::from_csr(&csr, 3, crate::precision::Storage::F64);
+        assert!(!ell.spill.is_empty());
+        let lanes = 3usize;
+        let mut block = Vec::new();
+        let mut xs: Vec<Vec<f64>> = Vec::new();
+        for l in 0..lanes {
+            let x: Vec<f64> =
+                (0..80).map(|i| ((i + l * 7) as f64 * 0.13).sin() * 0.4).collect();
+            block.extend_from_slice(&x);
+            xs.push(x);
+        }
+        let mut k = FixedPointKernels::new();
+        let got = k.spmm(&ell, &block, lanes, &PrecisionConfig::DDD);
+        for (l, x) in xs.iter().enumerate() {
+            let want = FixedPointKernels::new().spmv(&ell, x, &PrecisionConfig::DDD);
+            for (a, b) in got[l * 80..(l + 1) * 80].iter().zip(&want) {
+                assert_eq!(a.to_bits(), b.to_bits(), "lane {l}");
+            }
         }
     }
 

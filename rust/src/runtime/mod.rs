@@ -20,6 +20,18 @@
 //! external callers — they allocate once and delegate to the `*_into`
 //! twin, so the two paths are bit-identical by construction.
 //!
+//! ## Batched block-query execution
+//!
+//! The second required SpMV entry point is [`Kernels::spmm_into`]: a
+//! multi-vector SpMM over a lane-major block of replicas that streams the
+//! ELL slab (values, column indices, spill tail — and, out-of-core, the
+//! h2d transfer) **once for all lanes**. The blocked vector kernels
+//! (`dot_block` / `candidate_block` / `normalize_block` /
+//! `ortho_update_block`) have provided lane-looping implementations, so
+//! single-vector backends participate in batched solves unchanged. Every
+//! blocked kernel preserves per-lane arithmetic order, which is what makes
+//! a batched solve bit-identical to the same queries run solo.
+//!
 //! All methods take/return `f64` host buffers; each backend is responsible
 //! for quantizing through the configured storage dtype so that repeated
 //! calls behave exactly like vectors *kept* in storage precision.
@@ -102,6 +114,120 @@ pub trait Kernels: Send {
     /// overwritten; `y.len()` must equal `ell.rows`.
     fn spmv_into(&mut self, ell: &Ell, x: &[f64], cfg: &PrecisionConfig, y: &mut [f64]);
 
+    /// Multi-vector ELL SpMM `Y = M_chunk · X` over `lanes` stacked
+    /// replicas — the batched hot path. `x` holds `lanes` full replicas,
+    /// lane-major (`x[l*ell.cols .. (l+1)*ell.cols]` is lane `l`); lane
+    /// `l`'s output rows land at `y[l*y_stride + y_offset ..][..ell.rows]`,
+    /// so a chunked plan can write each lane's rows straight into its slice
+    /// of a full-partition buffer (`y_stride` = partition rows, `y_offset`
+    /// = the chunk's row offset).
+    ///
+    /// Contract: the chunk's slab (values + column indices + spill tail —
+    /// and, out-of-core, its h2d transfer) is traversed **once** for the
+    /// whole block, and each lane's arithmetic is **bit-identical** to
+    /// [`Kernels::spmv_into`] on that lane alone — the identity the batched
+    /// coordinator's batch-vs-solo guarantee rests on.
+    #[allow(clippy::too_many_arguments)]
+    fn spmm_into(
+        &mut self,
+        ell: &Ell,
+        x: &[f64],
+        lanes: usize,
+        cfg: &PrecisionConfig,
+        y: &mut [f64],
+        y_stride: usize,
+        y_offset: usize,
+    );
+
+    // ---- Blocked vector kernels (batched solves) ------------------------
+    //
+    // One call per device per phase for a whole block of `lanes` queries.
+    // Each lane's slices may come from unrelated allocations (basis slabs,
+    // replica blocks), so lanes are passed as slices-of-slices. The
+    // provided implementations loop the single-vector kernels lane by lane
+    // — bit-identical to solo solves by construction — so backends that
+    // only implement the single-vector surface (FixedPointKernels,
+    // PjrtKernels, custom test kernels) work in batched solves unchanged.
+    // Backends may override to fuse (hoist dispatch, vectorize across
+    // lanes) as long as per-lane arithmetic order is preserved.
+
+    /// Blocked partial dot: `out[l] = Σᵢ a[l][i]·b[l][i]` per lane,
+    /// accumulated in the compute dtype.
+    fn dot_block(
+        &mut self,
+        a: &[&[f64]],
+        b: &[&[f64]],
+        cfg: &PrecisionConfig,
+        out: &mut [f64],
+    ) {
+        debug_assert_eq!(a.len(), b.len());
+        debug_assert_eq!(a.len(), out.len());
+        for ((x, y), o) in a.iter().zip(b).zip(out.iter_mut()) {
+            *o = self.dot(x, y, cfg);
+        }
+    }
+
+    /// Blocked fused candidate update: per lane,
+    /// `out[l] = v_tmp[l] − α[l]·v_i[l] − β[l]·v_prev[l]` in storage dtype,
+    /// with the pre-quantization `Σ v²` partial written to `sumsq[l]`.
+    #[allow(clippy::too_many_arguments)]
+    fn candidate_block(
+        &mut self,
+        v_tmp: &[&[f64]],
+        v_i: &[&[f64]],
+        v_prev: &[&[f64]],
+        alpha: &[f64],
+        beta: &[f64],
+        cfg: &PrecisionConfig,
+        out: &mut [&mut [f64]],
+        sumsq: &mut [f64],
+    ) {
+        debug_assert_eq!(v_tmp.len(), alpha.len());
+        debug_assert_eq!(v_tmp.len(), sumsq.len());
+        for l in 0..v_tmp.len() {
+            sumsq[l] = self.candidate_into(
+                v_tmp[l],
+                v_i[l],
+                v_prev[l],
+                alpha[l],
+                beta[l],
+                cfg,
+                &mut *out[l],
+            );
+        }
+    }
+
+    /// Blocked normalization: `out[l] = v[l] / beta[l]` in storage dtype.
+    fn normalize_block(
+        &mut self,
+        v: &[&[f64]],
+        beta: &[f64],
+        cfg: &PrecisionConfig,
+        out: &mut [&mut [f64]],
+    ) {
+        debug_assert_eq!(v.len(), beta.len());
+        debug_assert_eq!(v.len(), out.len());
+        for l in 0..v.len() {
+            self.normalize_into(v[l], beta[l], cfg, &mut *out[l]);
+        }
+    }
+
+    /// Blocked in-place reorthogonalization update:
+    /// `u[l] ← u[l] − o[l]·v_j[l]` in storage dtype.
+    fn ortho_update_block(
+        &mut self,
+        u: &mut [&mut [f64]],
+        vj: &[&[f64]],
+        o: &[f64],
+        cfg: &PrecisionConfig,
+    ) {
+        debug_assert_eq!(u.len(), vj.len());
+        debug_assert_eq!(u.len(), o.len());
+        for l in 0..o.len() {
+            self.ortho_update_into(&mut *u[l], vj[l], o[l], cfg);
+        }
+    }
+
     /// Partial dot `Σ aᵢ·bᵢ` accumulated in the compute dtype.
     fn dot(&mut self, a: &[f64], b: &[f64], cfg: &PrecisionConfig) -> f64;
 
@@ -146,6 +272,14 @@ pub trait Kernels: Send {
     fn spmv(&mut self, ell: &Ell, x: &[f64], cfg: &PrecisionConfig) -> Vec<f64> {
         let mut y = vec![0.0f64; ell.rows];
         self.spmv_into(ell, x, cfg, &mut y);
+        y
+    }
+
+    /// Allocating twin of [`Kernels::spmm_into`]: `lanes` stacked outputs,
+    /// lane-major (`y_stride = ell.rows`, `y_offset = 0`).
+    fn spmm(&mut self, ell: &Ell, x: &[f64], lanes: usize, cfg: &PrecisionConfig) -> Vec<f64> {
+        let mut y = vec![0.0f64; lanes * ell.rows];
+        self.spmm_into(ell, x, lanes, cfg, &mut y, ell.rows, 0);
         y
     }
 
@@ -292,6 +426,245 @@ impl Kernels for HostKernels {
                     *v = *v as f32 as f64;
                 }
             }
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn spmm_into(
+        &mut self,
+        ell: &Ell,
+        x: &[f64],
+        lanes: usize,
+        cfg: &PrecisionConfig,
+        y: &mut [f64],
+        y_stride: usize,
+        y_offset: usize,
+    ) {
+        self.calls += 1;
+        let n = ell.cols;
+        let w = ell.width;
+        debug_assert_eq!(x.len(), lanes * n);
+        debug_assert!(y_offset + ell.rows <= y_stride);
+        debug_assert!(y.len() >= lanes * y_stride);
+        // The slab is streamed once: the outer loops walk (row, slot) and
+        // the innermost loop fans each gathered (value, column) pair across
+        // all lanes. Per lane, the accumulation visits slots in exactly the
+        // order `spmv_into` does, so lane results are bit-identical to the
+        // single-vector kernel.
+        match (cfg.storage, cfg.compute) {
+            (Storage::F64, Compute::F64) => {
+                let mut acc = vec![0.0f64; lanes];
+                for r in 0..ell.rows {
+                    acc.fill(0.0);
+                    for k in 0..w {
+                        let i = r * w + k;
+                        let v = ell.values.get_f64(i);
+                        let c = ell.col_idx[i] as usize;
+                        for (l, a) in acc.iter_mut().enumerate() {
+                            *a += v * x[l * n + c];
+                        }
+                    }
+                    for (l, a) in acc.iter().enumerate() {
+                        y[l * y_stride + y_offset + r] = *a;
+                    }
+                }
+                for s in &ell.spill {
+                    let (sr, sc) = (s.row as usize, s.col as usize);
+                    for l in 0..lanes {
+                        y[l * y_stride + y_offset + sr] += s.val * x[l * n + sc];
+                    }
+                }
+            }
+            (Storage::F64, Compute::F32) => {
+                let mut acc = vec![0.0f32; lanes];
+                for r in 0..ell.rows {
+                    acc.fill(0.0);
+                    for k in 0..w {
+                        let i = r * w + k;
+                        let v = ell.values.get_f64(i) as f32;
+                        let c = ell.col_idx[i] as usize;
+                        for (l, a) in acc.iter_mut().enumerate() {
+                            *a += v * (x[l * n + c] as f32);
+                        }
+                    }
+                    for (l, a) in acc.iter().enumerate() {
+                        y[l * y_stride + y_offset + r] = *a as f64;
+                    }
+                }
+                for s in &ell.spill {
+                    let (sr, sc) = (s.row as usize, s.col as usize);
+                    for l in 0..lanes {
+                        let yi = l * y_stride + y_offset + sr;
+                        y[yi] += ((s.val as f32) * (x[l * n + sc] as f32)) as f64;
+                    }
+                }
+            }
+            (Storage::F32, compute) => {
+                // Quantize the whole lane block once per cycle (same cache
+                // as the single-vector path, keyed on the block address).
+                let xq: &[f64] = self.quantized_replica(x);
+                match compute {
+                    Compute::F64 => {
+                        let mut acc = vec![0.0f64; lanes];
+                        for r in 0..ell.rows {
+                            acc.fill(0.0);
+                            for k in 0..w {
+                                let i = r * w + k;
+                                let v = ell.values.get_f64(i);
+                                let c = ell.col_idx[i] as usize;
+                                for (l, a) in acc.iter_mut().enumerate() {
+                                    *a += v * xq[l * n + c];
+                                }
+                            }
+                            for (l, a) in acc.iter().enumerate() {
+                                y[l * y_stride + y_offset + r] = *a;
+                            }
+                        }
+                        for s in &ell.spill {
+                            let (sr, sc) = (s.row as usize, s.col as usize);
+                            for l in 0..lanes {
+                                y[l * y_stride + y_offset + sr] += s.val * xq[l * n + sc];
+                            }
+                        }
+                    }
+                    Compute::F32 => {
+                        let mut acc = vec![0.0f32; lanes];
+                        for r in 0..ell.rows {
+                            acc.fill(0.0);
+                            for k in 0..w {
+                                let i = r * w + k;
+                                let v = ell.values.get_f64(i) as f32;
+                                let c = ell.col_idx[i] as usize;
+                                for (l, a) in acc.iter_mut().enumerate() {
+                                    *a += v * (xq[l * n + c] as f32);
+                                }
+                            }
+                            for (l, a) in acc.iter().enumerate() {
+                                y[l * y_stride + y_offset + r] = *a as f64;
+                            }
+                        }
+                        for s in &ell.spill {
+                            let (sr, sc) = (s.row as usize, s.col as usize);
+                            for l in 0..lanes {
+                                let yi = l * y_stride + y_offset + sr;
+                                y[yi] += ((s.val as f32) * (xq[l * n + sc] as f32)) as f64;
+                            }
+                        }
+                    }
+                }
+                // Output storage quantization, after the spill tail — the
+                // same order as the single-vector F32 path.
+                for l in 0..lanes {
+                    let at = l * y_stride + y_offset;
+                    for v in y[at..at + ell.rows].iter_mut() {
+                        *v = *v as f32 as f64;
+                    }
+                }
+            }
+        }
+    }
+
+    fn dot_block(
+        &mut self,
+        a: &[&[f64]],
+        b: &[&[f64]],
+        cfg: &PrecisionConfig,
+        out: &mut [f64],
+    ) {
+        // Fused override: one kernel invocation for the block, with the
+        // (Storage, Compute) dispatch hoisted out of the lane loop. Lane
+        // arithmetic matches [`Kernels::dot`] exactly.
+        self.calls += 1;
+        debug_assert_eq!(a.len(), b.len());
+        debug_assert_eq!(a.len(), out.len());
+        match (cfg.storage, cfg.compute) {
+            (Storage::F64, Compute::F64) => {
+                for ((x, y), o) in a.iter().zip(b).zip(out.iter_mut()) {
+                    debug_assert_eq!(x.len(), y.len());
+                    let mut acc = 0.0f64;
+                    for (u, v) in x.iter().zip(*y) {
+                        acc += u * v;
+                    }
+                    *o = acc;
+                }
+            }
+            (Storage::F32, Compute::F64) => {
+                for ((x, y), o) in a.iter().zip(b).zip(out.iter_mut()) {
+                    let mut acc = 0.0f64;
+                    for (u, v) in x.iter().zip(*y) {
+                        acc += (*u as f32 as f64) * (*v as f32 as f64);
+                    }
+                    *o = acc;
+                }
+            }
+            (s, Compute::F32) => {
+                for ((x, y), o) in a.iter().zip(b).zip(out.iter_mut()) {
+                    let mut acc = 0.0f32;
+                    for (u, v) in x.iter().zip(*y) {
+                        acc += (quantize(*u, s) as f32) * (quantize(*v, s) as f32);
+                    }
+                    *o = acc as f64;
+                }
+            }
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn candidate_block(
+        &mut self,
+        v_tmp: &[&[f64]],
+        v_i: &[&[f64]],
+        v_prev: &[&[f64]],
+        alpha: &[f64],
+        beta: &[f64],
+        cfg: &PrecisionConfig,
+        out: &mut [&mut [f64]],
+        sumsq: &mut [f64],
+    ) {
+        // Fused override, same dispatch-hoisting as `dot_block`; lane
+        // arithmetic matches [`Kernels::candidate_into`] exactly.
+        self.calls += 1;
+        debug_assert_eq!(v_tmp.len(), alpha.len());
+        debug_assert_eq!(v_tmp.len(), sumsq.len());
+        for l in 0..v_tmp.len() {
+            let (vt, vi, vp) = (v_tmp[l], v_i[l], v_prev[l]);
+            let n = vt.len();
+            let dst = &mut *out[l];
+            debug_assert_eq!(dst.len(), n);
+            sumsq[l] = match (cfg.storage, cfg.compute) {
+                (Storage::F64, Compute::F64) => {
+                    let mut ss = 0.0f64;
+                    for i in 0..n {
+                        let v = vt[i] - alpha[l] * vi[i] - beta[l] * vp[i];
+                        ss += v * v;
+                        dst[i] = v;
+                    }
+                    ss
+                }
+                (Storage::F32, Compute::F64) => {
+                    let mut ss = 0.0f64;
+                    for i in 0..n {
+                        let v = (vt[i] as f32 as f64)
+                            - alpha[l] * (vi[i] as f32 as f64)
+                            - beta[l] * (vp[i] as f32 as f64);
+                        ss += v * v;
+                        dst[i] = v as f32 as f64;
+                    }
+                    ss
+                }
+                (s, Compute::F32) => {
+                    let (a32, b32) = (alpha[l] as f32, beta[l] as f32);
+                    let mut ss = 0.0f32;
+                    for i in 0..n {
+                        let v = quantize(vt[i], s) as f32
+                            - a32 * quantize(vi[i], s) as f32
+                            - b32 * quantize(vp[i], s) as f32;
+                        ss += v * v;
+                        dst[i] = quantize(v as f64, s);
+                    }
+                    ss as f64
+                }
+            };
         }
     }
 
@@ -617,6 +990,134 @@ mod tests {
         let mut k = HostKernels::new();
         let out = k.normalize(&v, 2.0, &PrecisionConfig::DDD);
         assert_eq!(out, vec![1.0, 2.0, -3.0]);
+    }
+
+    #[test]
+    fn spmm_lanes_match_solo_spmv_bitwise() {
+        // The batched contract: each lane of an SpMM must be bit-identical
+        // to a single-vector SpMV of that lane, at every precision preset,
+        // including the spill tail.
+        let mut rng = Rng::new(51);
+        let coo = gen::erdos_renyi(120, 120, 0.08, true, &mut rng);
+        let csr = Csr::from_coo(&coo);
+        for cfg in PrecisionConfig::ALL {
+            // Deliberately narrow width forces spilling.
+            let ell = Ell::from_csr(&csr, 3, cfg.storage);
+            assert!(!ell.spill.is_empty(), "test wants a spill tail");
+            let lanes = 4usize;
+            let mut block = Vec::new();
+            let mut xs = Vec::new();
+            for l in 0..lanes {
+                let x = rand_vec(120, 60 + l as u64);
+                block.extend_from_slice(&x);
+                xs.push(x);
+            }
+            let mut k = HostKernels::new();
+            let got = k.spmm(&ell, &block, lanes, &cfg);
+            for (l, x) in xs.iter().enumerate() {
+                let mut solo = HostKernels::new();
+                let want = solo.spmv(&ell, x, &cfg);
+                for (r, (a, b)) in got[l * 120..(l + 1) * 120].iter().zip(&want).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "{} lane {l} row {r}: {a} vs {b}",
+                        cfg.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn spmm_strided_writes_target_lane_offsets() {
+        // Chunked plans write each lane's chunk rows into a larger
+        // per-lane buffer: verify the (y_stride, y_offset) addressing.
+        let mut rng = Rng::new(52);
+        let coo = gen::erdos_renyi(64, 64, 0.1, true, &mut rng);
+        let csr = Csr::from_coo(&coo);
+        let chunk = csr.slice_rows(16, 48); // rows 16..48 of the partition
+        let ell = Ell::from_csr(&chunk, csr.max_row_nnz().max(1), Storage::F64);
+        let lanes = 3usize;
+        let mut block = Vec::new();
+        for l in 0..lanes {
+            block.extend_from_slice(&rand_vec(64, 70 + l as u64));
+        }
+        let mut k = HostKernels::new();
+        let mut y = vec![f64::NAN; lanes * 64];
+        k.spmm_into(&ell, &block, lanes, &PrecisionConfig::DDD, &mut y, 64, 16);
+        let flat = k.spmm(&ell, &block, lanes, &PrecisionConfig::DDD);
+        for l in 0..lanes {
+            for r in 0..32 {
+                assert_eq!(y[l * 64 + 16 + r].to_bits(), flat[l * 32 + r].to_bits());
+            }
+            // Rows outside the chunk stay untouched.
+            assert!(y[l * 64].is_nan() && y[l * 64 + 63].is_nan());
+        }
+    }
+
+    #[test]
+    fn block_kernels_match_single_vector_kernels_bitwise() {
+        let n = 90;
+        for cfg in PrecisionConfig::ALL {
+            let lanes = 3usize;
+            let vt: Vec<Vec<f64>> = (0..lanes).map(|l| rand_vec(n, 80 + l as u64)).collect();
+            let vi: Vec<Vec<f64>> = (0..lanes).map(|l| rand_vec(n, 90 + l as u64)).collect();
+            let vp: Vec<Vec<f64>> = (0..lanes).map(|l| rand_vec(n, 95 + l as u64)).collect();
+            let alpha = [0.7, -0.2, 1.1];
+            let beta = [0.3, 0.9, -0.4];
+            let mut k = HostKernels::new();
+
+            // dot_block
+            let a_refs: Vec<&[f64]> = vt.iter().map(|v| v.as_slice()).collect();
+            let b_refs: Vec<&[f64]> = vi.iter().map(|v| v.as_slice()).collect();
+            let mut dots = vec![0.0; lanes];
+            k.dot_block(&a_refs, &b_refs, &cfg, &mut dots);
+            for l in 0..lanes {
+                let want = HostKernels::new().dot(&vt[l], &vi[l], &cfg);
+                assert_eq!(dots[l].to_bits(), want.to_bits(), "{} dot {l}", cfg.name());
+            }
+
+            // candidate_block
+            let p_refs: Vec<&[f64]> = vp.iter().map(|v| v.as_slice()).collect();
+            let mut outs_data = vec![vec![0.0f64; n]; lanes];
+            let mut ss = vec![0.0; lanes];
+            {
+                let mut outs: Vec<&mut [f64]> =
+                    outs_data.iter_mut().map(|v| v.as_mut_slice()).collect();
+                k.candidate_block(
+                    &a_refs, &b_refs, &p_refs, &alpha, &beta, &cfg, &mut outs, &mut ss,
+                );
+            }
+            for l in 0..lanes {
+                let (want_v, want_ss) = HostKernels::new()
+                    .candidate(&vt[l], &vi[l], &vp[l], alpha[l], beta[l], &cfg);
+                assert_eq!(ss[l].to_bits(), want_ss.to_bits(), "{} ss {l}", cfg.name());
+                for (a, b) in outs_data[l].iter().zip(&want_v) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{} cand {l}", cfg.name());
+                }
+            }
+
+            // normalize_block / ortho_update_block (provided wrappers)
+            let mut norm_data = vec![vec![0.0f64; n]; lanes];
+            {
+                let mut outs: Vec<&mut [f64]> =
+                    norm_data.iter_mut().map(|v| v.as_mut_slice()).collect();
+                k.normalize_block(&a_refs, &beta, &cfg, &mut outs);
+            }
+            let mut ortho_data = vt.clone();
+            {
+                let mut us: Vec<&mut [f64]> =
+                    ortho_data.iter_mut().map(|v| v.as_mut_slice()).collect();
+                k.ortho_update_block(&mut us, &b_refs, &alpha, &cfg);
+            }
+            for l in 0..lanes {
+                let want_n = HostKernels::new().normalize(&vt[l], beta[l], &cfg);
+                assert_eq!(norm_data[l], want_n, "{} norm {l}", cfg.name());
+                let want_o = HostKernels::new().ortho_update(&vt[l], &vi[l], alpha[l], &cfg);
+                assert_eq!(ortho_data[l], want_o, "{} ortho {l}", cfg.name());
+            }
+        }
     }
 
     #[test]

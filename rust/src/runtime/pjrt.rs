@@ -311,6 +311,33 @@ impl Kernels for PjrtKernels {
         }
     }
 
+    #[allow(clippy::too_many_arguments)]
+    fn spmm_into(
+        &mut self,
+        ell: &Ell,
+        x: &[f64],
+        lanes: usize,
+        cfg: &PrecisionConfig,
+        y: &mut [f64],
+        y_stride: usize,
+        y_offset: usize,
+    ) {
+        // Lane-serial fallback: the AOT artifacts are single-vector
+        // executables, so the matrix is re-walked per lane (the slab-tile
+        // literal cache still amortizes the marshalling). The replica
+        // literal cache is keyed by (len, tag) — identical across lanes —
+        // so it must be dropped between lanes and after the last one to
+        // keep a later single-vector call in the same cycle honest.
+        let n = ell.cols;
+        for l in 0..lanes {
+            self.x_cache.clear();
+            let xs = &x[l * n..(l + 1) * n];
+            let at = l * y_stride + y_offset;
+            self.spmv_into(ell, xs, cfg, &mut y[at..at + ell.rows]);
+        }
+        self.x_cache.clear();
+    }
+
     fn dot(&mut self, a: &[f64], b: &[f64], cfg: &PrecisionConfig) -> f64 {
         debug_assert_eq!(a.len(), b.len());
         let tag = cfg.kernel_tag();

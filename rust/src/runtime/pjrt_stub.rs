@@ -60,6 +60,20 @@ impl Kernels for PjrtKernels {
         match self.never {}
     }
 
+    #[allow(clippy::too_many_arguments)]
+    fn spmm_into(
+        &mut self,
+        _ell: &Ell,
+        _x: &[f64],
+        _lanes: usize,
+        _cfg: &PrecisionConfig,
+        _y: &mut [f64],
+        _y_stride: usize,
+        _y_offset: usize,
+    ) {
+        match self.never {}
+    }
+
     fn dot(&mut self, _a: &[f64], _b: &[f64], _cfg: &PrecisionConfig) -> f64 {
         match self.never {}
     }

@@ -1,0 +1,271 @@
+//! Batched block-query regression tests: every lane of
+//! `SolveSession::solve_batch` must be **bit-identical** to the same query
+//! run solo through the session — across all three precision presets,
+//! single- and multi-device fleets, and the out-of-core path — with
+//! per-lane early stopping that cannot perturb sibling lanes, typed errors
+//! on malformed batches, and honest phase/transfer accounting (h2d charged
+//! once per chunk per iteration, not once per query).
+
+use topk_eigen::sparse::{gen, Csr};
+use topk_eigen::{
+    Backend, EigenSolution, PrecisionConfig, QueryParams, Solver, SolverError,
+};
+
+fn test_matrix(n: usize, seed: u64) -> Csr {
+    let mut rng = topk_eigen::rng::Rng::new(seed);
+    Csr::from_coo(&gen::erdos_renyi(n, n, 0.02, true, &mut rng))
+}
+
+fn builder(p: PrecisionConfig, g: usize) -> topk_eigen::SolverBuilder {
+    Solver::builder().k(8).precision(p).devices(g)
+}
+
+/// Exact comparison: eigenvalues, eigenvectors, α, β — to the bit.
+fn assert_bit_identical(a: &EigenSolution, b: &EigenSolution, ctx: &str) {
+    assert_eq!(a.eigenvalues.len(), b.eigenvalues.len(), "{ctx}: pair count");
+    for (i, (x, y)) in a.eigenvalues.iter().zip(&b.eigenvalues).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: λ[{i}] {x} vs {y}");
+    }
+    for (i, (va, vb)) in a.eigenvectors.iter().zip(&b.eigenvectors).enumerate() {
+        for (j, (x, y)) in va.iter().zip(vb).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: v[{i}][{j}]");
+        }
+    }
+    assert_eq!(a.alpha.len(), b.alpha.len(), "{ctx}: alpha len");
+    for (x, y) in a.alpha.iter().zip(&b.alpha) {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: alpha");
+    }
+    assert_eq!(a.beta.len(), b.beta.len(), "{ctx}: beta len");
+    for (x, y) in a.beta.iter().zip(&b.beta) {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: beta");
+    }
+}
+
+#[test]
+fn batch_matches_solo_across_precisions_and_fleets() -> Result<(), SolverError> {
+    let m = test_matrix(500, 11);
+    for p in [PrecisionConfig::FFF, PrecisionConfig::FDF, PrecisionConfig::DDD] {
+        for g in [1usize, 4] {
+            let ctx = format!("{} g={g}", p.name());
+            let mut solver = builder(p, g).build()?;
+            let mut prepared = solver.prepare(&m)?;
+            let mut session = solver.session(&mut prepared);
+            let queries: Vec<QueryParams> =
+                (0..4u64).map(|i| QueryParams::new().seed(i)).collect();
+            let outs = session.solve_batch(&queries)?;
+            assert_eq!(outs.len(), 4);
+            for (qi, (q, out)) in queries.iter().zip(&outs).enumerate() {
+                let solo = session.solve(q)?;
+                assert_bit_identical(out, &solo, &format!("{ctx} lane {qi}"));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn batch_matches_solo_out_of_core_and_amortizes_h2d() -> Result<(), SolverError> {
+    let m = test_matrix(600, 13);
+    // Starve device memory so the plan streams (the coordinator's own OOC
+    // test sizing).
+    let sb = 8;
+    let mem = 600 * sb + (8 + 3) * 600 * sb + (16 << 10);
+    let mut solver = Solver::builder()
+        .k(8)
+        .precision(PrecisionConfig::DDD)
+        .device_mem_bytes(mem)
+        .build()?;
+    let mut prepared = solver.prepare(&m)?;
+    assert!(prepared.out_of_core(), "config must exercise the OOC path");
+    let mut session = solver.session(&mut prepared);
+    let queries: Vec<QueryParams> =
+        (0..3u64).map(|i| QueryParams::new().seed(100 + i)).collect();
+    let outs = session.solve_batch(&queries)?;
+    let solo0 = session.solve(&queries[0])?;
+    for (qi, (q, out)) in queries.iter().zip(&outs).enumerate() {
+        assert!(out.stats.out_of_core);
+        let solo = session.solve(q)?;
+        assert_bit_identical(out, &solo, &format!("ooc lane {qi}"));
+    }
+    // The satellite contract: h2d is charged once per chunk per iteration
+    // for the whole block — a 3-lane batch of equal-k queries streams
+    // exactly what ONE solo solve streams.
+    for out in &outs {
+        assert_eq!(
+            out.stats.h2d_bytes, solo0.stats.h2d_bytes,
+            "batched h2d bytes must not scale with the lane count"
+        );
+    }
+    Ok(())
+}
+
+#[test]
+fn mixed_k_seed_tolerance_in_one_batch() -> Result<(), SolverError> {
+    let m = test_matrix(400, 17);
+    let mut solver = builder(PrecisionConfig::FDF, 2).k(10).build()?;
+    let mut prepared = solver.prepare(&m)?;
+    let mut session = solver.session(&mut prepared);
+    // Three very different requests in one block: a small-k query, a
+    // full-k query, and a query whose (deliberately huge) tolerance stops
+    // it at the observer's minimum iteration count.
+    let queries = vec![
+        QueryParams::new().seed(1).k(4),
+        QueryParams::new().seed(2),
+        QueryParams::new().seed(3).tolerance(1e3),
+    ];
+    let outs = session.solve_batch(&queries)?;
+    assert_eq!(outs[0].stats.iterations, 4);
+    assert_eq!(outs[1].stats.iterations, 10);
+    assert!(
+        outs[2].stats.early_stopped && outs[2].stats.iterations == 2,
+        "a 1e3 tolerance must stop at the observer's min_iterations"
+    );
+    for (qi, (q, out)) in queries.iter().zip(&outs).enumerate() {
+        let solo = session.solve(q)?;
+        assert_eq!(out.stats.iterations, solo.stats.iterations, "lane {qi} iters");
+        assert_bit_identical(out, &solo, &format!("mixed lane {qi}"));
+    }
+    Ok(())
+}
+
+#[test]
+fn early_stop_lane_does_not_perturb_others() -> Result<(), SolverError> {
+    // One lane converging (and retiring from the block mid-solve) must
+    // leave the other lanes' trajectories untouched: they must equal both
+    // their solo solves and the same batch run *without* the stopping lane.
+    let m = test_matrix(450, 19);
+    let mut solver = builder(PrecisionConfig::DDD, 2).k(8).build()?;
+    let mut prepared = solver.prepare(&m)?;
+    let mut session = solver.session(&mut prepared);
+    let survivor_a = QueryParams::new().seed(7);
+    let survivor_b = QueryParams::new().seed(8).k(6);
+    let stopper = QueryParams::new().seed(9).tolerance(1e3);
+    let with = session.solve_batch(&[survivor_a, stopper, survivor_b])?;
+    assert!(with[1].stats.early_stopped, "the stopper lane must retire early");
+    let without = session.solve_batch(&[survivor_a, survivor_b])?;
+    assert_bit_identical(&with[0], &without[0], "survivor a (with vs without stopper)");
+    assert_bit_identical(&with[2], &without[1], "survivor b (with vs without stopper)");
+    let solo_a = session.solve(&survivor_a)?;
+    let solo_b = session.solve(&survivor_b)?;
+    assert_bit_identical(&with[0], &solo_a, "survivor a vs solo");
+    assert_bit_identical(&with[2], &solo_b, "survivor b vs solo");
+    Ok(())
+}
+
+#[test]
+fn breakdown_in_one_lane_matches_solo_recovery() -> Result<(), SolverError> {
+    // Identity-like matrix: every lane's Krylov space saturates and the
+    // per-lane restart (each lane's own RNG stream) must replay the solo
+    // recovery exactly.
+    let mut coo = topk_eigen::Coo::new(40, 40);
+    for i in 0..40 {
+        coo.push(i, i, 1.0);
+    }
+    coo.canonicalize();
+    let m = Csr::from_coo(&coo);
+    let mut solver = Solver::builder().k(5).precision(PrecisionConfig::DDD).build()?;
+    let mut prepared = solver.prepare(&m)?;
+    let mut session = solver.session(&mut prepared);
+    let queries: Vec<QueryParams> =
+        (0..2u64).map(|i| QueryParams::new().seed(i * 31)).collect();
+    let outs = session.solve_batch(&queries)?;
+    for (qi, (q, out)) in queries.iter().zip(&outs).enumerate() {
+        assert!(out.stats.breakdowns > 0, "lane {qi} must hit a breakdown");
+        let solo = session.solve(q)?;
+        assert_eq!(out.stats.breakdowns, solo.stats.breakdowns, "lane {qi}");
+        assert_bit_identical(out, &solo, &format!("breakdown lane {qi}"));
+    }
+    Ok(())
+}
+
+#[test]
+fn empty_batch_and_excess_k_are_typed_errors() -> Result<(), SolverError> {
+    let m = test_matrix(300, 23);
+    let mut solver = builder(PrecisionConfig::FDF, 1).build()?;
+    let mut prepared = solver.prepare(&m)?;
+    let k_max = prepared.k_max();
+    let mut session = solver.session(&mut prepared);
+    let err = session.solve_batch(&[]).unwrap_err();
+    assert!(
+        matches!(err, SolverError::InvalidConfig { field: "batch", .. }),
+        "{err:?}"
+    );
+    let err = session
+        .solve_batch(&[QueryParams::new(), QueryParams::new().k(k_max + 1)])
+        .unwrap_err();
+    assert!(matches!(err, SolverError::InvalidConfig { field: "k", .. }), "{err:?}");
+    assert!(err.to_string().contains("re-prepare"), "{err}");
+    // A zero-k query is caught by the shared QueryParams validation.
+    let err = session.solve_batch(&[QueryParams::new().k(0)]).unwrap_err();
+    assert!(matches!(err, SolverError::InvalidConfig { field: "k", .. }), "{err:?}");
+    Ok(())
+}
+
+#[test]
+fn batched_phases_partition_sim_seconds() -> Result<(), SolverError> {
+    // Honest accounting extends to batched runs: at every lane's
+    // completion snapshot the phase buckets partition the simulated
+    // critical path exactly — including an early-stopped lane.
+    let m = test_matrix(500, 29);
+    let mut solver = builder(PrecisionConfig::FDF, 2).build()?;
+    let mut prepared = solver.prepare(&m)?;
+    let mut session = solver.session(&mut prepared);
+    let queries = vec![
+        QueryParams::new().seed(1),
+        QueryParams::new().seed(2).tolerance(1e3),
+        QueryParams::new().seed(3).k(5),
+    ];
+    let outs = session.solve_batch(&queries)?;
+    for (qi, out) in outs.iter().enumerate() {
+        let s = &out.stats;
+        assert!(s.sim_seconds > 0.0, "lane {qi}");
+        assert!(
+            (s.phases.total() - s.sim_seconds).abs() <= 1e-9 * s.sim_seconds.max(1.0),
+            "lane {qi}: phases {} vs sim {}",
+            s.phases.total(),
+            s.sim_seconds
+        );
+    }
+    // Snapshots are monotone: a lane that retired later carries at least
+    // the sim time of an earlier one.
+    assert!(outs[0].stats.sim_seconds >= outs[1].stats.sim_seconds);
+    Ok(())
+}
+
+#[test]
+fn cpu_baseline_batch_falls_back_sequentially() -> Result<(), SolverError> {
+    // The CPU baseline has no native batched path: solve_batch must fall
+    // back to per-query solves with identical results (and identical
+    // native-tolerance semantics).
+    let m = test_matrix(300, 31);
+    let mut solver = Solver::builder().k(4).backend(Backend::CpuBaseline).build()?;
+    let mut prepared = solver.prepare(&m)?;
+    let mut session = solver.session(&mut prepared);
+    let queries: Vec<QueryParams> =
+        (0..2u64).map(|i| QueryParams::new().seed(50 + i)).collect();
+    let outs = session.solve_batch(&queries)?;
+    assert_eq!(outs.len(), 2);
+    for (qi, (q, out)) in queries.iter().zip(&outs).enumerate() {
+        assert_eq!(out.stats.backend, "cpu");
+        let solo = session.solve(q)?;
+        for (a, b) in out.eigenvalues.iter().zip(&solo.eigenvalues) {
+            assert_eq!(a.to_bits(), b.to_bits(), "cpu lane {qi}");
+        }
+    }
+    assert_eq!(session.solves(), 4);
+    Ok(())
+}
+
+#[test]
+fn batch_of_one_matches_solo_exactly() -> Result<(), SolverError> {
+    // Degenerate B=1 block: same machinery, same bits.
+    let m = test_matrix(350, 37);
+    let mut solver = builder(PrecisionConfig::FFF, 2).build()?;
+    let mut prepared = solver.prepare(&m)?;
+    let mut session = solver.session(&mut prepared);
+    let q = QueryParams::new().seed(123);
+    let outs = session.solve_batch(std::slice::from_ref(&q))?;
+    let solo = session.solve(&q)?;
+    assert_bit_identical(&outs[0], &solo, "B=1");
+    Ok(())
+}
