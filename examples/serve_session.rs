@@ -34,7 +34,7 @@ fn main() -> Result<(), SolverError> {
     println!(
         "prepared once in {:.1} ms ({} device-resident bytes, out-of-core: {})",
         prepare_s * 1e3,
-        prepared.device_bytes(),
+        prepared.resident_bytes(),
         prepared.out_of_core()
     );
 

@@ -13,8 +13,11 @@
 //!     forced-sequential), PJRT, and the CPU baseline,
 //!   * batched block-query serving (`solve_batch`): per-query steady-state
 //!     medians at B ∈ {1, 4, 8} on the resident and the out-of-core
-//!     configs, against the solo session solve — the `batch` block of the
-//!     schema-3 JSON,
+//!     configs, against the solo session solve — the `batch` block,
+//!   * the serving runtime (`topk_eigen::serve`): a fixed seeded workload
+//!     replayed through registry + coalescer + server, resident vs
+//!     eviction-pressure — wallclock plus simulated throughput/p99 — the
+//!     `serve` block of the schema-4 JSON,
 //!   * the coordinator overhead fraction — the share of the hostsim solve
 //!     wallclock spent *outside* kernel execution, measured by a timing
 //!     wrapper around the kernel interface.
@@ -40,6 +43,9 @@ use topk_eigen::coordinator::{ExecPolicy, ReorthMode};
 use topk_eigen::precision::PrecisionConfig;
 use topk_eigen::rng::Rng;
 use topk_eigen::runtime::{HostKernels, Kernels, PjrtKernels};
+use topk_eigen::serve::{
+    CoalescerConfig, EigenServer, MatrixRegistry, RegistryConfig, ServeReport, WorkloadSpec,
+};
 use topk_eigen::sparse::{suite, Ell};
 use topk_eigen::{Backend, Eigensolve, QueryParams, Solver};
 
@@ -355,7 +361,7 @@ fn main() {
     let tprep = time(r, || {
         let mut solver = builder(Backend::HostSim).build().expect("config");
         let prep = solver.prepare(&m).expect("prepare");
-        std::hint::black_box(prep.device_bytes());
+        std::hint::black_box(prep.resident_bytes());
     });
     t.row(&[
         "prepare hostsim".into(),
@@ -461,6 +467,103 @@ fn main() {
         .raw("ooc", batch_ooc_json)
         .finish();
 
+    // ---- Serving runtime (schema 4) ---------------------------------------
+    // A fixed seeded workload (24 queries, 500 q/s open-loop over two
+    // matrices) replayed through the full registry/coalescer/server stack,
+    // twice: with every prepared state resident, and under eviction
+    // pressure (budget 0 ⇒ every matrix switch re-prepares). The workload
+    // is deterministic, so the simulated throughput/p99 are exact across
+    // hosts; the wallclock median is the regression tripwire.
+    let serve_matrices: Vec<(String, topk_eigen::Csr)> = ["WB-GO", "FL"]
+        .iter()
+        .map(|id| (id.to_string(), suite::find(id).unwrap().generate_csr(s * 2.0, 7)))
+        .collect();
+    let serve_spec = WorkloadSpec::uniform(11, 24, 500.0, &["WB-GO", "FL"], 8);
+    let run_serve = |budget: usize| -> ServeReport {
+        let solver = Solver::builder()
+            .k(8)
+            .precision(cfg)
+            .devices(2)
+            .reorth(ReorthMode::Full)
+            .device_mem_bytes(1 << 30)
+            .backend(Backend::HostSim)
+            .build()
+            .expect("config");
+        let mut reg = MatrixRegistry::new(
+            solver,
+            RegistryConfig { budget_bytes: budget, ..RegistryConfig::default() },
+        );
+        for (name, m) in &serve_matrices {
+            reg.register(name, m);
+        }
+        let mut server = EigenServer::new(
+            reg,
+            CoalescerConfig { max_batch: 4, max_wait_s: 0.01, bulk_wait_factor: 4.0 },
+        );
+        let arrivals = {
+            let r = server.registry();
+            serve_spec.generate(|n| r.index_of(n)).expect("workload")
+        };
+        server.run(&arrivals).expect("serve run")
+    };
+    let mut serve_res: Option<ServeReport> = None;
+    let tserve_res = time(r, || {
+        let rep = run_serve(1 << 30);
+        std::hint::black_box(rep.queries);
+        serve_res = Some(rep);
+    });
+    let serve_res = serve_res.expect("timed at least once");
+    t.row(&[
+        "serve 24q resident".into(),
+        fmt_secs(tserve_res.median_s),
+        fmt_secs(tserve_res.min_s),
+        format!(
+            "{:.0} q/s sim, p99 {:.2e}s, {} batches",
+            serve_res.throughput_qps, serve_res.latency.p99, serve_res.batches
+        ),
+    ]);
+    let mut serve_prs: Option<ServeReport> = None;
+    let tserve_prs = time(r, || {
+        let rep = run_serve(0);
+        std::hint::black_box(rep.queries);
+        serve_prs = Some(rep);
+    });
+    let serve_prs = serve_prs.expect("timed at least once");
+    t.row(&[
+        "serve 24q evict-pressure".into(),
+        fmt_secs(tserve_prs.median_s),
+        fmt_secs(tserve_prs.min_s),
+        format!(
+            "{:.0} q/s sim, p99 {:.2e}s, {} prepares/{} evictions",
+            serve_prs.throughput_qps,
+            serve_prs.latency.p99,
+            serve_prs.prepares,
+            serve_prs.evictions
+        ),
+    ]);
+    if serve_prs.evictions == 0 {
+        eprintln!(
+            "warning: the eviction-pressure serve config did not evict — the \
+             pressure rows measure the resident path"
+        );
+    }
+    let serve_block = |t: &Timing, rep: &ServeReport| {
+        JsonObj::new()
+            .num("wall_median_s", t.median_s)
+            .num("wall_min_s", t.min_s)
+            .num("throughput_qps", rep.throughput_qps)
+            .num("p99_latency_s", rep.latency.p99)
+            .num("p50_latency_s", rep.latency.p50)
+            .num("mean_batch_size", rep.mean_batch_size)
+            .int("prepares", rep.prepares)
+            .int("evictions", rep.evictions)
+            .finish()
+    };
+    let serve_json = JsonObj::new()
+        .raw("resident", serve_block(&tserve_res, &serve_res))
+        .raw("pressure", serve_block(&tserve_prs, &serve_prs))
+        .finish();
+
     // Coordinator overhead: one instrumented solve; the fraction of the
     // wall spent outside kernel execution. Forced sequential — with
     // threads, per-device kernel times overlap and their sum can exceed
@@ -527,7 +630,7 @@ fn main() {
 
     // ---- BENCH_perf.json -------------------------------------------------
     let json = JsonObj::new()
-        .int("schema", 3)
+        .int("schema", 4)
         .str("bench", "perf_hotpath")
         .num("scale", s)
         .int("reps", r)
@@ -538,6 +641,7 @@ fn main() {
         .raw("paths", paths.finish())
         .raw("session", session_json)
         .raw("batch", batch_json)
+        .raw("serve", serve_json)
         .num("coordinator_overhead_frac", overhead_frac)
         .finish();
     let json_path =
@@ -596,6 +700,30 @@ fn main() {
                     }
                     None => eprintln!(
                         "warning: no batch_b4_per_query_median_s_max in {floor_path}"
+                    ),
+                }
+                // Serving-runtime floor (schema 4): the resident-config
+                // serve run's wallclock median.
+                match topk_eigen::bench_util::json_get_num(
+                    &floor,
+                    "serve_resident_wall_s_max",
+                ) {
+                    Some(max) if tserve_res.median_s > max => {
+                        eprintln!(
+                            "PERF REGRESSION: serve resident wall median {} exceeds \
+                             floor {} (from {floor_path})",
+                            tserve_res.median_s, max
+                        );
+                        std::process::exit(1);
+                    }
+                    Some(max) => {
+                        println!(
+                            "perf floor ok: serve resident wall median {:.4}s <= {max}s",
+                            tserve_res.median_s
+                        );
+                    }
+                    None => eprintln!(
+                        "warning: no serve_resident_wall_s_max in {floor_path}"
                     ),
                 }
             }

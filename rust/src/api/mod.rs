@@ -58,6 +58,11 @@
 //!   ([`SolverBuilder::tolerance`]) rides on it.
 //! * [`SolveReport`] serializes solution + stats to JSON
 //!   (`topk-eigen solve --report out.json`).
+//!
+//! The layer above the per-matrix lifecycle — a registry of prepared
+//! matrices with LRU eviction, a batch-coalescing scheduler and a
+//! simulated-clock serve loop for multi-matrix traffic — lives in
+//! [`crate::serve`] (`topk-eigen serve` on the CLI).
 
 pub mod builder;
 pub mod error;

@@ -80,12 +80,24 @@ impl PreparedMatrix<'_> {
         }
     }
 
-    /// Total device-resident bytes reserved across the fleet at prepare
-    /// time (`0` for the CPU baseline).
-    pub fn device_bytes(&self) -> usize {
+    /// Simulated device memory actually charged for keeping this matrix
+    /// prepared (fleet total): the per-device reservations made at prepare
+    /// time — vector working set plus the resident matrix slab; streamed
+    /// out-of-core chunks are not counted. This is the canonical value for
+    /// anything that budgets prepared-state residency (the serve
+    /// [`crate::serve::MatrixRegistry`] evicts against it). `0` for the
+    /// CPU baseline, which keeps nothing device-resident.
+    pub fn resident_bytes(&self) -> usize {
         match &self.kind {
-            PreparedKind::Gpu(p) => p.device_bytes(),
+            PreparedKind::Gpu(p) => p.resident_bytes(),
             PreparedKind::Cpu { .. } => 0,
         }
+    }
+
+    /// Total device-resident bytes reserved across the fleet at prepare
+    /// time (`0` for the CPU baseline). Alias of
+    /// [`PreparedMatrix::resident_bytes`].
+    pub fn device_bytes(&self) -> usize {
+        self.resident_bytes()
     }
 }

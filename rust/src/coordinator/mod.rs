@@ -601,9 +601,21 @@ impl PreparedState {
         self.out_of_core
     }
 
-    /// Total device-resident bytes reserved across the fleet.
-    pub fn device_bytes(&self) -> usize {
+    /// Simulated device memory actually charged for this prepared matrix
+    /// across the fleet — the canonical answer to "how much device memory
+    /// does keeping this matrix prepared cost?". Sums each device's
+    /// reservation made at prepare time (vector working set + resident
+    /// matrix slab); out-of-core chunks that stream per iteration are not
+    /// counted, matching what the simulated [`DeviceMemory`] charged.
+    /// Cache/eviction layers (the serve registry) budget on this value.
+    pub fn resident_bytes(&self) -> usize {
         self.mem_used.iter().sum()
+    }
+
+    /// Total device-resident bytes reserved across the fleet.
+    /// Alias of [`PreparedState::resident_bytes`].
+    pub fn device_bytes(&self) -> usize {
+        self.resident_bytes()
     }
 
     /// Size (or grow) the batched workspaces for `lanes` concurrent
@@ -1193,7 +1205,6 @@ impl TopKSolver {
         }
 
         // ---- Phase 2: CPU Jacobi on T (paper Fig. 1 Ⓓ) ----------------------
-        let jacobi_start = Instant::now();
         let t = DenseSym::from_tridiagonal(&alpha, &beta);
         // Convergence threshold at the working precision: asking an f32
         // Jacobi for 1e-12 off-diagonals would spin the sweep limit.
@@ -1202,7 +1213,11 @@ impl TopKSolver {
             crate::precision::Storage::F64 => 1e-12,
         };
         let eig = jacobi_eigen(&t, cfg.precision.jacobi, jacobi_tol, 100);
-        phases.jacobi_cpu = jacobi_start.elapsed().as_secs_f64();
+        // The simulated clock takes the *modeled* CPU cost, not the
+        // measured wallclock: sim_seconds must be bit-reproducible across
+        // runs (the serving runtime's replay determinism rides on it). The
+        // real time is still inside `wall_seconds`.
+        phases.jacobi_cpu = cfg.cost.jacobi_seconds(alpha.len());
         for d in devices.iter_mut() {
             d.clock_s += phases.jacobi_cpu; // fleet idles while the CPU works
         }
@@ -1812,14 +1827,15 @@ impl TopKSolver {
             for &p in &finished {
                 let qid = active[p];
                 let keff = k_eff[qid];
-                let jacobi_start = Instant::now();
                 let t = DenseSym::from_tridiagonal(&alphas_t[qid], &betas_t[qid]);
                 let jacobi_tol = match cfg.precision.jacobi {
                     crate::precision::Storage::F32 => 1e-6,
                     crate::precision::Storage::F64 => 1e-12,
                 };
                 let eig = jacobi_eigen(&t, cfg.precision.jacobi, jacobi_tol, 100);
-                let jd = jacobi_start.elapsed().as_secs_f64();
+                // Modeled CPU charge, as in the solo path — keeps the
+                // batched sim clock bit-reproducible across runs.
+                let jd = cfg.cost.jacobi_seconds(alphas_t[qid].len());
                 phases.jacobi_cpu += jd;
                 for d in devices.iter_mut() {
                     d.clock_s += jd; // fleet idles while the CPU works

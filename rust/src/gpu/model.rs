@@ -48,6 +48,9 @@ pub struct CostModel {
     /// 32 B sectors: a random 4 B gather still moves 32 B — the reason SpMV
     /// dominates even at modest average degree.
     pub gather_sector_bytes: usize,
+    /// Host CPU throughput for the serial Jacobi phase, GFLOP/s (one Xeon
+    /// core on a small dense K×K problem).
+    pub cpu_gflops: f64,
 }
 
 impl Default for CostModel {
@@ -61,6 +64,7 @@ impl Default for CostModel {
             launch_s: 5e-6,
             h2d_gbs: 12.0,
             gather_sector_bytes: 32,
+            cpu_gflops: 8.0,
         }
     }
 }
@@ -94,6 +98,23 @@ impl CostModel {
             return 0.0;
         }
         self.launch_s + bytes as f64 / (self.h2d_gbs * 1e9)
+    }
+
+    /// Deterministic model of the serial CPU Jacobi phase on the K×K
+    /// tridiagonal (paper Fig. 1 Ⓓ): ~8 cyclic sweeps of k(k−1)/2
+    /// rotations, each updating two rows and two columns (~8k flops), at
+    /// [`CostModel::cpu_gflops`]. This charge — not the measured host
+    /// wallclock — advances the *simulated* clock, so `sim_seconds` is
+    /// bit-reproducible across runs and hosts (the serving runtime's
+    /// replay determinism rides on it); the measured time still lands in
+    /// `stats.wall_seconds` as part of the overall solve wall.
+    pub fn jacobi_seconds(&self, k: usize) -> f64 {
+        if k == 0 {
+            return 0.0;
+        }
+        let kf = k as f64;
+        let flops = 8.0 * 0.5 * kf * (kf - 1.0) * 8.0 * kf;
+        1e-6 + flops / (self.cpu_gflops * 1e9)
     }
 
     /// Byte/flop accounting of one ELL SpMV over `rows×width`, gathering

@@ -112,6 +112,55 @@
 //!
 //! The CLI equivalent is `topk-eigen solve --queries N --batch B`.
 //!
+//! ## Serving traffic: the multi-matrix runtime
+//!
+//! Real traffic is a *stream* of queries across *many* matrices, not a
+//! pre-formed batch against one. The [`serve`] subsystem turns that
+//! stream into well-packed batched solves:
+//!
+//! * [`serve::MatrixRegistry`] caches prepared state per named matrix
+//!   and LRU-evicts it under a simulated device-memory budget
+//!   ([`PreparedMatrix::resident_bytes`]); evicted matrices re-prepare on
+//!   demand and answer **bit-identically**.
+//! * [`serve::BatchCoalescer`] groups compatible queries per matrix into
+//!   blocks up to `max_batch`, with flush deadlines and priority classes.
+//! * [`serve::WorkloadSpec`] generates seeded open-loop (Poisson-ish)
+//!   arrivals over a weighted matrix mixture.
+//! * [`serve::EigenServer`] replays the stream on a **simulated clock**
+//!   and reports throughput plus p50/p95/p99 queue/prepare/solve latency
+//!   ([`serve::ServeReport`]) — byte-identical across replays of one
+//!   workload seed.
+//!
+//! ```no_run
+//! use topk_eigen::serve::{
+//!     CoalescerConfig, EigenServer, MatrixRegistry, RegistryConfig, WorkloadSpec,
+//! };
+//! use topk_eigen::{Solver, SolverError};
+//! # fn main() -> Result<(), SolverError> {
+//! let matrices = [
+//!     ("WB-GO", topk_eigen::sparse::suite::find("WB-GO").unwrap().generate_csr(1.0, 42)),
+//!     ("FL", topk_eigen::sparse::suite::find("FL").unwrap().generate_csr(1.0, 42)),
+//! ];
+//! let solver = Solver::builder().k(8).devices(2).build()?;
+//! let mut registry = MatrixRegistry::new(solver, RegistryConfig::default());
+//! for (name, m) in &matrices {
+//!     registry.register(name, m);
+//! }
+//! let mut server = EigenServer::new(registry, CoalescerConfig::default());
+//! let workload = WorkloadSpec::uniform(7, 64, 200.0, &["WB-GO", "FL"], 8);
+//! let arrivals = {
+//!     let reg = server.registry();
+//!     workload.generate(|n| reg.index_of(n))?
+//! };
+//! let report = server.run(&arrivals)?;
+//! report.print_table();
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! The CLI front-end is `topk-eigen serve` (`--json` for the
+//! machine-readable report).
+//!
 //! ## System shape
 //!
 //! The solver is two-phase:
@@ -177,6 +226,17 @@
 //! | custom backends: `spmv_into` only             | also `spmm_into`; blocked vector kernels have defaults  |
 //! | `solve --queries N`                           | `solve --queries N --batch B`                           |
 //!
+//! 0.5 adds the serving runtime; hand-rolled serving loops over sessions
+//! should migrate to the registry/scheduler/server stack:
+//!
+//! | hand-rolled serving (0.4)                     | serve runtime (0.5+)                                    |
+//! |-----------------------------------------------|---------------------------------------------------------|
+//! | one `PreparedMatrix` per matrix, kept forever | [`serve::MatrixRegistry`] (LRU under a memory budget)   |
+//! | manual query grouping into `solve_batch`      | [`serve::BatchCoalescer`] (max_batch + flush deadlines) |
+//! | ad-hoc traffic scripts                        | [`serve::WorkloadSpec`] (seeded, replayable)            |
+//! | `prepared.device_bytes()`                     | [`PreparedMatrix::resident_bytes`] (canonical accessor) |
+//! | `solve --queries N --batch B`                 | `topk-eigen serve` (mixture, rates, priorities, report) |
+//!
 //! The low-level types (`SolverConfig`, `TopKSolver`, `BaselineConfig`)
 //! remain public under [`coordinator`] / [`baseline`] for harnesses that
 //! need them; only the *root* re-exports are deprecated.
@@ -197,6 +257,7 @@ pub mod precision;
 pub mod prop;
 pub mod rng;
 pub mod runtime;
+pub mod serve;
 pub mod sparse;
 
 // ---- The 0.2 public surface -------------------------------------------------

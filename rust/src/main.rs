@@ -27,6 +27,9 @@ use topk_eigen::cli::{self, UsageError};
 use topk_eigen::coordinator::{ExecPolicy, ReorthMode, TopologyKind};
 use topk_eigen::metrics;
 use topk_eigen::runtime::Manifest;
+use topk_eigen::serve::{
+    CoalescerConfig, EigenServer, MatrixMix, MatrixRegistry, RegistryConfig, WorkloadSpec,
+};
 use topk_eigen::sparse::{mmio, suite, Csr};
 use topk_eigen::{
     Backend, Eigensolve, PrecisionConfig, QueryParams, SolveReport, Solver, SolverError,
@@ -64,6 +67,7 @@ fn main() {
     let cmd = args.positional().first().map(|s| s.as_str()).unwrap_or("help");
     let result = match cmd {
         "solve" => cmd_solve(&args),
+        "serve" => cmd_serve(&args),
         "generate" => cmd_generate(&args),
         "suite" => cmd_suite(&args),
         "matrices" => cmd_matrices(&args),
@@ -95,10 +99,37 @@ fn print_usage() {
          \n\
          USAGE:\n\
          \x20 topk-eigen solve    --suite <ID> | --matrix <file.mtx> [options]\n\
+         \x20 topk-eigen serve    --matrices <ID[:W],...> [options]   replay a seeded\n\
+         \x20                     query stream against a multi-matrix registry\n\
          \x20 topk-eigen generate --suite <ID> --out <file.mtx> [--scale S]\n\
-         \x20 topk-eigen matrices [--json]           list built-in matrix ids\n\
+         \x20 topk-eigen matrices [--json] [--scale S]  list built-in matrix ids\n\
+         \x20                     (--json adds est_rows/est_nnz at --scale)\n\
          \x20 topk-eigen suite                       Table I stand-ins (paper sizes)\n\
          \x20 topk-eigen info     [--artifacts <dir>]\n\
+         \n\
+         SERVE OPTIONS (plus --k/--precision/--devices/--reorth/--backend/\n\
+         --device-mem-mb/--topology/--exec/--tolerance from SOLVE):\n\
+         \x20 --matrices <m>      weighted mixture, e.g. WB-GO:3,FL:1\n\
+         \x20                     (weight defaults to 1)\n\
+         \x20 --scale <s>         suite scale for the generated matrices\n\
+         \x20 --gen-seed <n>      matrix-generation seed (default 42)\n\
+         \x20 --queries <n>       workload length (default 64)\n\
+         \x20 --rate <q>          mean arrivals per simulated second\n\
+         \x20                     (default 200)\n\
+         \x20 --workload-seed <n> arrival-stream seed (default 7); a fixed\n\
+         \x20                     seed replays bit-identically\n\
+         \x20 --k-choices <l>     per-query k drawn from this list, e.g.\n\
+         \x20                     4,8,16 (default: the solver --k)\n\
+         \x20 --bulk-frac <p>     fraction of bulk-priority queries\n\
+         \x20                     (default 0, all interactive)\n\
+         \x20 --max-batch <b>     coalescing block size cap (default 8)\n\
+         \x20 --max-wait <s>      interactive flush deadline, simulated\n\
+         \x20                     seconds (default 0.05)\n\
+         \x20 --bulk-wait-factor <f>  bulk deadline multiplier (default 4)\n\
+         \x20 --registry-budget-mb <m>  prepared-state LRU budget\n\
+         \x20                     (default 256)\n\
+         \x20 --json              print the machine-readable report to stdout\n\
+         \x20 --report <f.json>   also write the report to a file\n\
          \n\
          SOLVE OPTIONS:\n\
          \x20 --k <n>             eigencomponents (default 8; a maximum when\n\
@@ -364,7 +395,7 @@ fn cmd_solve_batch(
     let prepare_s = prep_wall.elapsed().as_secs_f64();
     println!(
         "prepared {name} in {prepare_s:.4}s ({} device bytes, ooc={})",
-        prepared.device_bytes(),
+        prepared.resident_bytes(),
         prepared.out_of_core()
     );
 
@@ -443,6 +474,245 @@ fn cmd_solve_batch(
     Ok(0)
 }
 
+const SERVE_FLAGS: &[&str] = &[
+    "matrices",
+    "scale",
+    "gen-seed",
+    "queries",
+    "rate",
+    "workload-seed",
+    "k-choices",
+    "bulk-frac",
+    "max-batch",
+    "max-wait",
+    "bulk-wait-factor",
+    "registry-budget-mb",
+    "json",
+    "report",
+    "k",
+    "precision",
+    "devices",
+    "reorth",
+    "backend",
+    "artifacts",
+    "tolerance",
+    "device-mem-mb",
+    "topology",
+    "exec",
+];
+
+/// `topk-eigen serve`: replay a seeded open-loop query stream over a
+/// weighted mixture of suite matrices through the serving runtime —
+/// registry (prepared-state LRU cache), batch coalescer, simulated-clock
+/// server — and print the latency/throughput report. A fixed
+/// `--workload-seed` replays bit-identically: `--json` output is
+/// byte-equal across runs.
+fn cmd_serve(args: &cli::Args) -> Result<i32, CliError> {
+    args.reject_unknown(SERVE_FLAGS)?;
+
+    // ---- Matrix mixture: "ID[:WEIGHT],ID[:WEIGHT],..." -------------------
+    let mix_str = args.get("matrices").unwrap_or("WB-GO,FL");
+    let mut entries: Vec<(&'static suite::SuiteEntry, f64)> = Vec::new();
+    for part in mix_str.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (id, weight) = match part.split_once(':') {
+            Some((id, w)) => {
+                let weight: f64 = w.parse().map_err(|_| {
+                    CliError::Usage(format!(
+                        "bad weight '{w}' for matrix '{id}' in --matrices \
+                         (expected ID or ID:WEIGHT)"
+                    ))
+                })?;
+                (id, weight)
+            }
+            None => (part, 1.0),
+        };
+        let e = suite::find(id).ok_or_else(|| unknown_suite_error(id))?;
+        if entries.iter().any(|(prev, _)| prev.id == e.id) {
+            return Err(CliError::Usage(format!(
+                "matrix '{}' appears twice in --matrices; fold its weight instead",
+                e.id
+            )));
+        }
+        entries.push((e, weight));
+    }
+    if entries.is_empty() {
+        return Err(CliError::Usage(
+            "--matrices needs at least one suite id (e.g. --matrices WB-GO:3,FL)".into(),
+        ));
+    }
+
+    // ---- Solver knobs (shared with `solve`) -------------------------------
+    let k: usize = args.try_get_or("k", 8usize)?;
+    let precision: PrecisionConfig = args.try_get_or("precision", PrecisionConfig::FDF)?;
+    let devices: usize = args.try_get_or("devices", 1usize)?;
+    let reorth: ReorthMode = args.try_get_or("reorth", ReorthMode::Full)?;
+    let topology = match args.get("topology").unwrap_or("dgx1") {
+        "nvswitch" => TopologyKind::NvSwitch,
+        "dgx1" => TopologyKind::Dgx1,
+        other => {
+            return Err(CliError::Usage(format!(
+                "bad value '{other}' for --topology (expected dgx1 or nvswitch)"
+            )))
+        }
+    };
+    let mem_mb: usize = args.try_get_or("device-mem-mb", 32usize)?;
+    let exec: ExecPolicy = args.try_get_or("exec", ExecPolicy::Auto)?;
+    let tolerance: Option<f64> = args.try_get("tolerance")?;
+    let backend = match args.try_get_or("backend", Backend::HostSim)? {
+        Backend::Pjrt { .. } => Backend::Pjrt {
+            artifacts: PathBuf::from(args.get("artifacts").unwrap_or("artifacts")),
+        },
+        b => b,
+    };
+
+    // ---- Workload & serving knobs ----------------------------------------
+    let scale: f64 = args.try_get_or("scale", 1.0)?;
+    let gen_seed: u64 = args.try_get_or("gen-seed", 42u64)?;
+    let queries: usize = args.try_get_or("queries", 64usize)?;
+    if queries == 0 {
+        return Err(CliError::Usage("--queries must be ≥ 1".into()));
+    }
+    let rate: f64 = args.try_get_or("rate", 200.0f64)?;
+    if !rate.is_finite() || rate <= 0.0 {
+        return Err(CliError::Usage(format!(
+            "--rate must be a finite number > 0 queries/second (got {rate})"
+        )));
+    }
+    let workload_seed: u64 = args.try_get_or("workload-seed", 7u64)?;
+    let bulk_frac: f64 = args.try_get_or("bulk-frac", 0.0f64)?;
+    if !bulk_frac.is_finite() || !(0.0..=1.0).contains(&bulk_frac) {
+        return Err(CliError::Usage(format!(
+            "--bulk-frac must be a probability in 0..=1 (got {bulk_frac})"
+        )));
+    }
+    let max_batch: usize = args.try_get_or("max-batch", 8usize)?;
+    if max_batch == 0 {
+        return Err(CliError::Usage("--max-batch must be ≥ 1".into()));
+    }
+    let max_wait: f64 = args.try_get_or("max-wait", 0.05f64)?;
+    if !max_wait.is_finite() || max_wait < 0.0 {
+        return Err(CliError::Usage(format!(
+            "--max-wait must be a finite number ≥ 0 (got {max_wait})"
+        )));
+    }
+    let bulk_wait_factor: f64 = args.try_get_or("bulk-wait-factor", 4.0f64)?;
+    if !bulk_wait_factor.is_finite() || bulk_wait_factor < 1.0 {
+        // A factor below 1 would give bulk queries an EARLIER deadline
+        // than interactive ones — the opposite of the class's meaning.
+        return Err(CliError::Usage(format!(
+            "--bulk-wait-factor must be a finite number ≥ 1 (got {bulk_wait_factor})"
+        )));
+    }
+    let budget_mb: usize = args.try_get_or("registry-budget-mb", 256usize)?;
+    let k_choices: Vec<usize> = match args.get("k-choices") {
+        None => vec![k],
+        Some(raw) => {
+            let mut out = Vec::new();
+            for tok in raw.split(',') {
+                let v: usize = tok.trim().parse().map_err(|_| {
+                    CliError::Usage(format!(
+                        "bad value '{tok}' in --k-choices (expected e.g. 4,8,16)"
+                    ))
+                })?;
+                out.push(v);
+            }
+            out
+        }
+    };
+    if let Some(&bad) = k_choices.iter().find(|&&c| c == 0 || c > k) {
+        return Err(CliError::Usage(format!(
+            "--k-choices value {bad} must be in 1..={k} (the prepared --k capacity)"
+        )));
+    }
+
+    let json_only = args.has("json");
+
+    // ---- Build the stack --------------------------------------------------
+    let solver = Solver::builder()
+        .k(k)
+        .precision(precision)
+        .devices(devices)
+        .reorth(reorth)
+        .device_mem_mb(mem_mb)
+        .topology(topology)
+        .exec(exec)
+        .backend(backend.clone())
+        .build()?;
+
+    let matrices: Vec<(String, Csr)> = entries
+        .iter()
+        .map(|(e, _)| (e.id.to_string(), e.generate_csr(scale, gen_seed)))
+        .collect();
+    if !json_only {
+        println!(
+            "serving {} matrices (backend={}, K≤{k}, {devices} device(s), \
+             registry budget {budget_mb} MiB):",
+            matrices.len(),
+            backend.name()
+        );
+        for ((name, m), (_, w)) in matrices.iter().zip(&entries) {
+            println!("  {name:<6} {} rows, {} nnz (weight {w})", m.rows, m.nnz());
+        }
+    }
+
+    let mut registry = MatrixRegistry::new(
+        solver,
+        RegistryConfig { budget_bytes: budget_mb << 20, ..RegistryConfig::default() },
+    );
+    for (name, m) in &matrices {
+        registry.register(name, m);
+    }
+    let mut server = EigenServer::new(
+        registry,
+        CoalescerConfig { max_batch, max_wait_s: max_wait, bulk_wait_factor },
+    );
+
+    let spec = WorkloadSpec {
+        seed: workload_seed,
+        queries,
+        rate_qps: rate,
+        mix: entries
+            .iter()
+            .map(|(e, w)| MatrixMix { name: e.id.to_string(), weight: *w })
+            .collect(),
+        k_choices,
+        bulk_fraction: bulk_frac,
+        tolerance,
+    };
+    let arrivals = {
+        let reg = server.registry();
+        spec.generate(|n| reg.index_of(n))?
+    };
+
+    let wall = std::time::Instant::now();
+    let report = server.run(&arrivals)?;
+    let wall_s = wall.elapsed().as_secs_f64();
+
+    if json_only {
+        // Machine mode: the report JSON is the *only* stdout line, so two
+        // runs with the same seed can be compared byte-for-byte.
+        println!("{}", report.to_json());
+    } else {
+        println!(
+            "\nreplayed {queries} queries (workload seed {workload_seed}, \
+             {rate} q/s open-loop) in {wall_s:.3}s wallclock\n"
+        );
+        report.print_table();
+    }
+    if let Some(path) = args.get("report") {
+        std::fs::write(path, format!("{}\n", report.to_json()))
+            .map_err(|e| CliError::Run(format!("writing {path}: {e}")))?;
+        if !json_only {
+            println!("report written to {path}");
+        }
+    }
+    Ok(0)
+}
+
 fn cmd_generate(args: &cli::Args) -> Result<i32, CliError> {
     args.reject_unknown(&["suite", "out", "scale", "seed"])?;
     let id: String = args.try_require("suite")?;
@@ -478,10 +748,14 @@ fn cmd_suite(args: &cli::Args) -> Result<i32, CliError> {
 }
 
 fn cmd_matrices(args: &cli::Args) -> Result<i32, CliError> {
-    args.reject_unknown(&["json"])?;
+    args.reject_unknown(&["json", "scale"])?;
+    let scale: f64 = args.try_get_or("scale", 1.0)?;
     if args.has("json") {
         // Machine-readable listing for benchmark/CI scripts — a stable
-        // JSON array instead of the human table.
+        // JSON array instead of the human table. `est_rows`/`est_nnz` are
+        // the sizes `--suite <ID> --scale <S>` will generate, so workload
+        // configs (and registry memory budgets) can be written without
+        // generating the matrix first.
         let entries: Vec<String> = suite::SUITE
             .iter()
             .map(|e| {
@@ -491,6 +765,9 @@ fn cmd_matrices(args: &cli::Args) -> Result<i32, CliError> {
                     .str("class", &format!("{:?}", e.class))
                     .num("paper_rows_m", e.paper_rows_m)
                     .num("paper_nnz_m", e.paper_nnz_m)
+                    .num("scale", scale)
+                    .int("est_rows", e.estimated_rows(scale))
+                    .int("est_nnz", e.estimated_nnz(scale))
                     .raw("out_of_core", e.out_of_core.to_string())
                     .str("description", &e.description())
                     .finish()

@@ -59,6 +59,53 @@ pub fn max_pairwise_coherence(vectors: &[Vec<f64>]) -> f64 {
     worst
 }
 
+/// Nearest-rank percentile of an **ascending-sorted** sample slice:
+/// `percentile(xs, 0.99)` is the smallest sample `x` such that at least
+/// 99 % of the samples are ≤ `x` (the classic serving-latency "p99").
+/// `q` is clamped to `[0, 1]`; an empty slice yields `0.0`. Nearest-rank
+/// (not interpolated) keeps the value an actual observed sample, which is
+/// what latency reporting wants and what makes the serve report
+/// bit-deterministic.
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let q = q.clamp(0.0, 1.0);
+    let rank = (q * sorted.len() as f64).ceil() as usize;
+    sorted[rank.max(1) - 1]
+}
+
+/// Summary statistics of a latency-like sample set: mean, max and the
+/// serving percentiles (p50/p95/p99 by nearest rank). Produced by
+/// [`LatencySummary::from_samples`]; used by the serve runtime's report.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LatencySummary {
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl LatencySummary {
+    /// Summarize `samples` (any order; a sorted copy is made internally).
+    /// An empty slice yields the all-zero summary.
+    pub fn from_samples(samples: &[f64]) -> Self {
+        if samples.is_empty() {
+            return LatencySummary::default();
+        }
+        let mut s = samples.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        LatencySummary {
+            mean: s.iter().sum::<f64>() / s.len() as f64,
+            p50: percentile(&s, 0.50),
+            p95: percentile(&s, 0.95),
+            p99: percentile(&s, 0.99),
+            max: *s.last().unwrap(),
+        }
+    }
+}
+
 /// `‖M v − λ v‖₂` for one eigenpair.
 pub fn l2_residual(m: &Csr, lambda: f64, v: &[f64]) -> f64 {
     let mut mv = vec![0.0; m.rows];
@@ -127,6 +174,28 @@ mod tests {
         let m = Csr::from_coo(&coo);
         let v: Vec<f64> = (0..n).map(|i| (i as f64).sin() + 1.5).collect();
         assert!(l2_residual(&m, 0.12345, &v) > 0.1);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0, 10.0];
+        assert_eq!(percentile(&xs, 0.50), 5.0);
+        assert_eq!(percentile(&xs, 0.95), 10.0);
+        assert_eq!(percentile(&xs, 0.99), 10.0);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 1.0), 10.0);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+        assert_eq!(percentile(&[7.5], 0.99), 7.5);
+    }
+
+    #[test]
+    fn latency_summary_orders_and_averages() {
+        let s = LatencySummary::from_samples(&[3.0, 1.0, 2.0, 4.0]);
+        assert_eq!(s.p50, 2.0);
+        assert_eq!(s.max, 4.0);
+        assert!((s.mean - 2.5).abs() < 1e-15);
+        assert!(s.p50 <= s.p95 && s.p95 <= s.p99 && s.p99 <= s.max);
+        assert_eq!(LatencySummary::from_samples(&[]), LatencySummary::default());
     }
 
     #[test]

@@ -1,0 +1,52 @@
+//! The serving runtime: turn a *stream of eigen-queries across many
+//! matrices* into well-packed batched solves.
+//!
+//! PR 3 (prepare/solve sessions) and PR 4 (batched block-query SpMM) gave
+//! the per-matrix primitives; this module is the layer above them — the
+//! shape of production traffic the ROADMAP north star names, where many
+//! queries hit a handful of very large matrices and the expensive asset
+//! is the *prepared* device state, not any single solve:
+//!
+//! * [`registry::MatrixRegistry`] — named matrices with lazy
+//!   [`crate::Solver::prepare`] and LRU eviction under a simulated
+//!   device-memory budget ([`crate::PreparedMatrix::resident_bytes`]), so
+//!   hot matrices keep their prepared state resident while cold ones are
+//!   re-prepared on demand (re-preparation is deterministic, so an
+//!   evicted matrix answers bit-identically after it comes back);
+//! * [`scheduler::BatchCoalescer`] — an admission queue that groups
+//!   compatible queries *per matrix* into blocks up to `max_batch`, with
+//!   a max-wait flush deadline and [`scheduler::Priority`] classes, ready
+//!   to feed [`crate::SolveSession::solve_batch`];
+//! * [`workload::WorkloadSpec`] — a seeded open-loop arrival generator
+//!   (exponential inter-arrival gaps ≈ Poisson traffic) over a weighted
+//!   mixture of matrices with per-query `k`/seed/tolerance;
+//! * [`server::EigenServer`] — the run loop on a **simulated clock**:
+//!   admit arrivals, coalesce, solve batches through the registry,
+//!   record per-query queue/prepare/solve latency, and report throughput
+//!   plus p50/p95/p99 ([`server::ServeReport`]).
+//!
+//! ## Determinism
+//!
+//! Every run is **bit-identical for a fixed workload seed**: arrivals,
+//! coalescing decisions, eviction order, per-lane eigenpairs and every
+//! latency in the report derive from seeded RNG state and the solver's
+//! *simulated* clocks (`stats.sim_seconds`, plus a cost-model charge for
+//! re-preparation) — never from host wallclock. That carries PR 4's
+//! batch-vs-solo equivalence proofs over to served traffic: each query
+//! answered by the server is bit-identical to the same `QueryParams` run
+//! through a standalone [`crate::SolveSession`] (asserted by
+//! `rust/tests/serve.rs`), including queries whose matrix was evicted and
+//! re-prepared in between.
+//!
+//! The CLI front-end is `topk-eigen serve` (see the README's
+//! "Serving traffic" section for the workload mini-format).
+
+pub mod registry;
+pub mod scheduler;
+pub mod server;
+pub mod workload;
+
+pub use registry::{MatrixRegistry, PrepareEvent, RegistryConfig, RegistryStats};
+pub use scheduler::{Batch, BatchCoalescer, CoalescerConfig, Priority, QueryArrival};
+pub use server::{EigenServer, QueryRecord, ServeReport};
+pub use workload::{MatrixMix, WorkloadSpec};

@@ -1,0 +1,296 @@
+//! Multi-matrix registry: named matrices, lazy preparation, LRU eviction
+//! under a simulated device-memory budget.
+//!
+//! The expensive asset in a served eigensolver is the *prepared* state —
+//! partitions, ELL/COO device layout, storage-precision replicas,
+//! workspaces, kernel forks — not any single solve. The registry treats
+//! that state as a cache: a query's matrix is prepared on first use
+//! ([`crate::Solver::prepare`]), its residency charged at
+//! [`crate::PreparedMatrix::resident_bytes`] against the configured
+//! budget, and the least-recently-used prepared matrices are evicted to
+//! make room. Because preparation is deterministic, an evicted matrix
+//! answers **bit-identically** after re-preparation — eviction costs
+//! latency, never accuracy (asserted in `rust/tests/serve.rs`).
+//!
+//! Re-preparation *time* on the simulated clock is modeled as the cost of
+//! re-uploading the prepared device image: the registry's
+//! [`crate::gpu::CostModel::h2d_seconds`] charge over `resident_bytes` —
+//! deterministic, unlike the host wallclock `prepare_seconds`.
+
+use crate::gpu::CostModel;
+use crate::sparse::Csr;
+use crate::{PreparedMatrix, QueryParams, SolveOutcome, Solver, SolverError};
+
+/// Registry policy: how much simulated device memory prepared matrices
+/// may occupy in aggregate, and the cost model pricing re-preparation.
+#[derive(Clone, Debug)]
+pub struct RegistryConfig {
+    /// Aggregate budget for prepared-state residency, in bytes. A single
+    /// matrix larger than the whole budget is still admitted (alone) —
+    /// the service must answer it; it just evicts everything else.
+    pub budget_bytes: usize,
+    /// Cost model charging the simulated re-preparation (h2d of the
+    /// prepared image).
+    pub cost: CostModel,
+}
+
+impl Default for RegistryConfig {
+    fn default() -> Self {
+        RegistryConfig { budget_bytes: 256 << 20, cost: CostModel::default() }
+    }
+}
+
+/// Counters the registry accumulates across a serve run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RegistryStats {
+    /// Preparations performed (cold starts + re-preparations).
+    pub prepares: usize,
+    /// Prepared states dropped to fit the budget.
+    pub evictions: usize,
+    /// Lookups answered from resident prepared state.
+    pub hits: usize,
+}
+
+/// What [`MatrixRegistry::ensure_prepared`] did for one lookup — the
+/// server charges `sim_prepare_s` to the batch that triggered it.
+#[derive(Clone, Copy, Debug)]
+pub struct PrepareEvent {
+    /// True when the matrix had to be (re-)prepared this lookup.
+    pub cold: bool,
+    /// Simulated seconds charged for the preparation (0 on a hit).
+    pub sim_prepare_s: f64,
+    /// Prepared states evicted to make room, this lookup.
+    pub evicted: usize,
+}
+
+struct Entry<'m> {
+    name: String,
+    matrix: &'m Csr,
+    prepared: Option<PreparedMatrix<'m>>,
+    /// Residency charge of `prepared` (kept when evicted: it is the
+    /// deterministic size the matrix will occupy again).
+    resident_bytes: usize,
+    /// LRU clock value of the last lookup.
+    last_used: u64,
+    /// Preparations of this entry (diagnostics / per-matrix report rows).
+    prepares: usize,
+}
+
+/// A fleet-wide registry of named matrices served by one [`Solver`]:
+/// prepared state is cached per matrix and LRU-evicted under
+/// [`RegistryConfig::budget_bytes`]. Matrices are borrowed (`'m`) from the
+/// caller — the workload owns them; the registry owns the solver and every
+/// prepared state.
+pub struct MatrixRegistry<'m> {
+    solver: Solver,
+    cfg: RegistryConfig,
+    entries: Vec<Entry<'m>>,
+    tick: u64,
+    stats: RegistryStats,
+}
+
+impl<'m> MatrixRegistry<'m> {
+    /// Registry served by `solver` under `cfg`'s residency budget.
+    pub fn new(solver: Solver, cfg: RegistryConfig) -> Self {
+        MatrixRegistry { solver, cfg, entries: Vec::new(), tick: 0, stats: RegistryStats::default() }
+    }
+
+    /// Register a named matrix; returns its index (the id the scheduler
+    /// and workload use). Nothing is prepared until the first query.
+    pub fn register(&mut self, name: &str, matrix: &'m Csr) -> usize {
+        self.entries.push(Entry {
+            name: name.to_string(),
+            matrix,
+            prepared: None,
+            resident_bytes: 0,
+            last_used: 0,
+            prepares: 0,
+        });
+        self.entries.len() - 1
+    }
+
+    /// Index of a registered name (first match).
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.entries.iter().position(|e| e.name == name)
+    }
+
+    /// Name of entry `idx`.
+    pub fn name(&self, idx: usize) -> &str {
+        &self.entries[idx].name
+    }
+
+    /// The matrix registered at `idx`.
+    pub fn matrix(&self, idx: usize) -> &'m Csr {
+        self.entries[idx].matrix
+    }
+
+    /// Registered matrix count.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when nothing is registered.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// True when entry `idx` currently holds prepared state.
+    pub fn is_resident(&self, idx: usize) -> bool {
+        self.entries[idx].prepared.is_some()
+    }
+
+    /// Aggregate residency of all currently prepared matrices.
+    pub fn resident_bytes(&self) -> usize {
+        self.entries
+            .iter()
+            .filter(|e| e.prepared.is_some())
+            .map(|e| e.resident_bytes)
+            .sum()
+    }
+
+    /// Lifetime counters.
+    pub fn stats(&self) -> RegistryStats {
+        self.stats
+    }
+
+    /// Preparations performed for entry `idx` (≥ 1 once it has served).
+    pub fn prepares_of(&self, idx: usize) -> usize {
+        self.entries[idx].prepares
+    }
+
+    /// Make entry `idx` resident: touch its LRU slot; on a miss, prepare
+    /// the matrix and evict least-recently-used prepared entries until the
+    /// aggregate residency fits the budget (prepare-then-trim: the new
+    /// state is charged first, then others are dropped — a matrix larger
+    /// than the whole budget is admitted alone).
+    pub fn ensure_prepared(&mut self, idx: usize) -> Result<PrepareEvent, SolverError> {
+        self.tick += 1;
+        self.entries[idx].last_used = self.tick;
+        if self.entries[idx].prepared.is_some() {
+            self.stats.hits += 1;
+            return Ok(PrepareEvent { cold: false, sim_prepare_s: 0.0, evicted: 0 });
+        }
+        let matrix: &'m Csr = self.entries[idx].matrix;
+        let prepared = self.solver.prepare(matrix)?;
+        let bytes = prepared.resident_bytes();
+        self.entries[idx].prepared = Some(prepared);
+        self.entries[idx].resident_bytes = bytes;
+        self.entries[idx].prepares += 1;
+        self.stats.prepares += 1;
+        let mut evicted = 0usize;
+        while self.resident_bytes() > self.cfg.budget_bytes {
+            // Oldest prepared entry other than the one just admitted.
+            let victim = self
+                .entries
+                .iter()
+                .enumerate()
+                .filter(|(i, e)| *i != idx && e.prepared.is_some())
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(i, _)| i);
+            let Some(v) = victim else { break };
+            self.entries[v].prepared = None;
+            evicted += 1;
+            self.stats.evictions += 1;
+        }
+        Ok(PrepareEvent {
+            cold: true,
+            sim_prepare_s: self.cfg.cost.h2d_seconds(bytes),
+            evicted,
+        })
+    }
+
+    /// Answer a coalesced batch against entry `idx`: ensure residency
+    /// (paying any prepare/evictions), then run the queries through one
+    /// [`crate::SolveSession::solve_batch`]. Outcomes come back in query
+    /// order, each bit-identical to the same query on a standalone
+    /// session.
+    pub fn solve_batch(
+        &mut self,
+        idx: usize,
+        queries: &[QueryParams],
+    ) -> Result<(Vec<SolveOutcome>, PrepareEvent), SolverError> {
+        let event = self.ensure_prepared(idx)?;
+        let MatrixRegistry { solver, entries, .. } = self;
+        let prep = entries[idx].prepared.as_mut().expect("ensured resident");
+        let outs = solver.session(prep).solve_batch(queries)?;
+        Ok((outs, event))
+    }
+
+    /// Consume the registry, returning its solver (test/diagnostic use).
+    pub fn into_solver(self) -> Solver {
+        self.solver
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::suite;
+    use crate::PrecisionConfig;
+
+    fn solver() -> Solver {
+        Solver::builder()
+            .k(4)
+            .precision(PrecisionConfig::FDF)
+            .devices(1)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn lazy_prepare_and_hit() {
+        let a = suite::find("WB-GO").unwrap().generate_csr(0.3, 1);
+        let mut reg = MatrixRegistry::new(solver(), RegistryConfig::default());
+        let ia = reg.register("a", &a);
+        assert!(!reg.is_resident(ia));
+        let e1 = reg.ensure_prepared(ia).unwrap();
+        assert!(e1.cold && e1.sim_prepare_s > 0.0);
+        let e2 = reg.ensure_prepared(ia).unwrap();
+        assert!(!e2.cold && e2.sim_prepare_s == 0.0);
+        let s = reg.stats();
+        assert_eq!((s.prepares, s.hits, s.evictions), (1, 1, 0));
+        assert!(reg.resident_bytes() > 0);
+    }
+
+    #[test]
+    fn lru_evicts_oldest_under_pressure() {
+        let a = suite::find("WB-GO").unwrap().generate_csr(0.3, 1);
+        let b = suite::find("FL").unwrap().generate_csr(0.3, 1);
+        let c = suite::find("WB-TA").unwrap().generate_csr(0.3, 1);
+        // Probe each matrix's prepared residency so the budget can be set
+        // to hold {a, b} or {a, c}, but never all three.
+        let mut probe = solver();
+        let sa = probe.prepare(&a).unwrap().resident_bytes();
+        let sb = probe.prepare(&b).unwrap().resident_bytes();
+        let sc = probe.prepare(&c).unwrap().resident_bytes();
+        let budget = sa + sb.max(sc) + sb.min(sc) / 2;
+        let mut reg = MatrixRegistry::new(
+            solver(),
+            RegistryConfig { budget_bytes: budget, ..RegistryConfig::default() },
+        );
+        let (ia, ib, ic) =
+            (reg.register("a", &a), reg.register("b", &b), reg.register("c", &c));
+        reg.ensure_prepared(ia).unwrap();
+        reg.ensure_prepared(ib).unwrap();
+        assert_eq!(reg.stats().evictions, 0, "a and b fit together");
+        reg.ensure_prepared(ia).unwrap(); // touch a — b becomes LRU
+        let e = reg.ensure_prepared(ic).unwrap();
+        assert!(e.cold && e.evicted >= 1);
+        assert!(!reg.is_resident(ib), "LRU entry evicted first");
+        assert!(reg.is_resident(ia) && reg.is_resident(ic));
+        assert!(reg.resident_bytes() <= budget);
+    }
+
+    #[test]
+    fn oversized_matrix_admitted_alone() {
+        let a = suite::find("WB-GO").unwrap().generate_csr(0.3, 1);
+        let mut reg = MatrixRegistry::new(
+            solver(),
+            RegistryConfig { budget_bytes: 1, ..RegistryConfig::default() },
+        );
+        let ia = reg.register("a", &a);
+        let e = reg.ensure_prepared(ia).unwrap();
+        assert!(e.cold);
+        assert!(reg.is_resident(ia), "must still serve a matrix bigger than the budget");
+    }
+}

@@ -1,0 +1,308 @@
+//! Batch-coalescing admission queue: group compatible queries per matrix
+//! into blocks for [`crate::SolveSession::solve_batch`].
+//!
+//! The scheduler trades a bounded amount of queueing delay for batch
+//! occupancy: a query waits at most its flush deadline (arrival time plus
+//! the priority class's max wait) before its matrix's queue is eligible
+//! to run, and a queue that fills to `max_batch` is eligible immediately.
+//! Two invariants hold by construction (and are asserted in tests):
+//!
+//! * a popped batch never mixes matrices and never exceeds `max_batch`;
+//! * once `now` reaches a queued query's flush deadline,
+//!   [`BatchCoalescer::ready_batch`] returns a batch — no query starves in
+//!   the queue past its deadline (it may still *wait for the fleet*;
+//!   backpressure is the server's to account, and shows up as queue
+//!   latency in the report).
+//!
+//! Everything here is a pure data structure over `f64` simulated time —
+//! no wallclock, no RNG — so scheduling decisions are bit-deterministic.
+
+use crate::QueryParams;
+use std::collections::VecDeque;
+
+/// Priority class of a query: how long the coalescer may hold it back to
+/// pack a fuller batch.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Priority {
+    /// Latency-sensitive: flushes after `max_wait_s`.
+    #[default]
+    Interactive,
+    /// Throughput-oriented: may wait `bulk_wait_factor × max_wait_s`,
+    /// giving the coalescer more room to fill its block.
+    Bulk,
+}
+
+impl Priority {
+    /// Canonical name as printed in reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Priority::Interactive => "interactive",
+            Priority::Bulk => "bulk",
+        }
+    }
+}
+
+/// One admitted query: which matrix it targets, its per-query solve knobs,
+/// and when it arrived on the simulated clock.
+#[derive(Clone, Debug)]
+pub struct QueryArrival {
+    /// Stable id (workload order) — report rows key on it.
+    pub id: u64,
+    /// Registry index of the target matrix.
+    pub matrix: usize,
+    /// Per-query solve knobs (k, seed, tolerance).
+    pub params: QueryParams,
+    /// Priority class (decides the flush deadline).
+    pub priority: Priority,
+    /// Arrival time on the simulated clock, seconds.
+    pub arrival_s: f64,
+}
+
+impl QueryArrival {
+    /// Latest simulated time the coalescer may hold this query before its
+    /// queue becomes eligible to run.
+    pub fn flush_deadline(&self, cfg: &CoalescerConfig) -> f64 {
+        let wait = match self.priority {
+            Priority::Interactive => cfg.max_wait_s,
+            Priority::Bulk => cfg.max_wait_s * cfg.bulk_wait_factor,
+        };
+        self.arrival_s + wait
+    }
+}
+
+/// Coalescing policy knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct CoalescerConfig {
+    /// Largest block handed to `solve_batch` (≥ 1).
+    pub max_batch: usize,
+    /// Max simulated seconds an [`Priority::Interactive`] query may sit in
+    /// the admission queue before its matrix is forced to run.
+    pub max_wait_s: f64,
+    /// Multiplier on `max_wait_s` for [`Priority::Bulk`] queries.
+    pub bulk_wait_factor: f64,
+}
+
+impl Default for CoalescerConfig {
+    fn default() -> Self {
+        CoalescerConfig { max_batch: 8, max_wait_s: 0.05, bulk_wait_factor: 4.0 }
+    }
+}
+
+/// A coalesced block: queries for **one** matrix, in arrival order, at
+/// most `max_batch` of them.
+#[derive(Debug)]
+pub struct Batch {
+    /// Registry index all queries in this batch share.
+    pub matrix: usize,
+    /// The queries, FIFO by arrival.
+    pub queries: Vec<QueryArrival>,
+}
+
+/// The admission queue: one FIFO per matrix, popped as coalesced batches.
+pub struct BatchCoalescer {
+    cfg: CoalescerConfig,
+    queues: Vec<VecDeque<QueryArrival>>,
+    pending: usize,
+}
+
+impl BatchCoalescer {
+    /// Queue over `n_matrices` registry slots.
+    pub fn new(cfg: CoalescerConfig, n_matrices: usize) -> Self {
+        assert!(cfg.max_batch >= 1, "max_batch must be ≥ 1");
+        BatchCoalescer {
+            cfg,
+            queues: (0..n_matrices).map(|_| VecDeque::new()).collect(),
+            pending: 0,
+        }
+    }
+
+    /// The configured policy.
+    pub fn config(&self) -> &CoalescerConfig {
+        &self.cfg
+    }
+
+    /// Admit one query (grows the per-matrix queue table if needed).
+    pub fn push(&mut self, q: QueryArrival) {
+        if q.matrix >= self.queues.len() {
+            self.queues.resize_with(q.matrix + 1, VecDeque::new);
+        }
+        self.pending += 1;
+        self.queues[q.matrix].push_back(q);
+    }
+
+    /// Queries currently held.
+    pub fn pending(&self) -> usize {
+        self.pending
+    }
+
+    /// A queue's flush deadline: the **minimum** over every queued entry,
+    /// not just the head's — a later-arriving interactive query can carry
+    /// an earlier deadline than a bulk query ahead of it, and must still
+    /// be able to force the queue to run (no-starvation invariant).
+    fn queue_deadline(&self, q: &VecDeque<QueryArrival>) -> Option<f64> {
+        q.iter()
+            .map(|e| e.flush_deadline(&self.cfg))
+            .min_by(|a, b| a.partial_cmp(b).unwrap())
+    }
+
+    /// Earliest flush deadline across every queued query — the next
+    /// simulated time at which [`BatchCoalescer::ready_batch`] could newly
+    /// return a batch (used by the server to advance its clock past idle
+    /// gaps).
+    pub fn next_deadline(&self) -> Option<f64> {
+        self.queues
+            .iter()
+            .filter_map(|q| self.queue_deadline(q))
+            .min_by(|a, b| a.partial_cmp(b).unwrap())
+    }
+
+    /// Pop the next runnable batch at simulated time `now`, if any. A
+    /// matrix queue is *eligible* when it holds `max_batch` queries (run
+    /// full blocks immediately) or when any queued entry's flush deadline
+    /// has passed. Among eligible queues the earliest deadline wins (ties
+    /// break on the lower matrix index), so the most-urgent query is
+    /// always served first — the no-starvation rule.
+    pub fn ready_batch(&mut self, now: f64) -> Option<Batch> {
+        let best = self
+            .queues
+            .iter()
+            .enumerate()
+            .filter_map(|(mi, q)| {
+                let deadline = self.queue_deadline(q)?;
+                let eligible = q.len() >= self.cfg.max_batch || deadline <= now;
+                eligible.then_some((deadline, mi))
+            })
+            .min_by(|a, b| a.partial_cmp(b).unwrap())?;
+        Some(self.pop_from(best.1))
+    }
+
+    /// Pop the earliest-deadline batch regardless of `now` — the drain
+    /// path for the end of a workload, when no further arrivals can fill
+    /// the block and waiting out the deadline would only add idle time.
+    pub fn flush_any(&mut self) -> Option<Batch> {
+        let best = self
+            .queues
+            .iter()
+            .enumerate()
+            .filter_map(|(mi, q)| Some((self.queue_deadline(q)?, mi)))
+            .min_by(|a, b| a.partial_cmp(b).unwrap())?;
+        Some(self.pop_from(best.1))
+    }
+
+    fn pop_from(&mut self, mi: usize) -> Batch {
+        let q = &mut self.queues[mi];
+        let take = q.len().min(self.cfg.max_batch);
+        let queries: Vec<QueryArrival> = q.drain(..take).collect();
+        self.pending -= queries.len();
+        Batch { matrix: mi, queries }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn q(id: u64, matrix: usize, arrival: f64, priority: Priority) -> QueryArrival {
+        QueryArrival {
+            id,
+            matrix,
+            params: QueryParams::new().seed(id),
+            priority,
+            arrival_s: arrival,
+        }
+    }
+
+    #[test]
+    fn holds_until_deadline_then_flushes() {
+        let cfg = CoalescerConfig { max_batch: 4, max_wait_s: 0.1, bulk_wait_factor: 4.0 };
+        let mut c = BatchCoalescer::new(cfg, 1);
+        c.push(q(0, 0, 0.0, Priority::Interactive));
+        assert!(c.ready_batch(0.05).is_none(), "under-full queue before deadline");
+        let b = c.ready_batch(0.1).expect("deadline reached");
+        assert_eq!(b.queries.len(), 1);
+        assert_eq!(c.pending(), 0);
+    }
+
+    #[test]
+    fn full_queue_runs_immediately() {
+        let cfg = CoalescerConfig { max_batch: 2, max_wait_s: 10.0, bulk_wait_factor: 1.0 };
+        let mut c = BatchCoalescer::new(cfg, 1);
+        c.push(q(0, 0, 0.0, Priority::Interactive));
+        c.push(q(1, 0, 0.0, Priority::Interactive));
+        c.push(q(2, 0, 0.0, Priority::Interactive));
+        let b = c.ready_batch(0.0).expect("full block");
+        assert_eq!(b.queries.len(), 2, "never exceeds max_batch");
+        assert_eq!(b.queries[0].id, 0, "FIFO by arrival");
+        assert_eq!(b.queries[1].id, 1);
+        assert_eq!(c.pending(), 1);
+    }
+
+    #[test]
+    fn batches_never_mix_matrices() {
+        let cfg = CoalescerConfig { max_batch: 8, max_wait_s: 0.0, bulk_wait_factor: 1.0 };
+        let mut c = BatchCoalescer::new(cfg, 2);
+        c.push(q(0, 0, 0.0, Priority::Interactive));
+        c.push(q(1, 1, 0.0, Priority::Interactive));
+        c.push(q(2, 0, 0.0, Priority::Interactive));
+        while let Some(b) = c.ready_batch(1.0) {
+            assert!(b.queries.iter().all(|x| x.matrix == b.matrix));
+        }
+        assert_eq!(c.pending(), 0);
+    }
+
+    #[test]
+    fn earliest_deadline_wins_across_matrices() {
+        let cfg = CoalescerConfig { max_batch: 8, max_wait_s: 0.1, bulk_wait_factor: 4.0 };
+        let mut c = BatchCoalescer::new(cfg, 2);
+        c.push(q(0, 1, 0.02, Priority::Interactive)); // deadline 0.12
+        c.push(q(1, 0, 0.0, Priority::Interactive)); // deadline 0.10 — oldest
+        let b = c.ready_batch(1.0).expect("both expired");
+        assert_eq!(b.matrix, 0, "longest-waiting head served first");
+    }
+
+    #[test]
+    fn bulk_waits_longer_than_interactive() {
+        let cfg = CoalescerConfig { max_batch: 8, max_wait_s: 0.1, bulk_wait_factor: 4.0 };
+        let mut c = BatchCoalescer::new(cfg, 1);
+        c.push(q(0, 0, 0.0, Priority::Bulk));
+        assert!(c.ready_batch(0.2).is_none(), "bulk deadline is 0.4");
+        assert_eq!(c.next_deadline(), Some(0.4));
+        assert!(c.ready_batch(0.4).is_some());
+    }
+
+    #[test]
+    fn interactive_behind_bulk_head_still_flushes_on_its_own_deadline() {
+        // The bulk head's deadline is 0.5; the interactive query queued
+        // behind it at t=0.25 promises 0.375. Eligibility must key on the
+        // queue's MINIMUM deadline, or the interactive query starves
+        // until the bulk deadline. (Values are binary-exact so the
+        // deadline comparisons are exact.)
+        let cfg =
+            CoalescerConfig { max_batch: 8, max_wait_s: 0.125, bulk_wait_factor: 4.0 };
+        let mut c = BatchCoalescer::new(cfg, 1);
+        c.push(q(0, 0, 0.0, Priority::Bulk));
+        c.push(q(1, 0, 0.25, Priority::Interactive));
+        assert_eq!(c.next_deadline(), Some(0.375));
+        assert!(c.ready_batch(0.25).is_none());
+        let b = c.ready_batch(0.375).expect("interactive deadline forces the queue");
+        // FIFO pop: the bulk head rides along, early.
+        assert_eq!(b.queries.len(), 2);
+        assert_eq!(b.queries[0].id, 0);
+    }
+
+    #[test]
+    fn flush_any_drains_everything() {
+        let cfg = CoalescerConfig { max_batch: 3, max_wait_s: 100.0, bulk_wait_factor: 1.0 };
+        let mut c = BatchCoalescer::new(cfg, 2);
+        for i in 0..5 {
+            c.push(q(i, (i % 2) as usize, 0.0, Priority::Interactive));
+        }
+        let mut total = 0;
+        while let Some(b) = c.flush_any() {
+            assert!(b.queries.len() <= 3);
+            total += b.queries.len();
+        }
+        assert_eq!(total, 5);
+        assert!(c.next_deadline().is_none());
+    }
+}

@@ -1,0 +1,439 @@
+//! The serve run loop: a simulated-clock event loop that admits a seeded
+//! arrival stream, coalesces it into per-matrix batches, answers them
+//! through the registry's prepared-state cache, and reports per-query
+//! latency and fleet throughput.
+//!
+//! Time model: one fleet serves one batch at a time (the solver owns one
+//! set of simulated devices). The clock is **simulated seconds**
+//! throughout — batch service time is the batch's max per-lane
+//! `stats.sim_seconds`, re-preparation is the registry's deterministic
+//! cost-model charge — so an entire run, including every latency
+//! percentile in the [`ServeReport`], is bit-identical across replays of
+//! the same workload. While a batch runs, newly arrived queries queue in
+//! the coalescer; their wait shows up as queue latency (open-loop
+//! backpressure, not admission refusal).
+
+use super::registry::MatrixRegistry;
+use super::scheduler::{BatchCoalescer, CoalescerConfig, Priority, QueryArrival};
+use crate::bench_util::{JsonObj, Table};
+use crate::metrics::LatencySummary;
+use crate::{QueryParams, SolverError};
+
+/// Per-query ledger entry of a serve run. All times are simulated
+/// seconds; `eigenvalues` carries the lane's full answer so replay
+/// harnesses and tests can assert bit-identity against standalone solves.
+#[derive(Clone, Debug)]
+pub struct QueryRecord {
+    /// Workload id (arrival order).
+    pub id: u64,
+    /// Registry index of the matrix served.
+    pub matrix: usize,
+    /// Priority class the query arrived with.
+    pub priority: Priority,
+    /// The solve knobs the query ran with.
+    pub params: QueryParams,
+    /// Arrival on the simulated clock.
+    pub arrival_s: f64,
+    /// When its batch started executing.
+    pub start_s: f64,
+    /// When its batch completed (= this query's completion).
+    pub done_s: f64,
+    /// Admission-queue wait: `start_s − arrival_s`.
+    pub queue_s: f64,
+    /// Simulated (re-)preparation charged to this query's batch (0 when
+    /// the matrix was resident).
+    pub prepare_s: f64,
+    /// This lane's simulated solve time.
+    pub solve_s: f64,
+    /// Size of the batch it rode in.
+    pub batch_size: usize,
+    /// True when the batch had to (re-)prepare the matrix.
+    pub cold: bool,
+    /// The lane's eigenvalues (bit-identical to a standalone solve).
+    pub eigenvalues: Vec<f64>,
+}
+
+impl QueryRecord {
+    /// End-to-end latency: completion minus arrival.
+    pub fn latency_s(&self) -> f64 {
+        self.done_s - self.arrival_s
+    }
+}
+
+/// Per-matrix rollup row of the report.
+#[derive(Clone, Debug)]
+pub struct MatrixServeLine {
+    pub name: String,
+    pub queries: usize,
+    pub batches: usize,
+    pub prepares: usize,
+    pub p99_latency_s: f64,
+}
+
+/// Outcome of one serve run: throughput, latency percentiles, batching
+/// and cache behavior, plus the full per-query ledger (`records`, not
+/// serialized). [`ServeReport::to_json`] is byte-identical across
+/// replays of the same seeded workload.
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    /// Queries completed.
+    pub queries: usize,
+    /// Batches executed.
+    pub batches: usize,
+    /// Mean queries per batch.
+    pub mean_batch_size: f64,
+    /// Simulated time of the last completion.
+    pub sim_end_s: f64,
+    /// Completed queries per simulated second.
+    pub throughput_qps: f64,
+    /// End-to-end latency summary (arrival → completion).
+    pub latency: LatencySummary,
+    /// Admission-queue wait summary.
+    pub queue: LatencySummary,
+    /// Total simulated seconds the fleet spent solving.
+    pub solve_s_total: f64,
+    /// Total simulated seconds spent (re-)preparing matrices.
+    pub prepare_s_total: f64,
+    /// Fleet busy fraction: (solve + prepare) / sim_end.
+    pub busy_frac: f64,
+    /// Registry preparations over the run.
+    pub prepares: usize,
+    /// Registry evictions over the run.
+    pub evictions: usize,
+    /// Registry prepared-state hits over the run.
+    pub hits: usize,
+    /// Prepared-state residency at the end of the run.
+    pub resident_bytes_end: usize,
+    /// Per-matrix rollups, registry order.
+    pub per_matrix: Vec<MatrixServeLine>,
+    /// Order-sensitive fold of every served eigenvalue's bits — two runs
+    /// produced identical eigenpairs iff the checksums match.
+    pub result_checksum: u64,
+    /// The full per-query ledger (excluded from JSON).
+    pub records: Vec<QueryRecord>,
+}
+
+fn summary_json(s: &LatencySummary) -> String {
+    JsonObj::new()
+        .num("mean_s", s.mean)
+        .num("p50_s", s.p50)
+        .num("p95_s", s.p95)
+        .num("p99_s", s.p99)
+        .num("max_s", s.max)
+        .finish()
+}
+
+impl ServeReport {
+    /// Machine-readable report (stable field order, full-precision
+    /// numbers): byte-identical across replays of one seeded workload.
+    pub fn to_json(&self) -> String {
+        let per_matrix: Vec<String> = self
+            .per_matrix
+            .iter()
+            .map(|m| {
+                JsonObj::new()
+                    .str("matrix", &m.name)
+                    .int("queries", m.queries)
+                    .int("batches", m.batches)
+                    .int("prepares", m.prepares)
+                    .num("p99_latency_s", m.p99_latency_s)
+                    .finish()
+            })
+            .collect();
+        JsonObj::new()
+            .str("report", "serve")
+            .int("schema", 1)
+            .int("queries", self.queries)
+            .int("batches", self.batches)
+            .num("mean_batch_size", self.mean_batch_size)
+            .num("sim_end_s", self.sim_end_s)
+            .num("throughput_qps", self.throughput_qps)
+            .raw("latency", summary_json(&self.latency))
+            .raw("queue", summary_json(&self.queue))
+            .num("solve_s_total", self.solve_s_total)
+            .num("prepare_s_total", self.prepare_s_total)
+            .num("busy_frac", self.busy_frac)
+            .int("prepares", self.prepares)
+            .int("evictions", self.evictions)
+            .int("hits", self.hits)
+            .int("resident_bytes_end", self.resident_bytes_end)
+            .raw("per_matrix", format!("[{}]", per_matrix.join(", ")))
+            .str("result_checksum", &format!("{:016x}", self.result_checksum))
+            .finish()
+    }
+
+    /// Human latency/throughput table (the `topk-eigen serve` output).
+    pub fn print_table(&self) {
+        let mut t = Table::new(&["matrix", "queries", "batches", "prepares", "p99 latency"]);
+        for m in &self.per_matrix {
+            t.row(&[
+                m.name.clone(),
+                m.queries.to_string(),
+                m.batches.to_string(),
+                m.prepares.to_string(),
+                format!("{:.4}s", m.p99_latency_s),
+            ]);
+        }
+        t.row(&[
+            "TOTAL".into(),
+            self.queries.to_string(),
+            self.batches.to_string(),
+            self.prepares.to_string(),
+            format!("{:.4}s", self.latency.p99),
+        ]);
+        t.print();
+        println!(
+            "\nthroughput {:.1} q/s over {:.4}s simulated | mean batch {:.2} | fleet busy {:.0}%",
+            self.throughput_qps,
+            self.sim_end_s,
+            self.mean_batch_size,
+            self.busy_frac * 100.0
+        );
+        println!(
+            "latency  p50 {:.4}s  p95 {:.4}s  p99 {:.4}s  max {:.4}s",
+            self.latency.p50, self.latency.p95, self.latency.p99, self.latency.max
+        );
+        println!(
+            "queueing p50 {:.4}s  p95 {:.4}s  p99 {:.4}s | prepare {:.4}s total ({} cold, {} hits, {} evictions)",
+            self.queue.p50,
+            self.queue.p95,
+            self.queue.p99,
+            self.prepare_s_total,
+            self.prepares,
+            self.hits,
+            self.evictions
+        );
+    }
+}
+
+/// The serving front-end: owns a [`MatrixRegistry`] and replays arrival
+/// streams against it under a [`CoalescerConfig`].
+pub struct EigenServer<'m> {
+    registry: MatrixRegistry<'m>,
+    coalescer: CoalescerConfig,
+}
+
+impl<'m> EigenServer<'m> {
+    /// Server over `registry`, coalescing with `coalescer`.
+    pub fn new(registry: MatrixRegistry<'m>, coalescer: CoalescerConfig) -> Self {
+        EigenServer { registry, coalescer }
+    }
+
+    /// The registry (stats, residency introspection).
+    pub fn registry(&self) -> &MatrixRegistry<'m> {
+        &self.registry
+    }
+
+    /// Consume the server, returning its registry.
+    pub fn into_registry(self) -> MatrixRegistry<'m> {
+        self.registry
+    }
+
+    /// Replay `arrivals` (ascending `arrival_s`; a workload generator's
+    /// output already is) to completion and report. Deterministic: same
+    /// arrivals + same registry configuration ⇒ byte-identical
+    /// [`ServeReport::to_json`].
+    pub fn run(&mut self, arrivals: &[QueryArrival]) -> Result<ServeReport, SolverError> {
+        let mut coal = BatchCoalescer::new(self.coalescer, self.registry.len());
+        let mut next = 0usize; // next unadmitted arrival
+        let mut now = 0.0f64;
+        let mut records: Vec<QueryRecord> = Vec::with_capacity(arrivals.len());
+        let mut batches = 0usize;
+        let mut solve_s_total = 0.0f64;
+        let mut prepare_s_total = 0.0f64;
+        let mut checksum = 0u64;
+
+        loop {
+            while next < arrivals.len() && arrivals[next].arrival_s <= now {
+                coal.push(arrivals[next].clone());
+                next += 1;
+            }
+            let batch = match coal.ready_batch(now) {
+                Some(b) => Some(b),
+                // Once the arrival stream is exhausted no queue can fill
+                // further — drain immediately instead of idling out the
+                // flush deadlines.
+                None if next >= arrivals.len() => coal.flush_any(),
+                None => None,
+            };
+            let Some(batch) = batch else {
+                if next >= arrivals.len() {
+                    break; // drained
+                }
+                // Idle: jump to the next event (arrival or flush deadline).
+                let mut t = arrivals[next].arrival_s;
+                if let Some(d) = coal.next_deadline() {
+                    t = t.min(d);
+                }
+                now = t.max(now);
+                continue;
+            };
+
+            let params: Vec<QueryParams> = batch.queries.iter().map(|q| q.params).collect();
+            let (outs, ev) = self.registry.solve_batch(batch.matrix, &params)?;
+            let start = now;
+            let solve_dur =
+                outs.iter().map(|o| o.stats.sim_seconds).fold(0.0f64, f64::max);
+            let done = start + ev.sim_prepare_s + solve_dur;
+            batches += 1;
+            solve_s_total += solve_dur;
+            prepare_s_total += ev.sim_prepare_s;
+            for (q, o) in batch.queries.iter().zip(&outs) {
+                for l in &o.eigenvalues {
+                    checksum = checksum.rotate_left(7) ^ l.to_bits();
+                }
+                records.push(QueryRecord {
+                    id: q.id,
+                    matrix: q.matrix,
+                    priority: q.priority,
+                    params: q.params,
+                    arrival_s: q.arrival_s,
+                    start_s: start,
+                    done_s: done,
+                    queue_s: start - q.arrival_s,
+                    prepare_s: ev.sim_prepare_s,
+                    solve_s: o.stats.sim_seconds,
+                    batch_size: batch.queries.len(),
+                    cold: ev.cold,
+                    eigenvalues: o.eigenvalues.clone(),
+                });
+            }
+            now = done;
+        }
+
+        let sim_end_s = now;
+        let lat: Vec<f64> = records.iter().map(|r| r.latency_s()).collect();
+        let queue: Vec<f64> = records.iter().map(|r| r.queue_s).collect();
+        let stats = self.registry.stats();
+        let per_matrix = (0..self.registry.len())
+            .map(|mi| {
+                let mine: Vec<f64> = records
+                    .iter()
+                    .filter(|r| r.matrix == mi)
+                    .map(|r| r.latency_s())
+                    .collect();
+                let mut batch_starts: Vec<u64> = records
+                    .iter()
+                    .filter(|r| r.matrix == mi)
+                    .map(|r| r.start_s.to_bits())
+                    .collect();
+                batch_starts.dedup();
+                MatrixServeLine {
+                    name: self.registry.name(mi).to_string(),
+                    queries: mine.len(),
+                    batches: batch_starts.len(),
+                    prepares: self.registry.prepares_of(mi),
+                    p99_latency_s: LatencySummary::from_samples(&mine).p99,
+                }
+            })
+            .collect();
+        Ok(ServeReport {
+            queries: records.len(),
+            batches,
+            mean_batch_size: if batches > 0 {
+                records.len() as f64 / batches as f64
+            } else {
+                0.0
+            },
+            sim_end_s,
+            throughput_qps: if sim_end_s > 0.0 {
+                records.len() as f64 / sim_end_s
+            } else {
+                0.0
+            },
+            latency: LatencySummary::from_samples(&lat),
+            queue: LatencySummary::from_samples(&queue),
+            solve_s_total,
+            prepare_s_total,
+            busy_frac: if sim_end_s > 0.0 {
+                (solve_s_total + prepare_s_total) / sim_end_s
+            } else {
+                0.0
+            },
+            prepares: stats.prepares,
+            evictions: stats.evictions,
+            hits: stats.hits,
+            resident_bytes_end: self.registry.resident_bytes(),
+            per_matrix,
+            result_checksum: checksum,
+            records,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::registry::RegistryConfig;
+    use crate::serve::workload::WorkloadSpec;
+    use crate::sparse::suite;
+    use crate::{PrecisionConfig, Solver};
+
+    fn small_server<'m>(
+        matrices: &'m [(String, crate::Csr)],
+        budget: usize,
+    ) -> EigenServer<'m> {
+        let solver = Solver::builder()
+            .k(6)
+            .precision(PrecisionConfig::FDF)
+            .devices(1)
+            .build()
+            .unwrap();
+        let mut reg = MatrixRegistry::new(
+            solver,
+            RegistryConfig { budget_bytes: budget, ..RegistryConfig::default() },
+        );
+        for (name, m) in matrices {
+            reg.register(name, m);
+        }
+        EigenServer::new(
+            reg,
+            CoalescerConfig { max_batch: 4, max_wait_s: 0.01, bulk_wait_factor: 4.0 },
+        )
+    }
+
+    fn matrices() -> Vec<(String, crate::Csr)> {
+        vec![
+            ("WB-GO".into(), suite::find("WB-GO").unwrap().generate_csr(0.3, 1)),
+            ("FL".into(), suite::find("FL").unwrap().generate_csr(0.3, 1)),
+        ]
+    }
+
+    #[test]
+    fn empty_workload_reports_zeros() {
+        let ms = matrices();
+        let mut server = small_server(&ms, usize::MAX);
+        let rep = server.run(&[]).unwrap();
+        assert_eq!(rep.queries, 0);
+        assert_eq!(rep.batches, 0);
+        assert_eq!(rep.throughput_qps, 0.0);
+        assert!(rep.to_json().contains("\"report\": \"serve\""));
+    }
+
+    #[test]
+    fn run_is_deterministic_and_batched() {
+        let ms = matrices();
+        let spec = WorkloadSpec::uniform(11, 24, 500.0, &["WB-GO", "FL"], 6);
+        let run_once = || {
+            let mut server = small_server(&ms, usize::MAX);
+            let idx = |n: &str| server.registry().index_of(n);
+            let arrivals = spec.generate(idx).unwrap();
+            server.run(&arrivals).unwrap()
+        };
+        let a = run_once();
+        let b = run_once();
+        assert_eq!(a.to_json(), b.to_json(), "replay must be byte-identical");
+        assert_eq!(a.result_checksum, b.result_checksum);
+        assert_eq!(a.queries, 24);
+        assert!(a.batches < 24, "high-rate traffic must coalesce ({} batches)", a.batches);
+        assert!(a.mean_batch_size > 1.0);
+        // Records cover every arrival exactly once.
+        let mut ids: Vec<u64> = a.records.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..24).collect::<Vec<u64>>());
+        for r in &a.records {
+            assert!(r.queue_s >= 0.0 && r.done_s >= r.start_s && r.start_s >= r.arrival_s);
+            assert!(r.batch_size >= 1 && r.batch_size <= 4);
+        }
+    }
+}

@@ -1,0 +1,237 @@
+//! Seeded open-loop workload generation: a deterministic stream of
+//! eigen-queries over a weighted mixture of matrices.
+//!
+//! Arrivals follow an exponential inter-arrival process (the open-loop
+//! Poisson-ish traffic a service actually sees: requests do not wait for
+//! earlier ones to finish), and every per-query knob — target matrix,
+//! `k`, start-vector seed, priority class — is drawn from one seeded
+//! [`Rng`], so a `(spec, seed)` pair always produces the same query
+//! stream bit-for-bit. That determinism is what lets a serve run be
+//! replayed and its report compared byte-identically (`topk-eigen serve`
+//! twice with the same flags ⇒ identical `--json` output).
+
+use super::scheduler::{Priority, QueryArrival};
+use crate::rng::Rng;
+use crate::{QueryParams, SolverError};
+
+/// One component of the matrix mixture: a registered matrix name and its
+/// relative traffic weight.
+#[derive(Clone, Debug)]
+pub struct MatrixMix {
+    /// Registry name (see [`super::MatrixRegistry::register`]).
+    pub name: String,
+    /// Relative arrival weight (> 0).
+    pub weight: f64,
+}
+
+/// A reproducible traffic description: matrix mixture, arrival rate,
+/// per-query knob distributions, all driven by one seed.
+#[derive(Clone, Debug)]
+pub struct WorkloadSpec {
+    /// Seed for every random draw (arrival gaps, matrix pick, k, query
+    /// seeds, priority).
+    pub seed: u64,
+    /// Total queries to generate.
+    pub queries: usize,
+    /// Mean arrival rate, queries per simulated second.
+    pub rate_qps: f64,
+    /// Matrix mixture (weights need not be normalized).
+    pub mix: Vec<MatrixMix>,
+    /// Per-query `k` is drawn uniformly from these choices; every choice
+    /// must be ≤ the solver's prepared `k`.
+    pub k_choices: Vec<usize>,
+    /// Probability a query is [`Priority::Bulk`] (the rest are
+    /// interactive).
+    pub bulk_fraction: f64,
+    /// Optional per-query convergence tolerance (applied to every query).
+    pub tolerance: Option<f64>,
+}
+
+impl WorkloadSpec {
+    /// A minimal spec: uniform mixture over `names`, k fixed at `k`,
+    /// all-interactive traffic.
+    pub fn uniform(seed: u64, queries: usize, rate_qps: f64, names: &[&str], k: usize) -> Self {
+        WorkloadSpec {
+            seed,
+            queries,
+            rate_qps,
+            mix: names
+                .iter()
+                .map(|n| MatrixMix { name: n.to_string(), weight: 1.0 })
+                .collect(),
+            k_choices: vec![k],
+            bulk_fraction: 0.0,
+            tolerance: None,
+        }
+    }
+
+    /// Typed validation (rate/weights/choices ranges).
+    pub fn validate(&self) -> Result<(), SolverError> {
+        let invalid = |field: &'static str, message: String| {
+            Err(SolverError::InvalidConfig { field, message })
+        };
+        if self.mix.is_empty() {
+            return invalid("workload.mix", "workload needs at least one matrix".into());
+        }
+        if self.mix.iter().any(|m| !m.weight.is_finite() || m.weight <= 0.0) {
+            return invalid(
+                "workload.mix",
+                "matrix weights must be finite and > 0".into(),
+            );
+        }
+        if !self.rate_qps.is_finite() || self.rate_qps <= 0.0 {
+            return invalid(
+                "workload.rate_qps",
+                format!("arrival rate must be finite and > 0 (got {})", self.rate_qps),
+            );
+        }
+        if self.k_choices.is_empty() || self.k_choices.contains(&0) {
+            return invalid(
+                "workload.k_choices",
+                "k choices must be non-empty and every choice ≥ 1".into(),
+            );
+        }
+        if !(0.0..=1.0).contains(&self.bulk_fraction) {
+            return invalid(
+                "workload.bulk_fraction",
+                format!("bulk fraction must be in [0, 1] (got {})", self.bulk_fraction),
+            );
+        }
+        Ok(())
+    }
+
+    /// Generate the arrival stream. `resolve` maps a mixture name to its
+    /// registry index (typically [`super::MatrixRegistry::index_of`]);
+    /// unknown names are a typed error. The draw order per query is fixed
+    /// (gap, matrix, k, seed, priority), so the stream is a pure function
+    /// of the spec.
+    pub fn generate(
+        &self,
+        mut resolve: impl FnMut(&str) -> Option<usize>,
+    ) -> Result<Vec<QueryArrival>, SolverError> {
+        self.validate()?;
+        let indices: Vec<usize> = self
+            .mix
+            .iter()
+            .map(|m| {
+                resolve(&m.name).ok_or_else(|| SolverError::InvalidConfig {
+                    field: "workload.mix",
+                    message: format!("matrix '{}' is not registered", m.name),
+                })
+            })
+            .collect::<Result<_, _>>()?;
+        let total_w: f64 = self.mix.iter().map(|m| m.weight).sum();
+        let mut rng = Rng::new(self.seed);
+        let mut t = 0.0f64;
+        let mut out = Vec::with_capacity(self.queries);
+        for id in 0..self.queries as u64 {
+            // Exponential gap: -ln(1-u)/λ, u ∈ [0,1) so 1-u ∈ (0,1].
+            t += -(1.0 - rng.f64()).ln() / self.rate_qps;
+            let mut pick = rng.f64() * total_w;
+            let mut mi = indices.len() - 1;
+            for (i, m) in self.mix.iter().enumerate() {
+                pick -= m.weight;
+                if pick <= 0.0 {
+                    mi = i;
+                    break;
+                }
+            }
+            let k = self.k_choices[rng.range(0, self.k_choices.len())];
+            let mut params = QueryParams::new().k(k).seed(rng.next_u64());
+            if let Some(tol) = self.tolerance {
+                params = params.tolerance(tol);
+            }
+            let priority =
+                if rng.chance(self.bulk_fraction) { Priority::Bulk } else { Priority::Interactive };
+            out.push(QueryArrival {
+                id,
+                matrix: indices[mi],
+                params,
+                priority,
+                arrival_s: t,
+            });
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> WorkloadSpec {
+        WorkloadSpec {
+            seed: 7,
+            queries: 50,
+            rate_qps: 100.0,
+            mix: vec![
+                MatrixMix { name: "a".into(), weight: 3.0 },
+                MatrixMix { name: "b".into(), weight: 1.0 },
+            ],
+            k_choices: vec![4, 8],
+            bulk_fraction: 0.25,
+            tolerance: None,
+        }
+    }
+
+    fn resolve(name: &str) -> Option<usize> {
+        match name {
+            "a" => Some(0),
+            "b" => Some(1),
+            _ => None,
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let s = spec();
+        let x = s.generate(resolve).unwrap();
+        let y = s.generate(resolve).unwrap();
+        assert_eq!(x.len(), y.len());
+        for (a, b) in x.iter().zip(&y) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.matrix, b.matrix);
+            assert_eq!(a.params, b.params);
+            assert_eq!(a.priority, b.priority);
+            assert!(a.arrival_s.to_bits() == b.arrival_s.to_bits());
+        }
+        let mut s2 = spec();
+        s2.seed = 8;
+        let z = s2.generate(resolve).unwrap();
+        assert!(x.iter().zip(&z).any(|(a, b)| a.params != b.params));
+    }
+
+    #[test]
+    fn arrivals_increase_and_respect_mixture() {
+        let x = spec().generate(resolve).unwrap();
+        for w in x.windows(2) {
+            assert!(w[1].arrival_s >= w[0].arrival_s);
+        }
+        let to_a = x.iter().filter(|q| q.matrix == 0).count();
+        assert!(to_a > x.len() / 2, "3:1 weights should favor matrix a ({to_a}/{})", x.len());
+    }
+
+    #[test]
+    fn unknown_name_is_typed_error() {
+        let mut s = spec();
+        s.mix.push(MatrixMix { name: "ghost".into(), weight: 1.0 });
+        let err = s.generate(resolve).unwrap_err();
+        assert!(err.to_string().contains("ghost"), "{err}");
+    }
+
+    #[test]
+    fn validation_rejects_bad_fields() {
+        let mut s = spec();
+        s.rate_qps = 0.0;
+        assert!(s.validate().is_err());
+        let mut s = spec();
+        s.k_choices.clear();
+        assert!(s.validate().is_err());
+        let mut s = spec();
+        s.bulk_fraction = 1.5;
+        assert!(s.validate().is_err());
+        let mut s = spec();
+        s.mix.clear();
+        assert!(s.validate().is_err());
+    }
+}

@@ -121,6 +121,32 @@ impl SuiteEntry {
         self.paper_nnz_m / self.paper_rows_m
     }
 
+    /// Estimated generated row count at `scale` — what
+    /// [`SuiteEntry::generate`] will actually produce, accounting for the
+    /// per-class generator's shape (R-MAT rounds up to a power of two,
+    /// road meshes to a square of the side length), so workload configs
+    /// can be sized without generating the matrix first.
+    pub fn estimated_rows(&self, scale: f64) -> usize {
+        let n = self.target_rows(scale);
+        match self.class {
+            MatrixClass::Kron => 1usize << (n as f64).log2().ceil() as u32,
+            MatrixClass::Road => {
+                let side = ((n as f64).sqrt().round() as usize).max(8);
+                side * side
+            }
+            _ => n,
+        }
+    }
+
+    /// Estimated generated non-zero count at `scale`: the estimated rows
+    /// times the paper's (scale-invariant) average degree. An *estimate*
+    /// — generators are stochastic, but stay within a small factor (the
+    /// suite tests bound it), which is enough to budget device memory and
+    /// write workload configs before generating anything.
+    pub fn estimated_nnz(&self, scale: f64) -> usize {
+        (self.estimated_rows(scale) as f64 * self.target_avg_degree()).round() as usize
+    }
+
     /// Generate the stand-in matrix at `scale` with the suite's seed policy
     /// (deterministic per entry: seed ⊕ id hash).
     pub fn generate(&self, scale: f64, seed: u64) -> Coo {
@@ -237,6 +263,35 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn estimates_track_generated_sizes() {
+        // The whole point of the estimates is writing workload configs
+        // without generating: they must land within a small factor of what
+        // the generators actually produce.
+        for e in &SUITE[..6] {
+            let csr = e.generate_csr(0.3, 42);
+            let est_rows = e.estimated_rows(0.3);
+            let est_nnz = e.estimated_nnz(0.3);
+            let rows_ratio = est_rows as f64 / csr.rows as f64;
+            assert!(
+                (0.5..=2.0).contains(&rows_ratio),
+                "{}: est_rows {est_rows} vs {} generated",
+                e.id,
+                csr.rows
+            );
+            let nnz_ratio = est_nnz as f64 / csr.nnz() as f64;
+            assert!(
+                (0.2..=5.0).contains(&nnz_ratio),
+                "{}: est_nnz {est_nnz} vs {} generated",
+                e.id,
+                csr.nnz()
+            );
+        }
+        // Kron rounds to a power of two.
+        let kron = find("KRON").unwrap();
+        assert!(kron.estimated_rows(1.0).is_power_of_two());
     }
 
     #[test]

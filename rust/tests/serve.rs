@@ -1,0 +1,260 @@
+//! Integration tests of the serving runtime (`topk_eigen::serve`):
+//! registry LRU eviction with bit-identical re-preparation, scheduler
+//! invariants as observed through a full server run, replay determinism,
+//! and the headline guarantee — every query answered by the server is
+//! bit-identical to the same `QueryParams` run through a standalone
+//! `SolveSession`, including queries whose matrix was evicted and
+//! re-prepared in between.
+
+use topk_eigen::serve::{
+    CoalescerConfig, EigenServer, MatrixRegistry, Priority, QueryArrival, RegistryConfig,
+    ServeReport, WorkloadSpec,
+};
+use topk_eigen::sparse::suite;
+use topk_eigen::{Csr, PrecisionConfig, QueryParams, Solver};
+
+fn solver(k: usize, devices: usize) -> Solver {
+    Solver::builder()
+        .k(k)
+        .precision(PrecisionConfig::FDF)
+        .devices(devices)
+        .build()
+        .expect("config")
+}
+
+fn matrices() -> Vec<(String, Csr)> {
+    vec![
+        ("WB-GO".into(), suite::find("WB-GO").unwrap().generate_csr(0.3, 1)),
+        ("FL".into(), suite::find("FL").unwrap().generate_csr(0.3, 1)),
+    ]
+}
+
+/// Standalone reference: the same query through a fresh prepare + session.
+fn standalone(k: usize, devices: usize, m: &Csr, q: &QueryParams) -> Vec<f64> {
+    let mut s = solver(k, devices);
+    let mut prepared = s.prepare(m).expect("prepare");
+    let sol = s.session(&mut prepared).solve(q).expect("solve");
+    sol.eigenvalues
+}
+
+fn assert_bits_eq(a: &[f64], b: &[f64], ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: eigenpair count");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{ctx}: λ[{i}] differs ({x:e} vs {y:e})"
+        );
+    }
+}
+
+/// A budget that fits exactly one of the test matrices' prepared states.
+fn one_matrix_budget(ms: &[(String, Csr)]) -> usize {
+    let mut s = solver(6, 1);
+    let bytes: Vec<usize> = ms
+        .iter()
+        .map(|(_, m)| s.prepare(m).expect("prepare").resident_bytes())
+        .collect();
+    let max = *bytes.iter().max().unwrap();
+    // Room for the largest single state but never two.
+    max + bytes.iter().min().unwrap() / 2
+}
+
+#[test]
+fn registry_eviction_reprepares_bit_identically() {
+    let ms = matrices();
+    let budget = one_matrix_budget(&ms);
+    let mut reg = MatrixRegistry::new(
+        solver(6, 1),
+        RegistryConfig { budget_bytes: budget, ..RegistryConfig::default() },
+    );
+    let ia = reg.register("a", &ms[0].1);
+    let ib = reg.register("b", &ms[1].1);
+
+    let qa = QueryParams::new().k(6).seed(101);
+    let qb = QueryParams::new().k(4).seed(202);
+    let ref_a = standalone(6, 1, &ms[0].1, &qa);
+    let ref_b = standalone(6, 1, &ms[1].1, &qb);
+
+    // Ping-pong between the two matrices: each switch must evict the
+    // other (the budget fits only one), and every answer must stay
+    // bit-identical to the standalone reference.
+    for round in 0..3 {
+        let (outs, ev) = reg.solve_batch(ia, std::slice::from_ref(&qa)).unwrap();
+        assert_bits_eq(&outs[0].eigenvalues, &ref_a, &format!("matrix a round {round}"));
+        if round > 0 {
+            assert!(ev.cold, "a must have been evicted while b was served");
+        }
+        let (outs, _) = reg.solve_batch(ib, std::slice::from_ref(&qb)).unwrap();
+        assert_bits_eq(&outs[0].eigenvalues, &ref_b, &format!("matrix b round {round}"));
+        assert!(!reg.is_resident(ia), "budget fits only one prepared state");
+    }
+    let stats = reg.stats();
+    assert!(stats.evictions >= 4, "ping-pong must evict repeatedly: {stats:?}");
+    assert!(stats.prepares >= 5, "every comeback re-prepares: {stats:?}");
+}
+
+fn run_serve(ms: &[(String, Csr)], budget: usize, spec: &WorkloadSpec) -> ServeReport {
+    let mut reg = MatrixRegistry::new(
+        solver(6, 1),
+        RegistryConfig { budget_bytes: budget, ..RegistryConfig::default() },
+    );
+    for (name, m) in ms {
+        reg.register(name, m);
+    }
+    let mut server = EigenServer::new(
+        reg,
+        CoalescerConfig { max_batch: 4, max_wait_s: 0.005, bulk_wait_factor: 4.0 },
+    );
+    let arrivals = {
+        let r = server.registry();
+        spec.generate(|n| r.index_of(n)).expect("workload")
+    };
+    server.run(&arrivals).expect("serve run")
+}
+
+fn spec(seed: u64) -> WorkloadSpec {
+    let mut s = WorkloadSpec::uniform(seed, 24, 400.0, &["WB-GO", "FL"], 6);
+    s.k_choices = vec![4, 6];
+    s.bulk_fraction = 0.25;
+    s
+}
+
+#[test]
+fn serve_replay_is_byte_identical_even_under_eviction_pressure() {
+    let ms = matrices();
+    let budget = one_matrix_budget(&ms);
+    let a = run_serve(&ms, budget, &spec(11));
+    let b = run_serve(&ms, budget, &spec(11));
+    assert!(a.evictions > 0, "pressure budget must actually evict");
+    assert_eq!(a.to_json(), b.to_json(), "replay must be byte-identical");
+    assert_eq!(a.result_checksum, b.result_checksum);
+    // And a different seed is a genuinely different run.
+    let c = run_serve(&ms, budget, &spec(12));
+    assert_ne!(a.result_checksum, c.result_checksum);
+}
+
+#[test]
+fn served_queries_match_standalone_sessions_bitwise() {
+    let ms = matrices();
+    // Eviction-pressure budget: many queries are answered by re-prepared
+    // state, which is exactly the case the guarantee must cover.
+    let report = run_serve(&ms, one_matrix_budget(&ms), &spec(21));
+    assert_eq!(report.queries, 24);
+    assert!(report.evictions > 0);
+    for r in &report.records {
+        let m = &ms[r.matrix].1;
+        let reference = standalone(6, 1, m, &r.params);
+        assert_bits_eq(
+            &r.eigenvalues,
+            &reference,
+            &format!("query {} on {} (cold={})", r.id, ms[r.matrix].0, r.cold),
+        );
+    }
+}
+
+#[test]
+fn batches_never_mix_matrices_nor_exceed_max_batch() {
+    let ms = matrices();
+    let report = run_serve(&ms, usize::MAX, &spec(31));
+    // Group records into their batches by identical start time.
+    let mut by_start: Vec<(u64, Vec<&topk_eigen::serve::QueryRecord>)> = Vec::new();
+    for r in &report.records {
+        let key = r.start_s.to_bits();
+        match by_start.iter_mut().find(|(k, _)| *k == key) {
+            Some((_, v)) => v.push(r),
+            None => by_start.push((key, vec![r])),
+        }
+    }
+    assert_eq!(by_start.len(), report.batches);
+    for (_, batch) in &by_start {
+        assert!(batch.len() <= 4, "batch of {} exceeds max_batch", batch.len());
+        assert_eq!(batch.len(), batch[0].batch_size);
+        assert!(batch.iter().all(|r| r.matrix == batch[0].matrix), "mixed-matrix batch");
+    }
+    assert!(report.batches < report.queries, "high-rate traffic must coalesce");
+}
+
+#[test]
+fn no_query_waits_past_its_deadline_while_the_fleet_is_idle() {
+    let ms = matrices();
+    let report = run_serve(&ms, usize::MAX, &spec(41));
+    let cfg = CoalescerConfig { max_batch: 4, max_wait_s: 0.005, bulk_wait_factor: 4.0 };
+    // Busy intervals of the fleet, in execution order.
+    let mut busy: Vec<(f64, f64)> = report
+        .records
+        .iter()
+        .map(|r| (r.start_s, r.done_s))
+        .collect();
+    busy.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    busy.dedup();
+    for r in &report.records {
+        let arrival = QueryArrival {
+            id: r.id,
+            matrix: r.matrix,
+            params: r.params,
+            priority: r.priority,
+            arrival_s: r.arrival_s,
+        };
+        let deadline = arrival.flush_deadline(&cfg);
+        if r.start_s <= deadline + 1e-12 {
+            continue; // flushed in time (or early, in a full block)
+        }
+        // Started late ⇒ the fleet must have been continuously busy from
+        // the deadline to the start: any idle gap would mean starvation.
+        let mut cover = deadline;
+        for &(s, d) in &busy {
+            if s <= cover + 1e-12 && d > cover {
+                cover = d;
+            }
+            if cover >= r.start_s - 1e-12 {
+                break;
+            }
+        }
+        assert!(
+            cover >= r.start_s - 1e-12,
+            "query {} idled past its deadline: deadline {deadline}, start {}, \
+             covered to {cover}",
+            r.id,
+            r.start_s
+        );
+    }
+}
+
+#[test]
+fn bulk_priority_rides_bigger_batches_on_average() {
+    // Not a strict invariant, but the mechanism must at least hold at the
+    // scheduler level: bulk deadlines are strictly later.
+    let q = |p: Priority| QueryArrival {
+        id: 0,
+        matrix: 0,
+        params: QueryParams::new(),
+        priority: p,
+        arrival_s: 1.0,
+    };
+    let cfg = CoalescerConfig { max_batch: 8, max_wait_s: 0.01, bulk_wait_factor: 4.0 };
+    assert!(q(Priority::Bulk).flush_deadline(&cfg) > q(Priority::Interactive).flush_deadline(&cfg));
+}
+
+#[test]
+fn report_json_shape_is_stable() {
+    let ms = matrices();
+    let report = run_serve(&ms, usize::MAX, &spec(51));
+    let json = report.to_json();
+    for key in [
+        "\"report\": \"serve\"",
+        "\"queries\"",
+        "\"batches\"",
+        "\"throughput_qps\"",
+        "\"latency\"",
+        "\"p99_s\"",
+        "\"queue\"",
+        "\"prepares\"",
+        "\"evictions\"",
+        "\"per_matrix\"",
+        "\"result_checksum\"",
+    ] {
+        assert!(json.contains(key), "missing {key} in {json}");
+    }
+    assert!(!json.contains("wall"), "report must carry no wallclock fields: {json}");
+}
