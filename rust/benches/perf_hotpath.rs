@@ -17,7 +17,11 @@
 //!   * the serving runtime (`topk_eigen::serve`): a fixed seeded workload
 //!     replayed through registry + coalescer + server, resident vs
 //!     eviction-pressure — wallclock plus simulated throughput/p99 — the
-//!     `serve` block of the schema-4 JSON,
+//!     `serve` block of the schema-5 JSON,
+//!   * multi-fleet scaling: one saturating backlog replayed at one and
+//!     two fleets; the simulated-throughput ratio is deterministic per
+//!     seed (host-independent), and `serve_fleet2_sim_throughput_min` in
+//!     the floor file gates it — two fleets must actually out-serve one,
 //!   * the coordinator overhead fraction — the share of the hostsim solve
 //!     wallclock spent *outside* kernel execution, measured by a timing
 //!     wrapper around the kernel interface.
@@ -46,6 +50,7 @@ use topk_eigen::runtime::{HostKernels, Kernels, PjrtKernels};
 use topk_eigen::serve::{
     CoalescerConfig, EigenServer, MatrixRegistry, RegistryConfig, ServeReport, WorkloadSpec,
 };
+use topk_eigen::sim::Placement;
 use topk_eigen::sparse::{suite, Ell};
 use topk_eigen::{Backend, Eigensolve, QueryParams, Solver};
 
@@ -559,9 +564,78 @@ fn main() {
             .int("evictions", rep.evictions)
             .finish()
     };
+
+    // ---- Multi-fleet scaling (simulated) ----------------------------------
+    // One saturating backlog — everything arrives within milliseconds, so
+    // the run is pure drain and throughput is limited by fleet parallelism
+    // alone — replayed at one and two fleets. The throughput here is
+    // *simulated* (deterministic per seed, identical on every host), so
+    // the floor gates the dispatcher's scaling, not runner speed.
+    let fleet_spec = WorkloadSpec::uniform(11, 32, 5000.0, &["WB-GO", "FL"], 8);
+    let run_fleets = |fleets: usize| -> ServeReport {
+        let regs: Vec<MatrixRegistry> = (0..fleets)
+            .map(|_| {
+                let solver = Solver::builder()
+                    .k(8)
+                    .precision(cfg)
+                    .devices(2)
+                    .reorth(ReorthMode::Full)
+                    .device_mem_bytes(1 << 30)
+                    .backend(Backend::HostSim)
+                    .build()
+                    .expect("config");
+                let mut reg = MatrixRegistry::new(
+                    solver,
+                    RegistryConfig { budget_bytes: 1 << 30, ..RegistryConfig::default() },
+                );
+                for (name, m) in &serve_matrices {
+                    reg.register(name, m);
+                }
+                reg
+            })
+            .collect();
+        let mut server = EigenServer::with_fleets(
+            regs,
+            CoalescerConfig { max_batch: 4, max_wait_s: 0.01, bulk_wait_factor: 4.0 },
+            Placement::Replicate,
+        )
+        .expect("fleet config");
+        let arrivals = {
+            let r0 = server.registry();
+            fleet_spec.generate(|n| r0.index_of(n)).expect("workload")
+        };
+        server.run(&arrivals).expect("serve run")
+    };
+    let fleet1 = run_fleets(1);
+    let fleet2 = run_fleets(2);
+    let fleet_speedup = fleet2.throughput_qps / fleet1.throughput_qps.max(1e-12);
+    t.row(&[
+        "serve 2-fleet sim speedup".into(),
+        format!("{fleet_speedup:.2}x"),
+        "".into(),
+        format!(
+            "{:.0} -> {:.0} q/s sim on a saturating backlog",
+            fleet1.throughput_qps, fleet2.throughput_qps
+        ),
+    ]);
+    if fleet_speedup <= 1.0 {
+        eprintln!(
+            "warning: two fleets did not out-serve one on the saturating backlog \
+             ({fleet_speedup:.2}x) — fleet dispatch is not overlapping work"
+        );
+    }
+
     let serve_json = JsonObj::new()
         .raw("resident", serve_block(&tserve_res, &serve_res))
         .raw("pressure", serve_block(&tserve_prs, &serve_prs))
+        .raw(
+            "fleet",
+            JsonObj::new()
+                .num("fleet1_sim_qps", fleet1.throughput_qps)
+                .num("fleet2_sim_qps", fleet2.throughput_qps)
+                .num("speedup", fleet_speedup)
+                .finish(),
+        )
         .finish();
 
     // Coordinator overhead: one instrumented solve; the fraction of the
@@ -630,7 +704,7 @@ fn main() {
 
     // ---- BENCH_perf.json -------------------------------------------------
     let json = JsonObj::new()
-        .int("schema", 4)
+        .int("schema", 5)
         .str("bench", "perf_hotpath")
         .num("scale", s)
         .int("reps", r)
@@ -724,6 +798,31 @@ fn main() {
                     }
                     None => eprintln!(
                         "warning: no serve_resident_wall_s_max in {floor_path}"
+                    ),
+                }
+                // Multi-fleet scaling floor (schema 5, a `_min`: regression
+                // when the measured value drops BELOW it): the two-fleet /
+                // one-fleet simulated-throughput ratio on the saturating
+                // workload. Simulated time is deterministic, so this check
+                // is exact on every host.
+                match topk_eigen::bench_util::json_get_num(
+                    &floor,
+                    "serve_fleet2_sim_throughput_min",
+                ) {
+                    Some(min) if fleet_speedup < min => {
+                        eprintln!(
+                            "PERF REGRESSION: two-fleet simulated throughput speedup \
+                             {fleet_speedup:.3}x is below floor {min}x (from {floor_path})",
+                        );
+                        std::process::exit(1);
+                    }
+                    Some(min) => {
+                        println!(
+                            "perf floor ok: two-fleet sim speedup {fleet_speedup:.2}x >= {min}x"
+                        );
+                    }
+                    None => eprintln!(
+                        "warning: no serve_fleet2_sim_throughput_min in {floor_path}"
                     ),
                 }
             }

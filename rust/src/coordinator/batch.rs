@@ -1,0 +1,639 @@
+//! Batched block-query execution against a prepared matrix.
+//!
+//! Split out of `coordinator` in 0.6 (move-only):
+//! [`TopKSolver::solve_batch_prepared`] — the B-lane blocked Lanczos
+//! loop — lives here. Call sites are unchanged; the method hangs off the
+//! same `TopKSolver` impl.
+
+use super::*;
+use crate::sim::{fleet_time, PhaseCursor};
+
+impl TopKSolver {
+    /// Run `B` queries **concurrently** against a prepared matrix: one
+    /// batched Lanczos loop in which every per-device matrix chunk — and,
+    /// out-of-core, its host→device transfer — is streamed **once per
+    /// iteration for the whole block** ([`Kernels::spmm_into`]), instead of
+    /// once per query. Per-query state (start vector RNG, α/β tridiagonal,
+    /// breakdown restarts, early-stop observers) stays fully independent,
+    /// so each lane's solution is **bit-identical** to the same query run
+    /// solo through [`TopKSolver::solve_prepared`] (asserted by
+    /// `rust/tests/batch_solve.rs`).
+    ///
+    /// `observers[q]` (optional, one slot per query) is invoked once per
+    /// Lanczos iteration for query `q`; a `Stop` retires that lane — its
+    /// Jacobi/projection run immediately and the lane drops out of the
+    /// dense blocks without perturbing the remaining lanes. Queries may
+    /// mix `k` and `seed` freely; the host threading policy is batch-level
+    /// and taken from the first query.
+    ///
+    /// Per-lane `stats` are snapshots of the shared fleet at that lane's
+    /// completion (`phases` partitions `sim_seconds` exactly at every
+    /// snapshot); h2d/p2p/kernel counters are batch-cumulative. Transfer
+    /// charges are paid once per chunk per iteration — not per query —
+    /// which is the amortization lever this path exists for.
+    ///
+    /// Memory model: the extra `B−1` lanes' vector working set is charged
+    /// to the simulated devices up to their capacity (so
+    /// `peak_device_bytes` reflects the batch's residency pressure); any
+    /// overflow models as unified-memory host spill (paper §III-B). The
+    /// chunk residency plan is the one made at prepare time — batching
+    /// does not re-derive it.
+    pub fn solve_batch_prepared(
+        &mut self,
+        prep: &mut PreparedState,
+        queries: &[SolveQuery],
+        mut observers: Vec<Option<&mut dyn IterationObserver>>,
+    ) -> Result<Vec<EigenSolution>, SolverError> {
+        let cfg = prep.cfg.clone();
+        let nq = queries.len();
+        if nq == 0 {
+            return Err(SolverError::InvalidConfig {
+                field: "batch",
+                message: "batch must contain at least one query".into(),
+            });
+        }
+        for (qi, q) in queries.iter().enumerate() {
+            if q.k < 1 || q.k > cfg.k {
+                return Err(SolverError::InvalidConfig {
+                    field: "k",
+                    message: format!(
+                        "batch query {qi}: K={} must be in 1..={} (the prepared \
+                         workspace capacity; re-prepare with a larger k to raise it)",
+                        q.k, cfg.k
+                    ),
+                });
+            }
+        }
+        if observers.is_empty() {
+            observers = (0..nq).map(|_| None).collect();
+        }
+        if observers.len() != nq {
+            return Err(SolverError::InvalidConfig {
+                field: "batch",
+                message: format!(
+                    "observer count {} does not match query count {nq}",
+                    observers.len()
+                ),
+            });
+        }
+
+        let wall_start = Instant::now();
+        let n = prep.n;
+        let g = cfg.devices;
+        let storage = cfg.precision.storage;
+        let compute = cfg.precision.compute;
+        let topology = match cfg.topology {
+            TopologyKind::Dgx1 => Topology::dgx1(g),
+            TopologyKind::NvSwitch => Topology::nvswitch(g),
+        };
+        let out_of_core = prep.out_of_core;
+        let sb = storage.bytes();
+        let mut devices: Vec<Device> = prep
+            .mem_used
+            .iter()
+            .zip(prep.parts.iter())
+            .enumerate()
+            .map(|(i, (&used, part))| {
+                let mut d = Device::new(i, cfg.device_mem_bytes);
+                d.mem.alloc(used).expect("prepared reservation fits by construction");
+                // The extra B−1 lanes' vector working set (replica slice,
+                // basis slab, candidate/SpMM vectors) on top of the
+                // single-query reservation made at prepare time. Charged
+                // up to the device capacity so `peak_device_bytes` reports
+                // the batch's true residency pressure; the overflow models
+                // as unified-memory host spill (paper §III-B) — the chunk
+                // plan made at prepare time is not re-derived per batch.
+                let extra = nq.saturating_sub(1)
+                    * (prep.n * sb + (cfg.k + 2) * part.rows() * sb);
+                d.mem.alloc(extra.min(d.mem.free())).ok();
+                d
+            })
+            .collect();
+        prep.ensure_batch(nq);
+        let PreparedState { parts, plans, slice_bytes, bws, batch_replica, forks, .. } =
+            prep;
+        let sync_latency = topology.latency_s * (g as f64).log2().ceil().max(1.0);
+
+        // ---- Per-query Lanczos state (indexed by stable query id) -----------
+        let mut rngs: Vec<Rng> = queries.iter().map(|q| Rng::new(q.seed)).collect();
+        let mut alphas_t: Vec<Vec<f64>> =
+            queries.iter().map(|q| Vec::with_capacity(q.k)).collect();
+        let mut betas_t: Vec<Vec<f64>> =
+            queries.iter().map(|q| Vec::with_capacity(q.k)).collect();
+        let mut breakdowns = vec![0usize; nq];
+        let mut k_eff: Vec<usize> = queries.iter().map(|q| q.k).collect();
+        // Active lane map: dense block position p -> query id.
+        let mut active: Vec<usize> = (0..nq).collect();
+
+        for ws in bws.iter_mut() {
+            ws.reset();
+        }
+        // Start vectors: per lane, exactly the solo initialization.
+        for (p, &qid) in active.iter().enumerate() {
+            let mut v1 = vec![0.0f64; n];
+            rngs[qid].fill_uniform(&mut v1);
+            l2_normalize(&mut v1);
+            let q1 = crate::runtime::quantize_vec(&v1, storage);
+            batch_replica[p * n..(p + 1) * n].copy_from_slice(&q1);
+        }
+
+        let mut phases = PhaseBreakdown::default();
+        // Reduction slots: device gi writes partials[gi*nq + p] for active
+        // lane position p; the coordinator folds per lane in fixed device
+        // order (determinism across exec policies, as in the solo path).
+        let mut partials = vec![0.0f64; g * nq];
+        // Candidate Σv² per (query id, device) — read at the next β sync.
+        let mut sumsq = vec![0.0f64; nq * g];
+        let mut spmv_split = vec![SpmvSplit::default(); g];
+
+        // ---- Execution context ----------------------------------------------
+        let backend = self.kernels.backend_name();
+        self.kernels.begin_solve();
+        for f in forks.iter_mut() {
+            f.begin_solve();
+        }
+        let want_par = match queries[0].exec {
+            ExecPolicy::Sequential => false,
+            ExecPolicy::Parallel => g > 1,
+            ExecPolicy::Auto => g > 1 && n / g >= PAR_MIN_ROWS_PER_DEVICE,
+        };
+        let mut ctx = if want_par && !forks.is_empty() {
+            ExecCtx::Par {
+                kernels: forks.as_mut_slice(),
+                vec_par: n / g >= PAR_MIN_VEC_ROWS_PER_DEVICE,
+            }
+        } else {
+            ExecCtx::Shared(self.kernels.as_mut())
+        };
+        let host_parallel = ctx.is_parallel();
+
+        let mut clock_cursor = PhaseCursor::new();
+        let mut outcomes: Vec<Option<EigenSolution>> = (0..nq).map(|_| None).collect();
+        let k_max_batch = queries.iter().map(|q| q.k).max().unwrap_or(0);
+
+        // ---- Batched main loop (Algorithm 1 × B lanes) -----------------------
+        for i in 0..k_max_batch {
+            if active.is_empty() {
+                break;
+            }
+            let nb = active.len();
+
+            // β sync + normalization, skipped on the first pass. β folds,
+            // breakdown restarts and tridiagonal bookkeeping are per lane;
+            // the allreduce latency and the ring swap are paid once for the
+            // whole block (the swap moves nb slices per partition).
+            if i > 0 {
+                let mut b_cur = vec![0.0f64; nb];
+                for (p, &qid) in active.iter().enumerate() {
+                    let ss: f64 = (0..g).map(|gi| sumsq[qid * g + gi]).sum();
+                    let mut b = ss.sqrt();
+                    let mut b_t = b;
+                    if b < 1e-12 * (n as f64).sqrt() {
+                        // Lanczos breakdown of this lane only: restart with
+                        // a fresh direction from the lane's own RNG,
+                        // orthogonalized against the lane's basis — the
+                        // solo recovery, scoped to one lane.
+                        breakdowns[qid] += 1;
+                        b_t = 0.0;
+                        let mut fresh = vec![0.0f64; n];
+                        rngs[qid].fill_uniform(&mut fresh);
+                        for (gi, part) in parts.iter().enumerate() {
+                            let kern = ctx.kernel_mut(gi);
+                            let ws = &mut bws[gi];
+                            let rows = ws.rows;
+                            let k_cap = ws.k_cap;
+                            let blen = ws.basis_len[qid];
+                            ws.lane_nxt_mut(p)
+                                .copy_from_slice(&fresh[part.row_start..part.row_end]);
+                            let BatchWorkspace { bases, v_nxt, .. } = ws;
+                            let vn = &mut v_nxt[p * rows..(p + 1) * rows];
+                            for j in 0..blen {
+                                let at = (qid * k_cap + j) * rows;
+                                let q = &bases[at..at + rows];
+                                let o = kern.dot(q, vn, &cfg.precision);
+                                kern.ortho_update_into(vn, q, o, &cfg.precision);
+                            }
+                        }
+                        let mut ss2 = 0.0f64;
+                        for gi in 0..g {
+                            let kern = ctx.kernel_mut(gi);
+                            let vn = bws[gi].lane_nxt(p);
+                            ss2 += kern.dot(vn, vn, &cfg.precision);
+                        }
+                        b = ss2.sqrt();
+                    }
+                    betas_t[qid].push(b_t);
+                    b_cur[p] = b;
+                }
+                // Normalization: per device, one blocked kernel writes all
+                // active lanes' slices of the replica block.
+                {
+                    let mut dev_slices: Vec<Vec<&mut [f64]>> =
+                        (0..g).map(|_| Vec::with_capacity(nb)).collect();
+                    let mut rest: &mut [f64] = &mut batch_replica[..nb * n];
+                    for _ in 0..nb {
+                        let (lane, tail) = rest.split_at_mut(n);
+                        rest = tail;
+                        for (gi, s) in
+                            split_rows_mut(lane, parts.as_slice()).into_iter().enumerate()
+                        {
+                            dev_slices[gi].push(s);
+                        }
+                    }
+                    let b_ref = &b_cur;
+                    let items =
+                        bws.iter().zip(devices.iter_mut()).zip(dev_slices.into_iter());
+                    ctx.fan_out(Phase::Light, items, |((ws, dev), mut rslices), kern| {
+                        let srcs: Vec<&[f64]> =
+                            (0..rslices.len()).map(|p| ws.lane_nxt(p)).collect();
+                        let mut outs: Vec<&mut [f64]> =
+                            rslices.iter_mut().map(|s| &mut **s).collect();
+                        kern.normalize_block(&srcs, b_ref, &cfg.precision, &mut outs);
+                        let cost =
+                            cfg.cost.vector_cost(ws.rows * srcs.len(), 1, 1, &cfg.precision);
+                        dev.run_kernel(cfg.cost.stream_seconds(cost, compute));
+                    });
+                }
+                phases.vector_ops += clock_cursor.mark(fleet_time(&devices));
+                for d in devices.iter_mut() {
+                    d.clock_s += sync_latency;
+                }
+                barrier(&mut devices);
+                phases.sync += clock_cursor.mark(fleet_time(&devices));
+                // Ring swap: every lane's replica refreshes, so nb slices
+                // per partition move this iteration.
+                let scaled: Vec<usize> = slice_bytes.iter().map(|&b| b * nb).collect();
+                ring::charge_swap_with(&mut devices, &topology, &scaled, cfg.swap);
+                phases.swap += clock_cursor.mark(fleet_time(&devices));
+            }
+
+            // SpMM: per device, per chunk — the chunk (and its h2d
+            // transfer, when streamed) is paid ONCE for all nb lanes.
+            ctx.begin_cycle();
+            for s in spmv_split.iter_mut() {
+                *s = SpmvSplit::default();
+            }
+            {
+                let replica_ref: &[f64] = &batch_replica[..nb * n];
+                let active_ref = &active;
+                let items = parts
+                    .iter()
+                    .zip(plans.iter())
+                    .zip(bws.iter_mut())
+                    .zip(devices.iter_mut())
+                    .zip(spmv_split.iter_mut());
+                ctx.fan_out(Phase::Heavy, items, |((((part, plan), ws), dev), split), kern| {
+                    for (p, &qid) in active_ref.iter().enumerate() {
+                        ws.push_basis(
+                            qid,
+                            &replica_ref[p * n + part.row_start..p * n + part.row_end],
+                        );
+                    }
+                    let rows = ws.rows;
+                    let v_tmp = &mut ws.v_tmp[..nb * rows];
+                    for c in &plan.chunks {
+                        if !c.resident {
+                            let bytes = c.ell.bytes();
+                            let secs = cfg.cost.h2d_seconds(bytes);
+                            dev.stream_in(bytes, secs);
+                            split.h2d_s += secs;
+                        }
+                        kern.spmm_into(
+                            &c.ell,
+                            replica_ref,
+                            nb,
+                            &cfg.precision,
+                            v_tmp,
+                            rows,
+                            c.row_offset,
+                        );
+                        let cost = cfg
+                            .cost
+                            .spmm_cost(c.ell.rows, c.ell.width, n, nb, &cfg.precision);
+                        let secs = cfg.cost.spmv_seconds(cost, compute);
+                        dev.run_kernel(secs);
+                        split.kernel_s += secs;
+                        if !c.ell.spill.is_empty() {
+                            let sc = cfg.cost.spill_cost_block(
+                                c.ell.spill.len(),
+                                nb,
+                                &cfg.precision,
+                            );
+                            let secs = cfg.cost.spmv_seconds(sc, compute);
+                            dev.run_kernel(secs);
+                            split.kernel_s += secs;
+                        }
+                    }
+                });
+            }
+            {
+                // h2d vs compute attribution from the critical device's own
+                // charge counters — same derivation as the solo path.
+                let delta = clock_cursor.mark(fleet_time(&devices));
+                let mut crit = 0usize;
+                for (gi, s) in spmv_split.iter().enumerate() {
+                    let here = s.h2d_s + s.kernel_s;
+                    let best = spmv_split[crit].h2d_s + spmv_split[crit].kernel_s;
+                    if here > best {
+                        crit = gi;
+                    }
+                }
+                let SpmvSplit { h2d_s, kernel_s } = spmv_split[crit];
+                let tot = h2d_s + kernel_s;
+                if h2d_s > 0.0 && tot > 0.0 {
+                    phases.h2d += delta * (h2d_s / tot);
+                    phases.spmv += delta * (kernel_s / tot);
+                } else {
+                    phases.spmv += delta;
+                }
+            }
+
+            // α sync: blocked per-device partial dots, folded per lane in
+            // fixed device order; one allreduce for the whole block.
+            {
+                let active_ref = &active;
+                let items =
+                    bws.iter().zip(devices.iter_mut()).zip(partials.chunks_mut(nq));
+                ctx.fan_out(Phase::Light, items, |((ws, dev), slots), kern| {
+                    let vis: Vec<&[f64]> = active_ref
+                        .iter()
+                        .map(|&qid| ws.basis_row(qid, ws.basis_len[qid] - 1))
+                        .collect();
+                    let tmps: Vec<&[f64]> =
+                        ws.v_tmp[..nb * ws.rows].chunks(ws.rows).collect();
+                    kern.dot_block(&vis, &tmps, &cfg.precision, &mut slots[..nb]);
+                    let cost = cfg.cost.vector_cost(ws.rows * nb, 2, 0, &cfg.precision);
+                    dev.run_kernel(cfg.cost.stream_seconds(cost, compute));
+                });
+            }
+            let mut a_cur = vec![0.0f64; nb];
+            for (p, a) in a_cur.iter_mut().enumerate() {
+                *a = (0..g).map(|gi| partials[gi * nq + p]).sum();
+            }
+            phases.vector_ops += clock_cursor.mark(fleet_time(&devices));
+            for d in devices.iter_mut() {
+                d.clock_s += sync_latency;
+            }
+            barrier(&mut devices);
+            phases.sync += clock_cursor.mark(fleet_time(&devices));
+            for (p, &qid) in active.iter().enumerate() {
+                alphas_t[qid].push(a_cur[p]);
+            }
+
+            // Candidate update: one blocked kernel per device.
+            let b_prev: Vec<f64> = active
+                .iter()
+                .map(|&qid| if i > 0 { betas_t[qid][i - 1] } else { 0.0 })
+                .collect();
+            {
+                let a_ref = &a_cur;
+                let b_ref = &b_prev;
+                let active_ref = &active;
+                let items =
+                    bws.iter_mut().zip(devices.iter_mut()).zip(partials.chunks_mut(nq));
+                ctx.fan_out(Phase::Heavy, items, |((ws, dev), slots), kern| {
+                    let rows = ws.rows;
+                    let k_cap = ws.k_cap;
+                    let BatchWorkspace { bases, basis_len, v_tmp, v_nxt, zeros, .. } = ws;
+                    let mut vis: Vec<&[f64]> = Vec::with_capacity(nb);
+                    let mut vps: Vec<&[f64]> = Vec::with_capacity(nb);
+                    for &qid in active_ref.iter() {
+                        let blen = basis_len[qid];
+                        let base = qid * k_cap * rows;
+                        vis.push(&bases[base + (blen - 1) * rows..base + blen * rows]);
+                        vps.push(if blen >= 2 {
+                            &bases[base + (blen - 2) * rows..base + (blen - 1) * rows]
+                        } else {
+                            zeros.as_slice()
+                        });
+                    }
+                    let tmps: Vec<&[f64]> = v_tmp[..nb * rows].chunks(rows).collect();
+                    let mut outs: Vec<&mut [f64]> =
+                        v_nxt[..nb * rows].chunks_mut(rows).collect();
+                    kern.candidate_block(
+                        &tmps,
+                        &vis,
+                        &vps,
+                        a_ref,
+                        b_ref,
+                        &cfg.precision,
+                        &mut outs,
+                        &mut slots[..nb],
+                    );
+                    let cost = cfg.cost.candidate_cost(rows * nb, &cfg.precision);
+                    dev.run_kernel(cfg.cost.stream_seconds(cost, compute));
+                });
+            }
+            for (p, &qid) in active.iter().enumerate() {
+                for gi in 0..g {
+                    sumsq[qid * g + gi] = partials[gi * nq + p];
+                }
+            }
+            phases.vector_ops += clock_cursor.mark(fleet_time(&devices));
+
+            // Reorthogonalization: targets depend only on the iteration
+            // index, which all active lanes share; one sync per target for
+            // the whole block.
+            let reorth_targets: Vec<usize> = match cfg.reorth {
+                ReorthMode::None => vec![],
+                ReorthMode::Alternating => (0..=i).filter(|j| (i - j) % 2 == 0).collect(),
+                ReorthMode::Full => (0..=i).collect(),
+            };
+            if !reorth_targets.is_empty() {
+                for &j in &reorth_targets {
+                    {
+                        let active_ref = &active;
+                        let items =
+                            bws.iter().zip(devices.iter_mut()).zip(partials.chunks_mut(nq));
+                        ctx.fan_out(Phase::Light, items, |((ws, dev), slots), kern| {
+                            let qs: Vec<&[f64]> = active_ref
+                                .iter()
+                                .map(|&qid| ws.basis_row(qid, j))
+                                .collect();
+                            let vns: Vec<&[f64]> =
+                                ws.v_nxt[..nb * ws.rows].chunks(ws.rows).collect();
+                            kern.dot_block(&qs, &vns, &cfg.precision, &mut slots[..nb]);
+                            let cost =
+                                cfg.cost.vector_cost(ws.rows * nb, 2, 0, &cfg.precision);
+                            dev.run_kernel(cfg.cost.stream_seconds(cost, compute));
+                        });
+                    }
+                    let mut o_cur = vec![0.0f64; nb];
+                    for (p, o) in o_cur.iter_mut().enumerate() {
+                        *o = (0..g).map(|gi| partials[gi * nq + p]).sum();
+                    }
+                    phases.reorth += clock_cursor.mark(fleet_time(&devices));
+                    for d in devices.iter_mut() {
+                        d.clock_s += sync_latency;
+                    }
+                    barrier(&mut devices);
+                    phases.sync += clock_cursor.mark(fleet_time(&devices));
+                    {
+                        let o_ref = &o_cur;
+                        let active_ref = &active;
+                        let items = bws.iter_mut().zip(devices.iter_mut());
+                        ctx.fan_out(Phase::Light, items, |(ws, dev), kern| {
+                            let rows = ws.rows;
+                            let k_cap = ws.k_cap;
+                            let BatchWorkspace { bases, v_nxt, .. } = ws;
+                            let qs: Vec<&[f64]> = active_ref
+                                .iter()
+                                .map(|&qid| {
+                                    let at = (qid * k_cap + j) * rows;
+                                    &bases[at..at + rows]
+                                })
+                                .collect();
+                            let mut us: Vec<&mut [f64]> =
+                                v_nxt[..nb * rows].chunks_mut(rows).collect();
+                            kern.ortho_update_block(&mut us, &qs, o_ref, &cfg.precision);
+                            let cost = cfg.cost.vector_cost(rows * nb, 2, 1, &cfg.precision);
+                            dev.run_kernel(cfg.cost.stream_seconds(cost, compute));
+                        });
+                    }
+                    phases.reorth += clock_cursor.mark(fleet_time(&devices));
+                }
+                // Recompute the candidate norms after the corrections.
+                {
+                    let items = bws.iter().zip(partials.chunks_mut(nq));
+                    ctx.fan_out(Phase::Light, items, |(ws, slots), kern| {
+                        let vns: Vec<&[f64]> =
+                            ws.v_nxt[..nb * ws.rows].chunks(ws.rows).collect();
+                        kern.dot_block(&vns, &vns, &cfg.precision, &mut slots[..nb]);
+                    });
+                }
+                for (p, &qid) in active.iter().enumerate() {
+                    for gi in 0..g {
+                        sumsq[qid * g + gi] = partials[gi * nq + p];
+                    }
+                }
+                phases.reorth += clock_cursor.mark(fleet_time(&devices));
+            }
+
+            // Observer hooks + retirement decisions, per lane. A lane
+            // retires when its observer stops it or when it has reached its
+            // own configured k — others continue undisturbed.
+            let mut finished: Vec<usize> = Vec::new();
+            for (p, &qid) in active.iter().enumerate() {
+                let beta_next =
+                    (0..g).map(|gi| sumsq[qid * g + gi]).sum::<f64>().sqrt();
+                let mut stop = false;
+                if let Some(obs) = observers[qid].as_mut() {
+                    let event = IterationEvent {
+                        iter: i,
+                        alpha: a_cur[p],
+                        beta: beta_next,
+                        residual_estimate: ritz_residual_estimate(
+                            &alphas_t[qid],
+                            &betas_t[qid],
+                            beta_next,
+                        ),
+                        sim_seconds: fleet_time(&devices),
+                        phases,
+                    };
+                    if obs.on_iteration(&event) == ObserverControl::Stop {
+                        stop = true;
+                    }
+                }
+                if stop {
+                    k_eff[qid] = i + 1;
+                }
+                if stop || i + 1 == queries[qid].k {
+                    finished.push(p);
+                }
+            }
+
+            // Finalize retired lanes (ascending position, deterministic):
+            // per-lane Jacobi + projection, stats snapshot at completion.
+            for &p in &finished {
+                let qid = active[p];
+                let keff = k_eff[qid];
+                let t = DenseSym::from_tridiagonal(&alphas_t[qid], &betas_t[qid]);
+                let jacobi_tol = match cfg.precision.jacobi {
+                    crate::precision::Storage::F32 => 1e-6,
+                    crate::precision::Storage::F64 => 1e-12,
+                };
+                let eig = jacobi_eigen(&t, cfg.precision.jacobi, jacobi_tol, 100);
+                // Modeled CPU charge, as in the solo path — keeps the
+                // batched sim clock bit-reproducible across runs.
+                let jd = cfg.cost.jacobi_seconds(alphas_t[qid].len());
+                phases.jacobi_cpu += jd;
+                for d in devices.iter_mut() {
+                    d.clock_s += jd; // fleet idles while the CPU works
+                }
+                let _ = clock_cursor.mark(fleet_time(&devices));
+
+                let coeff: &[Vec<f64>] = &eig.vectors;
+                let mut proj: Vec<Vec<f64>> =
+                    parts.iter().map(|pt| vec![0.0f64; keff * pt.rows()]).collect();
+                {
+                    let items = bws.iter().zip(devices.iter_mut()).zip(proj.iter_mut());
+                    ctx.fan_out(Phase::Heavy, items, |((ws, dev), out), kern| {
+                        kern.project_into(
+                            ws.lane_basis(qid, keff),
+                            ws.rows,
+                            coeff,
+                            &cfg.precision,
+                            out.as_mut_slice(),
+                        );
+                        let cost = cfg.cost.vector_cost(ws.rows * keff, 1, 1, &cfg.precision);
+                        dev.run_kernel(cfg.cost.stream_seconds(cost, compute));
+                    });
+                }
+                phases.project += clock_cursor.mark(fleet_time(&devices));
+                let mut eigenvectors = vec![vec![0.0f64; n]; keff];
+                for (gi, part) in parts.iter().enumerate() {
+                    let rows = part.rows();
+                    for (t_idx, ev) in eigenvectors.iter_mut().enumerate() {
+                        ev[part.row_start..part.row_end]
+                            .copy_from_slice(&proj[gi][t_idx * rows..(t_idx + 1) * rows]);
+                    }
+                }
+                for v in eigenvectors.iter_mut() {
+                    l2_normalize(v);
+                }
+
+                let sim_seconds = fleet_time(&devices);
+                let stats = SolveStats {
+                    wall_seconds: wall_start.elapsed().as_secs_f64(),
+                    sim_seconds,
+                    sim_per_device: devices.iter().map(|d| d.clock_s).collect(),
+                    phases,
+                    kernels_launched: devices.iter().map(|d| d.kernels_launched).sum(),
+                    h2d_bytes: devices.iter().map(|d| d.h2d_bytes).sum(),
+                    p2p_bytes: devices.iter().map(|d| d.p2p_bytes).sum(),
+                    iterations: keff,
+                    breakdowns: breakdowns[qid],
+                    out_of_core,
+                    peak_device_bytes: devices.iter().map(|d| d.mem.peak()).max().unwrap_or(0),
+                    backend,
+                    host_parallel,
+                    exec_policy: if host_parallel { "parallel" } else { "sequential" },
+                    prepare_seconds: 0.0,
+                    early_stopped: keff < queries[qid].k,
+                };
+                outcomes[qid] = Some(EigenSolution {
+                    eigenvalues: eig.values,
+                    eigenvectors,
+                    alpha: alphas_t[qid].clone(),
+                    beta: betas_t[qid].clone(),
+                    stats,
+                });
+            }
+            // Compact the dense blocks (descending positions keep earlier
+            // indices valid): retired lanes drop out; survivors shift down.
+            for &p in finished.iter().rev() {
+                let nb_now = active.len();
+                batch_replica.copy_within((p + 1) * n..nb_now * n, p * n);
+                for ws in bws.iter_mut() {
+                    ws.remove_lane(p, nb_now);
+                }
+                active.remove(p);
+            }
+        }
+
+        Ok(outcomes
+            .into_iter()
+            .map(|o| o.expect("every lane retires by its own k"))
+            .collect())
+    }
+}

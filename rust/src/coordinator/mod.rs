@@ -41,8 +41,14 @@
 //! out of the dense blocks without perturbing the rest; every lane is
 //! bit-identical to the same query run solo (`tests/batch_solve.rs`).
 
+mod batch;
 pub mod ooc;
+mod prepare;
 pub mod ring;
+mod solve;
+
+pub use prepare::PreparedState;
+pub use solve::SolveQuery;
 
 use crate::api::error::SolverError;
 use crate::api::observer::{IterationEvent, IterationObserver, ObserverControl};
@@ -541,122 +547,6 @@ impl ExecCtx<'_> {
     }
 }
 
-/// Everything about one matrix that can be computed before the first
-/// query and reused across solves: validated config, nnz-balanced row
-/// partitions, per-device ELL/COO chunk plans (the device-resident,
-/// storage-quantized matrix replicas), device-memory accounting, the
-/// per-device workspaces, and the forked per-device kernel instances.
-///
-/// Produced by [`TopKSolver::prepare`]; consumed (mutably, for workspace
-/// reuse) by [`TopKSolver::solve_prepared`]. Self-contained: the source
-/// [`Csr`] is not needed after preparation — the plans own the quantized
-/// device layout.
-pub struct PreparedState {
-    /// Matrix-level configuration snapshot. `cfg.k` is the *capacity* the
-    /// workspaces and memory accounting were prepared for; queries may use
-    /// any `k ≤ cfg.k`.
-    cfg: SolverConfig,
-    /// Matrix dimension (rows == cols, validated square).
-    n: usize,
-    parts: Vec<RowPartition>,
-    plans: Vec<PartitionPlan>,
-    /// Per-device slice byte counts of `v_i` (ring-swap model).
-    slice_bytes: Vec<usize>,
-    out_of_core: bool,
-    /// Per-device bytes reserved at prepare time (vectors + resident slab).
-    mem_used: Vec<usize>,
-    /// Per-device reusable workspaces (basis slab + work vectors).
-    wss: Vec<SolveWorkspace>,
-    /// Per-device kernel instances, forked once here; empty when the fleet
-    /// is a single device or the backend cannot fork (PJRT).
-    forks: Vec<Box<dyn Kernels>>,
-    /// Per-device batched workspaces — lazily sized by the first
-    /// [`TopKSolver::solve_batch_prepared`], reused by later batches.
-    bws: Vec<BatchWorkspace>,
-    /// Lane-major replica block for batched solves (`lanes × n`,
-    /// active-lane-compacted during a batch). Lazily sized with `bws`.
-    batch_replica: Vec<f64>,
-    /// Wallclock seconds the preparation took.
-    pub prepare_seconds: f64,
-}
-
-impl PreparedState {
-    /// The configuration this matrix was prepared under.
-    pub fn config(&self) -> &SolverConfig {
-        &self.cfg
-    }
-
-    /// Matrix dimension.
-    pub fn rows(&self) -> usize {
-        self.n
-    }
-
-    /// Maximum per-query `k` (the prepared workspace capacity).
-    pub fn k_max(&self) -> usize {
-        self.cfg.k
-    }
-
-    /// True if any partition's plan streams chunks host→device.
-    pub fn out_of_core(&self) -> bool {
-        self.out_of_core
-    }
-
-    /// Simulated device memory actually charged for this prepared matrix
-    /// across the fleet — the canonical answer to "how much device memory
-    /// does keeping this matrix prepared cost?". Sums each device's
-    /// reservation made at prepare time (vector working set + resident
-    /// matrix slab); out-of-core chunks that stream per iteration are not
-    /// counted, matching what the simulated [`DeviceMemory`] charged.
-    /// Cache/eviction layers (the serve registry) budget on this value.
-    pub fn resident_bytes(&self) -> usize {
-        self.mem_used.iter().sum()
-    }
-
-    /// Total device-resident bytes reserved across the fleet.
-    /// Alias of [`PreparedState::resident_bytes`].
-    pub fn device_bytes(&self) -> usize {
-        self.resident_bytes()
-    }
-
-    /// Size (or grow) the batched workspaces for `lanes` concurrent
-    /// queries. Existing slabs with enough lane capacity are reused.
-    fn ensure_batch(&mut self, lanes: usize) {
-        if self.batch_replica.len() < lanes * self.n {
-            self.batch_replica.resize(lanes * self.n, 0.0);
-        }
-        let k = self.cfg.k;
-        let fits = self.bws.len() == self.parts.len()
-            && self.bws.iter().all(|w| w.lanes_cap >= lanes && w.k_cap == k);
-        if !fits {
-            self.bws = self
-                .parts
-                .iter()
-                .map(|p| BatchWorkspace::new(p.rows(), k, lanes))
-                .collect();
-        }
-    }
-}
-
-/// Fully-resolved per-query knobs for [`TopKSolver::solve_prepared`]. The
-/// facade's `QueryParams` lowers to this after filling defaults from the
-/// prepared configuration.
-#[derive(Clone, Copy, Debug)]
-pub struct SolveQuery {
-    /// Krylov dimension for this query (`1 ..= prepared k`).
-    pub k: usize,
-    /// Seed for the random start vector.
-    pub seed: u64,
-    /// Host threading policy for this query.
-    pub exec: ExecPolicy,
-}
-
-impl SolveQuery {
-    /// The defaults a one-shot solve uses: everything from the config.
-    pub fn from_config(cfg: &SolverConfig) -> Self {
-        SolveQuery { k: cfg.k, seed: cfg.seed, exec: cfg.exec }
-    }
-}
-
 impl TopKSolver {
     /// Solver over the pure-rust host-simulation backend.
     pub fn new(cfg: SolverConfig) -> Self {
@@ -679,1242 +569,6 @@ impl TopKSolver {
     /// Name of the kernel backend in use ("hostsim" / "pjrt" / custom).
     pub fn backend_name(&self) -> &'static str {
         self.kernels.backend_name()
-    }
-
-    /// Compute the Top-K eigenpairs of symmetric `m`.
-    pub fn solve(&mut self, m: &Csr) -> Result<EigenSolution, SolverError> {
-        self.solve_observed(m, None)
-    }
-
-    /// Like [`TopKSolver::solve`], invoking `observer` after every Lanczos
-    /// iteration. The observer may return [`ObserverControl::Stop`] to
-    /// truncate the Krylov space at the current dimension (tolerance-driven
-    /// early stopping); the solution then holds that many eigenpairs and
-    /// `stats.early_stopped` is set. The per-iteration residual estimate is
-    /// only computed when an observer is attached — the un-observed hot
-    /// path is unchanged.
-    ///
-    /// One-shot composition of the prepare/solve lifecycle: exactly
-    /// [`TopKSolver::prepare`] followed by one [`TopKSolver::solve_prepared`]
-    /// at the configured defaults, so session solves are bit-identical to
-    /// one-shot solves by construction.
-    pub fn solve_observed(
-        &mut self,
-        m: &Csr,
-        observer: Option<&mut dyn IterationObserver>,
-    ) -> Result<EigenSolution, SolverError> {
-        let mut prep = self.prepare(m)?;
-        let query = SolveQuery::from_config(&prep.cfg);
-        let mut sol = self.solve_prepared(&mut prep, &query, observer)?;
-        // One-shot: the preparation is part of this solve's cost.
-        sol.stats.prepare_seconds = prep.prepare_seconds;
-        sol.stats.wall_seconds += prep.prepare_seconds;
-        Ok(sol)
-    }
-
-    /// Phase 0 of the lifecycle: validate the matrix against the
-    /// configuration, partition it across the fleet by device work, build
-    /// each partition's ELL/COO chunk plan in the storage dtype (the
-    /// device-resident quantized replica of the matrix), account device
-    /// memory, allocate the per-device workspaces, and fork one kernel
-    /// instance per device for the threaded path. Everything here is
-    /// per-*matrix* state: any number of [`TopKSolver::solve_prepared`]
-    /// calls may follow, each with different per-query knobs.
-    pub fn prepare(&mut self, m: &Csr) -> Result<PreparedState, SolverError> {
-        let cfg = self.cfg.clone();
-        if m.rows != m.cols {
-            return Err(SolverError::AsymmetricInput {
-                rows: m.rows,
-                cols: m.cols,
-                detail: format!("matrix must be square (got {}×{})", m.rows, m.cols),
-            });
-        }
-        if cfg.k < 1 {
-            return Err(SolverError::InvalidConfig {
-                field: "k",
-                message: "K must be ≥ 1".into(),
-            });
-        }
-        if cfg.k >= m.rows {
-            return Err(SolverError::InvalidConfig {
-                field: "k",
-                message: format!("K={} must be < n={}", cfg.k, m.rows),
-            });
-        }
-        if !(1..=8).contains(&cfg.devices) {
-            return Err(SolverError::InvalidConfig {
-                field: "devices",
-                message: format!(
-                    "devices must be in 1..=8 (modeled DGX-1 fleet), got {}",
-                    cfg.devices
-                ),
-            });
-        }
-        if cfg.devices > m.rows {
-            return Err(SolverError::InvalidConfig {
-                field: "devices",
-                message: format!("more devices ({}) than rows ({})", cfg.devices, m.rows),
-            });
-        }
-
-        let prep_start = Instant::now();
-        let n = m.rows;
-        let k = cfg.k;
-        let g = cfg.devices;
-        let storage = cfg.precision.storage;
-        let sb = storage.bytes();
-
-        // ---- Partition & plan ------------------------------------------------
-        // Balance *device work*, not raw nnz: each row costs ~min(deg, W)
-        // ELL slots on the device (heavier rows spill to the host tail).
-        let wcap = cfg.max_ell_width;
-        let parts: Vec<RowPartition> =
-            partition_by_weight(m, g, |deg| deg.min(wcap).max(1));
-        let mut mems: Vec<DeviceMemory> =
-            (0..g).map(|_| DeviceMemory::new(cfg.device_mem_bytes)).collect();
-        let mut plans: Vec<PartitionPlan> = Vec::with_capacity(g);
-        let mut out_of_core = false;
-        for (gi, (p, mem)) in parts.iter().zip(mems.iter_mut()).enumerate() {
-            let part = m.slice_rows(p.row_start, p.row_end);
-            // Vector working set: replica (n) + basis (K·n_g) + 3 work
-            // vectors, reserved at the prepared K (the per-query maximum).
-            let vec_bytes = n * sb + (k + 3) * p.rows() * sb;
-            mem.alloc(vec_bytes).map_err(|_| SolverError::MemoryBudget {
-                device: gi,
-                requested: vec_bytes,
-                capacity: mem.capacity(),
-            })?;
-            let plan = plan_partition(
-                &part,
-                storage,
-                cfg.ell_quantile,
-                cfg.max_ell_width,
-                mem,
-                cfg.max_chunk_rows,
-            );
-            out_of_core |= !plan.resident;
-            plans.push(plan);
-        }
-
-        // Per-device slice byte counts of v_i (for the ring swap model).
-        let slice_bytes: Vec<usize> = parts.iter().map(|p| p.rows() * sb).collect();
-        // Per-device workspaces: the only buffers of the hot loop, sized
-        // for the prepared K and reused across session solves.
-        let wss: Vec<SolveWorkspace> =
-            parts.iter().map(|p| SolveWorkspace::new(p.rows(), k)).collect();
-        // Fork one kernel instance per device now, so threaded session
-        // solves reuse the instances (and whatever owned state they carry)
-        // instead of re-forking per query. Empty when the backend cannot
-        // fork (PJRT) — those fleets run sequentially.
-        let forks: Vec<Box<dyn Kernels>> = if g > 1 {
-            (0..g)
-                .map(|_| self.kernels.fork())
-                .collect::<Option<Vec<_>>>()
-                .unwrap_or_default()
-        } else {
-            Vec::new()
-        };
-
-        Ok(PreparedState {
-            cfg,
-            n,
-            parts,
-            plans,
-            slice_bytes,
-            out_of_core,
-            mem_used: mems.iter().map(|m| m.used()).collect(),
-            wss,
-            forks,
-            bws: Vec::new(),
-            batch_replica: Vec::new(),
-            prepare_seconds: prep_start.elapsed().as_secs_f64(),
-        })
-    }
-
-    /// Run one query against a prepared matrix: the Lanczos iterations,
-    /// the CPU Jacobi phase and the eigenvector projection — no
-    /// validation, partitioning or layout work. Reuses the prepared
-    /// workspaces (reset, not reallocated) and the prepared per-device
-    /// kernel forks, so repeated solves on one [`PreparedState`] perform
-    /// no per-solve slab allocation. Bit-identical to a one-shot
-    /// [`TopKSolver::solve`] at the same effective configuration.
-    pub fn solve_prepared(
-        &mut self,
-        prep: &mut PreparedState,
-        query: &SolveQuery,
-        mut observer: Option<&mut dyn IterationObserver>,
-    ) -> Result<EigenSolution, SolverError> {
-        let cfg = prep.cfg.clone();
-        if query.k < 1 || query.k > cfg.k {
-            return Err(SolverError::InvalidConfig {
-                field: "k",
-                message: format!(
-                    "query K={} must be in 1..={} (the prepared workspace \
-                     capacity; re-prepare with a larger k to raise it)",
-                    query.k, cfg.k
-                ),
-            });
-        }
-        let wall_start = Instant::now();
-        let n = prep.n;
-        let k = query.k;
-        let g = cfg.devices;
-        let storage = cfg.precision.storage;
-        let compute = cfg.precision.compute;
-        let topology = match cfg.topology {
-            TopologyKind::Dgx1 => Topology::dgx1(g),
-            TopologyKind::NvSwitch => Topology::nvswitch(g),
-        };
-        let out_of_core = prep.out_of_core;
-        // Fresh simulated devices per query (clocks and counters start at
-        // zero), carrying the memory reservation made at prepare time.
-        let mut devices: Vec<Device> = prep
-            .mem_used
-            .iter()
-            .enumerate()
-            .map(|(i, &used)| {
-                let mut d = Device::new(i, cfg.device_mem_bytes);
-                d.mem.alloc(used).expect("prepared reservation fits by construction");
-                d
-            })
-            .collect();
-        // Split the prepared state into disjoint borrows for the hot loop.
-        let PreparedState { parts, plans, slice_bytes, wss, forks, .. } = prep;
-        // Allreduce latency model: tree reduction over the fleet.
-        let sync_latency = topology.latency_s * (g as f64).log2().ceil().max(1.0);
-
-        // ---- Lanczos state ---------------------------------------------------
-        let mut rng = Rng::new(query.seed);
-        let mut v1 = vec![0.0f64; n];
-        rng.fill_uniform(&mut v1);
-        l2_normalize(&mut v1);
-        // Storage quantization of the start vector (device residency).
-        let mut replica = crate::runtime::quantize_vec(&v1, storage);
-
-        // Rewind the prepared workspaces (slabs retained, no allocation).
-        for ws in wss.iter_mut() {
-            ws.reset();
-        }
-
-        let mut alpha = Vec::with_capacity(k);
-        let mut beta: Vec<f64> = Vec::with_capacity(k);
-        let mut phases = PhaseBreakdown::default();
-        let mut breakdowns = 0usize;
-        let mut sumsq_parts = vec![0.0f64; g];
-        // Reduction slots: device gi writes partials[gi]; the coordinator
-        // folds them in index order (determinism across exec policies).
-        let mut partials = vec![0.0f64; g];
-        let mut spmv_split = vec![SpmvSplit::default(); g];
-
-        // ---- Execution context ----------------------------------------------
-        let backend = self.kernels.backend_name();
-        self.kernels.begin_solve();
-        for f in forks.iter_mut() {
-            f.begin_solve();
-        }
-        let want_par = match query.exec {
-            ExecPolicy::Sequential => false,
-            ExecPolicy::Parallel => g > 1,
-            ExecPolicy::Auto => g > 1 && n / g >= PAR_MIN_ROWS_PER_DEVICE,
-        };
-        let mut ctx = if want_par && !forks.is_empty() {
-            // One prepared kernel instance per device; sequential fallback
-            // when the backend could not fork (PJRT, custom test kernels).
-            ExecCtx::Par {
-                kernels: forks.as_mut_slice(),
-                vec_par: n / g >= PAR_MIN_VEC_ROWS_PER_DEVICE,
-            }
-        } else {
-            ExecCtx::Shared(self.kernels.as_mut())
-        };
-        let host_parallel = ctx.is_parallel();
-
-        let phase_mark = |devices: &mut [Device], acc: &mut f64| {
-            // Helper pattern: callers measure deltas of the fleet max clock.
-            let t = devices.iter().map(|d| d.clock_s).fold(0.0, f64::max);
-            let delta = t - *acc;
-            *acc = t;
-            delta
-        };
-        let mut clock_cursor = 0.0f64;
-
-        // ---- Main loop (Algorithm 1) ----------------------------------------
-        // `k_eff` tracks the realized Krylov dimension: an observer may
-        // truncate the loop before K iterations (early stopping).
-        let mut k_eff = k;
-        for i in 0..k {
-            // β sync + normalization (lines 5–7), skipped on the first pass.
-            if i > 0 {
-                let ss: f64 = sumsq_parts.iter().sum();
-                let mut b = ss.sqrt();
-                // β recorded in T; stays 0 on breakdown (block boundary).
-                let mut b_t = b;
-                if b < 1e-12 * (n as f64).sqrt() {
-                    // Lanczos breakdown: the Krylov space is invariant.
-                    // Restart with a fresh random direction orthogonal to
-                    // the basis; T gets β = 0 at the block boundary so the
-                    // spectrum of the completed blocks is preserved.
-                    breakdowns += 1;
-                    b_t = 0.0;
-                    let mut fresh = vec![0.0f64; n];
-                    rng.fill_uniform(&mut fresh);
-                    for (gi, p) in parts.iter().enumerate() {
-                        let kern = ctx.kernel_mut(gi);
-                        let ws = &mut wss[gi];
-                        let rows = ws.rows;
-                        let blen = ws.basis_len;
-                        ws.v_nxt.copy_from_slice(&fresh[p.row_start..p.row_end]);
-                        let SolveWorkspace { basis, v_nxt, .. } = ws;
-                        for j in 0..blen {
-                            let q = &basis[j * rows..(j + 1) * rows];
-                            let o = kern.dot(q, v_nxt.as_slice(), &cfg.precision);
-                            kern.ortho_update_into(v_nxt.as_mut_slice(), q, o, &cfg.precision);
-                        }
-                    }
-                    let mut ss2 = 0.0f64;
-                    for gi in 0..g {
-                        let kern = ctx.kernel_mut(gi);
-                        let vn = wss[gi].v_nxt.as_slice();
-                        ss2 += kern.dot(vn, vn, &cfg.precision);
-                    }
-                    b = ss2.sqrt();
-                }
-                beta.push(b_t);
-                // Normalization: each device writes its own disjoint slice
-                // of the canonical replica.
-                {
-                    let rslices = split_rows_mut(&mut replica, parts.as_slice());
-                    let items = wss.iter().zip(devices.iter_mut()).zip(rslices);
-                    ctx.fan_out(Phase::Light, items, |((ws, dev), rs), kern| {
-                        kern.normalize_into(ws.v_nxt.as_slice(), b, &cfg.precision, rs);
-                        let cost = cfg.cost.vector_cost(ws.rows, 1, 1, &cfg.precision);
-                        dev.run_kernel(cfg.cost.stream_seconds(cost, compute));
-                    });
-                }
-                phases.vector_ops += phase_mark(&mut devices, &mut clock_cursor);
-                // β sync: the reduction's allreduce latency. Marked before
-                // the ring swap so it lands in `sync`, not `swap`.
-                for d in devices.iter_mut() {
-                    d.clock_s += sync_latency;
-                }
-                barrier(&mut devices);
-                phases.sync += phase_mark(&mut devices, &mut clock_cursor);
-                // Ring swap: refresh every device's replica of v_i.
-                ring::charge_swap_with(
-                    &mut devices,
-                    &topology,
-                    slice_bytes.as_slice(),
-                    cfg.swap,
-                );
-                phases.swap += phase_mark(&mut devices, &mut clock_cursor);
-            }
-
-            // SpMV (line 9): record the basis slice v_i (already quantized
-            // by the kernels), then per device, per chunk; stream if
-            // out-of-core. The replica is final for this iteration: let the
-            // backend cache its upload across chunks.
-            ctx.begin_cycle();
-            for s in spmv_split.iter_mut() {
-                *s = SpmvSplit::default();
-            }
-            {
-                let replica_ref = &replica;
-                let items = parts
-                    .iter()
-                    .zip(plans.iter())
-                    .zip(wss.iter_mut())
-                    .zip(devices.iter_mut())
-                    .zip(spmv_split.iter_mut());
-                ctx.fan_out(Phase::Heavy, items, |((((p, plan), ws), dev), split), kern| {
-                    ws.push_basis(&replica_ref[p.row_start..p.row_end]);
-                    let v_tmp = ws.v_tmp.as_mut_slice();
-                    for c in &plan.chunks {
-                        if !c.resident {
-                            let bytes = c.ell.bytes();
-                            let secs = cfg.cost.h2d_seconds(bytes);
-                            dev.stream_in(bytes, secs);
-                            split.h2d_s += secs;
-                        }
-                        kern.spmv_into(
-                            &c.ell,
-                            replica_ref,
-                            &cfg.precision,
-                            &mut v_tmp[c.row_offset..c.row_offset + c.ell.rows],
-                        );
-                        let cost =
-                            cfg.cost.spmv_cost(c.ell.rows, c.ell.width, n, &cfg.precision);
-                        let secs = cfg.cost.spmv_seconds(cost, compute);
-                        dev.run_kernel(secs);
-                        split.kernel_s += secs;
-                        if !c.ell.spill.is_empty() {
-                            // The spill tail is still device work (a COO
-                            // kernel on the real system) — charge it.
-                            let sc =
-                                cfg.cost.spill_cost(c.ell.spill.len(), &cfg.precision);
-                            let secs = cfg.cost.spmv_seconds(sc, compute);
-                            dev.run_kernel(secs);
-                            split.kernel_s += secs;
-                        }
-                    }
-                });
-            }
-            {
-                // Split the SpMV phase delta into h2d vs. compute using the
-                // critical-path device's own charge counters. The critical
-                // device is the one with the largest charge *this phase*
-                // (h2d + kernel seconds), not the largest absolute clock —
-                // absolute clocks can be led by earlier-phase skew.
-                let delta = phase_mark(&mut devices, &mut clock_cursor);
-                let mut crit = 0usize;
-                for (gi, s) in spmv_split.iter().enumerate() {
-                    let here = s.h2d_s + s.kernel_s;
-                    let best = spmv_split[crit].h2d_s + spmv_split[crit].kernel_s;
-                    if here > best {
-                        crit = gi;
-                    }
-                }
-                let SpmvSplit { h2d_s, kernel_s } = spmv_split[crit];
-                let tot = h2d_s + kernel_s;
-                if h2d_s > 0.0 && tot > 0.0 {
-                    phases.h2d += delta * (h2d_s / tot);
-                    phases.spmv += delta * (kernel_s / tot);
-                } else {
-                    phases.spmv += delta;
-                }
-            }
-
-            // α sync (line 10): per-device partial dots, folded in fixed
-            // device order on the coordinator thread.
-            {
-                let items = wss.iter().zip(devices.iter_mut()).zip(partials.iter_mut());
-                ctx.fan_out(Phase::Light, items, |((ws, dev), slot), kern| {
-                    let vi = ws.basis_row(ws.basis_len - 1);
-                    *slot = kern.dot(vi, ws.v_tmp.as_slice(), &cfg.precision);
-                    let cost = cfg.cost.vector_cost(ws.rows, 2, 0, &cfg.precision);
-                    dev.run_kernel(cfg.cost.stream_seconds(cost, compute));
-                });
-            }
-            let a_i: f64 = partials.iter().sum();
-            phases.vector_ops += phase_mark(&mut devices, &mut clock_cursor);
-            for d in devices.iter_mut() {
-                d.clock_s += sync_latency;
-            }
-            barrier(&mut devices);
-            phases.sync += phase_mark(&mut devices, &mut clock_cursor);
-            alpha.push(a_i);
-
-            // Candidate update (line 11) + partial Σ v_nxt².
-            let b_i = if i > 0 { beta[i - 1] } else { 0.0 };
-            {
-                let items = wss.iter_mut().zip(devices.iter_mut()).zip(partials.iter_mut());
-                ctx.fan_out(Phase::Heavy, items, |((ws, dev), slot), kern| {
-                    let rows = ws.rows;
-                    let blen = ws.basis_len;
-                    let SolveWorkspace { basis, v_tmp, v_nxt, zeros, .. } = ws;
-                    let vi = &basis[(blen - 1) * rows..blen * rows];
-                    let vp = if blen >= 2 {
-                        &basis[(blen - 2) * rows..(blen - 1) * rows]
-                    } else {
-                        zeros.as_slice()
-                    };
-                    *slot = kern.candidate_into(
-                        v_tmp.as_slice(),
-                        vi,
-                        vp,
-                        a_i,
-                        b_i,
-                        &cfg.precision,
-                        v_nxt.as_mut_slice(),
-                    );
-                    let cost = cfg.cost.candidate_cost(rows, &cfg.precision);
-                    dev.run_kernel(cfg.cost.stream_seconds(cost, compute));
-                });
-            }
-            sumsq_parts.copy_from_slice(&partials);
-            phases.vector_ops += phase_mark(&mut devices, &mut clock_cursor);
-
-            // Reorthogonalization (lines 12–21).
-            let reorth_targets: Vec<usize> = match cfg.reorth {
-                ReorthMode::None => vec![],
-                ReorthMode::Alternating => (0..=i).filter(|j| (i - j) % 2 == 0).collect(),
-                ReorthMode::Full => (0..=i).collect(),
-            };
-            if !reorth_targets.is_empty() {
-                for &j in &reorth_targets {
-                    {
-                        let items =
-                            wss.iter().zip(devices.iter_mut()).zip(partials.iter_mut());
-                        ctx.fan_out(Phase::Light, items, |((ws, dev), slot), kern| {
-                            *slot =
-                                kern.dot(ws.basis_row(j), ws.v_nxt.as_slice(), &cfg.precision);
-                            let cost = cfg.cost.vector_cost(ws.rows, 2, 0, &cfg.precision);
-                            dev.run_kernel(cfg.cost.stream_seconds(cost, compute));
-                        });
-                    }
-                    let o: f64 = partials.iter().sum();
-                    phases.reorth += phase_mark(&mut devices, &mut clock_cursor);
-                    for d in devices.iter_mut() {
-                        d.clock_s += sync_latency;
-                    }
-                    barrier(&mut devices);
-                    phases.sync += phase_mark(&mut devices, &mut clock_cursor);
-                    {
-                        let items = wss.iter_mut().zip(devices.iter_mut());
-                        ctx.fan_out(Phase::Light, items, |(ws, dev), kern| {
-                            let rows = ws.rows;
-                            let SolveWorkspace { basis, v_nxt, .. } = ws;
-                            let q = &basis[j * rows..(j + 1) * rows];
-                            kern.ortho_update_into(v_nxt.as_mut_slice(), q, o, &cfg.precision);
-                            let cost = cfg.cost.vector_cost(rows, 2, 1, &cfg.precision);
-                            dev.run_kernel(cfg.cost.stream_seconds(cost, compute));
-                        });
-                    }
-                    phases.reorth += phase_mark(&mut devices, &mut clock_cursor);
-                }
-                // Recompute the candidate norm after the corrections.
-                {
-                    let items = wss.iter().zip(partials.iter_mut());
-                    ctx.fan_out(Phase::Light, items, |(ws, slot), kern| {
-                        *slot = kern.dot(ws.v_nxt.as_slice(), ws.v_nxt.as_slice(), &cfg.precision);
-                    });
-                }
-                sumsq_parts.copy_from_slice(&partials);
-                phases.reorth += phase_mark(&mut devices, &mut clock_cursor);
-            }
-
-            // Observer hook: one event per completed iteration. The residual
-            // estimate costs a Jacobi solve of the (i+1)×(i+1) tridiagonal —
-            // microseconds at K ≤ 64 — and is skipped entirely when no
-            // observer is attached.
-            if let Some(obs) = observer.as_mut() {
-                let beta_next = sumsq_parts.iter().sum::<f64>().sqrt();
-                let event = IterationEvent {
-                    iter: i,
-                    alpha: a_i,
-                    beta: beta_next,
-                    residual_estimate: ritz_residual_estimate(&alpha, &beta, beta_next),
-                    sim_seconds: devices.iter().map(|d| d.clock_s).fold(0.0, f64::max),
-                    phases,
-                };
-                if obs.on_iteration(&event) == ObserverControl::Stop {
-                    k_eff = i + 1;
-                    break;
-                }
-            }
-            // No shift step: v_prev is read straight out of the basis slab.
-        }
-
-        // ---- Phase 2: CPU Jacobi on T (paper Fig. 1 Ⓓ) ----------------------
-        let t = DenseSym::from_tridiagonal(&alpha, &beta);
-        // Convergence threshold at the working precision: asking an f32
-        // Jacobi for 1e-12 off-diagonals would spin the sweep limit.
-        let jacobi_tol = match cfg.precision.jacobi {
-            crate::precision::Storage::F32 => 1e-6,
-            crate::precision::Storage::F64 => 1e-12,
-        };
-        let eig = jacobi_eigen(&t, cfg.precision.jacobi, jacobi_tol, 100);
-        // The simulated clock takes the *modeled* CPU cost, not the
-        // measured wallclock: sim_seconds must be bit-reproducible across
-        // runs (the serving runtime's replay determinism rides on it). The
-        // real time is still inside `wall_seconds`.
-        phases.jacobi_cpu = cfg.cost.jacobi_seconds(alpha.len());
-        for d in devices.iter_mut() {
-            d.clock_s += phases.jacobi_cpu; // fleet idles while the CPU works
-        }
-        // Consume the Jacobi clock advance: it is already accounted in
-        // `jacobi_cpu`, so the projection mark below measures only
-        // projection work (it used to double-count into `project`).
-        let _ = phase_mark(&mut devices, &mut clock_cursor);
-
-        // ---- Eigenvector projection Y = 𝒱 · V --------------------------------
-        let coeff: &[Vec<f64>] = &eig.vectors;
-        let mut eigenvectors = vec![vec![0.0f64; n]; k_eff];
-        let mut proj: Vec<Vec<f64>> =
-            parts.iter().map(|p| vec![0.0f64; k_eff * p.rows()]).collect();
-        {
-            let items = wss.iter().zip(devices.iter_mut()).zip(proj.iter_mut());
-            ctx.fan_out(Phase::Heavy, items, |((ws, dev), out), kern| {
-                kern.project_into(
-                    ws.basis_filled(),
-                    ws.rows,
-                    coeff,
-                    &cfg.precision,
-                    out.as_mut_slice(),
-                );
-                let cost = cfg.cost.vector_cost(ws.rows * k_eff, 1, 1, &cfg.precision);
-                dev.run_kernel(cfg.cost.stream_seconds(cost, compute));
-            });
-        }
-        phases.project += phase_mark(&mut devices, &mut clock_cursor);
-        for (gi, p) in parts.iter().enumerate() {
-            let rows = p.rows();
-            for (t_idx, ev) in eigenvectors.iter_mut().enumerate() {
-                ev[p.row_start..p.row_end]
-                    .copy_from_slice(&proj[gi][t_idx * rows..(t_idx + 1) * rows]);
-            }
-        }
-        for v in eigenvectors.iter_mut() {
-            l2_normalize(v);
-        }
-
-        let sim_seconds = devices.iter().map(|d| d.clock_s).fold(0.0, f64::max);
-        let stats = SolveStats {
-            wall_seconds: wall_start.elapsed().as_secs_f64(),
-            sim_seconds,
-            sim_per_device: devices.iter().map(|d| d.clock_s).collect(),
-            phases,
-            kernels_launched: devices.iter().map(|d| d.kernels_launched).sum(),
-            h2d_bytes: devices.iter().map(|d| d.h2d_bytes).sum(),
-            p2p_bytes: devices.iter().map(|d| d.p2p_bytes).sum(),
-            iterations: k_eff,
-            breakdowns,
-            out_of_core,
-            peak_device_bytes: devices.iter().map(|d| d.mem.peak()).max().unwrap_or(0),
-            backend,
-            host_parallel,
-            exec_policy: if host_parallel { "parallel" } else { "sequential" },
-            // A prepared-matrix solve carries no setup cost of its own; the
-            // one-shot wrapper (`solve_observed`) overwrites this with the
-            // preparation it performed.
-            prepare_seconds: 0.0,
-            early_stopped: k_eff < k,
-        };
-
-        Ok(EigenSolution { eigenvalues: eig.values, eigenvectors, alpha, beta, stats })
-    }
-
-    /// Run `B` queries **concurrently** against a prepared matrix: one
-    /// batched Lanczos loop in which every per-device matrix chunk — and,
-    /// out-of-core, its host→device transfer — is streamed **once per
-    /// iteration for the whole block** ([`Kernels::spmm_into`]), instead of
-    /// once per query. Per-query state (start vector RNG, α/β tridiagonal,
-    /// breakdown restarts, early-stop observers) stays fully independent,
-    /// so each lane's solution is **bit-identical** to the same query run
-    /// solo through [`TopKSolver::solve_prepared`] (asserted by
-    /// `rust/tests/batch_solve.rs`).
-    ///
-    /// `observers[q]` (optional, one slot per query) is invoked once per
-    /// Lanczos iteration for query `q`; a `Stop` retires that lane — its
-    /// Jacobi/projection run immediately and the lane drops out of the
-    /// dense blocks without perturbing the remaining lanes. Queries may
-    /// mix `k` and `seed` freely; the host threading policy is batch-level
-    /// and taken from the first query.
-    ///
-    /// Per-lane `stats` are snapshots of the shared fleet at that lane's
-    /// completion (`phases` partitions `sim_seconds` exactly at every
-    /// snapshot); h2d/p2p/kernel counters are batch-cumulative. Transfer
-    /// charges are paid once per chunk per iteration — not per query —
-    /// which is the amortization lever this path exists for.
-    ///
-    /// Memory model: the extra `B−1` lanes' vector working set is charged
-    /// to the simulated devices up to their capacity (so
-    /// `peak_device_bytes` reflects the batch's residency pressure); any
-    /// overflow models as unified-memory host spill (paper §III-B). The
-    /// chunk residency plan is the one made at prepare time — batching
-    /// does not re-derive it.
-    pub fn solve_batch_prepared(
-        &mut self,
-        prep: &mut PreparedState,
-        queries: &[SolveQuery],
-        mut observers: Vec<Option<&mut dyn IterationObserver>>,
-    ) -> Result<Vec<EigenSolution>, SolverError> {
-        let cfg = prep.cfg.clone();
-        let nq = queries.len();
-        if nq == 0 {
-            return Err(SolverError::InvalidConfig {
-                field: "batch",
-                message: "batch must contain at least one query".into(),
-            });
-        }
-        for (qi, q) in queries.iter().enumerate() {
-            if q.k < 1 || q.k > cfg.k {
-                return Err(SolverError::InvalidConfig {
-                    field: "k",
-                    message: format!(
-                        "batch query {qi}: K={} must be in 1..={} (the prepared \
-                         workspace capacity; re-prepare with a larger k to raise it)",
-                        q.k, cfg.k
-                    ),
-                });
-            }
-        }
-        if observers.is_empty() {
-            observers = (0..nq).map(|_| None).collect();
-        }
-        if observers.len() != nq {
-            return Err(SolverError::InvalidConfig {
-                field: "batch",
-                message: format!(
-                    "observer count {} does not match query count {nq}",
-                    observers.len()
-                ),
-            });
-        }
-
-        let wall_start = Instant::now();
-        let n = prep.n;
-        let g = cfg.devices;
-        let storage = cfg.precision.storage;
-        let compute = cfg.precision.compute;
-        let topology = match cfg.topology {
-            TopologyKind::Dgx1 => Topology::dgx1(g),
-            TopologyKind::NvSwitch => Topology::nvswitch(g),
-        };
-        let out_of_core = prep.out_of_core;
-        let sb = storage.bytes();
-        let mut devices: Vec<Device> = prep
-            .mem_used
-            .iter()
-            .zip(prep.parts.iter())
-            .enumerate()
-            .map(|(i, (&used, part))| {
-                let mut d = Device::new(i, cfg.device_mem_bytes);
-                d.mem.alloc(used).expect("prepared reservation fits by construction");
-                // The extra B−1 lanes' vector working set (replica slice,
-                // basis slab, candidate/SpMM vectors) on top of the
-                // single-query reservation made at prepare time. Charged
-                // up to the device capacity so `peak_device_bytes` reports
-                // the batch's true residency pressure; the overflow models
-                // as unified-memory host spill (paper §III-B) — the chunk
-                // plan made at prepare time is not re-derived per batch.
-                let extra = nq.saturating_sub(1)
-                    * (prep.n * sb + (cfg.k + 2) * part.rows() * sb);
-                d.mem.alloc(extra.min(d.mem.free())).ok();
-                d
-            })
-            .collect();
-        prep.ensure_batch(nq);
-        let PreparedState { parts, plans, slice_bytes, bws, batch_replica, forks, .. } =
-            prep;
-        let sync_latency = topology.latency_s * (g as f64).log2().ceil().max(1.0);
-
-        // ---- Per-query Lanczos state (indexed by stable query id) -----------
-        let mut rngs: Vec<Rng> = queries.iter().map(|q| Rng::new(q.seed)).collect();
-        let mut alphas_t: Vec<Vec<f64>> =
-            queries.iter().map(|q| Vec::with_capacity(q.k)).collect();
-        let mut betas_t: Vec<Vec<f64>> =
-            queries.iter().map(|q| Vec::with_capacity(q.k)).collect();
-        let mut breakdowns = vec![0usize; nq];
-        let mut k_eff: Vec<usize> = queries.iter().map(|q| q.k).collect();
-        // Active lane map: dense block position p -> query id.
-        let mut active: Vec<usize> = (0..nq).collect();
-
-        for ws in bws.iter_mut() {
-            ws.reset();
-        }
-        // Start vectors: per lane, exactly the solo initialization.
-        for (p, &qid) in active.iter().enumerate() {
-            let mut v1 = vec![0.0f64; n];
-            rngs[qid].fill_uniform(&mut v1);
-            l2_normalize(&mut v1);
-            let q1 = crate::runtime::quantize_vec(&v1, storage);
-            batch_replica[p * n..(p + 1) * n].copy_from_slice(&q1);
-        }
-
-        let mut phases = PhaseBreakdown::default();
-        // Reduction slots: device gi writes partials[gi*nq + p] for active
-        // lane position p; the coordinator folds per lane in fixed device
-        // order (determinism across exec policies, as in the solo path).
-        let mut partials = vec![0.0f64; g * nq];
-        // Candidate Σv² per (query id, device) — read at the next β sync.
-        let mut sumsq = vec![0.0f64; nq * g];
-        let mut spmv_split = vec![SpmvSplit::default(); g];
-
-        // ---- Execution context ----------------------------------------------
-        let backend = self.kernels.backend_name();
-        self.kernels.begin_solve();
-        for f in forks.iter_mut() {
-            f.begin_solve();
-        }
-        let want_par = match queries[0].exec {
-            ExecPolicy::Sequential => false,
-            ExecPolicy::Parallel => g > 1,
-            ExecPolicy::Auto => g > 1 && n / g >= PAR_MIN_ROWS_PER_DEVICE,
-        };
-        let mut ctx = if want_par && !forks.is_empty() {
-            ExecCtx::Par {
-                kernels: forks.as_mut_slice(),
-                vec_par: n / g >= PAR_MIN_VEC_ROWS_PER_DEVICE,
-            }
-        } else {
-            ExecCtx::Shared(self.kernels.as_mut())
-        };
-        let host_parallel = ctx.is_parallel();
-
-        let phase_mark = |devices: &mut [Device], acc: &mut f64| {
-            let t = devices.iter().map(|d| d.clock_s).fold(0.0, f64::max);
-            let delta = t - *acc;
-            *acc = t;
-            delta
-        };
-        let mut clock_cursor = 0.0f64;
-        let mut outcomes: Vec<Option<EigenSolution>> = (0..nq).map(|_| None).collect();
-        let k_max_batch = queries.iter().map(|q| q.k).max().unwrap_or(0);
-
-        // ---- Batched main loop (Algorithm 1 × B lanes) -----------------------
-        for i in 0..k_max_batch {
-            if active.is_empty() {
-                break;
-            }
-            let nb = active.len();
-
-            // β sync + normalization, skipped on the first pass. β folds,
-            // breakdown restarts and tridiagonal bookkeeping are per lane;
-            // the allreduce latency and the ring swap are paid once for the
-            // whole block (the swap moves nb slices per partition).
-            if i > 0 {
-                let mut b_cur = vec![0.0f64; nb];
-                for (p, &qid) in active.iter().enumerate() {
-                    let ss: f64 = (0..g).map(|gi| sumsq[qid * g + gi]).sum();
-                    let mut b = ss.sqrt();
-                    let mut b_t = b;
-                    if b < 1e-12 * (n as f64).sqrt() {
-                        // Lanczos breakdown of this lane only: restart with
-                        // a fresh direction from the lane's own RNG,
-                        // orthogonalized against the lane's basis — the
-                        // solo recovery, scoped to one lane.
-                        breakdowns[qid] += 1;
-                        b_t = 0.0;
-                        let mut fresh = vec![0.0f64; n];
-                        rngs[qid].fill_uniform(&mut fresh);
-                        for (gi, part) in parts.iter().enumerate() {
-                            let kern = ctx.kernel_mut(gi);
-                            let ws = &mut bws[gi];
-                            let rows = ws.rows;
-                            let k_cap = ws.k_cap;
-                            let blen = ws.basis_len[qid];
-                            ws.lane_nxt_mut(p)
-                                .copy_from_slice(&fresh[part.row_start..part.row_end]);
-                            let BatchWorkspace { bases, v_nxt, .. } = ws;
-                            let vn = &mut v_nxt[p * rows..(p + 1) * rows];
-                            for j in 0..blen {
-                                let at = (qid * k_cap + j) * rows;
-                                let q = &bases[at..at + rows];
-                                let o = kern.dot(q, vn, &cfg.precision);
-                                kern.ortho_update_into(vn, q, o, &cfg.precision);
-                            }
-                        }
-                        let mut ss2 = 0.0f64;
-                        for gi in 0..g {
-                            let kern = ctx.kernel_mut(gi);
-                            let vn = bws[gi].lane_nxt(p);
-                            ss2 += kern.dot(vn, vn, &cfg.precision);
-                        }
-                        b = ss2.sqrt();
-                    }
-                    betas_t[qid].push(b_t);
-                    b_cur[p] = b;
-                }
-                // Normalization: per device, one blocked kernel writes all
-                // active lanes' slices of the replica block.
-                {
-                    let mut dev_slices: Vec<Vec<&mut [f64]>> =
-                        (0..g).map(|_| Vec::with_capacity(nb)).collect();
-                    let mut rest: &mut [f64] = &mut batch_replica[..nb * n];
-                    for _ in 0..nb {
-                        let (lane, tail) = rest.split_at_mut(n);
-                        rest = tail;
-                        for (gi, s) in
-                            split_rows_mut(lane, parts.as_slice()).into_iter().enumerate()
-                        {
-                            dev_slices[gi].push(s);
-                        }
-                    }
-                    let b_ref = &b_cur;
-                    let items =
-                        bws.iter().zip(devices.iter_mut()).zip(dev_slices.into_iter());
-                    ctx.fan_out(Phase::Light, items, |((ws, dev), mut rslices), kern| {
-                        let srcs: Vec<&[f64]> =
-                            (0..rslices.len()).map(|p| ws.lane_nxt(p)).collect();
-                        let mut outs: Vec<&mut [f64]> =
-                            rslices.iter_mut().map(|s| &mut **s).collect();
-                        kern.normalize_block(&srcs, b_ref, &cfg.precision, &mut outs);
-                        let cost =
-                            cfg.cost.vector_cost(ws.rows * srcs.len(), 1, 1, &cfg.precision);
-                        dev.run_kernel(cfg.cost.stream_seconds(cost, compute));
-                    });
-                }
-                phases.vector_ops += phase_mark(&mut devices, &mut clock_cursor);
-                for d in devices.iter_mut() {
-                    d.clock_s += sync_latency;
-                }
-                barrier(&mut devices);
-                phases.sync += phase_mark(&mut devices, &mut clock_cursor);
-                // Ring swap: every lane's replica refreshes, so nb slices
-                // per partition move this iteration.
-                let scaled: Vec<usize> = slice_bytes.iter().map(|&b| b * nb).collect();
-                ring::charge_swap_with(&mut devices, &topology, &scaled, cfg.swap);
-                phases.swap += phase_mark(&mut devices, &mut clock_cursor);
-            }
-
-            // SpMM: per device, per chunk — the chunk (and its h2d
-            // transfer, when streamed) is paid ONCE for all nb lanes.
-            ctx.begin_cycle();
-            for s in spmv_split.iter_mut() {
-                *s = SpmvSplit::default();
-            }
-            {
-                let replica_ref: &[f64] = &batch_replica[..nb * n];
-                let active_ref = &active;
-                let items = parts
-                    .iter()
-                    .zip(plans.iter())
-                    .zip(bws.iter_mut())
-                    .zip(devices.iter_mut())
-                    .zip(spmv_split.iter_mut());
-                ctx.fan_out(Phase::Heavy, items, |((((part, plan), ws), dev), split), kern| {
-                    for (p, &qid) in active_ref.iter().enumerate() {
-                        ws.push_basis(
-                            qid,
-                            &replica_ref[p * n + part.row_start..p * n + part.row_end],
-                        );
-                    }
-                    let rows = ws.rows;
-                    let v_tmp = &mut ws.v_tmp[..nb * rows];
-                    for c in &plan.chunks {
-                        if !c.resident {
-                            let bytes = c.ell.bytes();
-                            let secs = cfg.cost.h2d_seconds(bytes);
-                            dev.stream_in(bytes, secs);
-                            split.h2d_s += secs;
-                        }
-                        kern.spmm_into(
-                            &c.ell,
-                            replica_ref,
-                            nb,
-                            &cfg.precision,
-                            v_tmp,
-                            rows,
-                            c.row_offset,
-                        );
-                        let cost = cfg
-                            .cost
-                            .spmm_cost(c.ell.rows, c.ell.width, n, nb, &cfg.precision);
-                        let secs = cfg.cost.spmv_seconds(cost, compute);
-                        dev.run_kernel(secs);
-                        split.kernel_s += secs;
-                        if !c.ell.spill.is_empty() {
-                            let sc = cfg.cost.spill_cost_block(
-                                c.ell.spill.len(),
-                                nb,
-                                &cfg.precision,
-                            );
-                            let secs = cfg.cost.spmv_seconds(sc, compute);
-                            dev.run_kernel(secs);
-                            split.kernel_s += secs;
-                        }
-                    }
-                });
-            }
-            {
-                // h2d vs compute attribution from the critical device's own
-                // charge counters — same derivation as the solo path.
-                let delta = phase_mark(&mut devices, &mut clock_cursor);
-                let mut crit = 0usize;
-                for (gi, s) in spmv_split.iter().enumerate() {
-                    let here = s.h2d_s + s.kernel_s;
-                    let best = spmv_split[crit].h2d_s + spmv_split[crit].kernel_s;
-                    if here > best {
-                        crit = gi;
-                    }
-                }
-                let SpmvSplit { h2d_s, kernel_s } = spmv_split[crit];
-                let tot = h2d_s + kernel_s;
-                if h2d_s > 0.0 && tot > 0.0 {
-                    phases.h2d += delta * (h2d_s / tot);
-                    phases.spmv += delta * (kernel_s / tot);
-                } else {
-                    phases.spmv += delta;
-                }
-            }
-
-            // α sync: blocked per-device partial dots, folded per lane in
-            // fixed device order; one allreduce for the whole block.
-            {
-                let active_ref = &active;
-                let items =
-                    bws.iter().zip(devices.iter_mut()).zip(partials.chunks_mut(nq));
-                ctx.fan_out(Phase::Light, items, |((ws, dev), slots), kern| {
-                    let vis: Vec<&[f64]> = active_ref
-                        .iter()
-                        .map(|&qid| ws.basis_row(qid, ws.basis_len[qid] - 1))
-                        .collect();
-                    let tmps: Vec<&[f64]> =
-                        ws.v_tmp[..nb * ws.rows].chunks(ws.rows).collect();
-                    kern.dot_block(&vis, &tmps, &cfg.precision, &mut slots[..nb]);
-                    let cost = cfg.cost.vector_cost(ws.rows * nb, 2, 0, &cfg.precision);
-                    dev.run_kernel(cfg.cost.stream_seconds(cost, compute));
-                });
-            }
-            let mut a_cur = vec![0.0f64; nb];
-            for (p, a) in a_cur.iter_mut().enumerate() {
-                *a = (0..g).map(|gi| partials[gi * nq + p]).sum();
-            }
-            phases.vector_ops += phase_mark(&mut devices, &mut clock_cursor);
-            for d in devices.iter_mut() {
-                d.clock_s += sync_latency;
-            }
-            barrier(&mut devices);
-            phases.sync += phase_mark(&mut devices, &mut clock_cursor);
-            for (p, &qid) in active.iter().enumerate() {
-                alphas_t[qid].push(a_cur[p]);
-            }
-
-            // Candidate update: one blocked kernel per device.
-            let b_prev: Vec<f64> = active
-                .iter()
-                .map(|&qid| if i > 0 { betas_t[qid][i - 1] } else { 0.0 })
-                .collect();
-            {
-                let a_ref = &a_cur;
-                let b_ref = &b_prev;
-                let active_ref = &active;
-                let items =
-                    bws.iter_mut().zip(devices.iter_mut()).zip(partials.chunks_mut(nq));
-                ctx.fan_out(Phase::Heavy, items, |((ws, dev), slots), kern| {
-                    let rows = ws.rows;
-                    let k_cap = ws.k_cap;
-                    let BatchWorkspace { bases, basis_len, v_tmp, v_nxt, zeros, .. } = ws;
-                    let mut vis: Vec<&[f64]> = Vec::with_capacity(nb);
-                    let mut vps: Vec<&[f64]> = Vec::with_capacity(nb);
-                    for &qid in active_ref.iter() {
-                        let blen = basis_len[qid];
-                        let base = qid * k_cap * rows;
-                        vis.push(&bases[base + (blen - 1) * rows..base + blen * rows]);
-                        vps.push(if blen >= 2 {
-                            &bases[base + (blen - 2) * rows..base + (blen - 1) * rows]
-                        } else {
-                            zeros.as_slice()
-                        });
-                    }
-                    let tmps: Vec<&[f64]> = v_tmp[..nb * rows].chunks(rows).collect();
-                    let mut outs: Vec<&mut [f64]> =
-                        v_nxt[..nb * rows].chunks_mut(rows).collect();
-                    kern.candidate_block(
-                        &tmps,
-                        &vis,
-                        &vps,
-                        a_ref,
-                        b_ref,
-                        &cfg.precision,
-                        &mut outs,
-                        &mut slots[..nb],
-                    );
-                    let cost = cfg.cost.candidate_cost(rows * nb, &cfg.precision);
-                    dev.run_kernel(cfg.cost.stream_seconds(cost, compute));
-                });
-            }
-            for (p, &qid) in active.iter().enumerate() {
-                for gi in 0..g {
-                    sumsq[qid * g + gi] = partials[gi * nq + p];
-                }
-            }
-            phases.vector_ops += phase_mark(&mut devices, &mut clock_cursor);
-
-            // Reorthogonalization: targets depend only on the iteration
-            // index, which all active lanes share; one sync per target for
-            // the whole block.
-            let reorth_targets: Vec<usize> = match cfg.reorth {
-                ReorthMode::None => vec![],
-                ReorthMode::Alternating => (0..=i).filter(|j| (i - j) % 2 == 0).collect(),
-                ReorthMode::Full => (0..=i).collect(),
-            };
-            if !reorth_targets.is_empty() {
-                for &j in &reorth_targets {
-                    {
-                        let active_ref = &active;
-                        let items =
-                            bws.iter().zip(devices.iter_mut()).zip(partials.chunks_mut(nq));
-                        ctx.fan_out(Phase::Light, items, |((ws, dev), slots), kern| {
-                            let qs: Vec<&[f64]> = active_ref
-                                .iter()
-                                .map(|&qid| ws.basis_row(qid, j))
-                                .collect();
-                            let vns: Vec<&[f64]> =
-                                ws.v_nxt[..nb * ws.rows].chunks(ws.rows).collect();
-                            kern.dot_block(&qs, &vns, &cfg.precision, &mut slots[..nb]);
-                            let cost =
-                                cfg.cost.vector_cost(ws.rows * nb, 2, 0, &cfg.precision);
-                            dev.run_kernel(cfg.cost.stream_seconds(cost, compute));
-                        });
-                    }
-                    let mut o_cur = vec![0.0f64; nb];
-                    for (p, o) in o_cur.iter_mut().enumerate() {
-                        *o = (0..g).map(|gi| partials[gi * nq + p]).sum();
-                    }
-                    phases.reorth += phase_mark(&mut devices, &mut clock_cursor);
-                    for d in devices.iter_mut() {
-                        d.clock_s += sync_latency;
-                    }
-                    barrier(&mut devices);
-                    phases.sync += phase_mark(&mut devices, &mut clock_cursor);
-                    {
-                        let o_ref = &o_cur;
-                        let active_ref = &active;
-                        let items = bws.iter_mut().zip(devices.iter_mut());
-                        ctx.fan_out(Phase::Light, items, |(ws, dev), kern| {
-                            let rows = ws.rows;
-                            let k_cap = ws.k_cap;
-                            let BatchWorkspace { bases, v_nxt, .. } = ws;
-                            let qs: Vec<&[f64]> = active_ref
-                                .iter()
-                                .map(|&qid| {
-                                    let at = (qid * k_cap + j) * rows;
-                                    &bases[at..at + rows]
-                                })
-                                .collect();
-                            let mut us: Vec<&mut [f64]> =
-                                v_nxt[..nb * rows].chunks_mut(rows).collect();
-                            kern.ortho_update_block(&mut us, &qs, o_ref, &cfg.precision);
-                            let cost = cfg.cost.vector_cost(rows * nb, 2, 1, &cfg.precision);
-                            dev.run_kernel(cfg.cost.stream_seconds(cost, compute));
-                        });
-                    }
-                    phases.reorth += phase_mark(&mut devices, &mut clock_cursor);
-                }
-                // Recompute the candidate norms after the corrections.
-                {
-                    let items = bws.iter().zip(partials.chunks_mut(nq));
-                    ctx.fan_out(Phase::Light, items, |(ws, slots), kern| {
-                        let vns: Vec<&[f64]> =
-                            ws.v_nxt[..nb * ws.rows].chunks(ws.rows).collect();
-                        kern.dot_block(&vns, &vns, &cfg.precision, &mut slots[..nb]);
-                    });
-                }
-                for (p, &qid) in active.iter().enumerate() {
-                    for gi in 0..g {
-                        sumsq[qid * g + gi] = partials[gi * nq + p];
-                    }
-                }
-                phases.reorth += phase_mark(&mut devices, &mut clock_cursor);
-            }
-
-            // Observer hooks + retirement decisions, per lane. A lane
-            // retires when its observer stops it or when it has reached its
-            // own configured k — others continue undisturbed.
-            let mut finished: Vec<usize> = Vec::new();
-            for (p, &qid) in active.iter().enumerate() {
-                let beta_next =
-                    (0..g).map(|gi| sumsq[qid * g + gi]).sum::<f64>().sqrt();
-                let mut stop = false;
-                if let Some(obs) = observers[qid].as_mut() {
-                    let event = IterationEvent {
-                        iter: i,
-                        alpha: a_cur[p],
-                        beta: beta_next,
-                        residual_estimate: ritz_residual_estimate(
-                            &alphas_t[qid],
-                            &betas_t[qid],
-                            beta_next,
-                        ),
-                        sim_seconds: devices.iter().map(|d| d.clock_s).fold(0.0, f64::max),
-                        phases,
-                    };
-                    if obs.on_iteration(&event) == ObserverControl::Stop {
-                        stop = true;
-                    }
-                }
-                if stop {
-                    k_eff[qid] = i + 1;
-                }
-                if stop || i + 1 == queries[qid].k {
-                    finished.push(p);
-                }
-            }
-
-            // Finalize retired lanes (ascending position, deterministic):
-            // per-lane Jacobi + projection, stats snapshot at completion.
-            for &p in &finished {
-                let qid = active[p];
-                let keff = k_eff[qid];
-                let t = DenseSym::from_tridiagonal(&alphas_t[qid], &betas_t[qid]);
-                let jacobi_tol = match cfg.precision.jacobi {
-                    crate::precision::Storage::F32 => 1e-6,
-                    crate::precision::Storage::F64 => 1e-12,
-                };
-                let eig = jacobi_eigen(&t, cfg.precision.jacobi, jacobi_tol, 100);
-                // Modeled CPU charge, as in the solo path — keeps the
-                // batched sim clock bit-reproducible across runs.
-                let jd = cfg.cost.jacobi_seconds(alphas_t[qid].len());
-                phases.jacobi_cpu += jd;
-                for d in devices.iter_mut() {
-                    d.clock_s += jd; // fleet idles while the CPU works
-                }
-                let _ = phase_mark(&mut devices, &mut clock_cursor);
-
-                let coeff: &[Vec<f64>] = &eig.vectors;
-                let mut proj: Vec<Vec<f64>> =
-                    parts.iter().map(|pt| vec![0.0f64; keff * pt.rows()]).collect();
-                {
-                    let items = bws.iter().zip(devices.iter_mut()).zip(proj.iter_mut());
-                    ctx.fan_out(Phase::Heavy, items, |((ws, dev), out), kern| {
-                        kern.project_into(
-                            ws.lane_basis(qid, keff),
-                            ws.rows,
-                            coeff,
-                            &cfg.precision,
-                            out.as_mut_slice(),
-                        );
-                        let cost = cfg.cost.vector_cost(ws.rows * keff, 1, 1, &cfg.precision);
-                        dev.run_kernel(cfg.cost.stream_seconds(cost, compute));
-                    });
-                }
-                phases.project += phase_mark(&mut devices, &mut clock_cursor);
-                let mut eigenvectors = vec![vec![0.0f64; n]; keff];
-                for (gi, part) in parts.iter().enumerate() {
-                    let rows = part.rows();
-                    for (t_idx, ev) in eigenvectors.iter_mut().enumerate() {
-                        ev[part.row_start..part.row_end]
-                            .copy_from_slice(&proj[gi][t_idx * rows..(t_idx + 1) * rows]);
-                    }
-                }
-                for v in eigenvectors.iter_mut() {
-                    l2_normalize(v);
-                }
-
-                let sim_seconds = devices.iter().map(|d| d.clock_s).fold(0.0, f64::max);
-                let stats = SolveStats {
-                    wall_seconds: wall_start.elapsed().as_secs_f64(),
-                    sim_seconds,
-                    sim_per_device: devices.iter().map(|d| d.clock_s).collect(),
-                    phases,
-                    kernels_launched: devices.iter().map(|d| d.kernels_launched).sum(),
-                    h2d_bytes: devices.iter().map(|d| d.h2d_bytes).sum(),
-                    p2p_bytes: devices.iter().map(|d| d.p2p_bytes).sum(),
-                    iterations: keff,
-                    breakdowns: breakdowns[qid],
-                    out_of_core,
-                    peak_device_bytes: devices.iter().map(|d| d.mem.peak()).max().unwrap_or(0),
-                    backend,
-                    host_parallel,
-                    exec_policy: if host_parallel { "parallel" } else { "sequential" },
-                    prepare_seconds: 0.0,
-                    early_stopped: keff < queries[qid].k,
-                };
-                outcomes[qid] = Some(EigenSolution {
-                    eigenvalues: eig.values,
-                    eigenvectors,
-                    alpha: alphas_t[qid].clone(),
-                    beta: betas_t[qid].clone(),
-                    stats,
-                });
-            }
-            // Compact the dense blocks (descending positions keep earlier
-            // indices valid): retired lanes drop out; survivors shift down.
-            for &p in finished.iter().rev() {
-                let nb_now = active.len();
-                batch_replica.copy_within((p + 1) * n..nb_now * n, p * n);
-                for ws in bws.iter_mut() {
-                    ws.remove_lane(p, nb_now);
-                }
-                active.remove(p);
-            }
-        }
-
-        Ok(outcomes
-            .into_iter()
-            .map(|o| o.expect("every lane retires by its own k"))
-            .collect())
     }
 }
 

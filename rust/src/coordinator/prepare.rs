@@ -1,0 +1,226 @@
+//! Phase 0 of the solve lifecycle: matrix preparation.
+//!
+//! Split out of `coordinator` in 0.6 (move-only): [`PreparedState`] and
+//! [`TopKSolver::prepare`] live here; `coordinator::PreparedState` keeps
+//! working via the parent's re-export. Fields the sibling solve/batch
+//! modules consume are `pub(super)` — nothing outside the coordinator
+//! can see them.
+
+use super::*;
+
+/// Everything about one matrix that can be computed before the first
+/// query and reused across solves: validated config, nnz-balanced row
+/// partitions, per-device ELL/COO chunk plans (the device-resident,
+/// storage-quantized matrix replicas), device-memory accounting, the
+/// per-device workspaces, and the forked per-device kernel instances.
+///
+/// Produced by [`TopKSolver::prepare`]; consumed (mutably, for workspace
+/// reuse) by [`TopKSolver::solve_prepared`]. Self-contained: the source
+/// [`Csr`] is not needed after preparation — the plans own the quantized
+/// device layout.
+pub struct PreparedState {
+    /// Matrix-level configuration snapshot. `cfg.k` is the *capacity* the
+    /// workspaces and memory accounting were prepared for; queries may use
+    /// any `k ≤ cfg.k`.
+    pub(super) cfg: SolverConfig,
+    /// Matrix dimension (rows == cols, validated square).
+    pub(super) n: usize,
+    pub(super) parts: Vec<RowPartition>,
+    pub(super) plans: Vec<PartitionPlan>,
+    /// Per-device slice byte counts of `v_i` (ring-swap model).
+    pub(super) slice_bytes: Vec<usize>,
+    pub(super) out_of_core: bool,
+    /// Per-device bytes reserved at prepare time (vectors + resident slab).
+    pub(super) mem_used: Vec<usize>,
+    /// Per-device reusable workspaces (basis slab + work vectors).
+    pub(super) wss: Vec<SolveWorkspace>,
+    /// Per-device kernel instances, forked once here; empty when the fleet
+    /// is a single device or the backend cannot fork (PJRT).
+    pub(super) forks: Vec<Box<dyn Kernels>>,
+    /// Per-device batched workspaces — lazily sized by the first
+    /// [`TopKSolver::solve_batch_prepared`], reused by later batches.
+    pub(super) bws: Vec<BatchWorkspace>,
+    /// Lane-major replica block for batched solves (`lanes × n`,
+    /// active-lane-compacted during a batch). Lazily sized with `bws`.
+    pub(super) batch_replica: Vec<f64>,
+    /// Wallclock seconds the preparation took.
+    pub prepare_seconds: f64,
+}
+
+impl PreparedState {
+    /// The configuration this matrix was prepared under.
+    pub fn config(&self) -> &SolverConfig {
+        &self.cfg
+    }
+
+    /// Matrix dimension.
+    pub fn rows(&self) -> usize {
+        self.n
+    }
+
+    /// Maximum per-query `k` (the prepared workspace capacity).
+    pub fn k_max(&self) -> usize {
+        self.cfg.k
+    }
+
+    /// True if any partition's plan streams chunks host→device.
+    pub fn out_of_core(&self) -> bool {
+        self.out_of_core
+    }
+
+    /// Simulated device memory actually charged for this prepared matrix
+    /// across the fleet — the canonical answer to "how much device memory
+    /// does keeping this matrix prepared cost?". Sums each device's
+    /// reservation made at prepare time (vector working set + resident
+    /// matrix slab); out-of-core chunks that stream per iteration are not
+    /// counted, matching what the simulated [`DeviceMemory`] charged.
+    /// Cache/eviction layers (the serve registry) budget on this value.
+    pub fn resident_bytes(&self) -> usize {
+        self.mem_used.iter().sum()
+    }
+
+    /// Total device-resident bytes reserved across the fleet.
+    /// Alias of [`PreparedState::resident_bytes`].
+    pub fn device_bytes(&self) -> usize {
+        self.resident_bytes()
+    }
+
+    /// Size (or grow) the batched workspaces for `lanes` concurrent
+    /// queries. Existing slabs with enough lane capacity are reused.
+    pub(super) fn ensure_batch(&mut self, lanes: usize) {
+        if self.batch_replica.len() < lanes * self.n {
+            self.batch_replica.resize(lanes * self.n, 0.0);
+        }
+        let k = self.cfg.k;
+        let fits = self.bws.len() == self.parts.len()
+            && self.bws.iter().all(|w| w.lanes_cap >= lanes && w.k_cap == k);
+        if !fits {
+            self.bws = self
+                .parts
+                .iter()
+                .map(|p| BatchWorkspace::new(p.rows(), k, lanes))
+                .collect();
+        }
+    }
+}
+
+impl TopKSolver {
+    /// Phase 0 of the lifecycle: validate the matrix against the
+    /// configuration, partition it across the fleet by device work, build
+    /// each partition's ELL/COO chunk plan in the storage dtype (the
+    /// device-resident quantized replica of the matrix), account device
+    /// memory, allocate the per-device workspaces, and fork one kernel
+    /// instance per device for the threaded path. Everything here is
+    /// per-*matrix* state: any number of [`TopKSolver::solve_prepared`]
+    /// calls may follow, each with different per-query knobs.
+    pub fn prepare(&mut self, m: &Csr) -> Result<PreparedState, SolverError> {
+        let cfg = self.cfg.clone();
+        if m.rows != m.cols {
+            return Err(SolverError::AsymmetricInput {
+                rows: m.rows,
+                cols: m.cols,
+                detail: format!("matrix must be square (got {}×{})", m.rows, m.cols),
+            });
+        }
+        if cfg.k < 1 {
+            return Err(SolverError::InvalidConfig {
+                field: "k",
+                message: "K must be ≥ 1".into(),
+            });
+        }
+        if cfg.k >= m.rows {
+            return Err(SolverError::InvalidConfig {
+                field: "k",
+                message: format!("K={} must be < n={}", cfg.k, m.rows),
+            });
+        }
+        if !(1..=8).contains(&cfg.devices) {
+            return Err(SolverError::InvalidConfig {
+                field: "devices",
+                message: format!(
+                    "devices must be in 1..=8 (modeled DGX-1 fleet), got {}",
+                    cfg.devices
+                ),
+            });
+        }
+        if cfg.devices > m.rows {
+            return Err(SolverError::InvalidConfig {
+                field: "devices",
+                message: format!("more devices ({}) than rows ({})", cfg.devices, m.rows),
+            });
+        }
+
+        let prep_start = Instant::now();
+        let n = m.rows;
+        let k = cfg.k;
+        let g = cfg.devices;
+        let storage = cfg.precision.storage;
+        let sb = storage.bytes();
+
+        // ---- Partition & plan ------------------------------------------------
+        // Balance *device work*, not raw nnz: each row costs ~min(deg, W)
+        // ELL slots on the device (heavier rows spill to the host tail).
+        let wcap = cfg.max_ell_width;
+        let parts: Vec<RowPartition> =
+            partition_by_weight(m, g, |deg| deg.min(wcap).max(1));
+        let mut mems: Vec<DeviceMemory> =
+            (0..g).map(|_| DeviceMemory::new(cfg.device_mem_bytes)).collect();
+        let mut plans: Vec<PartitionPlan> = Vec::with_capacity(g);
+        let mut out_of_core = false;
+        for (gi, (p, mem)) in parts.iter().zip(mems.iter_mut()).enumerate() {
+            let part = m.slice_rows(p.row_start, p.row_end);
+            // Vector working set: replica (n) + basis (K·n_g) + 3 work
+            // vectors, reserved at the prepared K (the per-query maximum).
+            let vec_bytes = n * sb + (k + 3) * p.rows() * sb;
+            mem.alloc(vec_bytes).map_err(|_| SolverError::MemoryBudget {
+                device: gi,
+                requested: vec_bytes,
+                capacity: mem.capacity(),
+            })?;
+            let plan = plan_partition(
+                &part,
+                storage,
+                cfg.ell_quantile,
+                cfg.max_ell_width,
+                mem,
+                cfg.max_chunk_rows,
+            );
+            out_of_core |= !plan.resident;
+            plans.push(plan);
+        }
+
+        // Per-device slice byte counts of v_i (for the ring swap model).
+        let slice_bytes: Vec<usize> = parts.iter().map(|p| p.rows() * sb).collect();
+        // Per-device workspaces: the only buffers of the hot loop, sized
+        // for the prepared K and reused across session solves.
+        let wss: Vec<SolveWorkspace> =
+            parts.iter().map(|p| SolveWorkspace::new(p.rows(), k)).collect();
+        // Fork one kernel instance per device now, so threaded session
+        // solves reuse the instances (and whatever owned state they carry)
+        // instead of re-forking per query. Empty when the backend cannot
+        // fork (PJRT) — those fleets run sequentially.
+        let forks: Vec<Box<dyn Kernels>> = if g > 1 {
+            (0..g)
+                .map(|_| self.kernels.fork())
+                .collect::<Option<Vec<_>>>()
+                .unwrap_or_default()
+        } else {
+            Vec::new()
+        };
+
+        Ok(PreparedState {
+            cfg,
+            n,
+            parts,
+            plans,
+            slice_bytes,
+            out_of_core,
+            mem_used: mems.iter().map(|m| m.used()).collect(),
+            wss,
+            forks,
+            bws: Vec::new(),
+            batch_replica: Vec::new(),
+            prepare_seconds: prep_start.elapsed().as_secs_f64(),
+        })
+    }
+}

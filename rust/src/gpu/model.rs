@@ -1,297 +1,7 @@
-//! Calibrated V100 kernel cost model.
-//!
-//! SpMV and the Lanczos vector ops are *memory-bound*: the model charges
-//! `bytes_touched / effective_bandwidth + launch_overhead` per kernel, the
-//! standard roofline treatment. Constants follow the V100 whitepaper and
-//! the measured-efficiency literature (≈70–80 % of peak HBM2 bandwidth is
-//! achievable for streaming kernels; gather-heavy SpMV lands lower).
-//!
-//! The model is used for the *simulated clock* of each device; the same
-//! byte counts drive the out-of-core streamer. Absolute numbers are
-//! estimates; Fig. 2/3a report ratios, which is where the model is
-//! credible (DESIGN.md §5).
+//! Re-export shim: the V100 kernel cost model moved to
+//! [`crate::sim::cost`] in 0.6 (the simulation core owns everything that
+//! advances simulated clocks). `crate::gpu::{CostModel, KernelCost}`
+//! keep working unchanged via this re-export — see the 0.6 MIGRATION
+//! table in the crate docs.
 
-use crate::precision::{Compute, PrecisionConfig};
-
-/// Per-kernel byte/flop accounting.
-#[derive(Clone, Copy, Debug, Default, PartialEq)]
-pub struct KernelCost {
-    pub bytes_read: usize,
-    pub bytes_written: usize,
-    pub flops: usize,
-}
-
-impl KernelCost {
-    pub fn total_bytes(&self) -> usize {
-        self.bytes_read + self.bytes_written
-    }
-}
-
-/// V100-like device constants.
-#[derive(Clone, Debug)]
-pub struct CostModel {
-    /// Peak HBM2 bandwidth, GB/s (V100: 900).
-    pub hbm_gbs: f64,
-    /// Achieved fraction for streaming kernels.
-    pub stream_efficiency: f64,
-    /// Achieved fraction for gather-heavy SpMV.
-    pub gather_efficiency: f64,
-    /// FP32 peak, TFLOP/s (V100: 15.7).
-    pub fp32_tflops: f64,
-    /// FP64 peak, TFLOP/s (V100: 7.8).
-    pub fp64_tflops: f64,
-    /// Kernel launch overhead, seconds (CUDA ≈ 5 µs).
-    pub launch_s: f64,
-    /// Host↔device bandwidth for out-of-core streaming, GB/s (PCIe3 x16).
-    pub h2d_gbs: f64,
-    /// Memory-sector granularity of random gathers, bytes. V100 L2 serves
-    /// 32 B sectors: a random 4 B gather still moves 32 B — the reason SpMV
-    /// dominates even at modest average degree.
-    pub gather_sector_bytes: usize,
-    /// Host CPU throughput for the serial Jacobi phase, GFLOP/s (one Xeon
-    /// core on a small dense K×K problem).
-    pub cpu_gflops: f64,
-}
-
-impl Default for CostModel {
-    fn default() -> Self {
-        CostModel {
-            hbm_gbs: 900.0,
-            stream_efficiency: 0.78,
-            gather_efficiency: 0.55,
-            fp32_tflops: 15.7,
-            fp64_tflops: 7.8,
-            launch_s: 5e-6,
-            h2d_gbs: 12.0,
-            gather_sector_bytes: 32,
-            cpu_gflops: 8.0,
-        }
-    }
-}
-
-impl CostModel {
-    /// Seconds for a streaming kernel (axpy/candidate/normalize/dot).
-    pub fn stream_seconds(&self, cost: KernelCost, compute: Compute) -> f64 {
-        let bw = self.hbm_gbs * 1e9 * self.stream_efficiency;
-        let flops = match compute {
-            Compute::F32 => self.fp32_tflops,
-            Compute::F64 => self.fp64_tflops,
-        } * 1e12;
-        self.launch_s
-            + (cost.total_bytes() as f64 / bw).max(cost.flops as f64 / flops)
-    }
-
-    /// Seconds for the gather-heavy SpMV kernel.
-    pub fn spmv_seconds(&self, cost: KernelCost, compute: Compute) -> f64 {
-        let bw = self.hbm_gbs * 1e9 * self.gather_efficiency;
-        let flops = match compute {
-            Compute::F32 => self.fp32_tflops,
-            Compute::F64 => self.fp64_tflops,
-        } * 1e12;
-        self.launch_s
-            + (cost.total_bytes() as f64 / bw).max(cost.flops as f64 / flops)
-    }
-
-    /// Seconds to stream `bytes` host→device (out-of-core page-in).
-    pub fn h2d_seconds(&self, bytes: usize) -> f64 {
-        if bytes == 0 {
-            return 0.0;
-        }
-        self.launch_s + bytes as f64 / (self.h2d_gbs * 1e9)
-    }
-
-    /// Deterministic model of the serial CPU Jacobi phase on the K×K
-    /// tridiagonal (paper Fig. 1 Ⓓ): ~8 cyclic sweeps of k(k−1)/2
-    /// rotations, each updating two rows and two columns (~8k flops), at
-    /// [`CostModel::cpu_gflops`]. This charge — not the measured host
-    /// wallclock — advances the *simulated* clock, so `sim_seconds` is
-    /// bit-reproducible across runs and hosts (the serving runtime's
-    /// replay determinism rides on it); the measured time still lands in
-    /// `stats.wall_seconds` as part of the overall solve wall.
-    pub fn jacobi_seconds(&self, k: usize) -> f64 {
-        if k == 0 {
-            return 0.0;
-        }
-        let kf = k as f64;
-        let flops = 8.0 * 0.5 * kf * (kf - 1.0) * 8.0 * kf;
-        1e-6 + flops / (self.cpu_gflops * 1e9)
-    }
-
-    /// Byte/flop accounting of one ELL SpMV over `rows×width`, gathering
-    /// from a replica of length `n`.
-    pub fn spmv_cost(&self, rows: usize, width: usize, n: usize, cfg: &PrecisionConfig) -> KernelCost {
-        let sb = cfg.storage.bytes();
-        let slots = rows * width;
-        // Each gather is sector-granular, but a slot cannot cost more than
-        // one sector nor less than its element; a fully-touched small
-        // replica caps total gather traffic at n elements of cache reuse.
-        let gather = slots * self.gather_sector_bytes.max(sb);
-        let gather = gather.min(slots * sb + n * self.gather_sector_bytes);
-        KernelCost {
-            // values + column indices + sector-granular gathered x.
-            bytes_read: slots * sb + slots * 4 + gather,
-            bytes_written: rows * sb,
-            flops: 2 * slots,
-        }
-    }
-
-    /// Accounting of the spill-tail SpMV (rows whose degree exceeded the
-    /// ELL width run as a COO tail — still device work on the real system).
-    pub fn spill_cost(&self, entries: usize, cfg: &PrecisionConfig) -> KernelCost {
-        let sb = cfg.storage.bytes();
-        KernelCost {
-            bytes_read: entries * (sb + 8 + self.gather_sector_bytes),
-            bytes_written: entries * sb,
-            flops: 2 * entries,
-        }
-    }
-
-    /// Byte/flop accounting of one *blocked* ELL SpMM over `rows×width`
-    /// against `lanes` stacked replicas of length `n` — the batched-query
-    /// kernel. The slab (values + column indices) streams **once** for the
-    /// whole block; only the gather traffic, the output writes and the
-    /// flops scale with the lane count. `lanes == 1` reduces exactly to
-    /// [`CostModel::spmv_cost`].
-    pub fn spmm_cost(
-        &self,
-        rows: usize,
-        width: usize,
-        n: usize,
-        lanes: usize,
-        cfg: &PrecisionConfig,
-    ) -> KernelCost {
-        let sb = cfg.storage.bytes();
-        let slots = rows * width;
-        let gather = slots * self.gather_sector_bytes.max(sb);
-        let gather = gather.min(slots * sb + n * self.gather_sector_bytes);
-        KernelCost {
-            bytes_read: slots * sb + slots * 4 + lanes * gather,
-            bytes_written: lanes * rows * sb,
-            flops: 2 * slots * lanes,
-        }
-    }
-
-    /// Blocked twin of [`CostModel::spill_cost`]: coordinates and values
-    /// stream once, gathers/writes/flops scale with the lane count.
-    /// `lanes == 1` reduces exactly to `spill_cost`.
-    pub fn spill_cost_block(
-        &self,
-        entries: usize,
-        lanes: usize,
-        cfg: &PrecisionConfig,
-    ) -> KernelCost {
-        let sb = cfg.storage.bytes();
-        KernelCost {
-            bytes_read: entries * (sb + 8) + lanes * entries * self.gather_sector_bytes,
-            bytes_written: lanes * entries * sb,
-            flops: 2 * entries * lanes,
-        }
-    }
-
-    /// Accounting of a fused candidate update
-    /// (`v_nxt = v_tmp − αv − βv_prev` + partial sumsq) on `len` elements.
-    pub fn candidate_cost(&self, len: usize, cfg: &PrecisionConfig) -> KernelCost {
-        let sb = cfg.storage.bytes();
-        KernelCost {
-            bytes_read: 3 * len * sb,
-            bytes_written: len * sb,
-            flops: 6 * len,
-        }
-    }
-
-    /// Accounting of a dot/normalize-class op on `len` elements with `reads`
-    /// input vectors and `writes` output vectors.
-    pub fn vector_cost(&self, len: usize, reads: usize, writes: usize, cfg: &PrecisionConfig) -> KernelCost {
-        let sb = cfg.storage.bytes();
-        KernelCost {
-            bytes_read: reads * len * sb,
-            bytes_written: writes * len * sb,
-            flops: 2 * len * reads.max(1),
-        }
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::precision::PrecisionConfig;
-
-    #[test]
-    fn bigger_transfers_take_longer() {
-        let m = CostModel::default();
-        let small = m.spmv_cost(1 << 10, 8, 1 << 12, &PrecisionConfig::FDF);
-        let large = m.spmv_cost(1 << 16, 8, 1 << 18, &PrecisionConfig::FDF);
-        assert!(
-            m.spmv_seconds(large, Compute::F64) > m.spmv_seconds(small, Compute::F64)
-        );
-    }
-
-    #[test]
-    fn launch_overhead_floors_tiny_kernels() {
-        let m = CostModel::default();
-        let tiny = m.vector_cost(16, 1, 1, &PrecisionConfig::FFF);
-        let t = m.stream_seconds(tiny, Compute::F32);
-        assert!(t >= m.launch_s);
-        assert!(t < m.launch_s * 2.0);
-    }
-
-    #[test]
-    fn f64_storage_doubles_spmv_bytes() {
-        let m = CostModel::default();
-        let f = m.spmv_cost(1 << 14, 16, 1 << 16, &PrecisionConfig::FDF);
-        let d = m.spmv_cost(1 << 14, 16, 1 << 16, &PrecisionConfig::DDD);
-        // Value + gather bytes double; index bytes don't.
-        assert!(d.bytes_read > f.bytes_read);
-        assert!(d.bytes_read < 2 * f.bytes_read);
-    }
-
-    #[test]
-    fn fdf_is_faster_than_ddd_in_model() {
-        // The paper's 50% claim comes from storage bandwidth: FDF moves f32
-        // bytes while DDD moves f64 bytes. The model must reproduce the
-        // ordering.
-        let m = CostModel::default();
-        let rows = 1 << 16;
-        let fdf = m.spmv_seconds(
-            m.spmv_cost(rows, 16, rows, &PrecisionConfig::FDF),
-            Compute::F64,
-        );
-        let ddd = m.spmv_seconds(
-            m.spmv_cost(rows, 16, rows, &PrecisionConfig::DDD),
-            Compute::F64,
-        );
-        assert!(ddd > fdf * 1.2, "ddd {ddd} fdf {fdf}");
-    }
-
-    #[test]
-    fn spmm_amortizes_slab_traffic_across_lanes() {
-        let m = CostModel::default();
-        let (rows, w, n) = (1 << 14, 16, 1 << 14);
-        let cfg = PrecisionConfig::FDF;
-        // lanes == 1 reduces exactly to the single-vector kernels.
-        assert_eq!(m.spmm_cost(rows, w, n, 1, &cfg), m.spmv_cost(rows, w, n, &cfg));
-        assert_eq!(m.spill_cost_block(1000, 1, &cfg), m.spill_cost(1000, &cfg));
-        // A B-lane block costs strictly less than B single-vector passes:
-        // the slab bytes are paid once.
-        let b = 8usize;
-        let block = m.spmm_cost(rows, w, n, b, &cfg);
-        let solo = m.spmv_cost(rows, w, n, &cfg);
-        assert!(block.total_bytes() < b * solo.total_bytes());
-        assert_eq!(block.flops, b * solo.flops);
-        // Per-lane bytes shrink monotonically with the batch size.
-        let b4 = m.spmm_cost(rows, w, n, 4, &cfg);
-        assert!(block.total_bytes() as f64 / 8.0 < b4.total_bytes() as f64 / 4.0);
-    }
-
-    #[test]
-    fn h2d_slower_than_hbm() {
-        let m = CostModel::default();
-        let bytes = 1 << 26;
-        let h2d = m.h2d_seconds(bytes);
-        let hbm = m.stream_seconds(
-            KernelCost { bytes_read: bytes, bytes_written: 0, flops: 0 },
-            Compute::F32,
-        );
-        assert!(h2d > hbm * 10.0);
-    }
-}
+pub use crate::sim::cost::{CostModel, KernelCost};

@@ -129,7 +129,23 @@
 //! * [`serve::EigenServer`] replays the stream on a **simulated clock**
 //!   and reports throughput plus p50/p95/p99 queue/prepare/solve latency
 //!   ([`serve::ServeReport`]) — byte-identical across replays of one
-//!   workload seed.
+//!   workload seed, at any fleet count.
+//!
+//! 0.6 rebuilds the server as a discrete-event simulation over the
+//! [`sim`] core's merged `(time, seq)` timeline and scales it across
+//! **fleets**: N independent device groups, each with its own registry
+//! and prepared-state cache, advancing on one shared simulated clock
+//! ([`sim::EventHeap`]). A [`sim::Placement`] policy routes matrices —
+//! `pin` keeps each matrix on one home fleet, `replicate` lets hot
+//! matrices go resident on several fleets so their batches run
+//! concurrently, `least-loaded` starts pinned and graduates hot matrices
+//! to replication. One fleet's re-prepare (H2D streaming) overlaps
+//! another fleet's solve, exactly as on a real multi-group deployment,
+//! while every served query stays bit-identical to a standalone
+//! [`SolveSession`] solve. Construct with
+//! [`serve::EigenServer::with_fleets`]; `--fleets N --placement P` on
+//! the CLI. Skewed (hot/cold) traffic comes from
+//! [`serve::WorkloadSpec::zipf`].
 //!
 //! ```no_run
 //! use topk_eigen::serve::{
@@ -237,6 +253,19 @@
 //! | `prepared.device_bytes()`                     | [`PreparedMatrix::resident_bytes`] (canonical accessor) |
 //! | `solve --queries N --batch B`                 | `topk-eigen serve` (mixture, rates, priorities, report) |
 //!
+//! 0.6 extracts the simulation core into [`sim`] and makes the server
+//! event-driven and multi-fleet; the moved clock/cost APIs keep their old
+//! paths as re-exports, but new code should import from `sim`:
+//!
+//! | pre-0.6                                       | 0.6+                                                    |
+//! |-----------------------------------------------|---------------------------------------------------------|
+//! | `gpu::model::{CostModel, KernelCost}`         | [`sim::cost`]`::{CostModel, KernelCost}` (old path re-exports) |
+//! | `gpu::{CostModel, KernelCost}`                | unchanged — now re-exported through [`sim::cost`]       |
+//! | hand-rolled `phase_mark` clock cursors        | [`sim::PhaseCursor`] + [`sim::fleet_time`]              |
+//! | serial `EigenServer::run` while-loop          | event-driven over [`sim::EventHeap`] (same reports at `fleets=1`) |
+//! | one server = one device group                 | [`serve::EigenServer::with_fleets`] + [`sim::Placement`] |
+//! | uniform matrix mixtures only                  | [`serve::WorkloadSpec::zipf`] (seeded hot/cold skew)    |
+//!
 //! The low-level types (`SolverConfig`, `TopKSolver`, `BaselineConfig`)
 //! remain public under [`coordinator`] / [`baseline`] for harnesses that
 //! need them; only the *root* re-exports are deprecated.
@@ -258,6 +287,7 @@ pub mod prop;
 pub mod rng;
 pub mod runtime;
 pub mod serve;
+pub mod sim;
 pub mod sparse;
 
 // ---- The 0.2 public surface -------------------------------------------------

@@ -30,6 +30,7 @@ use topk_eigen::runtime::Manifest;
 use topk_eigen::serve::{
     CoalescerConfig, EigenServer, MatrixMix, MatrixRegistry, RegistryConfig, WorkloadSpec,
 };
+use topk_eigen::sim::Placement;
 use topk_eigen::sparse::{mmio, suite, Csr};
 use topk_eigen::{
     Backend, Eigensolve, PrecisionConfig, QueryParams, SolveReport, Solver, SolverError,
@@ -127,7 +128,16 @@ fn print_usage() {
          \x20                     seconds (default 0.05)\n\
          \x20 --bulk-wait-factor <f>  bulk deadline multiplier (default 4)\n\
          \x20 --registry-budget-mb <m>  prepared-state LRU budget\n\
-         \x20                     (default 256)\n\
+         \x20                     (default 256, per fleet)\n\
+         \x20 --fleets <n>        concurrent solver fleets draining one\n\
+         \x20                     queue, each with its own replica registry\n\
+         \x20                     (default 1; 0 is a usage error)\n\
+         \x20 --placement <p>     pin | replicate | least-loaded — how\n\
+         \x20                     matrices map onto fleets (default\n\
+         \x20                     replicate; only meaningful with --fleets)\n\
+         \x20 --zipf-skew <s>     re-weight --matrices by listing order:\n\
+         \x20                     matrix i gets weight (i+1)^-s (overrides\n\
+         \x20                     any ID:WEIGHT weights; 0 = uniform)\n\
          \x20 --json              print the machine-readable report to stdout\n\
          \x20 --report <f.json>   also write the report to a file\n\
          \n\
@@ -487,6 +497,9 @@ const SERVE_FLAGS: &[&str] = &[
     "max-wait",
     "bulk-wait-factor",
     "registry-budget-mb",
+    "fleets",
+    "placement",
+    "zipf-skew",
     "json",
     "report",
     "k",
@@ -543,6 +556,17 @@ fn cmd_serve(args: &cli::Args) -> Result<i32, CliError> {
         return Err(CliError::Usage(
             "--matrices needs at least one suite id (e.g. --matrices WB-GO:3,FL)".into(),
         ));
+    }
+    if let Some(skew) = args.try_get::<f64>("zipf-skew")? {
+        if !skew.is_finite() || skew < 0.0 {
+            return Err(CliError::Usage(format!(
+                "--zipf-skew must be a finite number ≥ 0 (got {skew})"
+            )));
+        }
+        // Zipf re-weight in listing order: the first matrix is the head.
+        for (i, (_, w)) in entries.iter_mut().enumerate() {
+            *w = (i as f64 + 1.0).powf(-skew);
+        }
     }
 
     // ---- Solver knobs (shared with `solve`) -------------------------------
@@ -608,6 +632,11 @@ fn cmd_serve(args: &cli::Args) -> Result<i32, CliError> {
         )));
     }
     let budget_mb: usize = args.try_get_or("registry-budget-mb", 256usize)?;
+    let fleets: usize = args.try_get_or("fleets", 1usize)?;
+    if fleets == 0 {
+        return Err(CliError::Usage("--fleets must be ≥ 1".into()));
+    }
+    let placement: Placement = args.try_get_or("placement", Placement::Replicate)?;
     let k_choices: Vec<usize> = match args.get("k-choices") {
         None => vec![k],
         Some(raw) => {
@@ -632,25 +661,19 @@ fn cmd_serve(args: &cli::Args) -> Result<i32, CliError> {
     let json_only = args.has("json");
 
     // ---- Build the stack --------------------------------------------------
-    let solver = Solver::builder()
-        .k(k)
-        .precision(precision)
-        .devices(devices)
-        .reorth(reorth)
-        .device_mem_mb(mem_mb)
-        .topology(topology)
-        .exec(exec)
-        .backend(backend.clone())
-        .build()?;
-
     let matrices: Vec<(String, Csr)> = entries
         .iter()
         .map(|(e, _)| (e.id.to_string(), e.generate_csr(scale, gen_seed)))
         .collect();
     if !json_only {
+        let fleet_note = if fleets > 1 {
+            format!(", {fleets} fleets/{} placement", placement.name())
+        } else {
+            String::new()
+        };
         println!(
             "serving {} matrices (backend={}, K≤{k}, {devices} device(s), \
-             registry budget {budget_mb} MiB):",
+             registry budget {budget_mb} MiB{fleet_note}):",
             matrices.len(),
             backend.name()
         );
@@ -659,17 +682,34 @@ fn cmd_serve(args: &cli::Args) -> Result<i32, CliError> {
         }
     }
 
-    let mut registry = MatrixRegistry::new(
-        solver,
-        RegistryConfig { budget_bytes: budget_mb << 20, ..RegistryConfig::default() },
-    );
-    for (name, m) in &matrices {
-        registry.register(name, m);
+    // Each fleet gets its own solver and replica registry over the same
+    // matrix set (same names in the same order — the constructor checks).
+    let mut registries = Vec::with_capacity(fleets);
+    for _ in 0..fleets {
+        let solver = Solver::builder()
+            .k(k)
+            .precision(precision)
+            .devices(devices)
+            .reorth(reorth)
+            .device_mem_mb(mem_mb)
+            .topology(topology)
+            .exec(exec)
+            .backend(backend.clone())
+            .build()?;
+        let mut registry = MatrixRegistry::new(
+            solver,
+            RegistryConfig { budget_bytes: budget_mb << 20, ..RegistryConfig::default() },
+        );
+        for (name, m) in &matrices {
+            registry.register(name, m);
+        }
+        registries.push(registry);
     }
-    let mut server = EigenServer::new(
-        registry,
+    let mut server = EigenServer::with_fleets(
+        registries,
         CoalescerConfig { max_batch, max_wait_s: max_wait, bulk_wait_factor },
-    );
+        placement,
+    )?;
 
     let spec = WorkloadSpec {
         seed: workload_seed,

@@ -20,23 +20,41 @@
 //! * [`workload::WorkloadSpec`] — a seeded open-loop arrival generator
 //!   (exponential inter-arrival gaps ≈ Poisson traffic) over a weighted
 //!   mixture of matrices with per-query `k`/seed/tolerance;
-//! * [`server::EigenServer`] — the run loop on a **simulated clock**:
-//!   admit arrivals, coalesce, solve batches through the registry,
-//!   record per-query queue/prepare/solve latency, and report throughput
-//!   plus p50/p95/p99 ([`server::ServeReport`]).
+//! * [`server::EigenServer`] — the event-driven run loop over the
+//!   [`crate::sim`] core's merged `(time, seq)` timeline: admit arrivals,
+//!   coalesce, route each batch to an idle fleet under a
+//!   [`crate::sim::Placement`] policy, solve through that fleet's
+//!   registry, record per-query queue/prepare/solve latency, and report
+//!   throughput plus p50/p95/p99 and per-fleet utilization
+//!   ([`server::ServeReport`]).
+//!
+//! ## Fleets
+//!
+//! 0.6 scales the server to N concurrent device fleets
+//! ([`server::EigenServer::with_fleets`]): each fleet owns its registry
+//! (its own prepared-state cache), batches on different fleets overlap
+//! on the shared simulated timeline — one fleet re-preparing while
+//! another solves — and the placement policy decides replication: `pin`
+//! (one home fleet per matrix), `replicate` (any idle fleet; hot
+//! matrices go resident on several), or `least-loaded` (pinned until
+//! hot, then replicated). `fleets = 1` reproduces the pre-0.6 serial
+//! server's reports byte-for-byte.
 //!
 //! ## Determinism
 //!
-//! Every run is **bit-identical for a fixed workload seed**: arrivals,
-//! coalescing decisions, eviction order, per-lane eigenpairs and every
+//! Every run is **bit-identical for a fixed workload seed at any fleet
+//! count**: arrivals, coalescing decisions (equal flush deadlines order
+//! by arrival sequence — see [`scheduler::BatchCoalescer::ready_batch`]),
+//! fleet dispatch, eviction order, per-lane eigenpairs and every
 //! latency in the report derive from seeded RNG state and the solver's
 //! *simulated* clocks (`stats.sim_seconds`, plus a cost-model charge for
 //! re-preparation) — never from host wallclock. That carries PR 4's
 //! batch-vs-solo equivalence proofs over to served traffic: each query
 //! answered by the server is bit-identical to the same `QueryParams` run
 //! through a standalone [`crate::SolveSession`] (asserted by
-//! `rust/tests/serve.rs`), including queries whose matrix was evicted and
-//! re-prepared in between.
+//! `rust/tests/serve.rs` and `rust/tests/multi_fleet.rs`), including
+//! queries whose matrix was evicted and re-prepared in between and
+//! queries served from a replica on a different fleet.
 //!
 //! The CLI front-end is `topk-eigen serve` (see the README's
 //! "Serving traffic" section for the workload mini-format).
@@ -48,5 +66,5 @@ pub mod workload;
 
 pub use registry::{MatrixRegistry, PrepareEvent, RegistryConfig, RegistryStats};
 pub use scheduler::{Batch, BatchCoalescer, CoalescerConfig, Priority, QueryArrival};
-pub use server::{EigenServer, QueryRecord, ServeReport};
+pub use server::{EigenServer, FleetServeLine, QueryRecord, ServeReport};
 pub use workload::{MatrixMix, WorkloadSpec};

@@ -140,9 +140,17 @@ impl BatchCoalescer {
     /// an earlier deadline than a bulk query ahead of it, and must still
     /// be able to force the queue to run (no-starvation invariant).
     fn queue_deadline(&self, q: &VecDeque<QueryArrival>) -> Option<f64> {
+        self.queue_key(q).map(|(d, _)| d)
+    }
+
+    /// The queue's selection key: its minimum flush deadline plus the
+    /// arrival id attaining it (the lowest id among equal deadlines).
+    /// Equal-deadline ties across queues resolve on this id — see
+    /// [`BatchCoalescer::ready_batch`] for the documented total order.
+    fn queue_key(&self, q: &VecDeque<QueryArrival>) -> Option<(f64, u64)> {
         q.iter()
-            .map(|e| e.flush_deadline(&self.cfg))
-            .min_by(|a, b| a.partial_cmp(b).unwrap())
+            .map(|e| (e.flush_deadline(&self.cfg), e.id))
+            .min_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)))
     }
 
     /// Earliest flush deadline across every queued query — the next
@@ -159,34 +167,67 @@ impl BatchCoalescer {
     /// Pop the next runnable batch at simulated time `now`, if any. A
     /// matrix queue is *eligible* when it holds `max_batch` queries (run
     /// full blocks immediately) or when any queued entry's flush deadline
-    /// has passed. Among eligible queues the earliest deadline wins (ties
-    /// break on the lower matrix index), so the most-urgent query is
-    /// always served first — the no-starvation rule.
+    /// has passed. Among eligible queues the earliest deadline wins; equal
+    /// deadlines are a **documented total order**: the queue whose
+    /// deadline-setting query has the lower arrival `id` (workload
+    /// sequence number) runs first, then the lower matrix index. Arrival
+    /// ids are unique per workload, so selection never depends on float
+    /// coincidences or container order — the property the replay
+    /// determinism tests pin down.
     pub fn ready_batch(&mut self, now: f64) -> Option<Batch> {
+        self.ready_batch_where(now, |_| true)
+    }
+
+    /// [`BatchCoalescer::ready_batch`] restricted to matrices the server
+    /// can currently dispatch (`pred(matrix_index)` — e.g. "some fleet is
+    /// idle for this matrix under the placement policy"). Queues failing
+    /// the predicate are skipped, not popped, and keep their deadlines.
+    pub fn ready_batch_where(
+        &mut self,
+        now: f64,
+        pred: impl Fn(usize) -> bool,
+    ) -> Option<Batch> {
         let best = self
             .queues
             .iter()
             .enumerate()
+            .filter(|(mi, _)| pred(*mi))
             .filter_map(|(mi, q)| {
-                let deadline = self.queue_deadline(q)?;
+                let (deadline, id) = self.queue_key(q)?;
                 let eligible = q.len() >= self.cfg.max_batch || deadline <= now;
-                eligible.then_some((deadline, mi))
+                eligible.then_some((deadline, id, mi))
             })
-            .min_by(|a, b| a.partial_cmp(b).unwrap())?;
-        Some(self.pop_from(best.1))
+            .min_by(|a, b| {
+                a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)).then(a.2.cmp(&b.2))
+            })?;
+        Some(self.pop_from(best.2))
     }
 
     /// Pop the earliest-deadline batch regardless of `now` — the drain
     /// path for the end of a workload, when no further arrivals can fill
     /// the block and waiting out the deadline would only add idle time.
+    /// Ties order exactly as in [`BatchCoalescer::ready_batch`].
     pub fn flush_any(&mut self) -> Option<Batch> {
+        self.flush_any_where(|_| true)
+    }
+
+    /// [`BatchCoalescer::flush_any`] restricted to matrices passing
+    /// `pred` — the multi-fleet drain path, where only queues routable to
+    /// an idle fleet may pop.
+    pub fn flush_any_where(&mut self, pred: impl Fn(usize) -> bool) -> Option<Batch> {
         let best = self
             .queues
             .iter()
             .enumerate()
-            .filter_map(|(mi, q)| Some((self.queue_deadline(q)?, mi)))
-            .min_by(|a, b| a.partial_cmp(b).unwrap())?;
-        Some(self.pop_from(best.1))
+            .filter(|(mi, _)| pred(*mi))
+            .filter_map(|(mi, q)| {
+                let (deadline, id) = self.queue_key(q)?;
+                Some((deadline, id, mi))
+            })
+            .min_by(|a, b| {
+                a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)).then(a.2.cmp(&b.2))
+            })?;
+        Some(self.pop_from(best.2))
     }
 
     fn pop_from(&mut self, mi: usize) -> Batch {
@@ -288,6 +329,80 @@ mod tests {
         // FIFO pop: the bulk head rides along, early.
         assert_eq!(b.queries.len(), 2);
         assert_eq!(b.queries[0].id, 0);
+    }
+
+    #[test]
+    fn equal_deadlines_pop_in_arrival_seq_order_across_priorities() {
+        // Binary-exact deadline collision across priority classes: a Bulk
+        // query at t=0 (deadline 0.125 × 4 = 0.5) and an Interactive query
+        // at t=0.375 (deadline 0.375 + 0.125 = 0.5) on different matrices.
+        // The documented order for equal deadlines is arrival `seq` (the
+        // id): the Bulk query arrived first, so its matrix runs first even
+        // though Interactive outranks Bulk on wait budget.
+        let cfg =
+            CoalescerConfig { max_batch: 8, max_wait_s: 0.125, bulk_wait_factor: 4.0 };
+        let mut c = BatchCoalescer::new(cfg, 2);
+        c.push(q(0, 1, 0.0, Priority::Bulk)); // deadline 0.5
+        c.push(q(1, 0, 0.375, Priority::Interactive)); // deadline 0.5, too
+        assert_eq!(c.next_deadline(), Some(0.5));
+        let first = c.ready_batch(0.5).expect("both queues expired");
+        assert_eq!(first.matrix, 1, "lower arrival id (0, Bulk) wins the tie");
+        assert_eq!(first.queries[0].id, 0);
+        let second = c.ready_batch(0.5).expect("remaining queue still expired");
+        assert_eq!(second.matrix, 0);
+        assert_eq!(second.queries[0].id, 1);
+    }
+
+    #[test]
+    fn equal_deadline_tie_keys_on_arrival_id_not_matrix_index() {
+        // Same-priority collision with id-order opposing matrix-index
+        // order: id 0 targets matrix 1, id 1 targets matrix 0, both with
+        // deadline 0.25. The arrival id is the primary tie key, so matrix
+        // 1 (carrying id 0) must pop first — a matrix-index tie-break
+        // would pick matrix 0 and fail this test.
+        let cfg =
+            CoalescerConfig { max_batch: 8, max_wait_s: 0.25, bulk_wait_factor: 4.0 };
+        let mut c = BatchCoalescer::new(cfg, 2);
+        c.push(q(0, 1, 0.0, Priority::Interactive));
+        c.push(q(1, 0, 0.0, Priority::Interactive));
+        let first = c.ready_batch(0.25).expect("both expired");
+        assert_eq!(first.matrix, 1, "arrival id outranks matrix index");
+        let second = c.ready_batch(0.25).expect("second queue");
+        assert_eq!(second.matrix, 0);
+    }
+
+    #[test]
+    fn flush_any_breaks_equal_deadlines_on_arrival_id() {
+        let cfg =
+            CoalescerConfig { max_batch: 8, max_wait_s: 0.125, bulk_wait_factor: 4.0 };
+        let mut c = BatchCoalescer::new(cfg, 2);
+        c.push(q(0, 1, 0.0, Priority::Bulk)); // deadline 0.5
+        c.push(q(1, 0, 0.375, Priority::Interactive)); // deadline 0.5
+        let first = c.flush_any().expect("drain pops id-0's matrix first");
+        assert_eq!(first.matrix, 1);
+        let second = c.flush_any().expect("then id-1's matrix");
+        assert_eq!(second.matrix, 0);
+        assert!(c.flush_any().is_none());
+    }
+
+    #[test]
+    fn predicate_variants_skip_ineligible_matrices_without_popping() {
+        let cfg = CoalescerConfig { max_batch: 8, max_wait_s: 0.1, bulk_wait_factor: 1.0 };
+        let mut c = BatchCoalescer::new(cfg, 2);
+        c.push(q(0, 0, 0.0, Priority::Interactive)); // deadline 0.1 — most urgent
+        c.push(q(1, 1, 0.05, Priority::Interactive)); // deadline 0.15
+        // Matrix 0's fleet is "busy": the predicate filters it out and the
+        // later-deadline matrix 1 runs instead; matrix 0 keeps its queue.
+        let b = c.ready_batch_where(1.0, |mi| mi != 0).expect("matrix 1 eligible");
+        assert_eq!(b.matrix, 1);
+        assert_eq!(c.pending(), 1);
+        // Unrestricted call still serves the held-back queue.
+        let b = c.ready_batch(1.0).expect("matrix 0 still queued");
+        assert_eq!(b.matrix, 0);
+        // flush_any_where honors the same filter on the drain path.
+        c.push(q(2, 0, 2.0, Priority::Interactive));
+        assert!(c.flush_any_where(|mi| mi != 0).is_none());
+        assert_eq!(c.flush_any_where(|_| true).map(|b| b.matrix), Some(0));
     }
 
     #[test]

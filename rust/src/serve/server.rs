@@ -1,23 +1,42 @@
-//! The serve run loop: a simulated-clock event loop that admits a seeded
-//! arrival stream, coalesces it into per-matrix batches, answers them
-//! through the registry's prepared-state cache, and reports per-query
-//! latency and fleet throughput.
+//! The serve run loop: a discrete-event simulation that admits a seeded
+//! arrival stream, coalesces it into per-matrix batches, routes each
+//! batch to one of N concurrent device fleets, answers it through that
+//! fleet's prepared-state cache, and reports per-query latency and fleet
+//! throughput.
 //!
-//! Time model: one fleet serves one batch at a time (the solver owns one
-//! set of simulated devices). The clock is **simulated seconds**
-//! throughout — batch service time is the batch's max per-lane
-//! `stats.sim_seconds`, re-preparation is the registry's deterministic
-//! cost-model charge — so an entire run, including every latency
-//! percentile in the [`ServeReport`], is bit-identical across replays of
-//! the same workload. While a batch runs, newly arrived queries queue in
-//! the coalescer; their wait shows up as queue latency (open-loop
-//! backpressure, not admission refusal).
+//! Time model: the run is one merged timeline of typed events
+//! ([`ServeEvent`]) popped from a [`sim::EventHeap`](crate::sim::EventHeap)
+//! in `(time, seq)` order — **never** wallclock. Every event at one
+//! simulated timestamp is applied before the dispatch loop runs, so the
+//! decision state at time *t* never depends on pop interleaving. Batch
+//! service time is the batch's max per-lane `stats.sim_seconds`,
+//! re-preparation is the registry's deterministic cost-model charge, and
+//! each fleet's occupancy lives in a [`FleetPool`] — so an entire run,
+//! including every latency percentile in the [`ServeReport`], is
+//! bit-identical across replays of the same workload at any fleet count.
+//!
+//! Fleets: a fleet is one independent device group with its own
+//! [`MatrixRegistry`] (prepared-state cache). With `fleets > 1`, one
+//! fleet's re-preparation (H2D streaming) overlaps another fleet's solve
+//! on the shared timeline, and the [`Placement`] policy decides whether
+//! a hot matrix replicates across fleets (`replicate`), stays pinned to
+//! a home fleet (`pin`), or graduates from pinned to replicated once it
+//! has served enough traffic (`least-loaded`). While every fleet is
+//! busy, newly arrived queries queue in the coalescer; their wait shows
+//! up as queue latency (open-loop backpressure, not admission refusal).
+
+use std::cmp::Ordering;
 
 use super::registry::MatrixRegistry;
 use super::scheduler::{BatchCoalescer, CoalescerConfig, Priority, QueryArrival};
 use crate::bench_util::{JsonObj, Table};
 use crate::metrics::LatencySummary;
+use crate::sim::{EventHeap, FleetPool, Placement, ServeEvent};
 use crate::{QueryParams, SolverError};
+
+/// Queries a matrix must have served before [`Placement::LeastLoaded`]
+/// counts it as *hot* and lets it replicate onto other fleets.
+const HOT_QUERIES: usize = 8;
 
 /// Per-query ledger entry of a serve run. All times are simulated
 /// seconds; `eigenvalues` carries the lane's full answer so replay
@@ -49,6 +68,8 @@ pub struct QueryRecord {
     pub batch_size: usize,
     /// True when the batch had to (re-)prepare the matrix.
     pub cold: bool,
+    /// The fleet the batch ran on (always 0 on a single-fleet server).
+    pub fleet: usize,
     /// The lane's eigenvalues (bit-identical to a standalone solve).
     pub eigenvalues: Vec<f64>,
 }
@@ -68,6 +89,22 @@ pub struct MatrixServeLine {
     pub batches: usize,
     pub prepares: usize,
     pub p99_latency_s: f64,
+}
+
+/// Per-fleet rollup row of the report (multi-fleet runs).
+#[derive(Clone, Debug)]
+pub struct FleetServeLine {
+    /// Fleet id.
+    pub fleet: usize,
+    /// Batches this fleet executed.
+    pub batches: usize,
+    /// Simulated seconds this fleet spent solving.
+    pub solve_s: f64,
+    /// Simulated seconds this fleet spent (re-)preparing matrices.
+    pub prepare_s: f64,
+    /// Fraction of the run this fleet was occupied:
+    /// `(solve + prepare) / sim_end`.
+    pub utilization: f64,
 }
 
 /// Outcome of one serve run: throughput, latency percentiles, batching
@@ -90,20 +127,30 @@ pub struct ServeReport {
     pub latency: LatencySummary,
     /// Admission-queue wait summary.
     pub queue: LatencySummary,
-    /// Total simulated seconds the fleet spent solving.
+    /// Total simulated seconds the fleets spent solving.
     pub solve_s_total: f64,
     /// Total simulated seconds spent (re-)preparing matrices.
     pub prepare_s_total: f64,
-    /// Fleet busy fraction: (solve + prepare) / sim_end.
+    /// Fleet busy fraction: (solve + prepare) / (fleets × sim_end).
     pub busy_frac: f64,
-    /// Registry preparations over the run.
+    /// Registry preparations over the run (summed across fleets).
     pub prepares: usize,
-    /// Registry evictions over the run.
+    /// Registry evictions over the run (summed across fleets).
     pub evictions: usize,
-    /// Registry prepared-state hits over the run.
+    /// Registry prepared-state hits over the run (summed across fleets).
     pub hits: usize,
-    /// Prepared-state residency at the end of the run.
+    /// Prepared-state residency at the end of the run (all fleets).
     pub resident_bytes_end: usize,
+    /// Fleets the server ran with.
+    pub fleets: usize,
+    /// Placement policy name (`pin` / `replicate` / `least-loaded`).
+    pub placement: &'static str,
+    /// Per-fleet rollups, fleet-id order.
+    pub per_fleet: Vec<FleetServeLine>,
+    /// Per-matrix replica counts: on how many fleets each matrix was
+    /// prepared at least once over the run (registry order, parallel to
+    /// `per_matrix`).
+    pub replicas: Vec<usize>,
     /// Per-matrix rollups, registry order.
     pub per_matrix: Vec<MatrixServeLine>,
     /// Order-sensitive fold of every served eigenvalue's bits — two runs
@@ -126,6 +173,10 @@ fn summary_json(s: &LatencySummary) -> String {
 impl ServeReport {
     /// Machine-readable report (stable field order, full-precision
     /// numbers): byte-identical across replays of one seeded workload.
+    /// The multi-fleet fields (`fleets`, `placement`, `per_fleet`,
+    /// `replicas`) are emitted only when the server ran more than one
+    /// fleet, so single-fleet reports are byte-compatible with pre-0.6
+    /// consumers.
     pub fn to_json(&self) -> String {
         let per_matrix: Vec<String> = self
             .per_matrix
@@ -140,7 +191,7 @@ impl ServeReport {
                     .finish()
             })
             .collect();
-        JsonObj::new()
+        let mut j = JsonObj::new()
             .str("report", "serve")
             .int("schema", 1)
             .int("queries", self.queries)
@@ -156,8 +207,30 @@ impl ServeReport {
             .int("prepares", self.prepares)
             .int("evictions", self.evictions)
             .int("hits", self.hits)
-            .int("resident_bytes_end", self.resident_bytes_end)
-            .raw("per_matrix", format!("[{}]", per_matrix.join(", ")))
+            .int("resident_bytes_end", self.resident_bytes_end);
+        if self.fleets > 1 {
+            let per_fleet: Vec<String> = self
+                .per_fleet
+                .iter()
+                .map(|f| {
+                    JsonObj::new()
+                        .int("fleet", f.fleet)
+                        .int("batches", f.batches)
+                        .num("solve_s", f.solve_s)
+                        .num("prepare_s", f.prepare_s)
+                        .num("utilization", f.utilization)
+                        .finish()
+                })
+                .collect();
+            let replicas: Vec<String> =
+                self.replicas.iter().map(|r| r.to_string()).collect();
+            j = j
+                .int("fleets", self.fleets)
+                .str("placement", self.placement)
+                .raw("per_fleet", format!("[{}]", per_fleet.join(", ")))
+                .raw("replicas", format!("[{}]", replicas.join(", ")));
+        }
+        j.raw("per_matrix", format!("[{}]", per_matrix.join(", ")))
             .str("result_checksum", &format!("{:016x}", self.result_checksum))
             .finish()
     }
@@ -189,6 +262,26 @@ impl ServeReport {
             self.mean_batch_size,
             self.busy_frac * 100.0
         );
+        if self.fleets > 1 {
+            let per_fleet: Vec<String> = self
+                .per_fleet
+                .iter()
+                .map(|f| format!("f{} {:.0}% ({} batches)", f.fleet, f.utilization * 100.0, f.batches))
+                .collect();
+            let replicas: Vec<String> = self
+                .per_matrix
+                .iter()
+                .zip(&self.replicas)
+                .map(|(m, r)| format!("{}×{}", m.name, r))
+                .collect();
+            println!(
+                "fleets {} ({}) | {} | replicas {}",
+                self.fleets,
+                self.placement,
+                per_fleet.join("  "),
+                replicas.join("  ")
+            );
+        }
         println!(
             "latency  p50 {:.4}s  p95 {:.4}s  p99 {:.4}s  max {:.4}s",
             self.latency.p50, self.latency.p95, self.latency.p99, self.latency.max
@@ -206,35 +299,241 @@ impl ServeReport {
     }
 }
 
-/// The serving front-end: owns a [`MatrixRegistry`] and replays arrival
-/// streams against it under a [`CoalescerConfig`].
+/// The serving front-end: owns one [`MatrixRegistry`] per fleet and
+/// replays arrival streams against them under a [`CoalescerConfig`] and
+/// a [`Placement`] policy.
 pub struct EigenServer<'m> {
-    registry: MatrixRegistry<'m>,
+    registries: Vec<MatrixRegistry<'m>>,
     coalescer: CoalescerConfig,
+    placement: Placement,
 }
 
 impl<'m> EigenServer<'m> {
-    /// Server over `registry`, coalescing with `coalescer`.
+    /// Single-fleet server over `registry`, coalescing with `coalescer`.
     pub fn new(registry: MatrixRegistry<'m>, coalescer: CoalescerConfig) -> Self {
-        EigenServer { registry, coalescer }
+        EigenServer {
+            registries: vec![registry],
+            coalescer,
+            placement: Placement::Replicate,
+        }
     }
 
-    /// The registry (stats, residency introspection).
+    /// Multi-fleet server: one registry per fleet (each its own device
+    /// group and prepared-state cache), a shared coalescer, and the
+    /// placement policy that routes matrices to fleets. Every registry
+    /// must expose the same matrices in the same order — each fleet must
+    /// be able to serve any matrix the policy routes to it.
+    pub fn with_fleets(
+        registries: Vec<MatrixRegistry<'m>>,
+        coalescer: CoalescerConfig,
+        placement: Placement,
+    ) -> Result<Self, SolverError> {
+        let invalid = |message: String| {
+            Err(SolverError::InvalidConfig { field: "fleets", message })
+        };
+        let Some(first) = registries.first() else {
+            return invalid("a server needs at least one fleet".into());
+        };
+        for (f, reg) in registries.iter().enumerate().skip(1) {
+            if reg.len() != first.len() {
+                return invalid(format!(
+                    "fleet {f} registers {} matrices, fleet 0 registers {}",
+                    reg.len(),
+                    first.len()
+                ));
+            }
+            for mi in 0..first.len() {
+                if reg.name(mi) != first.name(mi) {
+                    return invalid(format!(
+                        "fleet {f} slot {mi} is '{}', fleet 0's is '{}'",
+                        reg.name(mi),
+                        first.name(mi)
+                    ));
+                }
+            }
+        }
+        Ok(EigenServer { registries, coalescer, placement })
+    }
+
+    /// Number of fleets.
+    pub fn fleets(&self) -> usize {
+        self.registries.len()
+    }
+
+    /// Fleet 0's registry (stats, residency introspection).
     pub fn registry(&self) -> &MatrixRegistry<'m> {
-        &self.registry
+        &self.registries[0]
     }
 
-    /// Consume the server, returning its registry.
+    /// Fleet `f`'s registry.
+    pub fn fleet_registry(&self, f: usize) -> &MatrixRegistry<'m> {
+        &self.registries[f]
+    }
+
+    /// Consume the server, returning fleet 0's registry.
     pub fn into_registry(self) -> MatrixRegistry<'m> {
-        self.registry
+        self.registries.into_iter().next().expect("server always has fleet 0")
     }
 
     /// Replay `arrivals` (ascending `arrival_s`; a workload generator's
     /// output already is) to completion and report. Deterministic: same
-    /// arrivals + same registry configuration ⇒ byte-identical
-    /// [`ServeReport::to_json`].
+    /// arrivals + same registries + same placement ⇒ byte-identical
+    /// [`ServeReport::to_json`], at any fleet count. With one fleet the
+    /// run is decision-for-decision identical to the pre-0.6 serial loop
+    /// (kept as [`EigenServer::run_serial_reference`] and pinned by
+    /// `tests/multi_fleet.rs`).
     pub fn run(&mut self, arrivals: &[QueryArrival]) -> Result<ServeReport, SolverError> {
-        let mut coal = BatchCoalescer::new(self.coalescer, self.registry.len());
+        let nf = self.registries.len();
+        let placement = self.placement;
+        let n_matrices = self.registries[0].len();
+        let mut coal = BatchCoalescer::new(self.coalescer, n_matrices);
+        let mut pool = FleetPool::new(nf);
+        let mut heap: EventHeap<ServeEvent> = EventHeap::new();
+        // Pre-scheduling every arrival gives them the lowest sequence
+        // numbers: equal-time arrivals admit in workload order, before any
+        // same-instant flush/done event.
+        for (index, q) in arrivals.iter().enumerate() {
+            heap.push(q.arrival_s, ServeEvent::Arrival { index });
+        }
+        // Queries served per matrix so far — the LeastLoaded hot signal.
+        let mut served = vec![0usize; n_matrices];
+        let mut admitted = 0usize;
+        let mut records: Vec<QueryRecord> = Vec::with_capacity(arrivals.len());
+        let mut batches = 0usize;
+        let mut solve_s_total = 0.0f64;
+        let mut prepare_s_total = 0.0f64;
+        let mut checksum = 0u64;
+
+        let apply = |ev: ServeEvent,
+                         coal: &mut BatchCoalescer,
+                         heap: &mut EventHeap<ServeEvent>,
+                         admitted: &mut usize| {
+            match ev {
+                ServeEvent::Arrival { index } => {
+                    let q = &arrivals[index];
+                    heap.push(
+                        q.flush_deadline(&self.coalescer),
+                        ServeEvent::Flush { matrix: q.matrix },
+                    );
+                    coal.push(q.clone());
+                    *admitted += 1;
+                }
+                // Pure wake-ups: the dispatch loop below re-reads queue
+                // eligibility and fleet idleness, so a stale flush (its
+                // query already rode an earlier batch) or a done marker
+                // needs no state transition of its own.
+                ServeEvent::Flush { .. }
+                | ServeEvent::PrepareDone { .. }
+                | ServeEvent::SolveDone { .. } => {}
+            }
+        };
+
+        while let Some((now, ev)) = heap.pop() {
+            apply(ev, &mut coal, &mut heap, &mut admitted);
+            // Apply *every* event at this timestamp before dispatching:
+            // the serial loop admits all due arrivals before picking a
+            // batch, and dispatch decisions must see the same state.
+            while heap
+                .peek_time()
+                .is_some_and(|t| t.total_cmp(&now) == Ordering::Equal)
+            {
+                let (_, ev) = heap.pop().expect("peeked");
+                apply(ev, &mut coal, &mut heap, &mut admitted);
+            }
+
+            // Dispatch: route every currently runnable batch to an idle
+            // fleet. Once the stream is exhausted no queue can fill
+            // further — drain immediately instead of idling out the
+            // flush deadlines.
+            let drain = admitted == arrivals.len();
+            loop {
+                let pred = |mi: usize| {
+                    pool.choose(placement, mi, served[mi] >= HOT_QUERIES, now).is_some()
+                };
+                let batch = match coal.ready_batch_where(now, &pred) {
+                    Some(b) => Some(b),
+                    None if drain => coal.flush_any_where(&pred),
+                    None => None,
+                };
+                let Some(batch) = batch else { break };
+                let hot = served[batch.matrix] >= HOT_QUERIES;
+                let fleet = pool
+                    .choose(placement, batch.matrix, hot, now)
+                    .expect("dispatch predicate guaranteed an idle fleet");
+                let params: Vec<QueryParams> =
+                    batch.queries.iter().map(|q| q.params).collect();
+                let (outs, ev) = self.registries[fleet].solve_batch(batch.matrix, &params)?;
+                let start = now;
+                let solve_dur =
+                    outs.iter().map(|o| o.stats.sim_seconds).fold(0.0f64, f64::max);
+                let done = pool.occupy(fleet, start, ev.sim_prepare_s, solve_dur);
+                if ev.cold {
+                    heap.push(start + ev.sim_prepare_s, ServeEvent::PrepareDone { fleet });
+                }
+                heap.push(done, ServeEvent::SolveDone { fleet });
+                batches += 1;
+                solve_s_total += solve_dur;
+                prepare_s_total += ev.sim_prepare_s;
+                served[batch.matrix] += batch.queries.len();
+                for (q, o) in batch.queries.iter().zip(&outs) {
+                    for l in &o.eigenvalues {
+                        checksum = checksum.rotate_left(7) ^ l.to_bits();
+                    }
+                    records.push(QueryRecord {
+                        id: q.id,
+                        matrix: q.matrix,
+                        priority: q.priority,
+                        params: q.params,
+                        arrival_s: q.arrival_s,
+                        start_s: start,
+                        done_s: done,
+                        queue_s: start - q.arrival_s,
+                        prepare_s: ev.sim_prepare_s,
+                        solve_s: o.stats.sim_seconds,
+                        batch_size: batch.queries.len(),
+                        cold: ev.cold,
+                        fleet,
+                        eigenvalues: o.eigenvalues.clone(),
+                    });
+                }
+            }
+        }
+
+        // The run ends at the last completion, not at the heap's last
+        // wake-up (trailing flush deadlines for already-served queries
+        // would otherwise pad every throughput number).
+        let sim_end_s = records.iter().map(|r| r.done_s).fold(0.0f64, f64::max);
+        Ok(self.build_report(
+            records,
+            batches,
+            solve_s_total,
+            prepare_s_total,
+            sim_end_s,
+            checksum,
+            &pool,
+        ))
+    }
+
+    /// The pre-0.6 single-fleet serial loop, kept verbatim as an
+    /// executable specification: `tests/multi_fleet.rs` pins
+    /// [`EigenServer::run`] at `fleets = 1` to this byte-for-byte.
+    /// Errors on a multi-fleet server — the serial loop models exactly
+    /// one device group.
+    pub fn run_serial_reference(
+        &mut self,
+        arrivals: &[QueryArrival],
+    ) -> Result<ServeReport, SolverError> {
+        if self.registries.len() > 1 {
+            return Err(SolverError::InvalidConfig {
+                field: "fleets",
+                message: format!(
+                    "the serial reference loop serves exactly one fleet (server has {})",
+                    self.registries.len()
+                ),
+            });
+        }
+        let mut coal = BatchCoalescer::new(self.coalescer, self.registries[0].len());
+        let mut pool = FleetPool::new(1);
         let mut next = 0usize; // next unadmitted arrival
         let mut now = 0.0f64;
         let mut records: Vec<QueryRecord> = Vec::with_capacity(arrivals.len());
@@ -270,11 +569,11 @@ impl<'m> EigenServer<'m> {
             };
 
             let params: Vec<QueryParams> = batch.queries.iter().map(|q| q.params).collect();
-            let (outs, ev) = self.registry.solve_batch(batch.matrix, &params)?;
+            let (outs, ev) = self.registries[0].solve_batch(batch.matrix, &params)?;
             let start = now;
             let solve_dur =
                 outs.iter().map(|o| o.stats.sim_seconds).fold(0.0f64, f64::max);
-            let done = start + ev.sim_prepare_s + solve_dur;
+            let done = pool.occupy(0, start, ev.sim_prepare_s, solve_dur);
             batches += 1;
             solve_s_total += solve_dur;
             prepare_s_total += ev.sim_prepare_s;
@@ -295,6 +594,7 @@ impl<'m> EigenServer<'m> {
                     solve_s: o.stats.sim_seconds,
                     batch_size: batch.queries.len(),
                     cold: ev.cold,
+                    fleet: 0,
                     eigenvalues: o.eigenvalues.clone(),
                 });
             }
@@ -302,32 +602,84 @@ impl<'m> EigenServer<'m> {
         }
 
         let sim_end_s = now;
+        Ok(self.build_report(
+            records,
+            batches,
+            solve_s_total,
+            prepare_s_total,
+            sim_end_s,
+            checksum,
+            &pool,
+        ))
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn build_report(
+        &self,
+        records: Vec<QueryRecord>,
+        batches: usize,
+        solve_s_total: f64,
+        prepare_s_total: f64,
+        sim_end_s: f64,
+        checksum: u64,
+        pool: &FleetPool,
+    ) -> ServeReport {
+        let nf = self.registries.len();
         let lat: Vec<f64> = records.iter().map(|r| r.latency_s()).collect();
         let queue: Vec<f64> = records.iter().map(|r| r.queue_s).collect();
-        let stats = self.registry.stats();
-        let per_matrix = (0..self.registry.len())
+        let (mut prepares, mut evictions, mut hits, mut resident) = (0, 0, 0, 0);
+        for reg in &self.registries {
+            let s = reg.stats();
+            prepares += s.prepares;
+            evictions += s.evictions;
+            hits += s.hits;
+            resident += reg.resident_bytes();
+        }
+        let per_matrix: Vec<MatrixServeLine> = (0..self.registries[0].len())
             .map(|mi| {
                 let mine: Vec<f64> = records
                     .iter()
                     .filter(|r| r.matrix == mi)
                     .map(|r| r.latency_s())
                     .collect();
-                let mut batch_starts: Vec<u64> = records
+                // One batch = one maximal run of records sharing a
+                // (start, fleet) pair; records are appended batch-by-batch
+                // so consecutive dedup counts batches exactly (two fleets
+                // may legitimately start batches of one matrix at the
+                // same instant).
+                let mut batch_keys: Vec<(u64, usize)> = records
                     .iter()
                     .filter(|r| r.matrix == mi)
-                    .map(|r| r.start_s.to_bits())
+                    .map(|r| (r.start_s.to_bits(), r.fleet))
                     .collect();
-                batch_starts.dedup();
+                batch_keys.dedup();
                 MatrixServeLine {
-                    name: self.registry.name(mi).to_string(),
+                    name: self.registries[0].name(mi).to_string(),
                     queries: mine.len(),
-                    batches: batch_starts.len(),
-                    prepares: self.registry.prepares_of(mi),
+                    batches: batch_keys.len(),
+                    prepares: self.registries.iter().map(|r| r.prepares_of(mi)).sum(),
                     p99_latency_s: LatencySummary::from_samples(&mine).p99,
                 }
             })
             .collect();
-        Ok(ServeReport {
+        let replicas: Vec<usize> = (0..self.registries[0].len())
+            .map(|mi| {
+                self.registries.iter().filter(|r| r.prepares_of(mi) > 0).count()
+            })
+            .collect();
+        let per_fleet: Vec<FleetServeLine> = pool
+            .statuses()
+            .iter()
+            .enumerate()
+            .map(|(f, s)| FleetServeLine {
+                fleet: f,
+                batches: s.batches,
+                solve_s: s.solve_s,
+                prepare_s: s.prepare_s,
+                utilization: if sim_end_s > 0.0 { s.busy_s / sim_end_s } else { 0.0 },
+            })
+            .collect();
+        ServeReport {
             queries: records.len(),
             batches,
             mean_batch_size: if batches > 0 {
@@ -346,18 +698,22 @@ impl<'m> EigenServer<'m> {
             solve_s_total,
             prepare_s_total,
             busy_frac: if sim_end_s > 0.0 {
-                (solve_s_total + prepare_s_total) / sim_end_s
+                (solve_s_total + prepare_s_total) / (nf as f64 * sim_end_s)
             } else {
                 0.0
             },
-            prepares: stats.prepares,
-            evictions: stats.evictions,
-            hits: stats.hits,
-            resident_bytes_end: self.registry.resident_bytes(),
+            prepares,
+            evictions,
+            hits,
+            resident_bytes_end: resident,
+            fleets: nf,
+            placement: self.placement.name(),
+            per_fleet,
+            replicas,
             per_matrix,
             result_checksum: checksum,
             records,
-        })
+        }
     }
 }
 
@@ -369,10 +725,10 @@ mod tests {
     use crate::sparse::suite;
     use crate::{PrecisionConfig, Solver};
 
-    fn small_server<'m>(
+    fn registry<'m>(
         matrices: &'m [(String, crate::Csr)],
         budget: usize,
-    ) -> EigenServer<'m> {
+    ) -> MatrixRegistry<'m> {
         let solver = Solver::builder()
             .k(6)
             .precision(PrecisionConfig::FDF)
@@ -386,8 +742,15 @@ mod tests {
         for (name, m) in matrices {
             reg.register(name, m);
         }
+        reg
+    }
+
+    fn small_server<'m>(
+        matrices: &'m [(String, crate::Csr)],
+        budget: usize,
+    ) -> EigenServer<'m> {
         EigenServer::new(
-            reg,
+            registry(matrices, budget),
             CoalescerConfig { max_batch: 4, max_wait_s: 0.01, bulk_wait_factor: 4.0 },
         )
     }
@@ -434,6 +797,87 @@ mod tests {
         for r in &a.records {
             assert!(r.queue_s >= 0.0 && r.done_s >= r.start_s && r.start_s >= r.arrival_s);
             assert!(r.batch_size >= 1 && r.batch_size <= 4);
+            assert_eq!(r.fleet, 0, "single-fleet server runs everything on fleet 0");
+        }
+    }
+
+    #[test]
+    fn single_fleet_json_has_no_multi_fleet_fields() {
+        let ms = matrices();
+        let spec = WorkloadSpec::uniform(3, 8, 400.0, &["WB-GO", "FL"], 6);
+        let mut server = small_server(&ms, usize::MAX);
+        let idx = |n: &str| server.registry().index_of(n);
+        let arrivals = spec.generate(idx).unwrap();
+        let json = server.run(&arrivals).unwrap().to_json();
+        assert!(!json.contains("\"fleets\""), "pre-0.6 JSON compatibility: {json}");
+        assert!(!json.contains("\"per_fleet\""));
+        assert!(!json.contains("\"placement\""));
+        assert!(!json.contains("\"replicas\""));
+    }
+
+    #[test]
+    fn with_fleets_rejects_mismatched_registries() {
+        let ms = matrices();
+        let full = registry(&ms, usize::MAX);
+        let partial = {
+            let solver = Solver::builder()
+                .k(6)
+                .precision(PrecisionConfig::FDF)
+                .devices(1)
+                .build()
+                .unwrap();
+            let mut reg = MatrixRegistry::new(solver, RegistryConfig::default());
+            reg.register(&ms[0].0, &ms[0].1);
+            reg
+        };
+        let err = EigenServer::with_fleets(
+            vec![full, partial],
+            CoalescerConfig::default(),
+            Placement::Replicate,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("fleet 1"), "{err}");
+        let err = EigenServer::with_fleets(
+            Vec::new(),
+            CoalescerConfig::default(),
+            Placement::Pin,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("at least one fleet"), "{err}");
+    }
+
+    #[test]
+    fn two_fleets_run_deterministically_and_report_fleet_fields() {
+        let ms = matrices();
+        let spec = WorkloadSpec::uniform(11, 24, 500.0, &["WB-GO", "FL"], 6);
+        let run_once = || {
+            let regs = vec![registry(&ms, usize::MAX), registry(&ms, usize::MAX)];
+            let mut server = EigenServer::with_fleets(
+                regs,
+                CoalescerConfig { max_batch: 4, max_wait_s: 0.01, bulk_wait_factor: 4.0 },
+                Placement::Replicate,
+            )
+            .unwrap();
+            let idx = |n: &str| server.registry().index_of(n);
+            let arrivals = spec.generate(idx).unwrap();
+            server.run(&arrivals).unwrap()
+        };
+        let a = run_once();
+        let b = run_once();
+        assert_eq!(a.to_json(), b.to_json(), "fleet replay must be byte-identical");
+        assert_eq!(a.queries, 24);
+        assert_eq!(a.fleets, 2);
+        assert_eq!(a.per_fleet.len(), 2);
+        assert!(a.per_fleet.iter().all(|f| f.batches > 0), "both fleets must serve");
+        let json = a.to_json();
+        assert!(json.contains("\"fleets\": 2"));
+        assert!(json.contains("\"placement\": \"replicate\""));
+        assert!(json.contains("\"per_fleet\": ["));
+        assert!(json.contains("\"replicas\": ["));
+        // Fleet accounting is self-consistent.
+        assert_eq!(a.per_fleet.iter().map(|f| f.batches).sum::<usize>(), a.batches);
+        for r in &a.records {
+            assert!(r.fleet < 2);
         }
     }
 }

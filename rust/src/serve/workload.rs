@@ -65,6 +65,40 @@ impl WorkloadSpec {
         }
     }
 
+    /// [`WorkloadSpec::uniform`] with a Zipf-skewed mixture: matrix `i`
+    /// (in `names` listing order) gets weight `(i + 1)^(-skew)`, so the
+    /// first names carry most of the traffic — the hot/cold skew real
+    /// registries see. `skew = 0.0` is exactly the uniform mixture
+    /// (every weight 1.0, bit-identical stream); larger skews concentrate
+    /// harder (at 1.0 the classic Zipf law, at 2.0 the head dominates).
+    /// Only the *weights* change — the per-query draw order stays fixed,
+    /// so any two specs over the same names stay comparable draw-by-draw.
+    pub fn zipf(
+        seed: u64,
+        queries: usize,
+        rate_qps: f64,
+        names: &[&str],
+        k: usize,
+        skew: f64,
+    ) -> Self {
+        WorkloadSpec {
+            seed,
+            queries,
+            rate_qps,
+            mix: names
+                .iter()
+                .enumerate()
+                .map(|(i, n)| MatrixMix {
+                    name: n.to_string(),
+                    weight: (i as f64 + 1.0).powf(-skew),
+                })
+                .collect(),
+            k_choices: vec![k],
+            bulk_fraction: 0.0,
+            tolerance: None,
+        }
+    }
+
     /// Typed validation (rate/weights/choices ranges).
     pub fn validate(&self) -> Result<(), SolverError> {
         let invalid = |field: &'static str, message: String| {
@@ -217,6 +251,65 @@ mod tests {
         s.mix.push(MatrixMix { name: "ghost".into(), weight: 1.0 });
         let err = s.generate(resolve).unwrap_err();
         assert!(err.to_string().contains("ghost"), "{err}");
+    }
+
+    #[test]
+    fn zipf_zero_skew_is_bitwise_uniform() {
+        let names = ["a", "b"];
+        let u = WorkloadSpec::uniform(7, 40, 150.0, &names, 4);
+        let z = WorkloadSpec::zipf(7, 40, 150.0, &names, 4, 0.0);
+        assert!(z.mix.iter().all(|m| m.weight == 1.0), "1^-0 and 2^-0 are exactly 1");
+        let x = u.generate(resolve).unwrap();
+        let y = z.generate(resolve).unwrap();
+        for (a, b) in x.iter().zip(&y) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.matrix, b.matrix);
+            assert_eq!(a.params, b.params);
+            assert_eq!(a.arrival_s.to_bits(), b.arrival_s.to_bits());
+        }
+    }
+
+    #[test]
+    fn zipf_weights_decay_in_listing_order() {
+        let z = WorkloadSpec::zipf(1, 10, 100.0, &["a", "b", "c", "d"], 4, 1.0);
+        for w in z.mix.windows(2) {
+            assert!(w[0].weight > w[1].weight, "weights must strictly decay");
+        }
+        assert_eq!(z.mix[0].weight, 1.0);
+        assert_eq!(z.mix[1].weight, 0.5);
+        z.validate().unwrap();
+    }
+
+    #[test]
+    fn zipf_head_dominates_at_high_skew() {
+        let resolve4 = |name: &str| match name {
+            "a" => Some(0),
+            "b" => Some(1),
+            "c" => Some(2),
+            "d" => Some(3),
+            _ => None,
+        };
+        let z = WorkloadSpec::zipf(5, 200, 500.0, &["a", "b", "c", "d"], 4, 2.0);
+        let x = z.generate(resolve4).unwrap();
+        let to_head = x.iter().filter(|q| q.matrix == 0).count();
+        // Weight share of the head is 1 / (1 + 1/4 + 1/9 + 1/16) ≈ 70%.
+        assert!(
+            to_head > x.len() / 2,
+            "skew 2.0 should send most traffic to the head ({to_head}/{})",
+            x.len()
+        );
+    }
+
+    #[test]
+    fn zipf_streams_are_deterministic_per_seed() {
+        let z = WorkloadSpec::zipf(9, 30, 100.0, &["a", "b"], 4, 1.0);
+        let x = z.generate(resolve).unwrap();
+        let y = z.generate(resolve).unwrap();
+        for (a, b) in x.iter().zip(&y) {
+            assert_eq!(a.matrix, b.matrix);
+            assert_eq!(a.params, b.params);
+            assert_eq!(a.arrival_s.to_bits(), b.arrival_s.to_bits());
+        }
     }
 
     #[test]

@@ -1,0 +1,88 @@
+//! Fleet-clock phase accounting: attribute deltas of the fleet-critical
+//! path to named phase buckets.
+//!
+//! The coordinator's solve loops advance each simulated [`Device`]'s
+//! clock with [`super::CostModel`] charges, then split the *fleet max
+//! clock* — the critical path — into per-phase buckets (SpMV, vector
+//! ops, sync, swap, …). Before 0.6 both loops hand-rolled the same
+//! cursor closure; [`PhaseCursor`] is that pattern, extracted: mark the
+//! fleet time after each phase and take the delta since the previous
+//! mark. The marks partition the critical path exactly (the sum of all
+//! deltas equals the final fleet time), which `stats_are_populated` and
+//! the batched OOC tests assert downstream.
+
+use crate::gpu::Device;
+
+/// Fleet-wide simulated time: the maximum device clock, i.e. the
+/// critical path so far. The same fold the barrier uses, shared so every
+/// call site agrees on the definition.
+pub fn fleet_time(devices: &[Device]) -> f64 {
+    devices.iter().map(|d| d.clock_s).fold(0.0, f64::max)
+}
+
+/// A cursor over the fleet-critical-path clock: each [`PhaseCursor::mark`]
+/// returns the seconds elapsed since the previous mark, so consecutive
+/// marks partition the simulated time into disjoint phase charges.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PhaseCursor {
+    cursor: f64,
+}
+
+impl PhaseCursor {
+    /// A cursor at simulated time zero (fresh devices).
+    pub fn new() -> Self {
+        PhaseCursor { cursor: 0.0 }
+    }
+
+    /// Advance to `fleet_now` (typically [`fleet_time`] of the devices)
+    /// and return the delta since the previous mark. The arithmetic is
+    /// exactly `fleet_now - previous`, bit-reproducible across runs.
+    pub fn mark(&mut self, fleet_now: f64) -> f64 {
+        let delta = fleet_now - self.cursor;
+        self.cursor = fleet_now;
+        delta
+    }
+
+    /// The time of the last mark.
+    pub fn now(&self) -> f64 {
+        self.cursor
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn marks_partition_the_clock() {
+        let mut c = PhaseCursor::new();
+        assert_eq!(c.mark(0.5), 0.5);
+        assert_eq!(c.mark(0.5), 0.0, "no progress, no charge");
+        assert_eq!(c.mark(1.25), 0.75);
+        assert_eq!(c.now(), 1.25);
+        // The deltas sum to the final fleet time.
+        assert_eq!(0.5 + 0.0 + 0.75, c.now());
+    }
+
+    #[test]
+    fn fleet_time_is_the_max_clock() {
+        let mut devs = vec![Device::new(0, 1 << 20), Device::new(1, 1 << 20)];
+        assert_eq!(fleet_time(&devs), 0.0);
+        devs[0].run_kernel(1.0);
+        devs[1].run_kernel(3.0);
+        assert_eq!(fleet_time(&devs), 3.0);
+    }
+
+    #[test]
+    fn cursor_tracks_device_charges() {
+        let mut devs = vec![Device::new(0, 1 << 20)];
+        let mut c = PhaseCursor::new();
+        devs[0].run_kernel(0.25);
+        let spmv = c.mark(fleet_time(&devs));
+        devs[0].run_kernel(0.5);
+        let vec_ops = c.mark(fleet_time(&devs));
+        assert_eq!(spmv, 0.25);
+        assert_eq!(vec_ops, 0.5);
+        assert_eq!(spmv + vec_ops, fleet_time(&devs));
+    }
+}

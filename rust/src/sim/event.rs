@@ -1,0 +1,59 @@
+//! The typed event vocabulary of a serve run.
+//!
+//! A serve simulation is one merged timeline of these four event kinds,
+//! popped from an [`super::EventHeap`] in `(time, seq)` order. The
+//! server reacts to each kind and then runs its dispatch loop; events
+//! that arrive stale (a flush deadline for a query that already rode an
+//! earlier batch, a prepare-done for a fleet that is still busy solving)
+//! are deliberate no-ops — re-running dispatch never changes a decision
+//! unless queue eligibility or fleet idleness actually changed, both of
+//! which have their own events.
+
+/// One scheduled occurrence on a serve run's simulated timeline.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServeEvent {
+    /// Workload arrival `index` (into the arrival stream) is admitted to
+    /// the coalescer.
+    Arrival {
+        /// Index into the arrival slice handed to the server.
+        index: usize,
+    },
+    /// A queued query's flush deadline passes: its matrix's queue
+    /// becomes eligible to run even under-full.
+    Flush {
+        /// Registry index of the matrix whose queue the deadline belongs
+        /// to.
+        matrix: usize,
+    },
+    /// A fleet finished the (re-)preparation charge of its current
+    /// batch and is now solving — the overlap point where *another*
+    /// fleet's solve can be running concurrently.
+    PrepareDone {
+        /// The fleet that finished preparing.
+        fleet: usize,
+    },
+    /// A fleet completed a batch (prepare + solve) and is idle again.
+    SolveDone {
+        /// The fleet that went idle.
+        fleet: usize,
+    },
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::EventHeap;
+
+    #[test]
+    fn events_carry_their_payloads_through_the_heap() {
+        let mut h = EventHeap::new();
+        h.push(0.5, ServeEvent::Flush { matrix: 3 });
+        h.push(0.0, ServeEvent::Arrival { index: 7 });
+        h.push(0.25, ServeEvent::PrepareDone { fleet: 1 });
+        h.push(0.75, ServeEvent::SolveDone { fleet: 0 });
+        assert_eq!(h.pop(), Some((0.0, ServeEvent::Arrival { index: 7 })));
+        assert_eq!(h.pop(), Some((0.25, ServeEvent::PrepareDone { fleet: 1 })));
+        assert_eq!(h.pop(), Some((0.5, ServeEvent::Flush { matrix: 3 })));
+        assert_eq!(h.pop(), Some((0.75, ServeEvent::SolveDone { fleet: 0 })));
+    }
+}

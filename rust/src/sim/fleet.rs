@@ -1,0 +1,244 @@
+//! Multi-fleet dispatch: per-fleet busy horizons and placement policy.
+//!
+//! A *fleet* is one independent device group (its own registry, its own
+//! prepared-state cache) advancing on the shared simulated timeline. The
+//! [`FleetPool`] tracks, per fleet, the simulated time until which it is
+//! occupied and its cumulative busy seconds; [`Placement`] decides which
+//! fleet a matrix's batch may run on. All selection is deterministic:
+//! ties break to the lowest fleet id, loads compare via
+//! [`f64::total_cmp`], and nothing here consults wallclock or RNG.
+
+use std::str::FromStr;
+
+use crate::api::error::SolverError;
+
+/// Per-fleet occupancy accounting on the simulated timeline.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FleetStatus {
+    /// Simulated second until which the fleet is occupied (exclusive:
+    /// the fleet is idle *at* `busy_until`).
+    pub busy_until: f64,
+    /// Total simulated seconds spent occupied (prepare + solve).
+    pub busy_s: f64,
+    /// Simulated seconds spent solving.
+    pub solve_s: f64,
+    /// Simulated seconds spent (re-)preparing matrices.
+    pub prepare_s: f64,
+    /// Batches this fleet has executed.
+    pub batches: usize,
+}
+
+/// Which fleet a matrix's batches may run on.
+///
+/// * `Pin` — every matrix has one home fleet (`matrix % fleets`); its
+///   prepared state is never duplicated, but a hot matrix serializes on
+///   its home.
+/// * `Replicate` — any idle fleet may serve any matrix; hot matrices end
+///   up resident on several fleets (replicas cost memory, buy
+///   concurrency).
+/// * `LeastLoaded` — the hybrid: matrices start pinned and graduate to
+///   replicate-style dispatch once they have served enough queries to
+///   count as hot (see `serve::server::HOT_QUERIES`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Placement {
+    Pin,
+    Replicate,
+    LeastLoaded,
+}
+
+impl Placement {
+    /// Stable lowercase name, as accepted by the CLI and emitted in
+    /// reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Placement::Pin => "pin",
+            Placement::Replicate => "replicate",
+            Placement::LeastLoaded => "least-loaded",
+        }
+    }
+}
+
+impl FromStr for Placement {
+    type Err = SolverError;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "pin" => Ok(Placement::Pin),
+            "replicate" => Ok(Placement::Replicate),
+            "least-loaded" | "least_loaded" => Ok(Placement::LeastLoaded),
+            other => Err(SolverError::InvalidConfig {
+                field: "placement",
+                message: format!(
+                    "unknown placement '{other}' (expected pin|replicate|least-loaded)"
+                ),
+            }),
+        }
+    }
+}
+
+/// The dispatcher's view of N concurrent fleets.
+#[derive(Clone, Debug)]
+pub struct FleetPool {
+    fleets: Vec<FleetStatus>,
+}
+
+impl FleetPool {
+    /// A pool of `n` idle fleets. Panics on `n == 0` — the CLI validates
+    /// first, so an empty pool is always an internal bug.
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 1, "a fleet pool needs at least one fleet");
+        FleetPool { fleets: vec![FleetStatus::default(); n] }
+    }
+
+    /// Number of fleets in the pool.
+    pub fn len(&self) -> usize {
+        self.fleets.len()
+    }
+
+    /// Always false: the pool is constructed with ≥ 1 fleet.
+    pub fn is_empty(&self) -> bool {
+        self.fleets.is_empty()
+    }
+
+    /// True when fleet `f` can start a batch at simulated second `now`.
+    pub fn is_idle(&self, f: usize, now: f64) -> bool {
+        self.fleets[f].busy_until <= now
+    }
+
+    /// The idle fleet with the least cumulative busy time, ties to the
+    /// lowest id; `None` when every fleet is occupied at `now`.
+    pub fn least_loaded_idle(&self, now: f64) -> Option<usize> {
+        self.fleets
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.busy_until <= now)
+            .min_by(|(_, a), (_, b)| a.busy_s.total_cmp(&b.busy_s))
+            .map(|(f, _)| f)
+    }
+
+    /// The fleet `placement` routes `matrix` to at `now`, or `None` when
+    /// the policy's choice is busy (the dispatch loop then leaves the
+    /// queue for a later event). `hot` feeds the [`Placement::LeastLoaded`]
+    /// graduation decision and is ignored by the pure policies.
+    pub fn choose(
+        &self,
+        placement: Placement,
+        matrix: usize,
+        hot: bool,
+        now: f64,
+    ) -> Option<usize> {
+        match placement {
+            Placement::Pin => {
+                let home = matrix % self.fleets.len();
+                self.is_idle(home, now).then_some(home)
+            }
+            Placement::Replicate => self.least_loaded_idle(now),
+            Placement::LeastLoaded => {
+                if hot {
+                    self.least_loaded_idle(now)
+                } else {
+                    let home = matrix % self.fleets.len();
+                    self.is_idle(home, now).then_some(home)
+                }
+            }
+        }
+    }
+
+    /// Occupy fleet `f` from `start` for a `prepare_s + solve_s` batch;
+    /// returns the completion time. The caller schedules the
+    /// prepare-done / solve-done events at the returned instants.
+    pub fn occupy(&mut self, f: usize, start: f64, prepare_s: f64, solve_s: f64) -> f64 {
+        let s = &mut self.fleets[f];
+        debug_assert!(s.busy_until <= start, "fleet {f} double-booked");
+        let done = start + prepare_s + solve_s;
+        s.busy_until = done;
+        s.busy_s += prepare_s + solve_s;
+        s.prepare_s += prepare_s;
+        s.solve_s += solve_s;
+        s.batches += 1;
+        done
+    }
+
+    /// Accounting snapshot of fleet `f`.
+    pub fn status(&self, f: usize) -> FleetStatus {
+        self.fleets[f]
+    }
+
+    /// Accounting snapshots of every fleet, in id order.
+    pub fn statuses(&self) -> &[FleetStatus] {
+        &self.fleets
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn least_loaded_breaks_ties_to_lowest_id() {
+        let pool = FleetPool::new(3);
+        // All idle, all zero load → fleet 0.
+        assert_eq!(pool.least_loaded_idle(0.0), Some(0));
+        let mut pool = pool;
+        pool.occupy(0, 0.0, 0.0, 1.0);
+        // Fleet 0 busy until 1.0; fleets 1 and 2 tie at zero load → 1.
+        assert_eq!(pool.least_loaded_idle(0.5), Some(1));
+        // At 1.0 fleet 0 is idle again but carries 1.0s of load → still 1.
+        assert_eq!(pool.least_loaded_idle(1.0), Some(1));
+    }
+
+    #[test]
+    fn pin_routes_by_matrix_modulo_and_respects_busy() {
+        let mut pool = FleetPool::new(2);
+        assert_eq!(pool.choose(Placement::Pin, 0, false, 0.0), Some(0));
+        assert_eq!(pool.choose(Placement::Pin, 3, false, 0.0), Some(1));
+        pool.occupy(1, 0.0, 0.25, 0.75);
+        // Matrix 3's home is busy → no dispatch, even with fleet 0 idle.
+        assert_eq!(pool.choose(Placement::Pin, 3, false, 0.5), None);
+        assert_eq!(pool.choose(Placement::Pin, 3, false, 1.0), Some(1));
+    }
+
+    #[test]
+    fn least_loaded_policy_graduates_hot_matrices() {
+        let mut pool = FleetPool::new(2);
+        pool.occupy(0, 0.0, 0.0, 1.0);
+        // Cold matrix 0 is pinned to busy fleet 0 → waits.
+        assert_eq!(pool.choose(Placement::LeastLoaded, 0, false, 0.5), None);
+        // Hot matrix 0 may take idle fleet 1.
+        assert_eq!(pool.choose(Placement::LeastLoaded, 0, true, 0.5), Some(1));
+    }
+
+    #[test]
+    fn occupy_accumulates_and_returns_completion() {
+        let mut pool = FleetPool::new(1);
+        let done = pool.occupy(0, 1.0, 0.25, 0.5);
+        assert_eq!(done, 1.75);
+        let s = pool.status(0);
+        assert_eq!(s.busy_until, 1.75);
+        assert_eq!(s.prepare_s, 0.25);
+        assert_eq!(s.solve_s, 0.5);
+        assert_eq!(s.busy_s, 0.75);
+        assert_eq!(s.batches, 1);
+        // Idle exactly at the completion instant.
+        assert!(pool.is_idle(0, 1.75));
+        assert!(!pool.is_idle(0, 1.5));
+    }
+
+    #[test]
+    fn placement_parses_stable_names() {
+        assert_eq!("pin".parse::<Placement>().unwrap(), Placement::Pin);
+        assert_eq!("replicate".parse::<Placement>().unwrap(), Placement::Replicate);
+        assert_eq!(
+            "least-loaded".parse::<Placement>().unwrap(),
+            Placement::LeastLoaded
+        );
+        assert_eq!(
+            "least_loaded".parse::<Placement>().unwrap(),
+            Placement::LeastLoaded
+        );
+        assert!("lru".parse::<Placement>().is_err());
+        for p in [Placement::Pin, Placement::Replicate, Placement::LeastLoaded] {
+            assert_eq!(p.name().parse::<Placement>().unwrap(), p);
+        }
+    }
+}

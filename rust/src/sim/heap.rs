@@ -1,0 +1,163 @@
+//! Monotone event heap: the single merged timeline of a simulation.
+//!
+//! A thin wrapper over [`std::collections::BinaryHeap`] that pops events
+//! in ascending `(time, seq)` order, where `seq` is a monotonically
+//! increasing insertion counter assigned by [`EventHeap::push`]. The
+//! sequence tie-break makes the pop order a *total* order even when many
+//! events share one simulated timestamp — the property every replay
+//! guarantee in the serving runtime leans on: two runs that push the
+//! same events in the same order pop them in the same order, always.
+//!
+//! Times compare via [`f64::total_cmp`], so the ordering is total for
+//! every representable `f64`; non-finite times are rejected at push
+//! (an event at `NaN` or `∞` seconds is always a caller bug).
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+struct Entry<E> {
+    time: f64,
+    seq: u64,
+    event: E,
+}
+
+impl<E> PartialEq for Entry<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time.total_cmp(&other.time) == Ordering::Equal && self.seq == other.seq
+    }
+}
+
+impl<E> Eq for Entry<E> {}
+
+impl<E> Ord for Entry<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reversed on both keys: BinaryHeap is a max-heap and we pop the
+        // *earliest* (time, seq).
+        other
+            .time
+            .total_cmp(&self.time)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+impl<E> PartialOrd for Entry<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// A deterministic min-heap of `(time, seq, event)` entries. See the
+/// module docs for the ordering contract.
+pub struct EventHeap<E> {
+    heap: BinaryHeap<Entry<E>>,
+    seq: u64,
+}
+
+impl<E> Default for EventHeap<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> EventHeap<E> {
+    /// An empty timeline.
+    pub fn new() -> Self {
+        EventHeap { heap: BinaryHeap::new(), seq: 0 }
+    }
+
+    /// Schedule `event` at simulated second `time`; returns the sequence
+    /// number assigned (ties at equal `time` pop in sequence order).
+    ///
+    /// Panics on non-finite `time` — a NaN/∞ deadline would silently
+    /// corrupt the pop order, so it fails loudly instead.
+    pub fn push(&mut self, time: f64, event: E) -> u64 {
+        assert!(time.is_finite(), "event time must be finite (got {time})");
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Entry { time, seq, event });
+        seq
+    }
+
+    /// Pop the earliest `(time, event)` pair, if any.
+    pub fn pop(&mut self) -> Option<(f64, E)> {
+        self.heap.pop().map(|e| (e.time, e.event))
+    }
+
+    /// Simulated time of the next event without popping it.
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heap.peek().map(|e| e.time)
+    }
+
+    /// Events currently scheduled.
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// True when no events are scheduled.
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut h = EventHeap::new();
+        h.push(3.0, "c");
+        h.push(1.0, "a");
+        h.push(2.0, "b");
+        assert_eq!(h.len(), 3);
+        assert_eq!(h.peek_time(), Some(1.0));
+        assert_eq!(h.pop(), Some((1.0, "a")));
+        assert_eq!(h.pop(), Some((2.0, "b")));
+        assert_eq!(h.pop(), Some((3.0, "c")));
+        assert_eq!(h.pop(), None);
+        assert!(h.is_empty());
+    }
+
+    #[test]
+    fn equal_times_pop_in_insertion_order() {
+        let mut h = EventHeap::new();
+        for i in 0..16u32 {
+            h.push(0.125, i);
+        }
+        for i in 0..16u32 {
+            assert_eq!(h.pop(), Some((0.125, i)), "seq tie-break must be FIFO");
+        }
+    }
+
+    #[test]
+    fn interleaved_ties_stay_stable() {
+        let mut h = EventHeap::new();
+        h.push(1.0, "t1-first");
+        h.push(0.5, "t05");
+        h.push(1.0, "t1-second");
+        h.push(1.0, "t1-third");
+        assert_eq!(h.pop(), Some((0.5, "t05")));
+        assert_eq!(h.pop(), Some((1.0, "t1-first")));
+        assert_eq!(h.pop(), Some((1.0, "t1-second")));
+        assert_eq!(h.pop(), Some((1.0, "t1-third")));
+    }
+
+    #[test]
+    fn negative_zero_orders_before_positive_zero() {
+        // total_cmp is a total order: -0.0 < +0.0. The heap must not
+        // panic or mis-order; insertion order still breaks the tie for
+        // equal bit patterns.
+        let mut h = EventHeap::new();
+        h.push(0.0, "pos");
+        h.push(-0.0, "neg");
+        assert_eq!(h.pop(), Some((-0.0, "neg")));
+        assert_eq!(h.pop(), Some((0.0, "pos")));
+    }
+
+    #[test]
+    #[should_panic(expected = "finite")]
+    fn rejects_non_finite_times() {
+        let mut h = EventHeap::new();
+        h.push(f64::NAN, ());
+    }
+}

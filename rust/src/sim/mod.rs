@@ -1,0 +1,42 @@
+//! Deterministic discrete-event simulation core.
+//!
+//! Everything the repo simulates — device clocks in the coordinator, the
+//! serving runtime's merged arrival/flush/solve timeline, multi-fleet
+//! dispatch — runs on the primitives in this module, and **never** on
+//! wallclock:
+//!
+//! * [`heap::EventHeap`] — a monotone event heap ordered by
+//!   `(time, seq)`: events at equal simulated times pop in insertion
+//!   order, so a replayed run makes bit-identical decisions;
+//! * [`event::ServeEvent`] — the typed event vocabulary of a serve run
+//!   (arrival, flush deadline, prepare-done, solve-done);
+//! * [`clock::PhaseCursor`] — the fleet-critical-path phase accounting
+//!   the coordinator's solve loops charge their [`cost::CostModel`]
+//!   seconds through (plus [`clock::fleet_time`], the fleet max clock);
+//! * [`cost::CostModel`] — the calibrated V100 kernel cost model that
+//!   advances every simulated device clock (moved here from
+//!   `gpu::model` in 0.6; `crate::gpu::{CostModel, KernelCost}` remain
+//!   as re-exports);
+//! * [`fleet::FleetPool`] — the multi-fleet dispatcher: per-fleet busy
+//!   horizons, least-loaded idle selection, and the
+//!   [`fleet::Placement`] policy (pin / replicate / least-loaded) the
+//!   serving runtime routes matrices with.
+//!
+//! Determinism contract: every function here is a pure computation over
+//! `f64` simulated seconds and integer sequence numbers — no wallclock,
+//! no RNG, no iteration over unordered containers — so any layer built
+//! on it (the event-driven [`crate::serve::EigenServer`] in particular)
+//! replays byte-identically for a fixed workload seed at any fleet
+//! count.
+
+pub mod clock;
+pub mod cost;
+pub mod event;
+pub mod fleet;
+pub mod heap;
+
+pub use clock::{fleet_time, PhaseCursor};
+pub use cost::{CostModel, KernelCost};
+pub use event::ServeEvent;
+pub use fleet::{FleetPool, FleetStatus, Placement};
+pub use heap::EventHeap;

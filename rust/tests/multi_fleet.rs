@@ -1,0 +1,250 @@
+//! Acceptance tests for multi-fleet serving (`EigenServer::with_fleets`
+//! over the `topk_eigen::sim` event core):
+//!
+//! * replay determinism — `--json`-equivalent report bytes are identical
+//!   across replays at every fleet count (1, 2, 4);
+//! * the headline numeric guarantee survives fleet routing — every query
+//!   answered by any fleet is bit-identical to the same `QueryParams`
+//!   through a standalone session, under both `replicate` and `pin`
+//!   placement, including queries served by evicted-then-re-prepared
+//!   state;
+//! * a single-fleet event-driven run reproduces the pre-0.6 serial loop
+//!   (kept as `run_serial_reference`) byte-for-byte;
+//! * two fleets strictly out-throughput one on saturating traffic — the
+//!   point of having fleets at all.
+
+use topk_eigen::serve::{
+    CoalescerConfig, EigenServer, MatrixRegistry, RegistryConfig, ServeReport, WorkloadSpec,
+};
+use topk_eigen::sim::Placement;
+use topk_eigen::sparse::suite;
+use topk_eigen::{Csr, PrecisionConfig, QueryParams, Solver};
+
+fn solver(k: usize, devices: usize) -> Solver {
+    Solver::builder()
+        .k(k)
+        .precision(PrecisionConfig::FDF)
+        .devices(devices)
+        .build()
+        .expect("config")
+}
+
+fn matrices() -> Vec<(String, Csr)> {
+    vec![
+        ("WB-GO".into(), suite::find("WB-GO").unwrap().generate_csr(0.3, 1)),
+        ("FL".into(), suite::find("FL").unwrap().generate_csr(0.3, 1)),
+    ]
+}
+
+fn registry<'m>(ms: &'m [(String, Csr)], budget: usize) -> MatrixRegistry<'m> {
+    let mut reg = MatrixRegistry::new(
+        solver(6, 1),
+        RegistryConfig { budget_bytes: budget, ..RegistryConfig::default() },
+    );
+    for (name, m) in ms {
+        reg.register(name, m);
+    }
+    reg
+}
+
+fn fleet_server<'m>(
+    ms: &'m [(String, Csr)],
+    budget: usize,
+    fleets: usize,
+    placement: Placement,
+) -> EigenServer<'m> {
+    let regs: Vec<MatrixRegistry<'m>> = (0..fleets).map(|_| registry(ms, budget)).collect();
+    EigenServer::with_fleets(
+        regs,
+        CoalescerConfig { max_batch: 4, max_wait_s: 0.005, bulk_wait_factor: 4.0 },
+        placement,
+    )
+    .expect("fleet config")
+}
+
+fn run_fleet(
+    ms: &[(String, Csr)],
+    budget: usize,
+    fleets: usize,
+    placement: Placement,
+    spec: &WorkloadSpec,
+) -> ServeReport {
+    let mut server = fleet_server(ms, budget, fleets, placement);
+    let arrivals = {
+        let r = server.registry();
+        spec.generate(|n| r.index_of(n)).expect("workload")
+    };
+    server.run(&arrivals).expect("serve run")
+}
+
+/// The mixed workload `tests/serve.rs` pins the serial server with.
+fn spec(seed: u64) -> WorkloadSpec {
+    let mut s = WorkloadSpec::uniform(seed, 24, 400.0, &["WB-GO", "FL"], 6);
+    s.k_choices = vec![4, 6];
+    s.bulk_fraction = 0.25;
+    s
+}
+
+/// Traffic far above one fleet's service rate: everything arrives within
+/// a few milliseconds, so the run is pure backlog drain and throughput is
+/// limited by fleet parallelism alone.
+fn saturating_spec(seed: u64) -> WorkloadSpec {
+    let mut s = WorkloadSpec::uniform(seed, 32, 5000.0, &["WB-GO", "FL"], 6);
+    s.k_choices = vec![4, 6];
+    s
+}
+
+/// Standalone reference: the same query through a fresh prepare + session.
+fn standalone(k: usize, devices: usize, m: &Csr, q: &QueryParams) -> Vec<f64> {
+    let mut s = solver(k, devices);
+    let mut prepared = s.prepare(m).expect("prepare");
+    let sol = s.session(&mut prepared).solve(q).expect("solve");
+    sol.eigenvalues
+}
+
+fn assert_bits_eq(a: &[f64], b: &[f64], ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: eigenpair count");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: λ[{i}] differs ({x:e} vs {y:e})");
+    }
+}
+
+/// A per-fleet budget that fits exactly one of the test matrices'
+/// prepared states — forces evict/re-prepare ping-pong on any fleet that
+/// serves both matrices.
+fn one_matrix_budget(ms: &[(String, Csr)]) -> usize {
+    let mut s = solver(6, 1);
+    let bytes: Vec<usize> = ms
+        .iter()
+        .map(|(_, m)| s.prepare(m).expect("prepare").resident_bytes())
+        .collect();
+    let max = *bytes.iter().max().unwrap();
+    max + bytes.iter().min().unwrap() / 2
+}
+
+fn assert_records_match_standalone(report: &ServeReport, ms: &[(String, Csr)], ctx: &str) {
+    for r in &report.records {
+        let reference = standalone(6, 1, &ms[r.matrix].1, &r.params);
+        assert_bits_eq(
+            &r.eigenvalues,
+            &reference,
+            &format!(
+                "{ctx}: query {} on {} via fleet {} (cold={})",
+                r.id, ms[r.matrix].0, r.fleet, r.cold
+            ),
+        );
+    }
+}
+
+#[test]
+fn replay_is_byte_identical_at_every_fleet_count() {
+    let ms = matrices();
+    for fleets in [1usize, 2, 4] {
+        let a = run_fleet(&ms, usize::MAX, fleets, Placement::Replicate, &spec(11));
+        let b = run_fleet(&ms, usize::MAX, fleets, Placement::Replicate, &spec(11));
+        assert_eq!(a.to_json(), b.to_json(), "fleets={fleets}: replay must be byte-identical");
+        assert_eq!(a.result_checksum, b.result_checksum, "fleets={fleets}");
+        assert_eq!(a.queries, 24, "fleets={fleets}: every arrival must be served");
+        assert_eq!(a.fleets, fleets);
+    }
+    // Same guarantee under eviction pressure (tight per-fleet budgets).
+    let budget = one_matrix_budget(&ms);
+    let a = run_fleet(&ms, budget, 2, Placement::Replicate, &spec(13));
+    let b = run_fleet(&ms, budget, 2, Placement::Replicate, &spec(13));
+    assert_eq!(a.to_json(), b.to_json(), "evicting replay must be byte-identical");
+}
+
+#[test]
+fn single_fleet_run_matches_the_serial_reference_byte_for_byte() {
+    let ms = matrices();
+    for budget in [usize::MAX, one_matrix_budget(&ms)] {
+        let event = run_fleet(&ms, budget, 1, Placement::Replicate, &spec(11));
+        let serial = {
+            let mut server = fleet_server(&ms, budget, 1, Placement::Replicate);
+            let arrivals = {
+                let r = server.registry();
+                spec(11).generate(|n| r.index_of(n)).expect("workload")
+            };
+            server.run_serial_reference(&arrivals).expect("serial run")
+        };
+        assert_eq!(
+            event.to_json(),
+            serial.to_json(),
+            "the event-driven loop at fleets=1 must reproduce the pre-0.6 serial \
+             server exactly (budget {budget})"
+        );
+        assert_eq!(event.result_checksum, serial.result_checksum);
+        assert_eq!(event.batches, serial.batches);
+    }
+}
+
+#[test]
+fn replicated_fleets_serve_bitwise_even_through_eviction() {
+    let ms = matrices();
+    // Each fleet's cache fits one prepared state; replicate routing sends
+    // both matrices to both fleets, so fleets ping-pong evict/re-prepare.
+    let report = run_fleet(&ms, one_matrix_budget(&ms), 2, Placement::Replicate, &spec(21));
+    assert_eq!(report.queries, 24);
+    assert!(
+        report.evictions > 0,
+        "pressure budget must actually evict (got {} evictions)",
+        report.evictions
+    );
+    assert!(report.records.iter().any(|r| r.fleet == 1), "both fleets must serve");
+    assert_records_match_standalone(&report, &ms, "replicate");
+    // Replica accounting: at least one matrix was prepared on both fleets.
+    assert_eq!(report.replicas.len(), ms.len());
+    assert!(
+        report.replicas.iter().any(|&r| r == 2),
+        "replicate placement must copy a matrix onto both fleets: {:?}",
+        report.replicas
+    );
+}
+
+#[test]
+fn pinned_fleets_serve_bitwise_and_respect_homes() {
+    let ms = matrices();
+    // Two fleets, ample budget: pin homes matrix `mi` on fleet `mi % 2`.
+    let report = run_fleet(&ms, usize::MAX, 2, Placement::Pin, &spec(31));
+    assert_eq!(report.queries, 24);
+    for r in &report.records {
+        assert_eq!(r.fleet, r.matrix % 2, "pin must route matrix {} to its home", r.matrix);
+    }
+    assert_records_match_standalone(&report, &ms, "pin");
+    assert!(
+        report.replicas.iter().all(|&r| r <= 1),
+        "pin must never replicate: {:?}",
+        report.replicas
+    );
+
+    // Pin on one fleet with a one-matrix budget: both matrices share the
+    // single home, so answers ride evicted-then-re-prepared state.
+    let tight = run_fleet(&ms, one_matrix_budget(&ms), 1, Placement::Pin, &spec(41));
+    assert!(tight.evictions > 0, "single-home ping-pong must evict");
+    assert_records_match_standalone(&tight, &ms, "pin+evict");
+}
+
+#[test]
+fn two_fleets_strictly_out_throughput_one_on_saturating_traffic() {
+    let ms = matrices();
+    let one = run_fleet(&ms, usize::MAX, 1, Placement::Replicate, &saturating_spec(7));
+    let two = run_fleet(&ms, usize::MAX, 2, Placement::Replicate, &saturating_spec(7));
+    assert_eq!(one.queries, 32);
+    assert_eq!(two.queries, 32);
+    assert!(
+        two.throughput_qps > one.throughput_qps,
+        "two fleets must beat one on a saturating backlog \
+         ({} q/s vs {} q/s)",
+        two.throughput_qps,
+        one.throughput_qps
+    );
+    assert!(two.sim_end_s < one.sim_end_s, "the backlog must drain sooner on two fleets");
+    assert!(
+        two.per_fleet.iter().all(|f| f.batches > 0),
+        "a saturating backlog must keep both fleets busy: {:?}",
+        two.per_fleet
+    );
+    // Per-query answers stay pinned to the standalone reference even at
+    // the throughput-optimal configuration.
+    assert_records_match_standalone(&two, &ms, "saturated");
+}
