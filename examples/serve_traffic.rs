@@ -15,16 +15,17 @@
 //! never accuracy).
 
 use topk_eigen::serve::{
-    CoalescerConfig, EigenServer, MatrixRegistry, RegistryConfig, ServeReport, WorkloadSpec,
+    CoalescerConfig, EigenServer, MatrixRegistry, RegistryConfig, ServeError, ServeReport,
+    WorkloadSpec,
 };
 use topk_eigen::sparse::suite;
-use topk_eigen::{Csr, PrecisionConfig, Solver, SolverError};
+use topk_eigen::{Csr, PrecisionConfig, Solver};
 
 fn run(
     matrices: &[(String, Csr)],
     budget_bytes: usize,
     workload: &WorkloadSpec,
-) -> Result<ServeReport, SolverError> {
+) -> Result<ServeReport, ServeError> {
     let solver = Solver::builder()
         .k(8)
         .precision(PrecisionConfig::FDF)
@@ -48,7 +49,7 @@ fn run(
     server.run(&arrivals)
 }
 
-fn main() -> Result<(), SolverError> {
+fn main() -> Result<(), ServeError> {
     // Three differently-shaped graphs share the service.
     let matrices: Vec<(String, Csr)> = ["WB-GO", "FL", "WB-TA"]
         .iter()

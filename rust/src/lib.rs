@@ -149,10 +149,10 @@
 //!
 //! ```no_run
 //! use topk_eigen::serve::{
-//!     CoalescerConfig, EigenServer, MatrixRegistry, RegistryConfig, WorkloadSpec,
+//!     CoalescerConfig, EigenServer, MatrixRegistry, RegistryConfig, ServeError, WorkloadSpec,
 //! };
-//! use topk_eigen::{Solver, SolverError};
-//! # fn main() -> Result<(), SolverError> {
+//! use topk_eigen::Solver;
+//! # fn main() -> Result<(), ServeError> {
 //! let matrices = [
 //!     ("WB-GO", topk_eigen::sparse::suite::find("WB-GO").unwrap().generate_csr(1.0, 42)),
 //!     ("FL", topk_eigen::sparse::suite::find("FL").unwrap().generate_csr(1.0, 42)),
@@ -176,6 +176,19 @@
 //!
 //! The CLI front-end is `topk-eigen serve` (`--json` for the
 //! machine-readable report).
+//!
+//! 0.7 adds **deterministic fault injection and recovery**: a seeded
+//! [`sim::FaultSpec`] schedules fleet crashes (cache wiped, in-flight
+//! batch killed, fleet down for a repair interval), transient dispatch
+//! failures, per-query deadlines and bounded per-matrix queues;
+//! [`serve::EigenServer::run_with_faults`] runs the same timeline under
+//! it with capped-exponential-backoff retries ([`sim::RetryPolicy`]),
+//! failover to surviving fleets, and bulk-first load shedding. Every
+//! query ends in a typed [`serve::QueryOutcome`]
+//! (`Served`/`Shed`/`Failed`); served answers stay bit-identical to
+//! standalone sessions, faulty runs replay **byte-identically** for a
+//! fixed `(workload seed, fault seed)` pair, and an empty spec is
+//! byte-inert (`rust/tests/chaos.rs`).
 //!
 //! ## System shape
 //!
@@ -265,6 +278,17 @@
 //! | serial `EigenServer::run` while-loop          | event-driven over [`sim::EventHeap`] (same reports at `fleets=1`) |
 //! | one server = one device group                 | [`serve::EigenServer::with_fleets`] + [`sim::Placement`] |
 //! | uniform matrix mixtures only                  | [`serve::WorkloadSpec::zipf`] (seeded hot/cold skew)    |
+//!
+//! 0.7 gives the serve layer typed errors and a fault model; serve call
+//! sites should update their error type and outcome handling:
+//!
+//! | pre-0.7                                       | 0.7+                                                    |
+//! |-----------------------------------------------|---------------------------------------------------------|
+//! | `server.run(…) -> Result<_, SolverError>`     | `Result<ServeReport, `[`serve::ServeError`]`>`          |
+//! | serve misconfig as `SolverError::InvalidConfig` | [`serve::ServeError::Config`]` { field, message }`    |
+//! | fault-free runs only                          | [`serve::EigenServer::run_with_faults`] + [`sim::FaultSpec`] / [`sim::RetryPolicy`] |
+//! | every `QueryRecord` was served                | check [`serve::QueryRecord::outcome`]` == QueryOutcome::Served` (+ `retries`) |
+//! | `report.queries` = record count               | served only; `arrivals = queries + shed + failed`       |
 //!
 //! The low-level types (`SolverConfig`, `TopKSolver`, `BaselineConfig`)
 //! remain public under [`coordinator`] / [`baseline`] for harnesses that

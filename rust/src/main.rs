@@ -28,9 +28,10 @@ use topk_eigen::coordinator::{ExecPolicy, ReorthMode, TopologyKind};
 use topk_eigen::metrics;
 use topk_eigen::runtime::Manifest;
 use topk_eigen::serve::{
-    CoalescerConfig, EigenServer, MatrixMix, MatrixRegistry, RegistryConfig, WorkloadSpec,
+    CoalescerConfig, EigenServer, MatrixMix, MatrixRegistry, RegistryConfig, ServeError,
+    WorkloadSpec,
 };
-use topk_eigen::sim::Placement;
+use topk_eigen::sim::{CrashSpec, FaultSpec, Placement, RetryPolicy};
 use topk_eigen::sparse::{mmio, suite, Csr};
 use topk_eigen::{
     Backend, Eigensolve, PrecisionConfig, QueryParams, SolveReport, Solver, SolverError,
@@ -59,6 +60,19 @@ impl From<SolverError> for CliError {
             | SolverError::BackendUnavailable { .. }
             | SolverError::ArtifactMismatch { .. } => CliError::Usage(e.to_string()),
             other => CliError::Run(other.to_string()),
+        }
+    }
+}
+
+impl From<ServeError> for CliError {
+    fn from(e: ServeError) -> Self {
+        match e {
+            // Serve-layer configuration and fault-spec problems are the
+            // user's invocation — exit 2, like every other bad flag value.
+            ServeError::Config { .. } | ServeError::FaultSpec(_) => {
+                CliError::Usage(e.to_string())
+            }
+            ServeError::Solver(inner) => CliError::from(inner),
         }
     }
 }
@@ -140,6 +154,29 @@ fn print_usage() {
          \x20                     any ID:WEIGHT weights; 0 = uniform)\n\
          \x20 --json              print the machine-readable report to stdout\n\
          \x20 --report <f.json>   also write the report to a file\n\
+         \n\
+         SERVE FAULT OPTIONS (deterministic injection; all off by default):\n\
+         \x20 --fault-seed <n>    fault-stream seed (default 0); a fixed\n\
+         \x20                     (workload, fault) seed pair replays\n\
+         \x20                     bit-identically\n\
+         \x20 --crash <list>      explicit crashes T@F[:R], e.g.\n\
+         \x20                     0.05@0,0.2@1:0.1 — fleet F goes down at\n\
+         \x20                     simulated second T for R seconds (R\n\
+         \x20                     defaults to --repair-s)\n\
+         \x20 --crash-rate <r>    mean random crashes per simulated second\n\
+         \x20                     across the fleets (default 0, none)\n\
+         \x20 --repair-s <s>      repair interval for random/defaulted\n\
+         \x20                     crashes (default 0.05)\n\
+         \x20 --fail-prob <p>     per-dispatch transient failure probability\n\
+         \x20                     (default 0)\n\
+         \x20 --retry-max <n>     attempts per batch before queries fail\n\
+         \x20                     (default 3)\n\
+         \x20 --retry-backoff <s> base retry backoff, doubled per attempt\n\
+         \x20                     (default 0.01)\n\
+         \x20 --retry-cap <s>     backoff ceiling (default 0.2)\n\
+         \x20 --deadline <s>      shed queries older than this at dispatch\n\
+         \x20 --queue-depth <n>   per-matrix queue bound; overflow sheds\n\
+         \x20                     bulk first, interactive protected\n\
          \n\
          SOLVE OPTIONS:\n\
          \x20 --k <n>             eigencomponents (default 8; a maximum when\n\
@@ -512,7 +549,49 @@ const SERVE_FLAGS: &[&str] = &[
     "device-mem-mb",
     "topology",
     "exec",
+    "fault-seed",
+    "crash",
+    "crash-rate",
+    "repair-s",
+    "fail-prob",
+    "retry-max",
+    "retry-backoff",
+    "retry-cap",
+    "deadline",
+    "queue-depth",
 ];
+
+/// Parse the `--crash` mini-format: a comma list of `T@F[:R]` entries —
+/// fleet `F` crashes at simulated second `T` and stays down for `R`
+/// seconds (defaulting to `--repair-s`). Range/finiteness checks live in
+/// `FaultSpec::validate`; this only turns the text into numbers.
+fn parse_crash_list(raw: &str, default_repair_s: f64) -> Result<Vec<CrashSpec>, CliError> {
+    let mut out = Vec::new();
+    for part in raw.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let bad = || {
+            CliError::Usage(format!(
+                "bad entry '{part}' in --crash (expected T@F[:R], e.g. 0.05@0 or 0.2@1:0.1)"
+            ))
+        };
+        let (at, rest) = part.split_once('@').ok_or_else(bad)?;
+        let at_s: f64 = at.trim().parse().map_err(|_| bad())?;
+        let (fleet_str, repair_str) = match rest.split_once(':') {
+            Some((f, r)) => (f, Some(r)),
+            None => (rest, None),
+        };
+        let fleet: usize = fleet_str.trim().parse().map_err(|_| bad())?;
+        let repair_s = match repair_str {
+            Some(r) => r.trim().parse().map_err(|_| bad())?,
+            None => default_repair_s,
+        };
+        out.push(CrashSpec { at_s, fleet, repair_s });
+    }
+    Ok(out)
+}
 
 /// `topk-eigen serve`: replay a seeded open-loop query stream over a
 /// weighted mixture of suite matrices through the serving runtime —
@@ -658,6 +737,38 @@ fn cmd_serve(args: &cli::Args) -> Result<i32, CliError> {
         )));
     }
 
+    // ---- Fault-injection knobs (all off by default) -----------------------
+    let fault_seed: u64 = args.try_get_or("fault-seed", 0u64)?;
+    let crash_rate: f64 = args.try_get_or("crash-rate", 0.0f64)?;
+    let repair_s: f64 = args.try_get_or("repair-s", 0.05f64)?;
+    let fail_prob: f64 = args.try_get_or("fail-prob", 0.0f64)?;
+    let retry_max: u32 = args.try_get_or("retry-max", 3u32)?;
+    let retry_backoff: f64 = args.try_get_or("retry-backoff", 0.01f64)?;
+    let retry_cap: f64 = args.try_get_or("retry-cap", 0.2f64)?;
+    let deadline_s: Option<f64> = args.try_get("deadline")?;
+    let max_queue_depth: Option<usize> = args.try_get("queue-depth")?;
+    let crashes = match args.get("crash") {
+        Some(raw) => parse_crash_list(raw, repair_s)?,
+        None => Vec::new(),
+    };
+    let fault_spec = FaultSpec {
+        seed: fault_seed,
+        crashes,
+        crash_rate,
+        repair_s,
+        fail_prob,
+        retry: RetryPolicy {
+            max_attempts: retry_max,
+            base_backoff_s: retry_backoff,
+            cap_s: retry_cap,
+        },
+        deadline_s,
+        max_queue_depth,
+    };
+    // Validate before the (expensive) matrix generation so a bad fault
+    // flag fails fast with exit 2, like any other malformed value.
+    fault_spec.validate(fleets).map_err(ServeError::from)?;
+
     let json_only = args.has("json");
 
     // ---- Build the stack --------------------------------------------------
@@ -729,7 +840,7 @@ fn cmd_serve(args: &cli::Args) -> Result<i32, CliError> {
     };
 
     let wall = std::time::Instant::now();
-    let report = server.run(&arrivals)?;
+    let report = server.run_with_faults(&arrivals, &fault_spec)?;
     let wall_s = wall.elapsed().as_secs_f64();
 
     if json_only {

@@ -106,6 +106,19 @@ impl LatencySummary {
     }
 }
 
+/// Guarded ratio for report arithmetic: `num / den`, or `0.0` when the
+/// denominator is not positive. Every rate in the serve report
+/// (throughput, busy fraction, utilization, mean batch size) funnels
+/// through this so an empty or zero-length run reports clean zeros
+/// instead of NaN/∞ — which would also poison the byte-stable JSON.
+pub fn safe_rate(num: f64, den: f64) -> f64 {
+    if den > 0.0 {
+        num / den
+    } else {
+        0.0
+    }
+}
+
 /// `‖M v − λ v‖₂` for one eigenpair.
 pub fn l2_residual(m: &Csr, lambda: f64, v: &[f64]) -> f64 {
     let mut mv = vec![0.0; m.rows];
@@ -196,6 +209,14 @@ mod tests {
         assert!((s.mean - 2.5).abs() < 1e-15);
         assert!(s.p50 <= s.p95 && s.p95 <= s.p99 && s.p99 <= s.max);
         assert_eq!(LatencySummary::from_samples(&[]), LatencySummary::default());
+    }
+
+    #[test]
+    fn safe_rate_guards_degenerate_denominators() {
+        assert_eq!(safe_rate(6.0, 3.0), 2.0);
+        assert_eq!(safe_rate(1.0, 0.0), 0.0);
+        assert_eq!(safe_rate(0.0, 0.0), 0.0);
+        assert_eq!(safe_rate(1.0, -2.0), 0.0);
     }
 
     #[test]

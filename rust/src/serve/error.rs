@@ -1,0 +1,106 @@
+//! Typed errors of the serving layer.
+//!
+//! Before 0.7 the serve path pressed [`SolverError`] variants into
+//! service for its own misconfigurations (a bad fleet count surfaced as
+//! `InvalidConfig`, which reads as a *solver* problem). [`ServeError`]
+//! gives the layer its own vocabulary — server construction problems,
+//! fault-spec validation failures, and a transparent wrapper for real
+//! solver errors bubbling up from a dispatched batch — so the CLI can
+//! map every serve-side usage mistake to exit code 2 without guessing
+//! from message text.
+
+use std::fmt;
+
+use crate::api::SolverError;
+use crate::sim::FaultError;
+
+/// An error raised by the serving runtime ([`super::EigenServer`]).
+#[derive(Debug)]
+pub enum ServeError {
+    /// The server itself was misconfigured (fleet count of zero,
+    /// fleet registries that disagree on the matrix set, an empty
+    /// registry set, …). Always a caller bug: fix the configuration.
+    Config {
+        /// The configuration knob at fault (e.g. `fleets`).
+        field: &'static str,
+        /// Human-readable description of the violation.
+        message: String,
+    },
+    /// A [`crate::sim::FaultSpec`] failed validation (probability out of
+    /// `[0, 1]`, crash aimed at a fleet that does not exist, …).
+    FaultSpec(FaultError),
+    /// A real solver error from a dispatched batch (singular operator,
+    /// non-finite data, …) — not a serve-layer problem.
+    Solver(SolverError),
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::Config { field, message } => {
+                write!(f, "invalid serve configuration for `{field}`: {message}")
+            }
+            ServeError::FaultSpec(e) => write!(f, "{e}"),
+            ServeError::Solver(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ServeError::Config { .. } => None,
+            ServeError::FaultSpec(e) => Some(e),
+            ServeError::Solver(e) => Some(e),
+        }
+    }
+}
+
+impl From<SolverError> for ServeError {
+    fn from(e: SolverError) -> Self {
+        ServeError::Solver(e)
+    }
+}
+
+impl From<FaultError> for ServeError {
+    fn from(e: FaultError) -> Self {
+        ServeError::FaultSpec(e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_errors_name_the_field() {
+        let e = ServeError::Config {
+            field: "fleets",
+            message: "a server needs at least one fleet".into(),
+        };
+        let s = e.to_string();
+        assert!(s.contains("`fleets`"), "{s}");
+        assert!(s.contains("at least one fleet"), "{s}");
+    }
+
+    #[test]
+    fn fault_spec_errors_pass_through() {
+        let e = ServeError::from(FaultError {
+            field: "fail_prob",
+            message: "must lie in [0, 1] (got 1.5)".into(),
+        });
+        let s = e.to_string();
+        assert!(s.contains("fail_prob"), "{s}");
+        assert!(std::error::Error::source(&e).is_some());
+    }
+
+    #[test]
+    fn solver_errors_pass_through() {
+        let e = ServeError::from(SolverError::InvalidConfig {
+            field: "k",
+            message: "must be positive".into(),
+        });
+        assert!(e.to_string().contains("`k`"), "{e}");
+        assert!(std::error::Error::source(&e).is_some());
+    }
+}

@@ -56,15 +56,42 @@
 //! queries whose matrix was evicted and re-prepared in between and
 //! queries served from a replica on a different fleet.
 //!
+//! ## Faults & graceful degradation
+//!
+//! 0.7 adds a deterministic fault-injection and recovery layer
+//! ([`server::EigenServer::run_with_faults`]): a seeded
+//! [`crate::sim::FaultSpec`] schedules fleet crashes (the victim is down
+//! for a repair interval, its prepared-state cache wiped, any in-flight
+//! batch killed), transient dispatch failures, per-query deadlines, and
+//! a bounded per-matrix queue. Recovery is policy-driven and wallclock-
+//! free: killed/failed batches retry after a capped exponential backoff
+//! ([`crate::sim::RetryPolicy`]), re-dispatch prefers a surviving fleet
+//! when the routed one is down, and overloaded queues shed bulk traffic
+//! before interactive. Every query ends in a typed
+//! [`server::QueryOutcome`] (`Served` / `Shed` / `Failed`), served
+//! answers stay bit-identical to standalone solves even through a
+//! crash-rebuilt cache, and a faulty run replays **byte-identically**
+//! for a fixed `(workload seed, fault seed)` pair
+//! (`rust/tests/chaos.rs`). An empty spec injects nothing and reproduces
+//! the fault-free report byte-for-byte. Serve-layer misconfigurations
+//! surface as [`error::ServeError`] (mapped to exit 2 by the CLI) rather
+//! than borrowed solver variants.
+//!
 //! The CLI front-end is `topk-eigen serve` (see the README's
-//! "Serving traffic" section for the workload mini-format).
+//! "Serving traffic" section for the workload mini-format and the
+//! fault-injection flags).
 
+pub mod error;
 pub mod registry;
 pub mod scheduler;
 pub mod server;
 pub mod workload;
 
+pub use error::ServeError;
 pub use registry::{MatrixRegistry, PrepareEvent, RegistryConfig, RegistryStats};
 pub use scheduler::{Batch, BatchCoalescer, CoalescerConfig, Priority, QueryArrival};
-pub use server::{EigenServer, FleetServeLine, QueryRecord, ServeReport};
+pub use server::{
+    EigenServer, FaultSummary, FleetServeLine, QueryOutcome, QueryRecord, ServeReport,
+    ShedReason,
+};
 pub use workload::{MatrixMix, WorkloadSpec};

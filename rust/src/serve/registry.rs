@@ -216,6 +216,23 @@ impl<'m> MatrixRegistry<'m> {
         Ok((outs, event))
     }
 
+    /// Drop *every* resident prepared state — the cache loss of a fleet
+    /// crash (0.7). Returns how many entries were evicted (each counted
+    /// in [`RegistryStats::evictions`]). Registration, names, and the
+    /// recorded residency sizes survive; the next query per matrix pays
+    /// a cold re-preparation and answers bit-identically, same as an LRU
+    /// eviction.
+    pub fn evict_all(&mut self) -> usize {
+        let mut evicted = 0usize;
+        for e in &mut self.entries {
+            if e.prepared.take().is_some() {
+                evicted += 1;
+            }
+        }
+        self.stats.evictions += evicted;
+        evicted
+    }
+
     /// Consume the registry, returning its solver (test/diagnostic use).
     pub fn into_solver(self) -> Solver {
         self.solver
@@ -279,6 +296,25 @@ mod tests {
         assert!(!reg.is_resident(ib), "LRU entry evicted first");
         assert!(reg.is_resident(ia) && reg.is_resident(ic));
         assert!(reg.resident_bytes() <= budget);
+    }
+
+    #[test]
+    fn evict_all_wipes_the_cache_and_counts() {
+        let a = suite::find("WB-GO").unwrap().generate_csr(0.3, 1);
+        let b = suite::find("FL").unwrap().generate_csr(0.3, 1);
+        let mut reg = MatrixRegistry::new(solver(), RegistryConfig::default());
+        let (ia, ib) = (reg.register("a", &a), reg.register("b", &b));
+        reg.ensure_prepared(ia).unwrap();
+        reg.ensure_prepared(ib).unwrap();
+        assert_eq!(reg.evict_all(), 2);
+        assert!(!reg.is_resident(ia) && !reg.is_resident(ib));
+        assert_eq!(reg.resident_bytes(), 0);
+        assert_eq!(reg.stats().evictions, 2);
+        assert_eq!(reg.evict_all(), 0, "second wipe finds nothing resident");
+        assert_eq!(reg.stats().evictions, 2);
+        // Coming back is a cold prepare, like any eviction.
+        let e = reg.ensure_prepared(ia).unwrap();
+        assert!(e.cold && e.sim_prepare_s > 0.0);
     }
 
     #[test]

@@ -135,6 +135,24 @@ impl BatchCoalescer {
         self.pending
     }
 
+    /// Queries currently queued for `matrix` (0 for an unknown index) —
+    /// the quantity a bounded-queue fault spec sheds against.
+    pub fn depth(&self, matrix: usize) -> usize {
+        self.queues.get(matrix).map_or(0, VecDeque::len)
+    }
+
+    /// Remove and return the **newest** [`Priority::Bulk`] query queued
+    /// for `matrix`, if any — the load-shedding victim order under a
+    /// bounded queue: bulk sheds before interactive, newest first (it has
+    /// waited least). Returns `None` when the queue holds no bulk
+    /// queries; interactive entries are never touched by this path.
+    pub fn shed_newest_bulk(&mut self, matrix: usize) -> Option<QueryArrival> {
+        let q = self.queues.get_mut(matrix)?;
+        let pos = q.iter().rposition(|e| e.priority == Priority::Bulk)?;
+        self.pending -= 1;
+        q.remove(pos)
+    }
+
     /// A queue's flush deadline: the **minimum** over every queued entry,
     /// not just the head's — a later-arriving interactive query can carry
     /// an earlier deadline than a bulk query ahead of it, and must still
@@ -403,6 +421,28 @@ mod tests {
         c.push(q(2, 0, 2.0, Priority::Interactive));
         assert!(c.flush_any_where(|mi| mi != 0).is_none());
         assert_eq!(c.flush_any_where(|_| true).map(|b| b.matrix), Some(0));
+    }
+
+    #[test]
+    fn shed_newest_bulk_spares_interactive_and_older_bulk() {
+        let cfg = CoalescerConfig { max_batch: 8, max_wait_s: 0.1, bulk_wait_factor: 4.0 };
+        let mut c = BatchCoalescer::new(cfg, 2);
+        c.push(q(0, 0, 0.00, Priority::Bulk));
+        c.push(q(1, 0, 0.01, Priority::Interactive));
+        c.push(q(2, 0, 0.02, Priority::Bulk));
+        c.push(q(3, 1, 0.03, Priority::Bulk));
+        assert_eq!(c.depth(0), 3);
+        assert_eq!(c.depth(1), 1);
+        assert_eq!(c.depth(9), 0, "unknown matrix has depth 0");
+        // Newest bulk on matrix 0 is id 2, then id 0; id 1 (interactive)
+        // survives both sheds. Matrix 1's bulk query is untouched.
+        assert_eq!(c.shed_newest_bulk(0).map(|x| x.id), Some(2));
+        assert_eq!(c.shed_newest_bulk(0).map(|x| x.id), Some(0));
+        assert_eq!(c.shed_newest_bulk(0).map(|x| x.id), None);
+        assert_eq!(c.depth(0), 1);
+        assert_eq!(c.pending(), 2);
+        let b = c.ready_batch(1.0).expect("interactive query still queued");
+        assert_eq!(b.queries[0].id, 1);
     }
 
     #[test]

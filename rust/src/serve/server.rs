@@ -24,19 +24,86 @@
 //! has served enough traffic (`least-loaded`). While every fleet is
 //! busy, newly arrived queries queue in the coalescer; their wait shows
 //! up as queue latency (open-loop backpressure, not admission refusal).
+//!
+//! Faults (0.7): [`EigenServer::run_with_faults`] replays the same
+//! timeline under a seeded [`FaultSpec`] — fleet crashes (`FleetDown` /
+//! `FleetUp` events bracketing a repair window, the victim's prepared
+//! cache wiped and any in-flight batch killed), transient dispatch
+//! failures drawn from the spec's RNG stream, per-query deadlines, and a
+//! bounded per-matrix queue. Recovery is deterministic: killed and
+//! failed batches re-dispatch after a capped exponential backoff
+//! (`RetryDue` events), preferring a surviving fleet when the routed one
+//! is down ([`FleetPool::choose_failover`]), up to
+//! `retry.max_attempts` total attempts. Queries past their deadline or
+//! displaced from a full queue are **shed** with a typed
+//! [`QueryOutcome`] — bulk sheds before interactive under overload —
+//! and every query ends in exactly one of served / shed / failed, so
+//! `arrivals = served + shed + failed` always. Every *served* query is
+//! still bit-identical to a standalone solve, even through a
+//! crash-rebuilt cache, and an empty spec reproduces the fault-free
+//! report byte-for-byte.
 
 use std::cmp::Ordering;
 
+use super::error::ServeError;
 use super::registry::MatrixRegistry;
 use super::scheduler::{BatchCoalescer, CoalescerConfig, Priority, QueryArrival};
-use crate::bench_util::{JsonObj, Table};
-use crate::metrics::LatencySummary;
-use crate::sim::{EventHeap, FleetPool, Placement, ServeEvent};
-use crate::{QueryParams, SolverError};
+use crate::bench_util::{json_num, JsonObj, Table};
+use crate::metrics::{safe_rate, LatencySummary};
+use crate::sim::{EventHeap, FaultPlan, FaultSpec, FleetPool, Placement, ServeEvent};
+use crate::QueryParams;
 
 /// Queries a matrix must have served before [`Placement::LeastLoaded`]
 /// counts it as *hot* and lets it replicate onto other fleets.
 const HOT_QUERIES: usize = 8;
+
+/// Why a query was load-shed instead of served.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShedReason {
+    /// The query sat past the fault spec's per-query deadline before any
+    /// fleet could take its batch.
+    DeadlineExceeded,
+    /// The bounded per-matrix admission queue was full at arrival (bulk
+    /// queries shed first; an arriving interactive query displaces the
+    /// newest queued bulk query instead of shedding itself).
+    QueueFull,
+}
+
+impl ShedReason {
+    /// Stable lowercase name, as printed in reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ShedReason::DeadlineExceeded => "deadline",
+            ShedReason::QueueFull => "queue-full",
+        }
+    }
+}
+
+/// How one query's story ended. Fault-free runs serve everything; under
+/// a [`FaultSpec`] each query is exactly one of these, and the report's
+/// `arrivals = served + shed + failed` invariant holds by construction.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum QueryOutcome {
+    /// Answered; `eigenvalues` carries the (bit-exact) result.
+    #[default]
+    Served,
+    /// Load-shed without an answer, for the given reason.
+    Shed(ShedReason),
+    /// Every dispatch attempt (`retry.max_attempts` of them) was killed
+    /// by a crash or failed transiently.
+    Failed,
+}
+
+impl QueryOutcome {
+    /// Stable lowercase name, as printed in reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            QueryOutcome::Served => "served",
+            QueryOutcome::Shed(_) => "shed",
+            QueryOutcome::Failed => "failed",
+        }
+    }
+}
 
 /// Per-query ledger entry of a serve run. All times are simulated
 /// seconds; `eigenvalues` carries the lane's full answer so replay
@@ -53,9 +120,11 @@ pub struct QueryRecord {
     pub params: QueryParams,
     /// Arrival on the simulated clock.
     pub arrival_s: f64,
-    /// When its batch started executing.
+    /// When its batch started executing (shed/failed: when the outcome
+    /// was decided).
     pub start_s: f64,
-    /// When its batch completed (= this query's completion).
+    /// When its batch completed (= this query's completion; shed/failed:
+    /// same instant as `start_s`).
     pub done_s: f64,
     /// Admission-queue wait: `start_s − arrival_s`.
     pub queue_s: f64,
@@ -64,18 +133,26 @@ pub struct QueryRecord {
     pub prepare_s: f64,
     /// This lane's simulated solve time.
     pub solve_s: f64,
-    /// Size of the batch it rode in.
+    /// Size of the batch it rode in (0 when never served).
     pub batch_size: usize,
     /// True when the batch had to (re-)prepare the matrix.
     pub cold: bool,
-    /// The fleet the batch ran on (always 0 on a single-fleet server).
+    /// The fleet the batch ran on (always 0 on a single-fleet server;
+    /// meaningless — 0 — for shed/failed queries).
     pub fleet: usize,
-    /// The lane's eigenvalues (bit-identical to a standalone solve).
+    /// How the query's story ended (always `Served` fault-free).
+    pub outcome: QueryOutcome,
+    /// Dispatch retries the query's batch went through before this
+    /// outcome (0 = served/decided on the first attempt).
+    pub retries: u32,
+    /// The lane's eigenvalues (bit-identical to a standalone solve;
+    /// empty for shed/failed queries).
     pub eigenvalues: Vec<f64>,
 }
 
 impl QueryRecord {
-    /// End-to-end latency: completion minus arrival.
+    /// End-to-end latency: completion (or shed/fail instant) minus
+    /// arrival.
     pub fn latency_s(&self) -> f64 {
         self.done_s - self.arrival_s
     }
@@ -96,7 +173,7 @@ pub struct MatrixServeLine {
 pub struct FleetServeLine {
     /// Fleet id.
     pub fleet: usize,
-    /// Batches this fleet executed.
+    /// Batches this fleet executed (killed batches excluded).
     pub batches: usize,
     /// Simulated seconds this fleet spent solving.
     pub solve_s: f64,
@@ -105,27 +182,65 @@ pub struct FleetServeLine {
     /// Fraction of the run this fleet was occupied:
     /// `(solve + prepare) / sim_end`.
     pub utilization: f64,
+    /// Simulated seconds this fleet spent crashed (clipped to the run).
+    pub down_s: f64,
+    /// Crashes that struck this fleet.
+    pub crashes: usize,
+}
+
+/// Fault/recovery rollup of a faulty run ([`ServeReport::faults`];
+/// `None` — and absent from the JSON — when the fault spec was empty).
+#[derive(Clone, Debug, Default)]
+pub struct FaultSummary {
+    /// Crash events that struck (any fleet).
+    pub crashes: usize,
+    /// In-flight batches killed by a crash.
+    pub killed_batches: usize,
+    /// Batch dispatches that failed transiently (seeded draws).
+    pub dispatch_failures: usize,
+    /// Batch re-dispatches performed (attempts beyond each batch's
+    /// first).
+    pub retries: usize,
+    /// Dispatches rerouted to a surviving fleet because the placement's
+    /// routed fleet was down.
+    pub failovers: usize,
+    /// Queries shed for [`ShedReason::DeadlineExceeded`].
+    pub shed_deadline: usize,
+    /// Queries shed for [`ShedReason::QueueFull`].
+    pub shed_queue_full: usize,
+    /// Queries that exhausted every retry ([`QueryOutcome::Failed`]).
+    pub failed: usize,
+    /// Per-fleet downtime, fleet-id order, clipped to `[0, sim_end]`.
+    pub downtime_s: Vec<f64>,
+    /// Sum of `downtime_s`.
+    pub downtime_s_total: f64,
 }
 
 /// Outcome of one serve run: throughput, latency percentiles, batching
 /// and cache behavior, plus the full per-query ledger (`records`, not
 /// serialized). [`ServeReport::to_json`] is byte-identical across
-/// replays of the same seeded workload.
+/// replays of the same seeded workload (and fault spec).
 #[derive(Clone, Debug)]
 pub struct ServeReport {
-    /// Queries completed.
+    /// Queries **served** (= arrivals, fault-free).
     pub queries: usize,
-    /// Batches executed.
+    /// Queries that arrived (served + shed + failed).
+    pub arrivals: usize,
+    /// Queries load-shed (deadline or full queue).
+    pub shed: usize,
+    /// Queries that exhausted every retry.
+    pub failed: usize,
+    /// Batches executed (killed batches excluded).
     pub batches: usize,
-    /// Mean queries per batch.
+    /// Mean served queries per batch.
     pub mean_batch_size: f64,
-    /// Simulated time of the last completion.
+    /// Simulated time of the last completion (or shed/fail decision).
     pub sim_end_s: f64,
-    /// Completed queries per simulated second.
+    /// Served queries per simulated second.
     pub throughput_qps: f64,
-    /// End-to-end latency summary (arrival → completion).
+    /// End-to-end latency summary (arrival → completion, served only).
     pub latency: LatencySummary,
-    /// Admission-queue wait summary.
+    /// Admission-queue wait summary (served only).
     pub queue: LatencySummary,
     /// Total simulated seconds the fleets spent solving.
     pub solve_s_total: f64,
@@ -153,6 +268,8 @@ pub struct ServeReport {
     pub replicas: Vec<usize>,
     /// Per-matrix rollups, registry order.
     pub per_matrix: Vec<MatrixServeLine>,
+    /// Fault/recovery rollup; `None` when the fault spec was empty.
+    pub faults: Option<FaultSummary>,
     /// Order-sensitive fold of every served eigenvalue's bits — two runs
     /// produced identical eigenpairs iff the checksums match.
     pub result_checksum: u64,
@@ -175,8 +292,10 @@ impl ServeReport {
     /// numbers): byte-identical across replays of one seeded workload.
     /// The multi-fleet fields (`fleets`, `placement`, `per_fleet`,
     /// `replicas`) are emitted only when the server ran more than one
-    /// fleet, so single-fleet reports are byte-compatible with pre-0.6
-    /// consumers.
+    /// fleet, and the fault fields (`arrivals`, `shed`, `failed`,
+    /// `faults`) only when the fault spec was active — so single-fleet
+    /// fault-free reports stay byte-compatible with pre-0.6 consumers
+    /// and every fault-free report with pre-0.7 ones.
     pub fn to_json(&self) -> String {
         let per_matrix: Vec<String> = self
             .per_matrix
@@ -208,6 +327,27 @@ impl ServeReport {
             .int("evictions", self.evictions)
             .int("hits", self.hits)
             .int("resident_bytes_end", self.resident_bytes_end);
+        if let Some(fs) = &self.faults {
+            let downtime: Vec<String> =
+                fs.downtime_s.iter().map(|d| json_num(*d)).collect();
+            let fj = JsonObj::new()
+                .int("crashes", fs.crashes)
+                .int("killed_batches", fs.killed_batches)
+                .int("dispatch_failures", fs.dispatch_failures)
+                .int("retries", fs.retries)
+                .int("failovers", fs.failovers)
+                .int("shed_deadline", fs.shed_deadline)
+                .int("shed_queue_full", fs.shed_queue_full)
+                .int("failed", fs.failed)
+                .raw("downtime_s", format!("[{}]", downtime.join(", ")))
+                .num("downtime_s_total", fs.downtime_s_total)
+                .finish();
+            j = j
+                .int("arrivals", self.arrivals)
+                .int("shed", self.shed)
+                .int("failed", self.failed)
+                .raw("faults", fj);
+        }
         if self.fleets > 1 {
             let per_fleet: Vec<String> = self
                 .per_fleet
@@ -296,7 +436,133 @@ impl ServeReport {
             self.hits,
             self.evictions
         );
+        if let Some(fs) = &self.faults {
+            println!(
+                "faults   {} crashes ({} batches killed, {:.4}s down) | {} transient failures, {} retries, {} failovers | served {} / shed {} (deadline {}, queue-full {}) / failed {} of {} arrivals",
+                fs.crashes,
+                fs.killed_batches,
+                fs.downtime_s_total,
+                fs.dispatch_failures,
+                fs.retries,
+                fs.failovers,
+                self.queries,
+                self.shed,
+                fs.shed_deadline,
+                fs.shed_queue_full,
+                self.failed,
+                self.arrivals
+            );
+        }
     }
+}
+
+/// A batch the server has handed to a fleet and not yet seen complete —
+/// what a crash at that fleet kills.
+struct InFlight {
+    matrix: usize,
+    queries: Vec<QueryArrival>,
+    /// Attempt number this dispatch carried (1 = first).
+    attempt: u32,
+    start: f64,
+    done: f64,
+}
+
+/// A killed or transiently failed batch waiting out its backoff.
+struct RetryBatch {
+    matrix: usize,
+    queries: Vec<QueryArrival>,
+    /// Attempt number the next dispatch will carry.
+    attempt: u32,
+}
+
+#[derive(Default)]
+struct FaultCounters {
+    crashes: usize,
+    killed_batches: usize,
+    dispatch_failures: usize,
+    retries: usize,
+    failovers: usize,
+}
+
+/// Everything one run mutates, separated from the server so helper
+/// methods can borrow the registries (`&mut self`) and the run state
+/// independently.
+struct RunState {
+    coal: BatchCoalescer,
+    pool: FleetPool,
+    heap: EventHeap<ServeEvent>,
+    plan: FaultPlan,
+    /// Queries served per matrix so far — the LeastLoaded hot signal.
+    served: Vec<usize>,
+    /// Arrival events applied (served, shed, or admitted alike) — the
+    /// drain trigger.
+    arrived: usize,
+    records: Vec<QueryRecord>,
+    batches: usize,
+    solve_s_total: f64,
+    prepare_s_total: f64,
+    /// Per-fleet in-flight batch, if any.
+    in_flight: Vec<Option<InFlight>>,
+    /// Retry table; `RetryDue { retry }` events index into it. Entries
+    /// are taken when re-dispatched.
+    retries: Vec<Option<RetryBatch>>,
+    /// Retry ids whose backoff has elapsed, awaiting an idle fleet.
+    retry_ready: Vec<usize>,
+    counters: FaultCounters,
+}
+
+/// Ledger row for a query that was never served (shed or failed) at
+/// simulated instant `now`.
+fn unserved_record(
+    q: &QueryArrival,
+    now: f64,
+    outcome: QueryOutcome,
+    retries: u32,
+) -> QueryRecord {
+    QueryRecord {
+        id: q.id,
+        matrix: q.matrix,
+        priority: q.priority,
+        params: q.params,
+        arrival_s: q.arrival_s,
+        start_s: now,
+        done_s: now,
+        queue_s: now - q.arrival_s,
+        prepare_s: 0.0,
+        solve_s: 0.0,
+        batch_size: 0,
+        cold: false,
+        fleet: 0,
+        outcome,
+        retries,
+        eigenvalues: Vec::new(),
+    }
+}
+
+/// Route a killed/failed batch onward: schedule a backed-off retry, or —
+/// when its attempts are exhausted — mark every query `Failed`.
+fn retry_or_fail(
+    st: &mut RunState,
+    now: f64,
+    matrix: usize,
+    queries: Vec<QueryArrival>,
+    attempts_done: u32,
+) {
+    if attempts_done >= st.plan.retry.max_attempts {
+        for q in &queries {
+            st.records.push(unserved_record(
+                q,
+                now,
+                QueryOutcome::Failed,
+                attempts_done.saturating_sub(1),
+            ));
+        }
+        return;
+    }
+    let delay = st.plan.retry.backoff(attempts_done);
+    let rid = st.retries.len();
+    st.retries.push(Some(RetryBatch { matrix, queries, attempt: attempts_done + 1 }));
+    st.heap.push(now + delay, ServeEvent::RetryDue { retry: rid });
 }
 
 /// The serving front-end: owns one [`MatrixRegistry`] per fleet and
@@ -321,19 +587,27 @@ impl<'m> EigenServer<'m> {
     /// Multi-fleet server: one registry per fleet (each its own device
     /// group and prepared-state cache), a shared coalescer, and the
     /// placement policy that routes matrices to fleets. Every registry
-    /// must expose the same matrices in the same order — each fleet must
-    /// be able to serve any matrix the policy routes to it.
+    /// must expose the same (non-empty) matrices in the same order —
+    /// each fleet must be able to serve any matrix the policy routes to
+    /// it.
     pub fn with_fleets(
         registries: Vec<MatrixRegistry<'m>>,
         coalescer: CoalescerConfig,
         placement: Placement,
-    ) -> Result<Self, SolverError> {
+    ) -> Result<Self, ServeError> {
         let invalid = |message: String| {
-            Err(SolverError::InvalidConfig { field: "fleets", message })
+            Err(ServeError::Config { field: "fleets", message })
         };
         let Some(first) = registries.first() else {
             return invalid("a server needs at least one fleet".into());
         };
+        if first.is_empty() {
+            return Err(ServeError::Config {
+                field: "registry",
+                message: "fleet 0 registers no matrices — a server needs at least one"
+                    .into(),
+            });
+        }
         for (f, reg) in registries.iter().enumerate().skip(1) {
             if reg.len() != first.len() {
                 return invalid(format!(
@@ -381,137 +655,339 @@ impl<'m> EigenServer<'m> {
     /// [`ServeReport::to_json`], at any fleet count. With one fleet the
     /// run is decision-for-decision identical to the pre-0.6 serial loop
     /// (kept as [`EigenServer::run_serial_reference`] and pinned by
-    /// `tests/multi_fleet.rs`).
-    pub fn run(&mut self, arrivals: &[QueryArrival]) -> Result<ServeReport, SolverError> {
+    /// `tests/multi_fleet.rs`). Equivalent to
+    /// [`EigenServer::run_with_faults`] under an empty [`FaultSpec`].
+    pub fn run(&mut self, arrivals: &[QueryArrival]) -> Result<ServeReport, ServeError> {
+        self.run_with_faults(arrivals, &FaultSpec::none())
+    }
+
+    /// [`EigenServer::run`] under a fault model: crashes, transient
+    /// dispatch failures, deadlines, and queue bounds from `spec`,
+    /// recovery via its retry policy. Byte-identical replay for a fixed
+    /// `(workload, fault seed)` pair; an **empty** spec reproduces
+    /// [`EigenServer::run`]'s report byte-for-byte (the fault machinery
+    /// is inert, and the report omits its fault fields).
+    pub fn run_with_faults(
+        &mut self,
+        arrivals: &[QueryArrival],
+        spec: &FaultSpec,
+    ) -> Result<ServeReport, ServeError> {
         let nf = self.registries.len();
-        let placement = self.placement;
+        spec.validate(nf)?;
         let n_matrices = self.registries[0].len();
-        let mut coal = BatchCoalescer::new(self.coalescer, n_matrices);
-        let mut pool = FleetPool::new(nf);
-        let mut heap: EventHeap<ServeEvent> = EventHeap::new();
-        // Pre-scheduling every arrival gives them the lowest sequence
-        // numbers: equal-time arrivals admit in workload order, before any
-        // same-instant flush/done event.
-        for (index, q) in arrivals.iter().enumerate() {
-            heap.push(q.arrival_s, ServeEvent::Arrival { index });
-        }
-        // Queries served per matrix so far — the LeastLoaded hot signal.
-        let mut served = vec![0usize; n_matrices];
-        let mut admitted = 0usize;
-        let mut records: Vec<QueryRecord> = Vec::with_capacity(arrivals.len());
-        let mut batches = 0usize;
-        let mut solve_s_total = 0.0f64;
-        let mut prepare_s_total = 0.0f64;
-        let mut checksum = 0u64;
-
-        let apply = |ev: ServeEvent,
-                         coal: &mut BatchCoalescer,
-                         heap: &mut EventHeap<ServeEvent>,
-                         admitted: &mut usize| {
-            match ev {
-                ServeEvent::Arrival { index } => {
-                    let q = &arrivals[index];
-                    heap.push(
-                        q.flush_deadline(&self.coalescer),
-                        ServeEvent::Flush { matrix: q.matrix },
-                    );
-                    coal.push(q.clone());
-                    *admitted += 1;
-                }
-                // Pure wake-ups: the dispatch loop below re-reads queue
-                // eligibility and fleet idleness, so a stale flush (its
-                // query already rode an earlier batch) or a done marker
-                // needs no state transition of its own.
-                ServeEvent::Flush { .. }
-                | ServeEvent::PrepareDone { .. }
-                | ServeEvent::SolveDone { .. } => {}
-            }
+        let horizon = arrivals.iter().map(|q| q.arrival_s).fold(0.0f64, f64::max);
+        let mut st = RunState {
+            coal: BatchCoalescer::new(self.coalescer, n_matrices),
+            pool: FleetPool::new(nf),
+            heap: EventHeap::new(),
+            plan: FaultPlan::generate(spec, nf, horizon),
+            served: vec![0usize; n_matrices],
+            arrived: 0,
+            records: Vec::with_capacity(arrivals.len()),
+            batches: 0,
+            solve_s_total: 0.0,
+            prepare_s_total: 0.0,
+            in_flight: (0..nf).map(|_| None).collect(),
+            retries: Vec::new(),
+            retry_ready: Vec::new(),
+            counters: FaultCounters::default(),
         };
+        // Pre-scheduling every arrival gives them the lowest sequence
+        // numbers: equal-time arrivals admit in workload order, before
+        // any same-instant flush/done/fault event.
+        for (index, q) in arrivals.iter().enumerate() {
+            st.heap.push(q.arrival_s, ServeEvent::Arrival { index });
+        }
+        {
+            let RunState { heap, plan, .. } = &mut st;
+            for (crash, c) in plan.crashes.iter().enumerate() {
+                heap.push(c.at_s, ServeEvent::FleetDown { crash });
+            }
+        }
 
-        while let Some((now, ev)) = heap.pop() {
-            apply(ev, &mut coal, &mut heap, &mut admitted);
+        while let Some((now, ev)) = st.heap.pop() {
+            self.apply_event(&mut st, arrivals, now, ev);
             // Apply *every* event at this timestamp before dispatching:
             // the serial loop admits all due arrivals before picking a
             // batch, and dispatch decisions must see the same state.
-            while heap
+            while st
+                .heap
                 .peek_time()
                 .is_some_and(|t| t.total_cmp(&now) == Ordering::Equal)
             {
-                let (_, ev) = heap.pop().expect("peeked");
-                apply(ev, &mut coal, &mut heap, &mut admitted);
+                let (_, ev) = st.heap.pop().expect("peeked");
+                self.apply_event(&mut st, arrivals, now, ev);
             }
+            // Once the stream is exhausted no queue can fill further —
+            // drain immediately instead of idling out flush deadlines.
+            let drain = st.arrived == arrivals.len();
+            self.dispatch(&mut st, now, drain)?;
+        }
 
-            // Dispatch: route every currently runnable batch to an idle
-            // fleet. Once the stream is exhausted no queue can fill
-            // further — drain immediately instead of idling out the
-            // flush deadlines.
-            let drain = admitted == arrivals.len();
-            loop {
-                let pred = |mi: usize| {
-                    pool.choose(placement, mi, served[mi] >= HOT_QUERIES, now).is_some()
-                };
-                let batch = match coal.ready_batch_where(now, &pred) {
-                    Some(b) => Some(b),
-                    None if drain => coal.flush_any_where(&pred),
-                    None => None,
-                };
-                let Some(batch) = batch else { break };
-                let hot = served[batch.matrix] >= HOT_QUERIES;
-                let fleet = pool
-                    .choose(placement, batch.matrix, hot, now)
-                    .expect("dispatch predicate guaranteed an idle fleet");
-                let params: Vec<QueryParams> =
-                    batch.queries.iter().map(|q| q.params).collect();
-                let (outs, ev) = self.registries[fleet].solve_batch(batch.matrix, &params)?;
-                let start = now;
-                let solve_dur =
-                    outs.iter().map(|o| o.stats.sim_seconds).fold(0.0f64, f64::max);
-                let done = pool.occupy(fleet, start, ev.sim_prepare_s, solve_dur);
-                if ev.cold {
-                    heap.push(start + ev.sim_prepare_s, ServeEvent::PrepareDone { fleet });
+        // The run ends at the last completion (or shed/fail decision),
+        // not at the heap's last wake-up (trailing flush deadlines for
+        // already-served queries would otherwise pad every throughput
+        // number).
+        let sim_end_s = st.records.iter().map(|r| r.done_s).fold(0.0f64, f64::max);
+        let faults = st.plan.is_active().then(|| {
+            let (mut shed_deadline, mut shed_queue_full, mut failed) = (0, 0, 0);
+            for r in &st.records {
+                match r.outcome {
+                    QueryOutcome::Served => {}
+                    QueryOutcome::Shed(ShedReason::DeadlineExceeded) => shed_deadline += 1,
+                    QueryOutcome::Shed(ShedReason::QueueFull) => shed_queue_full += 1,
+                    QueryOutcome::Failed => failed += 1,
                 }
-                heap.push(done, ServeEvent::SolveDone { fleet });
-                batches += 1;
-                solve_s_total += solve_dur;
-                prepare_s_total += ev.sim_prepare_s;
-                served[batch.matrix] += batch.queries.len();
-                for (q, o) in batch.queries.iter().zip(&outs) {
-                    for l in &o.eigenvalues {
-                        checksum = checksum.rotate_left(7) ^ l.to_bits();
+            }
+            let downtime_s: Vec<f64> =
+                (0..nf).map(|f| st.pool.down_seconds(f, sim_end_s)).collect();
+            FaultSummary {
+                crashes: st.counters.crashes,
+                killed_batches: st.counters.killed_batches,
+                dispatch_failures: st.counters.dispatch_failures,
+                retries: st.counters.retries,
+                failovers: st.counters.failovers,
+                shed_deadline,
+                shed_queue_full,
+                failed,
+                downtime_s_total: downtime_s.iter().sum(),
+                downtime_s,
+            }
+        });
+        Ok(self.build_report(
+            st.records,
+            st.batches,
+            st.solve_s_total,
+            st.prepare_s_total,
+            sim_end_s,
+            &st.pool,
+            faults,
+        ))
+    }
+
+    /// React to one timeline event. Pure wake-ups (flush, prepare-done,
+    /// fleet-up) need no transition of their own: the dispatch loop
+    /// re-reads queue eligibility and fleet idleness afterwards.
+    fn apply_event(
+        &mut self,
+        st: &mut RunState,
+        arrivals: &[QueryArrival],
+        now: f64,
+        ev: ServeEvent,
+    ) {
+        match ev {
+            ServeEvent::Arrival { index } => {
+                st.arrived += 1;
+                let q = &arrivals[index];
+                if let Some(depth) = st.plan.max_queue_depth {
+                    if st.coal.depth(q.matrix) >= depth {
+                        // Bounded queue: bulk sheds first. An arriving
+                        // bulk query sheds itself; an arriving
+                        // interactive query displaces the newest queued
+                        // bulk query, shedding itself only when the
+                        // queue holds nothing but interactive work.
+                        let victim = if q.priority == Priority::Bulk {
+                            None
+                        } else {
+                            st.coal.shed_newest_bulk(q.matrix)
+                        };
+                        let shed = QueryOutcome::Shed(ShedReason::QueueFull);
+                        match victim {
+                            Some(v) => st.records.push(unserved_record(&v, now, shed, 0)),
+                            None => {
+                                st.records.push(unserved_record(q, now, shed, 0));
+                                return;
+                            }
+                        }
                     }
-                    records.push(QueryRecord {
-                        id: q.id,
-                        matrix: q.matrix,
-                        priority: q.priority,
-                        params: q.params,
-                        arrival_s: q.arrival_s,
-                        start_s: start,
-                        done_s: done,
-                        queue_s: start - q.arrival_s,
-                        prepare_s: ev.sim_prepare_s,
-                        solve_s: o.stats.sim_seconds,
-                        batch_size: batch.queries.len(),
-                        cold: ev.cold,
-                        fleet,
-                        eigenvalues: o.eigenvalues.clone(),
+                }
+                st.heap.push(
+                    q.flush_deadline(&self.coalescer),
+                    ServeEvent::Flush { matrix: q.matrix },
+                );
+                st.coal.push(q.clone());
+            }
+            ServeEvent::Flush { .. }
+            | ServeEvent::PrepareDone { .. }
+            | ServeEvent::FleetUp { .. } => {}
+            ServeEvent::SolveDone { fleet } => {
+                // Only the in-flight batch completing *now* clears the
+                // slot — a stale done marker for a crash-killed batch
+                // must not release its successor.
+                if st.in_flight[fleet]
+                    .as_ref()
+                    .is_some_and(|b| b.done.to_bits() == now.to_bits())
+                {
+                    st.in_flight[fleet] = None;
+                }
+            }
+            ServeEvent::FleetDown { crash } => {
+                let c = st.plan.crashes[crash];
+                st.counters.crashes += 1;
+                let cut = st.pool.crash(c.fleet, now, c.repair_s);
+                if c.repair_s > 0.0 {
+                    st.heap.push(now + c.repair_s, ServeEvent::FleetUp { fleet: c.fleet });
+                }
+                // The crash loses the fleet's prepared-state cache: its
+                // next batch per matrix pays a cold re-preparation.
+                self.registries[c.fleet].evict_all();
+                if cut.killed {
+                    let b = st.in_flight[c.fleet]
+                        .take()
+                        .expect("pool killed a batch the server must be tracking");
+                    // Retract the killed batch's ledger: its records,
+                    // batch count, hot-signal credit, and the
+                    // *uncompleted* remainder of its time (the completed
+                    // prefix stays charged, matching the pool).
+                    let start_bits = b.start.to_bits();
+                    st.records.retain(|r| {
+                        !(r.fleet == c.fleet
+                            && r.start_s.to_bits() == start_bits
+                            && r.outcome == QueryOutcome::Served)
                     });
+                    st.batches -= 1;
+                    st.counters.killed_batches += 1;
+                    st.solve_s_total -= cut.solve_cut;
+                    st.prepare_s_total -= cut.prepare_cut;
+                    st.served[b.matrix] -= b.queries.len();
+                    retry_or_fail(st, now, b.matrix, b.queries, b.attempt);
+                }
+            }
+            ServeEvent::RetryDue { retry } => {
+                if st.retries[retry].is_some() {
+                    st.retry_ready.push(retry);
                 }
             }
         }
+    }
 
-        // The run ends at the last completion, not at the heap's last
-        // wake-up (trailing flush deadlines for already-served queries
-        // would otherwise pad every throughput number).
-        let sim_end_s = records.iter().map(|r| r.done_s).fold(0.0f64, f64::max);
-        Ok(self.build_report(
-            records,
-            batches,
-            solve_s_total,
-            prepare_s_total,
-            sim_end_s,
-            checksum,
-            &pool,
-        ))
+    /// Route every currently runnable batch to a fleet: ready retries
+    /// first (the oldest work in the system), then fresh coalesced
+    /// batches, until neither makes progress.
+    fn dispatch(&mut self, st: &mut RunState, now: f64, drain: bool) -> Result<(), ServeError> {
+        let placement = self.placement;
+        loop {
+            let mut progress = false;
+            let mut i = 0;
+            while i < st.retry_ready.len() {
+                let rid = st.retry_ready[i];
+                let matrix =
+                    st.retries[rid].as_ref().expect("ready retry entries are live").matrix;
+                let hot = st.served[matrix] >= HOT_QUERIES;
+                match st.pool.choose_failover(placement, matrix, hot, now) {
+                    Some((fleet, failed_over)) => {
+                        let rb = st.retries[rid].take().expect("checked above");
+                        st.retry_ready.remove(i);
+                        st.counters.retries += 1;
+                        if failed_over {
+                            st.counters.failovers += 1;
+                        }
+                        self.execute(st, now, fleet, rb.matrix, rb.queries, rb.attempt)?;
+                        progress = true;
+                    }
+                    None => i += 1,
+                }
+            }
+            // One fresh batch per pass — the loop comes back for more,
+            // so a retry becoming dispatchable interleaves fairly.
+            let RunState { coal, pool, served, .. } = &mut *st;
+            let pred = |mi: usize| {
+                pool.choose_failover(placement, mi, served[mi] >= HOT_QUERIES, now).is_some()
+            };
+            let batch = match coal.ready_batch_where(now, &pred) {
+                Some(b) => Some(b),
+                None if drain => coal.flush_any_where(&pred),
+                None => None,
+            };
+            if let Some(batch) = batch {
+                let hot = st.served[batch.matrix] >= HOT_QUERIES;
+                let (fleet, failed_over) = st
+                    .pool
+                    .choose_failover(placement, batch.matrix, hot, now)
+                    .expect("dispatch predicate guaranteed a fleet");
+                if failed_over {
+                    st.counters.failovers += 1;
+                }
+                self.execute(st, now, fleet, batch.matrix, batch.queries, 1)?;
+                progress = true;
+            }
+            if !progress {
+                return Ok(());
+            }
+        }
+    }
+
+    /// One dispatch attempt of a batch on `fleet`: shed queries past
+    /// their deadline, roll the transient-failure die, then solve and
+    /// commit the batch to the ledger and the fleet's occupancy.
+    fn execute(
+        &mut self,
+        st: &mut RunState,
+        now: f64,
+        fleet: usize,
+        matrix: usize,
+        mut queries: Vec<QueryArrival>,
+        attempt: u32,
+    ) -> Result<(), ServeError> {
+        if let Some(d) = st.plan.deadline_s {
+            let mut keep = Vec::with_capacity(queries.len());
+            for q in queries {
+                if now - q.arrival_s > d {
+                    st.records.push(unserved_record(
+                        &q,
+                        now,
+                        QueryOutcome::Shed(ShedReason::DeadlineExceeded),
+                        attempt - 1,
+                    ));
+                } else {
+                    keep.push(q);
+                }
+            }
+            queries = keep;
+            if queries.is_empty() {
+                return Ok(());
+            }
+        }
+        if st.plan.draw_failure() {
+            st.counters.dispatch_failures += 1;
+            retry_or_fail(st, now, matrix, queries, attempt);
+            return Ok(());
+        }
+        let params: Vec<QueryParams> = queries.iter().map(|q| q.params).collect();
+        let (outs, ev) = self.registries[fleet].solve_batch(matrix, &params)?;
+        let start = now;
+        let solve_dur = outs.iter().map(|o| o.stats.sim_seconds).fold(0.0f64, f64::max);
+        let done = st.pool.occupy(fleet, start, ev.sim_prepare_s, solve_dur);
+        if ev.cold {
+            st.heap.push(start + ev.sim_prepare_s, ServeEvent::PrepareDone { fleet });
+        }
+        st.heap.push(done, ServeEvent::SolveDone { fleet });
+        st.batches += 1;
+        st.solve_s_total += solve_dur;
+        st.prepare_s_total += ev.sim_prepare_s;
+        st.served[matrix] += queries.len();
+        for (q, o) in queries.iter().zip(&outs) {
+            st.records.push(QueryRecord {
+                id: q.id,
+                matrix: q.matrix,
+                priority: q.priority,
+                params: q.params,
+                arrival_s: q.arrival_s,
+                start_s: start,
+                done_s: done,
+                queue_s: start - q.arrival_s,
+                prepare_s: ev.sim_prepare_s,
+                solve_s: o.stats.sim_seconds,
+                batch_size: queries.len(),
+                cold: ev.cold,
+                fleet,
+                outcome: QueryOutcome::Served,
+                retries: attempt - 1,
+                eigenvalues: o.eigenvalues.clone(),
+            });
+        }
+        st.in_flight[fleet] = Some(InFlight { matrix, queries, attempt, start, done });
+        Ok(())
     }
 
     /// The pre-0.6 single-fleet serial loop, kept verbatim as an
@@ -522,9 +998,9 @@ impl<'m> EigenServer<'m> {
     pub fn run_serial_reference(
         &mut self,
         arrivals: &[QueryArrival],
-    ) -> Result<ServeReport, SolverError> {
+    ) -> Result<ServeReport, ServeError> {
         if self.registries.len() > 1 {
-            return Err(SolverError::InvalidConfig {
+            return Err(ServeError::Config {
                 field: "fleets",
                 message: format!(
                     "the serial reference loop serves exactly one fleet (server has {})",
@@ -540,7 +1016,6 @@ impl<'m> EigenServer<'m> {
         let mut batches = 0usize;
         let mut solve_s_total = 0.0f64;
         let mut prepare_s_total = 0.0f64;
-        let mut checksum = 0u64;
 
         loop {
             while next < arrivals.len() && arrivals[next].arrival_s <= now {
@@ -578,9 +1053,6 @@ impl<'m> EigenServer<'m> {
             solve_s_total += solve_dur;
             prepare_s_total += ev.sim_prepare_s;
             for (q, o) in batch.queries.iter().zip(&outs) {
-                for l in &o.eigenvalues {
-                    checksum = checksum.rotate_left(7) ^ l.to_bits();
-                }
                 records.push(QueryRecord {
                     id: q.id,
                     matrix: q.matrix,
@@ -595,6 +1067,8 @@ impl<'m> EigenServer<'m> {
                     batch_size: batch.queries.len(),
                     cold: ev.cold,
                     fleet: 0,
+                    outcome: QueryOutcome::Served,
+                    retries: 0,
                     eigenvalues: o.eigenvalues.clone(),
                 });
             }
@@ -608,8 +1082,8 @@ impl<'m> EigenServer<'m> {
             solve_s_total,
             prepare_s_total,
             sim_end_s,
-            checksum,
             &pool,
+            None,
         ))
     }
 
@@ -621,12 +1095,31 @@ impl<'m> EigenServer<'m> {
         solve_s_total: f64,
         prepare_s_total: f64,
         sim_end_s: f64,
-        checksum: u64,
         pool: &FleetPool,
+        faults: Option<FaultSummary>,
     ) -> ServeReport {
         let nf = self.registries.len();
-        let lat: Vec<f64> = records.iter().map(|r| r.latency_s()).collect();
-        let queue: Vec<f64> = records.iter().map(|r| r.queue_s).collect();
+        // Served-only rollups, in ledger (= dispatch) order: the
+        // checksum fold and the latency sample order match what the
+        // pre-0.7 loop computed at dispatch time, bit for bit.
+        let mut checksum = 0u64;
+        let (mut served_n, mut shed_n, mut failed_n) = (0usize, 0usize, 0usize);
+        let mut lat: Vec<f64> = Vec::with_capacity(records.len());
+        let mut queue: Vec<f64> = Vec::with_capacity(records.len());
+        for r in &records {
+            match r.outcome {
+                QueryOutcome::Served => {
+                    served_n += 1;
+                    lat.push(r.latency_s());
+                    queue.push(r.queue_s);
+                    for l in &r.eigenvalues {
+                        checksum = checksum.rotate_left(7) ^ l.to_bits();
+                    }
+                }
+                QueryOutcome::Shed(_) => shed_n += 1,
+                QueryOutcome::Failed => failed_n += 1,
+            }
+        }
         let (mut prepares, mut evictions, mut hits, mut resident) = (0, 0, 0, 0);
         for reg in &self.registries {
             let s = reg.stats();
@@ -639,7 +1132,7 @@ impl<'m> EigenServer<'m> {
             .map(|mi| {
                 let mine: Vec<f64> = records
                     .iter()
-                    .filter(|r| r.matrix == mi)
+                    .filter(|r| r.matrix == mi && r.outcome == QueryOutcome::Served)
                     .map(|r| r.latency_s())
                     .collect();
                 // One batch = one maximal run of records sharing a
@@ -649,7 +1142,7 @@ impl<'m> EigenServer<'m> {
                 // same instant).
                 let mut batch_keys: Vec<(u64, usize)> = records
                     .iter()
-                    .filter(|r| r.matrix == mi)
+                    .filter(|r| r.matrix == mi && r.outcome == QueryOutcome::Served)
                     .map(|r| (r.start_s.to_bits(), r.fleet))
                     .collect();
                 batch_keys.dedup();
@@ -676,32 +1169,25 @@ impl<'m> EigenServer<'m> {
                 batches: s.batches,
                 solve_s: s.solve_s,
                 prepare_s: s.prepare_s,
-                utilization: if sim_end_s > 0.0 { s.busy_s / sim_end_s } else { 0.0 },
+                utilization: safe_rate(s.busy_s, sim_end_s),
+                down_s: pool.down_seconds(f, sim_end_s),
+                crashes: pool.crashes_of(f),
             })
             .collect();
         ServeReport {
-            queries: records.len(),
+            queries: served_n,
+            arrivals: records.len(),
+            shed: shed_n,
+            failed: failed_n,
             batches,
-            mean_batch_size: if batches > 0 {
-                records.len() as f64 / batches as f64
-            } else {
-                0.0
-            },
+            mean_batch_size: safe_rate(served_n as f64, batches as f64),
             sim_end_s,
-            throughput_qps: if sim_end_s > 0.0 {
-                records.len() as f64 / sim_end_s
-            } else {
-                0.0
-            },
+            throughput_qps: safe_rate(served_n as f64, sim_end_s),
             latency: LatencySummary::from_samples(&lat),
             queue: LatencySummary::from_samples(&queue),
             solve_s_total,
             prepare_s_total,
-            busy_frac: if sim_end_s > 0.0 {
-                (solve_s_total + prepare_s_total) / (nf as f64 * sim_end_s)
-            } else {
-                0.0
-            },
+            busy_frac: safe_rate(solve_s_total + prepare_s_total, nf as f64 * sim_end_s),
             prepares,
             evictions,
             hits,
@@ -711,6 +1197,7 @@ impl<'m> EigenServer<'m> {
             per_fleet,
             replicas,
             per_matrix,
+            faults,
             result_checksum: checksum,
             records,
         }
@@ -798,6 +1285,8 @@ mod tests {
             assert!(r.queue_s >= 0.0 && r.done_s >= r.start_s && r.start_s >= r.arrival_s);
             assert!(r.batch_size >= 1 && r.batch_size <= 4);
             assert_eq!(r.fleet, 0, "single-fleet server runs everything on fleet 0");
+            assert_eq!(r.outcome, QueryOutcome::Served);
+            assert_eq!(r.retries, 0, "fault-free runs never retry");
         }
     }
 
@@ -813,6 +1302,61 @@ mod tests {
         assert!(!json.contains("\"per_fleet\""));
         assert!(!json.contains("\"placement\""));
         assert!(!json.contains("\"replicas\""));
+    }
+
+    #[test]
+    fn fault_fields_appear_only_when_spec_is_active() {
+        let ms = matrices();
+        let spec = WorkloadSpec::uniform(5, 8, 400.0, &["WB-GO", "FL"], 6);
+        let arrivals = {
+            let server = small_server(&ms, usize::MAX);
+            spec.generate(|n| server.registry().index_of(n)).unwrap()
+        };
+        // Fault-free (and empty-spec) JSON carries no fault fields.
+        let clean = small_server(&ms, usize::MAX).run(&arrivals).unwrap();
+        assert!(clean.faults.is_none());
+        let clean_json = clean.to_json();
+        for field in ["\"faults\"", "\"arrivals\"", "\"shed\"", "\"failed\""] {
+            assert!(!clean_json.contains(field), "pre-0.7 JSON compatibility: {field}");
+        }
+        let empty_spec = FaultSpec { seed: 9, ..FaultSpec::none() };
+        let via_empty = small_server(&ms, usize::MAX)
+            .run_with_faults(&arrivals, &empty_spec)
+            .unwrap();
+        assert_eq!(
+            via_empty.to_json(),
+            clean_json,
+            "an empty fault spec must reproduce the fault-free report byte-for-byte"
+        );
+        // An active spec (even one that happens to inject nothing
+        // observable) emits the fault block.
+        let active = FaultSpec { fail_prob: 1e-12, ..FaultSpec::none() };
+        let faulty = small_server(&ms, usize::MAX)
+            .run_with_faults(&arrivals, &active)
+            .unwrap();
+        let fs = faulty.faults.as_ref().expect("active spec must report faults");
+        let faulty_json = faulty.to_json();
+        assert!(faulty_json.contains("\"faults\": {\"crashes\": "), "{faulty_json}");
+        assert!(faulty_json.contains("\"arrivals\": 8"));
+        assert_eq!(faulty.arrivals, faulty.queries + faulty.shed + faulty.failed);
+        assert_eq!(fs.downtime_s.len(), 1);
+    }
+
+    #[test]
+    fn run_with_faults_validates_the_spec() {
+        let ms = matrices();
+        let mut server = small_server(&ms, usize::MAX);
+        let bad = FaultSpec { fail_prob: 2.0, ..FaultSpec::none() };
+        let err = server.run_with_faults(&[], &bad).unwrap_err();
+        assert!(matches!(err, ServeError::FaultSpec(_)), "{err:?}");
+        assert!(err.to_string().contains("fail_prob"), "{err}");
+        // A crash aimed at a fleet the server doesn't have.
+        let bad = FaultSpec {
+            crashes: vec![crate::sim::CrashSpec { at_s: 0.1, fleet: 3, repair_s: 0.0 }],
+            ..FaultSpec::none()
+        };
+        let err = server.run_with_faults(&[], &bad).unwrap_err();
+        assert!(err.to_string().contains("fleet 3"), "{err}");
     }
 
     #[test]
@@ -844,6 +1388,24 @@ mod tests {
         )
         .unwrap_err();
         assert!(err.to_string().contains("at least one fleet"), "{err}");
+        // An empty registry set is a config error too (satellite: typed
+        // serve errors) — the CLI maps it to exit 2.
+        let empty = {
+            let solver = Solver::builder()
+                .k(6)
+                .precision(PrecisionConfig::FDF)
+                .devices(1)
+                .build()
+                .unwrap();
+            MatrixRegistry::new(solver, RegistryConfig::default())
+        };
+        let err = EigenServer::with_fleets(
+            vec![empty],
+            CoalescerConfig::default(),
+            Placement::Pin,
+        )
+        .unwrap_err();
+        assert!(matches!(err, ServeError::Config { field: "registry", .. }), "{err:?}");
     }
 
     #[test]
@@ -869,6 +1431,7 @@ mod tests {
         assert_eq!(a.fleets, 2);
         assert_eq!(a.per_fleet.len(), 2);
         assert!(a.per_fleet.iter().all(|f| f.batches > 0), "both fleets must serve");
+        assert!(a.per_fleet.iter().all(|f| f.down_s == 0.0 && f.crashes == 0));
         let json = a.to_json();
         assert!(json.contains("\"fleets\": 2"));
         assert!(json.contains("\"placement\": \"replicate\""));

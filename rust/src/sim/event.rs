@@ -1,13 +1,20 @@
 //! The typed event vocabulary of a serve run.
 //!
-//! A serve simulation is one merged timeline of these four event kinds,
+//! A serve simulation is one merged timeline of these event kinds,
 //! popped from an [`super::EventHeap`] in `(time, seq)` order. The
 //! server reacts to each kind and then runs its dispatch loop; events
 //! that arrive stale (a flush deadline for a query that already rode an
-//! earlier batch, a prepare-done for a fleet that is still busy solving)
-//! are deliberate no-ops — re-running dispatch never changes a decision
-//! unless queue eligibility or fleet idleness actually changed, both of
-//! which have their own events.
+//! earlier batch, a prepare-done for a fleet that is still busy solving,
+//! a solve-done for a batch a crash already killed) are deliberate
+//! no-ops — re-running dispatch never changes a decision unless queue
+//! eligibility or fleet idleness actually changed, both of which have
+//! their own events.
+//!
+//! The fault vocabulary (0.7) rides the same timeline: `FleetDown` /
+//! `FleetUp` bracket a crash-repair window from a
+//! [`super::fault::FaultPlan`], and `RetryDue` wakes a backed-off batch.
+//! All three carry only indices into run-local tables, keeping the enum
+//! `Copy + Eq` (event payloads never carry `f64`s).
 
 /// One scheduled occurrence on a serve run's simulated timeline.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -37,6 +44,26 @@ pub enum ServeEvent {
         /// The fleet that went idle.
         fleet: usize,
     },
+    /// A scheduled crash strikes: the victim fleet goes down for its
+    /// repair interval, its prepared-state cache is wiped, and any
+    /// in-flight batch is killed into the retry path.
+    FleetDown {
+        /// Index into the run's [`super::fault::FaultPlan::crashes`]
+        /// schedule (which carries the victim fleet and repair time).
+        crash: usize,
+    },
+    /// A crashed fleet's repair interval elapsed — it may accept work
+    /// again (cache cold). Pure wake-up: the pool's down-horizon is the
+    /// source of truth.
+    FleetUp {
+        /// The repaired fleet.
+        fleet: usize,
+    },
+    /// A backed-off batch's retry delay elapsed — it re-enters dispatch.
+    RetryDue {
+        /// Index into the server's run-local retry table.
+        retry: usize,
+    },
 }
 
 #[cfg(test)]
@@ -55,5 +82,16 @@ mod tests {
         assert_eq!(h.pop(), Some((0.25, ServeEvent::PrepareDone { fleet: 1 })));
         assert_eq!(h.pop(), Some((0.5, ServeEvent::Flush { matrix: 3 })));
         assert_eq!(h.pop(), Some((0.75, ServeEvent::SolveDone { fleet: 0 })));
+    }
+
+    #[test]
+    fn fault_events_ride_the_same_timeline() {
+        let mut h = EventHeap::new();
+        h.push(0.3, ServeEvent::FleetUp { fleet: 1 });
+        h.push(0.1, ServeEvent::FleetDown { crash: 0 });
+        h.push(0.2, ServeEvent::RetryDue { retry: 4 });
+        assert_eq!(h.pop(), Some((0.1, ServeEvent::FleetDown { crash: 0 })));
+        assert_eq!(h.pop(), Some((0.2, ServeEvent::RetryDue { retry: 4 })));
+        assert_eq!(h.pop(), Some((0.3, ServeEvent::FleetUp { fleet: 1 })));
     }
 }

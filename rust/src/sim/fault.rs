@@ -1,0 +1,401 @@
+//! Seeded, deterministic fault injection for the serve timeline.
+//!
+//! A [`FaultSpec`] declares *what can go wrong* in a serve run: fleet
+//! crashes (explicit, or drawn as a Poisson process from a seeded RNG),
+//! transient batch-dispatch failures, per-query deadlines, and a bounded
+//! per-matrix queue depth. [`FaultPlan::generate`] expands the spec into
+//! the concrete crash schedule for one run — every crash instant, victim
+//! fleet, and repair interval is fixed before the first event pops, and
+//! the same RNG stream then prices the per-dispatch transient-failure
+//! draws. Chaos with a seed: a faulty run replays **byte-identically**
+//! for a fixed `(workload seed, fault seed)` pair, and an empty spec
+//! (the default) injects nothing and consumes no RNG, so fault-free runs
+//! reproduce pre-0.7 reports byte-for-byte.
+//!
+//! Recovery policy lives in [`RetryPolicy`]: a killed or transiently
+//! failed batch re-dispatches after a capped exponential backoff
+//! (`min(base·2^(attempt−1), cap)` — no jitter, no wallclock), up to
+//! `max_attempts` total attempts before its queries are marked
+//! [`crate::serve::QueryOutcome::Failed`].
+
+use std::fmt;
+
+use crate::rng::Rng;
+
+/// A fault-spec field that failed validation. The serve layer wraps this
+/// into its own error type; the CLI maps it to exit 2 (usage).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FaultError {
+    /// The offending spec field, e.g. `"fail_prob"` or `"crashes"`.
+    pub field: &'static str,
+    /// What was wrong and what range is accepted.
+    pub message: String,
+}
+
+impl fmt::Display for FaultError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "invalid fault spec for `{}`: {}", self.field, self.message)
+    }
+}
+
+impl std::error::Error for FaultError {}
+
+/// One scheduled fleet crash: at `at_s` the fleet goes down for
+/// `repair_s` simulated seconds, its prepared-state cache is wiped, and
+/// any in-flight batch is killed (its queries re-enter via the retry
+/// path).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CrashSpec {
+    /// Simulated second the crash strikes.
+    pub at_s: f64,
+    /// The victim fleet.
+    pub fleet: usize,
+    /// Seconds until the fleet accepts work again (cache still cold).
+    pub repair_s: f64,
+}
+
+/// Retry policy for killed / transiently failed batches: capped
+/// exponential backoff, fully deterministic.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RetryPolicy {
+    /// Total dispatch attempts a batch gets (≥ 1; 1 = never retry).
+    pub max_attempts: u32,
+    /// Backoff before the first retry, simulated seconds.
+    pub base_backoff_s: f64,
+    /// Ceiling on any single backoff, simulated seconds.
+    pub cap_s: f64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { max_attempts: 3, base_backoff_s: 0.01, cap_s: 0.2 }
+    }
+}
+
+impl RetryPolicy {
+    /// Backoff before the retry following `attempts_done` completed
+    /// attempts: `min(base·2^(attempts_done−1), cap)`.
+    pub fn backoff(&self, attempts_done: u32) -> f64 {
+        let exp = attempts_done.saturating_sub(1).min(62);
+        (self.base_backoff_s * (1u64 << exp) as f64).min(self.cap_s)
+    }
+}
+
+/// Declarative fault model for one serve run. The default spec is
+/// *empty*: it schedules nothing, draws nothing, and leaves the server's
+/// behavior (and report bytes) exactly as a fault-free run.
+#[derive(Clone, Debug)]
+pub struct FaultSpec {
+    /// Seed for the fault stream (crash schedule + transient-failure
+    /// draws). A seed alone does not activate faults.
+    pub seed: u64,
+    /// Explicitly scheduled crashes (merged with any random ones).
+    pub crashes: Vec<CrashSpec>,
+    /// Mean random crashes per simulated second over the arrival window
+    /// (Poisson process; 0 = none).
+    pub crash_rate: f64,
+    /// Repair interval for *random* crashes, simulated seconds.
+    pub repair_s: f64,
+    /// Probability any single batch dispatch fails transiently.
+    pub fail_prob: f64,
+    /// Backoff/retry policy for killed and failed batches.
+    pub retry: RetryPolicy,
+    /// Per-query deadline: a query still undispatched this many seconds
+    /// after arrival is shed (`ShedReason::DeadlineExceeded`).
+    pub deadline_s: Option<f64>,
+    /// Bound on each matrix's admission queue; arrivals beyond it shed
+    /// (`ShedReason::QueueFull`, bulk first — see the server docs).
+    pub max_queue_depth: Option<usize>,
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        FaultSpec {
+            seed: 0,
+            crashes: Vec::new(),
+            crash_rate: 0.0,
+            repair_s: 0.05,
+            fail_prob: 0.0,
+            retry: RetryPolicy::default(),
+            deadline_s: None,
+            max_queue_depth: None,
+        }
+    }
+}
+
+impl FaultSpec {
+    /// The empty spec: inject nothing (alias for `Default`).
+    pub fn none() -> Self {
+        FaultSpec::default()
+    }
+
+    /// True when the spec injects nothing — no crashes, no transient
+    /// failures, no deadline, no queue bound. The seed and retry knobs
+    /// are ignored: they only matter once something can go wrong.
+    pub fn is_empty(&self) -> bool {
+        self.crashes.is_empty()
+            && self.crash_rate == 0.0
+            && self.fail_prob == 0.0
+            && self.deadline_s.is_none()
+            && self.max_queue_depth.is_none()
+    }
+
+    /// Validate against a server with `fleets` fleets.
+    pub fn validate(&self, fleets: usize) -> Result<(), FaultError> {
+        let err = |field: &'static str, message: String| Err(FaultError { field, message });
+        if !self.fail_prob.is_finite() || !(0.0..=1.0).contains(&self.fail_prob) {
+            return err(
+                "fail_prob",
+                format!("must be a probability in 0..=1 (got {})", self.fail_prob),
+            );
+        }
+        if !self.crash_rate.is_finite() || self.crash_rate < 0.0 {
+            return err(
+                "crash_rate",
+                format!("must be a finite rate ≥ 0 crashes/second (got {})", self.crash_rate),
+            );
+        }
+        if !self.repair_s.is_finite() || self.repair_s < 0.0 {
+            return err(
+                "repair_s",
+                format!("must be a finite repair interval ≥ 0 seconds (got {})", self.repair_s),
+            );
+        }
+        for (i, c) in self.crashes.iter().enumerate() {
+            if !c.at_s.is_finite() || c.at_s < 0.0 {
+                return err(
+                    "crashes",
+                    format!("crash {i} at_s must be a finite time ≥ 0 (got {})", c.at_s),
+                );
+            }
+            if !c.repair_s.is_finite() || c.repair_s < 0.0 {
+                return err(
+                    "crashes",
+                    format!("crash {i} repair_s must be finite and ≥ 0 (got {})", c.repair_s),
+                );
+            }
+            if c.fleet >= fleets {
+                return err(
+                    "crashes",
+                    format!(
+                        "crash {i} targets fleet {} but the server has {fleets} fleet(s) \
+                         (fleet ids are 0..{fleets})",
+                        c.fleet
+                    ),
+                );
+            }
+        }
+        if self.retry.max_attempts == 0 {
+            return err(
+                "retry.max_attempts",
+                "must be ≥ 1 (1 = dispatch once, never retry)".into(),
+            );
+        }
+        if !self.retry.base_backoff_s.is_finite() || self.retry.base_backoff_s < 0.0 {
+            return err(
+                "retry.base_backoff_s",
+                format!("must be finite and ≥ 0 (got {})", self.retry.base_backoff_s),
+            );
+        }
+        if !self.retry.cap_s.is_finite() || self.retry.cap_s < 0.0 {
+            return err(
+                "retry.cap_s",
+                format!("must be finite and ≥ 0 (got {})", self.retry.cap_s),
+            );
+        }
+        if let Some(d) = self.deadline_s {
+            if !d.is_finite() || d <= 0.0 {
+                return err(
+                    "deadline_s",
+                    format!("must be a finite deadline > 0 seconds (got {d})"),
+                );
+            }
+        }
+        if self.max_queue_depth == Some(0) {
+            return err(
+                "max_queue_depth",
+                "must be ≥ 1 (a zero-depth queue could never admit anything)".into(),
+            );
+        }
+        Ok(())
+    }
+}
+
+/// The expanded, per-run form of a [`FaultSpec`]: the concrete crash
+/// schedule (explicit + randomly drawn, sorted by time) plus the live
+/// RNG stream for transient-failure draws. Build one per run with
+/// [`FaultPlan::generate`]; the server consumes it.
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    /// Every crash of the run, ascending `at_s` (ties by fleet id).
+    pub crashes: Vec<CrashSpec>,
+    /// Per-dispatch transient failure probability.
+    pub fail_prob: f64,
+    /// Retry/backoff policy.
+    pub retry: RetryPolicy,
+    /// Per-query deadline, if any.
+    pub deadline_s: Option<f64>,
+    /// Per-matrix queue bound, if any.
+    pub max_queue_depth: Option<usize>,
+    active: bool,
+    rng: Rng,
+}
+
+impl FaultPlan {
+    /// The inert plan of an empty spec.
+    pub fn none() -> Self {
+        FaultPlan::generate(&FaultSpec::none(), 1, 0.0)
+    }
+
+    /// Expand `spec` for a run with `fleets` fleets whose arrivals span
+    /// `[0, horizon_s]`. Random crashes are drawn as exponential
+    /// inter-crash gaps at `crash_rate` within the horizon; the victim
+    /// fleet is uniform. Deterministic: same spec + fleets + horizon ⇒
+    /// the same plan, always. Assumes `spec.validate(fleets)` passed.
+    pub fn generate(spec: &FaultSpec, fleets: usize, horizon_s: f64) -> Self {
+        let mut rng = Rng::new(spec.seed);
+        let mut crashes = Vec::new();
+        if spec.crash_rate > 0.0 && horizon_s > 0.0 {
+            let mut t = 0.0f64;
+            loop {
+                // Exponential gap; 1 - f64() keeps the ln argument in
+                // (0, 1], and the floor keeps t strictly advancing even
+                // on a pathological zero draw.
+                t += (-(1.0 - rng.f64()).ln()).max(1e-12) / spec.crash_rate;
+                if t > horizon_s {
+                    break;
+                }
+                let fleet = if fleets > 1 { rng.range(0, fleets) } else { 0 };
+                crashes.push(CrashSpec { at_s: t, fleet, repair_s: spec.repair_s });
+            }
+        }
+        crashes.extend(spec.crashes.iter().copied());
+        crashes.sort_by(|a, b| a.at_s.total_cmp(&b.at_s).then(a.fleet.cmp(&b.fleet)));
+        FaultPlan {
+            crashes,
+            fail_prob: spec.fail_prob,
+            retry: spec.retry,
+            deadline_s: spec.deadline_s,
+            max_queue_depth: spec.max_queue_depth,
+            active: !spec.is_empty(),
+            rng,
+        }
+    }
+
+    /// True when the originating spec injects anything at all — gates
+    /// every fault-path branch in the server and the report's fault
+    /// block, so an inactive plan leaves run behavior byte-identical to
+    /// pre-0.7.
+    pub fn is_active(&self) -> bool {
+        self.active
+    }
+
+    /// Draw one transient-failure decision for a batch dispatch from the
+    /// seeded stream. Consumes no RNG when `fail_prob` is zero, so plans
+    /// without transient failures stay draw-for-draw reproducible
+    /// regardless of dispatch count.
+    pub fn draw_failure(&mut self) -> bool {
+        self.fail_prob > 0.0 && self.rng.chance(self.fail_prob)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_spec_is_empty_even_with_seed_and_retry_knobs() {
+        let mut s = FaultSpec::none();
+        assert!(s.is_empty());
+        s.seed = 1234;
+        s.retry.max_attempts = 9;
+        assert!(s.is_empty(), "seed/retry alone must not activate faults");
+        s.deadline_s = Some(1.0);
+        assert!(!s.is_empty());
+    }
+
+    #[test]
+    fn plan_generation_is_deterministic() {
+        let mut s = FaultSpec::none();
+        s.seed = 7;
+        s.crash_rate = 50.0;
+        s.repair_s = 0.02;
+        s.fail_prob = 0.25;
+        let a = FaultPlan::generate(&s, 4, 0.5);
+        let b = FaultPlan::generate(&s, 4, 0.5);
+        assert_eq!(a.crashes, b.crashes);
+        assert!(a.is_active());
+        // The post-schedule RNG streams agree draw-for-draw.
+        let (mut a, mut b) = (a, b);
+        for _ in 0..64 {
+            assert_eq!(a.draw_failure(), b.draw_failure());
+        }
+    }
+
+    #[test]
+    fn random_crashes_stay_in_horizon_and_sorted() {
+        let mut s = FaultSpec::none();
+        s.seed = 3;
+        s.crash_rate = 200.0;
+        s.crashes.push(CrashSpec { at_s: 0.01, fleet: 1, repair_s: 0.5 });
+        let plan = FaultPlan::generate(&s, 2, 0.25);
+        assert!(plan.crashes.len() >= 2, "rate 200/s over 0.25s should crash");
+        for w in plan.crashes.windows(2) {
+            assert!(w[0].at_s <= w[1].at_s, "schedule must be time-sorted");
+        }
+        for c in &plan.crashes {
+            assert!(c.at_s >= 0.0 && c.fleet < 2);
+            if c.at_s != 0.01 {
+                assert!(c.at_s <= 0.25, "random crash outside the horizon");
+            }
+        }
+    }
+
+    #[test]
+    fn inactive_plan_draws_nothing() {
+        let mut plan = FaultPlan::none();
+        assert!(!plan.is_active());
+        for _ in 0..16 {
+            assert!(!plan.draw_failure());
+        }
+    }
+
+    #[test]
+    fn backoff_doubles_and_caps() {
+        let r = RetryPolicy { max_attempts: 8, base_backoff_s: 0.01, cap_s: 0.05 };
+        assert_eq!(r.backoff(1), 0.01);
+        assert_eq!(r.backoff(2), 0.02);
+        assert_eq!(r.backoff(3), 0.04);
+        assert_eq!(r.backoff(4), 0.05, "capped");
+        assert_eq!(r.backoff(60), 0.05, "huge attempt counts must not overflow");
+    }
+
+    #[test]
+    fn validation_rejects_bad_fields() {
+        let fleets = 2;
+        let mut s = FaultSpec::none();
+        s.fail_prob = 1.5;
+        assert_eq!(s.validate(fleets).unwrap_err().field, "fail_prob");
+        let mut s = FaultSpec::none();
+        s.crash_rate = f64::NAN;
+        assert_eq!(s.validate(fleets).unwrap_err().field, "crash_rate");
+        let mut s = FaultSpec::none();
+        s.crashes.push(CrashSpec { at_s: 0.1, fleet: 2, repair_s: 0.0 });
+        let e = s.validate(fleets).unwrap_err();
+        assert_eq!(e.field, "crashes");
+        assert!(e.to_string().contains("fleet 2"), "{e}");
+        let mut s = FaultSpec::none();
+        s.crashes.push(CrashSpec { at_s: -1.0, fleet: 0, repair_s: 0.0 });
+        assert_eq!(s.validate(fleets).unwrap_err().field, "crashes");
+        let mut s = FaultSpec::none();
+        s.retry.max_attempts = 0;
+        assert_eq!(s.validate(fleets).unwrap_err().field, "retry.max_attempts");
+        let mut s = FaultSpec::none();
+        s.deadline_s = Some(0.0);
+        assert_eq!(s.validate(fleets).unwrap_err().field, "deadline_s");
+        let mut s = FaultSpec::none();
+        s.max_queue_depth = Some(0);
+        assert_eq!(s.validate(fleets).unwrap_err().field, "max_queue_depth");
+        assert!(FaultSpec::none().validate(1).is_ok());
+    }
+}

@@ -7,6 +7,13 @@
 //! fleet a matrix's batch may run on. All selection is deterministic:
 //! ties break to the lowest fleet id, loads compare via
 //! [`f64::total_cmp`], and nothing here consults wallclock or RNG.
+//!
+//! Faults (0.7): [`FleetPool::crash`] takes a fleet down for a repair
+//! interval — truncating any in-flight occupation (the [`CrashCut`]
+//! tells the server what to un-charge) and recording the downtime
+//! window — and [`FleetPool::choose_failover`] reroutes a batch whose
+//! placement-routed fleet is down (not merely busy) to a surviving
+//! idle fleet.
 
 use std::str::FromStr;
 
@@ -18,6 +25,9 @@ pub struct FleetStatus {
     /// Simulated second until which the fleet is occupied (exclusive:
     /// the fleet is idle *at* `busy_until`).
     pub busy_until: f64,
+    /// Simulated second until which the fleet is crashed (exclusive;
+    /// 0 on a fleet that never crashed).
+    pub down_until: f64,
     /// Total simulated seconds spent occupied (prepare + solve).
     pub busy_s: f64,
     /// Simulated seconds spent solving.
@@ -26,6 +36,24 @@ pub struct FleetStatus {
     pub prepare_s: f64,
     /// Batches this fleet has executed.
     pub batches: usize,
+    /// The current occupation, when busy: `(start, prepare_s, solve_s)`
+    /// of the in-flight batch — what [`FleetPool::crash`] needs to
+    /// un-charge the uncompleted remainder.
+    cur: Option<(f64, f64, f64)>,
+}
+
+/// What a crash truncated: the simulated seconds the killed batch had
+/// *not yet* completed, split by phase, so the server can back the charge
+/// out of its running totals.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CrashCut {
+    /// Uncompleted prepare seconds removed from the fleet's ledger.
+    pub prepare_cut: f64,
+    /// Uncompleted solve seconds removed from the fleet's ledger.
+    pub solve_cut: f64,
+    /// True when the crash actually killed an in-flight batch (the
+    /// fleet's `batches` count was decremented).
+    pub killed: bool,
 }
 
 /// Which fleet a matrix's batches may run on.
@@ -76,10 +104,21 @@ impl FromStr for Placement {
     }
 }
 
+/// Per-fleet downtime ledger: the crash-repair windows a fleet spent
+/// unavailable, for the report's downtime accounting.
+#[derive(Clone, Debug, Default)]
+struct DownTrack {
+    /// Non-overlapping `(down_at, up_at)` windows, ascending.
+    windows: Vec<(f64, f64)>,
+    /// Crashes that struck this fleet.
+    crashes: usize,
+}
+
 /// The dispatcher's view of N concurrent fleets.
 #[derive(Clone, Debug)]
 pub struct FleetPool {
     fleets: Vec<FleetStatus>,
+    down: Vec<DownTrack>,
 }
 
 impl FleetPool {
@@ -87,7 +126,10 @@ impl FleetPool {
     /// first, so an empty pool is always an internal bug.
     pub fn new(n: usize) -> Self {
         assert!(n >= 1, "a fleet pool needs at least one fleet");
-        FleetPool { fleets: vec![FleetStatus::default(); n] }
+        FleetPool {
+            fleets: vec![FleetStatus::default(); n],
+            down: vec![DownTrack::default(); n],
+        }
     }
 
     /// Number of fleets in the pool.
@@ -100,18 +142,27 @@ impl FleetPool {
         self.fleets.is_empty()
     }
 
-    /// True when fleet `f` can start a batch at simulated second `now`.
+    /// True when fleet `f` can start a batch at simulated second `now`:
+    /// neither occupied nor inside a crash-repair window.
     pub fn is_idle(&self, f: usize, now: f64) -> bool {
-        self.fleets[f].busy_until <= now
+        let s = &self.fleets[f];
+        s.busy_until <= now && s.down_until <= now
+    }
+
+    /// True when fleet `f` is inside a crash-repair window at `now`
+    /// (distinct from merely busy — a down fleet can't be waited on by
+    /// pinned placement, it must fail over).
+    pub fn is_down(&self, f: usize, now: f64) -> bool {
+        self.fleets[f].down_until > now
     }
 
     /// The idle fleet with the least cumulative busy time, ties to the
-    /// lowest id; `None` when every fleet is occupied at `now`.
+    /// lowest id; `None` when every fleet is occupied (or down) at `now`.
     pub fn least_loaded_idle(&self, now: f64) -> Option<usize> {
         self.fleets
             .iter()
             .enumerate()
-            .filter(|(_, s)| s.busy_until <= now)
+            .filter(|(_, s)| s.busy_until <= now && s.down_until <= now)
             .min_by(|(_, a), (_, b)| a.busy_s.total_cmp(&b.busy_s))
             .map(|(f, _)| f)
     }
@@ -144,19 +195,108 @@ impl FleetPool {
         }
     }
 
+    /// [`FleetPool::choose`] with crash failover: when the placement's
+    /// routed fleet is *down* (not merely busy), any least-loaded idle
+    /// surviving fleet takes the batch instead. Returns
+    /// `(fleet, failed_over)`; `None` still means "wait for a later
+    /// event" (the policy fleet is alive-but-busy, or every fleet is
+    /// busy/down — both guarantee a pending solve-done or fleet-up
+    /// wake-up).
+    pub fn choose_failover(
+        &self,
+        placement: Placement,
+        matrix: usize,
+        hot: bool,
+        now: f64,
+    ) -> Option<(usize, bool)> {
+        if let Some(f) = self.choose(placement, matrix, hot, now) {
+            return Some((f, false));
+        }
+        let home = matrix % self.fleets.len();
+        if self.is_down(home, now) {
+            return self.least_loaded_idle(now).map(|f| (f, true));
+        }
+        None
+    }
+
     /// Occupy fleet `f` from `start` for a `prepare_s + solve_s` batch;
     /// returns the completion time. The caller schedules the
     /// prepare-done / solve-done events at the returned instants.
     pub fn occupy(&mut self, f: usize, start: f64, prepare_s: f64, solve_s: f64) -> f64 {
         let s = &mut self.fleets[f];
         debug_assert!(s.busy_until <= start, "fleet {f} double-booked");
+        debug_assert!(s.down_until <= start, "fleet {f} occupied while down");
         let done = start + prepare_s + solve_s;
         s.busy_until = done;
         s.busy_s += prepare_s + solve_s;
         s.prepare_s += prepare_s;
         s.solve_s += solve_s;
         s.batches += 1;
+        s.cur = Some((start, prepare_s, solve_s));
         done
+    }
+
+    /// Crash fleet `f` at `now` for `repair_s` simulated seconds. If a
+    /// batch is in flight its uncompleted remainder is backed out of the
+    /// fleet's busy/prepare/solve ledgers (the completed prefix stays
+    /// charged — the fleet really did spend that time) and its batch
+    /// count is decremented; the returned [`CrashCut`] tells the server
+    /// how much to subtract from its own running totals. The fleet is
+    /// then unavailable until `now + repair_s`; a crash landing inside
+    /// an existing down window extends it.
+    pub fn crash(&mut self, f: usize, now: f64, repair_s: f64) -> CrashCut {
+        let s = &mut self.fleets[f];
+        let mut cut = CrashCut::default();
+        if s.busy_until > now {
+            let (start, prepare_s, solve_s) =
+                s.cur.expect("a busy fleet always has a current occupation");
+            let prep_end = start + prepare_s;
+            // Completed prefix of each phase at the crash instant.
+            let done_prep = if now < prep_end { now - start } else { prepare_s };
+            let done_solve = if now > prep_end { now - prep_end } else { 0.0 };
+            cut.prepare_cut = prepare_s - done_prep;
+            cut.solve_cut = solve_s - done_solve;
+            cut.killed = true;
+            s.prepare_s -= cut.prepare_cut;
+            s.solve_s -= cut.solve_cut;
+            s.busy_s -= cut.prepare_cut + cut.solve_cut;
+            s.batches -= 1;
+            s.busy_until = now;
+            s.cur = None;
+        }
+        let up_at = now + repair_s;
+        let d = &mut self.down[f];
+        d.crashes += 1;
+        if s.down_until > now {
+            // Still inside an earlier window: extend it if this crash
+            // reaches further.
+            if up_at > s.down_until {
+                if let Some(last) = d.windows.last_mut() {
+                    last.1 = up_at;
+                }
+                s.down_until = up_at;
+            }
+        } else if repair_s > 0.0 {
+            d.windows.push((now, up_at));
+            s.down_until = up_at;
+        }
+        cut
+    }
+
+    /// Simulated seconds fleet `f` spent down, clipped to `[0, horizon]`
+    /// (the report clips at `sim_end` so a repair window outlasting the
+    /// run doesn't count phantom downtime).
+    pub fn down_seconds(&self, f: usize, horizon: f64) -> f64 {
+        self.down[f]
+            .windows
+            .iter()
+            .map(|&(a, b)| (b.min(horizon) - a.min(horizon)).max(0.0))
+            .sum()
+    }
+
+    /// Crashes that have struck fleet `f`.
+    pub fn crashes_of(&self, f: usize) -> usize {
+        self.down[f].crashes
     }
 
     /// Accounting snapshot of fleet `f`.
@@ -222,6 +362,86 @@ mod tests {
         // Idle exactly at the completion instant.
         assert!(pool.is_idle(0, 1.75));
         assert!(!pool.is_idle(0, 1.5));
+    }
+
+    #[test]
+    fn crash_mid_solve_backs_out_the_uncompleted_remainder() {
+        let mut pool = FleetPool::new(2);
+        // Batch: prepare [1.0, 1.25), solve [1.25, 1.75).
+        let done = pool.occupy(0, 1.0, 0.25, 0.5);
+        assert_eq!(done, 1.75);
+        // Crash at 1.5: prepare fully completed, solve 0.25 of 0.5 done.
+        let cut = pool.crash(0, 1.5, 0.2);
+        assert!(cut.killed);
+        assert_eq!(cut.prepare_cut, 0.0);
+        assert_eq!(cut.solve_cut, 0.25);
+        let s = pool.status(0);
+        assert_eq!(s.prepare_s, 0.25, "completed prepare stays charged");
+        assert_eq!(s.solve_s, 0.25, "only the completed solve prefix stays");
+        assert_eq!(s.busy_s, 0.5);
+        assert_eq!(s.batches, 0, "the killed batch never completed");
+        assert_eq!(s.busy_until, 1.5);
+        // Down for the repair interval: not idle, and detectably down.
+        assert!(!pool.is_idle(0, 1.6));
+        assert!(pool.is_down(0, 1.6));
+        assert!(pool.is_idle(0, 1.7), "idle again at repair end");
+        assert_eq!(pool.crashes_of(0), 1);
+        assert_eq!(pool.down_seconds(0, 10.0), 0.2);
+        // Clipped at a horizon inside the window.
+        assert!((pool.down_seconds(0, 1.6) - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn crash_mid_prepare_uncharges_all_solve() {
+        let mut pool = FleetPool::new(1);
+        pool.occupy(0, 0.0, 1.0, 2.0);
+        let cut = pool.crash(0, 0.5, 0.0);
+        assert!(cut.killed);
+        assert_eq!(cut.prepare_cut, 0.5);
+        assert_eq!(cut.solve_cut, 2.0, "no solve second was reached");
+        let s = pool.status(0);
+        assert_eq!((s.prepare_s, s.solve_s), (0.5, 0.0));
+        // Zero repair: immediately available again, no downtime window.
+        assert!(pool.is_idle(0, 0.5));
+        assert_eq!(pool.down_seconds(0, 10.0), 0.0);
+        assert_eq!(pool.crashes_of(0), 1);
+    }
+
+    #[test]
+    fn crash_while_idle_only_opens_a_down_window() {
+        let mut pool = FleetPool::new(2);
+        let cut = pool.crash(1, 2.0, 0.5);
+        assert!(!cut.killed);
+        assert_eq!(cut.prepare_cut + cut.solve_cut, 0.0);
+        assert!(pool.is_down(1, 2.25));
+        // A second crash inside the window extends it.
+        pool.crash(1, 2.25, 1.0);
+        assert_eq!(pool.crashes_of(1), 2);
+        assert!(pool.is_down(1, 3.0));
+        assert!(pool.is_idle(1, 3.25));
+        assert_eq!(pool.down_seconds(1, 10.0), 1.25, "merged window [2.0, 3.25)");
+    }
+
+    #[test]
+    fn down_fleets_are_skipped_and_failover_prefers_survivors() {
+        let mut pool = FleetPool::new(2);
+        pool.crash(1, 0.0, 1.0);
+        // Matrix 1's pin home (fleet 1) is down → choose waits, failover
+        // reroutes to the surviving fleet 0.
+        assert_eq!(pool.choose(Placement::Pin, 1, false, 0.5), None);
+        assert_eq!(pool.choose_failover(Placement::Pin, 1, false, 0.5), Some((0, true)));
+        // An alive-but-busy home must NOT fail over (its solve-done is
+        // a pending wake-up; rerouting would double-prepare for no win).
+        pool.occupy(0, 0.5, 0.0, 1.0);
+        assert_eq!(pool.choose_failover(Placement::Pin, 0, false, 0.7), None);
+        // Replicate routing simply never selects a down fleet.
+        let mut pool = FleetPool::new(2);
+        pool.crash(0, 0.0, 1.0);
+        assert_eq!(pool.choose(Placement::Replicate, 0, false, 0.5), Some(1));
+        assert_eq!(
+            pool.choose_failover(Placement::Replicate, 0, false, 0.5),
+            Some((1, false))
+        );
     }
 
     #[test]

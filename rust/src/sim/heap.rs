@@ -9,11 +9,51 @@
 //! same events in the same order pop them in the same order, always.
 //!
 //! Times compare via [`f64::total_cmp`], so the ordering is total for
-//! every representable `f64`; non-finite times are rejected at push
-//! (an event at `NaN` or `∞` seconds is always a caller bug).
+//! every representable `f64`; non-finite and negative times are rejected
+//! at push (an event at `NaN`, `∞`, or `-3` seconds is always a caller
+//! bug). [`EventHeap::try_push`] reports the rejection as a typed
+//! [`SimError`]; [`EventHeap::push`] panics on it with context, in
+//! release builds too.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
+use std::fmt;
+
+/// A timestamp the simulation core refuses to schedule. Every variant is
+/// a caller bug — simulated clocks only move forward from zero — so the
+/// infallible [`EventHeap::push`] turns these into panics, while
+/// [`EventHeap::try_push`] surfaces them for layers that can attach more
+/// context (e.g. fault-spec validation).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SimError {
+    /// The event time was NaN or ±∞ — it has no place in a total order
+    /// over simulated seconds.
+    NonFiniteTime {
+        /// The rejected timestamp.
+        time: f64,
+    },
+    /// The event time was strictly before simulated second zero (note
+    /// `-0.0` is accepted: it orders before `+0.0` but is not negative).
+    NegativeTime {
+        /// The rejected timestamp.
+        time: f64,
+    },
+}
+
+impl fmt::Display for SimError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SimError::NonFiniteTime { time } => {
+                write!(f, "event time must be finite (got {time})")
+            }
+            SimError::NegativeTime { time } => {
+                write!(f, "event time must be ≥ 0 seconds (got {time})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SimError {}
 
 struct Entry<E> {
     time: f64,
@@ -68,14 +108,31 @@ impl<E> EventHeap<E> {
     /// Schedule `event` at simulated second `time`; returns the sequence
     /// number assigned (ties at equal `time` pop in sequence order).
     ///
-    /// Panics on non-finite `time` — a NaN/∞ deadline would silently
-    /// corrupt the pop order, so it fails loudly instead.
+    /// Panics on non-finite or negative `time` — a NaN/∞/negative
+    /// deadline would silently corrupt the pop order, so it fails loudly
+    /// instead (in release builds too). Use [`EventHeap::try_push`] to
+    /// handle the rejection as a value.
     pub fn push(&mut self, time: f64, event: E) -> u64 {
-        assert!(time.is_finite(), "event time must be finite (got {time})");
+        match self.try_push(time, event) {
+            Ok(seq) => seq,
+            Err(e) => panic!("EventHeap::push: {e}"),
+        }
+    }
+
+    /// Fallible [`EventHeap::push`]: rejects NaN/±∞ and negative times
+    /// with a typed [`SimError`] instead of panicking. `-0.0` is
+    /// accepted (it is not negative; it orders just before `+0.0`).
+    pub fn try_push(&mut self, time: f64, event: E) -> Result<u64, SimError> {
+        if !time.is_finite() {
+            return Err(SimError::NonFiniteTime { time });
+        }
+        if time < 0.0 {
+            return Err(SimError::NegativeTime { time });
+        }
         let seq = self.seq;
         self.seq += 1;
         self.heap.push(Entry { time, seq, event });
-        seq
+        Ok(seq)
     }
 
     /// Pop the earliest `(time, event)` pair, if any.
@@ -159,5 +216,48 @@ mod tests {
     fn rejects_non_finite_times() {
         let mut h = EventHeap::new();
         h.push(f64::NAN, ());
+    }
+
+    #[test]
+    #[should_panic(expected = "≥ 0")]
+    fn push_rejects_negative_times() {
+        let mut h = EventHeap::new();
+        h.push(-1.0, ());
+    }
+
+    #[test]
+    fn try_push_types_the_rejections() {
+        let mut h = EventHeap::new();
+        assert!(matches!(
+            h.try_push(f64::NAN, "nan"),
+            Err(SimError::NonFiniteTime { .. })
+        ));
+        assert_eq!(
+            h.try_push(f64::INFINITY, "inf"),
+            Err(SimError::NonFiniteTime { time: f64::INFINITY })
+        );
+        assert_eq!(
+            h.try_push(f64::NEG_INFINITY, "ninf"),
+            Err(SimError::NonFiniteTime { time: f64::NEG_INFINITY })
+        );
+        assert_eq!(
+            h.try_push(-0.25, "neg"),
+            Err(SimError::NegativeTime { time: -0.25 })
+        );
+        // Rejections must not burn sequence numbers or enqueue anything.
+        assert!(h.is_empty());
+        assert_eq!(h.try_push(0.0, "ok"), Ok(0));
+        // -0.0 is not negative: accepted, and orders before +0.0.
+        assert_eq!(h.try_push(-0.0, "negzero"), Ok(1));
+        assert_eq!(h.pop(), Some((-0.0, "negzero")));
+        assert_eq!(h.pop(), Some((0.0, "ok")));
+    }
+
+    #[test]
+    fn sim_error_messages_name_the_offense() {
+        let e = SimError::NonFiniteTime { time: f64::NAN };
+        assert!(e.to_string().contains("finite"), "{e}");
+        let e = SimError::NegativeTime { time: -2.5 };
+        assert!(e.to_string().contains("-2.5"), "{e}");
     }
 }

@@ -18,25 +18,36 @@
 //!   `gpu::model` in 0.6; `crate::gpu::{CostModel, KernelCost}` remain
 //!   as re-exports);
 //! * [`fleet::FleetPool`] — the multi-fleet dispatcher: per-fleet busy
-//!   horizons, least-loaded idle selection, and the
+//!   horizons, least-loaded idle selection, crash/repair windows with
+//!   failover ([`fleet::FleetPool::crash`] /
+//!   [`fleet::FleetPool::choose_failover`]), and the
 //!   [`fleet::Placement`] policy (pin / replicate / least-loaded) the
-//!   serving runtime routes matrices with.
+//!   serving runtime routes matrices with;
+//! * [`fault::FaultSpec`] / [`fault::FaultPlan`] — seeded, deterministic
+//!   fault injection (0.7): scheduled fleet crashes, transient dispatch
+//!   failures, per-query deadlines and queue bounds, expanded once per
+//!   run into a concrete crash schedule plus a seeded failure stream,
+//!   with the [`fault::RetryPolicy`] capped-exponential-backoff recovery
+//!   knobs.
 //!
-//! Determinism contract: every function here is a pure computation over
-//! `f64` simulated seconds and integer sequence numbers — no wallclock,
-//! no RNG, no iteration over unordered containers — so any layer built
-//! on it (the event-driven [`crate::serve::EigenServer`] in particular)
-//! replays byte-identically for a fixed workload seed at any fleet
-//! count.
+//! Determinism contract: every function here is either a pure
+//! computation over `f64` simulated seconds and integer sequence numbers
+//! or (fault generation only) a draw from an explicitly seeded
+//! [`crate::rng::Rng`] stream — no wallclock, no iteration over
+//! unordered containers — so any layer built on it (the event-driven
+//! [`crate::serve::EigenServer`] in particular) replays byte-identically
+//! for a fixed `(workload seed, fault seed)` pair at any fleet count.
 
 pub mod clock;
 pub mod cost;
 pub mod event;
+pub mod fault;
 pub mod fleet;
 pub mod heap;
 
 pub use clock::{fleet_time, PhaseCursor};
 pub use cost::{CostModel, KernelCost};
 pub use event::ServeEvent;
-pub use fleet::{FleetPool, FleetStatus, Placement};
-pub use heap::EventHeap;
+pub use fault::{CrashSpec, FaultError, FaultPlan, FaultSpec, RetryPolicy};
+pub use fleet::{CrashCut, FleetPool, FleetStatus, Placement};
+pub use heap::{EventHeap, SimError};

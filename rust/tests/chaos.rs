@@ -1,0 +1,326 @@
+//! Acceptance tests for deterministic fault injection and recovery
+//! (`EigenServer::run_with_faults` over `topk_eigen::sim::FaultSpec`):
+//!
+//! * a mid-solve fleet crash kills the in-flight batch, wipes the
+//!   victim's prepared-state cache, and the retry re-dispatches to the
+//!   surviving fleet — every *served* answer still bit-identical to a
+//!   standalone session, including answers riding crash-rebuilt state;
+//! * per-fleet phase accounting stays an exact partition under faults:
+//!   busy (solve + prepare) + down + idle = the whole run, per fleet;
+//! * a faulty run replays **byte-identically** for a fixed
+//!   `(workload seed, fault seed)` pair, at fleets ∈ {1, 2, 4};
+//! * an empty `FaultSpec` injects nothing: `run_with_faults` reproduces
+//!   `run`'s report byte-for-byte (no fault fields, same bytes);
+//! * a bounded queue under overload sheds bulk before interactive, and
+//!   `served + shed + failed = arrivals` always reconciles.
+
+use topk_eigen::serve::{
+    CoalescerConfig, EigenServer, MatrixRegistry, QueryOutcome, RegistryConfig, ServeReport,
+    ShedReason, WorkloadSpec,
+};
+use topk_eigen::sim::{CrashSpec, FaultSpec, Placement};
+use topk_eigen::sparse::suite;
+use topk_eigen::{Csr, PrecisionConfig, QueryParams, Solver};
+
+fn solver(k: usize, devices: usize) -> Solver {
+    Solver::builder()
+        .k(k)
+        .precision(PrecisionConfig::FDF)
+        .devices(devices)
+        .build()
+        .expect("config")
+}
+
+fn matrices() -> Vec<(String, Csr)> {
+    vec![
+        ("WB-GO".into(), suite::find("WB-GO").unwrap().generate_csr(0.3, 1)),
+        ("FL".into(), suite::find("FL").unwrap().generate_csr(0.3, 1)),
+    ]
+}
+
+fn registry<'m>(ms: &'m [(String, Csr)], budget: usize) -> MatrixRegistry<'m> {
+    let mut reg = MatrixRegistry::new(
+        solver(6, 1),
+        RegistryConfig { budget_bytes: budget, ..RegistryConfig::default() },
+    );
+    for (name, m) in ms {
+        reg.register(name, m);
+    }
+    reg
+}
+
+fn fleet_server<'m>(
+    ms: &'m [(String, Csr)],
+    fleets: usize,
+    placement: Placement,
+) -> EigenServer<'m> {
+    let regs: Vec<MatrixRegistry<'m>> = (0..fleets).map(|_| registry(ms, usize::MAX)).collect();
+    EigenServer::with_fleets(
+        regs,
+        CoalescerConfig { max_batch: 4, max_wait_s: 0.005, bulk_wait_factor: 4.0 },
+        placement,
+    )
+    .expect("fleet config")
+}
+
+fn run_faulty(
+    ms: &[(String, Csr)],
+    fleets: usize,
+    placement: Placement,
+    spec: &WorkloadSpec,
+    faults: &FaultSpec,
+) -> ServeReport {
+    let mut server = fleet_server(ms, fleets, placement);
+    let arrivals = {
+        let r = server.registry();
+        spec.generate(|n| r.index_of(n)).expect("workload")
+    };
+    server.run_with_faults(&arrivals, faults).expect("faulty run")
+}
+
+/// The mixed workload `tests/multi_fleet.rs` pins the fleet server with.
+fn spec(seed: u64) -> WorkloadSpec {
+    let mut s = WorkloadSpec::uniform(seed, 24, 400.0, &["WB-GO", "FL"], 6);
+    s.k_choices = vec![4, 6];
+    s.bulk_fraction = 0.25;
+    s
+}
+
+/// Standalone reference: the same query through a fresh prepare + session.
+fn standalone(k: usize, devices: usize, m: &Csr, q: &QueryParams) -> Vec<f64> {
+    let mut s = solver(k, devices);
+    let mut prepared = s.prepare(m).expect("prepare");
+    let sol = s.session(&mut prepared).solve(q).expect("solve");
+    sol.eigenvalues
+}
+
+fn assert_bits_eq(a: &[f64], b: &[f64], ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: eigenpair count");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: λ[{i}] differs ({x:e} vs {y:e})");
+    }
+}
+
+/// Every *served* record must carry the same bits a standalone session
+/// produces — shed/failed records carry no answer and are skipped.
+fn assert_served_match_standalone(report: &ServeReport, ms: &[(String, Csr)], ctx: &str) {
+    for r in &report.records {
+        if r.outcome != QueryOutcome::Served {
+            continue;
+        }
+        let reference = standalone(6, 1, &ms[r.matrix].1, &r.params);
+        assert_bits_eq(
+            &r.eigenvalues,
+            &reference,
+            &format!(
+                "{ctx}: query {} on {} via fleet {} (cold={}, retries={})",
+                r.id, ms[r.matrix].0, r.fleet, r.cold, r.retries
+            ),
+        );
+    }
+}
+
+fn assert_outcomes_reconcile(report: &ServeReport, ctx: &str) {
+    assert_eq!(
+        report.queries + report.shed + report.failed,
+        report.arrivals,
+        "{ctx}: served + shed + failed must equal arrivals"
+    );
+    assert_eq!(report.records.len(), report.arrivals, "{ctx}: one ledger row per arrival");
+}
+
+#[test]
+fn mid_solve_crash_fails_over_to_the_surviving_fleet_bitwise() {
+    let ms = matrices();
+    // Probe a fault-free pinned 2-fleet run for a fleet-0 batch, then
+    // crash fleet 0 exactly mid-batch. Up to that instant the faulty run
+    // replays the probe decision-for-decision (an explicit-crash-only
+    // spec draws no RNG), so the crash is guaranteed to strike in-flight.
+    let probe = run_faulty(&ms, 2, Placement::Pin, &spec(11), &FaultSpec::none());
+    let victim = probe
+        .records
+        .iter()
+        .filter(|r| r.fleet == 0)
+        .max_by(|a, b| (a.done_s - a.start_s).total_cmp(&(b.done_s - b.start_s)))
+        .expect("pin placement must route matrix 0 to fleet 0");
+    let crash_at = victim.start_s + (victim.done_s - victim.start_s) / 2.0;
+    assert!(crash_at > victim.start_s && crash_at < victim.done_s);
+
+    let mut faults = FaultSpec::none();
+    // A repair interval far past the run keeps fleet 0 down for the rest
+    // of it: every retry MUST land on the surviving fleet 1.
+    faults.crashes.push(CrashSpec { at_s: crash_at, fleet: 0, repair_s: 1e3 });
+    let report = run_faulty(&ms, 2, Placement::Pin, &spec(11), &faults);
+    let fs = report.faults.as_ref().expect("an active spec must emit the fault summary");
+
+    assert_eq!(fs.crashes, 1);
+    assert_eq!(fs.killed_batches, 1, "the crash must kill the in-flight batch");
+    assert!(fs.retries >= 1, "the killed batch must re-dispatch");
+    assert!(
+        fs.failovers >= 1,
+        "pinned work whose home is down must fail over to the survivor"
+    );
+    assert_eq!(report.failed, 0, "one crash is well within the retry budget");
+    assert_eq!(report.shed, 0);
+    assert_eq!(report.arrivals, 24);
+    assert_eq!(report.queries, 24, "every query must still be served");
+    assert_outcomes_reconcile(&report, "crash-failover");
+
+    // After the crash instant nothing runs on fleet 0 any more.
+    assert!(
+        report
+            .records
+            .iter()
+            .all(|r| r.fleet == 1 || r.start_s < crash_at),
+        "no batch may start on the dead fleet"
+    );
+    assert!(
+        report.records.iter().any(|r| r.retries > 0 && r.fleet == 1),
+        "the killed batch's queries must be re-served by fleet 1"
+    );
+    // The victim fleet's downtime is exactly the crash-to-end window.
+    assert!((fs.downtime_s[0] - (report.sim_end_s - crash_at)).abs() < 1e-9);
+    assert_eq!(fs.downtime_s[1], 0.0);
+
+    // The headline guarantee survives the chaos: every served answer —
+    // including the re-dispatched ones riding fleet 1's state and any
+    // answer after fleet 0's cache wipe — is bit-identical to a
+    // standalone session.
+    assert_served_match_standalone(&report, &ms, "crash-failover");
+}
+
+#[test]
+fn per_fleet_phase_accounting_partitions_the_run_under_faults() {
+    let ms = matrices();
+    let probe = run_faulty(&ms, 2, Placement::Pin, &spec(11), &FaultSpec::none());
+    let victim = probe
+        .records
+        .iter()
+        .filter(|r| r.fleet == 0)
+        .max_by(|a, b| (a.done_s - a.start_s).total_cmp(&(b.done_s - b.start_s)))
+        .expect("fleet 0 must serve");
+    let crash_at = victim.start_s + (victim.done_s - victim.start_s) / 2.0;
+    let mut faults = FaultSpec::none();
+    faults.crashes.push(CrashSpec { at_s: crash_at, fleet: 0, repair_s: 1e3 });
+    let report = run_faulty(&ms, 2, Placement::Pin, &spec(11), &faults);
+
+    // Busy (solve + prepare), down, and idle partition [0, sim_end]
+    // exactly, per fleet: the crash backs the killed batch's uncompleted
+    // remainder out of the busy ledger, and the down window is clipped
+    // at sim_end — so nothing is double-counted and nothing leaks.
+    for f in &report.per_fleet {
+        let busy = f.solve_s + f.prepare_s;
+        let idle = report.sim_end_s - busy - f.down_s;
+        assert!(busy >= 0.0, "fleet {}: negative busy time", f.fleet);
+        assert!(f.down_s >= 0.0, "fleet {}: negative downtime", f.fleet);
+        assert!(
+            idle >= -1e-9,
+            "fleet {}: busy {busy} + down {} overruns sim_end {}",
+            f.fleet,
+            f.down_s,
+            report.sim_end_s
+        );
+        assert!(
+            (busy + f.down_s + idle - report.sim_end_s).abs() < 1e-9,
+            "fleet {}: phases must partition the run exactly",
+            f.fleet
+        );
+    }
+    let f0 = &report.per_fleet[0];
+    assert_eq!(f0.crashes, 1);
+    assert!((f0.down_s - (report.sim_end_s - crash_at)).abs() < 1e-9);
+    assert_eq!(report.per_fleet[1].down_s, 0.0);
+    assert_eq!(report.per_fleet[1].crashes, 0);
+}
+
+#[test]
+fn faulty_replay_is_byte_identical_at_every_fleet_count() {
+    let ms = matrices();
+    let mut faults = FaultSpec::none();
+    faults.seed = 99;
+    faults.crash_rate = 30.0;
+    faults.repair_s = 0.01;
+    faults.fail_prob = 0.15;
+    faults.deadline_s = Some(0.5);
+    for fleets in [1usize, 2, 4] {
+        let a = run_faulty(&ms, fleets, Placement::Replicate, &spec(11), &faults);
+        let b = run_faulty(&ms, fleets, Placement::Replicate, &spec(11), &faults);
+        assert_eq!(
+            a.to_json(),
+            b.to_json(),
+            "fleets={fleets}: a faulty run must replay byte-identically"
+        );
+        assert!(a.faults.is_some(), "fleets={fleets}: active spec must report faults");
+        assert_eq!(a.arrivals, 24, "fleets={fleets}");
+        assert_outcomes_reconcile(&a, &format!("faulty replay, fleets={fleets}"));
+        assert_served_match_standalone(&a, &ms, &format!("faulty replay, fleets={fleets}"));
+    }
+}
+
+#[test]
+fn empty_fault_spec_reproduces_the_fault_free_report_byte_for_byte() {
+    let ms = matrices();
+    let clean = {
+        let mut server = fleet_server(&ms, 2, Placement::Replicate);
+        let arrivals = {
+            let r = server.registry();
+            spec(11).generate(|n| r.index_of(n)).expect("workload")
+        };
+        server.run(&arrivals).expect("clean run")
+    };
+    // A non-default seed and retry policy must stay inert: nothing can
+    // go wrong, so nothing about the run (or its bytes) may change.
+    let mut empty = FaultSpec::none();
+    empty.seed = 123;
+    empty.retry.max_attempts = 9;
+    let faulty = run_faulty(&ms, 2, Placement::Replicate, &spec(11), &empty);
+    assert_eq!(
+        clean.to_json(),
+        faulty.to_json(),
+        "an empty fault spec must reproduce the fault-free report exactly"
+    );
+    assert!(faulty.faults.is_none(), "an inert spec must not emit fault fields");
+}
+
+#[test]
+fn bounded_queue_under_overload_sheds_bulk_before_interactive() {
+    let ms = matrices();
+    // Saturating bulk-heavy traffic: 32 queries in a few milliseconds
+    // against a 2-deep per-matrix queue — far more than one fleet can
+    // absorb, so the bound must engage.
+    let mut wl = WorkloadSpec::uniform(17, 32, 5000.0, &["WB-GO", "FL"], 6);
+    wl.k_choices = vec![4, 6];
+    wl.bulk_fraction = 0.6;
+    let mut faults = FaultSpec::none();
+    faults.max_queue_depth = Some(2);
+    let report = run_faulty(&ms, 1, Placement::Replicate, &wl, &faults);
+    let fs = report.faults.as_ref().expect("fault summary");
+
+    assert_eq!(report.arrivals, 32);
+    assert_outcomes_reconcile(&report, "overload");
+    assert!(
+        fs.shed_queue_full > 0,
+        "a 2-deep queue under 5000 q/s must shed ({} shed)",
+        fs.shed_queue_full
+    );
+    let shed_by = |want| {
+        report
+            .records
+            .iter()
+            .filter(|r| {
+                r.outcome == QueryOutcome::Shed(ShedReason::QueueFull) && r.priority == want
+            })
+            .count()
+    };
+    let bulk_shed = shed_by(topk_eigen::serve::Priority::Bulk);
+    let interactive_shed = shed_by(topk_eigen::serve::Priority::Interactive);
+    assert!(bulk_shed > 0, "bulk-heavy overload must shed bulk queries");
+    assert!(
+        bulk_shed >= interactive_shed,
+        "bulk must shed first ({bulk_shed} bulk vs {interactive_shed} interactive)"
+    );
+    // Shedding is deterministic too: the overloaded run replays exactly.
+    let again = run_faulty(&ms, 1, Placement::Replicate, &wl, &faults);
+    assert_eq!(report.to_json(), again.to_json());
+    assert_served_match_standalone(&report, &ms, "overload");
+}
