@@ -133,8 +133,8 @@ fn main() {
             format!("{:.1}ms", cpu_model_s * 1e3),
             format!("{:.0}ms", cpu_wall * 1e3),
             fmt_ratio(vs_cpu),
-            fpga.map(|f| fmt_ratio(f)).unwrap_or_else(|| "n/a".into()),
-            vs_fpga.map(fmt_ratio).unwrap_or_else(|| "n/a".into()),
+            fpga.map_or_else(|| "n/a".into(), fmt_ratio),
+            vs_fpga.map_or_else(|| "n/a".into(), fmt_ratio),
             if e.out_of_core { "yes".into() } else { "".into() },
         ]);
     }

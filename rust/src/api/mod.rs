@@ -398,7 +398,7 @@ fn run_with_tolerance(
         // (ARPACK's convention); judge it by its own criterion so a
         // backend that just declared convergence is not failed here.
         let threshold = if native_tolerance {
-            tol * sol.eigenvalues.first().map(|l| l.abs()).unwrap_or(1.0).max(1e-30)
+            tol * sol.eigenvalues.first().map_or(1.0, |l| l.abs()).max(1e-30)
         } else {
             tol
         };

@@ -179,15 +179,15 @@ fn json_f64_array(xs: &[f64]) -> String {
 }
 
 fn opt_f64(x: Option<f64>) -> String {
-    x.map(json_f64).unwrap_or_else(|| "null".to_string())
+    x.map_or_else(|| "null".to_string(), json_f64)
 }
 
 fn opt_usize(x: Option<usize>) -> String {
-    x.map(|v| v.to_string()).unwrap_or_else(|| "null".to_string())
+    x.map_or_else(|| "null".to_string(), |v| v.to_string())
 }
 
 fn opt_str(x: Option<&str>) -> String {
-    x.map(json_str).unwrap_or_else(|| "null".to_string())
+    x.map_or_else(|| "null".to_string(), json_str)
 }
 
 /// RFC 8259 string escaping.
@@ -201,8 +201,8 @@ fn json_str(s: &str) -> String {
             '\n' => o.push_str("\\n"),
             '\r' => o.push_str("\\r"),
             '\t' => o.push_str("\\t"),
-            c if (c as u32) < 0x20 => {
-                let _ = write!(o, "\\u{:04x}", c as u32);
+            c if u32::from(c) < 0x20 => {
+                let _ = write!(o, "\\u{:04x}", u32::from(c));
             }
             c => o.push(c),
         }

@@ -48,7 +48,7 @@ pub struct BaselineConfig {
 impl Default for BaselineConfig {
     fn default() -> Self {
         BaselineConfig {
-            threads: std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4),
+            threads: std::thread::available_parallelism().map_or(4, |p| p.get()),
             krylov_dim: 0,
             max_restarts: 40,
             tol: 1e-8,
@@ -267,6 +267,7 @@ pub fn solve_topk_cpu_observed(
         v0 = next;
     }
 
+    // detlint: allow(D06, best is Some: the restart loop records a candidate on its first pass before any early exit)
     let (eigenvalues, eigenvectors, max_residual) = best.unwrap();
     BaselineResult {
         eigenvalues,

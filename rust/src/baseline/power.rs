@@ -52,7 +52,7 @@ pub fn power_iteration(m: &Csr, tol: f64, max_iters: usize, seed: u64) -> PowerR
         residual = norm2_f64(&r);
         iterations = it + 1;
         let nw = norm2_f64(&w);
-        if nw == 0.0 {
+        if nw <= 0.0 {
             break;
         }
         v.copy_from_slice(&w);

@@ -24,11 +24,11 @@ pub fn time<F: FnMut()>(reps: usize, mut f: F) -> Timing {
         f();
         samples.push(t.elapsed().as_secs_f64());
     }
-    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples.sort_by(|a, b| a.total_cmp(b));
     Timing {
         median_s: samples[samples.len() / 2],
         min_s: samples[0],
-        max_s: *samples.last().unwrap(),
+        max_s: samples[samples.len() - 1],
         reps: samples.len(),
     }
 }
@@ -103,7 +103,7 @@ pub fn json_escape(s: &str) -> String {
             '\n' => out.push_str("\\n"),
             '\r' => out.push_str("\\r"),
             '\t' => out.push_str("\\t"),
-            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c if u32::from(c) < 0x20 => out.push_str(&format!("\\u{:04x}", u32::from(c))),
             c => out.push(c),
         }
     }

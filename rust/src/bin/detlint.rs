@@ -1,0 +1,104 @@
+//! `detlint` CLI — determinism static analysis for the topk-eigen tree.
+//!
+//! ```text
+//! detlint [PATHS...] [--json] [--config detlint.toml]
+//! ```
+//!
+//! With no `PATHS`, scans the roots from `detlint.toml` (default
+//! `rust/src`). Exit codes: 0 clean, 1 findings, 2 usage/config error.
+//!
+//! Output is one finding per line, sorted by `(file, line, rule)`:
+//! rustc-style `file:line: rule: message` text by default, or stable
+//! field-order JSON objects with `--json`.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use topk_eigen::lint::{load_config, scan_tree};
+
+const USAGE: &str = "\
+detlint — determinism static analysis (rules D01-D06)
+
+USAGE:
+    detlint [PATHS...] [OPTIONS]
+
+ARGS:
+    PATHS...          files or directories to scan
+                      (default: roots from detlint.toml, else rust/src)
+
+OPTIONS:
+    --json            one JSON object per finding (stable field order)
+    --config <PATH>   config file (default: ./detlint.toml if present)
+    -h, --help        print this help
+
+EXIT CODES:
+    0  no findings    1  findings reported    2  usage or config error
+";
+
+fn main() -> ExitCode {
+    let mut paths: Vec<String> = Vec::new();
+    let mut json = false;
+    let mut config_path = PathBuf::from("detlint.toml");
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--json" => json = true,
+            "--config" => {
+                let Some(p) = args.next() else {
+                    eprintln!("detlint: --config needs a path\n\n{USAGE}");
+                    return ExitCode::from(2);
+                };
+                config_path = PathBuf::from(p);
+            }
+            "-h" | "--help" => {
+                print!("{USAGE}");
+                return ExitCode::SUCCESS;
+            }
+            flag if flag.starts_with('-') => {
+                eprintln!("detlint: unknown flag `{flag}`\n\n{USAGE}");
+                return ExitCode::from(2);
+            }
+            path => paths.push(path.to_string()),
+        }
+    }
+
+    let cfg = match load_config(&config_path) {
+        Ok(cfg) => cfg,
+        Err(e) => {
+            eprintln!("detlint: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    let report = match scan_tree(&paths, &cfg) {
+        Ok(report) => report,
+        Err(e) => {
+            eprintln!("detlint: {e}");
+            return ExitCode::from(2);
+        }
+    };
+
+    for entry in &report.unused_allows {
+        eprintln!(
+            "detlint: warning: stale allowlist entry ({} / {}) suppressed nothing",
+            entry.file, entry.rule
+        );
+    }
+    for finding in &report.findings {
+        if json {
+            println!("{}", finding.render_json());
+        } else {
+            println!("{}", finding.render_text());
+        }
+    }
+    if report.findings.is_empty() {
+        eprintln!("detlint: {} files scanned, clean", report.files_scanned);
+        ExitCode::SUCCESS
+    } else {
+        eprintln!(
+            "detlint: {} finding(s) in {} files",
+            report.findings.len(),
+            report.files_scanned
+        );
+        ExitCode::FAILURE
+    }
+}

@@ -44,11 +44,8 @@ pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Args {
         if let Some(rest) = a.strip_prefix("--") {
             if let Some((k, v)) = rest.split_once('=') {
                 out.flags.insert(k.to_string(), v.to_string());
-            } else if it
-                .peek()
-                .map(|n| !n.starts_with("--"))
-                .unwrap_or(false)
-            {
+            } else if it.peek().is_some_and(|n| !n.starts_with("--")) {
+                // detlint: allow(D06, peek returned Some on the line above so next() cannot be None)
                 let v = it.next().unwrap();
                 out.flags.insert(rest.to_string(), v);
             } else {

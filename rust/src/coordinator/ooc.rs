@@ -85,6 +85,7 @@ pub fn plan_partition(
             c.resident = true;
         }
         let actual: usize = chunks.iter().map(|c| c.ell.bytes()).sum();
+        // detlint: allow(D06, the allocation is clamped to mem.free() on this very line so it cannot exceed the budget)
         mem.alloc(actual.min(mem.free())).expect("estimate bounded actual");
         return PartitionPlan { resident: true, width: max_plan_width(&chunks), chunks };
     }

@@ -150,7 +150,9 @@ impl TopKSolver {
             });
         }
 
+        // detlint: begin-wallclock(host prepare wall_seconds statistic reported beside simulated time; never charged to the sim clock)
         let prep_start = Instant::now();
+        // detlint: end-wallclock
         let n = m.rows;
         let k = cfg.k;
         let g = cfg.devices;

@@ -84,7 +84,9 @@ impl TopKSolver {
                 ),
             });
         }
+        // detlint: begin-wallclock(host wall_seconds statistic reported beside simulated time; never charged to the sim clock)
         let wall_start = Instant::now();
+        // detlint: end-wallclock
         let n = prep.n;
         let k = query.k;
         let g = cfg.devices;
@@ -103,6 +105,7 @@ impl TopKSolver {
             .enumerate()
             .map(|(i, &used)| {
                 let mut d = Device::new(i, cfg.device_mem_bytes);
+                // detlint: allow(D06, the identical reservation succeeded at prepare time against the same budget)
                 d.mem.alloc(used).expect("prepared reservation fits by construction");
                 d
             })

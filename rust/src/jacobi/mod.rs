@@ -164,7 +164,8 @@ fn off2(a: &[f64], k: usize) -> f64 {
 /// One Givens rotation annihilating a[p,q] (f64).
 fn rotate(a: &mut [f64], v: &mut [f64], k: usize, p: usize, q: usize) {
     let apq = a[p * k + q];
-    if apq == 0.0 {
+    // |apq| <= 0 is the exact-zero rotation skip without a float equality.
+    if apq.abs() <= 0.0 {
         return;
     }
     let app = a[p * k + p];
@@ -197,7 +198,8 @@ fn rotate(a: &mut [f64], v: &mut [f64], k: usize, p: usize, q: usize) {
 /// One Givens rotation in f32 arithmetic.
 fn rotate_f32(a: &mut [f32], v: &mut [f32], k: usize, p: usize, q: usize) {
     let apq = a[p * k + q];
-    if apq == 0.0 {
+    // |apq| <= 0 is the exact-zero rotation skip without a float equality.
+    if apq.abs() <= 0.0 {
         return;
     }
     let app = a[p * k + p];
@@ -229,12 +231,7 @@ fn rotate_f32(a: &mut [f32], v: &mut [f32], k: usize, p: usize, q: usize) {
 /// Extract (λ, V) sorted by decreasing |λ|.
 fn collect(a: Vec<f64>, v: Vec<f64>, k: usize, sweeps: usize) -> SmallEig {
     let mut order: Vec<usize> = (0..k).collect();
-    order.sort_by(|&i, &j| {
-        a[j * k + j]
-            .abs()
-            .partial_cmp(&a[i * k + i].abs())
-            .unwrap_or(std::cmp::Ordering::Equal)
-    });
+    order.sort_by(|&i, &j| a[j * k + j].abs().total_cmp(&a[i * k + i].abs()));
     let values: Vec<f64> = order.iter().map(|&i| a[i * k + i]).collect();
     let vectors: Vec<Vec<f64>> = order
         .iter()

@@ -296,6 +296,21 @@
 //!
 //! See `DESIGN.md` for the complete system inventory and the experiment
 //! index mapping every table/figure of the paper to a bench target.
+//!
+//! ## Determinism invariants
+//!
+//! The replay and bit-identity guarantees above are enforced at the source
+//! level by [`lint`] (`cargo run --bin detlint`): no wallclock reads in
+//! sim-time-charged code, total float orderings, no unordered-map
+//! iteration in dispatch paths, lossy casts contained to the precision
+//! modules, allocation-free kernel hot paths, and panic-free library
+//! code. See the README section "Static analysis & determinism
+//! invariants" for the rule catalog and suppression syntax.
+
+// Unit tests assert exact representability and bit-identity on purpose
+// (quantization round-trips, canonical replays); the float_cmp deny below
+// in [lints.clippy] stays in force for non-test builds.
+#![cfg_attr(test, allow(clippy::float_cmp))]
 
 pub mod api;
 pub mod baseline;
@@ -305,6 +320,7 @@ pub mod coordinator;
 pub mod gpu;
 pub mod jacobi;
 pub mod linalg;
+pub mod lint;
 pub mod metrics;
 pub mod precision;
 pub mod prop;

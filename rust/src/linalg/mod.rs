@@ -137,7 +137,7 @@ pub fn axpy(a: f64, x: &[f64], y: &mut [f64]) {
 
 /// `x ← x / s`.
 pub fn scale_inv(x: &mut [f64], s: f64) {
-    debug_assert!(s != 0.0);
+    debug_assert!(s.abs() > 0.0);
     let inv = 1.0 / s;
     for xi in x.iter_mut() {
         *xi *= inv;

@@ -1,0 +1,186 @@
+//! `detlint.toml` parsing.
+//!
+//! The config is a deliberately tiny TOML subset (the crate is
+//! dependency-free, so there is no TOML crate to lean on): `#` comments,
+//! a repeatable top-level `root = "path"` key naming scan roots, and
+//! `[[allow]]` blocks with `file` / `rule` / `reason` string keys:
+//!
+//! ```text
+//! root = "rust/src"
+//!
+//! [[allow]]
+//! file = "rust/src/runtime/pjrt.rs"
+//! rule = "D06"
+//! reason = "feature-gated FFI marshalling fails fast at load time"
+//! ```
+//!
+//! Every allowlist entry must carry a written reason (two or more words);
+//! a missing or placeholder reason is a config error (exit 2), mirroring
+//! the pragma rule in [`crate::lint::tokenizer`].
+
+use crate::lint::tokenizer::{is_known_rule, is_written_reason};
+
+/// One `[[allow]]` entry: suppress `rule` findings in `file`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct AllowEntry {
+    /// Path the entry applies to, exactly as findings report it
+    /// (repo-relative, `/`-separated).
+    pub file: String,
+    /// Rule id (`D01` … `D06`).
+    pub rule: String,
+    /// Mandatory written justification.
+    pub reason: String,
+}
+
+/// Parsed lint configuration.
+#[derive(Clone, Debug, Default)]
+pub struct LintConfig {
+    /// Scan roots used when the CLI receives no explicit paths.
+    pub roots: Vec<String>,
+    /// File-level allowlist.
+    pub allows: Vec<AllowEntry>,
+}
+
+impl LintConfig {
+    /// Config used when no `detlint.toml` exists: scan `rust/src`, allow
+    /// nothing.
+    pub fn fallback() -> Self {
+        LintConfig { roots: vec!["rust/src".to_string()], allows: Vec::new() }
+    }
+
+    /// Parse config text; errors carry a 1-based line number.
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let mut cfg = LintConfig::default();
+        let mut cur: Option<AllowEntry> = None;
+        for (ix, raw) in text.lines().enumerate() {
+            let lno = ix + 1;
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            if line == "[[allow]]" {
+                if let Some(entry) = cur.take() {
+                    cfg.allows.push(finish_entry(entry, lno)?);
+                }
+                cur = Some(AllowEntry {
+                    file: String::new(),
+                    rule: String::new(),
+                    reason: String::new(),
+                });
+                continue;
+            }
+            let Some((key, value)) = line.split_once('=') else {
+                return Err(format!("detlint.toml:{lno}: expected `key = \"value\"`"));
+            };
+            let key = key.trim();
+            let value = value.trim();
+            let Some(value) = value
+                .strip_prefix('"')
+                .and_then(|v| v.strip_suffix('"'))
+            else {
+                return Err(format!(
+                    "detlint.toml:{lno}: value for `{key}` must be a double-quoted string"
+                ));
+            };
+            match key {
+                "root" => {
+                    if cur.is_some() {
+                        return Err(format!(
+                            "detlint.toml:{lno}: `root` must appear before any [[allow]] block"
+                        ));
+                    }
+                    cfg.roots.push(value.to_string());
+                }
+                "file" | "rule" | "reason" => {
+                    let Some(entry) = cur.as_mut() else {
+                        return Err(format!(
+                            "detlint.toml:{lno}: `{key}` outside an [[allow]] block"
+                        ));
+                    };
+                    let slot = match key {
+                        "file" => &mut entry.file,
+                        "rule" => &mut entry.rule,
+                        _ => &mut entry.reason,
+                    };
+                    if !slot.is_empty() {
+                        return Err(format!(
+                            "detlint.toml:{lno}: duplicate `{key}` in [[allow]] block"
+                        ));
+                    }
+                    *slot = value.to_string();
+                }
+                _ => {
+                    return Err(format!("detlint.toml:{lno}: unknown key `{key}`"));
+                }
+            }
+        }
+        if let Some(entry) = cur.take() {
+            let end = text.lines().count();
+            cfg.allows.push(finish_entry(entry, end)?);
+        }
+        if cfg.roots.is_empty() {
+            cfg.roots = LintConfig::fallback().roots;
+        }
+        Ok(cfg)
+    }
+}
+
+fn finish_entry(entry: AllowEntry, lno: usize) -> Result<AllowEntry, String> {
+    if entry.file.is_empty() {
+        return Err(format!("detlint.toml:{lno}: [[allow]] block is missing `file`"));
+    }
+    if !is_known_rule(&entry.rule) {
+        return Err(format!(
+            "detlint.toml:{lno}: [[allow]] for `{}` names unknown rule `{}`",
+            entry.file, entry.rule
+        ));
+    }
+    if !is_written_reason(&entry.reason) {
+        return Err(format!(
+            "detlint.toml:{lno}: [[allow]] for `{}` ({}) needs a written reason \
+             (two or more words)",
+            entry.file, entry.rule
+        ));
+    }
+    Ok(entry)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_roots_and_allow_blocks() {
+        let cfg = LintConfig::parse(
+            "# comment\nroot = \"rust/src\"\n\n[[allow]]\nfile = \"a/b.rs\"\nrule = \"D06\"\nreason = \"fails fast at startup\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.roots, vec!["rust/src".to_string()]);
+        assert_eq!(cfg.allows.len(), 1);
+        assert_eq!(cfg.allows[0].rule, "D06");
+    }
+
+    #[test]
+    fn empty_config_falls_back_to_default_root() {
+        let cfg = LintConfig::parse("");
+        assert!(cfg.is_ok_and(|c| c.roots == vec!["rust/src".to_string()]));
+    }
+
+    #[test]
+    fn rejects_missing_reason_unknown_rule_and_bad_keys() {
+        let missing = LintConfig::parse("[[allow]]\nfile = \"a.rs\"\nrule = \"D01\"\n");
+        assert!(missing.is_err());
+        let one_word = LintConfig::parse(
+            "[[allow]]\nfile = \"a.rs\"\nrule = \"D01\"\nreason = \"benchmark\"\n",
+        );
+        assert!(one_word.is_err());
+        let unknown = LintConfig::parse(
+            "[[allow]]\nfile = \"a.rs\"\nrule = \"D99\"\nreason = \"two words\"\n",
+        );
+        assert!(unknown.is_err());
+        let key = LintConfig::parse("frobnicate = \"x\"\n");
+        assert!(key.is_err());
+        let unquoted = LintConfig::parse("root = rust/src\n");
+        assert!(unquoted.is_err());
+    }
+}

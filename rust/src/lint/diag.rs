@@ -1,0 +1,92 @@
+//! Finding type and output rendering for `detlint`.
+//!
+//! Two formats, both one finding per line and sorted by
+//! `(file, line, rule)` so output is diffable across runs:
+//!
+//! * text: `file:line: RULE: message` (rustc-style, clickable in editors)
+//! * `--json`: one JSON object per line with stable field order
+//!   `{"file": …, "line": …, "rule": …, "message": …}` so future tooling
+//!   can diff findings across PRs.
+
+use crate::bench_util::json_escape;
+
+/// One rule violation (or a `D00` directive/usage error).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Finding {
+    /// Path exactly as scanned (repo-relative, `/`-separated).
+    pub file: String,
+    /// 1-based source line.
+    pub line: usize,
+    /// Rule id (`D00` … `D06`).
+    pub rule: String,
+    /// Human-readable description.
+    pub message: String,
+}
+
+impl Finding {
+    /// rustc-style `file:line: RULE: message`.
+    pub fn render_text(&self) -> String {
+        format!("{}:{}: {}: {}", self.file, self.line, self.rule, self.message)
+    }
+
+    /// One-line JSON object with stable field order.
+    pub fn render_json(&self) -> String {
+        format!(
+            "{{\"file\": \"{}\", \"line\": {}, \"rule\": \"{}\", \"message\": \"{}\"}}",
+            json_escape(&self.file),
+            self.line,
+            json_escape(&self.rule),
+            json_escape(&self.message)
+        )
+    }
+}
+
+/// Sort findings into the canonical `(file, line, rule)` report order.
+pub fn sort_findings(findings: &mut [Finding]) {
+    findings.sort_by(|a, b| {
+        a.file
+            .cmp(&b.file)
+            .then(a.line.cmp(&b.line))
+            .then(a.rule.cmp(&b.rule))
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_field_order_is_stable() {
+        let f = Finding {
+            file: "rust/src/serve/scheduler.rs".to_string(),
+            line: 171,
+            rule: "D02".to_string(),
+            message: "say \"total_cmp\"".to_string(),
+        };
+        assert_eq!(
+            f.render_json(),
+            "{\"file\": \"rust/src/serve/scheduler.rs\", \"line\": 171, \
+             \"rule\": \"D02\", \"message\": \"say \\\"total_cmp\\\"\"}"
+        );
+        assert_eq!(
+            f.render_text(),
+            "rust/src/serve/scheduler.rs:171: D02: say \"total_cmp\""
+        );
+    }
+
+    #[test]
+    fn sort_is_by_file_then_line_then_rule() {
+        let mk = |file: &str, line: usize, rule: &str| Finding {
+            file: file.to_string(),
+            line,
+            rule: rule.to_string(),
+            message: String::new(),
+        };
+        let mut v = vec![mk("b.rs", 1, "D02"), mk("a.rs", 9, "D06"), mk("a.rs", 9, "D01")];
+        sort_findings(&mut v);
+        assert_eq!(
+            v.iter().map(|f| (f.file.as_str(), f.line, f.rule.as_str())).collect::<Vec<_>>(),
+            vec![("a.rs", 9, "D01"), ("a.rs", 9, "D06"), ("b.rs", 1, "D02")]
+        );
+    }
+}

@@ -1,0 +1,104 @@
+//! `detlint` — the crate's determinism static-analysis pass.
+//!
+//! The serving/simulation stack promises byte-identical replays at any
+//! fleet count and bit-identical solve results across crash/evict/
+//! re-prepare. Those guarantees rest on source-level invariants (no
+//! wallclock in sim-time-charged code, total float orderings, no
+//! unordered-map iteration in dispatch paths, contained lossy casts,
+//! allocation-free kernel inner loops, panic-free library code) that
+//! replay tests only catch after the fact. `detlint` turns them into a
+//! compile-time-style gate: a dependency-free scanner (`cargo run --bin
+//! detlint`) that walks `rust/src`, applies the D01–D06 rule catalog
+//! (see [`rules`]), and exits non-zero on any unexcused finding.
+//!
+//! Layout:
+//! * [`tokenizer`] — minimal Rust lexer + `detlint:` comment directives
+//! * [`rules`] — rule catalog, scoping, test-item skipping, matching
+//! * [`config`] — `detlint.toml` (scan roots + reasoned allowlist)
+//! * [`diag`] — findings, text and `--json` rendering
+//!
+//! The binary lives at `rust/src/bin/detlint.rs`; the rule catalog and
+//! suppression syntax are documented in the README under "Static
+//! analysis & determinism invariants".
+
+pub mod config;
+pub mod diag;
+pub mod rules;
+pub mod tokenizer;
+
+pub use config::{AllowEntry, LintConfig};
+pub use diag::{sort_findings, Finding};
+pub use rules::{apply_allowlist, in_scope, scan_str};
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// Result of scanning a file tree through the allowlist.
+#[derive(Debug)]
+pub struct TreeReport {
+    /// Surviving findings, sorted by `(file, line, rule)`.
+    pub findings: Vec<Finding>,
+    /// Number of `.rs` files scanned.
+    pub files_scanned: usize,
+    /// Allowlist entries that suppressed nothing (stale — warn on these).
+    pub unused_allows: Vec<AllowEntry>,
+}
+
+/// Recursively collect `.rs` files under `root` in sorted (deterministic)
+/// order. `root` may itself be a file.
+pub fn collect_files(root: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let meta = fs::metadata(root)
+        .map_err(|e| format!("{}: {e}", root.display()))?;
+    if meta.is_file() {
+        if root.extension().is_some_and(|ext| ext == "rs") {
+            out.push(root.to_path_buf());
+        }
+        return Ok(());
+    }
+    let entries = fs::read_dir(root).map_err(|e| format!("{}: {e}", root.display()))?;
+    let mut paths: Vec<PathBuf> = Vec::new();
+    for entry in entries {
+        let entry = entry.map_err(|e| format!("{}: {e}", root.display()))?;
+        paths.push(entry.path());
+    }
+    paths.sort();
+    for p in paths {
+        if p.is_dir() {
+            collect_files(&p, out)?;
+        } else if p.extension().is_some_and(|ext| ext == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Scan `paths` (each a file or directory; defaults to `cfg.roots` when
+/// empty) and apply the allowlist.
+pub fn scan_tree(paths: &[String], cfg: &LintConfig) -> Result<TreeReport, String> {
+    let roots: &[String] = if paths.is_empty() { &cfg.roots } else { paths };
+    let mut files: Vec<PathBuf> = Vec::new();
+    for root in roots {
+        collect_files(Path::new(root), &mut files)?;
+    }
+    files.sort();
+    files.dedup();
+    let mut findings: Vec<Finding> = Vec::new();
+    for file in &files {
+        let src = fs::read_to_string(file)
+            .map_err(|e| format!("{}: {e}", file.display()))?;
+        let rel = file.to_string_lossy().replace('\\', "/");
+        findings.extend(scan_str(&rel, &src));
+    }
+    let (mut kept, unused_allows) = apply_allowlist(findings, cfg);
+    sort_findings(&mut kept);
+    Ok(TreeReport { findings: kept, files_scanned: files.len(), unused_allows })
+}
+
+/// Load `detlint.toml` from `path` if it exists, else the fallback config.
+pub fn load_config(path: &Path) -> Result<LintConfig, String> {
+    match fs::read_to_string(path) {
+        Ok(text) => LintConfig::parse(&text),
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(LintConfig::fallback()),
+        Err(e) => Err(format!("{}: {e}", path.display())),
+    }
+}

@@ -1,0 +1,526 @@
+//! The `detlint` determinism rule catalog and matching engine.
+//!
+//! Rules operate on the token stream from [`crate::lint::tokenizer`], so
+//! they can never fire inside comments or string literals, and they skip
+//! `#[test]` / `#[cfg(test)]` items entirely (test code is allowed to
+//! panic, allocate and measure wallclock).
+//!
+//! | Rule | Invariant | Scope |
+//! |------|-----------|-------|
+//! | D00  | directive/usage errors (never suppressible) | everywhere |
+//! | D01  | no wallclock outside `begin-wallclock` spans | `coordinator/`, `serve/`, `sim/`, `main.rs` |
+//! | D02  | total float order: no `partial_cmp`, no float-literal `==`/`!=` | all scanned files |
+//! | D03  | no unordered hash collections | `coordinator/`, `serve/`, `sim/` |
+//! | D04  | lossy `as` narrowing only in `precision.rs` / `runtime/fixedpoint.rs` | all other files |
+//! | D05  | no allocation inside `hot-path` regions | marked regions |
+//! | D06  | no panic paths (`unwrap`/`expect`/`panic!`/…) in library code | all but `main.rs`, `bin/` |
+//!
+//! Suppression: a `detlint: allow(rule, reason)` line comment covers its
+//! own line and the next line; `detlint.toml` `[[allow]]` entries cover a
+//! whole `(file, rule)` pair. Both require a written reason.
+
+use crate::lint::config::{AllowEntry, LintConfig};
+use crate::lint::diag::Finding;
+use crate::lint::tokenizer::{tokenize, Directive, Tok, TokKind};
+
+/// Integer/float target types whose `as` casts are considered lossy
+/// narrowing under D04. `usize`/`u64`/`i64`/`f64` widenings are allowed:
+/// all in-tree index math is `usize`-based and those casts are lossless
+/// on the 64-bit targets this crate supports.
+const NARROW_TARGETS: [&str; 7] = ["f32", "i8", "i16", "i32", "u8", "u16", "u32"];
+
+/// Is `rule` enforced for the file at `path`?
+///
+/// Paths are matched on `/`-separated, repo-relative form, exactly as the
+/// scanner reports them.
+pub fn in_scope(rule: &str, path: &str) -> bool {
+    let deterministic =
+        path.contains("coordinator/") || path.contains("serve/") || path.contains("sim/");
+    match rule {
+        "D01" => deterministic || path.ends_with("main.rs"),
+        "D03" => deterministic,
+        "D04" => !(path.ends_with("precision.rs") || path.ends_with("fixedpoint.rs")),
+        "D06" => !(path.ends_with("main.rs") || path.contains("/bin/") || path.starts_with("bin/")),
+        // D02 and D05 apply everywhere (D05 only fires inside marked regions).
+        _ => true,
+    }
+}
+
+/// Token-index ranges covered by `#[test]` / `#[cfg(test)]` items.
+///
+/// An attribute skips its item when its first identifier is exactly
+/// `test`, or is `cfg` with `test` among its arguments and no `not`
+/// (so `#[cfg(not(test))]` and `#[cfg_attr(test, …)]` stay scanned).
+/// The skipped range runs to the matching close brace of the item body;
+/// an intervening `;` (e.g. `#[cfg(test)] use …;`) aborts the skip.
+fn test_ranges(toks: &[Tok]) -> Vec<(usize, usize)> {
+    let mut ranges: Vec<(usize, usize)> = Vec::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        if !(toks[i].is_punct("#") && toks.get(i + 1).is_some_and(|t| t.is_punct("["))) {
+            i += 1;
+            continue;
+        }
+        // Find the matching `]` of the attribute.
+        let mut depth = 0usize;
+        let mut close = None;
+        let mut j = i + 1;
+        while j < toks.len() {
+            if toks[j].is_punct("[") {
+                depth += 1;
+            } else if toks[j].is_punct("]") {
+                depth -= 1;
+                if depth == 0 {
+                    close = Some(j);
+                    break;
+                }
+            }
+            j += 1;
+        }
+        let Some(close) = close else { break };
+        let inner = &toks[i + 2..close];
+        let first_ident = inner.iter().find(|t| t.kind == TokKind::Ident);
+        let is_test_attr = match first_ident {
+            Some(f) if f.text == "test" => true,
+            Some(f) if f.text == "cfg" => {
+                inner.iter().any(|t| t.is_ident("test"))
+                    && !inner.iter().any(|t| t.is_ident("not"))
+            }
+            _ => false,
+        };
+        if !is_test_attr {
+            i = close + 1;
+            continue;
+        }
+        // Walk to the item body's `{`; a `;` first means a braceless item.
+        let mut k = close + 1;
+        let mut open = None;
+        while k < toks.len() {
+            if toks[k].is_punct("{") {
+                open = Some(k);
+                break;
+            }
+            if toks[k].is_punct(";") {
+                break;
+            }
+            k += 1;
+        }
+        let Some(open) = open else {
+            i = close + 1;
+            continue;
+        };
+        let mut brace_depth = 1usize;
+        let mut m = open + 1;
+        while m < toks.len() && brace_depth > 0 {
+            if toks[m].is_punct("{") {
+                brace_depth += 1;
+            } else if toks[m].is_punct("}") {
+                brace_depth -= 1;
+            }
+            m += 1;
+        }
+        ranges.push((i, m.saturating_sub(1)));
+        i = m;
+    }
+    ranges
+}
+
+fn in_spans(spans: &[(usize, usize)], line: usize) -> bool {
+    spans.iter().any(|&(s, e)| s <= line && line <= e)
+}
+
+/// Scan one file's source text. Applies pragma suppressions; the
+/// `detlint.toml` allowlist is applied separately by
+/// [`apply_allowlist`] so callers can track unused entries.
+pub fn scan_str(path: &str, src: &str) -> Vec<Finding> {
+    let path = path.replace('\\', "/");
+    let (toks, dirs) = tokenize(src);
+    let mut findings: Vec<Finding> = Vec::new();
+    let mut push = |line: usize, rule: &str, message: String, out: &mut Vec<Finding>| {
+        out.push(Finding { file: path.clone(), line, rule: rule.to_string(), message });
+    };
+
+    // --- directives ---------------------------------------------------
+    let mut allow: Vec<(usize, String)> = Vec::new();
+    let mut wallclock: Vec<(usize, usize)> = Vec::new();
+    let mut hot: Vec<(usize, usize)> = Vec::new();
+    let mut wc_stack: Vec<usize> = Vec::new();
+    let mut hot_stack: Vec<usize> = Vec::new();
+    for d in &dirs {
+        match &d.directive {
+            Directive::Allow { rule, .. } => {
+                allow.push((d.line, rule.clone()));
+                allow.push((d.line + 1, rule.clone()));
+            }
+            Directive::BeginWallclock { .. } => wc_stack.push(d.line),
+            Directive::EndWallclock => {
+                if let Some(start) = wc_stack.pop() {
+                    wallclock.push((start, d.line));
+                } else {
+                    push(
+                        d.line,
+                        "D00",
+                        "end-wallclock without a matching begin-wallclock".to_string(),
+                        &mut findings,
+                    );
+                }
+            }
+            Directive::HotPath => hot_stack.push(d.line),
+            Directive::EndHotPath => {
+                if let Some(start) = hot_stack.pop() {
+                    hot.push((start, d.line));
+                } else {
+                    push(
+                        d.line,
+                        "D00",
+                        "end-hot-path without a matching hot-path".to_string(),
+                        &mut findings,
+                    );
+                }
+            }
+            Directive::Malformed { message } => {
+                push(d.line, "D00", message.clone(), &mut findings);
+            }
+        }
+    }
+    for start in wc_stack {
+        push(start, "D00", "begin-wallclock span is never closed".to_string(), &mut findings);
+    }
+    for start in hot_stack {
+        push(start, "D00", "hot-path region is never closed".to_string(), &mut findings);
+    }
+
+    // --- token skipping for test items --------------------------------
+    let mut skip = vec![false; toks.len()];
+    for (s, e) in test_ranges(&toks) {
+        for flag in skip.iter_mut().take(e + 1).skip(s) {
+            *flag = true;
+        }
+    }
+
+    // --- rule matching -------------------------------------------------
+    let mut raw: Vec<Finding> = Vec::new();
+    for i in 0..toks.len() {
+        if skip[i] {
+            continue;
+        }
+        let t = &toks[i];
+        let prev = if i > 0 { Some(&toks[i - 1]) } else { None };
+        let next = toks.get(i + 1);
+
+        // D01: wallclock in deterministic modules.
+        if in_scope("D01", &path) {
+            let instant_now = t.is_ident("Instant")
+                && next.is_some_and(|n| n.is_punct("::"))
+                && toks.get(i + 2).is_some_and(|n| n.is_ident("now"));
+            if (instant_now || t.is_ident("SystemTime")) && !in_spans(&wallclock, t.line) {
+                push(
+                    t.line,
+                    "D01",
+                    "wallclock in a deterministic module; charge sim-time or wrap the \
+                     measurement in a begin-wallclock span"
+                        .to_string(),
+                    &mut raw,
+                );
+            }
+        }
+
+        // D02: total float order.
+        if in_scope("D02", &path) {
+            if t.is_ident("partial_cmp") && !prev.is_some_and(|p| p.is_ident("fn")) {
+                push(
+                    t.line,
+                    "D02",
+                    "partial_cmp is not a total order on floats; use f64::total_cmp"
+                        .to_string(),
+                    &mut raw,
+                );
+            }
+            if (t.is_punct("==") || t.is_punct("!="))
+                && (prev.is_some_and(Tok::is_float) || next.is_some_and(|n| n.is_float()))
+            {
+                push(
+                    t.line,
+                    "D02",
+                    "float-literal equality comparison; use a magnitude test or annotate \
+                     the exact-representation intent"
+                        .to_string(),
+                    &mut raw,
+                );
+            }
+        }
+
+        // D03: unordered iteration sources.
+        if in_scope("D03", &path) && (t.is_ident("HashMap") || t.is_ident("HashSet")) {
+            push(
+                t.line,
+                "D03",
+                format!(
+                    "{} iteration order is nondeterministic; use BTreeMap/BTreeSet or a Vec",
+                    t.text
+                ),
+                &mut raw,
+            );
+        }
+
+        // D04: lossy cast containment.
+        if in_scope("D04", &path) && t.is_ident("as") {
+            if let Some(n) = next {
+                if n.kind == TokKind::Ident && NARROW_TARGETS.contains(&n.text.as_str()) {
+                    push(
+                        t.line,
+                        "D04",
+                        format!(
+                            "lossy `as {}` narrowing outside precision.rs/runtime/fixedpoint.rs; \
+                             use a checked conversion or annotate the contained semantics",
+                            n.text
+                        ),
+                        &mut raw,
+                    );
+                }
+            }
+        }
+
+        // D05: allocation inside hot-path regions.
+        if in_scope("D05", &path) && in_spans(&hot, t.line) {
+            let bang = next.is_some_and(|n| n.is_punct("!"));
+            let path_call = next.is_some_and(|n| n.is_punct("::"));
+            let alloc = ((t.is_ident("vec") || t.is_ident("format")) && bang)
+                || ((t.is_ident("Vec") || t.is_ident("Box") || t.is_ident("String")) && path_call)
+                || t.is_ident("to_vec")
+                || t.is_ident("to_owned")
+                || t.is_ident("to_string")
+                || t.is_ident("collect")
+                || t.is_ident("with_capacity")
+                || t.is_ident("clone");
+            if alloc {
+                push(
+                    t.line,
+                    "D05",
+                    "heap allocation inside a hot-path region; hoist the buffer into \
+                     prepared/session state"
+                        .to_string(),
+                    &mut raw,
+                );
+            }
+        }
+
+        // D06: panic paths in library code.
+        if in_scope("D06", &path) {
+            let method = t.is_ident("unwrap")
+                || t.is_ident("expect")
+                || t.is_ident("unwrap_err")
+                || t.is_ident("expect_err");
+            let after_access = prev.is_some_and(|p| p.is_punct(".") || p.is_punct("::"));
+            let panic_macro = (t.is_ident("panic")
+                || t.is_ident("unreachable")
+                || t.is_ident("todo")
+                || t.is_ident("unimplemented"))
+                && next.is_some_and(|n| n.is_punct("!"));
+            if (method && after_access) || panic_macro {
+                push(
+                    t.line,
+                    "D06",
+                    format!(
+                        "panic path `{}` in library code; return SolverError or annotate why \
+                         it cannot fire",
+                        t.text
+                    ),
+                    &mut raw,
+                );
+            }
+        }
+    }
+
+    // --- pragma suppression (D00 is never suppressible) -----------------
+    for f in raw {
+        let suppressed =
+            allow.iter().any(|(line, rule)| *line == f.line && *rule == f.rule);
+        if !suppressed {
+            findings.push(f);
+        }
+    }
+    findings
+}
+
+/// Filter `findings` through the `detlint.toml` allowlist. Returns the
+/// surviving findings plus every entry that suppressed nothing (stale
+/// entries are surfaced as warnings by the CLI so the allowlist cannot
+/// quietly outlive the code it excuses).
+pub fn apply_allowlist(
+    findings: Vec<Finding>,
+    cfg: &LintConfig,
+) -> (Vec<Finding>, Vec<AllowEntry>) {
+    let mut used = vec![false; cfg.allows.len()];
+    let mut kept: Vec<Finding> = Vec::new();
+    for f in findings {
+        let mut suppressed = false;
+        if f.rule != "D00" {
+            for (ix, entry) in cfg.allows.iter().enumerate() {
+                if entry.rule == f.rule && entry.file == f.file {
+                    used[ix] = true;
+                    suppressed = true;
+                }
+            }
+        }
+        if !suppressed {
+            kept.push(f);
+        }
+    }
+    let unused = cfg
+        .allows
+        .iter()
+        .zip(&used)
+        .filter(|(_, u)| !**u)
+        .map(|(entry, _)| entry.clone())
+        .collect();
+    (kept, unused)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_of(findings: &[Finding]) -> Vec<&str> {
+        findings.iter().map(|f| f.rule.as_str()).collect()
+    }
+
+    #[test]
+    fn d01_fires_outside_spans_and_not_inside() {
+        let src = "fn f() { let t = Instant::now(); }\n";
+        let f = scan_str("rust/src/serve/server.rs", src);
+        assert_eq!(rules_of(&f), vec!["D01"]);
+        assert_eq!(f[0].line, 1);
+        // Out of scope: same code elsewhere.
+        assert!(scan_str("rust/src/bench_util.rs", src).is_empty());
+        // Inside an annotated span.
+        let spanned = "\
+// detlint: begin-wallclock(reporting host wall seconds)
+fn f() { let t = Instant::now(); }
+// detlint: end-wallclock
+";
+        assert!(scan_str("rust/src/serve/server.rs", spanned).is_empty());
+    }
+
+    #[test]
+    fn d02_fires_on_partial_cmp_but_not_its_definition() {
+        let bad = "fn f(a: f64, b: f64) { a.partial_cmp(&b); }\n";
+        assert_eq!(rules_of(&scan_str("rust/src/x.rs", bad)), vec!["D02"]);
+        let def = "impl PartialOrd for T { fn partial_cmp(&self, o: &T) -> Option<Ordering> { Some(self.cmp(o)) } }\n";
+        assert!(scan_str("rust/src/x.rs", def).is_empty());
+        let float_eq = "fn g(x: f64) -> bool { x == 0.0 }\n";
+        assert_eq!(rules_of(&scan_str("rust/src/x.rs", float_eq)), vec!["D02"]);
+    }
+
+    #[test]
+    fn d03_scopes_to_deterministic_dirs() {
+        let src = "use std::collections::HashMap;\n";
+        assert_eq!(rules_of(&scan_str("rust/src/sim/fleet.rs", src)), vec!["D03"]);
+        assert!(scan_str("rust/src/sparse/gen.rs", src).is_empty());
+    }
+
+    #[test]
+    fn d04_exempts_precision_modules() {
+        let src = "fn f(x: f64) -> f32 { x as f32 }\n";
+        assert_eq!(rules_of(&scan_str("rust/src/linalg/mod.rs", src)), vec!["D04"]);
+        assert!(scan_str("rust/src/precision.rs", src).is_empty());
+        assert!(scan_str("rust/src/runtime/fixedpoint.rs", src).is_empty());
+        // Widening to u64/usize/f64 is not narrowing.
+        assert!(scan_str("rust/src/linalg/mod.rs", "fn g(x: u32) -> u64 { x as u64 }\n").is_empty());
+    }
+
+    #[test]
+    fn d05_fires_only_inside_hot_regions() {
+        let outside = "fn f() { let v = vec![0.0; 8]; }\n";
+        assert!(scan_str("rust/src/runtime/mod.rs", outside).is_empty());
+        let inside = "\
+// detlint: hot-path
+fn f(n: usize) { let v = vec![0.0; n]; }
+// detlint: end-hot-path
+";
+        let f = scan_str("rust/src/runtime/mod.rs", inside);
+        assert_eq!(rules_of(&f), vec!["D05"]);
+        assert_eq!(f[0].line, 2);
+    }
+
+    #[test]
+    fn d06_fires_on_panics_but_not_in_main_or_tests() {
+        let src = "fn f(x: Option<u8>) -> u8 { x.unwrap() }\n";
+        assert_eq!(rules_of(&scan_str("rust/src/serve/registry.rs", src)), vec!["D06"]);
+        assert!(scan_str("rust/src/main.rs", src).is_empty());
+        assert!(scan_str("rust/src/bin/detlint.rs", src).is_empty());
+        let test_code = "#[cfg(test)]\nmod tests {\n fn f(x: Option<u8>) -> u8 { x.unwrap() }\n}\n";
+        assert!(scan_str("rust/src/serve/registry.rs", test_code).is_empty());
+        let mac = "fn g() { unreachable!(); }\n";
+        assert_eq!(rules_of(&scan_str("rust/src/serve/registry.rs", mac)), vec!["D06"]);
+        // `unwrap_or` is a distinct identifier and must not fire.
+        let or = "fn h(x: Option<u8>) -> u8 { x.unwrap_or(0) }\n";
+        assert!(scan_str("rust/src/serve/registry.rs", or).is_empty());
+    }
+
+    #[test]
+    fn pragma_suppresses_its_line_and_the_next() {
+        let above = "\
+fn f(x: Option<u8>) -> u8 {
+    // detlint: allow(D06, the caller guarantees Some by construction)
+    x.unwrap()
+}
+";
+        assert!(scan_str("rust/src/serve/registry.rs", above).is_empty());
+        let trailing =
+            "fn f(x: Option<u8>) -> u8 { x.unwrap() } // detlint: allow(D06, guaranteed Some by construction)\n";
+        assert!(scan_str("rust/src/serve/registry.rs", trailing).is_empty());
+        let wrong_rule = "\
+fn f(x: Option<u8>) -> u8 {
+    // detlint: allow(D01, wrong rule does not suppress)
+    x.unwrap()
+}
+";
+        assert_eq!(
+            rules_of(&scan_str("rust/src/serve/registry.rs", wrong_rule)),
+            vec!["D06"]
+        );
+    }
+
+    #[test]
+    fn d00_reports_malformed_and_unclosed_directives() {
+        let f = scan_str("rust/src/x.rs", "// detlint: allow(D06)\n");
+        assert_eq!(rules_of(&f), vec!["D00"]);
+        let f = scan_str("rust/src/x.rs", "// detlint: hot-path\n");
+        assert_eq!(rules_of(&f), vec!["D00"]);
+        let f = scan_str("rust/src/x.rs", "// detlint: end-wallclock\n");
+        assert_eq!(rules_of(&f), vec!["D00"]);
+    }
+
+    #[test]
+    fn allowlist_filters_by_file_and_rule_and_reports_unused() {
+        let cfg = LintConfig::parse(
+            "[[allow]]\nfile = \"rust/src/a.rs\"\nrule = \"D02\"\nreason = \"exact zero check\"\n\n[[allow]]\nfile = \"rust/src/b.rs\"\nrule = \"D06\"\nreason = \"never fires here\"\n",
+        )
+        .unwrap();
+        let f = vec![
+            Finding {
+                file: "rust/src/a.rs".to_string(),
+                line: 1,
+                rule: "D02".to_string(),
+                message: String::new(),
+            },
+            Finding {
+                file: "rust/src/a.rs".to_string(),
+                line: 2,
+                rule: "D06".to_string(),
+                message: String::new(),
+            },
+        ];
+        let (kept, unused) = apply_allowlist(f, &cfg);
+        assert_eq!(rules_of(&kept), vec!["D06"]);
+        assert_eq!(unused.len(), 1);
+        assert_eq!(unused[0].file, "rust/src/b.rs");
+    }
+
+    #[test]
+    fn cfg_not_test_is_still_scanned() {
+        let src = "#[cfg(not(test))]\nfn f(x: Option<u8>) -> u8 { x.unwrap() }\n";
+        assert_eq!(rules_of(&scan_str("rust/src/serve/registry.rs", src)), vec!["D06"]);
+    }
+}

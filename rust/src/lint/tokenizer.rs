@@ -1,0 +1,547 @@
+//! A lightweight Rust lexer for `detlint`.
+//!
+//! Splits a source file into code tokens (identifiers, numbers, string /
+//! char literals, lifetimes, punctuation) plus a parallel stream of
+//! `detlint` comment directives. It is *not* a full Rust lexer — it only
+//! needs to be faithful enough that rule matching never fires inside a
+//! comment or a string literal, and that line numbers are exact.
+//!
+//! Directives are recognized only in plain `//` line comments (never in
+//! `///` / `//!` doc comments or `/* */` block comments), so rule
+//! documentation can quote the pragma syntax without tripping the parser.
+//! The accepted forms are:
+//!
+//! ```text
+//! // detlint: allow(D0X, <reason — two or more words>)
+//! // detlint: begin-wallclock(<reason>)   …   // detlint: end-wallclock
+//! // detlint: hot-path                    …   // detlint: end-hot-path
+//! ```
+
+/// Kind of a lexed token.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`fn`, `as`, `partial_cmp`, …).
+    Ident,
+    /// Numeric literal; `float` is true for `1.0`, `1e-3`, `2.5f64`, ….
+    Num {
+        /// Whether the literal is floating-point.
+        float: bool,
+    },
+    /// String literal (`"…"`, `r"…"`, `b"…"`, `r#"…"#`). Content dropped.
+    Str,
+    /// Char literal (`'a'`, `'\n'`, `b'x'`). Content dropped.
+    Char,
+    /// Lifetime (`'a`, `'static`, `'_`).
+    Lifetime,
+    /// Punctuation; multi-char operators (`::`, `==`, `!=`, `->`, …) are
+    /// merged into one token.
+    Punct,
+}
+
+/// One lexed token with its 1-based source line.
+#[derive(Clone, Debug)]
+pub struct Tok {
+    /// 1-based line the token starts on.
+    pub line: usize,
+    /// Token kind.
+    pub kind: TokKind,
+    /// Token text for `Ident` and `Punct`; empty for other kinds.
+    pub text: String,
+}
+
+impl Tok {
+    /// True if this token is the identifier `name`.
+    pub fn is_ident(&self, name: &str) -> bool {
+        self.kind == TokKind::Ident && self.text == name
+    }
+
+    /// True if this token is the punctuation `p`.
+    pub fn is_punct(&self, p: &str) -> bool {
+        self.kind == TokKind::Punct && self.text == p
+    }
+
+    /// True if this token is a floating-point numeric literal.
+    pub fn is_float(&self) -> bool {
+        matches!(self.kind, TokKind::Num { float: true })
+    }
+}
+
+/// A `detlint` comment directive.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Directive {
+    /// Per-site suppression: applies to the directive's line and the line
+    /// immediately after it.
+    Allow {
+        /// Rule id (`D01` … `D06`).
+        rule: String,
+        /// Mandatory written justification.
+        reason: String,
+    },
+    /// Opens an annotated wallclock-measurement span (D01 exemption).
+    BeginWallclock {
+        /// Mandatory written justification.
+        reason: String,
+    },
+    /// Closes a wallclock span.
+    EndWallclock,
+    /// Opens a hot-path region (D05 applies only inside these).
+    HotPath,
+    /// Closes a hot-path region.
+    EndHotPath,
+    /// A comment that names `detlint:` but does not parse; always reported
+    /// as a D00 finding so typos cannot silently disable a rule.
+    Malformed {
+        /// Human-readable description of the parse failure.
+        message: String,
+    },
+}
+
+/// A directive plus the 1-based line it appears on.
+#[derive(Clone, Debug)]
+pub struct DirectiveAt {
+    /// 1-based source line of the directive comment.
+    pub line: usize,
+    /// The parsed directive.
+    pub directive: Directive,
+}
+
+/// Known rule ids, used to validate `allow(...)` pragmas and the config
+/// allowlist. `D00` (directive/config errors) is deliberately absent: it
+/// cannot be suppressed.
+pub const RULE_IDS: [&str; 6] = ["D01", "D02", "D03", "D04", "D05", "D06"];
+
+/// True when `rule` names a suppressible rule.
+pub fn is_known_rule(rule: &str) -> bool {
+    RULE_IDS.contains(&rule)
+}
+
+/// A reason must be a written explanation, not a placeholder token.
+pub fn is_written_reason(reason: &str) -> bool {
+    reason.split_whitespace().count() >= 2
+}
+
+fn parse_directive(body: &str) -> Directive {
+    let body = body.trim();
+    if body == "end-wallclock" {
+        return Directive::EndWallclock;
+    }
+    if body == "hot-path" {
+        return Directive::HotPath;
+    }
+    if body == "end-hot-path" {
+        return Directive::EndHotPath;
+    }
+    if let Some(rest) = body.strip_prefix("allow(") {
+        let Some(inner) = rest.strip_suffix(')') else {
+            return Directive::Malformed {
+                message: "allow(...) is missing its closing parenthesis".to_string(),
+            };
+        };
+        let Some((rule, reason)) = inner.split_once(',') else {
+            return Directive::Malformed {
+                message: "allow(...) needs `rule, reason` — the reason is mandatory"
+                    .to_string(),
+            };
+        };
+        let rule = rule.trim().to_string();
+        let reason = reason.trim().to_string();
+        if !is_known_rule(&rule) {
+            return Directive::Malformed {
+                message: format!("allow(...) names unknown rule `{rule}`"),
+            };
+        }
+        if !is_written_reason(&reason) {
+            return Directive::Malformed {
+                message: format!(
+                    "allow({rule}, ...) reason must be a written explanation \
+                     (two or more words)"
+                ),
+            };
+        }
+        return Directive::Allow { rule, reason };
+    }
+    if let Some(rest) = body.strip_prefix("begin-wallclock(") {
+        let Some(inner) = rest.strip_suffix(')') else {
+            return Directive::Malformed {
+                message: "begin-wallclock(...) is missing its closing parenthesis"
+                    .to_string(),
+            };
+        };
+        let reason = inner.trim().to_string();
+        if !is_written_reason(&reason) {
+            return Directive::Malformed {
+                message: "begin-wallclock(...) reason must be a written explanation \
+                          (two or more words)"
+                    .to_string(),
+            };
+        }
+        return Directive::BeginWallclock { reason };
+    }
+    Directive::Malformed {
+        message: format!(
+            "unrecognized directive `{body}` (expected allow(rule, reason), \
+             begin-wallclock(reason), end-wallclock, hot-path or end-hot-path)"
+        ),
+    }
+}
+
+/// Multi-char punctuation merged into single tokens. Order matters: longer
+/// candidates are tried first at each position.
+const PUNCT2: [&str; 16] = [
+    "::", "==", "!=", "<=", ">=", "->", "=>", "..", "&&", "||", "+=", "-=", "*=", "/=",
+    "<<", ">>",
+];
+
+/// Lex `src` into tokens and directives.
+pub fn tokenize(src: &str) -> (Vec<Tok>, Vec<DirectiveAt>) {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut toks: Vec<Tok> = Vec::new();
+    let mut dirs: Vec<DirectiveAt> = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1usize;
+
+    let at = |i: usize| -> char {
+        if i < n {
+            chars[i]
+        } else {
+            '\0'
+        }
+    };
+
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // Line comments (and directives).
+        if c == '/' && at(i + 1) == '/' {
+            let mut j = i + 2;
+            while j < n && chars[j] != '\n' {
+                j += 1;
+            }
+            let is_doc = at(i + 2) == '/' || at(i + 2) == '!';
+            if !is_doc {
+                let body: String = chars[i + 2..j].iter().collect();
+                let body = body.trim();
+                if let Some(rest) = body.strip_prefix("detlint:") {
+                    dirs.push(DirectiveAt { line, directive: parse_directive(rest) });
+                }
+            }
+            i = j;
+            continue;
+        }
+        // Block comments (nested, newline-counted).
+        if c == '/' && at(i + 1) == '*' {
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if chars[j] == '\n' {
+                    line += 1;
+                    j += 1;
+                } else if chars[j] == '/' && at(j + 1) == '*' {
+                    depth += 1;
+                    j += 2;
+                } else if chars[j] == '*' && at(j + 1) == '/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            i = j;
+            continue;
+        }
+        // Raw strings: r"..." / r#"..."# (and br variants below via 'b').
+        if (c == 'r' && (at(i + 1) == '"' || at(i + 1) == '#'))
+            || (c == 'b' && at(i + 1) == 'r' && (at(i + 2) == '"' || at(i + 2) == '#'))
+        {
+            let start = if c == 'r' { i + 1 } else { i + 2 };
+            let mut hashes = 0usize;
+            let mut j = start;
+            while at(j) == '#' {
+                hashes += 1;
+                j += 1;
+            }
+            if at(j) == '"' {
+                let tline = line;
+                j += 1;
+                'raw: while j < n {
+                    if chars[j] == '\n' {
+                        line += 1;
+                        j += 1;
+                        continue;
+                    }
+                    if chars[j] == '"' {
+                        let mut k = 0usize;
+                        while k < hashes && at(j + 1 + k) == '#' {
+                            k += 1;
+                        }
+                        if k == hashes {
+                            j += 1 + hashes;
+                            break 'raw;
+                        }
+                    }
+                    j += 1;
+                }
+                toks.push(Tok { line: tline, kind: TokKind::Str, text: String::new() });
+                i = j;
+                continue;
+            }
+            // `r#ident` raw identifier or stray `#`: fall through to ident
+            // lexing below (the `#` path treats it as punctuation).
+        }
+        // Byte string b"..." and byte char b'x'.
+        if c == 'b' && at(i + 1) == '"' {
+            let (j, nl) = scan_quoted(&chars, i + 2, '"');
+            toks.push(Tok { line, kind: TokKind::Str, text: String::new() });
+            line += nl;
+            i = j;
+            continue;
+        }
+        if c == 'b' && at(i + 1) == '\'' {
+            let (j, nl) = scan_quoted(&chars, i + 2, '\'');
+            toks.push(Tok { line, kind: TokKind::Char, text: String::new() });
+            line += nl;
+            i = j;
+            continue;
+        }
+        // Plain strings.
+        if c == '"' {
+            let (j, nl) = scan_quoted(&chars, i + 1, '"');
+            toks.push(Tok { line, kind: TokKind::Str, text: String::new() });
+            line += nl;
+            i = j;
+            continue;
+        }
+        // Char literal vs lifetime.
+        if c == '\'' {
+            if at(i + 1) == '\\' {
+                let (j, nl) = scan_quoted(&chars, i + 1, '\'');
+                toks.push(Tok { line, kind: TokKind::Char, text: String::new() });
+                line += nl;
+                i = j;
+                continue;
+            }
+            if at(i + 2) == '\'' && at(i + 1) != '\'' {
+                toks.push(Tok { line, kind: TokKind::Char, text: String::new() });
+                i += 3;
+                continue;
+            }
+            // Lifetime: consume the identifier after the quote.
+            let mut j = i + 1;
+            while j < n && (chars[j].is_alphanumeric() || chars[j] == '_') {
+                j += 1;
+            }
+            toks.push(Tok { line, kind: TokKind::Lifetime, text: String::new() });
+            i = j.max(i + 1);
+            continue;
+        }
+        // Numbers.
+        if c.is_ascii_digit() {
+            let mut j = i + 1;
+            let mut float = false;
+            if c == '0' && (at(j) == 'x' || at(j) == 'X' || at(j) == 'o' || at(j) == 'b') {
+                j += 1;
+                while j < n && (chars[j].is_ascii_alphanumeric() || chars[j] == '_') {
+                    j += 1;
+                }
+            } else {
+                while j < n && (chars[j].is_ascii_digit() || chars[j] == '_') {
+                    j += 1;
+                }
+                if at(j) == '.' && at(j + 1).is_ascii_digit() {
+                    float = true;
+                    j += 1;
+                    while j < n && (chars[j].is_ascii_digit() || chars[j] == '_') {
+                        j += 1;
+                    }
+                }
+                if (at(j) == 'e' || at(j) == 'E')
+                    && (at(j + 1).is_ascii_digit()
+                        || ((at(j + 1) == '+' || at(j + 1) == '-')
+                            && at(j + 2).is_ascii_digit()))
+                {
+                    float = true;
+                    j += 1;
+                    if at(j) == '+' || at(j) == '-' {
+                        j += 1;
+                    }
+                    while j < n && (chars[j].is_ascii_digit() || chars[j] == '_') {
+                        j += 1;
+                    }
+                }
+                // Type suffix (f32 / f64 / u32 / …).
+                let suffix_at = j;
+                while j < n && (chars[j].is_ascii_alphanumeric() || chars[j] == '_') {
+                    j += 1;
+                }
+                let suffix: String = chars[suffix_at..j].iter().collect();
+                if suffix == "f32" || suffix == "f64" {
+                    float = true;
+                }
+            }
+            toks.push(Tok { line, kind: TokKind::Num { float }, text: String::new() });
+            i = j;
+            continue;
+        }
+        // Identifiers / keywords.
+        if c.is_alphabetic() || c == '_' {
+            let mut j = i + 1;
+            while j < n && (chars[j].is_alphanumeric() || chars[j] == '_') {
+                j += 1;
+            }
+            let text: String = chars[i..j].iter().collect();
+            toks.push(Tok { line, kind: TokKind::Ident, text });
+            i = j;
+            continue;
+        }
+        // Punctuation (two-char merges first).
+        let mut matched = false;
+        for p in PUNCT2 {
+            let mut pc = p.chars();
+            let (a, b) = (pc.next(), pc.next());
+            if Some(c) == a && b.is_some_and(|b| b == at(i + 1)) {
+                toks.push(Tok { line, kind: TokKind::Punct, text: p.to_string() });
+                i += 2;
+                matched = true;
+                break;
+            }
+        }
+        if matched {
+            continue;
+        }
+        toks.push(Tok { line, kind: TokKind::Punct, text: c.to_string() });
+        i += 1;
+    }
+    (toks, dirs)
+}
+
+/// Scan a quoted literal starting just after its opening quote; returns
+/// `(index past the closing quote, newlines crossed)`.
+fn scan_quoted(chars: &[char], mut j: usize, quote: char) -> (usize, usize) {
+    let n = chars.len();
+    let mut newlines = 0usize;
+    while j < n {
+        let c = chars[j];
+        if c == '\\' {
+            j += 2;
+            continue;
+        }
+        if c == '\n' {
+            newlines += 1;
+        }
+        j += 1;
+        if c == quote {
+            break;
+        }
+    }
+    (j, newlines)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        tokenize(src)
+            .0
+            .into_iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text)
+            .collect()
+    }
+
+    #[test]
+    fn comments_and_strings_produce_no_idents() {
+        let src = r##"
+            // Instant::now in a comment
+            /* HashMap in /* nested */ block */
+            let s = "Instant::now inside a string";
+            let r = r#"HashMap "quoted" raw"#;
+            let b = b"bytes";
+        "##;
+        let ids = idents(src);
+        assert!(!ids.iter().any(|t| t == "Instant" || t == "HashMap" || t == "now"));
+        assert!(ids.contains(&"let".to_string()));
+    }
+
+    #[test]
+    fn float_literals_are_classified() {
+        let (toks, _) = tokenize("let a = 1.0; let b = 1e-3; let c = 7; let d = 2f64;");
+        let floats: Vec<bool> = toks
+            .iter()
+            .filter(|t| matches!(t.kind, TokKind::Num { .. }))
+            .map(Tok::is_float)
+            .collect();
+        assert_eq!(floats, vec![true, true, false, true]);
+    }
+
+    #[test]
+    fn tuple_field_access_is_not_a_float() {
+        let (toks, _) = tokenize("a.0.partial_cmp(&b.0)");
+        assert!(toks.iter().any(|t| t.is_ident("partial_cmp")));
+        assert!(toks.iter().filter(|t| matches!(t.kind, TokKind::Num { .. })).all(|t| !t.is_float()));
+    }
+
+    #[test]
+    fn lifetimes_and_chars_disambiguate() {
+        let (toks, _) = tokenize("fn f<'a>(x: &'a str) -> char { 'x' }");
+        let lifetimes = toks.iter().filter(|t| t.kind == TokKind::Lifetime).count();
+        let chars_ = toks.iter().filter(|t| t.kind == TokKind::Char).count();
+        assert_eq!(lifetimes, 2);
+        assert_eq!(chars_, 1);
+    }
+
+    #[test]
+    fn line_numbers_track_every_literal_form() {
+        let src = "let a = \"two\nlines\";\nlet b = 3;\n";
+        let (toks, _) = tokenize(src);
+        let b = toks.iter().position(|t| t.is_ident("b"));
+        assert!(b.is_some_and(|ix| toks[ix].line == 3));
+    }
+
+    #[test]
+    fn directives_parse_and_doc_comments_do_not() {
+        let src = "\
+// detlint: allow(D02, exact zero guard on a nonnegative norm)
+/// detlint: allow(D02, doc comments are not directives)
+// detlint: hot-path
+// detlint: end-hot-path
+// detlint: begin-wallclock(measuring host wall time only)
+// detlint: end-wallclock
+// detlint: allow(D99, unknown rule)
+// detlint: allow(D02, one-word)
+";
+        let (_, dirs) = tokenize(src);
+        assert_eq!(dirs.len(), 7);
+        assert!(matches!(&dirs[0].directive, Directive::Allow { rule, .. } if rule == "D02"));
+        assert_eq!(dirs[0].line, 1);
+        assert_eq!(dirs[1].directive, Directive::HotPath);
+        assert_eq!(dirs[2].directive, Directive::EndHotPath);
+        assert!(matches!(&dirs[3].directive, Directive::BeginWallclock { .. }));
+        assert_eq!(dirs[4].directive, Directive::EndWallclock);
+        assert!(matches!(&dirs[5].directive, Directive::Malformed { .. }));
+        assert!(matches!(&dirs[6].directive, Directive::Malformed { .. }));
+    }
+
+    #[test]
+    fn multichar_punctuation_merges() {
+        let (toks, _) = tokenize("a != b; c == d; e::f; g -> h");
+        let puncts: Vec<&str> = toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Punct)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert!(puncts.contains(&"!="));
+        assert!(puncts.contains(&"=="));
+        assert!(puncts.contains(&"::"));
+        assert!(puncts.contains(&"->"));
+    }
+}

@@ -25,7 +25,7 @@ pub fn avg_pairwise_angle_deg(vectors: &[Vec<f64>]) -> f64 {
         let ni = norm2_f64(&vectors[i]);
         for j in (i + 1)..k {
             let nj = norm2_f64(&vectors[j]);
-            if ni == 0.0 || nj == 0.0 {
+            if ni <= 0.0 || nj <= 0.0 {
                 continue;
             }
             let cosang = (dot_f64(&vectors[i], &vectors[j]) / (ni * nj)).clamp(-1.0, 1.0);
@@ -49,7 +49,7 @@ pub fn max_pairwise_coherence(vectors: &[Vec<f64>]) -> f64 {
         let ni = norm2_f64(&vectors[i]);
         for j in (i + 1)..k {
             let nj = norm2_f64(&vectors[j]);
-            if ni == 0.0 || nj == 0.0 {
+            if ni <= 0.0 || nj <= 0.0 {
                 continue;
             }
             let c = (dot_f64(&vectors[i], &vectors[j]) / (ni * nj)).abs();
@@ -95,13 +95,13 @@ impl LatencySummary {
             return LatencySummary::default();
         }
         let mut s = samples.to_vec();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        s.sort_by(|a, b| a.total_cmp(b));
         LatencySummary {
             mean: s.iter().sum::<f64>() / s.len() as f64,
             p50: percentile(&s, 0.50),
             p95: percentile(&s, 0.95),
             p99: percentile(&s, 0.99),
-            max: *s.last().unwrap(),
+            max: percentile(&s, 1.0),
         }
     }
 }

@@ -38,6 +38,7 @@ where
         let seed = base.wrapping_add(case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
         let mut rng = Rng::new(seed);
         if let Err(msg) = prop(&mut rng) {
+            // detlint: allow(D06, forall is test-harness substrate; panicking with the replay seed is how a property reports failure)
             panic!(
                 "property '{name}' failed on case {case} (replay: PROP_SEED={} PROP_CASES=1): {msg}",
                 base.wrapping_add(case as u64)

@@ -83,6 +83,12 @@ pub struct FixedPointKernels {
     /// Values clipped into range — nonzero means the input normalization
     /// contract was violated somewhere.
     pub saturations: usize,
+    /// Hoisted quantized-input scratch; the hot-path kernels must not
+    /// allocate per call. Taken out of `self` for the duration of a call
+    /// (the loops also borrow `self.saturations`) and restored at the end.
+    xq_buf: Vec<i64>,
+    /// Hoisted SpMM accumulator scratch (one slot per lane).
+    acc: Vec<i64>,
 }
 
 impl FixedPointKernels {
@@ -91,8 +97,11 @@ impl FixedPointKernels {
     }
 
     fn vec_fixed(&mut self, xs: &[f64]) -> Vec<i64> {
+        let mut buf = std::mem::take(&mut self.xq_buf);
+        buf.clear();
         let sat = &mut self.saturations;
-        xs.iter().map(|&x| to_fixed(x, sat)).collect()
+        buf.extend(xs.iter().map(|&x| to_fixed(x, sat)));
+        buf
     }
 }
 
@@ -108,6 +117,7 @@ impl Kernels for FixedPointKernels {
         self.calls += 1;
         debug_assert_eq!(y.len(), ell.rows);
         let xq = self.vec_fixed(x);
+        // detlint: hot-path
         for r in 0..ell.rows {
             let mut acc: i64 = 0; // Q1.30 in i64: headroom for ~2^33 terms
             for k in 0..ell.width {
@@ -123,6 +133,8 @@ impl Kernels for FixedPointKernels {
             let cur = to_fixed(y[s.row as usize], &mut self.saturations);
             y[s.row as usize] = from_fixed(qsat(cur + prod, &mut self.saturations));
         }
+        // detlint: end-hot-path
+        self.xq_buf = xq;
     }
 
     #[allow(clippy::too_many_arguments)]
@@ -145,7 +157,10 @@ impl Kernels for FixedPointKernels {
         // the single-vector kernel (the saturation *counter* may differ —
         // shared slots are clipped once, not once per lane).
         let xq = self.vec_fixed(x);
-        let mut acc = vec![0i64; lanes];
+        let mut acc = std::mem::take(&mut self.acc);
+        acc.clear();
+        acc.resize(lanes, 0);
+        // detlint: hot-path
         for r in 0..ell.rows {
             acc.fill(0);
             for k in 0..ell.width {
@@ -169,6 +184,9 @@ impl Kernels for FixedPointKernels {
                 y[yi] = from_fixed(qsat(cur + prod, &mut self.saturations));
             }
         }
+        // detlint: end-hot-path
+        self.xq_buf = xq;
+        self.acc = acc;
     }
 
     fn dot(&mut self, a: &[f64], b: &[f64], _cfg: &PrecisionConfig) -> f64 {
@@ -180,6 +198,7 @@ impl Kernels for FixedPointKernels {
         for (x, y) in aq.iter().zip(&bq) {
             acc += qmul(*x, *y);
         }
+        self.xq_buf = aq; // keep one scratch warm for the next kernel call
         from_fixed(acc) // scalars exchanged in f64, like the FPGA's host side
     }
 
@@ -264,6 +283,7 @@ impl Kernels for FixedPointKernels {
                 *d = from_fixed(qsat(acc, &mut self.saturations));
             }
         }
+        self.xq_buf = basis_q;
     }
 
     fn backend_name(&self) -> &'static str {

@@ -379,6 +379,12 @@ pub struct HostKernels {
     /// key is invalidated), so session solves on a prepared matrix
     /// re-quantize in place instead of reallocating every iteration.
     xq_buf: Vec<f64>,
+    /// Hoisted SpMM accumulator scratch (one slot per lane, f64 compute).
+    /// `spmm_into` is the hot-path inner kernel (see the `detlint:
+    /// hot-path` region) and must not allocate per call.
+    acc_f64: Vec<f64>,
+    /// Hoisted SpMM accumulator scratch for f32-compute configs.
+    acc_f32: Vec<f32>,
 }
 
 impl HostKernels {
@@ -411,6 +417,7 @@ impl Kernels for HostKernels {
     fn spmv_into(&mut self, ell: &Ell, x: &[f64], cfg: &PrecisionConfig, y: &mut [f64]) {
         self.calls += 1;
         debug_assert_eq!(y.len(), ell.rows);
+        // detlint: hot-path
         match (cfg.storage, cfg.compute) {
             // Fast paths: f64 storage quantization is the identity, so the
             // replica copy and the output quantization pass both vanish.
@@ -427,6 +434,7 @@ impl Kernels for HostKernels {
                 }
             }
         }
+        // detlint: end-hot-path
     }
 
     #[allow(clippy::too_many_arguments)]
@@ -453,7 +461,10 @@ impl Kernels for HostKernels {
         // single-vector kernel.
         match (cfg.storage, cfg.compute) {
             (Storage::F64, Compute::F64) => {
-                let mut acc = vec![0.0f64; lanes];
+                let mut acc = std::mem::take(&mut self.acc_f64);
+                acc.clear();
+                acc.resize(lanes, 0.0);
+                // detlint: hot-path
                 for r in 0..ell.rows {
                     acc.fill(0.0);
                     for k in 0..w {
@@ -474,9 +485,14 @@ impl Kernels for HostKernels {
                         y[l * y_stride + y_offset + sr] += s.val * x[l * n + sc];
                     }
                 }
+                // detlint: end-hot-path
+                self.acc_f64 = acc;
             }
             (Storage::F64, Compute::F32) => {
-                let mut acc = vec![0.0f32; lanes];
+                let mut acc = std::mem::take(&mut self.acc_f32);
+                acc.clear();
+                acc.resize(lanes, 0.0);
+                // detlint: hot-path
                 for r in 0..ell.rows {
                     acc.fill(0.0);
                     for k in 0..w {
@@ -498,14 +514,23 @@ impl Kernels for HostKernels {
                         y[yi] += ((s.val as f32) * (x[l * n + sc] as f32)) as f64;
                     }
                 }
+                // detlint: end-hot-path
+                self.acc_f32 = acc;
             }
             (Storage::F32, compute) => {
+                // Scratch leaves `self` before `quantized_replica` pins the
+                // borrow; both buffers return at the end of the arm.
+                let mut acc64 = std::mem::take(&mut self.acc_f64);
+                let mut acc32 = std::mem::take(&mut self.acc_f32);
                 // Quantize the whole lane block once per cycle (same cache
                 // as the single-vector path, keyed on the block address).
                 let xq: &[f64] = self.quantized_replica(x);
                 match compute {
                     Compute::F64 => {
-                        let mut acc = vec![0.0f64; lanes];
+                        let acc = &mut acc64;
+                        acc.clear();
+                        acc.resize(lanes, 0.0);
+                        // detlint: hot-path
                         for r in 0..ell.rows {
                             acc.fill(0.0);
                             for k in 0..w {
@@ -526,9 +551,13 @@ impl Kernels for HostKernels {
                                 y[l * y_stride + y_offset + sr] += s.val * xq[l * n + sc];
                             }
                         }
+                        // detlint: end-hot-path
                     }
                     Compute::F32 => {
-                        let mut acc = vec![0.0f32; lanes];
+                        let acc = &mut acc32;
+                        acc.clear();
+                        acc.resize(lanes, 0.0);
+                        // detlint: hot-path
                         for r in 0..ell.rows {
                             acc.fill(0.0);
                             for k in 0..w {
@@ -550,6 +579,7 @@ impl Kernels for HostKernels {
                                 y[yi] += ((s.val as f32) * (xq[l * n + sc] as f32)) as f64;
                             }
                         }
+                        // detlint: end-hot-path
                     }
                 }
                 // Output storage quantization, after the spill tail — the
@@ -560,6 +590,8 @@ impl Kernels for HostKernels {
                         *v = *v as f32 as f64;
                     }
                 }
+                self.acc_f64 = acc64;
+                self.acc_f32 = acc32;
             }
         }
     }

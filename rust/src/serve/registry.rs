@@ -211,6 +211,7 @@ impl<'m> MatrixRegistry<'m> {
     ) -> Result<(Vec<SolveOutcome>, PrepareEvent), SolverError> {
         let event = self.ensure_prepared(idx)?;
         let MatrixRegistry { solver, entries, .. } = self;
+        // detlint: allow(D06, ensure_prepared on the line above guarantees the entry is resident)
         let prep = entries[idx].prepared.as_mut().expect("ensured resident");
         let outs = solver.session(prep).solve_batch(queries)?;
         Ok((outs, event))

@@ -168,7 +168,7 @@ impl BatchCoalescer {
     fn queue_key(&self, q: &VecDeque<QueryArrival>) -> Option<(f64, u64)> {
         q.iter()
             .map(|e| (e.flush_deadline(&self.cfg), e.id))
-            .min_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)))
+            .min_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)))
     }
 
     /// Earliest flush deadline across every queued query — the next
@@ -179,7 +179,7 @@ impl BatchCoalescer {
         self.queues
             .iter()
             .filter_map(|q| self.queue_deadline(q))
-            .min_by(|a, b| a.partial_cmp(b).unwrap())
+            .min_by(|a, b| a.total_cmp(b))
     }
 
     /// Pop the next runnable batch at simulated time `now`, if any. A
@@ -216,7 +216,7 @@ impl BatchCoalescer {
                 eligible.then_some((deadline, id, mi))
             })
             .min_by(|a, b| {
-                a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)).then(a.2.cmp(&b.2))
+                a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)).then(a.2.cmp(&b.2))
             })?;
         Some(self.pop_from(best.2))
     }
@@ -243,7 +243,7 @@ impl BatchCoalescer {
                 Some((deadline, id, mi))
             })
             .min_by(|a, b| {
-                a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)).then(a.2.cmp(&b.2))
+                a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)).then(a.2.cmp(&b.2))
             })?;
         Some(self.pop_from(best.2))
     }

@@ -646,6 +646,7 @@ impl<'m> EigenServer<'m> {
 
     /// Consume the server, returning fleet 0's registry.
     pub fn into_registry(self) -> MatrixRegistry<'m> {
+        // detlint: allow(D06, the constructor rejects zero fleets so fleet 0 always exists)
         self.registries.into_iter().next().expect("server always has fleet 0")
     }
 
@@ -715,6 +716,7 @@ impl<'m> EigenServer<'m> {
                 .peek_time()
                 .is_some_and(|t| t.total_cmp(&now) == Ordering::Equal)
             {
+                // detlint: allow(D06, peek_time returned Some inside the loop condition so pop cannot be None)
                 let (_, ev) = st.heap.pop().expect("peeked");
                 self.apply_event(&mut st, arrivals, now, ev);
             }
@@ -834,6 +836,7 @@ impl<'m> EigenServer<'m> {
                 if cut.killed {
                     let b = st.in_flight[c.fleet]
                         .take()
+                        // detlint: allow(D06, the pool only reports killed=true for a batch this server dispatched and tracks)
                         .expect("pool killed a batch the server must be tracking");
                     // Retract the killed batch's ledger: its records,
                     // batch count, hot-signal credit, and the
@@ -872,10 +875,12 @@ impl<'m> EigenServer<'m> {
             while i < st.retry_ready.len() {
                 let rid = st.retry_ready[i];
                 let matrix =
+                    // detlint: allow(D06, retry_ready ids are removed in lockstep with their entries so live ids always resolve)
                     st.retries[rid].as_ref().expect("ready retry entries are live").matrix;
                 let hot = st.served[matrix] >= HOT_QUERIES;
                 match st.pool.choose_failover(placement, matrix, hot, now) {
                     Some((fleet, failed_over)) => {
+                        // detlint: allow(D06, the same entry matched as_ref Some a few lines above in this iteration)
                         let rb = st.retries[rid].take().expect("checked above");
                         st.retry_ready.remove(i);
                         st.counters.retries += 1;
@@ -904,6 +909,7 @@ impl<'m> EigenServer<'m> {
                 let (fleet, failed_over) = st
                     .pool
                     .choose_failover(placement, batch.matrix, hot, now)
+                    // detlint: allow(D06, ready_batch_where only returns batches whose matrix passed this same predicate)
                     .expect("dispatch predicate guaranteed a fleet");
                 if failed_over {
                     st.counters.failovers += 1;

@@ -134,8 +134,8 @@ impl FaultSpec {
     /// are ignored: they only matter once something can go wrong.
     pub fn is_empty(&self) -> bool {
         self.crashes.is_empty()
-            && self.crash_rate == 0.0
-            && self.fail_prob == 0.0
+            && self.crash_rate <= 0.0
+            && self.fail_prob <= 0.0
             && self.deadline_s.is_none()
             && self.max_queue_depth.is_none()
     }

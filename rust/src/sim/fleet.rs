@@ -249,6 +249,7 @@ impl FleetPool {
         let mut cut = CrashCut::default();
         if s.busy_until > now {
             let (start, prepare_s, solve_s) =
+                // detlint: allow(D06, busy_until > now implies occupy() set cur and no release cleared it yet)
                 s.cur.expect("a busy fleet always has a current occupation");
             let prep_end = start + prepare_s;
             // Completed prefix of each phase at the crash instant.

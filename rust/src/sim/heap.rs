@@ -115,6 +115,7 @@ impl<E> EventHeap<E> {
     pub fn push(&mut self, time: f64, event: E) -> u64 {
         match self.try_push(time, event) {
             Ok(seq) => seq,
+            // detlint: allow(D06, documented fail-loud contract: a NaN or negative deadline would silently corrupt pop order; try_push is the fallible form)
             Err(e) => panic!("EventHeap::push: {e}"),
         }
     }

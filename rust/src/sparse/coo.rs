@@ -32,6 +32,20 @@ impl Coo {
         self.values.push(v);
     }
 
+    /// Checked-narrowing convenience over [`Coo::push`] for `usize` index
+    /// math (generators and converters). Panics if an index does not fit
+    /// the `u32` triplet storage — a construction-time programmer error
+    /// ([`Coo::new`] already rejects such shapes), never a solve-path
+    /// condition.
+    #[inline]
+    pub fn push_ids(&mut self, r: usize, c: usize, v: f64) {
+        let (Ok(r32), Ok(c32)) = (u32::try_from(r), u32::try_from(c)) else {
+            // detlint: allow(D06, index beyond the u32 triplet format is a construction-time bug; failing fast beats silent truncation)
+            panic!("matrix index ({r}, {c}) exceeds the u32 triplet format");
+        };
+        self.push(r32, c32, v);
+    }
+
     pub fn nnz(&self) -> usize {
         self.values.len()
     }
@@ -41,8 +55,10 @@ impl Coo {
     }
 
     /// Sort by (row, col) and sum duplicate entries; drop explicit zeros.
+    #[allow(clippy::float_cmp)] // exact bit-zero test drops explicit zeros only
     pub fn canonicalize(&mut self) {
         let n = self.nnz();
+        // detlint: allow(D04, sort permutation is deliberately u32 to halve its footprint; nnz beyond u32 is rejected by the triplet format itself)
         let mut order: Vec<u32> = (0..n as u32).collect();
         order.sort_unstable_by_key(|&i| {
             (self.row_idx[i as usize], self.col_idx[i as usize])
@@ -60,6 +76,7 @@ impl Coo {
             );
             if let (Some(&lr), Some(&lc)) = (ri.last(), ci.last()) {
                 if lr == r && lc == c {
+                    // detlint: allow(D06, vi is provably non-empty here: ri.last() matched Some on the line above and the vectors grow in lockstep)
                     *vi.last_mut().unwrap() += v;
                     continue;
                 }
@@ -71,6 +88,7 @@ impl Coo {
         // Drop entries that summed to exactly zero.
         let mut w = 0;
         for i in 0..vi.len() {
+            // detlint: allow(D02, exact bit-zero test is the canonical drop-explicit-zeros semantics; an epsilon would drop real values)
             if vi[i] != 0.0 {
                 ri[w] = ri[i];
                 ci[w] = ci[i];

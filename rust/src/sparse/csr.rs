@@ -40,7 +40,7 @@ impl Csr {
         let mut coo = Coo::new(self.rows, self.cols);
         for r in 0..self.rows {
             for i in self.indptr[r]..self.indptr[r + 1] {
-                coo.push(r as u32, self.col_idx[i], self.values[i]);
+                coo.push_ids(r, self.col_idx[i] as usize, self.values[i]);
             }
         }
         coo
@@ -133,6 +133,7 @@ impl Csr {
                 self.rows + 1
             ));
         }
+        // detlint: allow(D06, indptr length rows+1 >= 1 was checked just above, so last() cannot be None)
         if self.indptr[0] != 0 || *self.indptr.last().unwrap() != self.nnz() {
             return Err("indptr endpoints wrong".into());
         }

@@ -118,8 +118,10 @@ impl Ell {
     }
 
     /// Non-zeros represented (regular non-padding entries + spill).
+    #[allow(clippy::float_cmp)] // bit-exact padding-slot test, see below
     pub fn nnz(&self) -> usize {
         let regular = (0..self.values.len())
+            // detlint: allow(D02, padding slots are exactly (col 0 and bit-zero value); an epsilon would misclassify small genuine entries)
             .filter(|&i| self.values.get_f64(i) != 0.0 || self.col_idx[i] != 0)
             .count();
         // Padding slots are (col=0, val=0); a genuine entry (0, 0.0) cannot
@@ -128,6 +130,7 @@ impl Ell {
     }
 
     /// Fraction of regular slots that are padding.
+    #[allow(clippy::float_cmp)] // bit-exact padding-slot test, see below
     pub fn padding_ratio(&self) -> f64 {
         if self.col_idx.is_empty() {
             return 0.0;
@@ -136,6 +139,7 @@ impl Ell {
             .col_idx
             .iter()
             .enumerate()
+            // detlint: allow(D02, padding slots are exactly (col 0 and bit-zero value); an epsilon would misclassify small genuine entries)
             .filter(|&(i, &c)| c == 0 && self.values.get_f64(i) == 0.0)
             .count();
         pad as f64 / self.col_idx.len() as f64

@@ -35,9 +35,9 @@ pub fn erdos_renyi(rows: usize, cols: usize, p: f64, symmetric: bool, rng: &mut 
             break;
         }
         let flat = idx - 1;
-        let r = (flat / cols as u128) as u32;
-        let c = (flat % cols as u128) as u32;
-        coo.push(r, c, 0.5 + 0.5 * rng.f64());
+        let r = (flat / cols as u128) as usize;
+        let c = (flat % cols as u128) as usize;
+        coo.push_ids(r, c, 0.5 + 0.5 * rng.f64());
     }
     coo.canonicalize();
     if symmetric {
@@ -70,7 +70,7 @@ pub fn rmat(scale: u32, edge_factor: usize, symmetric: bool, rng: &mut Rng) -> C
             r |= dr << level;
             c_ |= dc << level;
         }
-        coo.push(r as u32, c_ as u32, 0.5 + 0.5 * rng.f64());
+        coo.push_ids(r, c_, 0.5 + 0.5 * rng.f64());
     }
     coo.canonicalize();
     if symmetric {
@@ -85,25 +85,25 @@ pub fn rmat(scale: u32, edge_factor: usize, symmetric: bool, rng: &mut Rng) -> C
 pub fn road_mesh(side: usize, shortcut_fraction: f64, rng: &mut Rng) -> Coo {
     let n = side * side;
     let mut coo = Coo::new(n, n);
-    let id = |x: usize, y: usize| (x * side + y) as u32;
+    let id = |x: usize, y: usize| x * side + y;
     for x in 0..side {
         for y in 0..side {
             // 4-neighbourhood with ~8% of local edges dropped (jitter),
             // mimicking irregular road meshes.
             if x + 1 < side && !rng.chance(0.08) {
-                coo.push(id(x, y), id(x + 1, y), 0.5 + 0.5 * rng.f64());
+                coo.push_ids(id(x, y), id(x + 1, y), 0.5 + 0.5 * rng.f64());
             }
             if y + 1 < side && !rng.chance(0.08) {
-                coo.push(id(x, y), id(x, y + 1), 0.5 + 0.5 * rng.f64());
+                coo.push_ids(id(x, y), id(x, y + 1), 0.5 + 0.5 * rng.f64());
             }
         }
     }
     let shortcuts = ((n as f64) * shortcut_fraction) as usize;
     for _ in 0..shortcuts {
-        let u = rng.below(n as u64) as u32;
-        let v = rng.below(n as u64) as u32;
+        let u = rng.below(n as u64) as usize;
+        let v = rng.below(n as u64) as usize;
         if u != v {
-            coo.push(u, v, 0.5 + 0.5 * rng.f64());
+            coo.push_ids(u, v, 0.5 + 0.5 * rng.f64());
         }
     }
     coo.canonicalize();
@@ -132,7 +132,7 @@ pub fn power_law(n: usize, avg_degree: f64, gamma: f64, rng: &mut Rng) -> Coo {
     let total = cdf[n];
     let nnz_target = (avg_degree * n as f64 / 2.0) as usize;
     let mut coo = Coo::new(n, n);
-    let sample = |rng: &mut Rng, cdf: &[f64]| -> u32 {
+    let sample = |rng: &mut Rng, cdf: &[f64]| -> usize {
         let t = rng.f64() * total;
         // binary search for the first cdf[i+1] > t
         let mut lo = 0usize;
@@ -145,13 +145,13 @@ pub fn power_law(n: usize, avg_degree: f64, gamma: f64, rng: &mut Rng) -> Coo {
                 lo = mid + 1;
             }
         }
-        lo as u32
+        lo
     };
     for _ in 0..nnz_target {
         let u = sample(rng, &cdf);
         let v = sample(rng, &cdf);
         if u != v {
-            coo.push(u, v, 0.5 + 0.5 * rng.f64());
+            coo.push_ids(u, v, 0.5 + 0.5 * rng.f64());
         }
     }
     coo.canonicalize();
@@ -195,7 +195,7 @@ fn sbm_from_labels(
         for j in (i + 1)..n {
             let p = if labels[i] == labels[j] { p_in } else { p_out };
             if rng.chance(p) {
-                coo.push(i as u32, j as u32, 1.0);
+                coo.push_ids(i, j, 1.0);
             }
         }
     }
@@ -213,10 +213,10 @@ fn sbm_from_labels(
 pub fn tridiag_toeplitz(n: usize, d: f64, e: f64) -> Coo {
     let mut coo = Coo::new(n, n);
     for i in 0..n {
-        coo.push(i as u32, i as u32, d);
+        coo.push_ids(i, i, d);
         if i + 1 < n {
-            coo.push(i as u32, (i + 1) as u32, e);
-            coo.push((i + 1) as u32, i as u32, e);
+            coo.push_ids(i, i + 1, e);
+            coo.push_ids(i + 1, i, e);
         }
     }
     coo.canonicalize();
@@ -238,10 +238,10 @@ pub fn spiked_gap(n: usize) -> Coo {
         } else {
             0.5 / (1.0 + i as f64)
         };
-        coo.push(i as u32, i as u32, d);
+        coo.push_ids(i, i, d);
         if i + 1 < n {
-            coo.push(i as u32, (i + 1) as u32, 1e-3);
-            coo.push((i + 1) as u32, i as u32, 1e-3);
+            coo.push_ids(i, i + 1, 1e-3);
+            coo.push_ids(i + 1, i, 1e-3);
         }
     }
     coo.canonicalize();
@@ -253,7 +253,7 @@ pub fn tridiag_toeplitz_eigs(n: usize, d: f64, e: f64) -> Vec<f64> {
     let mut eigs: Vec<f64> = (1..=n)
         .map(|k| d + 2.0 * e * (k as f64 * std::f64::consts::PI / (n as f64 + 1.0)).cos())
         .collect();
-    eigs.sort_by(|a, b| b.abs().partial_cmp(&a.abs()).unwrap());
+    eigs.sort_by(|a, b| b.abs().total_cmp(&a.abs()));
     eigs
 }
 

@@ -157,10 +157,10 @@ pub fn read_matrix_market(path: &Path) -> Result<Coo, MmioError> {
                 msg: format!("index ({r},{c}) out of bounds (1-based)"),
             });
         }
-        let (r0, c0) = ((r - 1) as u32, (c - 1) as u32);
-        coo.push(r0, c0, v);
+        let (r0, c0) = (r - 1, c - 1);
+        coo.push_ids(r0, c0, v);
         if symmetry == Symmetry::Symmetric && r != c {
-            coo.push(c0, r0, v);
+            coo.push_ids(c0, r0, v);
         }
         read_entries += 1;
     }

@@ -89,6 +89,7 @@ where
             nnz: nnz_here,
         });
     }
+    // detlint: allow(D06, parts is non-empty: the loop pushes one partition per device and zero devices is rejected upstream)
     debug_assert_eq!(parts.last().unwrap().row_end, csr.rows);
     debug_assert_eq!(parts.iter().map(|p| p.nnz).sum::<usize>(), csr.nnz());
     parts
@@ -123,7 +124,7 @@ pub fn imbalance(parts: &[RowPartition]) -> f64 {
     }
     let total: usize = parts.iter().map(|p| p.nnz).sum();
     let mean = total as f64 / parts.len() as f64;
-    if mean == 0.0 {
+    if mean <= 0.0 {
         return 1.0;
     }
     parts.iter().map(|p| p.nnz as f64).fold(0.0, f64::max) / mean

@@ -129,7 +129,7 @@ impl SuiteEntry {
     pub fn estimated_rows(&self, scale: f64) -> usize {
         let n = self.target_rows(scale);
         match self.class {
-            MatrixClass::Kron => 1usize << (n as f64).log2().ceil() as u32,
+            MatrixClass::Kron => n.next_power_of_two(),
             MatrixClass::Road => {
                 let side = ((n as f64).sqrt().round() as usize).max(8);
                 side * side
@@ -163,7 +163,7 @@ impl SuiteEntry {
                 gen::erdos_renyi(n, n, p, true, &mut rng)
             }
             MatrixClass::Kron => {
-                let scale_log2 = (n as f64).log2().ceil() as u32;
+                let scale_log2 = n.next_power_of_two().trailing_zeros();
                 gen::rmat(scale_log2, (deg / 2.0).ceil() as usize, true, &mut rng)
             }
             MatrixClass::PowerLaw => gen::power_law(n, deg, 2.2, &mut rng),

@@ -14,6 +14,9 @@
 //! * a bounded queue under overload sheds bulk before interactive, and
 //!   `served + shed + failed = arrivals` always reconciles.
 
+// Downtime bookkeeping is asserted exactly zero for never-crashed fleets.
+#![allow(clippy::float_cmp)]
+
 use topk_eigen::serve::{
     CoalescerConfig, EigenServer, MatrixRegistry, QueryOutcome, RegistryConfig, ServeReport,
     ShedReason, WorkloadSpec,

@@ -1,0 +1,234 @@
+//! Acceptance tests for `detlint` (`topk_eigen::lint`): every rule fires
+//! on its bad fixture at the expected line, stays silent on the good
+//! twin, pragma suppression and the checked-in allowlist behave, the
+//! renderers emit the documented formats — and the tree itself is clean:
+//! `scan_tree` over the repo's `detlint.toml` roots must report zero
+//! findings and zero stale allowlist entries, which is the same gate CI
+//! runs via `cargo run --bin detlint`.
+
+use std::path::Path;
+
+use topk_eigen::lint::{
+    apply_allowlist, load_config, scan_str, scan_tree, sort_findings, AllowEntry, Finding,
+    LintConfig,
+};
+
+/// Read a fixture from `rust/tests/detlint_fixtures/`.
+fn fixture(name: &str) -> String {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/tests/detlint_fixtures")
+        .join(name);
+    std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("fixture {}: {e}", path.display()))
+}
+
+/// Scan a fixture under a virtual path (rule scoping is path-based).
+fn scan_fixture(name: &str, virtual_path: &str) -> Vec<Finding> {
+    scan_str(virtual_path, &fixture(name))
+}
+
+fn rule_lines(findings: &[Finding]) -> Vec<(&str, usize)> {
+    findings.iter().map(|f| (f.rule.as_str(), f.line)).collect()
+}
+
+// ---- per-rule fire/silent pairs ----------------------------------------
+
+#[test]
+fn d01_fires_on_wallclock_in_serve_path() {
+    let f = scan_fixture("bad_d01.rs", "rust/src/serve/bad_d01.rs");
+    assert_eq!(rule_lines(&f), vec![("D01", 5)]);
+    // Out of scope (no deterministic dir in the path): silent.
+    assert!(scan_fixture("bad_d01.rs", "rust/src/bench_util.rs").is_empty());
+}
+
+#[test]
+fn d01_silent_inside_wallclock_span() {
+    let f = scan_fixture("good_d01.rs", "rust/src/serve/good_d01.rs");
+    assert!(f.is_empty(), "unexpected: {f:?}");
+}
+
+#[test]
+fn d02_fires_on_partial_cmp_and_float_literal_eq() {
+    let f = scan_fixture("bad_d02.rs", "rust/src/metrics/bad_d02.rs");
+    assert_eq!(rule_lines(&f), vec![("D02", 4), ("D02", 5)]);
+}
+
+#[test]
+fn d02_silent_on_total_cmp_and_magnitude_test() {
+    let f = scan_fixture("good_d02.rs", "rust/src/metrics/good_d02.rs");
+    assert!(f.is_empty(), "unexpected: {f:?}");
+}
+
+#[test]
+fn d03_fires_on_hashmap_in_coordinator_path() {
+    let f = scan_fixture("bad_d03.rs", "rust/src/coordinator/bad_d03.rs");
+    assert_eq!(rule_lines(&f), vec![("D03", 4), ("D03", 6), ("D03", 7)]);
+    // HashMap is fine outside the deterministic dirs.
+    assert!(scan_fixture("bad_d03.rs", "rust/src/cli.rs").is_empty());
+}
+
+#[test]
+fn d03_silent_on_btreemap() {
+    let f = scan_fixture("good_d03.rs", "rust/src/coordinator/good_d03.rs");
+    assert!(f.is_empty(), "unexpected: {f:?}");
+}
+
+#[test]
+fn d04_fires_on_narrowing_outside_precision_modules() {
+    let f = scan_fixture("bad_d04.rs", "rust/src/solve.rs");
+    assert_eq!(rule_lines(&f), vec![("D04", 4), ("D04", 4)]);
+    // The precision modules own lossy narrowing.
+    assert!(scan_fixture("bad_d04.rs", "rust/src/precision.rs").is_empty());
+    assert!(scan_fixture("bad_d04.rs", "rust/src/runtime/fixedpoint.rs").is_empty());
+}
+
+#[test]
+fn d04_silent_on_checked_conversions() {
+    let f = scan_fixture("good_d04.rs", "rust/src/solve.rs");
+    assert!(f.is_empty(), "unexpected: {f:?}");
+}
+
+#[test]
+fn d05_fires_on_alloc_inside_hot_path_region() {
+    let f = scan_fixture("bad_d05.rs", "rust/src/runtime/kernel.rs");
+    assert_eq!(rule_lines(&f), vec![("D05", 7)]);
+}
+
+#[test]
+fn d05_silent_on_hoisted_scratch() {
+    let f = scan_fixture("good_d05.rs", "rust/src/runtime/kernel.rs");
+    assert!(f.is_empty(), "unexpected: {f:?}");
+}
+
+#[test]
+fn d06_fires_on_panic_paths_in_lib_code() {
+    let f = scan_fixture("bad_d06.rs", "rust/src/api/util.rs");
+    assert_eq!(rule_lines(&f), vec![("D06", 5), ("D06", 7), ("D06", 11)]);
+    // Binaries may panic: main.rs and bin/ are out of scope.
+    assert!(scan_fixture("bad_d06.rs", "rust/src/main.rs").is_empty());
+    assert!(scan_fixture("bad_d06.rs", "rust/src/bin/tool.rs").is_empty());
+}
+
+#[test]
+fn d06_silent_on_fallible_signatures() {
+    let f = scan_fixture("good_d06.rs", "rust/src/api/util.rs");
+    assert!(f.is_empty(), "unexpected: {f:?}");
+}
+
+// ---- suppression -------------------------------------------------------
+
+#[test]
+fn reasoned_pragmas_suppress_the_next_line() {
+    let f = scan_fixture("suppressed.rs", "rust/src/api/util.rs");
+    assert!(f.is_empty(), "pragmas failed to suppress: {f:?}");
+}
+
+#[test]
+fn malformed_directives_are_d00_findings() {
+    let f = scan_fixture("bad_d00.rs", "rust/src/api/util.rs");
+    assert_eq!(rule_lines(&f), vec![("D00", 3), ("D00", 6), ("D00", 9)]);
+}
+
+#[test]
+fn d00_is_never_suppressible_by_the_allowlist() {
+    let findings = scan_fixture("bad_d00.rs", "rust/src/api/util.rs");
+    let cfg = LintConfig {
+        roots: vec!["rust/src".to_string()],
+        allows: vec![AllowEntry {
+            file: "rust/src/api/util.rs".to_string(),
+            rule: "D00".to_string(),
+            reason: "trying to hide directive errors".to_string(),
+        }],
+    };
+    let (kept, unused) = apply_allowlist(findings, &cfg);
+    assert_eq!(kept.len(), 3, "D00 must survive the allowlist");
+    assert_eq!(unused.len(), 1, "the D00 entry must be reported stale");
+}
+
+#[test]
+fn allowlist_filters_by_file_and_rule_and_reports_stale_entries() {
+    let findings = scan_fixture("bad_d04.rs", "rust/src/solve.rs");
+    let cfg = LintConfig {
+        roots: vec!["rust/src".to_string()],
+        allows: vec![
+            AllowEntry {
+                file: "rust/src/solve.rs".to_string(),
+                rule: "D04".to_string(),
+                reason: "fixture narrowing is the documented storage contract".to_string(),
+            },
+            AllowEntry {
+                file: "rust/src/other.rs".to_string(),
+                rule: "D04".to_string(),
+                reason: "this entry matches nothing and must be flagged".to_string(),
+            },
+        ],
+    };
+    let (kept, unused) = apply_allowlist(findings, &cfg);
+    assert!(kept.is_empty(), "matching entry must suppress: {kept:?}");
+    assert_eq!(unused.len(), 1);
+    assert_eq!(unused[0].file, "rust/src/other.rs");
+}
+
+// ---- output formats ----------------------------------------------------
+
+#[test]
+fn text_and_json_renderings_are_stable() {
+    let f = Finding {
+        file: "rust/src/a.rs".to_string(),
+        line: 7,
+        rule: "D02".to_string(),
+        message: "a \"quoted\" message".to_string(),
+    };
+    assert_eq!(f.render_text(), "rust/src/a.rs:7: D02: a \"quoted\" message");
+    assert_eq!(
+        f.render_json(),
+        "{\"file\": \"rust/src/a.rs\", \"line\": 7, \"rule\": \"D02\", \
+         \"message\": \"a \\\"quoted\\\" message\"}"
+    );
+}
+
+#[test]
+fn findings_sort_by_file_line_rule() {
+    let mk = |file: &str, line: usize, rule: &str| Finding {
+        file: file.to_string(),
+        line,
+        rule: rule.to_string(),
+        message: String::new(),
+    };
+    let mut fs = vec![mk("b.rs", 1, "D01"), mk("a.rs", 9, "D06"), mk("a.rs", 9, "D02")];
+    sort_findings(&mut fs);
+    let got: Vec<(String, usize, String)> =
+        fs.into_iter().map(|f| (f.file, f.line, f.rule)).collect();
+    assert_eq!(
+        got,
+        vec![
+            ("a.rs".to_string(), 9, "D02".to_string()),
+            ("a.rs".to_string(), 9, "D06".to_string()),
+            ("b.rs".to_string(), 1, "D01".to_string()),
+        ]
+    );
+}
+
+// ---- the tree itself ---------------------------------------------------
+
+/// The same gate CI runs: the full `rust/src` tree through the checked-in
+/// `detlint.toml` must be clean, with no stale allowlist entries. Run
+/// from the manifest dir (where cargo puts test cwd) with repo-relative
+/// roots, exactly like `cargo run --bin detlint`, so findings and
+/// allowlist keys agree on path form.
+#[test]
+fn repo_tree_is_clean_under_checked_in_config() {
+    assert_eq!(
+        std::env::current_dir().expect("cwd").as_path(),
+        Path::new(env!("CARGO_MANIFEST_DIR")),
+        "cargo runs integration tests from the manifest dir"
+    );
+    let cfg = load_config(Path::new("detlint.toml")).expect("detlint.toml parses");
+    let report = scan_tree(&[], &cfg).expect("tree scan");
+    assert!(report.files_scanned > 50, "expected the whole tree, got {}", report.files_scanned);
+    let leaked: Vec<String> = report.findings.iter().map(Finding::render_text).collect();
+    assert!(leaked.is_empty(), "tree has unexcused findings:\n{}", leaked.join("\n"));
+    let stale: Vec<String> =
+        report.unused_allows.iter().map(|a| format!("{} / {}", a.file, a.rule)).collect();
+    assert!(stale.is_empty(), "stale allowlist entries:\n{}", stale.join("\n"));
+}

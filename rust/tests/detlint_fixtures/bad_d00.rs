@@ -1,0 +1,10 @@
+//! D00 fixture: malformed directives are findings themselves.
+
+// detlint: allow(D99, unknown rule id here)
+pub fn a() {}
+
+// detlint: allow(D06, one-word)
+pub fn b() {}
+
+// detlint: begin-wallclock(span never closed in this file)
+pub fn c() {}

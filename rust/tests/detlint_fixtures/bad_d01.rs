@@ -1,0 +1,6 @@
+//! D01 fixture: wallclock read in a deterministic module (scanned at a
+//! virtual `serve/` path by the test harness).
+
+pub fn poll_deadline() -> std::time::Instant {
+    std::time::Instant::now()
+}

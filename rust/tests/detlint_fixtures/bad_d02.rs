@@ -1,0 +1,6 @@
+//! D02 fixture: partial float order and float-literal equality.
+
+pub fn worst(xs: &mut [f64]) -> bool {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    xs[0] == 0.0
+}

@@ -1,0 +1,12 @@
+//! D03 fixture: unordered map in a deterministic module (scanned at a
+//! virtual `coordinator/` path by the test harness).
+
+use std::collections::HashMap;
+
+pub fn tally(keys: &[u32]) -> HashMap<u32, usize> {
+    let mut m = HashMap::new();
+    for &k in keys {
+        *m.entry(k).or_insert(0) += 1;
+    }
+    m
+}

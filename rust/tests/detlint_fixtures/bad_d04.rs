@@ -1,0 +1,5 @@
+//! D04 fixture: lossy narrowing outside the precision modules.
+
+pub fn shrink(x: f64, n: usize) -> (f32, u32) {
+    (x as f32, n as u32)
+}

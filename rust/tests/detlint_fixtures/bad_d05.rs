@@ -1,0 +1,12 @@
+//! D05 fixture: heap allocation inside a marked hot-path region.
+
+pub fn accumulate(rows: usize, lanes: usize) -> f64 {
+    let mut total = 0.0;
+    // detlint: hot-path
+    for _r in 0..rows {
+        let acc = vec![0.0f64; lanes];
+        total += acc.iter().sum::<f64>();
+    }
+    // detlint: end-hot-path
+    total
+}

@@ -1,0 +1,12 @@
+//! D06 fixture: panic paths in library code.
+
+pub fn head(xs: &[u32]) -> u32 {
+    if xs.len() > 3 {
+        panic!("too many");
+    }
+    *xs.first().unwrap()
+}
+
+pub fn tail(xs: &[u32]) -> u32 {
+    *xs.last().expect("nonempty")
+}

@@ -1,0 +1,8 @@
+//! D01 fixture: the same measurement inside an annotated wallclock span.
+
+pub fn poll_deadline() -> std::time::Instant {
+    // detlint: begin-wallclock(host-side latency statistic, never charged to sim time)
+    let t = std::time::Instant::now();
+    // detlint: end-wallclock
+    t
+}

@@ -1,0 +1,6 @@
+//! D02 fixture: total order and magnitude test.
+
+pub fn worst(xs: &mut [f64]) -> bool {
+    xs.sort_by(|a, b| a.total_cmp(b));
+    xs[0].abs() <= 0.0
+}

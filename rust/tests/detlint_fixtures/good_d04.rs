@@ -1,0 +1,5 @@
+//! D04 fixture: checked conversion and lossless widening only.
+
+pub fn shrink(n: u16) -> (u32, Option<u32>) {
+    (u32::from(n), u32::try_from(usize::from(n)).ok())
+}

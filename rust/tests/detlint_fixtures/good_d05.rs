@@ -1,0 +1,14 @@
+//! D05 fixture: the buffer is hoisted; the region only reuses it.
+
+pub fn accumulate(scratch: &mut Vec<f64>, rows: usize, lanes: usize) -> f64 {
+    scratch.clear();
+    scratch.resize(lanes, 0.0);
+    let mut total = 0.0;
+    // detlint: hot-path
+    for _r in 0..rows {
+        scratch.fill(0.0);
+        total += scratch.iter().sum::<f64>();
+    }
+    // detlint: end-hot-path
+    total
+}

@@ -1,0 +1,9 @@
+//! D06 fixture: fallible signatures instead of panic paths.
+
+pub fn head(xs: &[u32]) -> Option<u32> {
+    xs.first().copied()
+}
+
+pub fn tail(xs: &[u32]) -> Result<u32, &'static str> {
+    xs.last().copied().ok_or("empty input")
+}

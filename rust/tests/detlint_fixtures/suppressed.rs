@@ -1,0 +1,12 @@
+//! Pragma fixture: each violation carries a reasoned allow and the test
+//! expects zero findings.
+
+pub fn head(xs: &[u32]) -> u32 {
+    // detlint: allow(D06, fixture exercises same-line-plus-next-line pragma coverage)
+    *xs.first().unwrap()
+}
+
+pub fn shrink(x: f64) -> f32 {
+    // detlint: allow(D04, fixture narrowing is the documented storage contract)
+    x as f32
+}
