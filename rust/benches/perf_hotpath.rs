@@ -17,11 +17,17 @@
 //!   * the serving runtime (`topk_eigen::serve`): a fixed seeded workload
 //!     replayed through registry + coalescer + server, resident vs
 //!     eviction-pressure — wallclock plus simulated throughput/p99 — the
-//!     `serve` block of the schema-5 JSON,
+//!     `serve` block of the schema-6 JSON,
 //!   * multi-fleet scaling: one saturating backlog replayed at one and
 //!     two fleets; the simulated-throughput ratio is deterministic per
 //!     seed (host-independent), and `serve_fleet2_sim_throughput_min` in
 //!     the floor file gates it — two fleets must actually out-serve one,
+//!   * the tiered prepared-state cache (0.8): the same saturating
+//!     backlog under a zero device budget, evict-to-nothing vs
+//!     host-spill + prefetch; the simulated-throughput ratio is
+//!     deterministic and `serve_tiered_sim_throughput_min` gates it —
+//!     demote/promote with solve-overlapped prefetch must beat
+//!     re-preparing on every matrix switch — the `serve.tiers` block,
 //!   * the coordinator overhead fraction — the share of the hostsim solve
 //!     wallclock spent *outside* kernel execution, measured by a timing
 //!     wrapper around the kernel interface.
@@ -50,7 +56,7 @@ use topk_eigen::runtime::{HostKernels, Kernels, PjrtKernels};
 use topk_eigen::serve::{
     CoalescerConfig, EigenServer, MatrixRegistry, RegistryConfig, ServeReport, WorkloadSpec,
 };
-use topk_eigen::sim::Placement;
+use topk_eigen::sim::{CostModel, Placement};
 use topk_eigen::sparse::{suite, Ell};
 use topk_eigen::{Backend, Eigensolve, QueryParams, Solver};
 
@@ -625,6 +631,106 @@ fn main() {
         );
     }
 
+    // ---- Tiered prepared-state cache vs evict-to-nothing (simulated) ------
+    // A saturating backlog over three matrices on a single fleet with a
+    // ZERO device budget: every matrix switch displaces the previous
+    // prepared state. Evict-to-nothing (0.7 semantics) re-prepares on
+    // every comeback, paying the prepared-image h2d on the critical
+    // path; with a host spill tier the comeback is a promotion, and the
+    // dispatch-time prefetch runs it on the transfer channel *under* the
+    // in-flight batch's solve, taking it off the critical path entirely.
+    // The transfer price is calibrated against the probed solve time
+    // (both are deterministic simulated seconds, so the ratio is exact
+    // on every host): promoting the largest prepared image costs ~60% of
+    // the cheapest batch solve — a demote+promote lap fits comfortably
+    // inside one solve window, the regime prefetch targets.
+    let tier_matrices: Vec<(String, topk_eigen::Csr)> = ["WB-GO", "FL", "WB-TA"]
+        .iter()
+        .map(|id| (id.to_string(), suite::find(id).unwrap().generate_csr(s * 2.0, 7)))
+        .collect();
+    let tier_spec = WorkloadSpec::uniform(11, 48, 5000.0, &["WB-GO", "FL", "WB-TA"], 8);
+    let tier_solver = || {
+        Solver::builder()
+            .k(8)
+            .precision(cfg)
+            .devices(2)
+            .reorth(ReorthMode::Full)
+            .device_mem_bytes(1 << 30)
+            .backend(Backend::HostSim)
+            .build()
+            .expect("config")
+    };
+    let (max_bytes, min_solve_sim) = {
+        let mut probe = tier_solver();
+        let mut max_b = 0usize;
+        let mut min_s = f64::INFINITY;
+        for (_, m) in &tier_matrices {
+            let mut p = probe.prepare(m).expect("prepare");
+            max_b = max_b.max(p.resident_bytes());
+            let sol = probe.session(&mut p).solve(&QueryParams::new().k(8)).expect("solve");
+            min_s = min_s.min(sol.stats.sim_seconds);
+        }
+        (max_b, min_s)
+    };
+    let pcie_gbs = max_bytes as f64 / (0.6 * min_solve_sim * 1e9);
+    let tier_cost = CostModel {
+        h2d_gbs: pcie_gbs,
+        d2h_gbs: pcie_gbs * 4.0,
+        ..CostModel::default()
+    };
+    let run_tiered = |host_budget: usize| -> ServeReport {
+        let mut reg = MatrixRegistry::new(
+            tier_solver(),
+            RegistryConfig {
+                budget_bytes: 0,
+                host_budget_bytes: host_budget,
+                ssd_budget_bytes: 0,
+                cost: tier_cost.clone(),
+            },
+        );
+        for (name, m) in &tier_matrices {
+            reg.register(name, m);
+        }
+        let mut server = EigenServer::new(
+            reg,
+            CoalescerConfig { max_batch: 4, max_wait_s: 0.01, bulk_wait_factor: 4.0 },
+        )
+        .with_prefetch_depth(2);
+        let arrivals = {
+            let r0 = server.registry();
+            tier_spec.generate(|n| r0.index_of(n)).expect("workload")
+        };
+        server.run(&arrivals).expect("serve run")
+    };
+    let untier = run_tiered(0);
+    let tiered = run_tiered(1 << 30);
+    let tier_speedup = tiered.throughput_qps / untier.throughput_qps.max(1e-12);
+    t.row(&[
+        "serve tiered sim speedup".into(),
+        format!("{tier_speedup:.2}x"),
+        "".into(),
+        format!(
+            "{:.0} -> {:.0} q/s sim; {} promotions ({} prefetch hits) vs {} re-prepares",
+            untier.throughput_qps,
+            tiered.throughput_qps,
+            tiered.promotions,
+            tiered.prefetch_hits,
+            untier.prepares
+        ),
+    ]);
+    if tier_speedup <= 1.0 {
+        eprintln!(
+            "warning: the host spill tier did not out-serve evict-to-nothing \
+             ({tier_speedup:.2}x) — promotion/prefetch is not off the critical path"
+        );
+    }
+    if tiered.prefetch_hits == 0 {
+        eprintln!(
+            "warning: no prefetch promotion was hit — the tiered row measures \
+             synchronous promotion only"
+        );
+    }
+
     let serve_json = JsonObj::new()
         .raw("resident", serve_block(&tserve_res, &serve_res))
         .raw("pressure", serve_block(&tserve_prs, &serve_prs))
@@ -634,6 +740,23 @@ fn main() {
                 .num("fleet1_sim_qps", fleet1.throughput_qps)
                 .num("fleet2_sim_qps", fleet2.throughput_qps)
                 .num("speedup", fleet_speedup)
+                .finish(),
+        )
+        .raw(
+            "tiers",
+            JsonObj::new()
+                .num("untiered_sim_qps", untier.throughput_qps)
+                .num("tiered_sim_qps", tiered.throughput_qps)
+                .num("speedup", tier_speedup)
+                .num("untiered_p99_s", untier.latency.p99)
+                .num("tiered_p99_s", tiered.latency.p99)
+                .int("untiered_prepares", untier.prepares)
+                .int("tiered_prepares", tiered.prepares)
+                .int("demotions", tiered.demotions)
+                .int("promotions", tiered.promotions)
+                .int("prefetch_issued", tiered.prefetch_issued)
+                .int("prefetch_hits", tiered.prefetch_hits)
+                .int("prefetch_wasted", tiered.prefetch_wasted)
                 .finish(),
         )
         .finish();
@@ -704,7 +827,7 @@ fn main() {
 
     // ---- BENCH_perf.json -------------------------------------------------
     let json = JsonObj::new()
-        .int("schema", 5)
+        .int("schema", 6)
         .str("bench", "perf_hotpath")
         .num("scale", s)
         .int("reps", r)
@@ -823,6 +946,30 @@ fn main() {
                     }
                     None => eprintln!(
                         "warning: no serve_fleet2_sim_throughput_min in {floor_path}"
+                    ),
+                }
+                // Tiered-cache floor (schema 6, a `_min`): the host-spill
+                // + prefetch config's simulated throughput over the
+                // evict-to-nothing baseline on the same backlog. Both
+                // sides are simulated seconds — exact on every host.
+                match topk_eigen::bench_util::json_get_num(
+                    &floor,
+                    "serve_tiered_sim_throughput_min",
+                ) {
+                    Some(min) if tier_speedup < min => {
+                        eprintln!(
+                            "PERF REGRESSION: tiered-cache simulated throughput speedup \
+                             {tier_speedup:.3}x is below floor {min}x (from {floor_path})",
+                        );
+                        std::process::exit(1);
+                    }
+                    Some(min) => {
+                        println!(
+                            "perf floor ok: tiered-cache sim speedup {tier_speedup:.2}x >= {min}x"
+                        );
+                    }
+                    None => eprintln!(
+                        "warning: no serve_tiered_sim_throughput_min in {floor_path}"
                     ),
                 }
             }

@@ -190,6 +190,20 @@
 //! fixed `(workload seed, fault seed)` pair, and an empty spec is
 //! byte-inert (`rust/tests/chaos.rs`).
 //!
+//! 0.8 makes each fleet's registry a **tiered cache**:
+//! [`serve::RegistryConfig`] adds host-RAM and SSD spill budgets,
+//! device-pressure eviction *demotes* prepared state down the tier
+//! stack at [`sim::CostModel`] transfer prices instead of dropping it,
+//! a hit on a demoted entry *promotes* it back (bit-identical by
+//! construction — the demoted bytes are the prepared state), and the
+//! server prefetches upcoming matrices' promotions on a per-fleet
+//! transfer channel that overlaps the in-flight batch's solve. Crashes
+//! wipe the device tier only, so repair recovery is a promotion. The
+//! report grows a tiers block (demotions / promotions / prefetch
+//! counters, transfer totals) only when a spill tier is configured;
+//! untiered reports stay byte-compatible with 0.7
+//! (`rust/tests/tiered_registry.rs`).
+//!
 //! ## System shape
 //!
 //! The solver is two-phase:
@@ -289,6 +303,17 @@
 //! | fault-free runs only                          | [`serve::EigenServer::run_with_faults`] + [`sim::FaultSpec`] / [`sim::RetryPolicy`] |
 //! | every `QueryRecord` was served                | check [`serve::QueryRecord::outcome`]` == QueryOutcome::Served` (+ `retries`) |
 //! | `report.queries` = record count               | served only; `arrivals = queries + shed + failed`       |
+//!
+//! 0.8 tiers the prepared-state cache; registry call sites should adopt
+//! the richer prepare event and (optionally) configure spill tiers:
+//!
+//! | pre-0.8                                       | 0.8+                                                    |
+//! |-----------------------------------------------|---------------------------------------------------------|
+//! | `RegistryConfig { budget_bytes, cost }`       | + `host_budget_bytes` / `ssd_budget_bytes` (0 = tier off, pre-0.8 behavior) |
+//! | eviction drops prepared state                 | eviction demotes device→host→SSD; [`serve::Tier`] / `tier_of` observe placement |
+//! | `PrepareEvent { cold, sim_prepare_s, evicted }` | `sim_prepare_s` → `sim_cost_s`; + `promoted`, `demoted`, `demote_transfer_s` |
+//! | crash wipes the whole registry                | crash wipes the device tier; demoted state recovers by promotion |
+//! | one `prepare_s` wait per query record         | [`serve::QueryRecord`] splits `prepare_s` vs `promote_s` |
 //!
 //! The low-level types (`SolverConfig`, `TopKSolver`, `BaselineConfig`)
 //! remain public under [`coordinator`] / [`baseline`] for harnesses that

@@ -143,6 +143,14 @@ fn print_usage() {
          \x20 --bulk-wait-factor <f>  bulk deadline multiplier (default 4)\n\
          \x20 --registry-budget-mb <m>  prepared-state LRU budget\n\
          \x20                     (default 256, per fleet)\n\
+         \x20 --host-budget-mb <m>  host-RAM spill tier budget (default 0,\n\
+         \x20                     tier off): device eviction demotes\n\
+         \x20                     prepared state instead of dropping it\n\
+         \x20 --ssd-budget-mb <m> SSD spill tier budget (default 0, tier\n\
+         \x20                     off); overflow cascades host→SSD→drop\n\
+         \x20 --prefetch-depth <n>  upcoming matrices eligible for prefetch\n\
+         \x20                     promotion each dispatch pass (default 2,\n\
+         \x20                     0 disables; inert without spill tiers)\n\
          \x20 --fleets <n>        concurrent solver fleets draining one\n\
          \x20                     queue, each with its own replica registry\n\
          \x20                     (default 1; 0 is a usage error)\n\
@@ -542,6 +550,9 @@ const SERVE_FLAGS: &[&str] = &[
     "max-wait",
     "bulk-wait-factor",
     "registry-budget-mb",
+    "host-budget-mb",
+    "ssd-budget-mb",
+    "prefetch-depth",
     "fleets",
     "placement",
     "zipf-skew",
@@ -719,6 +730,9 @@ fn cmd_serve(args: &cli::Args) -> Result<i32, CliError> {
         )));
     }
     let budget_mb: usize = args.try_get_or("registry-budget-mb", 256usize)?;
+    let host_budget_mb: usize = args.try_get_or("host-budget-mb", 0usize)?;
+    let ssd_budget_mb: usize = args.try_get_or("ssd-budget-mb", 0usize)?;
+    let prefetch_depth: usize = args.try_get_or("prefetch-depth", 2usize)?;
     let fleets: usize = args.try_get_or("fleets", 1usize)?;
     if fleets == 0 {
         return Err(CliError::Usage("--fleets must be ≥ 1".into()));
@@ -817,7 +831,12 @@ fn cmd_serve(args: &cli::Args) -> Result<i32, CliError> {
             .build()?;
         let mut registry = MatrixRegistry::new(
             solver,
-            RegistryConfig { budget_bytes: budget_mb << 20, ..RegistryConfig::default() },
+            RegistryConfig {
+                budget_bytes: budget_mb << 20,
+                host_budget_bytes: host_budget_mb << 20,
+                ssd_budget_bytes: ssd_budget_mb << 20,
+                ..RegistryConfig::default()
+            },
         );
         for (name, m) in &matrices {
             registry.register(name, m);
@@ -828,7 +847,8 @@ fn cmd_serve(args: &cli::Args) -> Result<i32, CliError> {
         registries,
         CoalescerConfig { max_batch, max_wait_s: max_wait, bulk_wait_factor },
         placement,
-    )?;
+    )?
+    .with_prefetch_depth(prefetch_depth);
 
     let spec = WorkloadSpec {
         seed: workload_seed,

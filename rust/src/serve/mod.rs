@@ -77,9 +77,30 @@
 //! surface as [`error::ServeError`] (mapped to exit 2 by the CLI) rather
 //! than borrowed solver variants.
 //!
+//! ## Storage hierarchy & prefetch
+//!
+//! 0.8 makes each fleet's registry a **tiered cache**:
+//! [`registry::RegistryConfig`] adds host-RAM and SSD spill budgets
+//! below the device budget. Device-pressure eviction *demotes* the LRU
+//! entry's prepared state down the tier stack (cascading, at
+//! [`crate::sim::CostModel`] d2h / SSD transfer prices) instead of
+//! dropping it, and a later hit *promotes* it back up — bit-identical
+//! by construction, because the demoted bytes are the prepared state
+//! itself ([`registry::Tier`] / [`registry::MatrixRegistry::tier_of`]
+//! observe placement). The server overlays **prefetch** on top: at each
+//! dispatch it peeks at the coalescer's upcoming matrices and issues
+//! their promotions early on a per-fleet *transfer channel* whose
+//! `PrefetchDone` / `DemoteDone` completions ride the same event heap,
+//! so promotion transfers hide under the in-flight batch's solve and
+//! `busy + exposed transfer + down + idle` partitions each fleet's run
+//! exactly. Crashes wipe the device tier only — demoted state survives,
+//! so post-repair recovery is a promotion, not a cold re-preparation
+//! (`rust/tests/tiered_registry.rs`). With no spill tier configured the
+//! registry behaves exactly as in 0.7 and reports stay byte-compatible.
+//!
 //! The CLI front-end is `topk-eigen serve` (see the README's
-//! "Serving traffic" section for the workload mini-format and the
-//! fault-injection flags).
+//! "Serving traffic" section for the workload mini-format, the
+//! fault-injection flags, and the tier budgets / prefetch depth).
 
 pub mod error;
 pub mod registry;
@@ -88,7 +109,7 @@ pub mod server;
 pub mod workload;
 
 pub use error::ServeError;
-pub use registry::{MatrixRegistry, PrepareEvent, RegistryConfig, RegistryStats};
+pub use registry::{MatrixRegistry, PrepareEvent, RegistryConfig, RegistryStats, Tier};
 pub use scheduler::{Batch, BatchCoalescer, CoalescerConfig, Priority, QueryArrival};
 pub use server::{
     EigenServer, FaultSummary, FleetServeLine, QueryOutcome, QueryRecord, ServeReport,

@@ -1,5 +1,6 @@
-//! Multi-matrix registry: named matrices, lazy preparation, LRU eviction
-//! under a simulated device-memory budget.
+//! Multi-matrix registry: named matrices, lazy preparation, and a
+//! *tiered* prepared-state cache — device / host-RAM / SSD — under
+//! per-tier simulated byte budgets.
 //!
 //! The expensive asset in a served eigensolver is the *prepared* state —
 //! partitions, ELL/COO device layout, storage-precision replicas,
@@ -7,36 +8,89 @@
 //! that state as a cache: a query's matrix is prepared on first use
 //! ([`crate::Solver::prepare`]), its residency charged at
 //! [`crate::PreparedMatrix::resident_bytes`] against the configured
-//! budget, and the least-recently-used prepared matrices are evicted to
-//! make room. Because preparation is deterministic, an evicted matrix
-//! answers **bit-identically** after re-preparation — eviction costs
-//! latency, never accuracy (asserted in `rust/tests/serve.rs`).
+//! device budget, and least-recently-used prepared matrices make room.
 //!
-//! Re-preparation *time* on the simulated clock is modeled as the cost of
-//! re-uploading the prepared device image: the registry's
-//! [`crate::gpu::CostModel::h2d_seconds`] charge over `resident_bytes` —
-//! deterministic, unlike the host wallclock `prepare_seconds`.
+//! Pre-0.8, making room meant *dropping* state: a later hit paid a full
+//! cold re-preparation. With a host and/or SSD tier configured
+//! ([`RegistryConfig::host_budget_bytes`] /
+//! [`RegistryConfig::ssd_budget_bytes`]), device-pressure eviction
+//! **demotes** instead — the prepared image moves down the hierarchy at
+//! the cost model's transfer price ([`crate::gpu::CostModel::d2h_seconds`]
+//! to host, plus [`ssd_write_seconds`](crate::gpu::CostModel::ssd_write_seconds)
+//! for the SSD hop), cascading host → SSD → drop LRU-stably when a lower
+//! tier overflows in turn. A hit on a demoted entry **promotes** it back
+//! at the reverse price (h2d, plus an SSD read when it sank that far) —
+//! much cheaper than re-preparing, and **bit-identical by construction**:
+//! the demoted prepared state is preserved, never rebuilt, so the answer
+//! cannot differ (and an outright re-preparation is deterministic anyway
+//! — the pre-0.8 equivalence argument still holds for full drops).
+//!
+//! Promotion can also start *ahead* of the hit: the server's prefetch
+//! path ([`MatrixRegistry::prefetch_transfer_s`] /
+//! [`MatrixRegistry::begin_prefetch`] /
+//! [`MatrixRegistry::finish_prefetch`]) overlaps the transfer with the
+//! in-flight batch's solve on the fleet's transfer channel, so the next
+//! batch finds its matrix device-resident with zero promote wait.
+//!
+//! With both lower-tier budgets at 0 (the default) the registry is
+//! behavior- and byte-identical to the 0.7 evict-to-nothing cache:
+//! demotion degenerates to a drop, no transfer is ever charged, and no
+//! tier counter moves.
 
 use crate::gpu::CostModel;
 use crate::sparse::Csr;
 use crate::{PreparedMatrix, QueryParams, SolveOutcome, Solver, SolverError};
 
-/// Registry policy: how much simulated device memory prepared matrices
-/// may occupy in aggregate, and the cost model pricing re-preparation.
+/// Registry policy: how much simulated memory prepared matrices may
+/// occupy in each tier, and the cost model pricing every transfer.
 #[derive(Clone, Debug)]
 pub struct RegistryConfig {
-    /// Aggregate budget for prepared-state residency, in bytes. A single
-    /// matrix larger than the whole budget is still admitted (alone) —
-    /// the service must answer it; it just evicts everything else.
+    /// Aggregate budget for *device*-resident prepared state, in bytes.
+    /// A single matrix larger than the whole budget is still admitted
+    /// (alone) — the service must answer it; it just demotes everything
+    /// else.
     pub budget_bytes: usize,
-    /// Cost model charging the simulated re-preparation (h2d of the
-    /// prepared image).
+    /// Host-RAM spill tier budget, bytes. 0 (default) disables the tier:
+    /// device-pressure eviction drops straight to the next configured
+    /// tier (SSD if any, else to nothing — the 0.7 behavior).
+    pub host_budget_bytes: usize,
+    /// SSD spill tier budget, bytes. 0 (default) disables the tier.
+    pub ssd_budget_bytes: usize,
+    /// Cost model pricing preparation (h2d of the prepared image) and
+    /// every tier transfer (d2h, SSD read/write).
     pub cost: CostModel,
 }
 
 impl Default for RegistryConfig {
     fn default() -> Self {
-        RegistryConfig { budget_bytes: 256 << 20, cost: CostModel::default() }
+        RegistryConfig {
+            budget_bytes: 256 << 20,
+            host_budget_bytes: 0,
+            ssd_budget_bytes: 0,
+            cost: CostModel::default(),
+        }
+    }
+}
+
+/// Where a prepared state currently lives in the storage hierarchy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Tier {
+    /// On the device: solvable immediately.
+    Device,
+    /// Demoted to host RAM: a hit pays an h2d promotion.
+    Host,
+    /// Demoted to SSD: a hit pays an SSD read plus the h2d hop.
+    Ssd,
+}
+
+impl Tier {
+    /// Stable lowercase name, as printed in reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Tier::Device => "device",
+            Tier::Host => "host",
+            Tier::Ssd => "ssd",
+        }
     }
 }
 
@@ -45,29 +99,84 @@ impl Default for RegistryConfig {
 pub struct RegistryStats {
     /// Preparations performed (cold starts + re-preparations).
     pub prepares: usize,
-    /// Prepared states dropped to fit the budget.
+    /// Prepared states dropped entirely (no tier had room, or a crash
+    /// wiped the device tier).
     pub evictions: usize,
-    /// Lookups answered from resident prepared state.
+    /// Lookups answered from device-resident prepared state.
     pub hits: usize,
+    /// Prepared states demoted one tier down (device→host, host→SSD;
+    /// a device→SSD demotion with no host tier counts once).
+    pub demotions: usize,
+    /// Prepared states promoted back to the device (synchronous hits on
+    /// demoted entries + prefetch promotions issued).
+    pub promotions: usize,
+    /// Prefetch promotions issued by the server's dispatch loop.
+    pub prefetch_issued: usize,
+    /// Hits that found their entry device-resident *because* a prefetch
+    /// promoted it ahead of the batch (the zero-wait payoff).
+    pub prefetch_hits: usize,
+    /// Prefetched entries demoted or dropped again before any hit used
+    /// them — transfer spent for nothing.
+    pub prefetch_wasted: usize,
 }
 
-/// What [`MatrixRegistry::ensure_prepared`] did for one lookup — the
-/// server charges `sim_prepare_s` to the batch that triggered it.
+/// What [`MatrixRegistry::ensure_prepared`] did for one lookup. Exactly
+/// one of `cold` / `promoted` may be set (neither on a device hit);
+/// `sim_cost_s` is the simulated charge for *that* action — a cold
+/// preparation's h2d, or a promotion's transfer — and the server
+/// attributes it to the prepare or promote ledger accordingly. Demotions
+/// triggered by the admission ride on `demote_transfer_s`, which the
+/// server drains onto the fleet's transfer channel.
 #[derive(Clone, Copy, Debug)]
 pub struct PrepareEvent {
-    /// True when the matrix had to be (re-)prepared this lookup.
+    /// True when the matrix had to be (re-)prepared from nothing.
     pub cold: bool,
-    /// Simulated seconds charged for the preparation (0 on a hit).
-    pub sim_prepare_s: f64,
-    /// Prepared states evicted to make room, this lookup.
+    /// True when a demoted prepared state was promoted back to the
+    /// device instead (cheaper than `cold`, bit-identical answers).
+    pub promoted: bool,
+    /// Simulated seconds charged for this lookup's own action: the cold
+    /// preparation (h2d of the prepared image) or the promotion transfer
+    /// (h2d, plus SSD read from the SSD tier). 0 on a device hit.
+    pub sim_cost_s: f64,
+    /// Prepared states dropped entirely to make room, this lookup.
     pub evicted: usize,
+    /// Prepared states demoted a tier to make room, this lookup.
+    pub demoted: usize,
+    /// Simulated seconds of demotion transfers (d2h / SSD writes) this
+    /// lookup queued — the server occupies the fleet's transfer channel
+    /// with them (they never block the batch; the device copy stays
+    /// valid until overwritten).
+    pub demote_transfer_s: f64,
+}
+
+/// Demotions/evictions accumulated by one trim cascade.
+#[derive(Clone, Copy, Debug, Default)]
+struct TrimOut {
+    evicted: usize,
+    demoted: usize,
+    transfer_s: f64,
 }
 
 struct Entry<'m> {
     name: String,
     matrix: &'m Csr,
     prepared: Option<PreparedMatrix<'m>>,
-    /// Residency charge of `prepared` (kept when evicted: it is the
+    /// Which tier `prepared` occupies; `None` when nothing is held (never
+    /// prepared, dropped under pressure, or crash-wiped).
+    tier: Option<Tier>,
+    /// True while a prefetch promotion's transfer is in flight: the entry
+    /// is charged to the device tier but not yet solvable — the server
+    /// defers the batch until the matching [`ServeEvent::PrefetchDone`]
+    /// (`ServeEvent` in [`crate::sim`]).
+    promoting: bool,
+    /// Bit pattern of the in-flight promotion's completion instant; a
+    /// stale `PrefetchDone` (the entry was crash-wiped and re-promoted)
+    /// fails this match and is ignored.
+    promote_done_bits: u64,
+    /// True when the entry became device-resident via prefetch and no hit
+    /// has used it yet (the hit/wasted counters key on this).
+    prefetched: bool,
+    /// Residency charge of `prepared` (kept when dropped: it is the
     /// deterministic size the matrix will occupy again).
     resident_bytes: usize,
     /// LRU clock value of the last lookup.
@@ -77,10 +186,10 @@ struct Entry<'m> {
 }
 
 /// A fleet-wide registry of named matrices served by one [`Solver`]:
-/// prepared state is cached per matrix and LRU-evicted under
-/// [`RegistryConfig::budget_bytes`]. Matrices are borrowed (`'m`) from the
-/// caller — the workload owns them; the registry owns the solver and every
-/// prepared state.
+/// prepared state is cached per matrix across the device/host/SSD tiers
+/// and LRU-demoted under the per-tier budgets of [`RegistryConfig`].
+/// Matrices are borrowed (`'m`) from the caller — the workload owns
+/// them; the registry owns the solver and every prepared state.
 pub struct MatrixRegistry<'m> {
     solver: Solver,
     cfg: RegistryConfig,
@@ -90,7 +199,7 @@ pub struct MatrixRegistry<'m> {
 }
 
 impl<'m> MatrixRegistry<'m> {
-    /// Registry served by `solver` under `cfg`'s residency budget.
+    /// Registry served by `solver` under `cfg`'s tier budgets.
     pub fn new(solver: Solver, cfg: RegistryConfig) -> Self {
         MatrixRegistry { solver, cfg, entries: Vec::new(), tick: 0, stats: RegistryStats::default() }
     }
@@ -102,6 +211,10 @@ impl<'m> MatrixRegistry<'m> {
             name: name.to_string(),
             matrix,
             prepared: None,
+            tier: None,
+            promoting: false,
+            promote_done_bits: 0,
+            prefetched: false,
             resident_bytes: 0,
             last_used: 0,
             prepares: 0,
@@ -134,18 +247,50 @@ impl<'m> MatrixRegistry<'m> {
         self.entries.is_empty()
     }
 
-    /// True when entry `idx` currently holds prepared state.
-    pub fn is_resident(&self, idx: usize) -> bool {
-        self.entries[idx].prepared.is_some()
+    /// True when a lower (host/SSD) tier is configured — the condition
+    /// under which the serve report emits its tier block.
+    pub fn is_tiered(&self) -> bool {
+        self.cfg.host_budget_bytes > 0 || self.cfg.ssd_budget_bytes > 0
     }
 
-    /// Aggregate residency of all currently prepared matrices.
-    pub fn resident_bytes(&self) -> usize {
+    /// True when entry `idx` is device-resident and solvable now (a
+    /// promoting entry is charged to the device but still in transfer).
+    pub fn is_resident(&self, idx: usize) -> bool {
+        self.entries[idx].tier == Some(Tier::Device) && !self.entries[idx].promoting
+    }
+
+    /// Which tier entry `idx`'s prepared state occupies, if any.
+    pub fn tier_of(&self, idx: usize) -> Option<Tier> {
+        self.entries[idx].tier
+    }
+
+    /// True while a prefetch promotion of entry `idx` is in flight.
+    pub fn is_promoting(&self, idx: usize) -> bool {
+        self.entries[idx].promoting
+    }
+
+    fn tier_bytes(&self, tier: Tier) -> usize {
         self.entries
             .iter()
-            .filter(|e| e.prepared.is_some())
+            .filter(|e| e.tier == Some(tier))
             .map(|e| e.resident_bytes)
             .sum()
+    }
+
+    /// Aggregate residency of device-tier prepared state (promoting
+    /// entries included — their bytes are reserved).
+    pub fn resident_bytes(&self) -> usize {
+        self.tier_bytes(Tier::Device)
+    }
+
+    /// Aggregate residency of the host spill tier.
+    pub fn host_bytes(&self) -> usize {
+        self.tier_bytes(Tier::Host)
+    }
+
+    /// Aggregate residency of the SSD spill tier.
+    pub fn ssd_bytes(&self) -> usize {
+        self.tier_bytes(Tier::Ssd)
     }
 
     /// Lifetime counters.
@@ -158,52 +303,266 @@ impl<'m> MatrixRegistry<'m> {
         self.entries[idx].prepares
     }
 
-    /// Make entry `idx` resident: touch its LRU slot; on a miss, prepare
-    /// the matrix and evict least-recently-used prepared entries until the
-    /// aggregate residency fits the budget (prepare-then-trim: the new
-    /// state is charged first, then others are dropped — a matrix larger
-    /// than the whole budget is admitted alone).
-    pub fn ensure_prepared(&mut self, idx: usize) -> Result<PrepareEvent, SolverError> {
-        self.tick += 1;
-        self.entries[idx].last_used = self.tick;
-        if self.entries[idx].prepared.is_some() {
-            self.stats.hits += 1;
-            return Ok(PrepareEvent { cold: false, sim_prepare_s: 0.0, evicted: 0 });
+    /// Simulated seconds to promote entry `idx` back to the device from
+    /// its current tier: h2d of the prepared image from host, plus the
+    /// SSD read when it sank to the SSD tier.
+    fn promote_seconds(&self, bytes: usize, from: Tier) -> f64 {
+        match from {
+            Tier::Device => 0.0,
+            Tier::Host => self.cfg.cost.h2d_seconds(bytes),
+            Tier::Ssd => {
+                self.cfg.cost.ssd_read_seconds(bytes) + self.cfg.cost.h2d_seconds(bytes)
+            }
         }
-        let matrix: &'m Csr = self.entries[idx].matrix;
-        let prepared = self.solver.prepare(matrix)?;
-        let bytes = prepared.resident_bytes();
-        self.entries[idx].prepared = Some(prepared);
-        self.entries[idx].resident_bytes = bytes;
-        self.entries[idx].prepares += 1;
-        self.stats.prepares += 1;
-        let mut evicted = 0usize;
-        while self.resident_bytes() > self.cfg.budget_bytes {
-            // Oldest prepared entry other than the one just admitted.
+    }
+
+    /// A prefetched entry that gets demoted or dropped before any hit
+    /// used it was promoted for nothing.
+    fn note_displaced(&mut self, v: usize) {
+        if self.entries[v].prefetched {
+            self.entries[v].prefetched = false;
+            self.stats.prefetch_wasted += 1;
+        }
+    }
+
+    /// Drop entry `v`'s prepared state entirely.
+    fn drop_entry(&mut self, v: usize, out: &mut TrimOut) {
+        self.note_displaced(v);
+        self.entries[v].prepared = None;
+        self.entries[v].tier = None;
+        out.evicted += 1;
+        self.stats.evictions += 1;
+    }
+
+    /// Demote entry `v` out of the device tier into the next configured
+    /// tier (host, else SSD, else drop), charging the transfer and
+    /// cascading any lower-tier overflow.
+    fn demote_from_device(&mut self, v: usize, out: &mut TrimOut) {
+        let bytes = self.entries[v].resident_bytes;
+        self.note_displaced(v);
+        if self.cfg.host_budget_bytes > 0 {
+            self.entries[v].tier = Some(Tier::Host);
+            out.transfer_s += self.cfg.cost.d2h_seconds(bytes);
+            out.demoted += 1;
+            self.stats.demotions += 1;
+            self.trim_host(out);
+        } else if self.cfg.ssd_budget_bytes > 0 {
+            self.entries[v].tier = Some(Tier::Ssd);
+            out.transfer_s +=
+                self.cfg.cost.d2h_seconds(bytes) + self.cfg.cost.ssd_write_seconds(bytes);
+            out.demoted += 1;
+            self.stats.demotions += 1;
+            self.trim_ssd(out);
+        } else {
+            self.drop_entry(v, out);
+        }
+    }
+
+    /// Demote host-tier LRU entries until the host tier fits its budget.
+    fn trim_host(&mut self, out: &mut TrimOut) {
+        while self.tier_bytes(Tier::Host) > self.cfg.host_budget_bytes {
             let victim = self
                 .entries
                 .iter()
                 .enumerate()
-                .filter(|(i, e)| *i != idx && e.prepared.is_some())
+                .filter(|(_, e)| e.tier == Some(Tier::Host))
                 .min_by_key(|(_, e)| e.last_used)
                 .map(|(i, _)| i);
             let Some(v) = victim else { break };
-            self.entries[v].prepared = None;
-            evicted += 1;
-            self.stats.evictions += 1;
+            self.note_displaced(v);
+            if self.cfg.ssd_budget_bytes > 0 {
+                let bytes = self.entries[v].resident_bytes;
+                self.entries[v].tier = Some(Tier::Ssd);
+                out.transfer_s += self.cfg.cost.ssd_write_seconds(bytes);
+                out.demoted += 1;
+                self.stats.demotions += 1;
+                self.trim_ssd(out);
+            } else {
+                self.drop_entry(v, out);
+            }
         }
-        Ok(PrepareEvent {
-            cold: true,
-            sim_prepare_s: self.cfg.cost.h2d_seconds(bytes),
-            evicted,
-        })
     }
 
-    /// Answer a coalesced batch against entry `idx`: ensure residency
-    /// (paying any prepare/evictions), then run the queries through one
-    /// [`crate::SolveSession::solve_batch`]. Outcomes come back in query
-    /// order, each bit-identical to the same query on a standalone
-    /// session.
+    /// Drop SSD-tier LRU entries until the SSD tier fits its budget.
+    fn trim_ssd(&mut self, out: &mut TrimOut) {
+        while self.tier_bytes(Tier::Ssd) > self.cfg.ssd_budget_bytes {
+            let victim = self
+                .entries
+                .iter()
+                .enumerate()
+                .filter(|(_, e)| e.tier == Some(Tier::Ssd))
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(i, _)| i);
+            let Some(v) = victim else { break };
+            self.drop_entry(v, out);
+        }
+    }
+
+    /// Demote device-tier LRU entries until the device tier fits its
+    /// budget, sparing `protect` (the entry being admitted, plus — on
+    /// the prefetch path — the matrix the fleet is currently solving)
+    /// and any entry mid-promotion. When only protected entries remain
+    /// the device runs transiently over budget (the oversized-alone rule,
+    /// and prefetch's double-buffer overshoot); the next trim resolves it.
+    fn trim_device(&mut self, protect: &[usize], out: &mut TrimOut) {
+        while self.tier_bytes(Tier::Device) > self.cfg.budget_bytes {
+            let victim = self
+                .entries
+                .iter()
+                .enumerate()
+                .filter(|(i, e)| {
+                    !protect.contains(i) && e.tier == Some(Tier::Device) && !e.promoting
+                })
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(i, _)| i);
+            let Some(v) = victim else { break };
+            self.demote_from_device(v, out);
+        }
+    }
+
+    /// Make entry `idx` device-resident: touch its LRU slot, then —
+    ///
+    /// * device hit: free; any over-budget residue (prefetch overshoot)
+    ///   trims around the hit entry;
+    /// * demoted (host/SSD): **promote** — charge the transfer back up
+    ///   the hierarchy, bit-identical by construction (the prepared
+    ///   state was preserved, not rebuilt);
+    /// * absent: cold-prepare and charge the h2d of the prepared image.
+    ///
+    /// Admission is prepare-then-trim: the new state is charged first,
+    /// then LRU device entries demote down the cascade — a matrix larger
+    /// than the whole device budget is admitted alone.
+    pub fn ensure_prepared(&mut self, idx: usize) -> Result<PrepareEvent, SolverError> {
+        self.tick += 1;
+        self.entries[idx].last_used = self.tick;
+        debug_assert!(
+            !self.entries[idx].promoting,
+            "dispatch must not route a batch to an entry mid-promotion"
+        );
+        let mut out = TrimOut::default();
+        match self.entries[idx].tier {
+            Some(Tier::Device) => {
+                self.stats.hits += 1;
+                if self.entries[idx].prefetched {
+                    self.entries[idx].prefetched = false;
+                    self.stats.prefetch_hits += 1;
+                }
+                self.trim_device(&[idx], &mut out);
+                Ok(PrepareEvent {
+                    cold: false,
+                    promoted: false,
+                    sim_cost_s: 0.0,
+                    evicted: out.evicted,
+                    demoted: out.demoted,
+                    demote_transfer_s: out.transfer_s,
+                })
+            }
+            Some(from) => {
+                let bytes = self.entries[idx].resident_bytes;
+                let cost = self.promote_seconds(bytes, from);
+                self.entries[idx].tier = Some(Tier::Device);
+                self.entries[idx].prefetched = false;
+                self.stats.promotions += 1;
+                self.trim_device(&[idx], &mut out);
+                Ok(PrepareEvent {
+                    cold: false,
+                    promoted: true,
+                    sim_cost_s: cost,
+                    evicted: out.evicted,
+                    demoted: out.demoted,
+                    demote_transfer_s: out.transfer_s,
+                })
+            }
+            None => {
+                let matrix: &'m Csr = self.entries[idx].matrix;
+                let prepared = self.solver.prepare(matrix)?;
+                let bytes = prepared.resident_bytes();
+                self.entries[idx].prepared = Some(prepared);
+                self.entries[idx].tier = Some(Tier::Device);
+                self.entries[idx].resident_bytes = bytes;
+                self.entries[idx].prepares += 1;
+                self.stats.prepares += 1;
+                self.trim_device(&[idx], &mut out);
+                Ok(PrepareEvent {
+                    cold: true,
+                    promoted: false,
+                    sim_cost_s: self.cfg.cost.h2d_seconds(bytes),
+                    evicted: out.evicted,
+                    demoted: out.demoted,
+                    demote_transfer_s: out.transfer_s,
+                })
+            }
+        }
+    }
+
+    /// Transfer seconds a prefetch promotion of entry `idx` would cost,
+    /// or `None` when there is nothing to prefetch (not demoted, already
+    /// promoting, or never prepared).
+    pub fn prefetch_transfer_s(&self, idx: usize) -> Option<f64> {
+        let e = &self.entries[idx];
+        if e.promoting {
+            return None;
+        }
+        match e.tier {
+            Some(from @ (Tier::Host | Tier::Ssd)) => {
+                Some(self.promote_seconds(e.resident_bytes, from))
+            }
+            _ => None,
+        }
+    }
+
+    /// Start a prefetch promotion of entry `idx`, completing at `done_s`
+    /// on the fleet's transfer channel: the entry moves to the device
+    /// tier immediately (bytes reserved) but stays unsolvable until
+    /// [`MatrixRegistry::finish_prefetch`] confirms the completion
+    /// instant. `protect` additionally spares the matrix the fleet is
+    /// currently solving from the admission trim. Returns the demotion
+    /// transfer seconds the admission queued (0 when everything fit).
+    ///
+    /// Callers must check [`MatrixRegistry::prefetch_transfer_s`] first;
+    /// starting a prefetch on a non-demoted entry is a no-op returning 0.
+    pub fn begin_prefetch(&mut self, idx: usize, done_s: f64, protect: Option<usize>) -> f64 {
+        if self.prefetch_transfer_s(idx).is_none() {
+            return 0.0;
+        }
+        self.tick += 1;
+        self.entries[idx].last_used = self.tick;
+        self.entries[idx].tier = Some(Tier::Device);
+        self.entries[idx].promoting = true;
+        self.entries[idx].promote_done_bits = done_s.to_bits();
+        self.stats.promotions += 1;
+        self.stats.prefetch_issued += 1;
+        let mut protected = vec![idx];
+        if let Some(p) = protect {
+            protected.push(p);
+        }
+        let mut out = TrimOut::default();
+        self.trim_device(&protected, &mut out);
+        out.transfer_s
+    }
+
+    /// Complete the prefetch promotion of entry `idx` whose transfer
+    /// finishes at `now` — matched bit-for-bit against the instant
+    /// [`MatrixRegistry::begin_prefetch`] recorded, so a stale
+    /// `PrefetchDone` event (the entry was crash-wiped mid-transfer, or
+    /// re-promoted since) is ignored. Returns whether the promotion
+    /// committed.
+    pub fn finish_prefetch(&mut self, idx: usize, now: f64) -> bool {
+        let e = &mut self.entries[idx];
+        if e.promoting && e.promote_done_bits == now.to_bits() {
+            e.promoting = false;
+            e.prefetched = true;
+            return true;
+        }
+        false
+    }
+
+    /// Answer a coalesced batch against entry `idx`: ensure device
+    /// residency (paying any prepare/promotion/demotions), then run the
+    /// queries through one [`crate::SolveSession::solve_batch`]. Outcomes
+    /// come back in query order, each bit-identical to the same query on
+    /// a standalone session — across cold, demote→promote, and
+    /// crash-recovery paths alike.
     pub fn solve_batch(
         &mut self,
         idx: usize,
@@ -217,16 +576,39 @@ impl<'m> MatrixRegistry<'m> {
         Ok((outs, event))
     }
 
-    /// Drop *every* resident prepared state — the cache loss of a fleet
-    /// crash (0.7). Returns how many entries were evicted (each counted
-    /// in [`RegistryStats::evictions`]). Registration, names, and the
-    /// recorded residency sizes survive; the next query per matrix pays
-    /// a cold re-preparation and answers bit-identically, same as an LRU
-    /// eviction.
+    /// The cache loss of a fleet crash: drop every *device*-tier
+    /// prepared state (in-flight promotions included — their transfer is
+    /// aborted), while demoted state on host/SSD survives, so repair
+    /// recovery is a cheap promotion rather than a cold prepare. Returns
+    /// how many entries were dropped (each counted in
+    /// [`RegistryStats::evictions`]). With no lower tier configured this
+    /// is exactly the 0.7 full wipe.
+    pub fn crash_wipe(&mut self) -> usize {
+        let mut dropped = 0usize;
+        for i in 0..self.entries.len() {
+            if self.entries[i].tier == Some(Tier::Device) {
+                self.note_displaced(i);
+                self.entries[i].prepared = None;
+                self.entries[i].tier = None;
+                self.entries[i].promoting = false;
+                dropped += 1;
+            }
+        }
+        self.stats.evictions += dropped;
+        dropped
+    }
+
+    /// Drop **every** prepared state in every tier (test/diagnostic
+    /// reset; the server's crash path uses [`MatrixRegistry::crash_wipe`],
+    /// which spares the lower tiers). Returns how many entries held state.
     pub fn evict_all(&mut self) -> usize {
         let mut evicted = 0usize;
-        for e in &mut self.entries {
-            if e.prepared.take().is_some() {
+        for i in 0..self.entries.len() {
+            if self.entries[i].tier.is_some() {
+                self.note_displaced(i);
+                self.entries[i].prepared = None;
+                self.entries[i].tier = None;
+                self.entries[i].promoting = false;
                 evicted += 1;
             }
         }
@@ -261,13 +643,17 @@ mod tests {
         let mut reg = MatrixRegistry::new(solver(), RegistryConfig::default());
         let ia = reg.register("a", &a);
         assert!(!reg.is_resident(ia));
+        assert_eq!(reg.tier_of(ia), None);
         let e1 = reg.ensure_prepared(ia).unwrap();
-        assert!(e1.cold && e1.sim_prepare_s > 0.0);
+        assert!(e1.cold && !e1.promoted && e1.sim_cost_s > 0.0);
+        assert_eq!(reg.tier_of(ia), Some(Tier::Device));
         let e2 = reg.ensure_prepared(ia).unwrap();
-        assert!(!e2.cold && e2.sim_prepare_s == 0.0);
+        assert!(!e2.cold && !e2.promoted && e2.sim_cost_s == 0.0);
         let s = reg.stats();
         assert_eq!((s.prepares, s.hits, s.evictions), (1, 1, 0));
+        assert_eq!((s.demotions, s.promotions), (0, 0));
         assert!(reg.resident_bytes() > 0);
+        assert_eq!(reg.host_bytes() + reg.ssd_bytes(), 0);
     }
 
     #[test]
@@ -294,9 +680,90 @@ mod tests {
         reg.ensure_prepared(ia).unwrap(); // touch a — b becomes LRU
         let e = reg.ensure_prepared(ic).unwrap();
         assert!(e.cold && e.evicted >= 1);
+        assert_eq!(e.demoted, 0, "no lower tier: eviction is a drop");
+        assert_eq!(e.demote_transfer_s, 0.0);
         assert!(!reg.is_resident(ib), "LRU entry evicted first");
         assert!(reg.is_resident(ia) && reg.is_resident(ic));
         assert!(reg.resident_bytes() <= budget);
+    }
+
+    #[test]
+    fn host_tier_demotes_instead_of_dropping_and_promotes_on_hit() {
+        let a = suite::find("WB-GO").unwrap().generate_csr(0.3, 1);
+        let b = suite::find("FL").unwrap().generate_csr(0.3, 1);
+        let mut probe = solver();
+        let sa = probe.prepare(&a).unwrap().resident_bytes();
+        let sb = probe.prepare(&b).unwrap().resident_bytes();
+        // Device fits exactly one; host holds everything.
+        let mut reg = MatrixRegistry::new(
+            solver(),
+            RegistryConfig {
+                budget_bytes: sa.max(sb) + sa.min(sb) / 2,
+                host_budget_bytes: 1 << 30,
+                ..RegistryConfig::default()
+            },
+        );
+        let (ia, ib) = (reg.register("a", &a), reg.register("b", &b));
+        reg.ensure_prepared(ia).unwrap();
+        let e = reg.ensure_prepared(ib).unwrap();
+        assert!(e.cold && e.demoted == 1 && e.evicted == 0);
+        assert!(e.demote_transfer_s > 0.0, "the d2h demotion is priced");
+        assert_eq!(reg.tier_of(ia), Some(Tier::Host), "a spilled, not dropped");
+        // The hit on a promotes instead of re-preparing.
+        let e = reg.ensure_prepared(ia).unwrap();
+        assert!(!e.cold && e.promoted);
+        assert!(e.sim_cost_s > 0.0, "promotion charges the h2d hop");
+        assert_eq!(e.demoted, 1, "b demotes to host in turn");
+        assert_eq!(reg.tier_of(ib), Some(Tier::Host));
+        let s = reg.stats();
+        assert_eq!(s.prepares, 2, "neither ping nor pong re-prepares");
+        assert_eq!((s.demotions, s.promotions), (2, 1));
+    }
+
+    #[test]
+    fn cascade_is_lru_stable_host_to_ssd_to_drop() {
+        // Same suite entry, different seeds: four near-identically sized
+        // prepared states, so "budget = the largest one" makes every
+        // tier a one-slot cache (any single fits; no two ever do).
+        let a = suite::find("WB-GO").unwrap().generate_csr(0.3, 1);
+        let b = suite::find("WB-GO").unwrap().generate_csr(0.3, 2);
+        let c = suite::find("WB-GO").unwrap().generate_csr(0.3, 3);
+        let mut probe = solver();
+        let sa = probe.prepare(&a).unwrap().resident_bytes();
+        let sb = probe.prepare(&b).unwrap().resident_bytes();
+        let sc = probe.prepare(&c).unwrap().resident_bytes();
+        let one = sa.max(sb).max(sc);
+        let mut reg = MatrixRegistry::new(
+            solver(),
+            RegistryConfig {
+                budget_bytes: one,
+                host_budget_bytes: one,
+                ssd_budget_bytes: one,
+                ..RegistryConfig::default()
+            },
+        );
+        let (ia, ib, ic) =
+            (reg.register("a", &a), reg.register("b", &b), reg.register("c", &c));
+        reg.ensure_prepared(ia).unwrap(); // a: device
+        reg.ensure_prepared(ib).unwrap(); // b: device, a → host
+        assert_eq!((reg.tier_of(ia), reg.tier_of(ib)), (Some(Tier::Host), Some(Tier::Device)));
+        let e = reg.ensure_prepared(ic).unwrap(); // c: device, b → host, a → ssd
+        assert_eq!(e.demoted, 2, "device and host overflow in one cascade");
+        assert_eq!(reg.tier_of(ia), Some(Tier::Ssd), "oldest sinks deepest");
+        assert_eq!(reg.tier_of(ib), Some(Tier::Host));
+        assert_eq!(reg.tier_of(ic), Some(Tier::Device));
+        // A fourth admission pushes the LRU chain one more step: a drops.
+        let d = suite::find("WB-GO").unwrap().generate_csr(0.3, 4);
+        let id = reg.register("d", &d);
+        let e = reg.ensure_prepared(id).unwrap();
+        assert!(e.evicted >= 1, "the SSD overflow falls off the hierarchy");
+        assert_eq!(reg.tier_of(ia), None);
+        // Promotion from SSD pays both hops: read + h2d beats what a
+        // host-tier promotion would cost.
+        let from_ssd = reg.ensure_prepared(ib).unwrap();
+        assert!(from_ssd.promoted);
+        let host_price = reg.cfg.cost.h2d_seconds(sb);
+        assert!(from_ssd.sim_cost_s > host_price, "SSD promotion adds the read");
     }
 
     #[test]
@@ -315,7 +782,77 @@ mod tests {
         assert_eq!(reg.stats().evictions, 2);
         // Coming back is a cold prepare, like any eviction.
         let e = reg.ensure_prepared(ia).unwrap();
-        assert!(e.cold && e.sim_prepare_s > 0.0);
+        assert!(e.cold && e.sim_cost_s > 0.0);
+    }
+
+    #[test]
+    fn crash_wipe_spares_demoted_state() {
+        let a = suite::find("WB-GO").unwrap().generate_csr(0.3, 1);
+        let b = suite::find("FL").unwrap().generate_csr(0.3, 1);
+        let mut probe = solver();
+        let sa = probe.prepare(&a).unwrap().resident_bytes();
+        let sb = probe.prepare(&b).unwrap().resident_bytes();
+        let mut reg = MatrixRegistry::new(
+            solver(),
+            RegistryConfig {
+                budget_bytes: sa.max(sb) + sa.min(sb) / 2,
+                host_budget_bytes: 1 << 30,
+                ..RegistryConfig::default()
+            },
+        );
+        let (ia, ib) = (reg.register("a", &a), reg.register("b", &b));
+        reg.ensure_prepared(ia).unwrap();
+        reg.ensure_prepared(ib).unwrap(); // a demoted to host
+        assert_eq!(reg.crash_wipe(), 1, "only the device tier is lost");
+        assert_eq!(reg.tier_of(ib), None, "device-resident b is gone");
+        assert_eq!(reg.tier_of(ia), Some(Tier::Host), "demoted a survives");
+        // Recovery for a is a promotion, not a cold prepare.
+        let e = reg.ensure_prepared(ia).unwrap();
+        assert!(e.promoted && !e.cold);
+        assert_eq!(reg.stats().prepares, 2, "no re-preparation after the crash");
+    }
+
+    #[test]
+    fn prefetch_promotes_ahead_and_counts_hits_and_waste() {
+        let a = suite::find("WB-GO").unwrap().generate_csr(0.3, 1);
+        let b = suite::find("FL").unwrap().generate_csr(0.3, 1);
+        let mut probe = solver();
+        let sa = probe.prepare(&a).unwrap().resident_bytes();
+        let sb = probe.prepare(&b).unwrap().resident_bytes();
+        let mut reg = MatrixRegistry::new(
+            solver(),
+            RegistryConfig {
+                budget_bytes: sa.max(sb) + sa.min(sb) / 2,
+                host_budget_bytes: 1 << 30,
+                ..RegistryConfig::default()
+            },
+        );
+        let (ia, ib) = (reg.register("a", &a), reg.register("b", &b));
+        reg.ensure_prepared(ia).unwrap();
+        reg.ensure_prepared(ib).unwrap(); // a → host
+        // Prefetch a back: device tier reserved, not yet solvable.
+        let dur = reg.prefetch_transfer_s(ia).expect("a is demoted");
+        assert!(dur > 0.0);
+        reg.begin_prefetch(ia, 1.5, None);
+        assert!(reg.is_promoting(ia) && !reg.is_resident(ia));
+        assert_eq!(reg.prefetch_transfer_s(ia), None, "no double prefetch");
+        // A stale completion instant is ignored; the real one commits.
+        assert!(!reg.finish_prefetch(ia, 1.25));
+        assert!(reg.finish_prefetch(ia, 1.5));
+        assert!(reg.is_resident(ia));
+        let e = reg.ensure_prepared(ia).unwrap();
+        assert!(!e.cold && !e.promoted && e.sim_cost_s == 0.0, "prefetch hit is free");
+        assert_eq!(reg.stats().prefetch_hits, 1);
+        // A prefetched-but-never-hit entry that gets displaced again is
+        // waste: promote b back (demoting a), prefetch a, then wipe.
+        let e = reg.ensure_prepared(ib).unwrap();
+        assert!(e.promoted, "b was demoted by the prefetch admission above");
+        assert!(reg.prefetch_transfer_s(ia).is_some());
+        reg.begin_prefetch(ia, 2.5, None);
+        assert!(reg.finish_prefetch(ia, 2.5));
+        assert_eq!(reg.stats().prefetch_wasted, 0);
+        reg.evict_all();
+        assert_eq!(reg.stats().prefetch_wasted, 1, "a never saw its hit");
     }
 
     #[test]

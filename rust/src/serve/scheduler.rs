@@ -248,6 +248,25 @@ impl BatchCoalescer {
         Some(self.pop_from(best.2))
     }
 
+    /// The next `limit` distinct matrices the coalescer would run, in the
+    /// exact pop order of [`BatchCoalescer::ready_batch`] /
+    /// [`BatchCoalescer::flush_any`]: ascending `(deadline, id, matrix)`
+    /// over each non-empty queue's selection key. This is the prefetch
+    /// oracle — the server promotes these matrices' demoted prepared
+    /// state *while the current batch solves*, so by the time a queue
+    /// pops, its matrix is already device-resident. Pure peek: no queue
+    /// is popped and no deadline moves.
+    pub fn upcoming_matrices(&self, limit: usize) -> Vec<usize> {
+        let mut keyed: Vec<(f64, u64, usize)> = self
+            .queues
+            .iter()
+            .enumerate()
+            .filter_map(|(mi, q)| self.queue_key(q).map(|(d, id)| (d, id, mi)))
+            .collect();
+        keyed.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)).then(a.2.cmp(&b.2)));
+        keyed.into_iter().take(limit).map(|(_, _, mi)| mi).collect()
+    }
+
     fn pop_from(&mut self, mi: usize) -> Batch {
         let q = &mut self.queues[mi];
         let take = q.len().min(self.cfg.max_batch);
@@ -443,6 +462,23 @@ mod tests {
         assert_eq!(c.pending(), 2);
         let b = c.ready_batch(1.0).expect("interactive query still queued");
         assert_eq!(b.queries[0].id, 1);
+    }
+
+    #[test]
+    fn upcoming_matrices_peeks_in_pop_order_without_popping() {
+        let cfg = CoalescerConfig { max_batch: 8, max_wait_s: 0.1, bulk_wait_factor: 4.0 };
+        let mut c = BatchCoalescer::new(cfg, 3);
+        c.push(q(0, 2, 0.05, Priority::Interactive)); // deadline 0.15
+        c.push(q(1, 0, 0.0, Priority::Interactive)); // deadline 0.10 — first
+        c.push(q(2, 1, 0.3, Priority::Interactive)); // deadline 0.40 — last
+        assert_eq!(c.upcoming_matrices(3), vec![0, 2, 1]);
+        assert_eq!(c.upcoming_matrices(2), vec![0, 2], "limit truncates the tail");
+        assert_eq!(c.pending(), 3, "peek pops nothing");
+        // The peek order matches the actual pop order exactly.
+        let order: Vec<usize> =
+            std::iter::from_fn(|| c.flush_any().map(|b| b.matrix)).collect();
+        assert_eq!(order, vec![0, 2, 1]);
+        assert!(c.upcoming_matrices(3).is_empty(), "drained queue peeks empty");
     }
 
     #[test]

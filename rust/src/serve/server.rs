@@ -129,14 +129,22 @@ pub struct QueryRecord {
     /// Admission-queue wait: `start_s − arrival_s`.
     pub queue_s: f64,
     /// Simulated (re-)preparation charged to this query's batch (0 when
-    /// the matrix was resident).
+    /// the matrix was resident or merely promoted).
     pub prepare_s: f64,
+    /// Simulated promotion transfer this query's batch waited on (0
+    /// unless the matrix was synchronously promoted from a lower tier —
+    /// a prefetched promotion completes *before* dispatch and charges
+    /// nothing here).
+    pub promote_s: f64,
     /// This lane's simulated solve time.
     pub solve_s: f64,
     /// Size of the batch it rode in (0 when never served).
     pub batch_size: usize,
     /// True when the batch had to (re-)prepare the matrix.
     pub cold: bool,
+    /// True when the batch promoted demoted prepared state instead of
+    /// re-preparing (mutually exclusive with `cold`).
+    pub promoted: bool,
     /// The fleet the batch ran on (always 0 on a single-fleet server;
     /// meaningless — 0 — for shed/failed queries).
     pub fleet: usize,
@@ -186,6 +194,13 @@ pub struct FleetServeLine {
     pub down_s: f64,
     /// Crashes that struck this fleet.
     pub crashes: usize,
+    /// Simulated seconds this fleet's transfer channel was occupied by
+    /// tier demotions/promotions (clipped to the run; 0 without tiers).
+    pub transfer_s: f64,
+    /// The *exposed* part of `transfer_s`: transfer time outside the
+    /// fleet's busy and down windows. Per fleet,
+    /// `busy + exposed transfer + down + idle = sim_end` exactly.
+    pub transfer_exposed_s: f64,
 }
 
 /// Fault/recovery rollup of a faulty run ([`ServeReport::faults`];
@@ -256,6 +271,31 @@ pub struct ServeReport {
     pub hits: usize,
     /// Prepared-state residency at the end of the run (all fleets).
     pub resident_bytes_end: usize,
+    /// True when any fleet's registry had a host/SSD tier configured —
+    /// the condition under which the tier fields below are meaningful
+    /// (and emitted in the JSON).
+    pub tiered: bool,
+    /// Transfer-channel occupancy across fleets (demotions +
+    /// promotions), clipped to the run.
+    pub transfer_s_total: f64,
+    /// Exposed (non-overlapped) transfer seconds across fleets — the
+    /// part of `transfer_s_total` that actually extended the run.
+    pub transfer_exposed_s_total: f64,
+    /// Prepared states demoted a tier down, summed across fleets.
+    pub demotions: usize,
+    /// Prepared states promoted back to the device, summed across
+    /// fleets (synchronous + prefetched).
+    pub promotions: usize,
+    /// Prefetch promotions issued by the dispatch loop.
+    pub prefetch_issued: usize,
+    /// Hits served from prefetched (already-promoted) state.
+    pub prefetch_hits: usize,
+    /// Prefetched states displaced before any hit used them.
+    pub prefetch_wasted: usize,
+    /// Host-tier residency at the end of the run (all fleets).
+    pub host_bytes_end: usize,
+    /// SSD-tier residency at the end of the run (all fleets).
+    pub ssd_bytes_end: usize,
     /// Fleets the server ran with.
     pub fleets: usize,
     /// Placement policy name (`pin` / `replicate` / `least-loaded`).
@@ -292,10 +332,12 @@ impl ServeReport {
     /// numbers): byte-identical across replays of one seeded workload.
     /// The multi-fleet fields (`fleets`, `placement`, `per_fleet`,
     /// `replicas`) are emitted only when the server ran more than one
-    /// fleet, and the fault fields (`arrivals`, `shed`, `failed`,
-    /// `faults`) only when the fault spec was active — so single-fleet
-    /// fault-free reports stay byte-compatible with pre-0.6 consumers
-    /// and every fault-free report with pre-0.7 ones.
+    /// fleet, the fault fields (`arrivals`, `shed`, `failed`, `faults`)
+    /// only when the fault spec was active, and the `tiers` block (plus
+    /// the per-fleet transfer columns) only when a host/SSD tier was
+    /// configured — so single-fleet fault-free reports stay
+    /// byte-compatible with pre-0.6 consumers, every fault-free report
+    /// with pre-0.7 ones, and every untiered report with 0.7 ones.
     pub fn to_json(&self) -> String {
         let per_matrix: Vec<String> = self
             .per_matrix
@@ -348,18 +390,37 @@ impl ServeReport {
                 .int("failed", self.failed)
                 .raw("faults", fj);
         }
+        if self.tiered {
+            let tj = JsonObj::new()
+                .num("transfer_s_total", self.transfer_s_total)
+                .num("transfer_exposed_s_total", self.transfer_exposed_s_total)
+                .int("demotions", self.demotions)
+                .int("promotions", self.promotions)
+                .int("prefetch_issued", self.prefetch_issued)
+                .int("prefetch_hits", self.prefetch_hits)
+                .int("prefetch_wasted", self.prefetch_wasted)
+                .int("host_bytes_end", self.host_bytes_end)
+                .int("ssd_bytes_end", self.ssd_bytes_end)
+                .finish();
+            j = j.raw("tiers", tj);
+        }
         if self.fleets > 1 {
             let per_fleet: Vec<String> = self
                 .per_fleet
                 .iter()
                 .map(|f| {
-                    JsonObj::new()
+                    let mut fj = JsonObj::new()
                         .int("fleet", f.fleet)
                         .int("batches", f.batches)
                         .num("solve_s", f.solve_s)
                         .num("prepare_s", f.prepare_s)
-                        .num("utilization", f.utilization)
-                        .finish()
+                        .num("utilization", f.utilization);
+                    if self.tiered {
+                        fj = fj
+                            .num("transfer_s", f.transfer_s)
+                            .num("transfer_exposed_s", f.transfer_exposed_s);
+                    }
+                    fj.finish()
                 })
                 .collect();
             let replicas: Vec<String> =
@@ -436,6 +497,20 @@ impl ServeReport {
             self.hits,
             self.evictions
         );
+        if self.tiered {
+            println!(
+                "tiers    {} demotions, {} promotions | prefetch {} issued ({} hits, {} wasted) | transfer {:.4}s ({:.4}s exposed) | end residency host {} B, ssd {} B",
+                self.demotions,
+                self.promotions,
+                self.prefetch_issued,
+                self.prefetch_hits,
+                self.prefetch_wasted,
+                self.transfer_s_total,
+                self.transfer_exposed_s_total,
+                self.host_bytes_end,
+                self.ssd_bytes_end
+            );
+        }
         if let Some(fs) = &self.faults {
             println!(
                 "faults   {} crashes ({} batches killed, {:.4}s down) | {} transient failures, {} retries, {} failovers | served {} / shed {} (deadline {}, queue-full {}) / failed {} of {} arrivals",
@@ -529,9 +604,11 @@ fn unserved_record(
         done_s: now,
         queue_s: now - q.arrival_s,
         prepare_s: 0.0,
+        promote_s: 0.0,
         solve_s: 0.0,
         batch_size: 0,
         cold: false,
+        promoted: false,
         fleet: 0,
         outcome,
         retries,
@@ -572,7 +649,17 @@ pub struct EigenServer<'m> {
     registries: Vec<MatrixRegistry<'m>>,
     coalescer: CoalescerConfig,
     placement: Placement,
+    /// How many upcoming coalescer matrices the dispatch loop considers
+    /// for prefetch promotion each pass (0 disables prefetch). Inert
+    /// unless a registry has a host/SSD tier — there is nothing to
+    /// promote without demoted state.
+    prefetch_depth: usize,
 }
+
+/// Default [`EigenServer`] prefetch lookahead (next-two matrices): deep
+/// enough to hide a promotion behind the in-flight solve, shallow enough
+/// not to thrash the device tier with speculative state.
+const DEFAULT_PREFETCH_DEPTH: usize = 2;
 
 impl<'m> EigenServer<'m> {
     /// Single-fleet server over `registry`, coalescing with `coalescer`.
@@ -581,7 +668,16 @@ impl<'m> EigenServer<'m> {
             registries: vec![registry],
             coalescer,
             placement: Placement::Replicate,
+            prefetch_depth: DEFAULT_PREFETCH_DEPTH,
         }
+    }
+
+    /// Override the prefetch lookahead (how many upcoming matrices the
+    /// dispatch loop may promote ahead of their batch; 0 disables
+    /// prefetch entirely). Without a host/SSD tier this is inert.
+    pub fn with_prefetch_depth(mut self, depth: usize) -> Self {
+        self.prefetch_depth = depth;
+        self
     }
 
     /// Multi-fleet server: one registry per fleet (each its own device
@@ -626,7 +722,12 @@ impl<'m> EigenServer<'m> {
                 }
             }
         }
-        Ok(EigenServer { registries, coalescer, placement })
+        Ok(EigenServer {
+            registries,
+            coalescer,
+            placement,
+            prefetch_depth: DEFAULT_PREFETCH_DEPTH,
+        })
     }
 
     /// Number of fleets.
@@ -830,9 +931,11 @@ impl<'m> EigenServer<'m> {
                 if c.repair_s > 0.0 {
                     st.heap.push(now + c.repair_s, ServeEvent::FleetUp { fleet: c.fleet });
                 }
-                // The crash loses the fleet's prepared-state cache: its
-                // next batch per matrix pays a cold re-preparation.
-                self.registries[c.fleet].evict_all();
+                // The crash loses the fleet's *device*-tier prepared
+                // state (in-flight promotions included); demoted state
+                // on host/SSD survives, so repair recovery is a cheap
+                // promotion. Without tiers this is the 0.7 full wipe.
+                self.registries[c.fleet].crash_wipe();
                 if cut.killed {
                     let b = st.in_flight[c.fleet]
                         .take()
@@ -861,12 +964,24 @@ impl<'m> EigenServer<'m> {
                     st.retry_ready.push(retry);
                 }
             }
+            ServeEvent::PrefetchDone { fleet, matrix } => {
+                // Commit the promotion (the registry ignores stale
+                // markers — a crash wiped the transfer mid-flight); the
+                // dispatch loop below then sees the matrix resident.
+                self.registries[fleet].finish_prefetch(matrix, now);
+            }
+            // Pure wake-up: demotion bookkeeping moved at demote time;
+            // the event only marks the transfer channel freeing up.
+            ServeEvent::DemoteDone { .. } => {}
         }
     }
 
     /// Route every currently runnable batch to a fleet: ready retries
     /// first (the oldest work in the system), then fresh coalesced
-    /// batches, until neither makes progress.
+    /// batches, until neither makes progress — then run the prefetch
+    /// pass over whatever is still queued. A batch whose routed fleet is
+    /// mid-promotion of its matrix defers (never double-prepares): the
+    /// promotion's `PrefetchDone` event is a guaranteed wake-up.
     fn dispatch(&mut self, st: &mut RunState, now: f64, drain: bool) -> Result<(), ServeError> {
         let placement = self.placement;
         loop {
@@ -879,7 +994,9 @@ impl<'m> EigenServer<'m> {
                     st.retries[rid].as_ref().expect("ready retry entries are live").matrix;
                 let hot = st.served[matrix] >= HOT_QUERIES;
                 match st.pool.choose_failover(placement, matrix, hot, now) {
-                    Some((fleet, failed_over)) => {
+                    Some((fleet, failed_over))
+                        if !self.registries[fleet].is_promoting(matrix) =>
+                    {
                         // detlint: allow(D06, the same entry matched as_ref Some a few lines above in this iteration)
                         let rb = st.retries[rid].take().expect("checked above");
                         st.retry_ready.remove(i);
@@ -890,14 +1007,16 @@ impl<'m> EigenServer<'m> {
                         self.execute(st, now, fleet, rb.matrix, rb.queries, rb.attempt)?;
                         progress = true;
                     }
-                    None => i += 1,
+                    _ => i += 1,
                 }
             }
             // One fresh batch per pass — the loop comes back for more,
             // so a retry becoming dispatchable interleaves fairly.
+            let regs = &self.registries;
             let RunState { coal, pool, served, .. } = &mut *st;
             let pred = |mi: usize| {
-                pool.choose_failover(placement, mi, served[mi] >= HOT_QUERIES, now).is_some()
+                pool.choose_failover(placement, mi, served[mi] >= HOT_QUERIES, now)
+                    .is_some_and(|(f, _)| !regs[f].is_promoting(mi))
             };
             let batch = match coal.ready_batch_where(now, &pred) {
                 Some(b) => Some(b),
@@ -918,7 +1037,52 @@ impl<'m> EigenServer<'m> {
                 progress = true;
             }
             if !progress {
-                return Ok(());
+                break;
+            }
+        }
+        self.issue_prefetch(st, now);
+        Ok(())
+    }
+
+    /// The prefetch pass, run once dispatch quiesces: peek the
+    /// coalescer's next [`EigenServer::with_prefetch_depth`] matrices
+    /// (exact pop order) and, on every fleet the placement could route
+    /// them to, start promoting their demoted prepared state on the
+    /// fleet's transfer channel — overlapping the in-flight batch's
+    /// solve, so the eventual hit finds the state device-resident with
+    /// zero promote wait. The admission may demote the fleet's LRU
+    /// entries in turn (the in-flight batch's matrix is protected);
+    /// those transfers queue behind the promotion on the same channel.
+    /// No-ops end-to-end without a configured host/SSD tier: nothing is
+    /// ever demoted, so there is nothing to promote.
+    fn issue_prefetch(&mut self, st: &mut RunState, now: f64) {
+        if self.prefetch_depth == 0 {
+            return;
+        }
+        let nf = self.registries.len();
+        for mi in st.coal.upcoming_matrices(self.prefetch_depth) {
+            let hot = st.served[mi] >= HOT_QUERIES;
+            let home = mi % nf;
+            for f in 0..nf {
+                let routable = match self.placement {
+                    Placement::Pin => f == home,
+                    Placement::Replicate => true,
+                    Placement::LeastLoaded => hot || f == home,
+                };
+                if !routable || st.pool.is_down(f, now) {
+                    continue;
+                }
+                let Some(dur) = self.registries[f].prefetch_transfer_s(mi) else {
+                    continue;
+                };
+                let done = st.pool.occupy_transfer(f, now, dur);
+                let protect = st.in_flight[f].as_ref().map(|b| b.matrix);
+                let demote_s = self.registries[f].begin_prefetch(mi, done, protect);
+                st.heap.push(done, ServeEvent::PrefetchDone { fleet: f, matrix: mi });
+                if demote_s > 0.0 {
+                    let t_d = st.pool.occupy_transfer(f, done, demote_s);
+                    st.heap.push(t_d, ServeEvent::DemoteDone { fleet: f });
+                }
             }
         }
     }
@@ -963,14 +1127,31 @@ impl<'m> EigenServer<'m> {
         let (outs, ev) = self.registries[fleet].solve_batch(matrix, &params)?;
         let start = now;
         let solve_dur = outs.iter().map(|o| o.stats.sim_seconds).fold(0.0f64, f64::max);
-        let done = st.pool.occupy(fleet, start, ev.sim_prepare_s, solve_dur);
+        let prepare_s = if ev.cold { ev.sim_cost_s } else { 0.0 };
+        // A synchronous promotion rides the transfer channel and gates
+        // the batch's compute start (the fleet itself stays schedulable
+        // only after the solve anyway); a cold prepare charges the
+        // compute channel exactly as pre-0.8.
+        let compute_start = if ev.promoted {
+            st.pool.occupy_transfer(fleet, now, ev.sim_cost_s)
+        } else {
+            now
+        };
+        let done = st.pool.occupy(fleet, compute_start, prepare_s, solve_dur);
         if ev.cold {
-            st.heap.push(start + ev.sim_prepare_s, ServeEvent::PrepareDone { fleet });
+            st.heap.push(start + ev.sim_cost_s, ServeEvent::PrepareDone { fleet });
+        }
+        // Demotions the admission queued drain on the transfer channel
+        // behind any promotion; they never block the batch (the device
+        // copy stays valid until overwritten).
+        if ev.demote_transfer_s > 0.0 {
+            let t_d = st.pool.occupy_transfer(fleet, now, ev.demote_transfer_s);
+            st.heap.push(t_d, ServeEvent::DemoteDone { fleet });
         }
         st.heap.push(done, ServeEvent::SolveDone { fleet });
         st.batches += 1;
         st.solve_s_total += solve_dur;
-        st.prepare_s_total += ev.sim_prepare_s;
+        st.prepare_s_total += prepare_s;
         st.served[matrix] += queries.len();
         for (q, o) in queries.iter().zip(&outs) {
             st.records.push(QueryRecord {
@@ -982,10 +1163,12 @@ impl<'m> EigenServer<'m> {
                 start_s: start,
                 done_s: done,
                 queue_s: start - q.arrival_s,
-                prepare_s: ev.sim_prepare_s,
+                prepare_s,
+                promote_s: if ev.promoted { ev.sim_cost_s } else { 0.0 },
                 solve_s: o.stats.sim_seconds,
                 batch_size: queries.len(),
                 cold: ev.cold,
+                promoted: ev.promoted,
                 fleet,
                 outcome: QueryOutcome::Served,
                 retries: attempt - 1,
@@ -1012,6 +1195,14 @@ impl<'m> EigenServer<'m> {
                     "the serial reference loop serves exactly one fleet (server has {})",
                     self.registries.len()
                 ),
+            });
+        }
+        if self.registries[0].is_tiered() {
+            return Err(ServeError::Config {
+                field: "registry",
+                message: "the serial reference loop models the pre-0.8 evict-to-nothing \
+                          cache; run it without host/SSD tier budgets"
+                    .into(),
             });
         }
         let mut coal = BatchCoalescer::new(self.coalescer, self.registries[0].len());
@@ -1054,10 +1245,10 @@ impl<'m> EigenServer<'m> {
             let start = now;
             let solve_dur =
                 outs.iter().map(|o| o.stats.sim_seconds).fold(0.0f64, f64::max);
-            let done = pool.occupy(0, start, ev.sim_prepare_s, solve_dur);
+            let done = pool.occupy(0, start, ev.sim_cost_s, solve_dur);
             batches += 1;
             solve_s_total += solve_dur;
-            prepare_s_total += ev.sim_prepare_s;
+            prepare_s_total += ev.sim_cost_s;
             for (q, o) in batch.queries.iter().zip(&outs) {
                 records.push(QueryRecord {
                     id: q.id,
@@ -1068,10 +1259,12 @@ impl<'m> EigenServer<'m> {
                     start_s: start,
                     done_s: done,
                     queue_s: start - q.arrival_s,
-                    prepare_s: ev.sim_prepare_s,
+                    prepare_s: ev.sim_cost_s,
+                    promote_s: 0.0,
                     solve_s: o.stats.sim_seconds,
                     batch_size: batch.queries.len(),
                     cold: ev.cold,
+                    promoted: false,
                     fleet: 0,
                     outcome: QueryOutcome::Served,
                     retries: 0,
@@ -1127,12 +1320,23 @@ impl<'m> EigenServer<'m> {
             }
         }
         let (mut prepares, mut evictions, mut hits, mut resident) = (0, 0, 0, 0);
+        let (mut demotions, mut promotions) = (0, 0);
+        let (mut prefetch_issued, mut prefetch_hits, mut prefetch_wasted) = (0, 0, 0);
+        let (mut host_bytes, mut ssd_bytes) = (0usize, 0usize);
+        let tiered = self.registries.iter().any(|r| r.is_tiered());
         for reg in &self.registries {
             let s = reg.stats();
             prepares += s.prepares;
             evictions += s.evictions;
             hits += s.hits;
+            demotions += s.demotions;
+            promotions += s.promotions;
+            prefetch_issued += s.prefetch_issued;
+            prefetch_hits += s.prefetch_hits;
+            prefetch_wasted += s.prefetch_wasted;
             resident += reg.resident_bytes();
+            host_bytes += reg.host_bytes();
+            ssd_bytes += reg.ssd_bytes();
         }
         let per_matrix: Vec<MatrixServeLine> = (0..self.registries[0].len())
             .map(|mi| {
@@ -1178,8 +1382,13 @@ impl<'m> EigenServer<'m> {
                 utilization: safe_rate(s.busy_s, sim_end_s),
                 down_s: pool.down_seconds(f, sim_end_s),
                 crashes: pool.crashes_of(f),
+                transfer_s: pool.transfer_seconds(f, sim_end_s),
+                transfer_exposed_s: pool.transfer_exposed_seconds(f, sim_end_s),
             })
             .collect();
+        let transfer_s_total: f64 = per_fleet.iter().map(|f| f.transfer_s).sum();
+        let transfer_exposed_s_total: f64 =
+            per_fleet.iter().map(|f| f.transfer_exposed_s).sum();
         ServeReport {
             queries: served_n,
             arrivals: records.len(),
@@ -1198,6 +1407,16 @@ impl<'m> EigenServer<'m> {
             evictions,
             hits,
             resident_bytes_end: resident,
+            tiered,
+            transfer_s_total,
+            transfer_exposed_s_total,
+            demotions,
+            promotions,
+            prefetch_issued,
+            prefetch_hits,
+            prefetch_wasted,
+            host_bytes_end: host_bytes,
+            ssd_bytes_end: ssd_bytes,
             fleets: nf,
             placement: self.placement.name(),
             per_fleet,
@@ -1308,6 +1527,8 @@ mod tests {
         assert!(!json.contains("\"per_fleet\""));
         assert!(!json.contains("\"placement\""));
         assert!(!json.contains("\"replicas\""));
+        assert!(!json.contains("\"tiers\""), "untiered reports stay 0.7-byte-compatible");
+        assert!(!json.contains("\"transfer_s\""));
     }
 
     #[test]

@@ -45,6 +45,16 @@ pub struct CostModel {
     pub launch_s: f64,
     /// Host↔device bandwidth for out-of-core streaming, GB/s (PCIe3 x16).
     pub h2d_gbs: f64,
+    /// Device→host readback bandwidth, GB/s. PCIe3 x16 is symmetric on
+    /// paper but D2H achieves slightly less in practice (pinned-memory
+    /// readback ≈ 12 GB/s on V100 hosts) — demotions price with this.
+    pub d2h_gbs: f64,
+    /// SSD sequential-read bandwidth, GB/s (datacenter NVMe ≈ 3.2).
+    /// Promotions from the SSD tier pay an SSD read *plus* the h2d hop.
+    pub ssd_read_gbs: f64,
+    /// SSD sequential-write bandwidth, GB/s (datacenter NVMe ≈ 1.8;
+    /// writes land well under reads on every NVMe class).
+    pub ssd_write_gbs: f64,
     /// Memory-sector granularity of random gathers, bytes. V100 L2 serves
     /// 32 B sectors: a random 4 B gather still moves 32 B — the reason SpMV
     /// dominates even at modest average degree.
@@ -64,6 +74,9 @@ impl Default for CostModel {
             fp64_tflops: 7.8,
             launch_s: 5e-6,
             h2d_gbs: 12.0,
+            d2h_gbs: 12.0,
+            ssd_read_gbs: 3.2,
+            ssd_write_gbs: 1.8,
             gather_sector_bytes: 32,
             cpu_gflops: 8.0,
         }
@@ -99,6 +112,34 @@ impl CostModel {
             return 0.0;
         }
         self.launch_s + bytes as f64 / (self.h2d_gbs * 1e9)
+    }
+
+    /// Seconds to read `bytes` back device→host — the price of demoting a
+    /// prepared state to the host tier.
+    pub fn d2h_seconds(&self, bytes: usize) -> f64 {
+        if bytes == 0 {
+            return 0.0;
+        }
+        self.launch_s + bytes as f64 / (self.d2h_gbs * 1e9)
+    }
+
+    /// Seconds to read `bytes` sequentially from the SSD tier. The fixed
+    /// term models NVMe command latency (~100 µs), well above a kernel
+    /// launch.
+    pub fn ssd_read_seconds(&self, bytes: usize) -> f64 {
+        if bytes == 0 {
+            return 0.0;
+        }
+        1e-4 + bytes as f64 / (self.ssd_read_gbs * 1e9)
+    }
+
+    /// Seconds to write `bytes` sequentially to the SSD tier — the price
+    /// of demoting a prepared state host→SSD.
+    pub fn ssd_write_seconds(&self, bytes: usize) -> f64 {
+        if bytes == 0 {
+            return 0.0;
+        }
+        1e-4 + bytes as f64 / (self.ssd_write_gbs * 1e9)
     }
 
     /// Deterministic model of the serial CPU Jacobi phase on the K×K
@@ -282,6 +323,27 @@ mod tests {
         // Per-lane bytes shrink monotonically with the batch size.
         let b4 = m.spmm_cost(rows, w, n, 4, &cfg);
         assert!(block.total_bytes() as f64 / 8.0 < b4.total_bytes() as f64 / 4.0);
+    }
+
+    #[test]
+    fn tier_bandwidths_order_pcie_over_nvme() {
+        // The storage hierarchy must price like one: device↔host hops run
+        // at PCIe speed, SSD hops run at NVMe speed, writes under reads.
+        let m = CostModel::default();
+        let bytes = 1 << 28;
+        let h2d = m.h2d_seconds(bytes);
+        let d2h = m.d2h_seconds(bytes);
+        let sr = m.ssd_read_seconds(bytes);
+        let sw = m.ssd_write_seconds(bytes);
+        assert!(sr > h2d * 2.0, "ssd read {sr} must be well over h2d {h2d}");
+        assert!(sr > d2h * 2.0);
+        assert!(sw > sr, "ssd write {sw} must be slower than ssd read {sr}");
+        // Zero bytes transfer for free on every lane.
+        assert_eq!(m.d2h_seconds(0), 0.0);
+        assert_eq!(m.ssd_read_seconds(0), 0.0);
+        assert_eq!(m.ssd_write_seconds(0), 0.0);
+        // Promotion from SSD pays both hops: read + h2d > either alone.
+        assert!(sr + h2d > sr && sr + h2d > h2d);
     }
 
     #[test]

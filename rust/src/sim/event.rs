@@ -64,6 +64,25 @@ pub enum ServeEvent {
         /// Index into the server's run-local retry table.
         retry: usize,
     },
+    /// A prefetch promotion finished on a fleet's transfer channel: the
+    /// matrix's demoted prepared state is device-resident again and its
+    /// queued batch may dispatch with zero promote wait. Stale markers
+    /// (the entry was wiped by a crash mid-transfer) are no-ops — the
+    /// registry matches the completion instant bit-for-bit before
+    /// committing.
+    PrefetchDone {
+        /// The fleet whose transfer channel completed the promotion.
+        fleet: usize,
+        /// Registry index of the promoted matrix.
+        matrix: usize,
+    },
+    /// A demotion's d2h / SSD-write transfer drained on a fleet's
+    /// transfer channel. Pure wake-up: residency bookkeeping moved at
+    /// demote time; the event only marks when the channel freed up.
+    DemoteDone {
+        /// The fleet whose transfer channel drained the demotion.
+        fleet: usize,
+    },
 }
 
 #[cfg(test)]
@@ -82,6 +101,15 @@ mod tests {
         assert_eq!(h.pop(), Some((0.25, ServeEvent::PrepareDone { fleet: 1 })));
         assert_eq!(h.pop(), Some((0.5, ServeEvent::Flush { matrix: 3 })));
         assert_eq!(h.pop(), Some((0.75, ServeEvent::SolveDone { fleet: 0 })));
+    }
+
+    #[test]
+    fn tier_events_ride_the_same_timeline() {
+        let mut h = EventHeap::new();
+        h.push(0.4, ServeEvent::DemoteDone { fleet: 1 });
+        h.push(0.2, ServeEvent::PrefetchDone { fleet: 0, matrix: 3 });
+        assert_eq!(h.pop(), Some((0.2, ServeEvent::PrefetchDone { fleet: 0, matrix: 3 })));
+        assert_eq!(h.pop(), Some((0.4, ServeEvent::DemoteDone { fleet: 1 })));
     }
 
     #[test]

@@ -14,6 +14,17 @@
 //! window — and [`FleetPool::choose_failover`] reroutes a batch whose
 //! placement-routed fleet is down (not merely busy) to a surviving
 //! idle fleet.
+//!
+//! Transfer channel (0.8): each fleet additionally owns one *transfer*
+//! channel — the DMA/SSD-staging lane that demotions and promotions of
+//! prepared state occupy ([`FleetPool::occupy_transfer`]), serialized
+//! among themselves but overlapping the compute channel freely (that
+//! overlap is the whole point of prefetch: promotion hides behind the
+//! in-flight batch's solve). Accounting keeps the per-fleet partition
+//! exact: `busy + exposed-transfer + down + idle = sim_end`, where
+//! [`FleetPool::transfer_exposed_seconds`] counts only transfer time
+//! *outside* busy/down windows — hidden transfer time is free, which is
+//! precisely the quantity prefetch optimizes.
 
 use std::str::FromStr;
 
@@ -36,6 +47,10 @@ pub struct FleetStatus {
     pub prepare_s: f64,
     /// Batches this fleet has executed.
     pub batches: usize,
+    /// Simulated second until which the fleet's *transfer* channel
+    /// (demotions / promotions of prepared state) is occupied. Transfers
+    /// serialize on this horizon but overlap the compute channel freely.
+    pub xfer_until: f64,
     /// The current occupation, when busy: `(start, prepare_s, solve_s)`
     /// of the in-flight batch — what [`FleetPool::crash`] needs to
     /// un-charge the uncompleted remainder.
@@ -114,11 +129,34 @@ struct DownTrack {
     crashes: usize,
 }
 
+/// Per-fleet interval ledger backing the exact busy/transfer/down/idle
+/// partition: compute occupations and transfer-channel occupations as
+/// `(start, end)` windows on the simulated timeline (both truncated by
+/// crashes, like the scalar ledgers).
+#[derive(Clone, Debug, Default)]
+struct ChannelTrack {
+    /// Compute-channel windows, one per occupied batch, ascending and
+    /// non-overlapping.
+    busy: Vec<(f64, f64)>,
+    /// Transfer-channel windows, ascending and non-overlapping (the
+    /// channel serializes its transfers).
+    xfer: Vec<(f64, f64)>,
+}
+
 /// The dispatcher's view of N concurrent fleets.
 #[derive(Clone, Debug)]
 pub struct FleetPool {
     fleets: Vec<FleetStatus>,
     down: Vec<DownTrack>,
+    track: Vec<ChannelTrack>,
+}
+
+/// Total length of `windows` clipped to `[0, horizon]`.
+fn clipped_len(windows: &[(f64, f64)], horizon: f64) -> f64 {
+    windows
+        .iter()
+        .map(|&(a, b)| (b.min(horizon) - a.min(horizon)).max(0.0))
+        .sum()
 }
 
 impl FleetPool {
@@ -129,6 +167,7 @@ impl FleetPool {
         FleetPool {
             fleets: vec![FleetStatus::default(); n],
             down: vec![DownTrack::default(); n],
+            track: vec![ChannelTrack::default(); n],
         }
     }
 
@@ -233,7 +272,63 @@ impl FleetPool {
         s.solve_s += solve_s;
         s.batches += 1;
         s.cur = Some((start, prepare_s, solve_s));
+        if done > start {
+            self.track[f].busy.push((start, done));
+        }
         done
+    }
+
+    /// Occupy fleet `f`'s *transfer* channel for `dur` simulated seconds,
+    /// starting at `at` or when the channel frees up, whichever is later
+    /// (transfers serialize; a fresh promotion queues behind an in-flight
+    /// demotion). Returns the transfer's completion time. The channel is
+    /// independent of the compute channel — a transfer may run while the
+    /// fleet solves, which is how prefetch hides promotion cost.
+    pub fn occupy_transfer(&mut self, f: usize, at: f64, dur: f64) -> f64 {
+        let s = &mut self.fleets[f];
+        let start = if s.xfer_until > at { s.xfer_until } else { at };
+        let done = start + dur;
+        s.xfer_until = done;
+        if dur > 0.0 {
+            self.track[f].xfer.push((start, done));
+        }
+        done
+    }
+
+    /// Simulated seconds fleet `f`'s transfer channel was occupied,
+    /// clipped to `[0, horizon]` (a trailing prefetch outlasting the last
+    /// completion doesn't count phantom transfer time).
+    pub fn transfer_seconds(&self, f: usize, horizon: f64) -> f64 {
+        clipped_len(&self.track[f].xfer, horizon)
+    }
+
+    /// *Exposed* transfer seconds of fleet `f` in `[0, horizon]`:
+    /// transfer-channel occupancy outside the fleet's busy and down
+    /// windows. Hidden transfer time (overlapping a solve) costs nothing
+    /// on the critical path; the exposed remainder is what completes the
+    /// per-fleet partition `busy + transfer + down + idle = horizon`
+    /// exactly (asserted in `rust/tests/tiered_registry.rs`).
+    pub fn transfer_exposed_seconds(&self, f: usize, horizon: f64) -> f64 {
+        // Busy and down windows are mutually disjoint (a fleet is never
+        // occupied while down; crashes truncate the busy window at the
+        // instant the down window opens), so overlap subtracts additively.
+        let t = &self.track[f];
+        let covered: Vec<(f64, f64)> = t
+            .busy
+            .iter()
+            .chain(self.down[f].windows.iter())
+            .map(|&(a, b)| (a.min(horizon), b.min(horizon)))
+            .collect();
+        let mut exposed = 0.0f64;
+        for &(a, b) in &t.xfer {
+            let (a, b) = (a.min(horizon), b.min(horizon));
+            let mut hidden = 0.0f64;
+            for &(c, d) in &covered {
+                hidden += (b.min(d) - a.max(c)).max(0.0);
+            }
+            exposed += (b - a) - hidden;
+        }
+        exposed
     }
 
     /// Crash fleet `f` at `now` for `repair_s` simulated seconds. If a
@@ -252,9 +347,12 @@ impl FleetPool {
                 // detlint: allow(D06, busy_until > now implies occupy() set cur and no release cleared it yet)
                 s.cur.expect("a busy fleet always has a current occupation");
             let prep_end = start + prepare_s;
-            // Completed prefix of each phase at the crash instant.
-            let done_prep = if now < prep_end { now - start } else { prepare_s };
-            let done_solve = if now > prep_end { now - prep_end } else { 0.0 };
+            // Completed prefix of each phase at the crash instant. A batch
+            // whose start is still in the future (it was committed at
+            // dispatch but waits on a synchronous promotion transfer) has
+            // completed nothing — the clamps keep both prefixes in range.
+            let done_prep = (now - start).clamp(0.0, prepare_s);
+            let done_solve = (now - prep_end).clamp(0.0, solve_s);
             cut.prepare_cut = prepare_s - done_prep;
             cut.solve_cut = solve_s - done_solve;
             cut.killed = true;
@@ -264,6 +362,34 @@ impl FleetPool {
             s.batches -= 1;
             s.busy_until = now;
             s.cur = None;
+            // The window ledger mirrors the scalar ledger: the killed
+            // batch keeps only its completed prefix.
+            if let Some(last) = self.track[f].busy.last_mut() {
+                if last.1 > now {
+                    last.1 = now;
+                }
+                if last.1 <= last.0 {
+                    self.track[f].busy.pop();
+                }
+            }
+        }
+        // The crash also aborts anything queued or in flight on the
+        // transfer channel — the device-side endpoint of every demotion /
+        // promotion is gone. Completed transfer prefixes stay recorded.
+        if s.xfer_until > now {
+            s.xfer_until = now;
+            let xfer = &mut self.track[f].xfer;
+            while let Some(last) = xfer.last_mut() {
+                if last.1 <= now {
+                    break;
+                }
+                if last.0 >= now {
+                    xfer.pop();
+                } else {
+                    last.1 = now;
+                    break;
+                }
+            }
         }
         let up_at = now + repair_s;
         let d = &mut self.down[f];
@@ -443,6 +569,65 @@ mod tests {
             pool.choose_failover(Placement::Replicate, 0, false, 0.5),
             Some((1, false))
         );
+    }
+
+    #[test]
+    fn transfer_channel_serializes_and_overlaps_compute() {
+        let mut pool = FleetPool::new(1);
+        // Compute busy [0, 2); two transfers issued at 0.5 serialize on
+        // the channel: [0.5, 1.0) then [1.0, 1.6).
+        pool.occupy(0, 0.0, 0.5, 1.5);
+        assert_eq!(pool.occupy_transfer(0, 0.5, 0.5), 1.0);
+        assert_eq!(pool.occupy_transfer(0, 0.5, 0.6), 1.6);
+        assert_eq!(pool.status(0).xfer_until, 1.6);
+        // Total channel occupancy 1.1s, all hidden under the busy window.
+        assert!((pool.transfer_seconds(0, 10.0) - 1.1).abs() < 1e-12);
+        assert!(pool.transfer_exposed_seconds(0, 10.0).abs() < 1e-12);
+        // A transfer outlasting the busy window exposes its tail: busy
+        // ends at 2.0, transfer [1.6, 2.4) → 0.4 exposed.
+        pool.occupy_transfer(0, 1.6, 0.8);
+        assert!((pool.transfer_exposed_seconds(0, 10.0) - 0.4).abs() < 1e-12);
+        // Horizon clipping applies to both totals.
+        assert!((pool.transfer_seconds(0, 2.0) - 1.5).abs() < 1e-12);
+        assert!(pool.transfer_exposed_seconds(0, 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn crash_truncates_the_transfer_channel() {
+        let mut pool = FleetPool::new(1);
+        // Transfers [1.0, 2.0) and [2.0, 3.0); crash at 1.5 keeps only
+        // the completed prefix [1.0, 1.5) and clears the queue.
+        pool.occupy_transfer(0, 1.0, 1.0);
+        pool.occupy_transfer(0, 1.0, 1.0);
+        let cut = pool.crash(0, 1.5, 0.25);
+        assert!(!cut.killed, "no compute batch was in flight");
+        assert_eq!(pool.status(0).xfer_until, 1.5);
+        assert!((pool.transfer_seconds(0, 10.0) - 0.5).abs() < 1e-12);
+        // Post-repair transfers start a fresh window.
+        assert_eq!(pool.occupy_transfer(0, 1.75, 0.5), 2.25);
+        assert!((pool.transfer_seconds(0, 10.0) - 1.0).abs() < 1e-12);
+        // The down window [1.5, 1.75) hides that much of the new
+        // transfer? No — the transfer starts at 1.75, outside it; with no
+        // busy windows the whole 1.0s is exposed.
+        assert!((pool.transfer_exposed_seconds(0, 10.0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn crash_before_a_future_start_occupation_cuts_everything() {
+        let mut pool = FleetPool::new(1);
+        // A batch committed at dispatch but starting at 2.0 (waiting on a
+        // synchronous promotion): crash at 1.0 — before the start — must
+        // cut the full charge and leave no negative ledger.
+        pool.occupy(0, 2.0, 0.5, 1.0);
+        let cut = pool.crash(0, 1.0, 0.0);
+        assert!(cut.killed);
+        assert_eq!(cut.prepare_cut, 0.5);
+        assert_eq!(cut.solve_cut, 1.0);
+        let s = pool.status(0);
+        assert_eq!((s.prepare_s, s.solve_s, s.busy_s), (0.0, 0.0, 0.0));
+        assert_eq!(s.batches, 0);
+        assert_eq!(pool.transfer_seconds(0, 10.0), 0.0);
+        assert!((clipped_len(&pool.track[0].busy, 10.0)).abs() < 1e-12);
     }
 
     #[test]

@@ -1,0 +1,534 @@
+//! Acceptance tests for the 0.8 tiered prepared-state cache
+//! (device / host-RAM / SSD spill under [`RegistryConfig`] budgets),
+//! promotion, and solve-overlapped prefetch:
+//!
+//! * a demote→promote round trip answers **bit-identically** to a cold
+//!   prepare, at every precision config (FFF/FDF/DDD) and on the
+//!   out-of-core streaming path;
+//! * a tiered serve run replays **byte-identically** at fleets ∈ {1, 2},
+//!   every served answer bit-identical to a standalone session;
+//! * the demotion cascade sinks LRU-stably host → SSD → drop, and
+//!   answers stay bitwise right from every depth of the hierarchy;
+//! * a crash wipes only the device tier: demoted state survives, so
+//!   repair recovery is a cheap promotion — never a re-preparation —
+//!   and still bit-identical to standalone solves;
+//! * per-fleet phase accounting stays an exact partition with the
+//!   transfer channel in play: busy + exposed-transfer + down + idle
+//!   = the whole run, per fleet;
+//! * the JSON `tiers` block (and per-fleet transfer columns) appear
+//!   **only** when a host/SSD tier is configured — untiered reports
+//!   stay byte-compatible with 0.7 consumers.
+
+// Transfer totals are asserted exactly zero on untiered runs.
+#![allow(clippy::float_cmp)]
+
+use topk_eigen::serve::{
+    CoalescerConfig, EigenServer, MatrixRegistry, QueryOutcome, RegistryConfig, ServeError,
+    ServeReport, Tier, WorkloadSpec,
+};
+use topk_eigen::sim::{CrashSpec, FaultSpec, Placement};
+use topk_eigen::sparse::suite;
+use topk_eigen::{Csr, PrecisionConfig, QueryParams, Solver};
+
+fn solver(k: usize, precision: PrecisionConfig) -> Solver {
+    Solver::builder()
+        .k(k)
+        .precision(precision)
+        .devices(1)
+        .build()
+        .expect("config")
+}
+
+fn matrices() -> Vec<(String, Csr)> {
+    vec![
+        ("WB-GO".into(), suite::find("WB-GO").unwrap().generate_csr(0.3, 1)),
+        ("FL".into(), suite::find("FL").unwrap().generate_csr(0.3, 1)),
+    ]
+}
+
+/// Prepared residency of each matrix under `precision` (probe solver).
+fn prepared_bytes(ms: &[(String, Csr)], precision: PrecisionConfig) -> Vec<usize> {
+    let mut probe = solver(6, precision);
+    ms.iter()
+        .map(|(_, m)| probe.prepare(m).expect("prepare").resident_bytes())
+        .collect()
+}
+
+/// A device budget that fits exactly one of the two prepared states.
+fn one_slot(bytes: &[usize]) -> usize {
+    let max = *bytes.iter().max().unwrap();
+    let min = *bytes.iter().min().unwrap();
+    max + min / 2
+}
+
+/// Tiered registry: one-slot device tier, host tier big enough for all.
+fn tiered_registry<'m>(
+    ms: &'m [(String, Csr)],
+    precision: PrecisionConfig,
+) -> MatrixRegistry<'m> {
+    let budget = one_slot(&prepared_bytes(ms, precision));
+    let mut reg = MatrixRegistry::new(
+        solver(6, precision),
+        RegistryConfig {
+            budget_bytes: budget,
+            host_budget_bytes: 1 << 30,
+            ..RegistryConfig::default()
+        },
+    );
+    for (name, m) in ms {
+        reg.register(name, m);
+    }
+    reg
+}
+
+/// Standalone reference: the same query through a fresh prepare + session.
+fn standalone(k: usize, precision: PrecisionConfig, m: &Csr, q: &QueryParams) -> Vec<f64> {
+    let mut s = solver(k, precision);
+    let mut prepared = s.prepare(m).expect("prepare");
+    let sol = s.session(&mut prepared).solve(q).expect("solve");
+    sol.eigenvalues
+}
+
+fn assert_bits_eq(a: &[f64], b: &[f64], ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: eigenpair count");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: λ[{i}] differs ({x:e} vs {y:e})");
+    }
+}
+
+fn assert_served_match_standalone(report: &ServeReport, ms: &[(String, Csr)], ctx: &str) {
+    for r in &report.records {
+        if r.outcome != QueryOutcome::Served {
+            continue;
+        }
+        let reference = standalone(6, PrecisionConfig::FDF, &ms[r.matrix].1, &r.params);
+        assert_bits_eq(
+            &r.eigenvalues,
+            &reference,
+            &format!(
+                "{ctx}: query {} on {} via fleet {} (cold={}, promoted={})",
+                r.id, ms[r.matrix].0, r.fleet, r.cold, r.promoted
+            ),
+        );
+    }
+}
+
+/// The mixed workload the other serve suites pin their servers with.
+fn spec(seed: u64) -> WorkloadSpec {
+    let mut s = WorkloadSpec::uniform(seed, 24, 400.0, &["WB-GO", "FL"], 6);
+    s.k_choices = vec![4, 6];
+    s.bulk_fraction = 0.25;
+    s
+}
+
+/// Fleet server where every fleet has a one-slot device tier over a
+/// big host spill tier — ping-pong traffic demotes and promotes
+/// constantly but never drops prepared state.
+fn tiered_fleet_server<'m>(
+    ms: &'m [(String, Csr)],
+    fleets: usize,
+    placement: Placement,
+) -> EigenServer<'m> {
+    let budget = one_slot(&prepared_bytes(ms, PrecisionConfig::FDF));
+    let regs: Vec<MatrixRegistry<'m>> = (0..fleets)
+        .map(|_| {
+            let mut reg = MatrixRegistry::new(
+                solver(6, PrecisionConfig::FDF),
+                RegistryConfig {
+                    budget_bytes: budget,
+                    host_budget_bytes: 1 << 30,
+                    ..RegistryConfig::default()
+                },
+            );
+            for (name, m) in ms {
+                reg.register(name, m);
+            }
+            reg
+        })
+        .collect();
+    EigenServer::with_fleets(
+        regs,
+        CoalescerConfig { max_batch: 4, max_wait_s: 0.005, bulk_wait_factor: 4.0 },
+        placement,
+    )
+    .expect("fleet config")
+    .with_prefetch_depth(2)
+}
+
+fn generate(server: &EigenServer<'_>, spec: &WorkloadSpec) -> Vec<topk_eigen::serve::QueryArrival> {
+    let r = server.registry();
+    spec.generate(|n| r.index_of(n)).expect("workload")
+}
+
+#[test]
+fn demote_promote_round_trip_is_bit_identical_at_every_precision() {
+    let ms = matrices();
+    for precision in [PrecisionConfig::FFF, PrecisionConfig::FDF, PrecisionConfig::DDD] {
+        let mut reg = tiered_registry(&ms, precision);
+        let (ia, ib) = (0usize, 1usize);
+        let qa = QueryParams::new().k(6).seed(101);
+        let qb = QueryParams::new().k(4).seed(202);
+        let ref_a = standalone(6, precision, &ms[0].1, &qa);
+        let ref_b = standalone(6, precision, &ms[1].1, &qb);
+
+        // Ping-pong: with a one-slot device every switch demotes the
+        // other matrix to host and every comeback is a promotion, so
+        // after the first lap nothing is ever prepared again — and the
+        // promoted state must answer exactly like the cold one did.
+        for round in 0..3 {
+            let (outs, ev) = reg.solve_batch(ia, std::slice::from_ref(&qa)).unwrap();
+            if round > 0 {
+                assert!(
+                    ev.promoted && !ev.cold,
+                    "{precision:?} round {round}: comeback must promote, not re-prepare"
+                );
+                assert!(ev.sim_cost_s > 0.0, "promotion charges the h2d hop");
+            }
+            assert_bits_eq(&outs[0].eigenvalues, &ref_a, &format!("{precision:?} a/{round}"));
+            let (outs, ev) = reg.solve_batch(ib, std::slice::from_ref(&qb)).unwrap();
+            if round > 0 {
+                assert!(ev.promoted && !ev.cold, "{precision:?} round {round}: b promotes");
+            }
+            assert_bits_eq(&outs[0].eigenvalues, &ref_b, &format!("{precision:?} b/{round}"));
+            assert_eq!(reg.tier_of(ia), Some(Tier::Host), "a spills, never drops");
+        }
+        let s = reg.stats();
+        assert_eq!(s.prepares, 2, "{precision:?}: each matrix prepares exactly once");
+        assert_eq!(s.evictions, 0, "{precision:?}: the host tier holds everything");
+        assert!(s.promotions >= 4, "{precision:?}: every switch promotes: {s:?}");
+        assert_eq!(s.demotions, s.promotions + 1, "{precision:?}: each promote demotes the peer");
+    }
+}
+
+#[test]
+fn demote_promote_is_bit_identical_on_the_out_of_core_path() {
+    // KRON stand-in at a scale whose working set exceeds a starved
+    // device budget — prepared state that *streams* must survive the
+    // demote→promote round trip bitwise too.
+    let ms: Vec<(String, Csr)> = vec![
+        ("KRON".into(), suite::find("KRON").unwrap().generate_csr(1.0, 11)),
+        ("WB-GO".into(), suite::find("WB-GO").unwrap().generate_csr(0.3, 1)),
+    ];
+    let mem = 8 << 20;
+    let build = || {
+        Solver::builder()
+            .k(4)
+            .precision(PrecisionConfig::DDD)
+            .devices(1)
+            .device_mem_bytes(mem)
+            .build()
+            .expect("config")
+    };
+    let mut probe = build();
+    let pk = probe.prepare(&ms[0].1).expect("prepare kron");
+    assert!(pk.out_of_core(), "the KRON stand-in must exercise the streaming path");
+    let sk = pk.resident_bytes();
+    let so = probe.prepare(&ms[1].1).expect("prepare").resident_bytes();
+    let mut reg = MatrixRegistry::new(
+        build(),
+        RegistryConfig {
+            budget_bytes: one_slot(&[sk, so]),
+            host_budget_bytes: 1 << 30,
+            ..RegistryConfig::default()
+        },
+    );
+    let ik = reg.register("KRON", &ms[0].1);
+    let io = reg.register("WB-GO", &ms[1].1);
+
+    let qk = QueryParams::new().k(4).seed(7);
+    let qo = QueryParams::new().k(4).seed(8);
+    let ref_k = {
+        let mut s = build();
+        let mut p = s.prepare(&ms[0].1).unwrap();
+        s.session(&mut p).solve(&qk).unwrap().eigenvalues
+    };
+    let ref_o = {
+        let mut s = build();
+        let mut p = s.prepare(&ms[1].1).unwrap();
+        s.session(&mut p).solve(&qo).unwrap().eigenvalues
+    };
+    for round in 0..2 {
+        let (outs, ev) = reg.solve_batch(ik, std::slice::from_ref(&qk)).unwrap();
+        assert!(outs[0].stats.out_of_core, "round {round}: KRON must stream");
+        if round > 0 {
+            assert!(ev.promoted && !ev.cold, "OOC comeback must be a promotion");
+        }
+        assert_bits_eq(&outs[0].eigenvalues, &ref_k, &format!("ooc kron round {round}"));
+        let (outs, _) = reg.solve_batch(io, std::slice::from_ref(&qo)).unwrap();
+        assert_bits_eq(&outs[0].eigenvalues, &ref_o, &format!("ooc peer round {round}"));
+    }
+    assert_eq!(reg.stats().prepares, 2, "no re-preparation across the OOC ping-pong");
+}
+
+#[test]
+fn tiered_replay_is_byte_identical_at_fleet_counts() {
+    let ms = matrices();
+    for fleets in [1usize, 2] {
+        let run = || {
+            let mut server = tiered_fleet_server(&ms, fleets, Placement::Replicate);
+            let arrivals = generate(&server, &spec(11));
+            server.run(&arrivals).expect("tiered run")
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(
+            a.to_json(),
+            b.to_json(),
+            "fleets={fleets}: a tiered run must replay byte-identically"
+        );
+        assert!(a.tiered, "fleets={fleets}: a host tier is configured");
+        assert_eq!(a.evictions, 0, "fleets={fleets}: the host tier never overflows");
+        assert!(
+            a.prepares <= 2 * fleets,
+            "fleets={fleets}: each fleet prepares each matrix at most once ({})",
+            a.prepares
+        );
+        if fleets == 1 {
+            // One fleet must ping-pong its one-slot device between the
+            // two matrices: demotions and paid promotions are certain.
+            assert!(a.demotions > 0, "a one-slot device must demote");
+            assert!(a.promotions > 0, "ping-pong must promote");
+            assert!(a.transfer_s_total > 0.0, "transfers are priced");
+        }
+        assert_served_match_standalone(&a, &ms, &format!("tiered, fleets={fleets}"));
+    }
+}
+
+#[test]
+fn cascade_sinks_lru_stably_and_answers_bitwise_from_every_depth() {
+    // Same suite entry, different seeds: near-identically sized prepared
+    // states, so "budget = the largest one" makes every tier a one-slot
+    // cache (any single state fits; no two ever do).
+    let a = suite::find("WB-GO").unwrap().generate_csr(0.3, 1);
+    let b = suite::find("WB-GO").unwrap().generate_csr(0.3, 2);
+    let c = suite::find("WB-GO").unwrap().generate_csr(0.3, 3);
+    let mut probe = solver(6, PrecisionConfig::FDF);
+    let one = [&a, &b, &c]
+        .iter()
+        .map(|m| probe.prepare(m).unwrap().resident_bytes())
+        .max()
+        .unwrap();
+    let mut reg = MatrixRegistry::new(
+        solver(6, PrecisionConfig::FDF),
+        RegistryConfig {
+            budget_bytes: one,
+            host_budget_bytes: one,
+            ssd_budget_bytes: one,
+            ..RegistryConfig::default()
+        },
+    );
+    let ia = reg.register("a", &a);
+    let ib = reg.register("b", &b);
+    let ic = reg.register("c", &c);
+    let q = QueryParams::new().k(6).seed(303);
+    let ref_a = standalone(6, PrecisionConfig::FDF, &a, &q);
+    let ref_b = standalone(6, PrecisionConfig::FDF, &b, &q);
+
+    reg.ensure_prepared(ia).unwrap(); // a: device
+    reg.ensure_prepared(ib).unwrap(); // b: device, a → host
+    reg.ensure_prepared(ic).unwrap(); // c: device, b → host, a → ssd
+    assert_eq!(reg.tier_of(ia), Some(Tier::Ssd), "oldest sinks deepest");
+    assert_eq!(reg.tier_of(ib), Some(Tier::Host));
+    assert_eq!(reg.tier_of(ic), Some(Tier::Device));
+
+    // Promotion from the bottom of the hierarchy answers bitwise.
+    let (outs, ev) = reg.solve_batch(ia, std::slice::from_ref(&q)).unwrap();
+    assert!(ev.promoted && !ev.cold, "SSD recovery is a promotion");
+    assert_bits_eq(&outs[0].eigenvalues, &ref_a, "promoted from ssd");
+    // The admission pushed the LRU chain down: c → host, b → ssd.
+    assert_eq!(reg.tier_of(ic), Some(Tier::Host));
+    assert_eq!(reg.tier_of(ib), Some(Tier::Ssd));
+    assert_eq!(reg.stats().evictions, 0, "three states fit the three one-slot tiers");
+
+    // A fourth matrix overflows the whole hierarchy: the global LRU (b,
+    // untouched since its prepare) falls off the end — and coming back
+    // is a cold prepare that still answers bitwise.
+    let d = suite::find("WB-GO").unwrap().generate_csr(0.3, 4);
+    let id = reg.register("d", &d);
+    let ev = reg.ensure_prepared(id).unwrap();
+    assert!(ev.evicted >= 1, "the SSD overflow drops off the hierarchy");
+    assert_eq!(reg.tier_of(ib), None, "b was the LRU of the whole chain");
+    let (outs, ev) = reg.solve_batch(ib, std::slice::from_ref(&q)).unwrap();
+    assert!(ev.cold, "a dropped state must re-prepare");
+    assert_bits_eq(&outs[0].eigenvalues, &ref_b, "re-prepared after the drop");
+}
+
+#[test]
+fn crash_wipes_only_the_device_tier_and_repair_recovers_by_promotion() {
+    let ms = matrices();
+    // Probe a fault-free tiered single-fleet run (one-slot device over a
+    // big host tier: the fleet ping-pongs, demoting and promoting
+    // constantly) for its longest batch, then crash exactly mid-batch
+    // with a short repair so the fleet rejoins and keeps serving from
+    // its surviving host tier.
+    let probe = {
+        let mut server = tiered_fleet_server(&ms, 1, Placement::Replicate);
+        let arrivals = generate(&server, &spec(11));
+        server.run_with_faults(&arrivals, &FaultSpec::none()).expect("probe run")
+    };
+    let victim = probe
+        .records
+        .iter()
+        .max_by(|x, y| (x.done_s - x.start_s).total_cmp(&(y.done_s - y.start_s)))
+        .expect("the run must serve");
+    let crash_at = victim.start_s + (victim.done_s - victim.start_s) / 2.0;
+    assert!(crash_at > victim.start_s && crash_at < victim.done_s);
+
+    let mut faults = FaultSpec::none();
+    faults.crashes.push(CrashSpec { at_s: crash_at, fleet: 0, repair_s: 0.02 });
+    let run = |faults: &FaultSpec| {
+        let mut server = tiered_fleet_server(&ms, 1, Placement::Replicate);
+        let arrivals = generate(&server, &spec(11));
+        let report = server.run_with_faults(&arrivals, faults).expect("faulty run");
+        let stats = server.fleet_registry(0).stats();
+        (report, stats)
+    };
+    let (report, f0) = run(&faults);
+    let fs = report.faults.as_ref().expect("an active spec must emit the fault summary");
+    assert_eq!(fs.crashes, 1);
+    assert_eq!(fs.killed_batches, 1, "the crash must strike mid-batch");
+    assert_eq!(report.queries, 24, "the repaired fleet absorbs everything");
+    assert_eq!(report.failed + report.shed, 0);
+
+    // The wipe loses at most what the device tier held (the in-flight
+    // matrix, plus at most one mid-promotion entry); everything demoted
+    // to host survives, so fleet 0 never re-prepares more than that —
+    // its comebacks are promotions.
+    assert!(
+        f0.prepares <= 4,
+        "crash recovery must not cold-prepare the host tier: {f0:?}"
+    );
+    assert!(f0.promotions > 0, "demoted state must come back by promotion: {f0:?}");
+    assert!(report.promotions > 0);
+
+    // Every served answer — including those on crash-recovered,
+    // promoted state — is bit-identical to a standalone session.
+    assert_served_match_standalone(&report, &ms, "tiered crash recovery");
+
+    // And the whole chaotic run replays byte-for-byte.
+    let (again, _) = run(&faults);
+    assert_eq!(report.to_json(), again.to_json(), "tiered faulty replay must be exact");
+}
+
+#[test]
+fn per_fleet_phases_partition_the_run_with_the_transfer_channel() {
+    let ms = matrices();
+    // The single-fleet crash scenario exercises every phase at once:
+    // busy solves, priced demote/promote transfers, a real down window,
+    // and idle gaps between arrivals.
+    let probe = {
+        let mut server = tiered_fleet_server(&ms, 1, Placement::Replicate);
+        let arrivals = generate(&server, &spec(11));
+        server.run_with_faults(&arrivals, &FaultSpec::none()).expect("probe run")
+    };
+    let victim = probe
+        .records
+        .iter()
+        .max_by(|x, y| (x.done_s - x.start_s).total_cmp(&(y.done_s - y.start_s)))
+        .expect("the run must serve");
+    let crash_at = victim.start_s + (victim.done_s - victim.start_s) / 2.0;
+    let mut faults = FaultSpec::none();
+    faults.crashes.push(CrashSpec { at_s: crash_at, fleet: 0, repair_s: 0.02 });
+    let report = {
+        let mut server = tiered_fleet_server(&ms, 1, Placement::Replicate);
+        let arrivals = generate(&server, &spec(11));
+        server.run_with_faults(&arrivals, &faults).expect("faulty run")
+    };
+
+    // Busy (solve + prepare), *exposed* transfer (the part of the
+    // channel's occupancy not hidden under compute or downtime), down,
+    // and idle partition [0, sim_end] exactly, per fleet: overlapped
+    // prefetch transfer is free wall-clock by construction, and the
+    // crash truncates the channel so nothing leaks past the wipe.
+    assert!(report.transfer_s_total > 0.0, "the tiered run must transfer");
+    assert!(report.transfer_exposed_s_total <= report.transfer_s_total + 1e-12);
+    assert!(report.per_fleet[0].down_s > 0.0, "the crash opens a down window");
+    for f in &report.per_fleet {
+        let busy = f.solve_s + f.prepare_s;
+        assert!(busy >= 0.0, "fleet {}: negative busy time", f.fleet);
+        assert!(f.transfer_s >= 0.0 && f.down_s >= 0.0);
+        assert!(
+            f.transfer_exposed_s >= -1e-12 && f.transfer_exposed_s <= f.transfer_s + 1e-12,
+            "fleet {}: exposed transfer {} must be within the channel's {}",
+            f.fleet,
+            f.transfer_exposed_s,
+            f.transfer_s
+        );
+        let idle = report.sim_end_s - busy - f.transfer_exposed_s - f.down_s;
+        assert!(
+            idle >= -1e-9,
+            "fleet {}: busy {busy} + transfer {} + down {} overruns sim_end {}",
+            f.fleet,
+            f.transfer_exposed_s,
+            f.down_s,
+            report.sim_end_s
+        );
+        assert!(
+            (busy + f.transfer_exposed_s + f.down_s + idle - report.sim_end_s).abs() < 1e-9,
+            "fleet {}: phases must partition the run exactly",
+            f.fleet
+        );
+    }
+}
+
+#[test]
+fn tier_fields_are_emitted_only_when_a_spill_tier_is_configured() {
+    let ms = matrices();
+    // Untiered pressure run (0.7 semantics): evictions drop state and
+    // the report must not grow any 0.8 field — byte-compatibility.
+    let untiered = {
+        let budget = one_slot(&prepared_bytes(&ms, PrecisionConfig::FDF));
+        let mut reg = MatrixRegistry::new(
+            solver(6, PrecisionConfig::FDF),
+            RegistryConfig { budget_bytes: budget, ..RegistryConfig::default() },
+        );
+        for (name, m) in &ms {
+            reg.register(name, m);
+        }
+        let mut server = EigenServer::new(
+            reg,
+            CoalescerConfig { max_batch: 4, max_wait_s: 0.005, bulk_wait_factor: 4.0 },
+        );
+        let arrivals = generate(&server, &spec(11));
+        server.run(&arrivals).expect("untiered run")
+    };
+    assert!(!untiered.tiered);
+    assert!(untiered.evictions > 0, "the pressure budget must actually evict");
+    assert_eq!(untiered.transfer_s_total, 0.0);
+    let json = untiered.to_json();
+    assert!(!json.contains("\"tiers\""), "untiered reports must stay 0.7-shaped");
+    assert!(!json.contains("\"transfer_s"), "no transfer fields without a tier");
+
+    // Tiered single fleet: the tiers block appears; the per-fleet table
+    // (a multi-fleet field) still does not.
+    let one_fleet = {
+        let mut server = tiered_fleet_server(&ms, 1, Placement::Replicate);
+        let arrivals = generate(&server, &spec(11));
+        server.run(&arrivals).expect("tiered run")
+    };
+    let json = one_fleet.to_json();
+    assert!(json.contains("\"tiers\": {"), "a configured host tier must emit the block");
+    assert!(json.contains("\"transfer_s_total\":"));
+    assert!(json.contains("\"prefetch_issued\":"));
+    assert!(!json.contains("\"per_fleet\""), "one fleet emits no fleet table");
+
+    // Tiered two fleets: the per-fleet rows gain the transfer columns.
+    let two_fleet = {
+        let mut server = tiered_fleet_server(&ms, 2, Placement::Replicate);
+        let arrivals = generate(&server, &spec(11));
+        server.run(&arrivals).expect("tiered run")
+    };
+    let json = two_fleet.to_json();
+    assert!(json.contains("\"per_fleet\""));
+    assert!(json.contains("\"transfer_s\":"), "per-fleet transfer column");
+    assert!(json.contains("\"transfer_exposed_s\":"));
+
+    // The serial reference path has no transfer channel: a tiered
+    // registry is a configuration error there, not silent wrong math.
+    let mut server = tiered_fleet_server(&ms, 1, Placement::Replicate);
+    let arrivals = generate(&server, &spec(11));
+    let err = server.run_serial_reference(&arrivals).unwrap_err();
+    assert!(
+        matches!(err, ServeError::Config { field: "registry", .. }),
+        "the serial reference must reject tiered registries"
+    );
+}
