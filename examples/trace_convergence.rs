@@ -1,0 +1,98 @@
+//! Convergence tracing: per-iteration residual trajectories, FFF vs DDD.
+//!
+//! ```bash
+//! cargo run --release --example trace_convergence
+//! ```
+//!
+//! The paper's accuracy story (Fig. 4) is about what mixed precision does
+//! to convergence. This example watches it happen: two solves of the same
+//! matrix — all-f32 (FFF) and all-f64 (DDD) — each with a
+//! `TracingObserver` recording every Lanczos iteration's α/β/residual
+//! into one shared `Tracer` (distinct Chrome `pid` tracks), then prints
+//! the residual trajectories side by side and writes the combined trace
+//! as Perfetto-loadable JSON. Tracing reads the simulated clock the solve
+//! already advances, so the eigenvalues are bit-identical to an untraced
+//! run.
+
+use topk_eigen::sparse::suite;
+use topk_eigen::trace::TraceEvent;
+use topk_eigen::{
+    Eigensolve, PrecisionConfig, Solver, SolverError, TraceLevel, Tracer, TracingObserver,
+};
+
+/// Solve `id` at `precision`, recording iterations onto track (`pid`, 0)
+/// of `tracer`. Returns the top eigenvalue for the closing comparison.
+fn traced_solve(
+    precision: PrecisionConfig,
+    pid: u64,
+    tracer: &mut Tracer,
+) -> Result<f64, SolverError> {
+    let matrix = suite::find("WB-BE").unwrap().generate_csr(0.5, 42);
+    let mut solver = Solver::builder().k(8).precision(precision).seed(7).build()?;
+    tracer.name_pid(pid, precision.name());
+    let mut obs = TracingObserver::with_ids(tracer, pid, 0);
+    let sol = solver.solve_observed(&matrix, &mut obs)?;
+    Ok(sol.eigenvalues[0])
+}
+
+/// The residual trajectory recorded on `pid`: (iter, residual) pairs in
+/// iteration order.
+fn trajectory(tracer: &Tracer, pid: u64) -> Vec<(usize, f64)> {
+    tracer
+        .events()
+        .iter()
+        .filter_map(|ev| match ev {
+            TraceEvent::Instant { name, pid: p, args, .. }
+                if name == "iteration" && *p == pid =>
+            {
+                let field = |key: &str| {
+                    args.iter()
+                        .find(|(k, _)| *k == key)
+                        .and_then(|(_, v)| v.parse::<f64>().ok())
+                        .unwrap_or(f64::NAN)
+                };
+                Some((field("iter") as usize, field("residual")))
+            }
+            _ => None,
+        })
+        .collect()
+}
+
+fn main() -> Result<(), SolverError> {
+    // One tracer, two tracks: pid 0 = FFF, pid 1 = DDD.
+    let mut tracer = Tracer::new(TraceLevel::Iter);
+    let top_fff = traced_solve(PrecisionConfig::FFF, 0, &mut tracer)?;
+    let top_ddd = traced_solve(PrecisionConfig::DDD, 1, &mut tracer)?;
+
+    let fff = trajectory(&tracer, 0);
+    let ddd = trajectory(&tracer, 1);
+    println!("per-iteration top-Ritz residual estimate (WB-BE stand-in, K=8):\n");
+    println!("{:>5} {:>14} {:>14}", "iter", "FFF", "DDD");
+    for i in 0..fff.len().max(ddd.len()) {
+        let cell = |t: &[(usize, f64)]| match t.get(i) {
+            Some((_, r)) => format!("{r:>14.3e}"),
+            None => format!("{:>14}", "—"),
+        };
+        println!("{i:>5} {} {}", cell(&fff), cell(&ddd));
+    }
+    println!(
+        "\nλ₀: FFF = {top_fff:+.9e}   DDD = {top_ddd:+.9e}   Δ = {:.3e}",
+        (top_fff - top_ddd).abs()
+    );
+    println!(
+        "f32 storage stalls near single-precision roundoff while f64 keeps \
+         descending — the gap Fig. 4 quantifies."
+    );
+
+    let json = tracer.chrome_json().unwrap();
+    std::fs::write("trace_convergence.json", format!("{json}\n")).map_err(|e| SolverError::Io {
+        context: "writing trace_convergence.json".to_string(),
+        source: e,
+    })?;
+    println!(
+        "\nwrote trace_convergence.json ({} events) — load it in Perfetto or \
+         chrome://tracing to see both trajectories on separate tracks",
+        tracer.events().len()
+    );
+    Ok(())
+}

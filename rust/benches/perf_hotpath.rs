@@ -28,6 +28,12 @@
 //!     deterministic and `serve_tiered_sim_throughput_min` gates it —
 //!     demote/promote with solve-overlapped prefetch must beat
 //!     re-preparing on every matrix switch — the `serve.tiers` block,
+//!   * the tracing layer (0.9): a span-level traced solve (including the
+//!     Chrome JSON export) against the untraced baseline, plus the
+//!     traced-vs-untraced bit-identity check — the `trace` block of the
+//!     schema-7 JSON; `trace_disabled_solve_median_s_max` in the floor
+//!     file gates the disabled-tracer solve so the pervasive (off)
+//!     tracer branches stay free,
 //!   * the coordinator overhead fraction — the share of the hostsim solve
 //!     wallclock spent *outside* kernel execution, measured by a timing
 //!     wrapper around the kernel interface.
@@ -58,7 +64,7 @@ use topk_eigen::serve::{
 };
 use topk_eigen::sim::{CostModel, Placement};
 use topk_eigen::sparse::{suite, Ell};
-use topk_eigen::{Backend, Eigensolve, QueryParams, Solver};
+use topk_eigen::{Backend, Eigensolve, QueryParams, Solver, TraceLevel};
 
 fn artifact_dir() -> PathBuf {
     std::env::var("TOPK_ARTIFACTS")
@@ -761,6 +767,56 @@ fn main() {
         )
         .finish();
 
+    // ---- Tracing overhead (schema 7) --------------------------------------
+    // The observability layer's cost, both ways: the *disabled* tracer is
+    // a branch-on-None on every emit site — the untraced e2e median above
+    // (`te`) is the gated number — and the *enabled* span-level tracer
+    // buffers events plus pays the Chrome JSON export. One comparison run
+    // also checks the headline guarantee: traced and untraced solves
+    // produce bit-identical eigenvalues.
+    let base_sol = builder(Backend::HostSim).build().expect("config").solve(&m).expect("solve");
+    let mut tr_solver =
+        builder(Backend::HostSim).trace(TraceLevel::Span).build().expect("config");
+    let tr_sol = tr_solver.solve(&m).expect("solve");
+    let trace_events = tr_solver.tracer_mut().map_or(0, |tr| tr.events().len());
+    let trace_bytes = tr_solver.trace_json().map_or(0, |j| j.len());
+    let traced_identical = base_sol.eigenvalues.len() == tr_sol.eigenvalues.len()
+        && base_sol
+            .eigenvalues
+            .iter()
+            .zip(&tr_sol.eigenvalues)
+            .all(|(a, b)| a.to_bits() == b.to_bits());
+    if !traced_identical {
+        eprintln!(
+            "warning: traced solve diverged from the untraced solve — tracing is \
+             perturbing results"
+        );
+    }
+    let ttrace = time(r, || {
+        let mut solver =
+            builder(Backend::HostSim).trace(TraceLevel::Span).build().expect("config");
+        let sol = solver.solve(&m).expect("solve");
+        std::hint::black_box(sol.eigenvalues.len());
+        std::hint::black_box(solver.trace_json().map_or(0, |j| j.len()));
+    });
+    t.row(&[
+        "solve e2e traced (span)".into(),
+        fmt_secs(ttrace.median_s),
+        fmt_secs(ttrace.min_s),
+        format!(
+            "{:.2}x of untraced; {trace_events} events, {trace_bytes} B export",
+            ttrace.median_s / te.median_s.max(1e-12)
+        ),
+    ]);
+    let trace_block = JsonObj::new()
+        .num("disabled_solve_median_s", te.median_s)
+        .num("traced_solve_median_s", ttrace.median_s)
+        .num("traced_over_disabled", ttrace.median_s / te.median_s.max(1e-12))
+        .int("trace_events", trace_events)
+        .int("trace_json_bytes", trace_bytes)
+        .raw("traced_bit_identical", traced_identical.to_string())
+        .finish();
+
     // Coordinator overhead: one instrumented solve; the fraction of the
     // wall spent outside kernel execution. Forced sequential — with
     // threads, per-device kernel times overlap and their sum can exceed
@@ -827,7 +883,7 @@ fn main() {
 
     // ---- BENCH_perf.json -------------------------------------------------
     let json = JsonObj::new()
-        .int("schema", 6)
+        .int("schema", 7)
         .str("bench", "perf_hotpath")
         .num("scale", s)
         .int("reps", r)
@@ -839,6 +895,7 @@ fn main() {
         .raw("session", session_json)
         .raw("batch", batch_json)
         .raw("serve", serve_json)
+        .raw("trace", trace_block)
         .num("coordinator_overhead_frac", overhead_frac)
         .finish();
     let json_path =
@@ -970,6 +1027,32 @@ fn main() {
                     }
                     None => eprintln!(
                         "warning: no serve_tiered_sim_throughput_min in {floor_path}"
+                    ),
+                }
+                // Tracing floor (schema 7): the *untraced* e2e solve —
+                // every solve now carries the disabled-tracer branches,
+                // so this gates the zero-cost-when-disabled claim.
+                match topk_eigen::bench_util::json_get_num(
+                    &floor,
+                    "trace_disabled_solve_median_s_max",
+                ) {
+                    Some(max) if te.median_s > max => {
+                        eprintln!(
+                            "PERF REGRESSION: untraced solve median {} exceeds the \
+                             tracing-disabled floor {} (from {floor_path}) — the \
+                             disabled tracer is no longer free",
+                            te.median_s, max
+                        );
+                        std::process::exit(1);
+                    }
+                    Some(max) => {
+                        println!(
+                            "perf floor ok: tracing-disabled solve median {:.4}s <= {max}s",
+                            te.median_s
+                        );
+                    }
+                    None => eprintln!(
+                        "warning: no trace_disabled_solve_median_s_max in {floor_path}"
                     ),
                 }
             }

@@ -13,6 +13,7 @@ use crate::coordinator::{
 use crate::gpu::CostModel;
 use crate::precision::PrecisionConfig;
 use crate::runtime::Kernels;
+use crate::trace::{TraceLevel, Tracer};
 
 /// Builder for [`Solver`]; obtain via [`Solver::builder`].
 ///
@@ -26,6 +27,7 @@ pub struct SolverBuilder {
     baseline_threads: Option<usize>,
     baseline_krylov_dim: Option<usize>,
     baseline_max_restarts: Option<usize>,
+    trace: Option<TraceLevel>,
 }
 
 impl Default for SolverBuilder {
@@ -45,6 +47,7 @@ impl SolverBuilder {
             baseline_threads: None,
             baseline_krylov_dim: None,
             baseline_max_restarts: None,
+            trace: None,
         }
     }
 
@@ -192,6 +195,18 @@ impl SolverBuilder {
         self
     }
 
+    /// Enable sim-time tracing at `level`: every solve records phase
+    /// spans (and, at [`TraceLevel::Iter`], per-iteration α/β/residual
+    /// telemetry) into an in-memory sink, exportable with
+    /// [`Solver::trace_json`](crate::api::Solver::trace_json). Results
+    /// are bit-identical traced vs untraced. GPU backends only — the CPU
+    /// baseline keeps no simulated clock, so `build()` rejects the
+    /// combination.
+    pub fn trace(mut self, level: TraceLevel) -> Self {
+        self.trace = Some(level);
+        self
+    }
+
     fn validate(&self) -> Result<(), SolverError> {
         let invalid = |field: &'static str, message: String| {
             Err(SolverError::InvalidConfig { field, message })
@@ -254,6 +269,17 @@ impl SolverBuilder {
                 );
             }
         }
+        if self.trace.is_some()
+            && self.custom_kernels.is_none()
+            && matches!(self.backend, Backend::CpuBaseline)
+        {
+            return invalid(
+                "trace",
+                "the cpu baseline keeps no simulated clock to trace; use the hostsim \
+                 or pjrt backend, or attach a TracingObserver to solve_observed"
+                    .into(),
+            );
+        }
         Ok(())
     }
 
@@ -269,16 +295,23 @@ impl SolverBuilder {
             baseline_threads,
             baseline_krylov_dim,
             baseline_max_restarts,
+            trace,
         } = self;
         let native_tolerance =
             custom_kernels.is_none() && matches!(backend, Backend::CpuBaseline);
+        let gpu = |mut solver: TopKSolver| {
+            if let Some(level) = trace {
+                solver.set_tracer(Tracer::new(level));
+            }
+            GpuBackend { solver }
+        };
         let backend: Box<dyn EigenBackend> = if let Some(kernels) = custom_kernels {
-            Box::new(GpuBackend { solver: TopKSolver::with_kernels(cfg, kernels) })
+            Box::new(gpu(TopKSolver::with_kernels(cfg, kernels)))
         } else {
             match backend {
-                Backend::HostSim => Box::new(GpuBackend { solver: TopKSolver::new(cfg) }),
+                Backend::HostSim => Box::new(gpu(TopKSolver::new(cfg))),
                 Backend::Pjrt { artifacts } => {
-                    Box::new(GpuBackend { solver: TopKSolver::with_pjrt(cfg, &artifacts)? })
+                    Box::new(gpu(TopKSolver::with_pjrt(cfg, &artifacts)?))
                 }
                 Backend::CpuBaseline => {
                     let defaults = BaselineConfig::default();
@@ -355,6 +388,28 @@ mod tests {
         use crate::api::Eigensolve;
         let s = Solver::builder().build().unwrap();
         assert_eq!(s.backend_name(), "hostsim");
+    }
+
+    #[test]
+    fn rejects_trace_on_cpu_baseline() {
+        use crate::api::Backend;
+        let err = Solver::builder()
+            .backend(Backend::CpuBaseline)
+            .trace(TraceLevel::Span)
+            .build()
+            .unwrap_err();
+        assert!(
+            matches!(err, SolverError::InvalidConfig { field: "trace", .. }),
+            "{err:?}"
+        );
+    }
+
+    #[test]
+    fn traced_build_starts_with_an_enabled_tracer() {
+        let mut s = Solver::builder().trace(TraceLevel::Iter).build().unwrap();
+        assert!(s.tracer_mut().is_some_and(|t| t.wants_iter()));
+        let mut untraced = Solver::builder().build().unwrap();
+        assert!(untraced.tracer_mut().is_some_and(|t| !t.is_on()));
     }
 
     #[test]

@@ -215,6 +215,13 @@ pub trait EigenBackend: Send {
 
     /// Substrate name for stats and logs.
     fn name(&self) -> &'static str;
+
+    /// Mutable access to the backend's sim-time tracer, for substrates
+    /// that keep one (the GPU coordinator does; the CPU baseline has no
+    /// simulated clock and returns the default `None`).
+    fn tracer_mut(&mut self) -> Option<&mut crate::trace::Tracer> {
+        None
+    }
 }
 
 /// The facade: a configured solver over one [`EigenBackend`].
@@ -244,6 +251,21 @@ impl Solver {
     /// iteration cost.
     pub fn prepare<'m>(&mut self, m: &'m Csr) -> Result<PreparedMatrix<'m>, SolverError> {
         self.backend.prepare(m)
+    }
+
+    /// The backend's sim-time tracer, when the substrate keeps one (the
+    /// GPU coordinator; `None` for the CPU baseline). Enabled with
+    /// [`SolverBuilder::trace`], it records phase spans — and iteration
+    /// telemetry at [`crate::trace::TraceLevel::Iter`] — from every solve.
+    pub fn tracer_mut(&mut self) -> Option<&mut crate::trace::Tracer> {
+        self.backend.tracer_mut()
+    }
+
+    /// Export everything traced so far as Chrome trace-event JSON
+    /// (Perfetto / `chrome://tracing`-loadable). `None` when the backend
+    /// has no tracer or tracing was never enabled.
+    pub fn trace_json(&mut self) -> Option<String> {
+        self.backend.tracer_mut().and_then(|t| t.chrome_json())
     }
 
     /// Open a solving session over a prepared matrix. The session borrows
@@ -531,6 +553,10 @@ impl EigenBackend for GpuBackend {
 
     fn name(&self) -> &'static str {
         self.solver.backend_name()
+    }
+
+    fn tracer_mut(&mut self) -> Option<&mut crate::trace::Tracer> {
+        Some(self.solver.tracer_mut())
     }
 }
 

@@ -42,7 +42,28 @@ impl TopKSolver {
         &mut self,
         prep: &mut PreparedState,
         queries: &[SolveQuery],
+        observers: Vec<Option<&mut dyn IterationObserver>>,
+    ) -> Result<Vec<EigenSolution>, SolverError> {
+        // Detach the tracer so the blocked loop can borrow `self.kernels`
+        // mutably alongside it; reattach even on error paths.
+        let mut tracer = std::mem::take(&mut self.tracer);
+        let result = self.solve_batch_prepared_traced(prep, queries, observers, &mut tracer);
+        self.tracer = tracer;
+        result
+    }
+
+    /// [`TopKSolver::solve_batch_prepared`] recording into an explicit
+    /// tracer. Fleet-level phase spans land on track (0, 0); per-lane
+    /// iteration telemetry (at [`crate::trace::TraceLevel::Iter`]) lands
+    /// on (0, query-id). Times are batch-local simulated seconds; tracing
+    /// only reads clocks the solve already advances, so lane results stay
+    /// bit-identical traced vs untraced.
+    pub(crate) fn solve_batch_prepared_traced(
+        &mut self,
+        prep: &mut PreparedState,
+        queries: &[SolveQuery],
         mut observers: Vec<Option<&mut dyn IterationObserver>>,
+        tracer: &mut crate::trace::Tracer,
     ) -> Result<Vec<EigenSolution>, SolverError> {
         let cfg = prep.cfg.clone();
         let nq = queries.len();
@@ -257,17 +278,20 @@ impl TopKSolver {
                         dev.run_kernel(cfg.cost.stream_seconds(cost, compute));
                     });
                 }
-                phases.vector_ops += clock_cursor.mark(fleet_time(&devices));
+                phases.vector_ops +=
+                    clock_cursor.mark_traced(fleet_time(&devices), tracer, 0, 0, "vector_ops");
                 for d in devices.iter_mut() {
                     d.clock_s += sync_latency;
                 }
                 barrier(&mut devices);
-                phases.sync += clock_cursor.mark(fleet_time(&devices));
+                phases.sync +=
+                    clock_cursor.mark_traced(fleet_time(&devices), tracer, 0, 0, "sync");
                 // Ring swap: every lane's replica refreshes, so nb slices
                 // per partition move this iteration.
                 let scaled: Vec<usize> = slice_bytes.iter().map(|&b| b * nb).collect();
                 ring::charge_swap_with(&mut devices, &topology, &scaled, cfg.swap);
-                phases.swap += clock_cursor.mark(fleet_time(&devices));
+                phases.swap +=
+                    clock_cursor.mark_traced(fleet_time(&devices), tracer, 0, 0, "swap");
             }
 
             // SpMM: per device, per chunk — the chunk (and its h2d
@@ -332,6 +356,7 @@ impl TopKSolver {
             {
                 // h2d vs compute attribution from the critical device's own
                 // charge counters — same derivation as the solo path.
+                let start = clock_cursor.now();
                 let delta = clock_cursor.mark(fleet_time(&devices));
                 let mut crit = 0usize;
                 for (gi, s) in spmv_split.iter().enumerate() {
@@ -344,10 +369,14 @@ impl TopKSolver {
                 let SpmvSplit { h2d_s, kernel_s } = spmv_split[crit];
                 let tot = h2d_s + kernel_s;
                 if h2d_s > 0.0 && tot > 0.0 {
-                    phases.h2d += delta * (h2d_s / tot);
+                    let h2d_share = delta * (h2d_s / tot);
+                    phases.h2d += h2d_share;
                     phases.spmv += delta * (kernel_s / tot);
+                    tracer.span("h2d", "phase", 0, 0, start, h2d_share);
+                    tracer.span("spmm", "phase", 0, 0, start + h2d_share, delta - h2d_share);
                 } else {
                     phases.spmv += delta;
+                    tracer.span("spmm", "phase", 0, 0, start, delta);
                 }
             }
 
@@ -373,12 +402,13 @@ impl TopKSolver {
             for (p, a) in a_cur.iter_mut().enumerate() {
                 *a = (0..g).map(|gi| partials[gi * nq + p]).sum();
             }
-            phases.vector_ops += clock_cursor.mark(fleet_time(&devices));
+            phases.vector_ops +=
+                clock_cursor.mark_traced(fleet_time(&devices), tracer, 0, 0, "vector_ops");
             for d in devices.iter_mut() {
                 d.clock_s += sync_latency;
             }
             barrier(&mut devices);
-            phases.sync += clock_cursor.mark(fleet_time(&devices));
+            phases.sync += clock_cursor.mark_traced(fleet_time(&devices), tracer, 0, 0, "sync");
             for (p, &qid) in active.iter().enumerate() {
                 alphas_t[qid].push(a_cur[p]);
             }
@@ -432,7 +462,8 @@ impl TopKSolver {
                     sumsq[qid * g + gi] = partials[gi * nq + p];
                 }
             }
-            phases.vector_ops += clock_cursor.mark(fleet_time(&devices));
+            phases.vector_ops +=
+                clock_cursor.mark_traced(fleet_time(&devices), tracer, 0, 0, "vector_ops");
 
             // Reorthogonalization: targets depend only on the iteration
             // index, which all active lanes share; one sync per target for
@@ -465,12 +496,14 @@ impl TopKSolver {
                     for (p, o) in o_cur.iter_mut().enumerate() {
                         *o = (0..g).map(|gi| partials[gi * nq + p]).sum();
                     }
-                    phases.reorth += clock_cursor.mark(fleet_time(&devices));
+                    phases.reorth +=
+                        clock_cursor.mark_traced(fleet_time(&devices), tracer, 0, 0, "reorth");
                     for d in devices.iter_mut() {
                         d.clock_s += sync_latency;
                     }
                     barrier(&mut devices);
-                    phases.sync += clock_cursor.mark(fleet_time(&devices));
+                    phases.sync +=
+                        clock_cursor.mark_traced(fleet_time(&devices), tracer, 0, 0, "sync");
                     {
                         let o_ref = &o_cur;
                         let active_ref = &active;
@@ -493,7 +526,8 @@ impl TopKSolver {
                             dev.run_kernel(cfg.cost.stream_seconds(cost, compute));
                         });
                     }
-                    phases.reorth += clock_cursor.mark(fleet_time(&devices));
+                    phases.reorth +=
+                        clock_cursor.mark_traced(fleet_time(&devices), tracer, 0, 0, "reorth");
                 }
                 // Recompute the candidate norms after the corrections.
                 {
@@ -509,7 +543,8 @@ impl TopKSolver {
                         sumsq[qid * g + gi] = partials[gi * nq + p];
                     }
                 }
-                phases.reorth += clock_cursor.mark(fleet_time(&devices));
+                phases.reorth +=
+                    clock_cursor.mark_traced(fleet_time(&devices), tracer, 0, 0, "reorth");
             }
 
             // Observer hooks + retirement decisions, per lane. A lane
@@ -520,7 +555,9 @@ impl TopKSolver {
                 let beta_next =
                     (0..g).map(|gi| sumsq[qid * g + gi]).sum::<f64>().sqrt();
                 let mut stop = false;
-                if let Some(obs) = observers[qid].as_mut() {
+                // The residual estimate is a pure function of the lane's
+                // (α, β); computing it for the tracer cannot perturb lanes.
+                if observers[qid].is_some() || tracer.wants_iter() {
                     let event = IterationEvent {
                         iter: i,
                         alpha: a_cur[p],
@@ -533,8 +570,13 @@ impl TopKSolver {
                         sim_seconds: fleet_time(&devices),
                         phases,
                     };
-                    if obs.on_iteration(&event) == ObserverControl::Stop {
-                        stop = true;
+                    if tracer.wants_iter() {
+                        tracer.iteration(0, qid as u64, &event);
+                    }
+                    if let Some(obs) = observers[qid].as_mut() {
+                        if obs.on_iteration(&event) == ObserverControl::Stop {
+                            stop = true;
+                        }
                     }
                 }
                 if stop {
@@ -563,7 +605,7 @@ impl TopKSolver {
                 for d in devices.iter_mut() {
                     d.clock_s += jd; // fleet idles while the CPU works
                 }
-                let _ = clock_cursor.mark(fleet_time(&devices));
+                let _ = clock_cursor.mark_traced(fleet_time(&devices), tracer, 0, 0, "jacobi_cpu");
 
                 let coeff: &[Vec<f64>] = &eig.vectors;
                 let mut proj: Vec<Vec<f64>> =
@@ -582,7 +624,8 @@ impl TopKSolver {
                         dev.run_kernel(cfg.cost.stream_seconds(cost, compute));
                     });
                 }
-                phases.project += clock_cursor.mark(fleet_time(&devices));
+                phases.project +=
+                    clock_cursor.mark_traced(fleet_time(&devices), tracer, 0, 0, "project");
                 let mut eigenvectors = vec![vec![0.0f64; n]; keff];
                 for (gi, part) in parts.iter().enumerate() {
                     let rows = part.rows();
@@ -596,6 +639,7 @@ impl TopKSolver {
                 }
 
                 let sim_seconds = fleet_time(&devices);
+                tracer.instant("lane_retire", "solve", 0, qid as u64, sim_seconds);
                 let stats = SolveStats {
                     wall_seconds: wall_start.elapsed().as_secs_f64(),
                     sim_seconds,
@@ -633,6 +677,17 @@ impl TopKSolver {
                 active.remove(p);
             }
         }
+
+        tracer.span_args(
+            "solve_batch",
+            "solve",
+            0,
+            0,
+            0.0,
+            fleet_time(&devices),
+            vec![("lanes", nq.to_string())],
+        );
+        tracer.add_count("batch_solves", 1);
 
         Ok(outcomes
             .into_iter()

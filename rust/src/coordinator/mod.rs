@@ -284,6 +284,8 @@ pub struct EigenSolution {
 pub struct TopKSolver {
     pub cfg: SolverConfig,
     kernels: Box<dyn Kernels>,
+    /// Sim-time tracer (off by default — one branch per phase mark).
+    tracer: crate::trace::Tracer,
 }
 
 /// ARPACK-style residual estimate for the *top* Ritz pair of the
@@ -550,7 +552,7 @@ impl ExecCtx<'_> {
 impl TopKSolver {
     /// Solver over the pure-rust host-simulation backend.
     pub fn new(cfg: SolverConfig) -> Self {
-        TopKSolver { cfg, kernels: Box::new(HostKernels::new()) }
+        TopKSolver { cfg, kernels: Box::new(HostKernels::new()), tracer: Default::default() }
     }
 
     /// Solver over the AOT/PJRT artifact backend (`make artifacts` first;
@@ -558,17 +560,40 @@ impl TopKSolver {
     pub fn with_pjrt(cfg: SolverConfig, artifact_dir: &Path) -> Result<Self, SolverError> {
         let pjrt = PjrtKernels::new(artifact_dir)?;
         pjrt.validate_for(&cfg.precision)?;
-        Ok(TopKSolver { cfg, kernels: Box::new(pjrt) })
+        Ok(TopKSolver { cfg, kernels: Box::new(pjrt), tracer: Default::default() })
     }
 
     /// Solver over a caller-supplied backend (tests, custom runtimes).
     pub fn with_kernels(cfg: SolverConfig, kernels: Box<dyn Kernels>) -> Self {
-        TopKSolver { cfg, kernels }
+        TopKSolver { cfg, kernels, tracer: Default::default() }
     }
 
     /// Name of the kernel backend in use ("hostsim" / "pjrt" / custom).
     pub fn backend_name(&self) -> &'static str {
         self.kernels.backend_name()
+    }
+
+    /// Install a tracer (replacing any previous one). Solves record
+    /// phase spans — and per-iteration telemetry at
+    /// [`crate::trace::TraceLevel::Iter`] — stamped with simulated
+    /// seconds. Results are bit-identical traced vs untraced.
+    pub fn set_tracer(&mut self, tracer: crate::trace::Tracer) {
+        self.tracer = tracer;
+    }
+
+    /// The installed tracer (disabled by default).
+    pub fn tracer(&self) -> &crate::trace::Tracer {
+        &self.tracer
+    }
+
+    /// Mutable access to the installed tracer (e.g. to export or clear).
+    pub fn tracer_mut(&mut self) -> &mut crate::trace::Tracer {
+        &mut self.tracer
+    }
+
+    /// Remove and return the tracer, leaving tracing off.
+    pub fn take_tracer(&mut self) -> crate::trace::Tracer {
+        std::mem::take(&mut self.tracer)
     }
 }
 

@@ -71,7 +71,28 @@ impl TopKSolver {
         &mut self,
         prep: &mut PreparedState,
         query: &SolveQuery,
+        observer: Option<&mut dyn IterationObserver>,
+    ) -> Result<EigenSolution, SolverError> {
+        // Detach the tracer so the inner loop can borrow `self.kernels`
+        // mutably alongside it; reattach even on error paths.
+        let mut tracer = std::mem::take(&mut self.tracer);
+        let result = self.solve_prepared_traced(prep, query, observer, &mut tracer);
+        self.tracer = tracer;
+        result
+    }
+
+    /// [`TopKSolver::solve_prepared`] recording into an explicit tracer.
+    /// Phase spans land on track (0, 0) in *solve-local* simulated time
+    /// (fresh devices start at clock 0 for every query); serve-layer
+    /// callers re-stamp into workload time themselves. Tracing only reads
+    /// clocks the solve already advances, so results are bit-identical
+    /// with the tracer on, off, or absent.
+    pub(crate) fn solve_prepared_traced(
+        &mut self,
+        prep: &mut PreparedState,
+        query: &SolveQuery,
         mut observer: Option<&mut dyn IterationObserver>,
+        tracer: &mut crate::trace::Tracer,
     ) -> Result<EigenSolution, SolverError> {
         let cfg = prep.cfg.clone();
         if query.k < 1 || query.k > cfg.k {
@@ -216,14 +237,16 @@ impl TopKSolver {
                         dev.run_kernel(cfg.cost.stream_seconds(cost, compute));
                     });
                 }
-                phases.vector_ops += clock_cursor.mark(fleet_time(&devices));
+                phases.vector_ops +=
+                    clock_cursor.mark_traced(fleet_time(&devices), tracer, 0, 0, "vector_ops");
                 // β sync: the reduction's allreduce latency. Marked before
                 // the ring swap so it lands in `sync`, not `swap`.
                 for d in devices.iter_mut() {
                     d.clock_s += sync_latency;
                 }
                 barrier(&mut devices);
-                phases.sync += clock_cursor.mark(fleet_time(&devices));
+                phases.sync +=
+                    clock_cursor.mark_traced(fleet_time(&devices), tracer, 0, 0, "sync");
                 // Ring swap: refresh every device's replica of v_i.
                 ring::charge_swap_with(
                     &mut devices,
@@ -231,7 +254,8 @@ impl TopKSolver {
                     slice_bytes.as_slice(),
                     cfg.swap,
                 );
-                phases.swap += clock_cursor.mark(fleet_time(&devices));
+                phases.swap +=
+                    clock_cursor.mark_traced(fleet_time(&devices), tracer, 0, 0, "swap");
             }
 
             // SpMV (line 9): record the basis slice v_i (already quantized
@@ -289,6 +313,7 @@ impl TopKSolver {
                 // device is the one with the largest charge *this phase*
                 // (h2d + kernel seconds), not the largest absolute clock —
                 // absolute clocks can be led by earlier-phase skew.
+                let start = clock_cursor.now();
                 let delta = clock_cursor.mark(fleet_time(&devices));
                 let mut crit = 0usize;
                 for (gi, s) in spmv_split.iter().enumerate() {
@@ -301,10 +326,14 @@ impl TopKSolver {
                 let SpmvSplit { h2d_s, kernel_s } = spmv_split[crit];
                 let tot = h2d_s + kernel_s;
                 if h2d_s > 0.0 && tot > 0.0 {
-                    phases.h2d += delta * (h2d_s / tot);
+                    let h2d_share = delta * (h2d_s / tot);
+                    phases.h2d += h2d_share;
                     phases.spmv += delta * (kernel_s / tot);
+                    tracer.span("h2d", "phase", 0, 0, start, h2d_share);
+                    tracer.span("spmv", "phase", 0, 0, start + h2d_share, delta - h2d_share);
                 } else {
                     phases.spmv += delta;
+                    tracer.span("spmv", "phase", 0, 0, start, delta);
                 }
             }
 
@@ -320,12 +349,13 @@ impl TopKSolver {
                 });
             }
             let a_i: f64 = partials.iter().sum();
-            phases.vector_ops += clock_cursor.mark(fleet_time(&devices));
+            phases.vector_ops +=
+                clock_cursor.mark_traced(fleet_time(&devices), tracer, 0, 0, "vector_ops");
             for d in devices.iter_mut() {
                 d.clock_s += sync_latency;
             }
             barrier(&mut devices);
-            phases.sync += clock_cursor.mark(fleet_time(&devices));
+            phases.sync += clock_cursor.mark_traced(fleet_time(&devices), tracer, 0, 0, "sync");
             alpha.push(a_i);
 
             // Candidate update (line 11) + partial Σ v_nxt².
@@ -356,7 +386,8 @@ impl TopKSolver {
                 });
             }
             sumsq_parts.copy_from_slice(&partials);
-            phases.vector_ops += clock_cursor.mark(fleet_time(&devices));
+            phases.vector_ops +=
+                clock_cursor.mark_traced(fleet_time(&devices), tracer, 0, 0, "vector_ops");
 
             // Reorthogonalization (lines 12–21).
             let reorth_targets: Vec<usize> = match cfg.reorth {
@@ -377,12 +408,14 @@ impl TopKSolver {
                         });
                     }
                     let o: f64 = partials.iter().sum();
-                    phases.reorth += clock_cursor.mark(fleet_time(&devices));
+                    phases.reorth +=
+                        clock_cursor.mark_traced(fleet_time(&devices), tracer, 0, 0, "reorth");
                     for d in devices.iter_mut() {
                         d.clock_s += sync_latency;
                     }
                     barrier(&mut devices);
-                    phases.sync += clock_cursor.mark(fleet_time(&devices));
+                    phases.sync +=
+                        clock_cursor.mark_traced(fleet_time(&devices), tracer, 0, 0, "sync");
                     {
                         let items = wss.iter_mut().zip(devices.iter_mut());
                         ctx.fan_out(Phase::Light, items, |(ws, dev), kern| {
@@ -394,7 +427,8 @@ impl TopKSolver {
                             dev.run_kernel(cfg.cost.stream_seconds(cost, compute));
                         });
                     }
-                    phases.reorth += clock_cursor.mark(fleet_time(&devices));
+                    phases.reorth +=
+                        clock_cursor.mark_traced(fleet_time(&devices), tracer, 0, 0, "reorth");
                 }
                 // Recompute the candidate norm after the corrections.
                 {
@@ -404,14 +438,17 @@ impl TopKSolver {
                     });
                 }
                 sumsq_parts.copy_from_slice(&partials);
-                phases.reorth += clock_cursor.mark(fleet_time(&devices));
+                phases.reorth +=
+                    clock_cursor.mark_traced(fleet_time(&devices), tracer, 0, 0, "reorth");
             }
 
             // Observer hook: one event per completed iteration. The residual
             // estimate costs a Jacobi solve of the (i+1)×(i+1) tridiagonal —
             // microseconds at K ≤ 64 — and is skipped entirely when no
-            // observer is attached.
-            if let Some(obs) = observer.as_mut() {
+            // observer is attached and the tracer does not want iteration
+            // telemetry. The estimate is a pure function of (α, β), so
+            // computing it for the tracer cannot perturb the solve.
+            if observer.is_some() || tracer.wants_iter() {
                 let beta_next = sumsq_parts.iter().sum::<f64>().sqrt();
                 let event = IterationEvent {
                     iter: i,
@@ -421,9 +458,14 @@ impl TopKSolver {
                     sim_seconds: fleet_time(&devices),
                     phases,
                 };
-                if obs.on_iteration(&event) == ObserverControl::Stop {
-                    k_eff = i + 1;
-                    break;
+                if tracer.wants_iter() {
+                    tracer.iteration(0, 0, &event);
+                }
+                if let Some(obs) = observer.as_mut() {
+                    if obs.on_iteration(&event) == ObserverControl::Stop {
+                        k_eff = i + 1;
+                        break;
+                    }
                 }
             }
             // No shift step: v_prev is read straight out of the basis slab.
@@ -449,7 +491,7 @@ impl TopKSolver {
         // Consume the Jacobi clock advance: it is already accounted in
         // `jacobi_cpu`, so the projection mark below measures only
         // projection work (it used to double-count into `project`).
-        let _ = clock_cursor.mark(fleet_time(&devices));
+        let _ = clock_cursor.mark_traced(fleet_time(&devices), tracer, 0, 0, "jacobi_cpu");
 
         // ---- Eigenvector projection Y = 𝒱 · V --------------------------------
         let coeff: &[Vec<f64>] = &eig.vectors;
@@ -470,7 +512,8 @@ impl TopKSolver {
                 dev.run_kernel(cfg.cost.stream_seconds(cost, compute));
             });
         }
-        phases.project += clock_cursor.mark(fleet_time(&devices));
+        phases.project +=
+            clock_cursor.mark_traced(fleet_time(&devices), tracer, 0, 0, "project");
         for (gi, p) in parts.iter().enumerate() {
             let rows = p.rows();
             for (t_idx, ev) in eigenvectors.iter_mut().enumerate() {
@@ -483,6 +526,16 @@ impl TopKSolver {
         }
 
         let sim_seconds = fleet_time(&devices);
+        tracer.span_args(
+            "solve",
+            "solve",
+            0,
+            0,
+            0.0,
+            sim_seconds,
+            vec![("k", k.to_string()), ("iterations", k_eff.to_string())],
+        );
+        tracer.add_count("solves", 1);
         let stats = SolveStats {
             wall_seconds: wall_start.elapsed().as_secs_f64(),
             sim_seconds,

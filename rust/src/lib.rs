@@ -204,6 +204,17 @@
 //! untiered reports stay byte-compatible with 0.7
 //! (`rust/tests/tiered_registry.rs`).
 //!
+//! 0.9 threads a **deterministic tracing layer** ([`trace`]) through the
+//! coordinator, serve runtime and registry: opt-in via
+//! `Solver::builder().trace(level)` / [`serve::EigenServer::with_trace`]
+//! (CLI `--trace file.json [--trace-level span|iter]`), it records phase
+//! spans, per-query serve lanes, fault/tier-move instants and residency
+//! counter tracks — all timestamped on the *simulated* clock, never
+//! wallclock — and exports Chrome trace-event JSON loadable in Perfetto.
+//! Tracing is observation-only (traced results are bit-identical,
+//! untraced reports keep their 0.8 bytes) and traces replay
+//! byte-identically per seed (`rust/tests/trace.rs`).
+//!
 //! ## System shape
 //!
 //! The solver is two-phase:
@@ -315,6 +326,21 @@
 //! | crash wipes the whole registry                | crash wipes the device tier; demoted state recovers by promotion |
 //! | one `prepare_s` wait per query record         | [`serve::QueryRecord`] splits `prepare_s` vs `promote_s` |
 //!
+//! 0.9 adds the deterministic tracing layer ([`trace`]); existing code
+//! compiles unchanged (tracing is opt-in and observation-only), but
+//! struct-literal constructors of [`metrics::LatencySummary`] must add
+//! the new fields:
+//!
+//! | pre-0.9                                       | 0.9+                                                    |
+//! |-----------------------------------------------|---------------------------------------------------------|
+//! | no runtime introspection                      | [`trace`]`::{Tracer, TraceLevel, TraceEvent, TraceSink, Counters}` + Chrome trace-event export |
+//! | `Solver::builder()`                           | + `.trace(level)`; [`api::Solver::tracer_mut`] / [`api::Solver::trace_json`] |
+//! | `EigenServer::new(…)`                         | + [`serve::EigenServer::with_trace`] / `trace_json` / `tracer` |
+//! | tier moves observable via stats only          | [`serve::MatrixRegistry::enable_transition_log`] + `drain_transitions` ([`serve::TierTransition`]) |
+//! | `LatencySummary { mean, p50, p95, p99, max }` | + `p999`, `count` (`from_samples` callers unaffected); JSON emits them only under `ServeReport::extended_metrics` |
+//! | serve report JSON fixed shape                 | + per-query `timeline` block, present **only when traced** — untraced reports keep their 0.8 bytes |
+//! | `solve`/`serve` CLI                           | + `--trace <file>` `--trace-level span\|iter` (Perfetto / `chrome://tracing` loadable) |
+//!
 //! The low-level types (`SolverConfig`, `TopKSolver`, `BaselineConfig`)
 //! remain public under [`coordinator`] / [`baseline`] for harnesses that
 //! need them; only the *root* re-exports are deprecated.
@@ -354,6 +380,7 @@ pub mod runtime;
 pub mod serve;
 pub mod sim;
 pub mod sparse;
+pub mod trace;
 
 // ---- The 0.2 public surface -------------------------------------------------
 pub use api::{
@@ -366,6 +393,7 @@ pub use coordinator::{
 };
 pub use precision::PrecisionConfig;
 pub use sparse::{Coo, Csr, Ell};
+pub use trace::{TraceLevel, Tracer, TracingObserver};
 
 // ---- Deprecated pre-0.2 re-exports (see the MIGRATION table above) ----------
 #[deprecated(

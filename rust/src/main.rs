@@ -8,6 +8,7 @@
 //!                   [--tolerance 1e-9 [--require-convergence]]
 //!                   [--device-mem-mb 32] [--seed N] [--baseline]
 //!                   [--queries N [--batch B]] [--report out.json]
+//!                   [--trace trace.json [--trace-level span|iter]]
 //! topk-eigen generate --suite KRON --scale 1.0 --out kron.mtx
 //! topk-eigen matrices [--json]           # list built-in matrix ids
 //! topk-eigen suite                       # Table I stand-ins (paper sizes)
@@ -35,6 +36,7 @@ use topk_eigen::sim::{CrashSpec, FaultSpec, Placement, RetryPolicy};
 use topk_eigen::sparse::{mmio, suite, Csr};
 use topk_eigen::{
     Backend, Eigensolve, PrecisionConfig, QueryParams, SolveReport, Solver, SolverError,
+    TraceLevel,
 };
 
 /// Failure modes of a CLI command, mapped to exit codes in `main`.
@@ -162,6 +164,11 @@ fn print_usage() {
          \x20                     any ID:WEIGHT weights; 0 = uniform)\n\
          \x20 --json              print the machine-readable report to stdout\n\
          \x20 --report <f.json>   also write the report to a file\n\
+         \x20 --trace <f.json>    write a Chrome/Perfetto trace of the run\n\
+         \x20                     (sim-time batch/query spans, tier moves,\n\
+         \x20                     fault instants, counter tracks); the same\n\
+         \x20                     seeds replay to byte-identical trace files\n\
+         \x20 --trace-level <l>   span | iter (default span)\n\
          \n\
          SERVE FAULT OPTIONS (deterministic injection; all off by default):\n\
          \x20 --fault-seed <n>    fault-stream seed (default 0); a fixed\n\
@@ -213,7 +220,12 @@ fn print_usage() {
          \x20                     streams the matrix once per iteration\n\
          \x20                     for all b queries (results are\n\
          \x20                     bit-identical to solo solves)\n\
-         \x20 --report <f.json>   write a machine-readable solve report\n"
+         \x20 --report <f.json>   write a machine-readable solve report\n\
+         \x20 --trace <f.json>    write a Chrome/Perfetto trace of the solve\n\
+         \x20                     (per-phase sim-time spans; results are\n\
+         \x20                     bit-identical traced vs untraced)\n\
+         \x20 --trace-level <l>   span | iter — iter adds per-iteration\n\
+         \x20                     α/β/residual counter tracks (default span)\n"
     );
 }
 
@@ -266,7 +278,34 @@ const SOLVE_FLAGS: &[&str] = &[
     "queries",
     "batch",
     "report",
+    "trace",
+    "trace-level",
 ];
+
+/// Shared `--trace FILE [--trace-level span|iter]` parsing for `solve`
+/// and `serve`. Returns the output path (None = tracing off) and the
+/// level; `--trace-level` without `--trace` is a usage error rather than
+/// a silent no-op.
+fn parse_trace_flags(
+    args: &cli::Args,
+) -> Result<(Option<&str>, TraceLevel), CliError> {
+    let path = args.get("trace");
+    let level: TraceLevel = args.try_get_or("trace-level", TraceLevel::Span)?;
+    if args.has("trace-level") && path.is_none() {
+        return Err(CliError::Usage(
+            "--trace-level needs --trace <file> (tracing is off without it)".into(),
+        ));
+    }
+    Ok((path, level))
+}
+
+/// Write a Chrome trace JSON string to `path` with a trailing newline —
+/// the bytes are deterministic, so two seeded replays produce files that
+/// compare equal with `cmp`.
+fn write_trace_file(path: &str, json: &str) -> Result<(), CliError> {
+    std::fs::write(path, format!("{json}\n"))
+        .map_err(|e| CliError::Run(format!("writing {path}: {e}")))
+}
 
 fn cmd_solve(args: &cli::Args) -> Result<i32, CliError> {
     args.reject_unknown(SOLVE_FLAGS)?;
@@ -289,6 +328,7 @@ fn cmd_solve(args: &cli::Args) -> Result<i32, CliError> {
     let mem_mb: usize = args.try_get_or("device-mem-mb", 32usize)?;
     let exec: ExecPolicy = args.try_get_or("exec", ExecPolicy::Auto)?;
     let tolerance: Option<f64> = args.try_get("tolerance")?;
+    let (trace_path, trace_level) = parse_trace_flags(args)?;
 
     // Backend selection — one flag for all substrates.
     let backend = match args.try_get_or("backend", Backend::HostSim)? {
@@ -319,6 +359,9 @@ fn cmd_solve(args: &cli::Args) -> Result<i32, CliError> {
         .require_convergence(args.has("require-convergence"));
     if let Some(tol) = tolerance {
         builder = builder.tolerance(tol);
+    }
+    if trace_path.is_some() {
+        builder = builder.trace(trace_level);
     }
     let mut solver = builder.build()?;
 
@@ -420,6 +463,13 @@ fn cmd_solve(args: &cli::Args) -> Result<i32, CliError> {
         report.tolerance = tolerance;
         report.write_json(Path::new(path))?;
         println!("report written to {path}");
+    }
+    if let Some(path) = trace_path {
+        let json = solver
+            .trace_json()
+            .ok_or_else(|| CliError::Run("tracing was enabled but recorded nothing".into()))?;
+        write_trace_file(path, &json)?;
+        println!("trace written to {path} (load in Perfetto / chrome://tracing)");
     }
     Ok(0)
 }
@@ -534,6 +584,15 @@ fn cmd_solve_batch(
         report.write_json(Path::new(path))?;
         println!("report written to {path}");
     }
+    if let Some(path) = args.get("trace") {
+        // The session borrows the solver; release it before exporting.
+        drop(session);
+        let json = solver
+            .trace_json()
+            .ok_or_else(|| CliError::Run("tracing was enabled but recorded nothing".into()))?;
+        write_trace_file(path, &json)?;
+        println!("trace written to {path} (load in Perfetto / chrome://tracing)");
+    }
     Ok(0)
 }
 
@@ -578,6 +637,8 @@ const SERVE_FLAGS: &[&str] = &[
     "retry-cap",
     "deadline",
     "queue-depth",
+    "trace",
+    "trace-level",
 ];
 
 /// Parse the `--crash` mini-format: a comma list of `T@F[:R]` entries —
@@ -792,6 +853,7 @@ fn cmd_serve(args: &cli::Args) -> Result<i32, CliError> {
     fault_spec.validate(fleets).map_err(ServeError::from)?;
 
     let json_only = args.has("json");
+    let (trace_path, trace_level) = parse_trace_flags(args)?;
 
     // ---- Build the stack --------------------------------------------------
     let matrices: Vec<(String, Csr)> = entries
@@ -849,6 +911,9 @@ fn cmd_serve(args: &cli::Args) -> Result<i32, CliError> {
         placement,
     )?
     .with_prefetch_depth(prefetch_depth);
+    if trace_path.is_some() {
+        server = server.with_trace(trace_level);
+    }
 
     let spec = WorkloadSpec {
         seed: workload_seed,
@@ -889,6 +954,15 @@ fn cmd_serve(args: &cli::Args) -> Result<i32, CliError> {
             .map_err(|e| CliError::Run(format!("writing {path}: {e}")))?;
         if !json_only {
             println!("report written to {path}");
+        }
+    }
+    if let Some(path) = trace_path {
+        let json = server
+            .trace_json()
+            .ok_or_else(|| CliError::Run("tracing was enabled but recorded nothing".into()))?;
+        write_trace_file(path, &json)?;
+        if !json_only {
+            println!("trace written to {path} (load in Perfetto / chrome://tracing)");
         }
     }
     Ok(0)

@@ -76,15 +76,23 @@ pub fn percentile(sorted: &[f64], q: f64) -> f64 {
 }
 
 /// Summary statistics of a latency-like sample set: mean, max and the
-/// serving percentiles (p50/p95/p99 by nearest rank). Produced by
-/// [`LatencySummary::from_samples`]; used by the serve runtime's report.
+/// serving percentiles (p50/p95/p99/p999 by nearest rank), plus the
+/// sample count. Produced by [`LatencySummary::from_samples`]; used by
+/// the serve runtime's report. The serve JSON emits `p999`/`count` only
+/// behind its extended-metrics flag, so 0.8 consumers see unchanged
+/// bytes.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct LatencySummary {
     pub mean: f64,
     pub p50: f64,
     pub p95: f64,
     pub p99: f64,
+    /// Nearest-rank 99.9th percentile — below ~1000 samples this is the
+    /// max, by construction of nearest rank.
+    pub p999: f64,
     pub max: f64,
+    /// How many samples the summary was computed over.
+    pub count: usize,
 }
 
 impl LatencySummary {
@@ -101,7 +109,9 @@ impl LatencySummary {
             p50: percentile(&s, 0.50),
             p95: percentile(&s, 0.95),
             p99: percentile(&s, 0.99),
+            p999: percentile(&s, 0.999),
             max: percentile(&s, 1.0),
+            count: s.len(),
         }
     }
 }
@@ -209,6 +219,21 @@ mod tests {
         assert!((s.mean - 2.5).abs() < 1e-15);
         assert!(s.p50 <= s.p95 && s.p95 <= s.p99 && s.p99 <= s.max);
         assert_eq!(LatencySummary::from_samples(&[]), LatencySummary::default());
+    }
+
+    #[test]
+    fn latency_summary_counts_and_p999_tracks_the_tail() {
+        let s = LatencySummary::from_samples(&[3.0, 1.0, 2.0, 4.0]);
+        assert_eq!(s.count, 4);
+        assert_eq!(s.p999, 4.0, "under 1000 samples nearest-rank p999 is the max");
+        assert!(s.p99 <= s.p999 && s.p999 <= s.max);
+        // At 2000 samples p999 sits two ranks below the max.
+        let many: Vec<f64> = (1..=2000).map(|i| i as f64).collect();
+        let s = LatencySummary::from_samples(&many);
+        assert_eq!(s.count, 2000);
+        assert_eq!(s.p999, 1998.0);
+        assert_eq!(s.max, 2000.0);
+        assert_eq!(LatencySummary::default().count, 0);
     }
 
     #[test]

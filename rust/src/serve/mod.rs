@@ -109,7 +109,9 @@ pub mod server;
 pub mod workload;
 
 pub use error::ServeError;
-pub use registry::{MatrixRegistry, PrepareEvent, RegistryConfig, RegistryStats, Tier};
+pub use registry::{
+    MatrixRegistry, PrepareEvent, RegistryConfig, RegistryStats, Tier, TierTransition,
+};
 pub use scheduler::{Batch, BatchCoalescer, CoalescerConfig, Priority, QueryArrival};
 pub use server::{
     EigenServer, FaultSummary, FleetServeLine, QueryOutcome, QueryRecord, ServeReport,

@@ -94,6 +94,25 @@ impl Tier {
     }
 }
 
+/// One tier movement of a prepared state, recorded only while the
+/// transition log is enabled ([`MatrixRegistry::enable_transition_log`];
+/// the serve tracer drains these into trace instants stamped with the
+/// event's simulated time). `from`/`to` are [`Tier::name`] strings, with
+/// `"none"` for "held nothing" — so a cold prepare is `none → device`
+/// and an eviction is `<tier> → none`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TierTransition {
+    /// Registry index of the matrix whose prepared state moved.
+    pub matrix: usize,
+    /// Tier the state left (`"none"` when it was not held).
+    pub from: &'static str,
+    /// Tier the state entered (`"none"` when dropped/wiped).
+    pub to: &'static str,
+    /// Why it moved: `"prepare"`, `"promote"`, `"prefetch"`, `"demote"`,
+    /// `"evict"`, or `"crash"`.
+    pub reason: &'static str,
+}
+
 /// Counters the registry accumulates across a serve run.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct RegistryStats {
@@ -196,12 +215,51 @@ pub struct MatrixRegistry<'m> {
     entries: Vec<Entry<'m>>,
     tick: u64,
     stats: RegistryStats,
+    /// True once [`MatrixRegistry::enable_transition_log`] ran: every
+    /// tier movement is appended to `transitions` until drained.
+    log_transitions: bool,
+    transitions: Vec<TierTransition>,
 }
 
 impl<'m> MatrixRegistry<'m> {
     /// Registry served by `solver` under `cfg`'s tier budgets.
     pub fn new(solver: Solver, cfg: RegistryConfig) -> Self {
-        MatrixRegistry { solver, cfg, entries: Vec::new(), tick: 0, stats: RegistryStats::default() }
+        MatrixRegistry {
+            solver,
+            cfg,
+            entries: Vec::new(),
+            tick: 0,
+            stats: RegistryStats::default(),
+            log_transitions: false,
+            transitions: Vec::new(),
+        }
+    }
+
+    /// Start recording every tier movement as a [`TierTransition`]
+    /// (disabled by default — the log costs one branch per movement when
+    /// off). The serve tracer enables this on every fleet and drains the
+    /// log right after each registry call so the transitions get the
+    /// correct simulated timestamp.
+    pub fn enable_transition_log(&mut self) {
+        self.log_transitions = true;
+    }
+
+    /// Take every transition recorded since the last drain (empty when
+    /// the log was never enabled).
+    pub fn drain_transitions(&mut self) -> Vec<TierTransition> {
+        std::mem::take(&mut self.transitions)
+    }
+
+    fn log_move(
+        &mut self,
+        matrix: usize,
+        from: &'static str,
+        to: &'static str,
+        reason: &'static str,
+    ) {
+        if self.log_transitions {
+            self.transitions.push(TierTransition { matrix, from, to, reason });
+        }
     }
 
     /// Register a named matrix; returns its index (the id the scheduler
@@ -327,11 +385,13 @@ impl<'m> MatrixRegistry<'m> {
 
     /// Drop entry `v`'s prepared state entirely.
     fn drop_entry(&mut self, v: usize, out: &mut TrimOut) {
+        let from = self.entries[v].tier.map_or("none", |t| t.name());
         self.note_displaced(v);
         self.entries[v].prepared = None;
         self.entries[v].tier = None;
         out.evicted += 1;
         self.stats.evictions += 1;
+        self.log_move(v, from, "none", "evict");
     }
 
     /// Demote entry `v` out of the device tier into the next configured
@@ -345,6 +405,7 @@ impl<'m> MatrixRegistry<'m> {
             out.transfer_s += self.cfg.cost.d2h_seconds(bytes);
             out.demoted += 1;
             self.stats.demotions += 1;
+            self.log_move(v, "device", "host", "demote");
             self.trim_host(out);
         } else if self.cfg.ssd_budget_bytes > 0 {
             self.entries[v].tier = Some(Tier::Ssd);
@@ -352,6 +413,7 @@ impl<'m> MatrixRegistry<'m> {
                 self.cfg.cost.d2h_seconds(bytes) + self.cfg.cost.ssd_write_seconds(bytes);
             out.demoted += 1;
             self.stats.demotions += 1;
+            self.log_move(v, "device", "ssd", "demote");
             self.trim_ssd(out);
         } else {
             self.drop_entry(v, out);
@@ -376,6 +438,7 @@ impl<'m> MatrixRegistry<'m> {
                 out.transfer_s += self.cfg.cost.ssd_write_seconds(bytes);
                 out.demoted += 1;
                 self.stats.demotions += 1;
+                self.log_move(v, "host", "ssd", "demote");
                 self.trim_ssd(out);
             } else {
                 self.drop_entry(v, out);
@@ -463,6 +526,7 @@ impl<'m> MatrixRegistry<'m> {
                 self.entries[idx].tier = Some(Tier::Device);
                 self.entries[idx].prefetched = false;
                 self.stats.promotions += 1;
+                self.log_move(idx, from.name(), "device", "promote");
                 self.trim_device(&[idx], &mut out);
                 Ok(PrepareEvent {
                     cold: false,
@@ -482,6 +546,7 @@ impl<'m> MatrixRegistry<'m> {
                 self.entries[idx].resident_bytes = bytes;
                 self.entries[idx].prepares += 1;
                 self.stats.prepares += 1;
+                self.log_move(idx, "none", "device", "prepare");
                 self.trim_device(&[idx], &mut out);
                 Ok(PrepareEvent {
                     cold: true,
@@ -526,12 +591,14 @@ impl<'m> MatrixRegistry<'m> {
             return 0.0;
         }
         self.tick += 1;
+        let from = self.entries[idx].tier.map_or("none", |t| t.name());
         self.entries[idx].last_used = self.tick;
         self.entries[idx].tier = Some(Tier::Device);
         self.entries[idx].promoting = true;
         self.entries[idx].promote_done_bits = done_s.to_bits();
         self.stats.promotions += 1;
         self.stats.prefetch_issued += 1;
+        self.log_move(idx, from, "device", "prefetch");
         let mut protected = vec![idx];
         if let Some(p) = protect {
             protected.push(p);
@@ -592,6 +659,7 @@ impl<'m> MatrixRegistry<'m> {
                 self.entries[i].tier = None;
                 self.entries[i].promoting = false;
                 dropped += 1;
+                self.log_move(i, "device", "none", "crash");
             }
         }
         self.stats.evictions += dropped;
@@ -604,12 +672,13 @@ impl<'m> MatrixRegistry<'m> {
     pub fn evict_all(&mut self) -> usize {
         let mut evicted = 0usize;
         for i in 0..self.entries.len() {
-            if self.entries[i].tier.is_some() {
+            if let Some(t) = self.entries[i].tier {
                 self.note_displaced(i);
                 self.entries[i].prepared = None;
                 self.entries[i].tier = None;
                 self.entries[i].promoting = false;
                 evicted += 1;
+                self.log_move(i, t.name(), "none", "evict");
             }
         }
         self.stats.evictions += evicted;
@@ -853,6 +922,68 @@ mod tests {
         assert_eq!(reg.stats().prefetch_wasted, 0);
         reg.evict_all();
         assert_eq!(reg.stats().prefetch_wasted, 1, "a never saw its hit");
+    }
+
+    #[test]
+    fn transition_log_is_off_by_default_and_drains_once_enabled() {
+        let a = suite::find("WB-GO").unwrap().generate_csr(0.3, 1);
+        let mut reg = MatrixRegistry::new(solver(), RegistryConfig::default());
+        let ia = reg.register("a", &a);
+        reg.ensure_prepared(ia).unwrap();
+        assert!(reg.drain_transitions().is_empty(), "log is off by default");
+        reg.enable_transition_log();
+        let e = reg.ensure_prepared(ia).unwrap();
+        assert!(!e.cold);
+        assert!(reg.drain_transitions().is_empty(), "a device hit moves nothing");
+        reg.evict_all();
+        assert_eq!(
+            reg.drain_transitions(),
+            vec![TierTransition { matrix: ia, from: "device", to: "none", reason: "evict" }]
+        );
+        reg.ensure_prepared(ia).unwrap();
+        let moved = reg.drain_transitions();
+        assert_eq!(
+            moved,
+            vec![TierTransition { matrix: ia, from: "none", to: "device", reason: "prepare" }]
+        );
+        assert!(reg.drain_transitions().is_empty(), "drain takes the log");
+    }
+
+    #[test]
+    fn transition_log_tracks_demote_promote_ping_pong() {
+        let a = suite::find("WB-GO").unwrap().generate_csr(0.3, 1);
+        let b = suite::find("FL").unwrap().generate_csr(0.3, 1);
+        let mut probe = solver();
+        let sa = probe.prepare(&a).unwrap().resident_bytes();
+        let sb = probe.prepare(&b).unwrap().resident_bytes();
+        let mut reg = MatrixRegistry::new(
+            solver(),
+            RegistryConfig {
+                budget_bytes: sa.max(sb) + sa.min(sb) / 2,
+                host_budget_bytes: 1 << 30,
+                ..RegistryConfig::default()
+            },
+        );
+        reg.enable_transition_log();
+        let (ia, ib) = (reg.register("a", &a), reg.register("b", &b));
+        reg.ensure_prepared(ia).unwrap();
+        reg.ensure_prepared(ib).unwrap(); // b's admission demotes a
+        assert_eq!(
+            reg.drain_transitions(),
+            vec![
+                TierTransition { matrix: ia, from: "none", to: "device", reason: "prepare" },
+                TierTransition { matrix: ib, from: "none", to: "device", reason: "prepare" },
+                TierTransition { matrix: ia, from: "device", to: "host", reason: "demote" },
+            ]
+        );
+        reg.ensure_prepared(ia).unwrap(); // promote a back, b demotes in turn
+        assert_eq!(
+            reg.drain_transitions(),
+            vec![
+                TierTransition { matrix: ia, from: "host", to: "device", reason: "promote" },
+                TierTransition { matrix: ib, from: "device", to: "host", reason: "demote" },
+            ]
+        );
     }
 
     #[test]

@@ -51,6 +51,7 @@ use super::scheduler::{BatchCoalescer, CoalescerConfig, Priority, QueryArrival};
 use crate::bench_util::{json_num, JsonObj, Table};
 use crate::metrics::{safe_rate, LatencySummary};
 use crate::sim::{EventHeap, FaultPlan, FaultSpec, FleetPool, Placement, ServeEvent};
+use crate::trace::{TraceLevel, Tracer};
 use crate::QueryParams;
 
 /// Queries a matrix must have served before [`Placement::LeastLoaded`]
@@ -313,18 +314,34 @@ pub struct ServeReport {
     /// Order-sensitive fold of every served eigenvalue's bits — two runs
     /// produced identical eigenpairs iff the checksums match.
     pub result_checksum: u64,
-    /// The full per-query ledger (excluded from JSON).
+    /// True when the run was traced ([`EigenServer::with_trace`]): the
+    /// JSON gains a compact per-query `timeline` block. Untraced reports
+    /// are byte-identical to 0.8.
+    pub traced: bool,
+    /// Opt-in schema extension: when set, the latency/queue summaries
+    /// additionally emit `p999_s` and `count`. Off by default so 0.8
+    /// consumers see unchanged bytes; flip it on a report before
+    /// serializing to get the extended fields.
+    pub extended_metrics: bool,
+    /// The full per-query ledger (excluded from JSON; the traced
+    /// `timeline` block is its compact serialized form).
     pub records: Vec<QueryRecord>,
 }
 
-fn summary_json(s: &LatencySummary) -> String {
-    JsonObj::new()
+fn summary_json(s: &LatencySummary, ext: bool) -> String {
+    let mut j = JsonObj::new()
         .num("mean_s", s.mean)
         .num("p50_s", s.p50)
         .num("p95_s", s.p95)
-        .num("p99_s", s.p99)
-        .num("max_s", s.max)
-        .finish()
+        .num("p99_s", s.p99);
+    if ext {
+        j = j.num("p999_s", s.p999);
+    }
+    j = j.num("max_s", s.max);
+    if ext {
+        j = j.int("count", s.count);
+    }
+    j.finish()
 }
 
 impl ServeReport {
@@ -337,7 +354,12 @@ impl ServeReport {
     /// the per-fleet transfer columns) only when a host/SSD tier was
     /// configured — so single-fleet fault-free reports stay
     /// byte-compatible with pre-0.6 consumers, every fault-free report
-    /// with pre-0.7 ones, and every untiered report with 0.7 ones.
+    /// with pre-0.7 ones, and every untiered report with 0.7 ones. The
+    /// 0.9 additions follow the same rule: the per-query `timeline`
+    /// block appears only on traced runs ([`ServeReport::traced`]) and
+    /// the `p999_s`/`count` summary fields only behind
+    /// [`ServeReport::extended_metrics`], so untraced default reports
+    /// stay byte-compatible with 0.8.
     pub fn to_json(&self) -> String {
         let per_matrix: Vec<String> = self
             .per_matrix
@@ -360,8 +382,8 @@ impl ServeReport {
             .num("mean_batch_size", self.mean_batch_size)
             .num("sim_end_s", self.sim_end_s)
             .num("throughput_qps", self.throughput_qps)
-            .raw("latency", summary_json(&self.latency))
-            .raw("queue", summary_json(&self.queue))
+            .raw("latency", summary_json(&self.latency, self.extended_metrics))
+            .raw("queue", summary_json(&self.queue, self.extended_metrics))
             .num("solve_s_total", self.solve_s_total)
             .num("prepare_s_total", self.prepare_s_total)
             .num("busy_frac", self.busy_frac)
@@ -431,8 +453,31 @@ impl ServeReport {
                 .raw("per_fleet", format!("[{}]", per_fleet.join(", ")))
                 .raw("replicas", format!("[{}]", replicas.join(", ")));
         }
-        j.raw("per_matrix", format!("[{}]", per_matrix.join(", ")))
-            .str("result_checksum", &format!("{:016x}", self.result_checksum))
+        j = j.raw("per_matrix", format!("[{}]", per_matrix.join(", ")));
+        if self.traced {
+            let timeline: Vec<String> = self
+                .records
+                .iter()
+                .map(|r| {
+                    JsonObj::new()
+                        .raw("id", r.id.to_string())
+                        .int("matrix", r.matrix)
+                        .str("outcome", r.outcome.name())
+                        .int("fleet", r.fleet)
+                        .num("arrival_s", r.arrival_s)
+                        .num("start_s", r.start_s)
+                        .num("done_s", r.done_s)
+                        .num("queue_s", r.queue_s)
+                        .num("prepare_s", r.prepare_s)
+                        .num("promote_s", r.promote_s)
+                        .num("solve_s", r.solve_s)
+                        .int("retries", r.retries as usize)
+                        .finish()
+                })
+                .collect();
+            j = j.raw("timeline", format!("[{}]", timeline.join(", ")));
+        }
+        j.str("result_checksum", &format!("{:016x}", self.result_checksum))
             .finish()
     }
 
@@ -654,6 +699,8 @@ pub struct EigenServer<'m> {
     /// unless a registry has a host/SSD tier — there is nothing to
     /// promote without demoted state.
     prefetch_depth: usize,
+    /// Sim-time tracer (off by default — one branch per emit site).
+    tracer: Tracer,
 }
 
 /// Default [`EigenServer`] prefetch lookahead (next-two matrices): deep
@@ -669,6 +716,7 @@ impl<'m> EigenServer<'m> {
             coalescer,
             placement: Placement::Replicate,
             prefetch_depth: DEFAULT_PREFETCH_DEPTH,
+            tracer: Tracer::off(),
         }
     }
 
@@ -678,6 +726,38 @@ impl<'m> EigenServer<'m> {
     pub fn with_prefetch_depth(mut self, depth: usize) -> Self {
         self.prefetch_depth = depth;
         self
+    }
+
+    /// Record a sim-time trace of every run: per-query lane spans
+    /// (queue/promote/prepare/solve), batch spans, lifecycle instants
+    /// (arrivals, sheds, crashes, retries, prefetches), tier-transition
+    /// instants (also enables every fleet's transition log), and counter
+    /// tracks for queue depth and tier residency. `pid` = fleet in the
+    /// Chrome export, with one extra `scheduler` process for
+    /// fleet-agnostic events. Tracing never changes a decision or a
+    /// result: every timestamp is read from clocks the run already
+    /// advances, so traced and untraced reports are byte-identical (the
+    /// report merely gains its `timeline` block) and two traced replays
+    /// of one seeded workload produce byte-identical trace files.
+    pub fn with_trace(mut self, level: TraceLevel) -> Self {
+        self.tracer = Tracer::new(level);
+        for reg in &mut self.registries {
+            reg.enable_transition_log();
+        }
+        self
+    }
+
+    /// Chrome trace-event JSON of everything recorded so far (`None`
+    /// when the server was built without [`EigenServer::with_trace`]).
+    /// Loadable in Perfetto / `chrome://tracing`.
+    pub fn trace_json(&self) -> Option<String> {
+        self.tracer.chrome_json()
+    }
+
+    /// The server's tracer (counters introspection; off unless
+    /// [`EigenServer::with_trace`] was called).
+    pub fn tracer(&self) -> &Tracer {
+        &self.tracer
     }
 
     /// Multi-fleet server: one registry per fleet (each its own device
@@ -727,6 +807,7 @@ impl<'m> EigenServer<'m> {
             coalescer,
             placement,
             prefetch_depth: DEFAULT_PREFETCH_DEPTH,
+            tracer: Tracer::off(),
         })
     }
 
@@ -777,6 +858,15 @@ impl<'m> EigenServer<'m> {
         let nf = self.registries.len();
         spec.validate(nf)?;
         let n_matrices = self.registries[0].len();
+        if self.tracer.is_on() {
+            // A fresh trace per run: replaying the same workload twice on
+            // one server must produce byte-identical trace files.
+            self.tracer.clear();
+            for f in 0..nf {
+                self.tracer.name_pid(f as u64, &format!("fleet{f}"));
+            }
+            self.tracer.name_pid(nf as u64, "scheduler");
+        }
         let horizon = arrivals.iter().map(|q| q.arrival_s).fold(0.0f64, f64::max);
         let mut st = RunState {
             coal: BatchCoalescer::new(self.coalescer, n_matrices),
@@ -825,6 +915,23 @@ impl<'m> EigenServer<'m> {
             // drain immediately instead of idling out flush deadlines.
             let drain = st.arrived == arrivals.len();
             self.dispatch(&mut st, now, drain)?;
+            if self.tracer.is_on() {
+                // Counter tracks, sampled once per timeline instant after
+                // dispatch quiesces: aggregate queue depth on the
+                // scheduler process, tier residency per fleet.
+                let depth: usize = (0..n_matrices).map(|m| st.coal.depth(m)).sum();
+                self.tracer.counter("queue_depth", nf as u64, now, depth as f64);
+                for f in 0..nf {
+                    let dev = self.registries[f].resident_bytes() as f64;
+                    self.tracer.counter(&format!("f{f}.device_bytes"), f as u64, now, dev);
+                    if self.registries[f].is_tiered() {
+                        let host = self.registries[f].host_bytes() as f64;
+                        let ssd = self.registries[f].ssd_bytes() as f64;
+                        self.tracer.counter(&format!("f{f}.host_bytes"), f as u64, now, host);
+                        self.tracer.counter(&format!("f{f}.ssd_bytes"), f as u64, now, ssd);
+                    }
+                }
+            }
         }
 
         // The run ends at the last completion (or shed/fail decision),
@@ -832,6 +939,20 @@ impl<'m> EigenServer<'m> {
         // already-served queries would otherwise pad every throughput
         // number).
         let sim_end_s = st.records.iter().map(|r| r.done_s).fold(0.0f64, f64::max);
+        if self.tracer.is_on() {
+            self.tracer.span_args(
+                "serve",
+                "serve",
+                nf as u64,
+                0,
+                0.0,
+                sim_end_s,
+                vec![
+                    ("fleets", nf.to_string()),
+                    ("arrivals", arrivals.len().to_string()),
+                ],
+            );
+        }
         let faults = st.plan.is_active().then(|| {
             let (mut shed_deadline, mut shed_queue_full, mut failed) = (0, 0, 0);
             for r in &st.records {
@@ -868,8 +989,50 @@ impl<'m> EigenServer<'m> {
         ))
     }
 
+    /// Drain `fleet`'s registry transition log into `tier_move` instants
+    /// stamped with simulated instant `now`. No-op untraced: the log is
+    /// only enabled by [`EigenServer::with_trace`].
+    fn trace_tier_moves(&mut self, fleet: usize, now: f64) {
+        if !self.tracer.is_on() {
+            return;
+        }
+        for t in self.registries[fleet].drain_transitions() {
+            self.tracer.instant_args(
+                "tier_move",
+                "registry",
+                fleet as u64,
+                0,
+                now,
+                vec![
+                    ("matrix", t.matrix.to_string()),
+                    ("from", t.from.to_string()),
+                    ("to", t.to.to_string()),
+                    ("reason", t.reason.to_string()),
+                ],
+            );
+        }
+    }
+
+    /// Record one query's load-shed as an instant on the scheduler
+    /// process (no-op untraced).
+    fn trace_shed(&mut self, now: f64, id: u64, reason: &'static str) {
+        if !self.tracer.is_on() {
+            return;
+        }
+        let sched = self.registries.len() as u64;
+        self.tracer.add_count("shed", 1);
+        self.tracer.instant_args(
+            "shed",
+            "serve",
+            sched,
+            0,
+            now,
+            vec![("query", id.to_string()), ("reason", reason.to_string())],
+        );
+    }
+
     /// React to one timeline event. Pure wake-ups (flush, prepare-done,
-    /// fleet-up) need no transition of their own: the dispatch loop
+    /// demote-done) need no transition of their own: the dispatch loop
     /// re-reads queue eligibility and fleet idleness afterwards.
     fn apply_event(
         &mut self,
@@ -878,10 +1041,25 @@ impl<'m> EigenServer<'m> {
         now: f64,
         ev: ServeEvent,
     ) {
+        let sched = self.registries.len() as u64;
         match ev {
             ServeEvent::Arrival { index } => {
                 st.arrived += 1;
                 let q = &arrivals[index];
+                self.tracer.add_count("arrivals", 1);
+                if self.tracer.is_on() {
+                    self.tracer.instant_args(
+                        "arrival",
+                        "serve",
+                        sched,
+                        0,
+                        now,
+                        vec![
+                            ("query", q.id.to_string()),
+                            ("matrix", q.matrix.to_string()),
+                        ],
+                    );
+                }
                 if let Some(depth) = st.plan.max_queue_depth {
                     if st.coal.depth(q.matrix) >= depth {
                         // Bounded queue: bulk sheds first. An arriving
@@ -896,8 +1074,12 @@ impl<'m> EigenServer<'m> {
                         };
                         let shed = QueryOutcome::Shed(ShedReason::QueueFull);
                         match victim {
-                            Some(v) => st.records.push(unserved_record(&v, now, shed, 0)),
+                            Some(v) => {
+                                self.trace_shed(now, v.id, ShedReason::QueueFull.name());
+                                st.records.push(unserved_record(&v, now, shed, 0));
+                            }
                             None => {
+                                self.trace_shed(now, q.id, ShedReason::QueueFull.name());
                                 st.records.push(unserved_record(q, now, shed, 0));
                                 return;
                             }
@@ -910,9 +1092,10 @@ impl<'m> EigenServer<'m> {
                 );
                 st.coal.push(q.clone());
             }
-            ServeEvent::Flush { .. }
-            | ServeEvent::PrepareDone { .. }
-            | ServeEvent::FleetUp { .. } => {}
+            ServeEvent::Flush { .. } | ServeEvent::PrepareDone { .. } => {}
+            ServeEvent::FleetUp { fleet } => {
+                self.tracer.instant("fleet_up", "fault", fleet as u64, 0, now);
+            }
             ServeEvent::SolveDone { fleet } => {
                 // Only the in-flight batch completing *now* clears the
                 // slot — a stale done marker for a crash-killed batch
@@ -927,6 +1110,17 @@ impl<'m> EigenServer<'m> {
             ServeEvent::FleetDown { crash } => {
                 let c = st.plan.crashes[crash];
                 st.counters.crashes += 1;
+                self.tracer.add_count("crashes", 1);
+                if self.tracer.is_on() {
+                    self.tracer.instant_args(
+                        "fleet_down",
+                        "fault",
+                        c.fleet as u64,
+                        0,
+                        now,
+                        vec![("repair_s", json_num(c.repair_s))],
+                    );
+                }
                 let cut = st.pool.crash(c.fleet, now, c.repair_s);
                 if c.repair_s > 0.0 {
                     st.heap.push(now + c.repair_s, ServeEvent::FleetUp { fleet: c.fleet });
@@ -936,6 +1130,7 @@ impl<'m> EigenServer<'m> {
                 // on host/SSD survives, so repair recovery is a cheap
                 // promotion. Without tiers this is the 0.7 full wipe.
                 self.registries[c.fleet].crash_wipe();
+                self.trace_tier_moves(c.fleet, now);
                 if cut.killed {
                     let b = st.in_flight[c.fleet]
                         .take()
@@ -953,6 +1148,8 @@ impl<'m> EigenServer<'m> {
                     });
                     st.batches -= 1;
                     st.counters.killed_batches += 1;
+                    self.tracer.add_count("killed_batches", 1);
+                    self.tracer.instant("batch_killed", "fault", c.fleet as u64, 0, now);
                     st.solve_s_total -= cut.solve_cut;
                     st.prepare_s_total -= cut.prepare_cut;
                     st.served[b.matrix] -= b.queries.len();
@@ -962,6 +1159,16 @@ impl<'m> EigenServer<'m> {
             ServeEvent::RetryDue { retry } => {
                 if st.retries[retry].is_some() {
                     st.retry_ready.push(retry);
+                    if self.tracer.is_on() {
+                        self.tracer.instant_args(
+                            "retry_due",
+                            "fault",
+                            sched,
+                            0,
+                            now,
+                            vec![("retry", retry.to_string())],
+                        );
+                    }
                 }
             }
             ServeEvent::PrefetchDone { fleet, matrix } => {
@@ -969,10 +1176,22 @@ impl<'m> EigenServer<'m> {
                 // markers — a crash wiped the transfer mid-flight); the
                 // dispatch loop below then sees the matrix resident.
                 self.registries[fleet].finish_prefetch(matrix, now);
+                if self.tracer.is_on() {
+                    self.tracer.instant_args(
+                        "prefetch_done",
+                        "registry",
+                        fleet as u64,
+                        0,
+                        now,
+                        vec![("matrix", matrix.to_string())],
+                    );
+                }
             }
             // Pure wake-up: demotion bookkeeping moved at demote time;
             // the event only marks the transfer channel freeing up.
-            ServeEvent::DemoteDone { .. } => {}
+            ServeEvent::DemoteDone { fleet } => {
+                self.tracer.instant("demote_done", "registry", fleet as u64, 0, now);
+            }
         }
     }
 
@@ -1001,8 +1220,10 @@ impl<'m> EigenServer<'m> {
                         let rb = st.retries[rid].take().expect("checked above");
                         st.retry_ready.remove(i);
                         st.counters.retries += 1;
+                        self.tracer.add_count("retries", 1);
                         if failed_over {
                             st.counters.failovers += 1;
+                            self.tracer.add_count("failovers", 1);
                         }
                         self.execute(st, now, fleet, rb.matrix, rb.queries, rb.attempt)?;
                         progress = true;
@@ -1032,6 +1253,7 @@ impl<'m> EigenServer<'m> {
                     .expect("dispatch predicate guaranteed a fleet");
                 if failed_over {
                     st.counters.failovers += 1;
+                    self.tracer.add_count("failovers", 1);
                 }
                 self.execute(st, now, fleet, batch.matrix, batch.queries, 1)?;
                 progress = true;
@@ -1083,6 +1305,8 @@ impl<'m> EigenServer<'m> {
                     let t_d = st.pool.occupy_transfer(f, done, demote_s);
                     st.heap.push(t_d, ServeEvent::DemoteDone { fleet: f });
                 }
+                self.tracer.add_count("prefetch_issued", 1);
+                self.trace_tier_moves(f, now);
             }
         }
     }
@@ -1103,6 +1327,7 @@ impl<'m> EigenServer<'m> {
             let mut keep = Vec::with_capacity(queries.len());
             for q in queries {
                 if now - q.arrival_s > d {
+                    self.trace_shed(now, q.id, ShedReason::DeadlineExceeded.name());
                     st.records.push(unserved_record(
                         &q,
                         now,
@@ -1120,11 +1345,14 @@ impl<'m> EigenServer<'m> {
         }
         if st.plan.draw_failure() {
             st.counters.dispatch_failures += 1;
+            self.tracer.add_count("dispatch_failures", 1);
+            self.tracer.instant("dispatch_failed", "fault", fleet as u64, 0, now);
             retry_or_fail(st, now, matrix, queries, attempt);
             return Ok(());
         }
         let params: Vec<QueryParams> = queries.iter().map(|q| q.params).collect();
         let (outs, ev) = self.registries[fleet].solve_batch(matrix, &params)?;
+        self.trace_tier_moves(fleet, now);
         let start = now;
         let solve_dur = outs.iter().map(|o| o.stats.sim_seconds).fold(0.0f64, f64::max);
         let prepare_s = if ev.cold { ev.sim_cost_s } else { 0.0 };
@@ -1154,7 +1382,7 @@ impl<'m> EigenServer<'m> {
         st.prepare_s_total += prepare_s;
         st.served[matrix] += queries.len();
         for (q, o) in queries.iter().zip(&outs) {
-            st.records.push(QueryRecord {
+            let rec = QueryRecord {
                 id: q.id,
                 matrix: q.matrix,
                 priority: q.priority,
@@ -1173,7 +1401,67 @@ impl<'m> EigenServer<'m> {
                 outcome: QueryOutcome::Served,
                 retries: attempt - 1,
                 eigenvalues: o.eigenvalues.clone(),
-            });
+            };
+            // The batch occupies the fleet from at or after dispatch
+            // (queue wait already elapsed), pays promote + prepare before
+            // any lane solves, and no lane outlives the batch — so the
+            // component times can never exceed the end-to-end latency.
+            debug_assert!(
+                rec.queue_s + rec.prepare_s + rec.promote_s + rec.solve_s
+                    <= rec.latency_s() + 1e-9,
+                "per-query component times exceed end-to-end latency"
+            );
+            st.records.push(rec);
+        }
+        if self.tracer.is_on() {
+            let pid = fleet as u64;
+            self.tracer.span_args(
+                "batch",
+                "serve",
+                pid,
+                0,
+                start,
+                done - start,
+                vec![
+                    ("matrix", matrix.to_string()),
+                    ("queries", queries.len().to_string()),
+                    ("attempt", attempt.to_string()),
+                    ("cold", ev.cold.to_string()),
+                    ("promoted", ev.promoted.to_string()),
+                ],
+            );
+            // Per-query lanes (tid = query id + 1; tid 0 is the fleet's
+            // device/batch track): queue wait from arrival, then the
+            // promote/prepare charge the batch paid, then this lane's
+            // solve, retiring at the batch's completion.
+            let solve_start = done - solve_dur;
+            for (q, o) in queries.iter().zip(&outs) {
+                let lane = q.id + 1;
+                self.tracer.span("queue", "serve", pid, lane, q.arrival_s, start - q.arrival_s);
+                if ev.promoted {
+                    self.tracer.span("promote", "serve", pid, lane, start, ev.sim_cost_s);
+                }
+                if ev.cold {
+                    self.tracer.span(
+                        "prepare",
+                        "serve",
+                        pid,
+                        lane,
+                        solve_start - prepare_s,
+                        prepare_s,
+                    );
+                }
+                self.tracer.span("solve", "serve", pid, lane, solve_start, o.stats.sim_seconds);
+                self.tracer.instant("retire", "serve", pid, lane, done);
+            }
+            self.tracer.add_count("batches", 1);
+            self.tracer.add_count("served", queries.len() as u64);
+            if ev.cold {
+                self.tracer.add_count("cold_prepares", 1);
+            }
+            if ev.promoted {
+                self.tracer.add_count("promotions", 1);
+            }
         }
         st.in_flight[fleet] = Some(InFlight { matrix, queries, attempt, start, done });
         Ok(())
@@ -1424,6 +1712,8 @@ impl<'m> EigenServer<'m> {
             per_matrix,
             faults,
             result_checksum: checksum,
+            traced: self.tracer.is_on(),
+            extended_metrics: false,
             records,
         }
     }
@@ -1633,6 +1923,56 @@ mod tests {
         )
         .unwrap_err();
         assert!(matches!(err, ServeError::Config { field: "registry", .. }), "{err:?}");
+    }
+
+    #[test]
+    fn traced_runs_match_untraced_and_replay_byte_identically() {
+        let ms = matrices();
+        let spec = WorkloadSpec::uniform(7, 16, 500.0, &["WB-GO", "FL"], 6);
+        let arrivals = {
+            let server = small_server(&ms, usize::MAX);
+            spec.generate(|n| server.registry().index_of(n)).unwrap()
+        };
+        let plain = small_server(&ms, usize::MAX).run(&arrivals).unwrap();
+        let run_traced = || {
+            let mut s = small_server(&ms, usize::MAX).with_trace(TraceLevel::Span);
+            let rep = s.run(&arrivals).unwrap();
+            let tj = s.trace_json().expect("traced server exports a trace");
+            (rep, tj)
+        };
+        let (traced, t1) = run_traced();
+        assert_eq!(
+            plain.result_checksum, traced.result_checksum,
+            "tracing must not perturb a single served eigenvalue"
+        );
+        assert_eq!(plain.queries, traced.queries);
+        assert!(!plain.to_json().contains("\"timeline\""), "untraced JSON stays 0.8-shaped");
+        assert!(traced.to_json().contains("\"timeline\": [{\"id\": "));
+        // Fresh server, same workload: byte-identical trace file.
+        let (traced2, t2) = run_traced();
+        assert_eq!(traced.to_json(), traced2.to_json());
+        assert_eq!(t1, t2, "trace replay must be byte-identical");
+        assert!(t1.contains("\"traceEvents\": ["));
+        assert!(t1.contains("\"name\": \"batch\""));
+        assert!(t1.contains("\"queue_depth\""));
+        assert!(small_server(&ms, usize::MAX).trace_json().is_none());
+    }
+
+    #[test]
+    fn extended_metrics_flag_gates_p999_and_count() {
+        let ms = matrices();
+        let spec = WorkloadSpec::uniform(3, 8, 400.0, &["WB-GO", "FL"], 6);
+        let mut server = small_server(&ms, usize::MAX);
+        let arrivals = spec.generate(|n| server.registry().index_of(n)).unwrap();
+        let mut rep = server.run(&arrivals).unwrap();
+        let plain = rep.to_json();
+        assert!(!plain.contains("\"p999_s\"") && !plain.contains("\"count\""));
+        rep.extended_metrics = true;
+        let ext = rep.to_json();
+        assert!(ext.contains("\"p999_s\": "), "{ext}");
+        assert!(ext.contains(&format!("\"count\": {}", rep.queries)), "{ext}");
+        assert_eq!(rep.latency.count, rep.queries);
+        assert!(rep.latency.p999 >= rep.latency.p99 && rep.latency.p999 <= rep.latency.max);
     }
 
     #[test]

@@ -47,6 +47,25 @@ impl PhaseCursor {
     pub fn now(&self) -> f64 {
         self.cursor
     }
+
+    /// [`PhaseCursor::mark`] that also records the elapsed slice as a
+    /// `name` span (cat `"phase"`) on track (`pid`, `tid`) of `tracer`.
+    /// With the tracer off this is exactly `mark` plus one branch; the
+    /// returned delta is identical either way, so traced and untraced
+    /// phase accounting cannot diverge.
+    pub fn mark_traced(
+        &mut self,
+        fleet_now: f64,
+        tracer: &mut crate::trace::Tracer,
+        pid: u64,
+        tid: u64,
+        name: &str,
+    ) -> f64 {
+        let start = self.cursor;
+        let delta = self.mark(fleet_now);
+        tracer.span(name, "phase", pid, tid, start, delta);
+        delta
+    }
 }
 
 #[cfg(test)]
@@ -71,6 +90,33 @@ mod tests {
         devs[0].run_kernel(1.0);
         devs[1].run_kernel(3.0);
         assert_eq!(fleet_time(&devs), 3.0);
+    }
+
+    #[test]
+    fn mark_traced_matches_mark_and_records_spans() {
+        use crate::trace::{TraceEvent, TraceLevel, Tracer};
+        let mut plain = PhaseCursor::new();
+        let mut traced = PhaseCursor::new();
+        let mut off = Tracer::off();
+        let mut on = Tracer::new(TraceLevel::Span);
+        for t in [0.5, 0.5, 1.25] {
+            let d = plain.mark(t);
+            let d_off = traced.mark_traced(t, &mut off, 0, 0, "spmv");
+            assert_eq!(d, d_off);
+            let mut again = PhaseCursor::new();
+            again.cursor = plain.cursor - d; // rewind to the same start
+            assert_eq!(again.mark_traced(t, &mut on, 0, 0, "spmv"), d);
+        }
+        assert!(off.events().is_empty());
+        // Zero-width slice at t=0.5 is dropped: 2 spans, not 3.
+        assert_eq!(on.events().len(), 2);
+        match &on.events()[1] {
+            TraceEvent::Span { ts_s, dur_s, .. } => {
+                assert_eq!(*ts_s, 0.5);
+                assert_eq!(*dur_s, 0.75);
+            }
+            other => panic!("expected span, got {other:?}"),
+        }
     }
 
     #[test]

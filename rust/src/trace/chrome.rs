@@ -1,0 +1,175 @@
+//! Chrome trace-event JSON exporter (Perfetto / `chrome://tracing`).
+//!
+//! Emits the JSON-object flavor of the trace-event format:
+//! `{"traceEvents": [...], ...}` with `"ph": "X"` complete events
+//! (sim-time `ts`/`dur` in microseconds), `"ph": "i"` thread-scoped
+//! instants, `"ph": "C"` counter samples, and `"ph": "M"` process-name
+//! metadata. `pid` is the fleet (or a synthetic scheduler process) and
+//! `tid` the device or query lane, so a serve trace opens as one swim
+//! lane per fleet with device and per-query tracks inside it.
+//!
+//! Every field is serialized through the crate's stable-field-order
+//! JSON helpers and every timestamp is simulated, so two replays of one
+//! seeded run export byte-identical files.
+
+use crate::bench_util::{json_num, JsonObj};
+
+use super::counters::Counters;
+use super::TraceEvent;
+
+/// Sim seconds → trace-event microseconds, serialized.
+fn ts_us(ts_s: f64) -> String {
+    json_num(ts_s * 1e6)
+}
+
+fn args_obj(args: &[(&'static str, String)]) -> String {
+    let mut o = JsonObj::new();
+    for (k, v) in args {
+        o = o.raw(k, v.clone());
+    }
+    o.finish()
+}
+
+fn event_json(ev: &TraceEvent) -> String {
+    match ev {
+        TraceEvent::Span { name, cat, pid, tid, ts_s, dur_s, args } => {
+            let mut o = JsonObj::new()
+                .str("name", name)
+                .str("cat", cat)
+                .str("ph", "X")
+                .raw("pid", pid.to_string())
+                .raw("tid", tid.to_string())
+                .raw("ts", ts_us(*ts_s))
+                .raw("dur", ts_us(*dur_s));
+            if !args.is_empty() {
+                o = o.raw("args", args_obj(args));
+            }
+            o.finish()
+        }
+        TraceEvent::Instant { name, cat, pid, tid, ts_s, args } => {
+            let mut o = JsonObj::new()
+                .str("name", name)
+                .str("cat", cat)
+                .str("ph", "i")
+                .str("s", "t")
+                .raw("pid", pid.to_string())
+                .raw("tid", tid.to_string())
+                .raw("ts", ts_us(*ts_s));
+            if !args.is_empty() {
+                o = o.raw("args", args_obj(args));
+            }
+            o.finish()
+        }
+        TraceEvent::Counter { name, pid, ts_s, value } => JsonObj::new()
+            .str("name", name)
+            .str("ph", "C")
+            .raw("pid", pid.to_string())
+            .raw("tid", "0".to_string())
+            .raw("ts", ts_us(*ts_s))
+            .raw("args", JsonObj::new().num("value", *value).finish())
+            .finish(),
+    }
+}
+
+/// Export `events` plus a final [`Counters`] snapshot as Chrome
+/// trace-event JSON. `pid_names` labels processes in the viewer
+/// (e.g. `(1, "fleet 1")`); pass it pre-sorted by pid for byte
+/// stability (the tracer keeps names in a `BTreeMap`, so its iterator
+/// already is).
+pub fn chrome_trace_json<'a, I>(events: &[TraceEvent], counters: &Counters, pid_names: I) -> String
+where
+    I: IntoIterator<Item = (u64, &'a str)>,
+{
+    let mut entries: Vec<String> = Vec::with_capacity(events.len() + 4);
+    for (pid, name) in pid_names {
+        entries.push(
+            JsonObj::new()
+                .str("name", "process_name")
+                .str("ph", "M")
+                .raw("pid", pid.to_string())
+                .raw("tid", "0".to_string())
+                .raw("args", JsonObj::new().str("name", name).finish())
+                .finish(),
+        );
+    }
+    for ev in events {
+        entries.push(event_json(ev));
+    }
+    JsonObj::new()
+        .raw("traceEvents", format!("[{}]", entries.join(", ")))
+        .str("displayTimeUnit", "ms")
+        .raw(
+            "otherData",
+            JsonObj::new().raw("counters", counters.to_json()).finish(),
+        )
+        .finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_events() -> Vec<TraceEvent> {
+        vec![
+            TraceEvent::Span {
+                name: "solve".to_string(),
+                cat: "serve",
+                pid: 1,
+                tid: 3,
+                ts_s: 0.5,
+                dur_s: 0.25,
+                args: vec![("matrix", "\"WB-GO\"".to_string())],
+            },
+            TraceEvent::Instant {
+                name: "retire".to_string(),
+                cat: "serve",
+                pid: 1,
+                tid: 3,
+                ts_s: 0.75,
+                args: Vec::new(),
+            },
+            TraceEvent::Counter { name: "queue_depth".to_string(), pid: 2, ts_s: 0.1, value: 4.0 },
+        ]
+    }
+
+    #[test]
+    fn export_has_trace_event_shape() {
+        let mut c = Counters::new();
+        c.add("batches", 2);
+        let json = chrome_trace_json(&sample_events(), &c, [(1u64, "fleet 0")]);
+        assert!(json.starts_with("{\"traceEvents\": ["));
+        assert!(json.contains("\"ph\": \"M\""), "process_name metadata present");
+        assert!(json.contains("\"ph\": \"X\""), "complete event present");
+        assert!(json.contains("\"ph\": \"i\""), "instant present");
+        assert!(json.contains("\"s\": \"t\""), "instants are thread-scoped");
+        assert!(json.contains("\"ph\": \"C\""), "counter sample present");
+        assert!(json.contains("\"otherData\": {\"counters\": "));
+        assert!(json.contains("\"batches\": 2"));
+    }
+
+    #[test]
+    fn timestamps_convert_to_microseconds() {
+        let json = chrome_trace_json(&sample_events(), &Counters::new(), []);
+        assert!(json.contains("\"ts\": 500000, \"dur\": 250000"));
+        assert!(json.contains("\"ts\": 750000"));
+    }
+
+    #[test]
+    fn export_is_byte_stable() {
+        let mut c = Counters::new();
+        c.set_gauge("queue_depth", 4.0);
+        let a = chrome_trace_json(&sample_events(), &c, [(1u64, "fleet 0"), (2, "scheduler")]);
+        let b = chrome_trace_json(&sample_events(), &c, [(1u64, "fleet 0"), (2, "scheduler")]);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn empty_trace_is_still_valid_shape() {
+        let json = chrome_trace_json(&[], &Counters::new(), []);
+        assert_eq!(
+            json,
+            "{\"traceEvents\": [], \"displayTimeUnit\": \"ms\", \
+             \"otherData\": {\"counters\": {\"counts\": {}, \"gauges\": {}}}}"
+        );
+    }
+}

@@ -1,0 +1,122 @@
+//! Named counter/gauge registry snapshotted into reports.
+//!
+//! Two families: **monotonic counters** (`u64`, only ever incremented —
+//! arrivals, batches, crashes) and **gauges** (`f64`, last-write-wins —
+//! queue depth, tier residency). Both live in `BTreeMap`s so every
+//! iteration — and therefore every JSON snapshot — is in sorted key
+//! order, independent of insertion history (detlint D03: no unordered
+//! maps on deterministic paths).
+
+use std::collections::BTreeMap;
+
+use crate::bench_util::{json_num, JsonObj};
+
+/// Registry of named monotonic counters and gauges. `BTreeMap`-backed,
+/// so snapshots enumerate keys in sorted order — byte-stable across
+/// replays regardless of the order events arrived in.
+#[derive(Clone, Debug, Default)]
+pub struct Counters {
+    counts: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+}
+
+impl Counters {
+    /// An empty registry.
+    pub fn new() -> Self {
+        Counters::default()
+    }
+
+    /// Add `delta` to the monotonic counter `name` (created at 0).
+    pub fn add(&mut self, name: &str, delta: u64) {
+        *self.counts.entry(name.to_string()).or_insert(0) += delta;
+    }
+
+    /// Set gauge `name` to `value` (last write wins).
+    pub fn set_gauge(&mut self, name: &str, value: f64) {
+        self.gauges.insert(name.to_string(), value);
+    }
+
+    /// Current value of counter `name` (0 when never incremented).
+    pub fn count(&self, name: &str) -> u64 {
+        self.counts.get(name).copied().unwrap_or(0)
+    }
+
+    /// Current value of gauge `name`, if ever set.
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    /// Counters in sorted name order.
+    pub fn counts(&self) -> impl Iterator<Item = (&str, u64)> {
+        self.counts.iter().map(|(k, v)| (k.as_str(), *v))
+    }
+
+    /// Gauges in sorted name order.
+    pub fn gauges(&self) -> impl Iterator<Item = (&str, f64)> {
+        self.gauges.iter().map(|(k, v)| (k.as_str(), *v))
+    }
+
+    /// True when nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.counts.is_empty() && self.gauges.is_empty()
+    }
+
+    /// Snapshot as a JSON object: `{"counts": {..}, "gauges": {..}}`,
+    /// keys in sorted order — byte-identical across replays.
+    pub fn to_json(&self) -> String {
+        let mut counts = JsonObj::new();
+        for (k, v) in &self.counts {
+            counts = counts.raw(k, v.to_string());
+        }
+        let mut gauges = JsonObj::new();
+        for (k, v) in &self.gauges {
+            gauges = gauges.raw(k, json_num(*v));
+        }
+        JsonObj::new()
+            .raw("counts", counts.finish())
+            .raw("gauges", gauges.finish())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_accumulate_and_default_to_zero() {
+        let mut c = Counters::new();
+        assert_eq!(c.count("batches"), 0);
+        c.add("batches", 1);
+        c.add("batches", 2);
+        c.add("arrivals", 5);
+        assert_eq!(c.count("batches"), 3);
+        assert_eq!(c.count("arrivals"), 5);
+    }
+
+    #[test]
+    fn gauges_are_last_write_wins() {
+        let mut c = Counters::new();
+        assert_eq!(c.gauge("queue_depth"), None);
+        c.set_gauge("queue_depth", 4.0);
+        c.set_gauge("queue_depth", 2.0);
+        assert_eq!(c.gauge("queue_depth"), Some(2.0));
+    }
+
+    #[test]
+    fn json_snapshot_is_sorted_regardless_of_insertion_order() {
+        let mut a = Counters::new();
+        a.add("zeta", 1);
+        a.add("alpha", 2);
+        a.set_gauge("mid", 0.5);
+        let mut b = Counters::new();
+        b.set_gauge("mid", 0.5);
+        b.add("alpha", 2);
+        b.add("zeta", 1);
+        assert_eq!(a.to_json(), b.to_json());
+        assert_eq!(
+            a.to_json(),
+            "{\"counts\": {\"alpha\": 2, \"zeta\": 1}, \"gauges\": {\"mid\": 0.5}}"
+        );
+    }
+}

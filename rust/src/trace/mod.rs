@@ -1,0 +1,484 @@
+//! Deterministic, sim-clock-driven tracing: spans, instants, and counter
+//! samples stamped with **simulated** seconds, never wallclock.
+//!
+//! The paper's headline numbers rest on knowing where time goes —
+//! per-phase breakdowns, transfer/compute overlap, per-iteration
+//! convergence — and this module records exactly that, from the clocks
+//! the system already keeps: the coordinator's fleet-critical-path
+//! [`PhaseCursor`](crate::sim::PhaseCursor) deltas, the serve runtime's
+//! event-heap timeline, and the per-iteration α/β/residual stream of
+//! [`IterationObserver`](crate::api::IterationObserver). Because every
+//! timestamp is simulated, two traced replays of one workload seed
+//! produce **byte-identical** trace files — the same equivalence proof
+//! style as every report in the tree — and detlint's D01 (no wallclock)
+//! holds in this directory like everywhere else.
+//!
+//! Shape: a [`Tracer`] is a cheap handle that is either **off** (the
+//! default — every emit method is a branch on a `None` and returns, no
+//! allocation, no sink call; D05 hot-path regions are untouched) or
+//! **on**, buffering [`TraceEvent`]s in a [`MemorySink`] next to a
+//! [`Counters`] registry (BTreeMap-backed, D03-safe). The buffered
+//! events export as Chrome trace-event JSON ([`chrome_trace_json`],
+//! loadable in Perfetto / `chrome://tracing`): `pid` = fleet, `tid` =
+//! device or query lane, complete events with sim-time `ts`/`dur` in
+//! microseconds, counter tracks for queue depth and tier residency.
+//!
+//! Enable via `Solver::builder().trace(TraceLevel::Span)`,
+//! `EigenServer::with_trace`, or the CLI's `--trace FILE`
+//! (`--trace-level span|iter`). Results are bit-identical traced vs
+//! untraced: tracing only *reads* the clocks the solve already advances.
+
+pub mod chrome;
+pub mod counters;
+pub mod observer;
+
+pub use chrome::chrome_trace_json;
+pub use counters::Counters;
+pub use observer::TracingObserver;
+
+use crate::api::IterationEvent;
+use crate::bench_util::json_num;
+
+/// How much the tracer records.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TraceLevel {
+    /// Phase/query spans and lifecycle instants only.
+    #[default]
+    Span,
+    /// Spans plus per-Lanczos-iteration α/β/residual telemetry (adds one
+    /// small tridiagonal solve per iteration to compute the residual,
+    /// exactly like attaching an observer).
+    Iter,
+}
+
+impl TraceLevel {
+    /// Stable lowercase name, as accepted by `--trace-level`.
+    pub fn name(&self) -> &'static str {
+        match self {
+            TraceLevel::Span => "span",
+            TraceLevel::Iter => "iter",
+        }
+    }
+}
+
+impl std::str::FromStr for TraceLevel {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "span" => Ok(TraceLevel::Span),
+            "iter" => Ok(TraceLevel::Iter),
+            other => Err(format!("bad trace level '{other}' (expected span or iter)")),
+        }
+    }
+}
+
+/// One recorded trace event. All times are simulated seconds; the Chrome
+/// exporter converts to microseconds. `args` values are pre-serialized
+/// JSON fragments (via [`crate::bench_util::json_num`] and friends) so
+/// field formatting is byte-stable.
+#[derive(Clone, Debug)]
+pub enum TraceEvent {
+    /// A completed duration: `[ts_s, ts_s + dur_s]` on track
+    /// (`pid`, `tid`).
+    Span {
+        name: String,
+        cat: &'static str,
+        pid: u64,
+        tid: u64,
+        ts_s: f64,
+        dur_s: f64,
+        args: Vec<(&'static str, String)>,
+    },
+    /// A point event on track (`pid`, `tid`).
+    Instant {
+        name: String,
+        cat: &'static str,
+        pid: u64,
+        tid: u64,
+        ts_s: f64,
+        args: Vec<(&'static str, String)>,
+    },
+    /// A counter-track sample: `name` has `value` at `ts_s` on `pid`.
+    Counter { name: String, pid: u64, ts_s: f64, value: f64 },
+}
+
+impl TraceEvent {
+    /// The event's simulated timestamp.
+    pub fn ts_s(&self) -> f64 {
+        match self {
+            TraceEvent::Span { ts_s, .. }
+            | TraceEvent::Instant { ts_s, .. }
+            | TraceEvent::Counter { ts_s, .. } => *ts_s,
+        }
+    }
+
+    /// The event's name.
+    pub fn name(&self) -> &str {
+        match self {
+            TraceEvent::Span { name, .. }
+            | TraceEvent::Instant { name, .. }
+            | TraceEvent::Counter { name, .. } => name,
+        }
+    }
+}
+
+/// Where recorded events go. The two built-ins are [`NullSink`] (drops
+/// everything — the no-op end of the zero-cost story) and [`MemorySink`]
+/// (buffers for export). The [`Tracer`] handle uses a `MemorySink`
+/// internally; the trait is the extension point for harnesses that want
+/// to stream events elsewhere.
+pub trait TraceSink {
+    /// Record one event.
+    fn record(&mut self, ev: TraceEvent);
+    /// Everything recorded so far (empty for sinks that discard).
+    fn events(&self) -> &[TraceEvent];
+}
+
+/// Discards every event. Recording into it is pure: no state changes,
+/// no allocation beyond the caller's event construction.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NullSink;
+
+impl TraceSink for NullSink {
+    fn record(&mut self, _ev: TraceEvent) {}
+
+    fn events(&self) -> &[TraceEvent] {
+        &[]
+    }
+}
+
+/// Buffers events in memory, in emission order.
+#[derive(Clone, Debug, Default)]
+pub struct MemorySink {
+    events: Vec<TraceEvent>,
+}
+
+impl TraceSink for MemorySink {
+    fn record(&mut self, ev: TraceEvent) {
+        self.events.push(ev);
+    }
+
+    fn events(&self) -> &[TraceEvent] {
+        &self.events
+    }
+}
+
+/// The enabled tracer's state, boxed behind [`Tracer`] so the disabled
+/// handle is a single `None` word.
+#[derive(Clone, Debug)]
+struct TraceBuf {
+    level: TraceLevel,
+    sink: MemorySink,
+    counters: Counters,
+    /// Process (`pid`) display names for the Chrome export, sorted.
+    pid_names: std::collections::BTreeMap<u64, String>,
+}
+
+/// The tracing handle threaded through the solve and serve stacks.
+///
+/// Disabled (the [`Tracer::off`] / `Default` state) it is a `None`:
+/// every emit method returns after one branch, allocating nothing — the
+/// traced and untraced hot paths differ by a predictable branch only.
+/// Enabled, it buffers [`TraceEvent`]s and accumulates [`Counters`],
+/// exportable with [`Tracer::chrome_json`].
+#[derive(Clone, Debug, Default)]
+pub struct Tracer {
+    inner: Option<Box<TraceBuf>>,
+}
+
+impl Tracer {
+    /// The disabled tracer (records nothing, costs one branch per emit).
+    pub fn off() -> Self {
+        Tracer { inner: None }
+    }
+
+    /// An enabled tracer recording at `level` into a fresh memory sink.
+    pub fn new(level: TraceLevel) -> Self {
+        Tracer {
+            inner: Some(Box::new(TraceBuf {
+                level,
+                sink: MemorySink::default(),
+                counters: Counters::new(),
+                pid_names: std::collections::BTreeMap::new(),
+            })),
+        }
+    }
+
+    /// True when recording.
+    pub fn is_on(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// True when per-iteration telemetry should be produced (enabled at
+    /// [`TraceLevel::Iter`]).
+    pub fn wants_iter(&self) -> bool {
+        self.inner
+            .as_ref()
+            .is_some_and(|b| b.level == TraceLevel::Iter)
+    }
+
+    /// The recording level, if enabled.
+    pub fn level(&self) -> Option<TraceLevel> {
+        self.inner.as_ref().map(|b| b.level)
+    }
+
+    /// Name process `pid` in the Chrome export (e.g. `fleet 1`).
+    pub fn name_pid(&mut self, pid: u64, name: &str) {
+        if let Some(b) = self.inner.as_mut() {
+            b.pid_names.insert(pid, name.to_string());
+        }
+    }
+
+    /// Record a completed span. Zero- and negative-duration spans are
+    /// dropped (phase marks frequently advance by exactly 0 simulated
+    /// seconds; a 0-width slice carries no information).
+    pub fn span(
+        &mut self,
+        name: &str,
+        cat: &'static str,
+        pid: u64,
+        tid: u64,
+        ts_s: f64,
+        dur_s: f64,
+    ) {
+        let Some(b) = self.inner.as_mut() else { return };
+        if dur_s <= 0.0 {
+            return;
+        }
+        b.sink.record(TraceEvent::Span {
+            name: name.to_string(),
+            cat,
+            pid,
+            tid,
+            ts_s,
+            dur_s,
+            args: Vec::new(),
+        });
+    }
+
+    /// [`Tracer::span`] with pre-serialized JSON `args`.
+    pub fn span_args(
+        &mut self,
+        name: &str,
+        cat: &'static str,
+        pid: u64,
+        tid: u64,
+        ts_s: f64,
+        dur_s: f64,
+        args: Vec<(&'static str, String)>,
+    ) {
+        let Some(b) = self.inner.as_mut() else { return };
+        if dur_s <= 0.0 {
+            return;
+        }
+        b.sink
+            .record(TraceEvent::Span { name: name.to_string(), cat, pid, tid, ts_s, dur_s, args });
+    }
+
+    /// Record a point event.
+    pub fn instant(&mut self, name: &str, cat: &'static str, pid: u64, tid: u64, ts_s: f64) {
+        let Some(b) = self.inner.as_mut() else { return };
+        b.sink.record(TraceEvent::Instant {
+            name: name.to_string(),
+            cat,
+            pid,
+            tid,
+            ts_s,
+            args: Vec::new(),
+        });
+    }
+
+    /// [`Tracer::instant`] with pre-serialized JSON `args`.
+    pub fn instant_args(
+        &mut self,
+        name: &str,
+        cat: &'static str,
+        pid: u64,
+        tid: u64,
+        ts_s: f64,
+        args: Vec<(&'static str, String)>,
+    ) {
+        let Some(b) = self.inner.as_mut() else { return };
+        b.sink
+            .record(TraceEvent::Instant { name: name.to_string(), cat, pid, tid, ts_s, args });
+    }
+
+    /// Record a counter-track sample and mirror it into the gauge
+    /// registry (last write wins there; the track keeps every sample).
+    pub fn counter(&mut self, name: &str, pid: u64, ts_s: f64, value: f64) {
+        let Some(b) = self.inner.as_mut() else { return };
+        b.counters.set_gauge(name, value);
+        b.sink
+            .record(TraceEvent::Counter { name: name.to_string(), pid, ts_s, value });
+    }
+
+    /// Bump a monotonic counter in the registry (no per-sample event).
+    pub fn add_count(&mut self, name: &str, delta: u64) {
+        if let Some(b) = self.inner.as_mut() {
+            b.counters.add(name, delta);
+        }
+    }
+
+    /// Record one Lanczos iteration's telemetry (α, β, top-Ritz residual
+    /// estimate) as an instant at its simulated completion time. Used by
+    /// [`TracingObserver`] and the solver's iter-level hook.
+    pub fn iteration(&mut self, pid: u64, tid: u64, ev: &IterationEvent) {
+        let Some(b) = self.inner.as_mut() else { return };
+        b.sink.record(TraceEvent::Instant {
+            name: "iteration".to_string(),
+            cat: "iter",
+            pid,
+            tid,
+            ts_s: ev.sim_seconds,
+            args: vec![
+                ("iter", ev.iter.to_string()),
+                ("alpha", json_num(ev.alpha)),
+                ("beta", json_num(ev.beta)),
+                ("residual", json_num(ev.residual_estimate)),
+            ],
+        });
+    }
+
+    /// Everything recorded so far (empty when disabled).
+    pub fn events(&self) -> &[TraceEvent] {
+        match &self.inner {
+            Some(b) => b.sink.events(),
+            None => &[],
+        }
+    }
+
+    /// The counter registry (None when disabled).
+    pub fn counters(&self) -> Option<&Counters> {
+        self.inner.as_ref().map(|b| &b.counters)
+    }
+
+    /// Export everything recorded as Chrome trace-event JSON (None when
+    /// disabled). Byte-identical across replays of one seeded run.
+    pub fn chrome_json(&self) -> Option<String> {
+        let b = self.inner.as_ref()?;
+        Some(chrome::chrome_trace_json(
+            b.sink.events(),
+            &b.counters,
+            b.pid_names.iter().map(|(p, n)| (*p, n.as_str())),
+        ))
+    }
+
+    /// Drop everything recorded so far, keeping the tracer enabled at
+    /// the same level.
+    pub fn clear(&mut self) {
+        if let Some(b) = self.inner.as_mut() {
+            b.sink = MemorySink::default();
+            b.counters = Counters::new();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::PhaseBreakdown;
+
+    fn iter_ev(i: usize) -> IterationEvent {
+        IterationEvent {
+            iter: i,
+            alpha: 1.5,
+            beta: 0.25,
+            residual_estimate: 1e-3,
+            sim_seconds: 0.5 + i as f64,
+            phases: PhaseBreakdown::default(),
+        }
+    }
+
+    #[test]
+    fn disabled_tracer_records_nothing() {
+        let mut t = Tracer::off();
+        assert!(!t.is_on() && !t.wants_iter());
+        t.span("spmv", "phase", 0, 0, 0.0, 1.0);
+        t.instant("arrival", "serve", 0, 0, 0.5);
+        t.counter("queue_depth", 0, 0.5, 3.0);
+        t.add_count("batches", 1);
+        t.iteration(0, 0, &iter_ev(0));
+        assert!(t.events().is_empty());
+        assert!(t.counters().is_none());
+        assert!(t.chrome_json().is_none());
+    }
+
+    #[test]
+    fn null_sink_discards_and_memory_sink_keeps_order() {
+        let mut null = NullSink;
+        let mut mem = MemorySink::default();
+        for i in 0..3u64 {
+            let ev = TraceEvent::Instant {
+                name: format!("e{i}"),
+                cat: "t",
+                pid: 0,
+                tid: i,
+                ts_s: i as f64,
+                args: Vec::new(),
+            };
+            null.record(ev.clone());
+            mem.record(ev);
+        }
+        assert!(null.events().is_empty());
+        assert_eq!(mem.events().len(), 3);
+        assert_eq!(mem.events()[2].name(), "e2");
+    }
+
+    #[test]
+    fn spans_drop_zero_duration_and_keep_positive() {
+        let mut t = Tracer::new(TraceLevel::Span);
+        t.span("spmv", "phase", 0, 0, 0.0, 0.0);
+        t.span("spmv", "phase", 0, 0, 0.0, 0.125);
+        assert_eq!(t.events().len(), 1);
+        assert_eq!(t.events()[0].ts_s(), 0.0);
+        assert!(t.is_on() && !t.wants_iter());
+        assert_eq!(t.level(), Some(TraceLevel::Span));
+    }
+
+    #[test]
+    fn iter_level_wants_iteration_telemetry() {
+        let mut t = Tracer::new(TraceLevel::Iter);
+        assert!(t.wants_iter());
+        t.iteration(0, 7, &iter_ev(2));
+        assert_eq!(t.events().len(), 1);
+        match &t.events()[0] {
+            TraceEvent::Instant { name, tid, ts_s, args, .. } => {
+                assert_eq!(name, "iteration");
+                assert_eq!(*tid, 7);
+                assert_eq!(*ts_s, 2.5);
+                assert!(args.iter().any(|(k, v)| *k == "iter" && v == "2"));
+            }
+            other => panic!("expected an instant, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn counters_mirror_into_gauges_and_counts() {
+        let mut t = Tracer::new(TraceLevel::Span);
+        t.counter("queue_depth", 0, 0.1, 4.0);
+        t.counter("queue_depth", 0, 0.2, 2.0);
+        t.add_count("batches", 3);
+        let c = t.counters().unwrap();
+        assert_eq!(c.gauge("queue_depth"), Some(2.0));
+        assert_eq!(c.count("batches"), 3);
+        assert_eq!(t.events().len(), 2, "each counter sample is a track event");
+    }
+
+    #[test]
+    fn clear_keeps_the_level() {
+        let mut t = Tracer::new(TraceLevel::Iter);
+        t.instant("x", "t", 0, 0, 0.0);
+        t.clear();
+        assert!(t.events().is_empty());
+        assert!(t.wants_iter(), "clear keeps the tracer enabled");
+    }
+
+    #[test]
+    fn trace_level_parses_and_names() {
+        assert_eq!("span".parse::<TraceLevel>().unwrap(), TraceLevel::Span);
+        assert_eq!("iter".parse::<TraceLevel>().unwrap(), TraceLevel::Iter);
+        assert!("verbose".parse::<TraceLevel>().is_err());
+        assert_eq!(TraceLevel::Iter.name(), "iter");
+    }
+}

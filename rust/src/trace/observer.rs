@@ -1,0 +1,88 @@
+//! [`TracingObserver`]: an [`IterationObserver`] adapter that records
+//! each Lanczos iteration's α/β/residual telemetry into a [`Tracer`]
+//! instead of throwing it away.
+//!
+//! The observer hook already computes everything a convergence study
+//! needs (`api/observer.rs`); this adapter just forwards each event to
+//! [`Tracer::iteration`], stamped at the iteration's simulated
+//! completion time, and always continues — compose it with
+//! [`ToleranceStop`](crate::api::ToleranceStop) via a wrapper if you
+//! want early exit too.
+
+use crate::api::{IterationEvent, IterationObserver, ObserverControl};
+
+use super::Tracer;
+
+/// Records every iteration into a [`Tracer`] as an `"iteration"`
+/// instant (cat `"iter"`) on track (`pid`, `tid`), then continues.
+#[derive(Debug)]
+pub struct TracingObserver<'a> {
+    tracer: &'a mut Tracer,
+    pid: u64,
+    tid: u64,
+}
+
+impl<'a> TracingObserver<'a> {
+    /// Record onto track (0, 0) — the right default for one-shot solves.
+    pub fn new(tracer: &'a mut Tracer) -> Self {
+        TracingObserver { tracer, pid: 0, tid: 0 }
+    }
+
+    /// Record onto an explicit (`pid`, `tid`) track, e.g. a fleet and
+    /// query lane inside a serve trace.
+    pub fn with_ids(tracer: &'a mut Tracer, pid: u64, tid: u64) -> Self {
+        TracingObserver { tracer, pid, tid }
+    }
+}
+
+impl IterationObserver for TracingObserver<'_> {
+    fn on_iteration(&mut self, event: &IterationEvent) -> ObserverControl {
+        self.tracer.iteration(self.pid, self.tid, event);
+        ObserverControl::Continue
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::PhaseBreakdown;
+    use crate::trace::{TraceEvent, TraceLevel};
+
+    fn ev(iter: usize, residual: f64) -> IterationEvent {
+        IterationEvent {
+            iter,
+            alpha: 2.0,
+            beta: 0.5,
+            residual_estimate: residual,
+            sim_seconds: iter as f64 * 0.1,
+            phases: PhaseBreakdown::default(),
+        }
+    }
+
+    #[test]
+    fn records_each_iteration_and_continues() {
+        let mut tracer = Tracer::new(TraceLevel::Iter);
+        let mut obs = TracingObserver::with_ids(&mut tracer, 1, 4);
+        for i in 0..3 {
+            let ctl = obs.on_iteration(&ev(i, 10f64.powi(-(i as i32))));
+            assert!(matches!(ctl, ObserverControl::Continue));
+        }
+        assert_eq!(tracer.events().len(), 3);
+        match &tracer.events()[1] {
+            TraceEvent::Instant { name, pid, tid, args, .. } => {
+                assert_eq!(name, "iteration");
+                assert_eq!((*pid, *tid), (1, 4));
+                assert!(args.iter().any(|(k, v)| *k == "residual" && v == "0.1"));
+            }
+            other => panic!("expected instant, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn disabled_tracer_makes_the_observer_a_no_op() {
+        let mut tracer = Tracer::off();
+        let mut obs = TracingObserver::new(&mut tracer);
+        assert!(matches!(obs.on_iteration(&ev(0, 1.0)), ObserverControl::Continue));
+        assert!(tracer.events().is_empty());
+    }
+}

@@ -237,6 +237,58 @@ fn bulk_priority_rides_bigger_batches_on_average() {
 }
 
 #[test]
+fn per_query_component_times_never_exceed_end_to_end_latency() {
+    // Accounting invariant: for every served query, the attributed
+    // components (queue wait + cold prepare + tier promotion + solve)
+    // must fit inside the end-to-end latency — under eviction pressure
+    // AND with a host spill tier, so cold re-prepares and demote/promote
+    // round-trips both contribute nonzero components.
+    let ms = matrices();
+    let budget = one_matrix_budget(&ms);
+    let mut reg = MatrixRegistry::new(
+        solver(6, 1),
+        RegistryConfig {
+            budget_bytes: budget,
+            host_budget_bytes: 64 << 20,
+            ..RegistryConfig::default()
+        },
+    );
+    for (name, m) in &ms {
+        reg.register(name, m);
+    }
+    let mut server = EigenServer::new(
+        reg,
+        CoalescerConfig { max_batch: 4, max_wait_s: 0.005, bulk_wait_factor: 4.0 },
+    );
+    let arrivals = {
+        let r = server.registry();
+        spec(61).generate(|n| r.index_of(n)).expect("workload")
+    };
+    let report = server.run(&arrivals).expect("serve run");
+    assert!(
+        report.promotions > 0 || report.prepares > ms.len(),
+        "pressure budget must exercise the cold/promote paths: {report:?}"
+    );
+    for r in &report.records {
+        for (name, v) in [
+            ("queue_s", r.queue_s),
+            ("prepare_s", r.prepare_s),
+            ("promote_s", r.promote_s),
+            ("solve_s", r.solve_s),
+        ] {
+            assert!(v >= 0.0, "query {}: negative {name} ({v})", r.id);
+        }
+        let sum = r.queue_s + r.prepare_s + r.promote_s + r.solve_s;
+        assert!(
+            sum <= r.latency_s() + 1e-9,
+            "query {}: components sum to {sum} but end-to-end latency is {}",
+            r.id,
+            r.latency_s()
+        );
+    }
+}
+
+#[test]
 fn report_json_shape_is_stable() {
     let ms = matrices();
     let report = run_serve(&ms, usize::MAX, &spec(51));

@@ -1,0 +1,244 @@
+//! Integration tests of the deterministic tracing layer (`topk_eigen::trace`)
+//! threaded through the serve runtime:
+//!
+//! * a traced, *faulty, tiered* serve run replays **byte-identically** —
+//!   report JSON and Chrome trace JSON both — at fleets ∈ {1, 2};
+//! * tracing is observation only: the traced run's results are
+//!   bit-identical to the untraced run's, and the untraced report keeps
+//!   its 0.8 JSON bytes (no `timeline` block);
+//! * the Chrome export is structurally valid JSON (balanced, finite,
+//!   carrying the expected `ph` phases) that Perfetto can load;
+//! * the disabled tracer and the [`NullSink`] are pure no-ops.
+
+use topk_eigen::serve::{
+    CoalescerConfig, EigenServer, MatrixRegistry, RegistryConfig, ServeReport, WorkloadSpec,
+};
+use topk_eigen::sim::{FaultSpec, Placement};
+use topk_eigen::sparse::suite;
+use topk_eigen::trace::{NullSink, TraceSink};
+use topk_eigen::{Csr, PrecisionConfig, Solver, TraceLevel, Tracer};
+
+fn solver(k: usize, devices: usize) -> Solver {
+    Solver::builder()
+        .k(k)
+        .precision(PrecisionConfig::FDF)
+        .devices(devices)
+        .build()
+        .expect("config")
+}
+
+fn matrices() -> Vec<(String, Csr)> {
+    vec![
+        ("WB-GO".into(), suite::find("WB-GO").unwrap().generate_csr(0.3, 1)),
+        ("FL".into(), suite::find("FL").unwrap().generate_csr(0.3, 1)),
+    ]
+}
+
+/// A device budget that fits exactly one of the prepared states, so the
+/// run demotes/promotes through the host tier constantly.
+fn one_matrix_budget(ms: &[(String, Csr)]) -> usize {
+    let mut s = solver(6, 1);
+    let bytes: Vec<usize> = ms
+        .iter()
+        .map(|(_, m)| s.prepare(m).expect("prepare").resident_bytes())
+        .collect();
+    *bytes.iter().max().unwrap() + bytes.iter().min().unwrap() / 2
+}
+
+/// Tiered replica registry under eviction pressure.
+fn registry<'m>(ms: &'m [(String, Csr)], budget: usize) -> MatrixRegistry<'m> {
+    let mut reg = MatrixRegistry::new(
+        solver(6, 1),
+        RegistryConfig {
+            budget_bytes: budget,
+            host_budget_bytes: 64 << 20,
+            ssd_budget_bytes: 64 << 20,
+            ..RegistryConfig::default()
+        },
+    );
+    for (name, m) in ms {
+        reg.register(name, m);
+    }
+    reg
+}
+
+fn spec(seed: u64) -> WorkloadSpec {
+    let mut s = WorkloadSpec::uniform(seed, 24, 400.0, &["WB-GO", "FL"], 6);
+    s.k_choices = vec![4, 6];
+    s.bulk_fraction = 0.25;
+    s
+}
+
+/// Seeded random crashes + transient failures + a deadline — the chaos
+/// suite's replay mix, here layered on top of spill tiers.
+fn faults() -> FaultSpec {
+    let mut f = FaultSpec::none();
+    f.seed = 99;
+    f.crash_rate = 30.0;
+    f.repair_s = 0.01;
+    f.fail_prob = 0.15;
+    f.deadline_s = Some(0.5);
+    f
+}
+
+/// One complete serve run on a FRESH server (registry stats and caches
+/// are lifetime state, so byte-identical replay requires a cold start).
+fn run(
+    ms: &[(String, Csr)],
+    fleets: usize,
+    traced: bool,
+    wl_seed: u64,
+) -> (ServeReport, Option<String>) {
+    let budget = one_matrix_budget(ms);
+    let regs: Vec<MatrixRegistry> = (0..fleets).map(|_| registry(ms, budget)).collect();
+    let mut server = EigenServer::with_fleets(
+        regs,
+        CoalescerConfig { max_batch: 4, max_wait_s: 0.005, bulk_wait_factor: 4.0 },
+        Placement::Replicate,
+    )
+    .expect("fleet config")
+    .with_prefetch_depth(2);
+    if traced {
+        server = server.with_trace(TraceLevel::Span);
+    }
+    let arrivals = {
+        let r = server.registry();
+        spec(wl_seed).generate(|n| r.index_of(n)).expect("workload")
+    };
+    let report = server.run_with_faults(&arrivals, &faults()).expect("faulty run");
+    let trace = server.trace_json();
+    (report, trace)
+}
+
+#[test]
+fn traced_faulty_tiered_serve_replays_byte_identically() {
+    let ms = matrices();
+    for fleets in [1usize, 2] {
+        let (ra, ta) = run(&ms, fleets, true, 11);
+        let (rb, tb) = run(&ms, fleets, true, 11);
+        assert_eq!(
+            ra.to_json(),
+            rb.to_json(),
+            "fleets={fleets}: traced report must replay byte-identically"
+        );
+        let ta = ta.expect("traced run must export a trace");
+        let tb = tb.expect("traced run must export a trace");
+        assert_eq!(ta, tb, "fleets={fleets}: trace must replay byte-identically");
+        // The trace must actually have recorded the run, not just exist.
+        assert!(ta.contains("\"ph\": \"X\""), "fleets={fleets}: no spans in trace");
+        assert!(ta.contains("\"name\": \"batch\""), "fleets={fleets}: no batch spans");
+        assert!(
+            ta.contains("\"name\": \"tier_move\""),
+            "fleets={fleets}: pressure run must log registry tier transitions"
+        );
+        assert!(ta.contains("\"queue_depth\""), "fleets={fleets}: no counter track");
+        // And a different workload seed records a genuinely different trace.
+        let (_, tc) = run(&ms, fleets, true, 12);
+        assert_ne!(ta, tc.expect("trace"), "fleets={fleets}: seeds must matter");
+    }
+}
+
+#[test]
+fn tracing_is_observation_only() {
+    let ms = matrices();
+    let (plain, no_trace) = run(&ms, 2, false, 21);
+    let (traced, trace) = run(&ms, 2, true, 21);
+    // Same results, bit for bit.
+    assert_eq!(
+        plain.result_checksum, traced.result_checksum,
+        "tracing must not perturb a single result bit"
+    );
+    assert_eq!(plain.queries, traced.queries);
+    assert!(no_trace.is_none(), "an untraced server must export no trace");
+    assert!(trace.is_some());
+    // The untraced report keeps its 0.8 bytes; the traced one gains the
+    // per-query timeline block (and nothing is lost).
+    let pj = plain.to_json();
+    let tj = traced.to_json();
+    assert!(!pj.contains("\"timeline\""), "untraced JSON must stay 0.8-shaped: {pj}");
+    assert!(tj.contains("\"timeline\": [{\"id\": "), "traced JSON must carry the timeline");
+    assert!(pj.contains("\"result_checksum\"") && tj.contains("\"result_checksum\""));
+}
+
+/// Minimal structural JSON scan: every brace/bracket balances outside of
+/// strings, escapes are honored, and the document is one object.
+fn assert_balanced_json(json: &str) {
+    let (mut depth, mut in_str, mut esc) = (0i64, false, false);
+    for (i, c) in json.char_indices() {
+        if esc {
+            esc = false;
+            continue;
+        }
+        match c {
+            '\\' if in_str => esc = true,
+            '"' => in_str = !in_str,
+            '{' | '[' if !in_str => depth += 1,
+            '}' | ']' if !in_str => {
+                depth -= 1;
+                assert!(depth >= 0, "unbalanced close at byte {i}");
+            }
+            _ => {}
+        }
+        if depth == 0 && i + 1 < json.len() {
+            assert_eq!(i, 0, "trailing content after the root object closes");
+        }
+    }
+    assert!(!in_str, "unterminated string");
+    assert_eq!(depth, 0, "unbalanced braces/brackets");
+}
+
+#[test]
+fn chrome_export_is_structurally_valid_json() {
+    let ms = matrices();
+    let (_, trace) = run(&ms, 2, true, 31);
+    let json = trace.expect("trace");
+    assert!(json.starts_with("{\"traceEvents\": ["));
+    assert!(json.ends_with('}'));
+    assert_balanced_json(&json);
+    // The phases Perfetto keys on: metadata, complete, instant, counter.
+    for ph in ["\"ph\": \"M\"", "\"ph\": \"X\"", "\"ph\": \"i\"", "\"ph\": \"C\""] {
+        assert!(json.contains(ph), "missing {ph} in trace");
+    }
+    // Fleet swim lanes are named, timestamps are microsecond numbers, and
+    // nothing non-finite leaked into the number formatting.
+    assert!(json.contains("\"name\": \"fleet0\""));
+    assert!(json.contains("\"name\": \"scheduler\""));
+    assert!(json.contains("\"ts\": "));
+    for poison in ["NaN", "Infinity", "inf"] {
+        assert!(!json.contains(poison), "non-finite value leaked: {poison}");
+    }
+}
+
+#[test]
+fn disabled_tracing_is_pure() {
+    // The NullSink discards without observable effect.
+    let mut sink = NullSink;
+    sink.record(topk_eigen::trace::TraceEvent::Instant {
+        name: "x".to_string(),
+        cat: "t",
+        pid: 0,
+        tid: 0,
+        ts_s: 1.0,
+        args: Vec::new(),
+    });
+    assert!(sink.events().is_empty());
+
+    // The off tracer records nothing through any emit path.
+    let mut t = Tracer::off();
+    t.span("a", "c", 0, 0, 0.0, 1.0);
+    t.instant("b", "c", 0, 0, 0.5);
+    t.counter("g", 0, 0.0, 3.0);
+    t.add_count("n", 7);
+    t.name_pid(0, "p");
+    assert!(!t.is_on());
+    assert!(t.events().is_empty());
+    assert!(t.counters().is_none());
+    assert!(t.chrome_json().is_none());
+
+    // A solver built without `.trace()` exports nothing after solving.
+    let m = suite::find("WB-GO").unwrap().generate_csr(0.3, 1);
+    let mut s = solver(6, 1);
+    use topk_eigen::Eigensolve;
+    s.solve(&m).expect("solve");
+    assert!(s.trace_json().is_none());
+}
